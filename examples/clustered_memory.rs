@@ -1,0 +1,74 @@
+//! §3.3 memory–time trade-off demo: subset clustering.
+//!
+//! Builds the batch gradient matrix Θ both densely (O(N²) memory) and as
+//! clustered sparse blocks (O(mz² + N)), verifies the KRK-Picard
+//! contractions agree to machine precision, and reports the memory ratio
+//! and the greedy-SUKP partition statistics.
+//!
+//! Run: `cargo run --release --example clustered_memory`
+
+use krondpp::data;
+use krondpp::dpp::likelihood::theta_dense;
+use krondpp::learn::clustering::{greedy_partition, ClusteredTheta};
+use krondpp::linalg::kron;
+use krondpp::rng::Rng;
+
+fn main() -> krondpp::Result<()> {
+    let (n1, n2) = (40usize, 40usize);
+    let n = n1 * n2;
+    let mut rng = Rng::new(11);
+
+    let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+    let train = data::sample_training_set(&truth, 120, 8, 60, &mut rng)?;
+    let kappa = train.kappa();
+    println!("N = {n}, {} subsets, κ = {kappa}", train.len());
+
+    // Greedy SUKP partition with budget z = 3κ.
+    let z = 3 * kappa;
+    let clusters = greedy_partition(&train.subsets, z)?;
+    let m = clusters.len();
+    println!("greedy SUKP: m = {m} parts under union budget z = {z}");
+    for (i, c) in clusters.iter().enumerate().take(5) {
+        println!("  part {i}: {} subsets, union {}", c.members.len(), c.union.len());
+    }
+    if m > 5 {
+        println!("  ... ({} more parts)", m - 5);
+    }
+
+    // Dense vs clustered Θ.
+    let (l1, l2) = match &truth {
+        krondpp::dpp::Kernel::Kron2(a, b) => (a.clone(), b.clone()),
+        _ => unreachable!(),
+    };
+    let t0 = std::time::Instant::now();
+    let dense = theta_dense(&truth, &train.subsets)?;
+    let t_dense = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let clustered = ClusteredTheta::build(&truth, &train.subsets, &clusters, n1, n2)?;
+    let t_clustered = t0.elapsed();
+
+    let dense_bytes = n * n * 8;
+    let sparse_bytes = clustered.nnz() * (8 + 4) + m * (n + 1) * 8;
+    println!("\nmemory: dense Θ {:.1} MiB vs clustered {:.2} MiB  ({:.1}x saving)",
+        dense_bytes as f64 / (1 << 20) as f64,
+        sparse_bytes as f64 / (1 << 20) as f64,
+        dense_bytes as f64 / sparse_bytes as f64
+    );
+    println!(
+        "build time: dense {:.1} ms vs clustered {:.1} ms",
+        t_dense.as_secs_f64() * 1e3,
+        t_clustered.as_secs_f64() * 1e3
+    );
+
+    // Contractions agree.
+    let a1_dense = kron::block_trace(&dense, &l2, n1, n2)?;
+    let a1_sparse = clustered.block_trace(&l2)?;
+    let d1 = a1_sparse.rel_diff(&a1_dense);
+    let a2_dense = kron::weighted_block_sum(&dense, &l1, n1, n2)?;
+    let a2_sparse = clustered.weighted_block_sum(&l1)?;
+    let d2 = a2_sparse.rel_diff(&a2_dense);
+    println!("\ncontraction parity: A1 rel-diff {d1:.2e}, A2 rel-diff {d2:.2e}");
+    assert!(d1 < 1e-10 && d2 < 1e-10, "clustered path diverged");
+    println!("clustered Θ path OK — identical updates at a fraction of the memory");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Registry evaluation (Table 1 protocol on one category, annotated).
+//!
+//! Walks the §5.2 pipeline end to end on the "apparel" category: Wishart
+//! marginal init → EM; L = K(I−K)⁻¹ → Picard; nearest-Kronecker split →
+//! KRK-Picard; then train/test log-likelihoods side by side.
+//!
+//! Run: `cargo run --release --example registry_eval`
+
+use krondpp::data::registry;
+use krondpp::dpp::likelihood::log_likelihood;
+use krondpp::learn::{init, EmLearner, KrkPicard, Learner, Picard};
+use krondpp::rng::Rng;
+
+fn main() -> krondpp::Result<()> {
+    let n = 64usize; // paper: 100; 64 keeps this demo under a minute
+    let (n1, n2) = (8usize, 8usize);
+    let mut rng = Rng::new(2016);
+
+    println!("== simulating the 'apparel' registry category (N = {n}) ==");
+    let cat = registry::generate_category("apparel", n, 300, 150, &mut rng)?;
+    println!(
+        "train: {} registries (mean size {:.1}), test: {}",
+        cat.train.len(),
+        cat.train.mean_size(),
+        cat.test.len()
+    );
+
+    // §5.2 initialization chain.
+    let k0 = init::wishart_marginal(n, &mut rng)?;
+    let l0 = init::l_from_marginal(&k0)?;
+    let (l1_0, l2_0) = init::subkernels_from_dense(&l0, n1, n2)?;
+
+    println!("\nEM (δ = 1e-5) ...");
+    let mut em = EmLearner::from_marginal(&k0)?;
+    let em_r = em.run(&cat.train, 30, 1e-5)?;
+    report("em", &em_r, &cat);
+
+    println!("\nPicard (a = 1.3, δ = 1e-4) ...");
+    let mut picard = Picard::new(l0, 1.3)?;
+    let pic_r = picard.run(&cat.train, 30, 1e-4)?;
+    report("picard", &pic_r, &cat);
+
+    println!("\nKRK-Picard (a = 1.8, δ = 1e-4) ...");
+    let mut krk = KrkPicard::new(l1_0, l2_0, 1.8)?;
+    let krk_r = krk.run(&cat.train, 30, 1e-4)?;
+    report("krk-picard", &krk_r, &cat);
+
+    println!("\n(Table-1 shape: the full-kernel methods usually edge out the");
+    println!(" Kronecker kernel at this tractable N — the trade-off KronDPP");
+    println!(" makes to stay learnable at N where these baselines cannot run.)");
+    Ok(())
+}
+
+fn report(
+    name: &str,
+    r: &krondpp::learn::LearnResult,
+    cat: &registry::RegistryCategory,
+) {
+    let test_ll = log_likelihood(&r.kernel, &cat.test.subsets).unwrap();
+    println!(
+        "  {name:<11} {} iters ({}): train ll {:.3}, test ll {:.3}",
+        r.history.len() - 1,
+        if r.converged { "converged" } else { "iter cap" },
+        r.final_ll(),
+        test_ll
+    );
+}

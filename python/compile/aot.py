@@ -1,0 +1,145 @@
+"""AOT lowering: JAX/Pallas graphs → HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); Python never runs on the
+request path. The interchange format is HLO *text*, not serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the pinned xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`), while
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.json) lists every artifact with its
+input/output shapes and dtype so the Rust runtime can validate call sites
+at load time.
+
+Usage: python -m compile.aot [--out DIR] [--sizes 16,32] [--big]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DTYPE = jnp.float64
+DTYPE_NAME = "f64"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def build_artifacts(sizes, gram_shapes, picard_sizes):
+    """Yield (name, lowered) for every artifact variant."""
+    for n1, n2 in sizes:
+        n = n1 * n2
+        theta = spec(n, n)
+        l1 = spec(n1, n1)
+        l2 = spec(n2, n2)
+
+        def contractions(theta, l1, l2, n1=n1, n2=n2):
+            return model.krk_contractions(theta, l1, l2, n1=n1, n2=n2)
+
+        yield (
+            f"krk_contractions_{n1}x{n2}",
+            jax.jit(contractions).lower(theta, l1, l2),
+        )
+
+        def l1_term(theta, l1, l2, n1=n1, n2=n2):
+            return model.krk_l1_term(theta, l1, l2, n1=n1, n2=n2)
+
+        yield (f"krk_l1_term_{n1}x{n2}", jax.jit(l1_term).lower(theta, l1, l2))
+
+        def l2_term(theta, l1, l2, n1=n1, n2=n2):
+            return model.krk_l2_term(theta, l1, l2, n1=n1, n2=n2)
+
+        yield (f"krk_l2_term_{n1}x{n2}", jax.jit(l2_term).lower(theta, l1, l2))
+
+        def inv_action(p1, p2, d1, d2, rhs, n1=n1, n2=n2):
+            return model.l_plus_i_inverse_action(p1, p2, d1, d2, rhs, n1=n1, n2=n2)
+
+        yield (
+            f"kron_inv_action_{n1}x{n2}",
+            jax.jit(inv_action).lower(
+                spec(n1, n1), spec(n2, n2), spec(n1), spec(n2), spec(n)
+            ),
+        )
+
+    for n, d in gram_shapes:
+        yield (f"gram_{n}x{d}", jax.jit(model.gram_kernel_fn).lower(spec(n, d)))
+
+    for n in picard_sizes:
+        yield (f"picard_ldl_{n}", jax.jit(model.picard_ldl).lower(spec(n, n), spec(n, n)))
+
+
+def shapes_of(lowered):
+    args, kwargs = lowered.in_avals
+    assert not kwargs, "artifacts must be positional-only"
+    return [list(a.shape) for a in args]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--sizes",
+        default="8,16,32",
+        help="comma-separated square sub-kernel sizes (n1=n2) to lower",
+    )
+    ap.add_argument(
+        "--big",
+        action="store_true",
+        help="also lower the 50x50 (N=2500) variants used by the figure harness",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    sizes = [(int(s), int(s)) for s in args.sizes.split(",") if s]
+    if args.big and (50, 50) not in sizes:
+        sizes.append((50, 50))
+    gram_shapes = [(256, 64), (512, 128)]
+    picard_sizes = [64, 256]
+
+    manifest = {"dtype": DTYPE_NAME, "artifacts": []}
+    for name, lowered in build_artifacts(sizes, gram_shapes, picard_sizes):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        in_shapes = shapes_of(lowered)
+        out_shapes = [
+            list(o.shape) for o in jax.tree_util.tree_leaves(lowered.out_info)
+        ]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": in_shapes,
+                "outputs": out_shapes,
+                "dtype": DTYPE_NAME,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars, in={in_shapes} out={out_shapes}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

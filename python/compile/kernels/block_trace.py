@@ -1,0 +1,49 @@
+"""Pallas kernel: the A1 block-trace contraction (App. B.1).
+
+``A1[k,l] = Tr(Θ_(kl)·L₂) = Σ_{p,q} Θ_(kl)[p,q]·L₂[q,p]``
+
+This is the O(N²) hot spot of the batch KRK-Picard update (Thm. 3.3): Θ is
+the only N×N object the algorithm touches, and this kernel reads it exactly
+once.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is the (k, l)
+block index space; each program instance streams one (N₂×N₂) tile of Θ
+HBM→VMEM while L₂ᵀ stays VMEM-resident across the whole grid (its BlockSpec
+index map is constant). VMEM footprint per instance = 2·N₂² elements
+(≈ 160 KiB at N₂ = 100, f64), comfortably inside a TPU core's ~16 MiB VMEM,
+and the multiply-reduce maps onto the VPU (it is a Frobenius inner product,
+not an MXU matmul). On this image Pallas must run interpret=True (the CPU
+PJRT plugin cannot execute Mosaic custom-calls), so these kernels are
+correctness-validated here and their TPU characteristics are estimated
+statically (DESIGN.md §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_trace_kernel(theta_ref, l2t_ref, o_ref):
+    # One (k, l) tile: Frobenius inner product <Θ_(kl), L₂ᵀ>.
+    o_ref[0, 0] = jnp.sum(theta_ref[...] * l2t_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2"))
+def block_trace(theta, l2, *, n1, n2):
+    """A1[k,l] = Tr(Θ_(kl)·L₂) for all (k,l); returns (n1, n1)."""
+    assert theta.shape == (n1 * n2, n1 * n2), theta.shape
+    assert l2.shape == (n2, n2), l2.shape
+    l2t = l2.T  # contract Θ_(kl)[p,q]·L2[q,p] as elementwise with L2ᵀ
+    return pl.pallas_call(
+        _block_trace_kernel,
+        grid=(n1, n1),
+        in_specs=[
+            pl.BlockSpec((n2, n2), lambda k, l: (k, l)),
+            pl.BlockSpec((n2, n2), lambda k, l: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda k, l: (k, l)),
+        out_shape=jax.ShapeDtypeStruct((n1, n1), theta.dtype),
+        interpret=True,
+    )(theta, l2t)

@@ -1,0 +1,55 @@
+"""Pallas kernel: tiled Gram matrix XᵀX.
+
+Used for kernel construction (`L_i = XᵀX`, §5.1) and the feature-kernel
+paths of the data generators. This one IS an MXU-shaped matmul: the grid
+tiles the (d, d) output into (bd × bd) blocks and the reduction dimension
+n into bn-length panels; each instance performs a (bd×bn)·(bn×bd)
+contraction — on TPU that is a systolic-array matmul per instance with a
+VMEM accumulator (2·bn·bd + bd² elements resident). Block sizes default to
+MXU-aligned 128 where the problem is large enough. interpret=True on this
+image (see block_trace.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x1_ref, x2_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (bd, bn) @ (bn, bd) panel product accumulated over the k grid axis.
+    o_ref[...] += x1_ref[...].T @ x2_ref[...]
+
+
+def _pick_block(total, preferred):
+    """Largest divisor of `total` that is ≤ preferred (≥1)."""
+    b = min(preferred, total)
+    while total % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bd"))
+def gram(x, *, bn=128, bd=128):
+    """XᵀX for X of shape (n, d); returns (d, d)."""
+    n, d = x.shape
+    bn = _pick_block(n, bn)
+    bd = _pick_block(d, bd)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(d // bd, d // bd, n // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), x.dtype),
+        interpret=True,
+    )(x, x)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Layer-1 kernel in this package has a reference implementation here,
+written as a direct einsum/dot transcription of the paper's formulas
+(App. B). pytest + hypothesis sweep shapes and dtypes asserting allclose
+between kernel and oracle; the Rust runtime parity tests then compare the
+AOT-compiled artifacts against the same math re-implemented in Rust.
+"""
+
+import jax.numpy as jnp
+
+
+def block_trace_ref(theta, l2, n1, n2):
+    """A1[k,l] = Tr(Θ_(kl) · L2)  (App. B.1).
+
+    Θ is (n1·n2, n1·n2); the (k,l) block is Θ[k·n2:(k+1)·n2, l·n2:(l+1)·n2].
+    Tr(Θ_(kl) L2) = Σ_{p,q} Θ_(kl)[p,q] · L2[q,p].
+    """
+    t = theta.reshape(n1, n2, n1, n2)  # [k, p, l, q]
+    return jnp.einsum("kplq,qp->kl", t, l2)
+
+
+def weighted_block_sum_ref(theta, w, n1, n2):
+    """A2 = Σ_{i,j} W[i,j] · Θ_(ij)  (App. B.2), an (n2, n2) matrix."""
+    t = theta.reshape(n1, n2, n1, n2)  # [i, p, j, q]
+    return jnp.einsum("ipjq,ij->pq", t, w)
+
+
+def gram_ref(x):
+    """Gram matrix XᵀX (kernel construction: L_i = XᵀX, §5.1)."""
+    return x.T @ x
+
+
+def picard_ldl_ref(l, delta):
+    """One full Picard step body: L + L·Δ·L (Eq. 5; step size folded
+    into Δ by the caller)."""
+    return l + l @ delta @ l
+
+
+def sandwich_ref(outer, inner):
+    """outer · inner · outer — the L₁·A₁·L₁ / L₂·A₂·L₂ pattern."""
+    return outer @ inner @ outer

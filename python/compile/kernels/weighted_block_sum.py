@@ -1,0 +1,47 @@
+"""Pallas kernel: the A2 weighted block-sum contraction (App. B.2).
+
+``A2[p,q] = Σ_{i,j} W[i,j]·Θ_(ij)[p,q]``
+
+The second O(N²) contraction of the KRK-Picard update (the L₂ half), with
+`W = L₁`. The grid walks the (i, j) block index space; the (N₂×N₂) output
+accumulator stays VMEM-resident across the whole grid (constant BlockSpec),
+is zeroed on the first instance, and each instance adds one scaled Θ tile —
+the canonical Pallas reduction-across-grid pattern. Per-instance VMEM:
+2·N₂² + 1 elements. interpret=True for CPU-PJRT executability (see
+block_trace.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wbs_kernel(theta_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += w_ref[0, 0] * theta_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2"))
+def weighted_block_sum(theta, w, *, n1, n2):
+    """A2 = Σ_{ij} W[i,j]·Θ_(ij); returns (n2, n2)."""
+    assert theta.shape == (n1 * n2, n1 * n2), theta.shape
+    assert w.shape == (n1, n1), w.shape
+    return pl.pallas_call(
+        _wbs_kernel,
+        grid=(n1, n1),
+        in_specs=[
+            pl.BlockSpec((n2, n2), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((n2, n2), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n2, n2), theta.dtype),
+        interpret=True,
+    )(theta, w)

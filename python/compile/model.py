@@ -1,0 +1,75 @@
+"""Layer-2 JAX compute graphs for KronDPP learning.
+
+These are the dense graphs that `aot.py` lowers to HLO text for the Rust
+runtime. Each graph calls the Layer-1 Pallas kernels for its contraction
+hot spot, so the kernels lower into the same HLO module and ship inside
+the same artifact. Eigendecompositions deliberately stay on the Rust side
+(jax's `eigh` lowers to LAPACK custom-calls the pinned xla_extension CPU
+runtime cannot execute — DESIGN.md §3); the graphs here are pure
+dot/reduce/elementwise and therefore portable.
+
+All functions are shape-polymorphic in Python but lowered per size variant
+at AOT time (static shapes are a PJRT requirement).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.block_trace import block_trace
+from .kernels.gram import gram
+from .kernels.weighted_block_sum import weighted_block_sum
+
+
+def krk_l1_term(theta, l1, l2, *, n1, n2):
+    """The Θ-half of the L₁ update: `L₁·A₁·L₁` with
+    `A₁[k,l] = Tr(Θ_(kl)L₂)` (App. B.1). Returns (n1, n1).
+
+    The Rust coordinator subtracts its eigen-space `L₁BL₁` term and applies
+    the step size — see `learn::krk`.
+    """
+    a1 = block_trace(theta, l2, n1=n1, n2=n2)
+    return (l1 @ a1 @ l1,)
+
+
+def krk_l2_term(theta, l1, l2, *, n1, n2):
+    """The Θ-half of the L₂ update: `L₂·A₂·L₂` with
+    `A₂ = Σ_{ij} L1_{ij}Θ_(ij)` (App. B.2). Returns (n2, n2)."""
+    a2 = weighted_block_sum(theta, l1, n1=n1, n2=n2)
+    return (l2 @ a2 @ l2,)
+
+
+def krk_contractions(theta, l1, l2, *, n1, n2):
+    """Both raw contractions `(A₁, A₂)` in one artifact — the exact
+    interface of the Rust `Contractions` backend trait."""
+    a1 = block_trace(theta, l2, n1=n1, n2=n2)
+    a2 = weighted_block_sum(theta, l1, n1=n1, n2=n2)
+    return (a1, a2)
+
+
+def picard_ldl(l, delta):
+    """Full-Picard step body `L + L·Δ·L` (Eq. 5) — the N³ hot spot of the
+    baseline. Step size is folded into Δ by the caller."""
+    return (l + l @ delta @ l,)
+
+
+def gram_kernel_fn(x):
+    """Sub-kernel construction `XᵀX` (§5.1) via the tiled Pallas gram."""
+    return (gram(x),)
+
+
+def l_plus_i_inverse_action(p1, p2, d1, d2, rhs, *, n1, n2):
+    """`(I + L₁⊗L₂)⁻¹ · rhs` through the factored eigenbasis (Cor. 2.2):
+    reshape rhs to (n1, n2), rotate into the eigenbasis, scale by
+    `1/(1+d1ᵢd2ⱼ)`, rotate back. O(N^{3/2}) instead of O(N³).
+
+    Used by the serving coordinator's conditioning paths.
+    """
+    r = rhs.reshape(n1, n2)
+    # into eigenbasis: P₁ᵀ R P₂
+    z = p1.T @ r @ p2
+    denom = 1.0 + d1[:, None] * d2[None, :]
+    z = z / denom
+    out = p1 @ z @ p2.T
+    return (out.reshape(n1 * n2),)

@@ -1,0 +1,62 @@
+"""AOT pipeline: lowering produces parseable HLO text + a valid manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--sizes", "4"],
+        cwd=PYDIR,
+        check=True,
+    )
+    return out
+
+
+def test_manifest_valid(artifact_dir):
+    with open(artifact_dir / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["dtype"] == "f64"
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "krk_contractions_4x4" in names
+    assert "krk_l1_term_4x4" in names
+    assert "kron_inv_action_4x4" in names
+    assert any(n.startswith("gram_") for n in names)
+    assert any(n.startswith("picard_ldl_") for n in names)
+    for art in manifest["artifacts"]:
+        assert (artifact_dir / art["file"]).exists()
+        assert art["inputs"] and art["outputs"]
+
+
+def test_hlo_text_shape_signature(artifact_dir):
+    text = (artifact_dir / "krk_contractions_4x4.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    # f64 I/O with the declared shapes: Θ is 16x16, outputs 4x4.
+    assert "f64[16,16]" in text
+    assert "f64[4,4]" in text
+    # no LAPACK custom-calls may leak into artifacts (runtime can't run them)
+    assert "custom-call" not in text, "artifact contains an unexecutable custom-call"
+
+
+def test_all_artifacts_free_of_custom_calls(artifact_dir):
+    for fname in os.listdir(artifact_dir):
+        if fname.endswith(".hlo.txt"):
+            text = (artifact_dir / fname).read_text()
+            assert "custom-call" not in text, f"{fname} contains custom-call"
+
+
+def test_outputs_are_tuples(artifact_dir):
+    # return_tuple=True: entry computation root must be a tuple for the
+    # Rust side's to_tuple() unwrap.
+    text = (artifact_dir / "picard_ldl_64.hlo.txt").read_text()
+    first_line = text.splitlines()[0]
+    assert "->" in first_line and "(" in first_line.split("->")[1]

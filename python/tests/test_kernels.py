@@ -1,0 +1,111 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed numpy supplies the data.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_trace import block_trace
+from compile.kernels.gram import gram
+from compile.kernels.weighted_block_sum import weighted_block_sum
+
+DTYPES = [np.float32, np.float64]
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else dict(rtol=1e-11, atol=1e-11)
+
+
+def rand(rng, *shape, dtype):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n1=st.integers(min_value=1, max_value=6),
+    n2=st.integers(min_value=1, max_value=6),
+    dtype_ix=st.integers(min_value=0, max_value=1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_trace_matches_ref(n1, n2, dtype_ix, seed):
+    dtype = DTYPES[dtype_ix]
+    rng = np.random.default_rng(seed)
+    theta = rand(rng, n1 * n2, n1 * n2, dtype=dtype)
+    l2 = rand(rng, n2, n2, dtype=dtype)
+    got = block_trace(theta, l2, n1=n1, n2=n2)
+    want = ref.block_trace_ref(theta, l2, n1, n2)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n1=st.integers(min_value=1, max_value=6),
+    n2=st.integers(min_value=1, max_value=6),
+    dtype_ix=st.integers(min_value=0, max_value=1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_weighted_block_sum_matches_ref(n1, n2, dtype_ix, seed):
+    dtype = DTYPES[dtype_ix]
+    rng = np.random.default_rng(seed)
+    theta = rand(rng, n1 * n2, n1 * n2, dtype=dtype)
+    w = rand(rng, n1, n1, dtype=dtype)
+    got = weighted_block_sum(theta, w, n1=n1, n2=n2)
+    want = ref.weighted_block_sum_ref(theta, w, n1, n2)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=96),
+    d=st.integers(min_value=1, max_value=48),
+    dtype_ix=st.integers(min_value=0, max_value=1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gram_matches_ref(n, d, dtype_ix, seed):
+    dtype = DTYPES[dtype_ix]
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d, dtype=dtype)
+    got = gram(x)
+    want = ref.gram_ref(x)
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@pytest.mark.parametrize("bn,bd", [(128, 128), (32, 16), (7, 3)])
+def test_gram_block_size_invariance(bn, bd):
+    rng = np.random.default_rng(0)
+    x = rand(rng, 70, 21, dtype=np.float64)
+    got = gram(x, bn=bn, bd=bd)
+    np.testing.assert_allclose(got, ref.gram_ref(x), rtol=1e-11, atol=1e-11)
+
+
+def test_block_trace_on_kron_structured_theta():
+    # If Θ = W ⊗ V then A1[k,l] = W[k,l]·Tr(V·L2).
+    rng = np.random.default_rng(1)
+    n1, n2 = 4, 5
+    w = rand(rng, n1, n1, dtype=np.float64)
+    v = rand(rng, n2, n2, dtype=np.float64)
+    theta = np.kron(w, v)
+    l2 = rand(rng, n2, n2, dtype=np.float64)
+    got = np.asarray(block_trace(theta, l2, n1=n1, n2=n2))
+    want = w * np.trace(v @ l2)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_weighted_block_sum_identity_weights():
+    # W = I picks the partial trace Tr2(Θ).
+    rng = np.random.default_rng(2)
+    n1, n2 = 3, 4
+    theta = rand(rng, n1 * n2, n1 * n2, dtype=np.float64)
+    got = np.asarray(weighted_block_sum(theta, np.eye(n1), n1=n1, n2=n2))
+    want = sum(
+        theta[i * n2 : (i + 1) * n2, i * n2 : (i + 1) * n2] for i in range(n1)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)

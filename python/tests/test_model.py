@@ -1,0 +1,75 @@
+"""Layer-2 correctness: model graphs vs direct jnp compositions."""
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape)
+
+
+def test_krk_l1_term_matches_composition():
+    rng = np.random.default_rng(0)
+    n1, n2 = 3, 4
+    theta = rand(rng, n1 * n2, n1 * n2)
+    l1 = rand(rng, n1, n1)
+    l2 = rand(rng, n2, n2)
+    (got,) = model.krk_l1_term(theta, l1, l2, n1=n1, n2=n2)
+    a1 = ref.block_trace_ref(theta, l2, n1, n2)
+    want = ref.sandwich_ref(l1, a1)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_krk_l2_term_matches_composition():
+    rng = np.random.default_rng(1)
+    n1, n2 = 4, 3
+    theta = rand(rng, n1 * n2, n1 * n2)
+    l1 = rand(rng, n1, n1)
+    l2 = rand(rng, n2, n2)
+    (got,) = model.krk_l2_term(theta, l1, l2, n1=n1, n2=n2)
+    a2 = ref.weighted_block_sum_ref(theta, l1, n1, n2)
+    want = ref.sandwich_ref(l2, a2)
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_krk_contractions_pair():
+    rng = np.random.default_rng(2)
+    n1, n2 = 3, 3
+    theta = rand(rng, 9, 9)
+    l1 = rand(rng, 3, 3)
+    l2 = rand(rng, 3, 3)
+    a1, a2 = model.krk_contractions(theta, l1, l2, n1=n1, n2=n2)
+    np.testing.assert_allclose(a1, ref.block_trace_ref(theta, l2, 3, 3), rtol=1e-11)
+    np.testing.assert_allclose(
+        a2, ref.weighted_block_sum_ref(theta, l1, 3, 3), rtol=1e-11
+    )
+
+
+def test_picard_ldl():
+    rng = np.random.default_rng(3)
+    l = rand(rng, 6, 6)
+    delta = rand(rng, 6, 6)
+    (got,) = model.picard_ldl(l, delta)
+    np.testing.assert_allclose(got, ref.picard_ldl_ref(l, delta), rtol=1e-11)
+
+
+def test_inverse_action_matches_dense_solve():
+    rng = np.random.default_rng(4)
+    n1, n2 = 3, 4
+    # PD sub-kernels via Gram.
+    x1 = rand(rng, n1, n1)
+    x2 = rand(rng, n2, n2)
+    l1 = x1.T @ x1 + 0.3 * np.eye(n1)
+    l2 = x2.T @ x2 + 0.3 * np.eye(n2)
+    d1, p1 = np.linalg.eigh(l1)
+    d2, p2 = np.linalg.eigh(l2)
+    rhs = rand(rng, n1 * n2)
+    (got,) = model.l_plus_i_inverse_action(p1, p2, d1, d2, rhs, n1=n1, n2=n2)
+    dense = np.kron(l1, l2) + np.eye(n1 * n2)
+    want = np.linalg.solve(dense, rhs)
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)

@@ -1,0 +1,161 @@
+//! Ablations for the design choices DESIGN.md calls out.
+//!
+//! 1. **Step size `a`** (§3.1.1): the paper observes the admissible range
+//!    of `a` is wider for KRK-Picard than for Picard and shrinks with N.
+//!    We sweep `a` and report, per algorithm and size, the largest step
+//!    that keeps 5 iterations PD-and-ascending (the PD safeguard is
+//!    disabled here so the raw update is measured).
+//! 2. **Block-coordinate vs joint** updates: likelihood after a fixed
+//!    wall-clock budget for KRK vs Joint-Picard.
+//! 3. **Minibatch size** for stochastic KRK: progress per wall-clock.
+
+use krondpp::data;
+use krondpp::dpp::likelihood::log_likelihood;
+use krondpp::dpp::Kernel;
+use krondpp::learn::traits::TrainingSet;
+use krondpp::learn::{init, JointPicard, KrkPicard, KrkStochastic, Learner, Picard};
+use krondpp::linalg::kron;
+use krondpp::rng::Rng;
+
+/// Is `a` admissible for this learner on this problem: 5 iterations with
+/// monotone likelihood (tolerating tiny noise) and no numerical failure?
+fn admissible(mut learner: Box<dyn Learner>, data: &TrainingSet) -> bool {
+    let mut prev = match log_likelihood(&learner.kernel(), &data.subsets) {
+        Ok(v) => v,
+        Err(_) => return false,
+    };
+    for _ in 0..5 {
+        if learner.step(data).is_err() {
+            return false;
+        }
+        match log_likelihood(&learner.kernel(), &data.subsets) {
+            Ok(ll) if ll >= prev - 1e-6 => prev = ll,
+            _ => return false,
+        }
+    }
+    true
+}
+
+fn main() {
+    println!("=== ablation 1: admissible step sizes (5 monotone iterations) ===");
+    println!("{:<8} {:>14} {:>14}", "N", "picard a_max", "krk a_max");
+    for (n1, n2) in [(12usize, 12usize), (20, 20), (28, 28)] {
+        let n = n1 * n2;
+        let mut rng = Rng::new(100 + n as u64);
+        let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+        let data =
+            data::sample_training_set(&truth, 40, (n / 30).max(2), (n / 6).max(4), &mut rng)
+                .unwrap();
+        let l1 = init::paper_subkernel(n1, &mut rng);
+        let l2 = init::paper_subkernel(n2, &mut rng);
+        let l0 = kron::kron(&l1, &l2);
+        let sweep =
+            [1.0, 1.2, 1.4, 1.6, 1.8, 2.0, 2.4, 2.8, 3.4, 4.0, 5.0, 6.5, 8.0];
+        let mut pic_max = 0.0;
+        let mut krk_max = 0.0;
+        for &a in &sweep {
+            let mut pic = Picard::new(l0.clone(), a).unwrap();
+            pic.safeguard = false;
+            if admissible(Box::new(pic), &data) {
+                pic_max = a;
+            }
+            let mut krk = KrkPicard::new(l1.clone(), l2.clone(), a).unwrap();
+            krk.safeguard = false;
+            if admissible(Box::new(krk), &data) {
+                krk_max = a;
+            }
+        }
+        println!("{n:<8} {pic_max:>14.1} {krk_max:>14.1}");
+    }
+
+    println!("\n=== ablation 2: KRK vs Joint-Picard, equal wall-clock ===");
+    {
+        let (n1, n2) = (24usize, 24usize);
+        let mut rng = Rng::new(7);
+        let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+        let data = data::sample_training_set(&truth, 50, 6, 70, &mut rng).unwrap();
+        let l1 = init::paper_subkernel(n1, &mut rng);
+        let l2 = init::paper_subkernel(n2, &mut rng);
+        let budget = std::time::Duration::from_millis(400);
+        for (name, mut learner) in [
+            (
+                "krk",
+                Box::new(KrkPicard::new(l1.clone(), l2.clone(), 1.0).unwrap())
+                    as Box<dyn Learner>,
+            ),
+            ("joint", Box::new(JointPicard::new(l1.clone(), l2.clone(), 1.0).unwrap())),
+        ] {
+            let t0 = std::time::Instant::now();
+            let mut iters = 0;
+            while t0.elapsed() < budget {
+                learner.step(&data).unwrap();
+                iters += 1;
+            }
+            let ll = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+            println!("  {name:<6} {iters:>4} iters in {budget:?} -> ll {ll:.4}");
+        }
+    }
+
+    println!("\n=== ablation 3: stochastic minibatch size (fixed 300ms budget) ===");
+    {
+        let (n1, n2) = (24usize, 24usize);
+        let mut rng = Rng::new(9);
+        let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+        let data = data::sample_training_set(&truth, 60, 6, 70, &mut rng).unwrap();
+        let l1 = init::paper_subkernel(n1, &mut rng);
+        let l2 = init::paper_subkernel(n2, &mut rng);
+        for mb in [1usize, 4, 16, 60] {
+            let mut learner = KrkStochastic::new(l1.clone(), l2.clone(), 0.7, mb, 11);
+            let t0 = std::time::Instant::now();
+            let mut iters = 0;
+            while t0.elapsed() < std::time::Duration::from_millis(300) {
+                learner.step(&data).unwrap();
+                iters += 1;
+            }
+            let ll = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+            println!("  minibatch {mb:>3}: {iters:>5} updates -> ll {ll:.4}");
+        }
+    }
+
+    println!("\n=== ablation 4: m=3 factorization (Kron3 learner) ===");
+    {
+        let mut rng = Rng::new(13);
+        let mk = |n: usize, rng: &mut Rng| {
+            let mut l = rng.paper_init_kernel(n);
+            l.scale_mut(1.2 / n as f64);
+            l.add_diag_mut(0.35);
+            l
+        };
+        let truth =
+            Kernel::Kron3(mk(6, &mut rng), mk(6, &mut rng), mk(6, &mut rng)); // N = 216
+        let sampler = krondpp::dpp::Sampler::new(&truth).unwrap();
+        let subsets: Vec<Vec<usize>> = (0..40).map(|_| sampler.sample(&mut rng)).collect();
+        let data = TrainingSet::new(216, subsets).unwrap();
+        let mut k3 = krondpp::learn::Krk3Picard::new(
+            mk(6, &mut rng),
+            mk(6, &mut rng),
+            mk(6, &mut rng),
+            1.0,
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let r = k3.run(&data, 8, 0.0).unwrap();
+        println!(
+            "  krk3 (N=216): ll {:.4} -> {:.4} in 8 iters ({:.1} ms/iter, wall {:.2}s)",
+            r.history[0].log_likelihood,
+            r.final_ll(),
+            r.mean_iter_secs() * 1e3,
+            t0.elapsed().as_secs_f64()
+        );
+        // m=2 on the same data with a (36, 6) split for comparison.
+        let mut k2 =
+            KrkPicard::new(mk(36, &mut rng), mk(6, &mut rng), 1.0).unwrap();
+        let r2 = k2.run(&data, 8, 0.0).unwrap();
+        println!(
+            "  krk2 (36x6):  ll {:.4} -> {:.4} in 8 iters ({:.1} ms/iter)",
+            r2.history[0].log_likelihood,
+            r2.final_ll(),
+            r2.mean_iter_secs() * 1e3
+        );
+    }
+}

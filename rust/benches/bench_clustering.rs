@@ -1,0 +1,55 @@
+//! §3.3 ablation: dense Θ vs clustered sparse Θ — contraction time and
+//! memory across union budgets z, quantifying the memory–time trade-off.
+
+use krondpp::bench_util::{black_box, section, Bencher};
+use krondpp::data;
+use krondpp::dpp::likelihood::theta_dense;
+use krondpp::learn::clustering::{greedy_partition, ClusteredTheta};
+use krondpp::linalg::kron;
+use krondpp::rng::Rng;
+
+fn main() {
+    let b = Bencher { min_iters: 3, ..Default::default() };
+    let (n1, n2) = (40usize, 40usize);
+    let n = n1 * n2;
+    let mut rng = Rng::new(3);
+    let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+    let train = data::sample_training_set(&truth, 100, 8, 60, &mut rng).unwrap();
+    let kappa = train.kappa();
+    println!("N={n}, {} subsets, κ={kappa}", train.len());
+    let (_l1, l2) = match &truth {
+        krondpp::dpp::Kernel::Kron2(a, b) => (a.clone(), b.clone()),
+        _ => unreachable!(),
+    };
+
+    section("dense path");
+    let dense = theta_dense(&truth, &train.subsets).unwrap();
+    b.run("theta_dense build", || {
+        black_box(theta_dense(&truth, &train.subsets).unwrap());
+    });
+    b.run("dense A1 contraction", || {
+        black_box(kron::block_trace(&dense, &l2, n1, n2).unwrap());
+    });
+    println!("  dense Θ memory: {:.1} MiB", (n * n * 8) as f64 / (1 << 20) as f64);
+
+    section("clustered path across union budgets z");
+    for mult in [2usize, 3, 5] {
+        let z = mult * kappa;
+        let clusters = greedy_partition(&train.subsets, z).unwrap();
+        let ct = ClusteredTheta::build(&truth, &train.subsets, &clusters, n1, n2).unwrap();
+        println!(
+            "  z={z}: m={} parts, nnz={} ({:.2} MiB)",
+            clusters.len(),
+            ct.nnz(),
+            (ct.nnz() * 12) as f64 / (1 << 20) as f64
+        );
+        b.run(&format!("clustered build z={z}"), || {
+            black_box(
+                ClusteredTheta::build(&truth, &train.subsets, &clusters, n1, n2).unwrap(),
+            );
+        });
+        b.run(&format!("clustered A1 z={z}"), || {
+            black_box(ct.block_trace(&l2).unwrap());
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Substrate rooflines: matmul, Cholesky, eigen, Kronecker contractions.
+//!
+//! These are the primitives every learner is built from; their throughput
+//! bounds everything in EXPERIMENTS.md §Perf. GFLOP/s annotations use the
+//! standard op counts (2n³ GEMM, n³/3 Cholesky).
+
+use krondpp::bench_util::{black_box, section, Bencher};
+use krondpp::linalg::{cholesky, eigen::SymEigen, kron, matmul, Matrix};
+use krondpp::rng::Rng;
+
+fn spd(n: usize, rng: &mut Rng) -> Matrix {
+    let mut m = rng.paper_init_kernel(n);
+    m.scale_mut(1.0 / n as f64);
+    m.add_diag_mut(0.5);
+    m
+}
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    section("matmul (C = A·B)");
+    for n in [128usize, 256, 512, 1024] {
+        let a = rng.normal_matrix(n, n);
+        let x = rng.normal_matrix(n, n);
+        let stats = b.run(&format!("matmul {n}x{n}"), || {
+            black_box(matmul::matmul(&a, &x).unwrap());
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / stats.secs() / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s");
+    }
+
+    section("cholesky factor + inverse");
+    for n in [128usize, 256, 512] {
+        let a = spd(n, &mut rng);
+        b.run(&format!("cholesky factor {n}"), || {
+            black_box(cholesky::Cholesky::factor(&a).unwrap());
+        });
+        b.run(&format!("pd inverse {n}"), || {
+            black_box(cholesky::inverse_pd(&a).unwrap());
+        });
+    }
+
+    section("symmetric eigendecomposition (tred2/tql2)");
+    for n in [64usize, 128, 256] {
+        let a = spd(n, &mut rng);
+        b.run(&format!("eigh {n}"), || {
+            black_box(SymEigen::new(&a).unwrap());
+        });
+    }
+
+    section("kron contractions (the KRK hot spot, App. B)");
+    for (n1, n2) in [(32usize, 32usize), (50, 50), (64, 64)] {
+        let n = n1 * n2;
+        let theta = rng.normal_matrix(n, n);
+        let l2 = rng.normal_matrix(n2, n2);
+        let w = rng.normal_matrix(n1, n1);
+        let stats = b.run(&format!("block_trace (A1) {n1}x{n2} [N={n}]"), || {
+            black_box(kron::block_trace(&theta, &l2, n1, n2).unwrap());
+        });
+        // 2 flops per Θ element.
+        let gbs = (n * n) as f64 * 8.0 / stats.secs() / 1e9;
+        println!("    -> {gbs:.2} GB/s effective Θ bandwidth");
+        b.run(&format!("weighted_block_sum (A2) {n1}x{n2}"), || {
+            black_box(kron::weighted_block_sum(&theta, &w, n1, n2).unwrap());
+        });
+        b.run(&format!("partial_trace_1 {n1}x{n2}"), || {
+            black_box(kron::partial_trace_1(&theta, n1, n2).unwrap());
+        });
+    }
+
+    section("nearest Kronecker product (Joint-Picard inner loop)");
+    for (n1, n2) in [(16usize, 16usize), (32, 32)] {
+        let a = spd(n1, &mut rng);
+        let c = spd(n2, &mut rng);
+        let m = kron::kron(&a, &c);
+        b.run(&format!("nkp {n1}x{n2}"), || {
+            black_box(krondpp::linalg::nkp::nearest_kronecker(&m, n1, n2, 100, 1e-10).unwrap());
+        });
+    }
+}

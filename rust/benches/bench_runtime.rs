@@ -1,0 +1,76 @@
+//! PJRT runtime path vs pure-Rust contractions: does offloading the A1/A2
+//! contraction to the AOT-compiled XLA artifact pay at each size? Also
+//! measures artifact compile time (one-off) and steady-state dispatch
+//! overhead. Requires `make artifacts`.
+
+use krondpp::bench_util::{black_box, section, Bencher};
+use krondpp::linalg::kron;
+use krondpp::rng::Rng;
+use krondpp::runtime::Engine;
+
+fn main() {
+    let b = Bencher { min_iters: 3, ..Default::default() };
+    let engine = match Engine::load_default() {
+        Ok(e) => e,
+        Err(err) => {
+            println!("runtime benches skipped: {err}");
+            return;
+        }
+    };
+    println!("platform: {}", engine.platform());
+
+    section("krk_contractions artifact vs pure Rust");
+    let mut rng = Rng::new(1);
+    for (n1, n2) in [(8usize, 8usize), (16, 16), (32, 32)] {
+        let name = format!("krk_contractions_{n1}x{n2}");
+        if !engine.has(&name) {
+            println!("  (no artifact {name})");
+            continue;
+        }
+        let n = n1 * n2;
+        let theta = rng.normal_matrix(n, n);
+        let l1 = rng.normal_matrix(n1, n1);
+        let l2 = rng.normal_matrix(n2, n2);
+        // Warm the executable cache (compile excluded from steady state).
+        let t0 = std::time::Instant::now();
+        engine.execute_matrices(&name, &[&theta, &l1, &l2]).unwrap();
+        println!("  {name}: first call (compile+run) {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        let hlo = b.run(&format!("hlo {name}"), || {
+            black_box(engine.execute_matrices(&name, &[&theta, &l1, &l2]).unwrap());
+        });
+        let cpu = b.run(&format!("rust contractions {n1}x{n2}"), || {
+            black_box(kron::block_trace(&theta, &l2, n1, n2).unwrap());
+            black_box(kron::weighted_block_sum(&theta, &l1, n1, n2).unwrap());
+        });
+        println!(
+            "    -> hlo/rust ratio {:.2} (dispatch overhead dominates below ~N=1024)",
+            hlo.secs() / cpu.secs()
+        );
+    }
+
+    section("gram + picard_ldl artifacts");
+    if engine.has("gram_512x128") {
+        let x = rng.normal_matrix(512, 128);
+        engine.execute_matrices("gram_512x128", &[&x]).unwrap();
+        b.run("hlo gram 512x128", || {
+            black_box(engine.execute_matrices("gram_512x128", &[&x]).unwrap());
+        });
+        b.run("rust gram 512x128", || {
+            black_box(krondpp::linalg::matmul::matmul_tn(&x, &x).unwrap());
+        });
+    }
+    if engine.has("picard_ldl_256") {
+        let l = rng.normal_matrix(256, 256);
+        let d = rng.normal_matrix(256, 256);
+        engine.execute_matrices("picard_ldl_256", &[&l, &d]).unwrap();
+        b.run("hlo picard_ldl 256", || {
+            black_box(engine.execute_matrices("picard_ldl_256", &[&l, &d]).unwrap());
+        });
+        b.run("rust picard ldl 256", || {
+            let ldl = krondpp::linalg::matmul::sandwich(&l, &d, &l).unwrap();
+            let mut out = l.clone();
+            out += &ldl;
+            black_box(out);
+        });
+    }
+}

@@ -1,0 +1,98 @@
+//! §4 sampling claims: exact-sampling preprocessing is O(N³) for a dense
+//! kernel vs O(N^{3/2}) for Kron2 vs ~O(N) for Kron3; per-draw cost is
+//! O(Nk³)-ish for all. The crossover table shows who wins where.
+
+use krondpp::bench_util::{black_box, section, Bencher};
+use krondpp::data;
+use krondpp::dpp::{Kernel, Sampler};
+use krondpp::rng::Rng;
+
+fn main() {
+    let b = Bencher { min_iters: 2, ..Default::default() };
+
+    section("eigendecomposition preprocessing: dense vs Kron2 vs Kron3");
+    println!("{:<8} {:>14} {:>14} {:>14}", "N", "full", "kron2", "kron3");
+    for &n_target in &[256usize, 1024, 2304] {
+        let mut rng = Rng::new(n_target as u64);
+        // Kron2: n1 = n2 = sqrt(N); Kron3: cube-root factors.
+        let s2 = (n_target as f64).sqrt() as usize;
+        let s3 = (n_target as f64).cbrt().round() as usize;
+        let kron2 = data::paper_truth_kernel(s2, s2, &mut rng);
+        let k3a = krondpp::learn::init::paper_subkernel(s3, &mut rng);
+        let k3b = krondpp::learn::init::paper_subkernel(s3, &mut rng);
+        let k3c = krondpp::learn::init::paper_subkernel(s3, &mut rng);
+        let kron3 = Kernel::Kron3(k3a, k3b, k3c);
+
+        let t_kron2 = b
+            .run(&format!("kron2 eigen N={}", s2 * s2), || {
+                black_box(Sampler::new(&kron2).unwrap());
+            })
+            .secs();
+        let t_kron3 = b
+            .run(&format!("kron3 eigen N={}", s3 * s3 * s3), || {
+                black_box(Sampler::new(&kron3).unwrap());
+            })
+            .secs();
+        // Dense eigen is the expensive one (221 s at N=2304 on this box;
+        // see EXPERIMENTS.md): above 1024 it only runs with
+        // KRONDPP_BENCH_FULL=1 so a default `cargo bench` stays tractable.
+        if n_target > 1024 && std::env::var("KRONDPP_BENCH_FULL").is_err() {
+            println!(
+                "{:<8} {:>12}ms {:>12.1}ms {:>12.1}ms   (dense skipped; KRONDPP_BENCH_FULL=1 to run)",
+                s2 * s2,
+                "-",
+                t_kron2 * 1e3,
+                t_kron3 * 1e3
+            );
+            continue;
+        }
+        let full = Kernel::Full(kron2.to_dense());
+        let t_full = if n_target <= 1024 {
+            b.run(&format!("full eigen N={}", s2 * s2), || {
+                black_box(Sampler::new(&full).unwrap());
+            })
+            .secs()
+        } else {
+            let s = b.run_once(&format!("full eigen N={} (once)", s2 * s2), || {
+                black_box(Sampler::new(&full).unwrap());
+            });
+            s.secs()
+        };
+        println!(
+            "{:<8} {:>12.1}ms {:>12.1}ms {:>12.1}ms   (full/kron2 = {:.0}x)",
+            s2 * s2,
+            t_full * 1e3,
+            t_kron2 * 1e3,
+            t_kron3 * 1e3,
+            t_full / t_kron2
+        );
+    }
+
+    section("per-draw cost after preprocessing (shared across structures)");
+    {
+        let mut rng = Rng::new(77);
+        let kernel = data::paper_truth_kernel(32, 32, &mut rng);
+        let sampler = Sampler::new(&kernel).unwrap();
+        for k in [5usize, 10, 20, 40] {
+            let mut draw_rng = Rng::new(5);
+            b.run(&format!("sample_k k={k} (N=1024)"), || {
+                black_box(sampler.sample_k(k, &mut draw_rng));
+            });
+        }
+        let mut draw_rng = Rng::new(6);
+        b.run("sample (unconstrained, N=1024)", || {
+            black_box(sampler.sample(&mut draw_rng));
+        });
+    }
+
+    section("MCMC baseline: cost per effective sample (burn 2N steps)");
+    {
+        let mut rng = Rng::new(88);
+        let kernel = data::paper_truth_kernel(16, 16, &mut rng);
+        let mut chain_rng = Rng::new(7);
+        b.run("mcmc 512 steps (N=256)", || {
+            let mut chain = krondpp::dpp::mcmc::McmcSampler::new(&kernel);
+            black_box(chain.run(512, &mut chain_rng).unwrap());
+        });
+    }
+}

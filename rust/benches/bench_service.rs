@@ -1,0 +1,74 @@
+//! Coordinator throughput/latency: requests/s across worker counts and
+//! batch policies on a fixed synthetic workload (offered-load sweep).
+
+use krondpp::bench_util::section;
+use krondpp::config::ServiceConfig;
+use krondpp::coordinator::{DppService, SampleRequest};
+use krondpp::data;
+use krondpp::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn drive(svc: &Arc<DppService>, requests: usize, k: usize) -> (f64, f64, f64) {
+    let t0 = Instant::now();
+    let tickets: Vec<_> =
+        (0..requests).map(|_| svc.submit(SampleRequest { k }).unwrap()).collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let p95 = svc.metrics().latency.quantile(0.95).as_secs_f64() * 1e3;
+    let p50 = svc.metrics().latency.quantile(0.50).as_secs_f64() * 1e3;
+    (requests as f64 / wall, p50, p95)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let kernel = data::paper_truth_kernel(32, 32, &mut rng); // N = 1024
+    let requests = 3000;
+
+    section("throughput vs workers (k=10, max_batch=32)");
+    println!("{:<10} {:>12} {:>10} {:>10}", "workers", "req/s", "p50 ms", "p95 ms");
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = ServiceConfig {
+            workers,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+        };
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let (rps, p50, p95) = drive(&svc, requests, 10);
+        println!("{workers:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        drop(svc); // Drop drains + joins
+    }
+
+    section("throughput vs max_batch (4 workers, k=10)");
+    println!("{:<10} {:>12} {:>10} {:>10}", "max_batch", "req/s", "p50 ms", "p95 ms");
+    for max_batch in [1usize, 8, 32, 128] {
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_batch,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+        };
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let (rps, p50, p95) = drive(&svc, requests, 10);
+        println!("{max_batch:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        drop(svc); // Drop drains + joins
+    }
+
+    section("latency vs requested k (4 workers)");
+    println!("{:<10} {:>12} {:>10} {:>10}", "k", "req/s", "p50 ms", "p95 ms");
+    for k in [5usize, 15, 30, 60] {
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+        };
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let (rps, p50, p95) = drive(&svc, 1200, k);
+        println!("{k:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        drop(svc); // Drop drains + joins
+    }
+}

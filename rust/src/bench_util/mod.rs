@@ -1,0 +1,178 @@
+//! Benchmark harness (criterion is not available offline).
+//!
+//! [`Bencher`] runs warmup iterations, then measures until either a target
+//! wall-clock budget or an iteration cap is reached, and reports
+//! min/median/mean/p95 with a throughput hook. `cargo bench` targets set
+//! `harness = false` and drive this directly, printing rows that the
+//! EXPERIMENTS.md tables are copied from.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    /// Seconds per iteration (mean).
+    pub fn secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Human line used by the bench binaries.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  min {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            fmt_dur(self.p95),
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Benchmark runner configuration.
+pub struct Bencher {
+    /// Max wall-clock per case (measurement phase).
+    pub budget: Duration,
+    /// Warmup wall-clock per case.
+    pub warmup: Duration,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations (even if over budget).
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults: bench suites cover many cases; a per-case budget
+        // of ~1.5 s keeps full `cargo bench` runs in minutes. Override via
+        // KRONDPP_BENCH_BUDGET_MS for precision runs.
+        let ms = std::env::var("KRONDPP_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1500u64);
+        Bencher {
+            budget: Duration::from_millis(ms),
+            warmup: Duration::from_millis(ms / 5),
+            max_iters: 10_000,
+            min_iters: 3,
+        }
+    }
+}
+
+impl Bencher {
+    /// Time `f`, which must consume its own inputs (clone outside if needed).
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> Stats {
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            min: samples[0],
+            median: samples[iters / 2],
+            mean: total / iters as u32,
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            max: samples[iters - 1],
+        };
+        println!("{}", stats.row());
+        stats
+    }
+
+    /// Time a single invocation (for long-running cases like full learning
+    /// iterations where repeated sampling is too expensive).
+    pub fn run_once(&self, name: &str, f: impl FnOnce()) -> Stats {
+        let t = Instant::now();
+        f();
+        let d = t.elapsed();
+        let stats = Stats {
+            name: name.to_string(),
+            iters: 1,
+            min: d,
+            median: d,
+            mean: d,
+            p95: d,
+            max: d,
+        };
+        println!("{}", stats.row());
+        stats
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_stats() {
+        let b = Bencher {
+            budget: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            max_iters: 1000,
+            min_iters: 3,
+        };
+        let mut acc = 0u64;
+        let stats = b.run("tiny", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(stats.iters >= 3);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn run_once_single_iter() {
+        let b = Bencher::default();
+        let stats = b.run_once("once", || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert_eq!(stats.iters, 1);
+        assert!(stats.mean >= Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,167 @@
+//! Command-line parsing substrate (clap is not available offline).
+//!
+//! Grammar: `binary <subcommand> [--flag value | --switch] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`. Unknown flags are
+//! an error, which keeps typos from silently running a default experiment.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Subcommand name (first non-flag token), if any.
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+    known: Vec<(String, String)>, // (name, help)
+}
+
+impl Args {
+    /// Parse from an iterator of raw tokens (usually `std::env::args().skip(1)`).
+    /// `switch_names` lists flags that take no value.
+    pub fn parse(
+        tokens: impl IntoIterator<Item = String>,
+        switch_names: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&stripped) {
+                    args.switches.push(stripped.to_string());
+                } else {
+                    let v = iter.next().ok_or_else(|| {
+                        Error::Parse(format!("flag --{stripped} expects a value"))
+                    })?;
+                    args.flags.insert(stripped.to_string(), v);
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Register a known flag for `usage()`; returns self for chaining.
+    pub fn describe(mut self, name: &str, help: &str) -> Self {
+        self.known.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Get a string flag.
+    pub fn str_flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Get a required string flag.
+    pub fn require_str(&self, name: &str) -> Result<&str> {
+        self.str_flag(name)
+            .ok_or_else(|| Error::Parse(format!("missing required flag --{name}")))
+    }
+
+    /// Get a parsed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("flag --{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Get an optional parsed flag.
+    pub fn get_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::Parse(format!("flag --{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Was a boolean switch present?
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Reject any flag not in `allowed` (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Parse(format!("unknown flag --{k}")));
+            }
+        }
+        for s in &self.switches {
+            if !allowed.contains(&s.as_str()) {
+                return Err(Error::Parse(format!("unknown switch --{s}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positional() {
+        let a = Args::parse(toks("learn --n1 100 --algo krk data.kds"), &[]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("learn"));
+        assert_eq!(a.str_flag("n1"), Some("100"));
+        assert_eq!(a.str_flag("algo"), Some("krk"));
+        assert_eq!(a.positional(), &["data.kds".to_string()]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(toks("x --n1=42"), &[]).unwrap();
+        assert_eq!(a.get_or::<usize>("n1", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn switches() {
+        let a = Args::parse(toks("x --verbose --n 3"), &["verbose"]).unwrap();
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        assert_eq!(a.get_or::<usize>("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(toks("x --n1"), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_parse_errors() {
+        let a = Args::parse(toks("x --n abc"), &[]).unwrap();
+        assert!(a.get_or::<usize>("n", 0).is_err());
+        assert!(a.get_opt::<f64>("n").is_err());
+        assert_eq!(a.get_opt::<f64>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn require_and_unknown_checks() {
+        let a = Args::parse(toks("x --good 1 --bad 2"), &[]).unwrap();
+        assert!(a.require_str("good").is_ok());
+        assert!(a.require_str("absent").is_err());
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

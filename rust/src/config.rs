@@ -1,0 +1,234 @@
+//! Configuration system.
+//!
+//! Experiments and the serving coordinator are configured by JSON files
+//! (parsed with [`crate::ser::json`]) with programmatic defaults, so every
+//! example/binary can run with zero flags, and every paper experiment is a
+//! small checked-in config. CLI flags override file values.
+
+use crate::error::Result;
+use crate::ser::Json;
+use std::path::Path;
+
+/// Kernel structure choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Full unstructured N×N kernel.
+    Full,
+    /// Kronecker of two sub-kernels (the paper's main case, m=2).
+    Kron2,
+    /// Kronecker of three sub-kernels (m=3).
+    Kron3,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "full" => Ok(KernelKind::Full),
+            "kron2" => Ok(KernelKind::Kron2),
+            "kron3" => Ok(KernelKind::Kron3),
+            other => Err(crate::Error::Parse(format!("unknown kernel kind '{other}'"))),
+        }
+    }
+}
+
+/// Learning algorithm choice (the paper's three + EM baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Full Picard iteration [25].
+    Picard,
+    /// KRK-Picard (Alg. 1), batch updates.
+    Krk,
+    /// KRK-Picard with stochastic (minibatch) updates.
+    KrkStochastic,
+    /// Joint-Picard (Alg. 3).
+    JointPicard,
+    /// EM of Gillenwater et al. [10].
+    Em,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "picard" => Ok(Algorithm::Picard),
+            "krk" => Ok(Algorithm::Krk),
+            "krk-stochastic" | "krk_stochastic" => Ok(Algorithm::KrkStochastic),
+            "joint" | "joint-picard" => Ok(Algorithm::JointPicard),
+            "em" => Ok(Algorithm::Em),
+            other => Err(crate::Error::Parse(format!("unknown algorithm '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Picard => "picard",
+            Algorithm::Krk => "krk",
+            Algorithm::KrkStochastic => "krk-stochastic",
+            Algorithm::JointPicard => "joint-picard",
+            Algorithm::Em => "em",
+        }
+    }
+}
+
+/// Configuration for a learning run.
+#[derive(Clone, Debug)]
+pub struct LearnConfig {
+    /// Sub-kernel sizes; `n = n1 * n2 (* n3)`.
+    pub n1: usize,
+    pub n2: usize,
+    /// Step size `a` (§3.1.1 generalization; 1.0 = guaranteed ascent).
+    pub step_size: f64,
+    /// Max iterations.
+    pub max_iters: usize,
+    /// Convergence threshold δ on objective change (0 disables).
+    pub tol: f64,
+    /// Minibatch size for stochastic updates (1 = pure stochastic).
+    pub minibatch: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LearnConfig {
+    fn default() -> Self {
+        LearnConfig {
+            n1: 50,
+            n2: 50,
+            step_size: 1.0,
+            max_iters: 20,
+            tol: 1e-4,
+            minibatch: 1,
+            seed: 2016,
+        }
+    }
+}
+
+impl LearnConfig {
+    /// Ground-set size.
+    pub fn n(&self) -> usize {
+        self.n1 * self.n2
+    }
+
+    /// Parse from a JSON object, starting from defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = LearnConfig::default();
+        if let Some(x) = v.get_opt("n1") {
+            c.n1 = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("n2") {
+            c.n2 = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("step_size") {
+            c.step_size = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("max_iters") {
+            c.max_iters = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("tol") {
+            c.tol = x.as_f64()?;
+        }
+        if let Some(x) = v.get_opt("minibatch") {
+            c.minibatch = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("seed") {
+            c.seed = x.as_f64()? as u64;
+        }
+        Ok(c)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Configuration for the serving coordinator.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads sampling from the kernel.
+    pub workers: usize,
+    /// Max requests per dynamic batch.
+    pub max_batch: usize,
+    /// Max time a request waits for batch-mates before dispatch (µs).
+    pub batch_window_us: u64,
+    /// Bounded queue capacity (backpressure limit).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: crate::linalg::matmul::available_threads(),
+            max_batch: 32,
+            batch_window_us: 500,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = ServiceConfig::default();
+        if let Some(x) = v.get_opt("workers") {
+            c.workers = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.get_opt("max_batch") {
+            c.max_batch = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.get_opt("batch_window_us") {
+            c.batch_window_us = x.as_f64()? as u64;
+        }
+        if let Some(x) = v.get_opt("queue_capacity") {
+            c.queue_capacity = x.as_usize()?.max(1);
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = LearnConfig::default();
+        assert_eq!(c.n(), 2500);
+        assert!(c.step_size > 0.0);
+        let s = ServiceConfig::default();
+        assert!(s.workers >= 1);
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(r#"{"n1": 10, "n2": 20, "step_size": 1.8, "max_iters": 7}"#).unwrap();
+        let c = LearnConfig::from_json(&j).unwrap();
+        assert_eq!(c.n1, 10);
+        assert_eq!(c.n2, 20);
+        assert_eq!(c.n(), 200);
+        assert_eq!(c.step_size, 1.8);
+        assert_eq!(c.max_iters, 7);
+        // untouched default
+        assert_eq!(c.minibatch, 1);
+    }
+
+    #[test]
+    fn service_from_json() {
+        let j = Json::parse(r#"{"workers": 2, "max_batch": 8}"#).unwrap();
+        let s = ServiceConfig::from_json(&j).unwrap();
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.max_batch, 8);
+    }
+
+    #[test]
+    fn enums_parse() {
+        assert_eq!(Algorithm::parse("krk").unwrap(), Algorithm::Krk);
+        assert_eq!(Algorithm::parse("em").unwrap(), Algorithm::Em);
+        assert!(Algorithm::parse("sgd").is_err());
+        assert_eq!(KernelKind::parse("kron2").unwrap(), KernelKind::Kron2);
+        assert!(KernelKind::parse("x").is_err());
+    }
+}

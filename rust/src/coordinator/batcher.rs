@@ -1,0 +1,200 @@
+//! Dynamic batching policy.
+//!
+//! Sampling requests against the same kernel share the eigendecomposition,
+//! so grouping them amortizes dispatch overhead and keeps workers hot. The
+//! policy is the standard two-trigger design (vLLM-router style): dispatch
+//! when `max_batch` requests are waiting, or when the oldest waiting
+//! request has aged past `window`.
+//!
+//! The policy itself is pure (no threads, no clocks injected) so its
+//! invariants are property-tested directly; the server wraps it in a pump
+//! thread.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before forced dispatch.
+    pub window: Duration,
+}
+
+/// A queued item with its enqueue time.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+/// FIFO batching queue governed by a [`BatchPolicy`].
+pub struct BatchQueue<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        BatchQueue { policy, queue: VecDeque::new() }
+    }
+
+    /// Number of waiting requests.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue a request at time `now`.
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back(Pending { item, enqueued: now });
+    }
+
+    /// Should a batch be dispatched at `now`?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(p) => now.duration_since(p.enqueued) >= self.policy.window,
+            None => false,
+        }
+    }
+
+    /// Time until the age trigger would fire (None if queue empty).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            let age = now.duration_since(p.enqueued);
+            self.policy.window.saturating_sub(age)
+        })
+    }
+
+    /// Pop a batch if ready: oldest-first, at most `max_batch` items.
+    pub fn pop_batch(&mut self, now: Instant) -> Option<Vec<Pending<T>>> {
+        if !self.ready(now) {
+            return None;
+        }
+        let take = self.queue.len().min(self.policy.max_batch);
+        Some(self.queue.drain(..take).collect())
+    }
+
+    /// Drain everything unconditionally (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Pending<T>> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen, UsizeGen};
+    use std::time::Duration;
+
+    fn policy(max_batch: usize, window_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, window: Duration::from_millis(window_ms) }
+    }
+
+    #[test]
+    fn dispatches_on_size_trigger() {
+        let mut q = BatchQueue::new(policy(3, 1_000));
+        let t0 = Instant::now();
+        q.push(1, t0);
+        q.push(2, t0);
+        assert!(!q.ready(t0));
+        q.push(3, t0);
+        assert!(q.ready(t0));
+        let batch = q.pop_batch(t0).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_age_trigger() {
+        let mut q = BatchQueue::new(policy(100, 10));
+        let t0 = Instant::now();
+        q.push(1, t0);
+        assert!(!q.ready(t0));
+        let later = t0 + Duration::from_millis(11);
+        assert!(q.ready(later));
+        assert_eq!(q.pop_batch(later).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn batch_respects_max_and_fifo() {
+        let mut q = BatchQueue::new(policy(2, 0));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            q.push(i, t0);
+        }
+        let b1 = q.pop_batch(t0).unwrap();
+        assert_eq!(b1.iter().map(|p| p.item).collect::<Vec<_>>(), vec![0, 1]);
+        let b2 = q.pop_batch(t0).unwrap();
+        assert_eq!(b2.iter().map(|p| p.item).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut q = BatchQueue::new(policy(10, 100));
+        let t0 = Instant::now();
+        assert!(q.next_deadline(t0).is_none());
+        q.push(1, t0);
+        let d = q.next_deadline(t0 + Duration::from_millis(40)).unwrap();
+        assert!(d <= Duration::from_millis(60));
+    }
+
+    // Property: for any sequence of pushes and pops, no request is lost or
+    // duplicated, every batch ≤ max_batch, and dispatch order is FIFO.
+    #[test]
+    fn prop_no_loss_no_dup_fifo() {
+        let gen = UsizeGen { lo: 1, hi: 8 };
+        check("batcher invariants", &gen, 50, |&max_batch| {
+            let mut q = BatchQueue::new(policy(max_batch, 0)); // window 0 → always ready
+            let t0 = Instant::now();
+            let mut seen = Vec::new();
+            let mut next_id = 0usize;
+            // Interleave pushes and pops deterministically from max_batch.
+            for round in 0..20 {
+                for _ in 0..(round % 5) {
+                    q.push(next_id, t0);
+                    next_id += 1;
+                }
+                if let Some(batch) = q.pop_batch(t0) {
+                    if batch.len() > max_batch {
+                        return false;
+                    }
+                    seen.extend(batch.into_iter().map(|p| p.item));
+                }
+            }
+            seen.extend(q.drain_all().into_iter().map(|p| p.item));
+            // FIFO over the whole run → seen is exactly 0..next_id in order.
+            seen == (0..next_id).collect::<Vec<_>>()
+        });
+    }
+
+    // Property: ready() is monotone in time — once ready, stays ready.
+    #[test]
+    fn prop_ready_monotone() {
+        struct P;
+        impl Gen for P {
+            type Value = (usize, u64);
+            fn generate(&self, rng: &mut crate::rng::Rng) -> Self::Value {
+                (rng.int_range(1, 5), rng.int_range(0, 50) as u64)
+            }
+        }
+        check("ready monotone", &P, 50, |&(n, window_ms)| {
+            let mut q = BatchQueue::new(policy(n + 1, window_ms));
+            let t0 = Instant::now();
+            for i in 0..n {
+                q.push(i, t0);
+            }
+            let t1 = t0 + Duration::from_millis(window_ms);
+            let t2 = t1 + Duration::from_millis(5);
+            !q.ready(t0 + Duration::from_millis(window_ms.saturating_sub(1)))
+                || (q.ready(t1) && q.ready(t2))
+        });
+    }
+}

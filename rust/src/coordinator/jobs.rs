@@ -1,0 +1,169 @@
+//! Learning jobs: run a [`crate::learn::Learner`] in the background and
+//! (optionally) hot-swap each improved kernel into a running
+//! [`super::server::DppService`] — continuous learning behind a live
+//! sampling endpoint.
+
+use crate::coordinator::server::DppService;
+use crate::dpp::likelihood;
+use crate::error::Result;
+use crate::learn::traits::{IterRecord, Learner, TrainingSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Progress event emitted after each learning iteration.
+#[derive(Clone, Debug)]
+pub struct Progress {
+    pub record: IterRecord,
+    /// True when the kernel was installed into the service.
+    pub installed: bool,
+}
+
+/// A running learning job.
+pub struct LearningJob {
+    handle: JoinHandle<Result<Vec<IterRecord>>>,
+    progress: mpsc::Receiver<Progress>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl LearningJob {
+    /// Spawn: runs `learner` for up to `max_iters` over `data`. If
+    /// `service` is given, each iteration's kernel is installed (swap
+    /// cost is the sub-kernel eigendecompositions — cheap for KronDPP,
+    /// which is exactly the paper's point).
+    pub fn spawn(
+        mut learner: Box<dyn Learner + Send>,
+        data: TrainingSet,
+        max_iters: usize,
+        tol: f64,
+        service: Option<Arc<DppService>>,
+    ) -> LearningJob {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel2 = Arc::clone(&cancel);
+        let handle = std::thread::Builder::new()
+            .name("krondpp-learn".into())
+            .spawn(move || -> Result<Vec<IterRecord>> {
+                let mut history = Vec::new();
+                let ll0 = likelihood::log_likelihood(&learner.kernel(), &data.subsets)?;
+                history.push(IterRecord {
+                    iter: 0,
+                    elapsed: Duration::ZERO,
+                    log_likelihood: ll0,
+                });
+                let mut elapsed = Duration::ZERO;
+                for it in 1..=max_iters {
+                    if cancel2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let t = Instant::now();
+                    learner.step(&data)?;
+                    elapsed += t.elapsed();
+                    let ll = likelihood::log_likelihood(&learner.kernel(), &data.subsets)?;
+                    let record = IterRecord { iter: it, elapsed, log_likelihood: ll };
+                    history.push(record.clone());
+                    let mut installed = false;
+                    if let Some(svc) = &service {
+                        // Only install improving kernels.
+                        let prev = history[history.len() - 2].log_likelihood;
+                        if ll >= prev {
+                            svc.update_kernel(&learner.kernel())?;
+                            installed = true;
+                        }
+                    }
+                    let _ = tx.send(Progress { record, installed });
+                    let prev = history[history.len() - 2].log_likelihood;
+                    if tol > 0.0 && (ll - prev).abs() < tol {
+                        break;
+                    }
+                }
+                Ok(history)
+            })
+            .expect("spawn learning job");
+        LearningJob { handle, progress: rx, cancel }
+    }
+
+    /// Non-blocking progress poll.
+    pub fn poll(&self) -> Vec<Progress> {
+        self.progress.try_iter().collect()
+    }
+
+    /// Request cancellation (takes effect at the next iteration boundary).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for completion, returning the full history.
+    pub fn join(self) -> Result<Vec<IterRecord>> {
+        self.handle.join().map_err(|_| {
+            crate::error::Error::Service("learning job panicked".into())
+        })?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServiceConfig;
+    use crate::dpp::{Kernel, Sampler};
+    use crate::learn::KrkPicard;
+    use crate::rng::Rng;
+
+    fn setup() -> (TrainingSet, KrkPicard, Kernel) {
+        let mut rng = Rng::new(1);
+        let mk = |n: usize, rng: &mut Rng| {
+            let mut m = rng.paper_init_kernel(n);
+            m.scale_mut(1.5 / n as f64);
+            m.add_diag_mut(0.3);
+            m
+        };
+        let truth = Kernel::Kron2(mk(3, &mut rng), mk(3, &mut rng));
+        let sampler = Sampler::new(&truth).unwrap();
+        let subsets: Vec<Vec<usize>> = (0..30).map(|_| sampler.sample(&mut rng)).collect();
+        let data = TrainingSet::new(9, subsets).unwrap();
+        let learner = KrkPicard::new(mk(3, &mut rng), mk(3, &mut rng), 1.0).unwrap();
+        (data, learner, truth)
+    }
+
+    #[test]
+    fn job_runs_to_completion_with_progress() {
+        let (data, learner, _) = setup();
+        let job = LearningJob::spawn(Box::new(learner), data, 5, 0.0, None);
+        let history = job.join().unwrap();
+        assert_eq!(history.len(), 6);
+        for w in history.windows(2) {
+            assert!(w[1].log_likelihood >= w[0].log_likelihood - 1e-9);
+        }
+    }
+
+    #[test]
+    fn job_installs_kernels_into_service() {
+        let (data, learner, truth) = setup();
+        let cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 2,
+            batch_window_us: 100,
+            queue_capacity: 16,
+        };
+        let svc = Arc::new(DppService::start(&truth, &cfg, 3).unwrap());
+        let job =
+            LearningJob::spawn(Box::new(learner), data, 4, 0.0, Some(Arc::clone(&svc)));
+        let history = job.join().unwrap();
+        assert_eq!(history.len(), 5);
+        // Service still serves after swaps.
+        let y = svc.sample(3).unwrap();
+        assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn cancellation_stops_early() {
+        let (data, learner, _) = setup();
+        let job = LearningJob::spawn(Box::new(learner), data, 10_000, 0.0, None);
+        std::thread::sleep(Duration::from_millis(30));
+        job.cancel();
+        let history = job.join().unwrap();
+        assert!(history.len() < 10_001, "cancel had no effect");
+        assert!(!history.is_empty());
+    }
+}

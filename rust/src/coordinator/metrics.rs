@@ -1,0 +1,191 @@
+//! Service metrics: latency histograms, counters, throughput windows.
+//!
+//! Lock-free-ish (atomics for counters; a mutex-guarded log-bucketed
+//! histogram for latencies — contention is negligible next to a sampling
+//! operation). The serving benches print these as the
+//! latency/throughput rows in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-bucketed latency histogram (1 µs .. ~1000 s, 5 buckets/decade).
+pub struct LatencyHistogram {
+    buckets: Mutex<Vec<u64>>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const BUCKETS_PER_DECADE: usize = 5;
+const DECADES: usize = 9; // 1 µs → 10^9 µs
+const NBUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: Mutex::new(vec![0; NBUCKETS + 1]),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_index(us: f64) -> usize {
+        if us < 1.0 {
+            return 0;
+        }
+        let idx = (us.log10() * BUCKETS_PER_DECADE as f64).floor() as usize;
+        idx.min(NBUCKETS)
+    }
+
+    fn bucket_upper_us(idx: usize) -> f64 {
+        10f64.powf((idx + 1) as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us as u64, Ordering::Relaxed);
+        let mut b = self.buckets.lock().unwrap();
+        b[Self::bucket_index(us)] += 1;
+    }
+
+    /// Total samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Max latency.
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let b = self.buckets.lock().unwrap();
+        let mut acc = 0u64;
+        for (i, &c) in b.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_secs_f64(Self::bucket_upper_us(i) / 1e6);
+            }
+        }
+        self.max()
+    }
+
+    /// One-line summary for logs/benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean().as_secs_f64() * 1e3,
+            self.quantile(0.5).as_secs_f64() * 1e3,
+            self.quantile(0.95).as_secs_f64() * 1e3,
+            self.quantile(0.99).as_secs_f64() * 1e3,
+            self.max().as_secs_f64() * 1e3,
+        )
+    }
+}
+
+/// Service-wide counters.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    /// Requests accepted into the queue.
+    pub accepted: AtomicU64,
+    /// Requests rejected by backpressure.
+    pub rejected: AtomicU64,
+    /// Requests completed.
+    pub completed: AtomicU64,
+    /// Batches dispatched.
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+    /// Queue wait before dispatch.
+    pub queue_wait: LatencyHistogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "accepted={} rejected={} completed={} batches={} mean_batch={:.2}\n  latency: {}\n  queue:   {}",
+            self.accepted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency.summary(),
+            self.queue_wait.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // p50 ≈ 5ms within bucket resolution (x1.6 per bucket).
+        let p50ms = p50.as_secs_f64() * 1e3;
+        assert!(p50ms > 2.0 && p50ms < 13.0, "p50 {p50ms}ms");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn service_metrics_mean_batch() {
+        let m = ServiceMetrics::new();
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+        assert!(m.report().contains("mean_batch=2.50"));
+    }
+}

@@ -1,0 +1,19 @@
+//! The Layer-3 coordinator: a production serving + learning system around
+//! the KronDPP core (DESIGN.md §3).
+//!
+//! - [`server`]: the sampling service (request queue → dynamic batcher →
+//!   least-loaded workers → exact DPP samples), with kernel hot-swap.
+//! - [`batcher`]: the two-trigger (size/age) batch policy, property-tested.
+//! - [`router`]: least-loaded work routing.
+//! - [`jobs`]: background learning jobs feeding refreshed kernels to the
+//!   service.
+//! - [`metrics`]: latency histograms + service counters.
+
+pub mod batcher;
+pub mod jobs;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use jobs::LearningJob;
+pub use server::{DppService, SampleRequest, Ticket};

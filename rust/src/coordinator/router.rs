@@ -1,0 +1,105 @@
+//! Work routing: least-loaded assignment of batches to workers.
+//!
+//! Workers expose an in-flight count; the router picks the least-loaded
+//! worker (ties → lowest index, keeping placement deterministic for
+//! tests). Pure logic, property-tested; the server owns the actual worker
+//! threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared per-worker load gauge.
+#[derive(Clone)]
+pub struct WorkerLoad(Arc<Vec<AtomicUsize>>);
+
+impl WorkerLoad {
+    pub fn new(workers: usize) -> Self {
+        WorkerLoad(Arc::new((0..workers).map(|_| AtomicUsize::new(0)).collect()))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Current load of worker `w`.
+    pub fn load(&self, w: usize) -> usize {
+        self.0[w].load(Ordering::SeqCst)
+    }
+
+    /// Record assignment / completion.
+    pub fn begin(&self, w: usize) {
+        self.0[w].fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn end(&self, w: usize) {
+        self.0[w].fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Least-loaded worker (lowest index on ties).
+    pub fn pick(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for w in 0..self.0.len() {
+            let l = self.load(w);
+            if l < best_load {
+                best_load = l;
+                best = w;
+            }
+        }
+        best
+    }
+
+    /// Total outstanding work.
+    pub fn total(&self) -> usize {
+        (0..self.0.len()).map(|w| self.load(w)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, UsizeGen};
+
+    #[test]
+    fn picks_least_loaded_deterministically() {
+        let r = WorkerLoad::new(3);
+        r.begin(0);
+        r.begin(0);
+        r.begin(1);
+        assert_eq!(r.pick(), 2);
+        r.begin(2);
+        r.begin(2);
+        assert_eq!(r.pick(), 1);
+        r.end(0);
+        r.end(0);
+        assert_eq!(r.pick(), 0);
+    }
+
+    #[test]
+    fn prop_balanced_under_uniform_arrivals() {
+        // Assign k jobs with no completions: loads differ by ≤ 1.
+        check("router balance", &UsizeGen { lo: 1, hi: 64 }, 40, |&k| {
+            let r = WorkerLoad::new(4);
+            for _ in 0..k {
+                let w = r.pick();
+                r.begin(w);
+            }
+            let loads: Vec<usize> = (0..4).map(|w| r.load(w)).collect();
+            let max = *loads.iter().max().unwrap();
+            let min = *loads.iter().min().unwrap();
+            r.total() == k && max - min <= 1
+        });
+    }
+
+    #[test]
+    fn prop_work_conserving() {
+        // As long as any worker is idle, pick() returns an idle worker.
+        check("work conserving", &UsizeGen { lo: 1, hi: 3 }, 30, |&busy| {
+            let r = WorkerLoad::new(4);
+            for w in 0..busy {
+                r.begin(w);
+            }
+            r.load(r.pick()) == 0
+        });
+    }
+}

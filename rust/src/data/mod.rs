@@ -1,0 +1,11 @@
+//! Dataset generators and workloads for every experiment in the paper's
+//! evaluation (plus the serving traces used by the coordinator benches).
+//! Substitutions for the paper's proprietary datasets are documented in
+//! DESIGN.md §5.
+
+pub mod genes;
+pub mod registry;
+pub mod synthetic;
+pub mod workload;
+
+pub use synthetic::{approx_sample_k, fig1_problem, paper_truth_kernel, sample_training_set};

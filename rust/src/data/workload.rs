@@ -1,0 +1,76 @@
+//! Service workload generation for the coordinator benchmarks: Poisson
+//! request arrivals with configurable subset-size distribution, mirroring
+//! a diverse-recommendation serving trace.
+
+use crate::rng::Rng;
+use std::time::Duration;
+
+/// One synthetic request: arrival offset + requested subset size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Offset from trace start.
+    pub at: Duration,
+    /// Requested number of diverse items (k-DPP size); 0 = unconstrained
+    /// DPP draw.
+    pub k: usize,
+}
+
+/// Workload shape.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Mean arrival rate (requests/second).
+    pub rate_hz: f64,
+    /// Total requests.
+    pub count: usize,
+    /// Subset-size range (inclusive); `0..=0` for unconstrained draws.
+    pub k_lo: usize,
+    pub k_hi: usize,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec { rate_hz: 200.0, count: 1000, k_lo: 5, k_hi: 20 }
+    }
+}
+
+/// Generate a Poisson-arrival trace.
+pub fn generate(spec: &WorkloadSpec, rng: &mut Rng) -> Vec<Request> {
+    let mut at = 0.0f64;
+    let mut out = Vec::with_capacity(spec.count);
+    for _ in 0..spec.count {
+        // Exponential inter-arrival.
+        let u = rng.uniform().max(f64::MIN_POSITIVE);
+        at += -u.ln() / spec.rate_hz;
+        let k = if spec.k_hi == 0 { 0 } else { rng.int_range(spec.k_lo, spec.k_hi) };
+        out.push(Request { at: Duration::from_secs_f64(at), k });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_rate_about_right() {
+        let mut rng = Rng::new(1);
+        let spec = WorkloadSpec { rate_hz: 100.0, count: 2000, k_lo: 3, k_hi: 7 };
+        let trace = generate(&spec, &mut rng);
+        assert_eq!(trace.len(), 2000);
+        for w in trace.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        let total = trace.last().unwrap().at.as_secs_f64();
+        let rate = 2000.0 / total;
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+        assert!(trace.iter().all(|r| (3..=7).contains(&r.k)));
+    }
+
+    #[test]
+    fn unconstrained_mode() {
+        let mut rng = Rng::new(2);
+        let spec = WorkloadSpec { rate_hz: 10.0, count: 10, k_lo: 0, k_hi: 0 };
+        let trace = generate(&spec, &mut rng);
+        assert!(trace.iter().all(|r| r.k == 0));
+    }
+}

@@ -1,0 +1,180 @@
+//! Elementary symmetric polynomials over eigenvalue sets.
+//!
+//! `e_k(λ₁..λ_N)` drives k-DPP sampling (Kulesza & Taskar, ref. [16]):
+//! the probability that the sampled elementary DPP uses eigenvector `n`
+//! given a target cardinality `k` involves ratios `e_{k-1}^{n-1}/e_k^n`.
+//! Computed with the standard `O(Nk)` dynamic program, in log-space-safe
+//! normalized form (we rescale rows to avoid overflow for large N).
+
+/// Table of elementary symmetric polynomials.
+///
+/// `e[n][j] = e_j(λ₁..λ_n)` for `0 ≤ j ≤ k`, with a per-row scaling factor
+/// tracked in log-space for numerical stability.
+pub struct ElementaryTable {
+    /// e[n][j], scaled so that each row's max is O(1).
+    table: Vec<Vec<f64>>,
+    /// log of the scale factor applied to row n.
+    log_scale: Vec<f64>,
+    k: usize,
+}
+
+impl ElementaryTable {
+    /// Build the DP table for eigenvalues `lambda` up to order `k`.
+    pub fn new(lambda: &[f64], k: usize) -> Self {
+        let n = lambda.len();
+        let mut table = Vec::with_capacity(n + 1);
+        let mut log_scale = Vec::with_capacity(n + 1);
+        let mut row = vec![0.0; k + 1];
+        row[0] = 1.0;
+        table.push(row.clone());
+        log_scale.push(0.0);
+        for i in 1..=n {
+            let prev = &table[i - 1];
+            let mut cur = vec![0.0; k + 1];
+            cur[0] = prev[0];
+            for j in 1..=k.min(i) {
+                cur[j] = prev[j] + lambda[i - 1] * prev[j - 1];
+            }
+            // Rescale to avoid overflow: bring max to ~1.
+            let maxv = cur.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+            let mut ls = log_scale[i - 1];
+            if maxv > 1e100 || (maxv > 0.0 && maxv < 1e-100) {
+                for x in &mut cur {
+                    *x /= maxv;
+                }
+                ls += maxv.ln();
+            }
+            table.push(cur);
+            log_scale.push(ls);
+        }
+        ElementaryTable { table, log_scale, k }
+    }
+
+    /// `log e_j(λ₁..λ_n)`; `-inf` if zero.
+    pub fn log_e(&self, n: usize, j: usize) -> f64 {
+        debug_assert!(j <= self.k);
+        let v = self.table[n][j];
+        if v <= 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            v.ln() + self.log_scale[n]
+        }
+    }
+
+    /// Ratio `λ_n · e_{j-1}(λ₁..λ_{n-1}) / e_j(λ₁..λ_n)` — the probability
+    /// that eigenvalue `n` (1-based) is selected when `j` picks remain.
+    pub fn select_prob(&self, lambda_n: f64, n: usize, j: usize) -> f64 {
+        let num = self.log_e(n - 1, j - 1);
+        let den = self.log_e(n, j);
+        if den == f64::NEG_INFINITY {
+            return 0.0;
+        }
+        (lambda_n.ln() + num - den).exp().clamp(0.0, 1.0)
+    }
+}
+
+/// Sample a k-subset of eigenvector indices with `P(J) ∝ Π_{i∈J} λ_i`
+/// constrained to `|J| = k` (phase 1 of k-DPP sampling).
+pub fn sample_k_eigenvectors(
+    lambda: &[f64],
+    k: usize,
+    rng: &mut crate::rng::Rng,
+) -> Vec<usize> {
+    let n = lambda.len();
+    assert!(k <= n, "k-DPP: k > N");
+    let table = ElementaryTable::new(lambda, k);
+    let mut j = k;
+    let mut out = Vec::with_capacity(k);
+    for i in (1..=n).rev() {
+        if j == 0 {
+            break;
+        }
+        if i == j {
+            // Must take all remaining.
+            for t in (0..i).rev() {
+                out.push(t);
+            }
+            break;
+        }
+        let p = table.select_prob(lambda[i - 1], i, j);
+        if rng.bernoulli(p) {
+            out.push(i - 1);
+            j -= 1;
+        }
+    }
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_bruteforce_small() {
+        let lam = [0.5, 1.5, 2.0, 0.25];
+        let table = ElementaryTable::new(&lam, 3);
+        // e_1 = sum, e_2 = pairwise products sum, e_3 = triple products sum
+        let e1: f64 = lam.iter().sum();
+        let mut e2 = 0.0;
+        let mut e3 = 0.0;
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                e2 += lam[i] * lam[j];
+                for k in (j + 1)..4 {
+                    e3 += lam[i] * lam[j] * lam[k];
+                }
+            }
+        }
+        assert!((table.log_e(4, 1) - e1.ln()).abs() < 1e-12);
+        assert!((table.log_e(4, 2) - e2.ln()).abs() < 1e-12);
+        assert!((table.log_e(4, 3) - e3.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn large_n_no_overflow() {
+        let lam: Vec<f64> = (0..2000).map(|i| 1.0 + (i % 7) as f64).collect();
+        let table = ElementaryTable::new(&lam, 50);
+        let v = table.log_e(2000, 50);
+        assert!(v.is_finite() && v > 0.0);
+    }
+
+    #[test]
+    fn sampler_returns_k_distinct_sorted() {
+        let mut rng = Rng::new(1);
+        let lam: Vec<f64> = (1..=20).map(|i| i as f64 / 10.0).collect();
+        for _ in 0..50 {
+            let s = sample_k_eigenvectors(&lam, 5, &mut rng);
+            assert_eq!(s.len(), 5);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(*s.last().unwrap() < 20);
+        }
+    }
+
+    #[test]
+    fn sampler_respects_weights_statistically() {
+        // With λ = [10, 10, 0.01, 0.01] and k=2, indices {0,1} dominate.
+        let mut rng = Rng::new(2);
+        let lam = [10.0, 10.0, 0.01, 0.01];
+        let mut hits01 = 0;
+        let trials = 500;
+        for _ in 0..trials {
+            let s = sample_k_eigenvectors(&lam, 2, &mut rng);
+            if s == vec![0, 1] {
+                hits01 += 1;
+            }
+        }
+        assert!(hits01 as f64 / trials as f64 > 0.95, "{hits01}/{trials}");
+    }
+
+    #[test]
+    fn k_equals_n_takes_all() {
+        let mut rng = Rng::new(3);
+        let lam = [1.0, 2.0, 3.0];
+        let s = sample_k_eigenvectors(&lam, 3, &mut rng);
+        assert_eq!(s, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,396 @@
+//! DPP kernel representations.
+//!
+//! [`Kernel`] is the central type: a PSD matrix `L` defining
+//! `P(Y) ∝ det(L_Y)`, stored either densely ([`Kernel::Full`]) or as a
+//! Kronecker product of two/three sub-kernels ([`Kernel::Kron2`],
+//! [`Kernel::Kron3`] — the paper's KronDPP). All DPP operations dispatch on
+//! the structure and exploit it:
+//!
+//! - entries and principal submatrices come from sub-kernel products in
+//!   `O(1)` per entry (never materializing `L`),
+//! - `log det(L + I)` uses sub-spectra (`O(N₁³+N₂³)` instead of `O(N³)`),
+//! - the eigendecomposition factorizes per Cor. 2.2, giving the paper's
+//!   `O(N^{3/2})` (m=2) / `O(N)` (m=3) sampling preprocessing.
+
+use crate::error::{Error, Result};
+use crate::linalg::{cholesky, eigen::SymEigen, kron, matmul, Matrix};
+
+/// A DPP kernel `L`, dense or Kronecker-structured.
+#[derive(Clone, Debug)]
+pub enum Kernel {
+    /// Unstructured dense kernel.
+    Full(Matrix),
+    /// `L = L₁ ⊗ L₂`.
+    Kron2(Matrix, Matrix),
+    /// `L = L₁ ⊗ L₂ ⊗ L₃`.
+    Kron3(Matrix, Matrix, Matrix),
+}
+
+impl Kernel {
+    /// Ground-set size `N`.
+    pub fn n(&self) -> usize {
+        match self {
+            Kernel::Full(l) => l.rows(),
+            Kernel::Kron2(a, b) => a.rows() * b.rows(),
+            Kernel::Kron3(a, b, c) => a.rows() * b.rows() * c.rows(),
+        }
+    }
+
+    /// Number of free parameters (the paper's `N² → O(N^{2/m})` saving).
+    pub fn param_count(&self) -> usize {
+        match self {
+            Kernel::Full(l) => l.rows() * l.rows(),
+            Kernel::Kron2(a, b) => a.rows() * a.rows() + b.rows() * b.rows(),
+            Kernel::Kron3(a, b, c) => {
+                a.rows() * a.rows() + b.rows() * b.rows() + c.rows() * c.rows()
+            }
+        }
+    }
+
+    /// Entry `L[i, j]` without materializing the product.
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        match self {
+            Kernel::Full(l) => l.get(i, j),
+            Kernel::Kron2(a, b) => {
+                let n2 = b.rows();
+                a.get(i / n2, j / n2) * b.get(i % n2, j % n2)
+            }
+            Kernel::Kron3(a, b, c) => {
+                let n3 = c.rows();
+                let n2 = b.rows();
+                let (i2, ir) = (i / (n2 * n3), i % (n2 * n3));
+                let (j2, jr) = (j / (n2 * n3), j % (n2 * n3));
+                a.get(i2, j2) * b.get(ir / n3, jr / n3) * c.get(ir % n3, jr % n3)
+            }
+        }
+    }
+
+    /// Principal submatrix `L_Y` (κ×κ) — `O(κ²)` for any structure.
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Matrix {
+        match self {
+            Kernel::Full(l) => l.principal_submatrix(idx),
+            _ => {
+                let k = idx.len();
+                Matrix::from_fn(k, k, |a, b| self.entry(idx[a], idx[b]))
+            }
+        }
+    }
+
+    /// Materialize the dense `N×N` matrix (small N / tests only).
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            Kernel::Full(l) => l.clone(),
+            Kernel::Kron2(a, b) => kron::kron(a, b),
+            Kernel::Kron3(a, b, c) => kron::kron3(a, b, c),
+        }
+    }
+
+    /// `log det(L + I)` — the DPP normalizer denominator. Structured
+    /// kernels use sub-spectra: `det(L₁⊗L₂ + I) = Π_{ij}(1 + λ_i μ_j)`.
+    pub fn logdet_l_plus_i(&self) -> Result<f64> {
+        match self {
+            Kernel::Full(l) => {
+                let mut li = l.clone();
+                li.add_diag_mut(1.0);
+                cholesky::logdet_pd(&li)
+            }
+            Kernel::Kron2(a, b) => {
+                let ea = crate::linalg::eigen::eigvals(a)?;
+                let eb = crate::linalg::eigen::eigvals(b)?;
+                let mut s = 0.0;
+                for &x in &ea {
+                    for &y in &eb {
+                        let v = 1.0 + x * y;
+                        if v <= 0.0 {
+                            return Err(Error::Numerical(
+                                "logdet(L+I): non-PD Kron spectrum".into(),
+                            ));
+                        }
+                        s += v.ln();
+                    }
+                }
+                Ok(s)
+            }
+            Kernel::Kron3(a, b, c) => {
+                let ea = crate::linalg::eigen::eigvals(a)?;
+                let eb = crate::linalg::eigen::eigvals(b)?;
+                let ec = crate::linalg::eigen::eigvals(c)?;
+                let mut s = 0.0;
+                for &x in &ea {
+                    for &y in &eb {
+                        let xy = x * y;
+                        for &z in &ec {
+                            let v = 1.0 + xy * z;
+                            if v <= 0.0 {
+                                return Err(Error::Numerical(
+                                    "logdet(L+I): non-PD Kron spectrum".into(),
+                                ));
+                            }
+                            s += v.ln();
+                        }
+                    }
+                }
+                Ok(s)
+            }
+        }
+    }
+
+    /// Is the kernel PD (all factors PD)?
+    pub fn is_pd(&self) -> bool {
+        match self {
+            Kernel::Full(l) => cholesky::is_pd(l),
+            Kernel::Kron2(a, b) => {
+                // (PD, PD) or (ND, ND) both give a PD product; we require
+                // the canonical PD-factor form.
+                cholesky::is_pd(a) && cholesky::is_pd(b)
+            }
+            Kernel::Kron3(a, b, c) => {
+                cholesky::is_pd(a) && cholesky::is_pd(b) && cholesky::is_pd(c)
+            }
+        }
+    }
+
+    /// Eigendecompose, exploiting structure (Cor. 2.2).
+    pub fn eigen(&self) -> Result<KernelEigen> {
+        match self {
+            Kernel::Full(l) => {
+                let e = SymEigen::new(l)?;
+                Ok(KernelEigen { values: e.values, vectors: EigenVectors::Dense(e.vectors) })
+            }
+            Kernel::Kron2(a, b) => {
+                let ea = SymEigen::new(a)?;
+                let eb = SymEigen::new(b)?;
+                let values = kron::kron_eigenvalues(&ea.values, &eb.values);
+                Ok(KernelEigen {
+                    values,
+                    vectors: EigenVectors::Kron2 { p1: ea.vectors, p2: eb.vectors },
+                })
+            }
+            Kernel::Kron3(a, b, c) => {
+                let ea = SymEigen::new(a)?;
+                let eb = SymEigen::new(b)?;
+                let ec = SymEigen::new(c)?;
+                let inner = kron::kron_eigenvalues(&eb.values, &ec.values);
+                let values = kron::kron_eigenvalues(&ea.values, &inner);
+                Ok(KernelEigen {
+                    values,
+                    vectors: EigenVectors::Kron3 {
+                        p1: ea.vectors,
+                        p2: eb.vectors,
+                        p3: ec.vectors,
+                    },
+                })
+            }
+        }
+    }
+
+    /// Marginal kernel `K = L(L+I)⁻¹` (dense; small N only). For any DPP,
+    /// `P(i ∈ Y) = K_ii`.
+    pub fn marginal_kernel(&self) -> Result<Matrix> {
+        let l = self.to_dense();
+        let mut li = l.clone();
+        li.add_diag_mut(1.0);
+        let inv = cholesky::inverse_pd(&li)?;
+        let mut k = matmul::matmul(&l, &inv)?;
+        k.symmetrize_mut();
+        Ok(k)
+    }
+}
+
+/// Eigendecomposition of a kernel, with structure-aware vector access.
+pub struct KernelEigen {
+    /// Eigenvalues in item order for structured kernels (index
+    /// `t = i·N₂ + j` pairs `λ_i(L₁)·λ_j(L₂)`), ascending for dense.
+    pub values: Vec<f64>,
+    /// Eigenvector accessor.
+    pub vectors: EigenVectors,
+}
+
+/// Eigenvectors of a kernel, stored dense or factored.
+pub enum EigenVectors {
+    Dense(Matrix),
+    Kron2 { p1: Matrix, p2: Matrix },
+    Kron3 { p1: Matrix, p2: Matrix, p3: Matrix },
+}
+
+impl EigenVectors {
+    /// Extract eigenvector `idx` as a dense column — `O(N)` for all
+    /// structures (the paper's "k eigenvectors in O(kN)" claim, §4).
+    pub fn column(&self, idx: usize) -> Vec<f64> {
+        match self {
+            EigenVectors::Dense(p) => p.col(idx),
+            EigenVectors::Kron2 { p1, p2 } => kron::kron_column(p1, p2, p2.rows(), idx),
+            EigenVectors::Kron3 { p1, p2, p3 } => {
+                let n23 = p2.rows() * p3.rows();
+                let n3 = p3.rows();
+                let (c1, rest) = (idx / n23, idx % n23);
+                let (c2, c3) = (rest / n3, rest % n3);
+                let mut out = Vec::with_capacity(p1.rows() * n23);
+                for i in 0..p1.rows() {
+                    let a = p1.get(i, c1);
+                    for j in 0..p2.rows() {
+                        let ab = a * p2.get(j, c2);
+                        for k in 0..p3.rows() {
+                            out.push(ab * p3.get(k, c3));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Gather columns `idx` into a dense `N×k` matrix.
+    pub fn gather(&self, idx: &[usize]) -> Matrix {
+        let cols: Vec<Vec<f64>> = idx.iter().map(|&i| self.column(i)).collect();
+        let n = cols.first().map(|c| c.len()).unwrap_or(0);
+        let mut m = Matrix::zeros(n, idx.len());
+        for (j, col) in cols.iter().enumerate() {
+            for i in 0..n {
+                m.set(i, j, col[i]);
+            }
+        }
+        m
+    }
+}
+
+impl KernelEigen {
+    /// Number of eigenpairs.
+    pub fn n(&self) -> usize {
+        self.values.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = rng.paper_init_kernel(n);
+        m.scale_mut(1.0 / n as f64);
+        m.add_diag_mut(0.1);
+        m
+    }
+
+    #[test]
+    fn entry_matches_dense() {
+        let a = spd(3, 1);
+        let b = spd(4, 2);
+        let k = Kernel::Kron2(a.clone(), b.clone());
+        let dense = k.to_dense();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((k.entry(i, j) - dense[(i, j)]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn entry_kron3_matches_dense() {
+        let a = spd(2, 3);
+        let b = spd(3, 4);
+        let c = spd(2, 5);
+        let k = Kernel::Kron3(a, b, c);
+        let dense = k.to_dense();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((k.entry(i, j) - dense[(i, j)]).abs() < 1e-14, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn submatrix_matches_dense() {
+        let k = Kernel::Kron2(spd(3, 5), spd(4, 6));
+        let idx = [0usize, 3, 7, 11];
+        let sub = k.principal_submatrix(&idx);
+        let dense_sub = k.to_dense().principal_submatrix(&idx);
+        assert!(sub.rel_diff(&dense_sub) < 1e-13);
+    }
+
+    #[test]
+    fn logdet_structured_matches_dense() {
+        let k = Kernel::Kron2(spd(4, 7), spd(5, 8));
+        let fast = k.logdet_l_plus_i().unwrap();
+        let mut dense = k.to_dense();
+        dense.add_diag_mut(1.0);
+        let slow = cholesky::logdet_pd(&dense).unwrap();
+        assert!((fast - slow).abs() < 1e-8, "{fast} vs {slow}");
+    }
+
+    #[test]
+    fn logdet_kron3_matches_dense() {
+        let k = Kernel::Kron3(spd(2, 9), spd(3, 10), spd(2, 11));
+        let fast = k.logdet_l_plus_i().unwrap();
+        let mut dense = k.to_dense();
+        dense.add_diag_mut(1.0);
+        let slow = cholesky::logdet_pd(&dense).unwrap();
+        assert!((fast - slow).abs() < 1e-8);
+    }
+
+    #[test]
+    fn eigen_factored_matches_dense_spectrum() {
+        let k = Kernel::Kron2(spd(3, 12), spd(4, 13));
+        let mut fast = k.eigen().unwrap().values;
+        fast.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let slow = SymEigen::new(&k.to_dense()).unwrap().values;
+        for (p, q) in fast.iter().zip(&slow) {
+            assert!((p - q).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn eigen_columns_are_eigenvectors() {
+        let k = Kernel::Kron2(spd(3, 14), spd(3, 15));
+        let eig = k.eigen().unwrap();
+        let dense = k.to_dense();
+        for t in [0usize, 4, 8] {
+            let v = eig.vectors.column(t);
+            let av = dense.matvec(&v).unwrap();
+            let lam = eig.values[t];
+            let res: f64 =
+                av.iter().zip(&v).map(|(p, q)| (p - lam * q).powi(2)).sum::<f64>().sqrt();
+            assert!(res < 1e-9, "col {t}: residual {res}");
+        }
+    }
+
+    #[test]
+    fn gather_builds_matrix() {
+        let k = Kernel::Kron2(spd(2, 16), spd(3, 17));
+        let eig = k.eigen().unwrap();
+        let m = eig.vectors.gather(&[1, 3]);
+        assert_eq!(m.shape(), (6, 2));
+        let c1 = eig.vectors.column(3);
+        for i in 0..6 {
+            assert_eq!(m[(i, 1)], c1[i]);
+        }
+    }
+
+    #[test]
+    fn marginal_kernel_diag_are_probabilities() {
+        let k = Kernel::Kron2(spd(3, 18), spd(3, 19));
+        let marg = k.marginal_kernel().unwrap();
+        for i in 0..9 {
+            let p = marg[(i, i)];
+            assert!((0.0..=1.0).contains(&p), "K_ii = {p}");
+        }
+    }
+
+    #[test]
+    fn param_count_savings() {
+        let k = Kernel::Kron2(Matrix::identity(100), Matrix::identity(100));
+        assert_eq!(k.n(), 10_000);
+        assert_eq!(k.param_count(), 20_000); // vs 10^8 dense
+    }
+
+    #[test]
+    fn is_pd_checks_factors() {
+        assert!(Kernel::Kron2(spd(3, 20), spd(3, 21)).is_pd());
+        let mut bad = spd(3, 22);
+        bad.set(0, 0, -5.0);
+        assert!(!Kernel::Kron2(bad, spd(3, 23)).is_pd());
+    }
+}

@@ -1,0 +1,232 @@
+//! DPP log-likelihood (Eq. 3 of the paper):
+//!
+//! `φ(L) = (1/n) Σ_i [ log det(L_{Y_i}) − log det(L + I) ]`
+//!
+//! For structured kernels the normalizer uses sub-spectra and each
+//! `log det(L_{Y_i})` is a `κ×κ` Cholesky, so evaluating the objective
+//! costs `O(nκ³ + N^{3/2})` instead of `O(N³)` — the same structure
+//! exploitation as the learning updates.
+
+use crate::dpp::kernel::Kernel;
+use crate::error::Result;
+use crate::linalg::{cholesky::Cholesky, Matrix};
+
+/// Mean log-likelihood of `subsets` under kernel `kernel`.
+pub fn log_likelihood(kernel: &Kernel, subsets: &[Vec<usize>]) -> Result<f64> {
+    if subsets.is_empty() {
+        return Ok(0.0);
+    }
+    let normalizer = kernel.logdet_l_plus_i()?;
+    let mut total = 0.0;
+    for y in subsets {
+        total += subset_logdet(kernel, y)?;
+    }
+    Ok(total / subsets.len() as f64 - normalizer)
+}
+
+/// `log det(L_Y)`; the empty set has determinant 1 (log 0.0).
+pub fn subset_logdet(kernel: &Kernel, y: &[usize]) -> Result<f64> {
+    if y.is_empty() {
+        return Ok(0.0);
+    }
+    let sub = kernel.principal_submatrix(y);
+    Ok(Cholesky::factor(&sub)?.logdet())
+}
+
+/// Exact probability `P(Y) = det(L_Y)/det(L+I)` (log-space).
+pub fn log_prob(kernel: &Kernel, y: &[usize]) -> Result<f64> {
+    Ok(subset_logdet(kernel, y)? - kernel.logdet_l_plus_i()?)
+}
+
+/// The full-gradient helper matrix `Θ = (1/n) Σ_i U_i L_{Y_i}⁻¹ U_iᵀ`
+/// (dense). The gradient of φ is `Δ = Θ − (L+I)⁻¹` (Eq. 4).
+///
+/// The `O(nκ³)` subset inversions are embarrassingly parallel and run
+/// across threads; the `O(nκ²)` scatter is serial (it would contend on
+/// Θ) — see EXPERIMENTS.md §Perf.
+pub fn theta_dense(kernel: &Kernel, subsets: &[Vec<usize>]) -> Result<Matrix> {
+    let n = kernel.n();
+    let mut theta = Matrix::zeros(n, n);
+    let w = 1.0 / subsets.len().max(1) as f64;
+    // Parallel phase: per-subset L_Y⁻¹.
+    let nthreads = crate::linalg::matmul::available_threads().min(subsets.len().max(1));
+    let inverses: Vec<Result<Option<Matrix>>> = if nthreads > 1 && subsets.len() > 8 {
+        let results: Vec<std::sync::Mutex<Vec<(usize, Result<Option<Matrix>>)>>> =
+            (0..nthreads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let bucket = &results[t];
+                let subsets = &subsets;
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    let mut i = t;
+                    while i < subsets.len() {
+                        local.push((i, invert_subset(kernel, &subsets[i])));
+                        i += nthreads;
+                    }
+                    *bucket.lock().unwrap() = local;
+                });
+            }
+        });
+        let mut ordered: Vec<Option<Result<Option<Matrix>>>> =
+            (0..subsets.len()).map(|_| None).collect();
+        for bucket in results {
+            for (i, r) in bucket.into_inner().unwrap() {
+                ordered[i] = Some(r);
+            }
+        }
+        ordered.into_iter().map(|o| o.expect("all indices covered")).collect()
+    } else {
+        subsets.iter().map(|y| invert_subset(kernel, y)).collect()
+    };
+    // Serial scatter.
+    for (y, inv) in subsets.iter().zip(inverses) {
+        if let Some(inv) = inv? {
+            scatter_inverse(&mut theta, y, &inv, w);
+        }
+    }
+    Ok(theta)
+}
+
+fn invert_subset(kernel: &Kernel, y: &[usize]) -> Result<Option<Matrix>> {
+    if y.is_empty() {
+        return Ok(None);
+    }
+    let sub = kernel.principal_submatrix(y);
+    Ok(Some(Cholesky::factor(&sub)?.inverse()))
+}
+
+fn scatter_inverse(theta: &mut Matrix, y: &[usize], inv: &Matrix, w: f64) {
+    for (a, &i) in y.iter().enumerate() {
+        let row = inv.row(a);
+        for (b, &j) in y.iter().enumerate() {
+            let v = theta.get(i, j) + w * row[b];
+            theta.set(i, j, v);
+        }
+    }
+}
+
+/// Scatter `w · U_Y L_Y⁻¹ U_Yᵀ` onto `theta`.
+pub fn accumulate_theta(
+    theta: &mut Matrix,
+    kernel: &Kernel,
+    y: &[usize],
+    w: f64,
+) -> Result<()> {
+    if y.is_empty() {
+        return Ok(());
+    }
+    let sub = kernel.principal_submatrix(y);
+    let inv = Cholesky::factor(&sub)?.inverse();
+    for (a, &i) in y.iter().enumerate() {
+        let row = inv.row(a);
+        for (b, &j) in y.iter().enumerate() {
+            let v = theta.get(i, j) + w * row[b];
+            theta.set(i, j, v);
+        }
+    }
+    Ok(())
+}
+
+/// Sparse Θ accumulation (for stochastic updates / §3.3 clustering).
+pub fn theta_sparse(
+    kernel: &Kernel,
+    subsets: &[Vec<usize>],
+    weight: f64,
+) -> Result<crate::linalg::SparseMatrix> {
+    let mut b = crate::linalg::SparseBuilder::new(kernel.n());
+    for y in subsets {
+        if y.is_empty() {
+            continue;
+        }
+        let sub = kernel.principal_submatrix(y);
+        let inv = Cholesky::factor(&sub)?.inverse();
+        b.scatter_block(y, &inv, weight)?;
+    }
+    Ok(b.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = rng.paper_init_kernel(n);
+        m.scale_mut(1.0 / n as f64);
+        m.add_diag_mut(0.2);
+        m
+    }
+
+    #[test]
+    fn structured_matches_dense_likelihood() {
+        let k = Kernel::Kron2(spd(3, 1), spd(4, 2));
+        let full = Kernel::Full(k.to_dense());
+        let subsets = vec![vec![0, 5, 7], vec![1], vec![2, 3, 4, 10]];
+        let a = log_likelihood(&k, &subsets).unwrap();
+        let b = log_likelihood(&full, &subsets).unwrap();
+        assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+    }
+
+    #[test]
+    fn probabilities_normalize_on_tiny_ground_set() {
+        // Σ_Y det(L_Y) = det(L + I): enumerate all subsets of a 4-item set.
+        let l = spd(4, 3);
+        let k = Kernel::Full(l);
+        let mut total = 0.0;
+        for mask in 0u32..16 {
+            let y: Vec<usize> = (0..4).filter(|&i| mask >> i & 1 == 1).collect();
+            total += log_prob(&k, &y).unwrap().exp();
+        }
+        assert!((total - 1.0).abs() < 1e-8, "total {total}");
+    }
+
+    #[test]
+    fn empty_subset_logdet_zero() {
+        let k = Kernel::Full(spd(3, 4));
+        assert_eq!(subset_logdet(&k, &[]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn theta_dense_symmetric_and_psd_on_support() {
+        let k = Kernel::Full(spd(6, 5));
+        let subsets = vec![vec![0, 2, 4], vec![1, 2], vec![3]];
+        let theta = theta_dense(&k, &subsets).unwrap();
+        assert!(theta.is_symmetric(1e-10));
+        // Untouched items have zero rows.
+        assert_eq!(theta[(5, 5)], 0.0);
+        // Diagonal of Θ is positive where items occur.
+        assert!(theta[(0, 0)] > 0.0);
+        assert!(theta[(3, 3)] > 0.0);
+    }
+
+    #[test]
+    fn theta_sparse_matches_dense() {
+        let k = Kernel::Kron2(spd(2, 6), spd(3, 7));
+        let subsets = vec![vec![0, 3], vec![1, 2, 5]];
+        let dense = theta_dense(&k, &subsets).unwrap();
+        let sparse = theta_sparse(&k, &subsets, 1.0 / 2.0).unwrap();
+        assert!(sparse.to_dense().rel_diff(&dense) < 1e-12);
+    }
+
+    #[test]
+    fn likelihood_increases_for_better_kernel() {
+        // A kernel whose submatrices match observed co-occurrence should
+        // beat a mismatched one: sample pairs {0,1}, compare a kernel with
+        // strong {0,1} diversity vs one with near-duplicate items 0,1.
+        let good = Matrix::from_rows(&[
+            &[1.0, 0.0, 0.0],
+            &[0.0, 1.0, 0.0],
+            &[0.0, 0.0, 0.1],
+        ])
+        .unwrap();
+        let mut bad = good.clone();
+        bad.set(0, 1, 0.95);
+        bad.set(1, 0, 0.95);
+        let subsets = vec![vec![0, 1]; 5];
+        let lg = log_likelihood(&Kernel::Full(good), &subsets).unwrap();
+        let lb = log_likelihood(&Kernel::Full(bad), &subsets).unwrap();
+        assert!(lg > lb);
+    }
+}

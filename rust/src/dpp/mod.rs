@@ -1,0 +1,18 @@
+//! Determinantal point process core: kernels, likelihoods, samplers.
+//!
+//! - [`kernel`]: dense / Kron2 / Kron3 kernel representations with
+//!   structure-exploiting spectra (§2 of the paper).
+//! - [`likelihood`]: the learning objective `φ(L)` (Eq. 3) and the `Θ`
+//!   gradient component (Eq. 4), dense and sparse.
+//! - [`sampler`]: exact sampling (Alg. 2) and k-DPP sampling.
+//! - [`elementary`]: elementary symmetric polynomials (k-DPP phase 1).
+//! - [`mcmc`]: the approximate insert/delete chain baseline (§4, ref [13]).
+
+pub mod elementary;
+pub mod kernel;
+pub mod likelihood;
+pub mod mcmc;
+pub mod sampler;
+
+pub use kernel::{EigenVectors, Kernel, KernelEigen};
+pub use sampler::Sampler;

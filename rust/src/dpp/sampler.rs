@@ -1,0 +1,229 @@
+//! Exact DPP sampling (Alg. 2 of the paper, after Hough et al. [12]).
+//!
+//! Phase 1 selects an elementary DPP: eigenvector `i` joins `J` with
+//! probability `λ_i/(λ_i+1)`. Phase 2 iteratively samples items with
+//! probability `(1/|V|) Σ_{v∈V} v_i²` and contracts `V` to the orthonormal
+//! basis of its subspace orthogonal to `e_i`.
+//!
+//! The cost split is exactly the paper's §4: the eigendecomposition
+//! (`O(N³)` dense, `O(N^{3/2})` Kron2, `O(N)`-ish Kron3) happens once in
+//! [`Sampler::new`] and is reused across draws; each draw then costs
+//! `O(Nk² + k³)`-ish for the orthonormalizations (`O(Nk³)` in the paper's
+//! coarser accounting).
+
+use crate::dpp::elementary::sample_k_eigenvectors;
+use crate::dpp::kernel::{Kernel, KernelEigen};
+use crate::error::Result;
+use crate::linalg::qr::orthonormal_complement_coord;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A reusable exact sampler holding the kernel's eigendecomposition.
+pub struct Sampler {
+    eigen: KernelEigen,
+    n: usize,
+}
+
+impl Sampler {
+    /// Eigendecompose `kernel` (the expensive, once-per-kernel step).
+    pub fn new(kernel: &Kernel) -> Result<Self> {
+        let eigen = kernel.eigen()?;
+        let n = kernel.n();
+        Ok(Sampler { eigen, n })
+    }
+
+    /// Ground-set size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Borrow the eigendecomposition (e.g. to inspect the spectrum).
+    pub fn eigen(&self) -> &KernelEigen {
+        &self.eigen
+    }
+
+    /// Draw one subset `Y ~ DPP(L)`.
+    pub fn sample(&self, rng: &mut Rng) -> Vec<usize> {
+        // Phase 1: elementary DPP selection.
+        let mut j = Vec::new();
+        for (i, &lam) in self.eigen.values.iter().enumerate() {
+            let lam = lam.max(0.0); // clamp tiny negative round-off
+            if rng.bernoulli(lam / (lam + 1.0)) {
+                j.push(i);
+            }
+        }
+        self.sample_phase2(&j, rng)
+    }
+
+    /// Draw one subset of fixed size `k` (k-DPP, ref. [16]).
+    pub fn sample_k(&self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        let lam: Vec<f64> = self.eigen.values.iter().map(|&l| l.max(0.0)).collect();
+        let j = sample_k_eigenvectors(&lam, k, rng);
+        self.sample_phase2(&j, rng)
+    }
+
+    /// Phase 2 of Alg. 2 given selected eigenvector indices.
+    fn sample_phase2(&self, j: &[usize], rng: &mut Rng) -> Vec<usize> {
+        if j.is_empty() {
+            return Vec::new();
+        }
+        // Gather eigenvectors into V (N×k): O(Nk) thanks to the Kronecker
+        // column structure (§4's "k eigenvectors in O(kN)").
+        let mut v: Matrix = self.eigen.vectors.gather(j);
+        let mut y = Vec::with_capacity(j.len());
+        let mut weights = vec![0.0f64; self.n];
+        while v.cols() > 0 {
+            // P(item i) = (1/|V|) Σ_j V[i,j]².
+            for i in 0..self.n {
+                let row = v.row(i);
+                weights[i] = row.iter().map(|x| x * x).sum();
+            }
+            let item = rng.weighted_index(&weights);
+            y.push(item);
+            // Contract V to the orthonormal basis orthogonal to e_item.
+            v = orthonormal_complement_coord(&v, item);
+        }
+        y.sort_unstable();
+        y
+    }
+}
+
+/// Empirical inclusion frequencies over `draws` samples — used by the
+/// statistical tests to check `P(i ∈ Y) = K_ii`.
+pub fn empirical_marginals(sampler: &Sampler, draws: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut counts = vec![0usize; sampler.n()];
+    for _ in 0..draws {
+        for i in sampler.sample(rng) {
+            counts[i] += 1;
+        }
+    }
+    counts.into_iter().map(|c| c as f64 / draws as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = rng.paper_init_kernel(n);
+        m.scale_mut(1.0 / n as f64);
+        m.add_diag_mut(0.2);
+        m
+    }
+
+    #[test]
+    fn samples_are_valid_subsets() {
+        let k = Kernel::Kron2(spd(3, 1), spd(4, 2));
+        let s = Sampler::new(&k).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let y = s.sample(&mut rng);
+            for w in y.windows(2) {
+                assert!(w[0] < w[1], "sorted unique");
+            }
+            assert!(y.iter().all(|&i| i < 12));
+        }
+    }
+
+    #[test]
+    fn marginals_match_k_diagonal() {
+        // P(i ∈ Y) = K_ii where K = L(L+I)^{-1}.
+        let kernel = Kernel::Full(spd(6, 3));
+        let s = Sampler::new(&kernel).unwrap();
+        let mut rng = Rng::new(11);
+        let draws = 6000;
+        let emp = empirical_marginals(&s, draws, &mut rng);
+        let marg = kernel.marginal_kernel().unwrap();
+        for i in 0..6 {
+            let expect = marg[(i, i)];
+            let se = (expect * (1.0 - expect) / draws as f64).sqrt();
+            assert!(
+                (emp[i] - expect).abs() < 5.0 * se + 0.01,
+                "item {i}: emp {} vs K_ii {expect}",
+                emp[i]
+            );
+        }
+    }
+
+    #[test]
+    fn kron_marginals_match_dense_marginals() {
+        let k1 = spd(2, 4);
+        let k2 = spd(3, 5);
+        let kron_kernel = Kernel::Kron2(k1.clone(), k2.clone());
+        let s = Sampler::new(&kron_kernel).unwrap();
+        let mut rng = Rng::new(13);
+        let draws = 6000;
+        let emp = empirical_marginals(&s, draws, &mut rng);
+        let marg = kron_kernel.marginal_kernel().unwrap();
+        for i in 0..6 {
+            let expect = marg[(i, i)];
+            let se = (expect * (1.0 - expect) / draws as f64).sqrt();
+            assert!(
+                (emp[i] - expect).abs() < 5.0 * se + 0.01,
+                "item {i}: emp {} vs {expect}",
+                emp[i]
+            );
+        }
+    }
+
+    #[test]
+    fn expected_size_matches_sum_of_k_diagonal() {
+        let kernel = Kernel::Kron2(spd(3, 6), spd(3, 7));
+        let s = Sampler::new(&kernel).unwrap();
+        let mut rng = Rng::new(17);
+        let draws = 4000;
+        let mean_size: f64 =
+            (0..draws).map(|_| s.sample(&mut rng).len() as f64).sum::<f64>() / draws as f64;
+        let expect: f64 = kernel.marginal_kernel().unwrap().trace();
+        assert!((mean_size - expect).abs() < 0.15, "mean {mean_size} vs {expect}");
+    }
+
+    #[test]
+    fn k_dpp_returns_exact_size() {
+        let kernel = Kernel::Kron2(spd(3, 8), spd(4, 9));
+        let s = Sampler::new(&kernel).unwrap();
+        let mut rng = Rng::new(19);
+        for k in [1usize, 3, 5] {
+            for _ in 0..20 {
+                let y = s.sample_k(k, &mut rng);
+                assert_eq!(y.len(), k);
+            }
+        }
+    }
+
+    #[test]
+    fn diverse_pair_preferred_over_duplicate_pair() {
+        // Items 0,1 nearly identical; items 0,2 orthogonal. DPP should
+        // co-select {0,2} far more often than {0,1}.
+        let l = Matrix::from_rows(&[
+            &[1.0, 0.98, 0.0],
+            &[0.98, 1.0, 0.0],
+            &[0.0, 0.0, 1.0],
+        ])
+        .unwrap();
+        let s = Sampler::new(&Kernel::Full(l)).unwrap();
+        let mut rng = Rng::new(23);
+        let (mut both01, mut both02) = (0, 0);
+        for _ in 0..3000 {
+            let y = s.sample(&mut rng);
+            if y.contains(&0) && y.contains(&1) {
+                both01 += 1;
+            }
+            if y.contains(&0) && y.contains(&2) {
+                both02 += 1;
+            }
+        }
+        assert!(both02 > 10 * both01.max(1), "{both02} vs {both01}");
+    }
+
+    #[test]
+    fn empty_spectrum_gives_empty_sets() {
+        let l = Matrix::diag(&[1e-12, 1e-12]);
+        let s = Sampler::new(&Kernel::Full(l)).unwrap();
+        let mut rng = Rng::new(29);
+        let sizes: usize = (0..200).map(|_| s.sample(&mut rng).len()).sum();
+        assert_eq!(sizes, 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Crate-wide error type.
+//!
+//! We avoid external error-handling crates on the hot path; `Error` is a
+//! small enum covering the failure classes of the library: shape mismatches,
+//! numerical breakdowns (non-PD matrices, singular solves), IO/parse errors,
+//! runtime (PJRT) errors and coordinator failures.
+
+use std::fmt;
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors produced by the krondpp library.
+#[derive(Debug)]
+pub enum Error {
+    /// Dimension mismatch in a linear-algebra operation.
+    Shape(String),
+    /// Numerical failure: non-positive-definite matrix, singular pivot,
+    /// eigensolver non-convergence, etc.
+    Numerical(String),
+    /// Invalid argument or configuration.
+    Invalid(String),
+    /// IO failure (file read/write).
+    Io(std::io::Error),
+    /// Parse failure (JSON, CSV, config, CLI).
+    Parse(String),
+    /// PJRT runtime failure (artifact load/compile/execute).
+    Runtime(String),
+    /// Coordinator/service failure (queue closed, worker died, timeout).
+    Service(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Service(m) => write!(f, "service error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Construct a shape error with format args.
+#[macro_export]
+macro_rules! shape_err {
+    ($($arg:tt)*) => { $crate::error::Error::Shape(format!($($arg)*)) };
+}
+
+/// Construct a numerical error with format args.
+#[macro_export]
+macro_rules! num_err {
+    ($($arg:tt)*) => { $crate::error::Error::Numerical(format!($($arg)*)) };
+}
+
+/// Construct an invalid-argument error with format args.
+#[macro_export]
+macro_rules! invalid_err {
+    ($($arg:tt)*) => { $crate::error::Error::Invalid(format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::Shape("2x3 vs 4x5".into());
+        assert!(e.to_string().contains("shape"));
+        let e = Error::Numerical("not PD".into());
+        assert!(e.to_string().contains("numerical"));
+        let e = Error::Parse("bad json".into());
+        assert!(e.to_string().contains("parse"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn macros_build_variants() {
+        let e = shape_err!("got {}x{}", 2, 3);
+        assert!(matches!(e, Error::Shape(_)));
+        let e = num_err!("pivot {} too small", 1e-20);
+        assert!(matches!(e, Error::Numerical(_)));
+        let e = invalid_err!("bad arg {}", "x");
+        assert!(matches!(e, Error::Invalid(_)));
+    }
+}

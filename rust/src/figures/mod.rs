@@ -1,0 +1,75 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5). Each function prints the series/rows the paper reports
+//! and writes a CSV under `results/`. The experiment → module → bench map
+//! lives in DESIGN.md §4; measured-vs-paper numbers in EXPERIMENTS.md.
+//!
+//! Every experiment takes a [`Scale`]: `Small` keeps full `make test`-style
+//! runs in minutes on a laptop-class container, `Paper` reproduces the
+//! paper's dimensions (N = 10⁴ GENES runs take tens of minutes on this
+//! substrate — the Picard baseline's O(N³) is the paper's villain, and it
+//! is just as slow here).
+
+pub mod fig1;
+pub mod fig2;
+pub mod tables;
+
+use crate::error::Result;
+use std::path::{Path, PathBuf};
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Reduced dimensions; same shapes/ratios, minutes of runtime.
+    Small,
+    /// The paper's dimensions.
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "small" => Ok(Scale::Small),
+            "paper" => Ok(Scale::Paper),
+            other => Err(crate::Error::Parse(format!("unknown scale '{other}'"))),
+        }
+    }
+}
+
+/// Where result CSVs land.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("KRONDPP_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"));
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a CSV into the results directory and announce it.
+pub fn emit_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) -> Result<PathBuf> {
+    let path = results_dir().join(name);
+    crate::ser::matio::write_csv(Path::new(&path), header, rows)?;
+    println!("  wrote {}", path.display());
+    Ok(path)
+}
+
+/// A learning-trace row: (algo-id, repeat, iter, seconds, log-likelihood).
+pub fn trace_rows(
+    algo_id: f64,
+    repeat: usize,
+    history: &[crate::learn::IterRecord],
+) -> Vec<Vec<f64>> {
+    history
+        .iter()
+        .map(|r| {
+            vec![
+                algo_id,
+                repeat as f64,
+                r.iter as f64,
+                r.elapsed.as_secs_f64(),
+                r.log_likelihood,
+            ]
+        })
+        .collect()
+}
+
+pub const TRACE_HEADER: [&str; 5] = ["algo", "repeat", "iter", "time_s", "log_likelihood"];

@@ -1,0 +1,253 @@
+//! Subset clustering — the memory–time trade-off of §3.3.
+//!
+//! Partition the training set `{Y₁..Y_n} = ∪_k S_k` such that each part's
+//! item-union stays below a budget `z` (Eq. 9). Each part's gradient block
+//! `Θ_k = Σ_{Y∈S_k} U_Y L_Y⁻¹U_Yᵀ` then has at most `z²` non-zeros, so the
+//! full-batch `Θ` is a sum of `m` sparse matrices stored in `O(mz² + N)`
+//! instead of `O(N²)`.
+//!
+//! Finding the minimum `m` is a variant of the NP-hard Subset-Union
+//! Knapsack Problem (SUKP, ref. [11]); the paper proposes the greedy
+//! construction implemented here: each subset goes to the part whose union
+//! it grows the least (ties → fullest part), opening a new part when no
+//! part can absorb it within budget.
+
+use crate::dpp::Kernel;
+use crate::error::{Error, Result};
+use crate::linalg::{Matrix, SparseBuilder, SparseMatrix};
+use std::collections::BTreeSet;
+
+/// One part of the partition.
+#[derive(Debug)]
+pub struct Cluster {
+    /// Indices into the training set.
+    pub members: Vec<usize>,
+    /// Union of member subsets.
+    pub union: BTreeSet<usize>,
+}
+
+/// Greedy SUKP partition of `subsets` under union budget `z`.
+/// Fails if any single subset already exceeds `z`.
+pub fn greedy_partition(subsets: &[Vec<usize>], z: usize) -> Result<Vec<Cluster>> {
+    // Largest-first placement: big subsets are hardest to place, and
+    // placing them first measurably reduces part count vs arrival order.
+    let mut order: Vec<usize> = (0..subsets.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(subsets[i].len()));
+    let mut clusters: Vec<Cluster> = Vec::new();
+    for &i in &order {
+        let y = &subsets[i];
+        if y.len() > z {
+            return Err(Error::Invalid(format!(
+                "subset {i} has {} items > budget z={z}",
+                y.len()
+            )));
+        }
+        // Find the cluster with minimal union growth that stays within z.
+        let mut best: Option<(usize, usize, usize)> = None; // (growth, -fill, idx)
+        for (c, cluster) in clusters.iter().enumerate() {
+            let growth = y.iter().filter(|&&it| !cluster.union.contains(&it)).count();
+            if cluster.union.len() + growth <= z {
+                let fill = cluster.union.len();
+                let key = (growth, usize::MAX - fill, c);
+                if best.map(|b| key < b).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+        }
+        match best {
+            Some((_, _, c)) => {
+                clusters[c].members.push(i);
+                clusters[c].union.extend(y.iter().copied());
+            }
+            None => {
+                clusters.push(Cluster {
+                    members: vec![i],
+                    union: y.iter().copied().collect(),
+                });
+            }
+        }
+    }
+    Ok(clusters)
+}
+
+/// Clustered Θ: one sparse block per part, summing to the full batch Θ.
+pub struct ClusteredTheta {
+    parts: Vec<SparseMatrix>,
+    n1: usize,
+    n2: usize,
+}
+
+impl ClusteredTheta {
+    /// Build from a kernel and a clustered training set. Weights sum the
+    /// parts to the batch mean `(1/n)Σ_i U_i L_{Y_i}⁻¹U_iᵀ`.
+    pub fn build(
+        kernel: &Kernel,
+        subsets: &[Vec<usize>],
+        clusters: &[Cluster],
+        n1: usize,
+        n2: usize,
+    ) -> Result<Self> {
+        let n = subsets.len().max(1) as f64;
+        let mut parts = Vec::with_capacity(clusters.len());
+        for cluster in clusters {
+            let mut b = SparseBuilder::new(kernel.n());
+            for &i in &cluster.members {
+                let y = &subsets[i];
+                if y.is_empty() {
+                    continue;
+                }
+                let sub = kernel.principal_submatrix(y);
+                let inv = crate::linalg::Cholesky::factor(&sub)?.inverse();
+                b.scatter_block(y, &inv, 1.0 / n)?;
+            }
+            parts.push(b.build());
+        }
+        Ok(ClusteredTheta { parts, n1, n2 })
+    }
+
+    /// Number of parts `m`.
+    pub fn parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total stored non-zeros (`≤ m·z²`).
+    pub fn nnz(&self) -> usize {
+        self.parts.iter().map(|p| p.nnz()).sum()
+    }
+
+    /// `A₁[k,l] = Tr(Θ_(kl)L₂)` summed over parts — `O(Σ nnz)`.
+    pub fn block_trace(&self, l2: &Matrix) -> Result<Matrix> {
+        let mut acc = Matrix::zeros(self.n1, self.n1);
+        for p in &self.parts {
+            acc += &p.block_trace(l2, self.n1, self.n2)?;
+        }
+        Ok(acc)
+    }
+
+    /// `A₂ = Σ_{ij} W[i,j]Θ_(ij)` summed over parts.
+    pub fn weighted_block_sum(&self, w: &Matrix) -> Result<Matrix> {
+        let mut acc = Matrix::zeros(self.n2, self.n2);
+        for p in &self.parts {
+            acc += &p.weighted_block_sum(w, self.n1, self.n2)?;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::likelihood::theta_dense;
+    use crate::linalg::kron;
+    use crate::rng::Rng;
+
+    fn random_subsets(n: usize, count: usize, kmax: usize, seed: u64) -> Vec<Vec<usize>> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                let k = rng.int_range(1, kmax);
+                rng.subset(n, k)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn partition_covers_all_exactly_once() {
+        let subsets = random_subsets(40, 30, 8, 1);
+        let clusters = greedy_partition(&subsets, 15).unwrap();
+        let mut seen = vec![0usize; 30];
+        for c in &clusters {
+            for &i in &c.members {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "not a partition: {seen:?}");
+    }
+
+    #[test]
+    fn unions_respect_budget() {
+        let subsets = random_subsets(50, 40, 10, 2);
+        let z = 18;
+        let clusters = greedy_partition(&subsets, z).unwrap();
+        for c in &clusters {
+            assert!(c.union.len() <= z, "union {} > z={z}", c.union.len());
+            // Union really is the union of members.
+            let mut expect = BTreeSet::new();
+            for &i in &c.members {
+                expect.extend(subsets[i].iter().copied());
+            }
+            assert_eq!(c.union, expect);
+        }
+    }
+
+    #[test]
+    fn oversized_subset_rejected() {
+        let subsets = vec![(0..10).collect::<Vec<usize>>()];
+        assert!(greedy_partition(&subsets, 5).is_err());
+    }
+
+    #[test]
+    fn greedy_merges_overlapping_subsets() {
+        // Heavily-overlapping subsets should share parts.
+        let subsets = vec![
+            vec![0, 1, 2],
+            vec![1, 2, 3],
+            vec![0, 2, 3],
+            vec![10, 11, 12],
+            vec![11, 12, 13],
+        ];
+        let clusters = greedy_partition(&subsets, 5).unwrap();
+        assert!(clusters.len() <= 2, "expected ≤2 parts, got {}", clusters.len());
+    }
+
+    #[test]
+    fn clustered_theta_matches_dense() {
+        let mut rng = Rng::new(3);
+        let l1 = {
+            let mut m = rng.paper_init_kernel(3);
+            m.add_diag_mut(0.5);
+            m
+        };
+        let l2 = {
+            let mut m = rng.paper_init_kernel(4);
+            m.add_diag_mut(0.5);
+            m
+        };
+        let kernel = Kernel::Kron2(l1.clone(), l2.clone());
+        let subsets = random_subsets(12, 15, 5, 4);
+        let clusters = greedy_partition(&subsets, 9).unwrap();
+        let ct = ClusteredTheta::build(&kernel, &subsets, &clusters, 3, 4).unwrap();
+        let dense = theta_dense(&kernel, &subsets).unwrap();
+        // A1 contraction matches dense path.
+        let a1_fast = ct.block_trace(&l2).unwrap();
+        let a1_dense = kron::block_trace(&dense, &l2, 3, 4).unwrap();
+        assert!(a1_fast.rel_diff(&a1_dense) < 1e-10);
+        // A2 contraction matches dense path.
+        let a2_fast = ct.weighted_block_sum(&l1).unwrap();
+        let a2_dense = kron::weighted_block_sum(&dense, &l1, 3, 4).unwrap();
+        assert!(a2_fast.rel_diff(&a2_dense) < 1e-10);
+    }
+
+    #[test]
+    fn memory_bound_holds() {
+        let subsets = random_subsets(100, 50, 6, 5);
+        let z = 20;
+        let clusters = greedy_partition(&subsets, z).unwrap();
+        let m = clusters.len();
+        // nnz ≤ m·z² by Eq. 9's sparsity argument.
+        let mut rng = Rng::new(6);
+        let l1 = {
+            let mut k = rng.paper_init_kernel(10);
+            k.add_diag_mut(0.5);
+            k
+        };
+        let l2 = {
+            let mut k = rng.paper_init_kernel(10);
+            k.add_diag_mut(0.5);
+            k
+        };
+        let kernel = Kernel::Kron2(l1, l2);
+        let ct = ClusteredTheta::build(&kernel, &subsets, &clusters, 10, 10).unwrap();
+        assert!(ct.nnz() <= m * z * z, "nnz {} > m·z² = {}", ct.nnz(), m * z * z);
+    }
+}

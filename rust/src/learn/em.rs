@@ -1,0 +1,316 @@
+//! The EM baseline of Gillenwater, Kulesza, Fox & Taskar, NIPS 2014
+//! (ref. [10] of the paper) — used in the Table-1 comparison (§5.2).
+//!
+//! EM works on the *marginal* kernel `K = V·diag(λ)·Vᵀ` with latent
+//! variable `J` (the elementary-DPP index set: `j ∈ J` w.p. `λ_j`).
+//!
+//! **E-step (exact).** Using the closed form
+//! `P(Y) = |det(K − I_Ȳ)|` for the probability that the sampled set is
+//! exactly `Y`, tilting eigenvalue `j` by `t` (which perturbs both the
+//! `λ_j` and `1−λ_j` mixture factors) and differentiating at `t = 1`
+//! gives the posterior inclusion probability
+//!
+//! ```text
+//! p_{ij} = P(j ∈ J | Y_i) = λ_j + λ_j(1−λ_j) · v_jᵀ (K − I_{Ȳ_i})⁻¹ v_j
+//! ```
+//!
+//! (verified against exhaustive enumeration in the tests below)
+//!
+//! **M-step.** Eigenvalues have the exact update
+//! `λ_j ← (1/n) Σ_i p_{ij}` (posterior mean of the Bernoulli prior);
+//! eigenvectors take a line-searched ascent step along the Euclidean
+//! gradient `G = (2/n) Σ_i (K−I_{Ȳ_i})⁻¹ V Λ`, retracted to the Stiefel
+//! manifold by QR — the same E-exact / M-ascent structure as [10].
+//!
+//! Complexity `O(n·N³)` per iteration; EM is only run at the paper's
+//! Table-1 scale (N = 100).
+
+use crate::dpp::Kernel;
+use crate::error::{Error, Result};
+use crate::learn::traits::{Learner, TrainingSet};
+use crate::linalg::{eigen::SymEigen, lu::Lu, matmul, qr::Qr, Matrix};
+
+const LAMBDA_MIN: f64 = 1e-6;
+const LAMBDA_MAX: f64 = 1.0 - 1e-6;
+
+/// EM learner over the marginal kernel.
+pub struct EmLearner {
+    /// Orthonormal eigenvectors (columns).
+    v: Matrix,
+    /// Eigenvalues in (0, 1).
+    lambda: Vec<f64>,
+    /// Initial eigenvector step size for the line search.
+    pub eigvec_step: f64,
+}
+
+impl EmLearner {
+    /// Initialize from a marginal kernel `K` (must have spectrum in (0,1);
+    /// eigenvalues are clamped away from {0, 1}).
+    pub fn from_marginal(k: &Matrix) -> Result<Self> {
+        if !k.is_square() {
+            return Err(Error::Shape("em: K must be square".into()));
+        }
+        let eig = SymEigen::new(k)?;
+        let lambda: Vec<f64> =
+            eig.values.iter().map(|&l| l.clamp(LAMBDA_MIN, LAMBDA_MAX)).collect();
+        Ok(EmLearner { v: eig.vectors, lambda, eigvec_step: 1.0 })
+    }
+
+    /// Current marginal kernel `K`.
+    pub fn marginal(&self) -> Matrix {
+        crate::learn::krk::reconstruct_diag(&self.v, &self.lambda)
+    }
+
+    /// Current eigenvalues.
+    pub fn eigenvalues(&self) -> &[f64] {
+        &self.lambda
+    }
+
+    /// Mean log-likelihood under the marginal parametrization:
+    /// `(1/n) Σ log |det(K − I_{Ȳ_i})|`.
+    pub fn marginal_log_likelihood(&self, data: &TrainingSet) -> Result<f64> {
+        let k = self.marginal();
+        let mut total = 0.0;
+        for y in &data.subsets {
+            let m = k_minus_i_complement(&k, y);
+            let (_, logabs) = Lu::factor(&m)?.slogdet();
+            total += logabs;
+        }
+        Ok(total / data.len().max(1) as f64)
+    }
+
+    /// E-step + exact λ M-step + eigenvector ascent (one EM iteration).
+    fn em_step(&mut self, data: &TrainingSet) -> Result<()> {
+        let n = self.v.rows();
+        let k = self.marginal();
+        let count = data.len();
+        let mut lambda_new = vec![0.0f64; n];
+        // Gradient accumulator for the eigenvector step: (2/n) Σ W_i V Λ.
+        let mut grad = Matrix::zeros(n, n);
+        for y in &data.subsets {
+            let m = k_minus_i_complement(&k, y);
+            let w = Lu::factor(&m)?.inverse();
+            // p_ij = λ_j + λ_j(1−λ_j)·v_jᵀWv_j via diag(VᵀWV).
+            let wv = matmul::matmul(&w, &self.v)?;
+            for j in 0..n {
+                let vj_wvj: f64 =
+                    (0..n).map(|r| self.v.get(r, j) * wv.get(r, j)).sum();
+                let lj = self.lambda[j];
+                lambda_new[j] += lj + lj * (1.0 - lj) * vj_wvj;
+            }
+            grad += &wv; // fold Λ scaling and 2/n after the loop
+        }
+        for l in &mut lambda_new {
+            *l = (*l / count as f64).clamp(LAMBDA_MIN, LAMBDA_MAX);
+        }
+        // grad = (2/n) (Σ W_i V) Λ  (with the OLD λ, matching the E-step).
+        for i in 0..n {
+            for j in 0..n {
+                let g = grad.get(i, j) * 2.0 * self.lambda[j] / count as f64;
+                grad.set(i, j, g);
+            }
+        }
+        // Exact eigenvalue M-step.
+        self.lambda = lambda_new;
+        // Eigenvector ascent with backtracking line search + QR retraction.
+        let base = self.marginal_log_likelihood(data)?;
+        let mut eta = self.eigvec_step;
+        for _ in 0..5 {
+            let mut cand = self.v.clone();
+            cand.axpy(eta, &grad)?;
+            let retracted = qr_retract(&cand)?;
+            let old_v = std::mem::replace(&mut self.v, retracted);
+            let ll = self.marginal_log_likelihood(data)?;
+            if ll >= base {
+                return Ok(());
+            }
+            self.v = old_v;
+            eta *= 0.25;
+        }
+        // No improving eigenvector step found; keep V (λ step already
+        // improved the objective).
+        Ok(())
+    }
+}
+
+/// `K − I_Ȳ`: subtract 1 from the diagonal on the complement of `y`.
+fn k_minus_i_complement(k: &Matrix, y: &[usize]) -> Matrix {
+    let n = k.rows();
+    let mut m = k.clone();
+    let mut in_y = vec![false; n];
+    for &i in y {
+        in_y[i] = true;
+    }
+    for i in 0..n {
+        if !in_y[i] {
+            let v = m.get(i, i) - 1.0;
+            m.set(i, i, v);
+        }
+    }
+    m
+}
+
+/// QR-based retraction onto the orthogonal group with sign correction
+/// (so the retraction is continuous at η → 0).
+fn qr_retract(m: &Matrix) -> Result<Matrix> {
+    let qr = Qr::factor(m)?;
+    let mut q = qr.q;
+    for j in 0..q.cols() {
+        if qr.r.get(j, j) < 0.0 {
+            for i in 0..q.rows() {
+                let v = -q.get(i, j);
+                q.set(i, j, v);
+            }
+        }
+    }
+    Ok(q)
+}
+
+impl Learner for EmLearner {
+    fn name(&self) -> &'static str {
+        "em"
+    }
+
+    fn step(&mut self, data: &TrainingSet) -> Result<()> {
+        self.em_step(data)
+    }
+
+    /// The equivalent DPP kernel `L = K(I−K)⁻¹ = V·diag(λ/(1−λ))·Vᵀ`.
+    fn kernel(&self) -> Kernel {
+        let l_eigs: Vec<f64> = self.lambda.iter().map(|&l| l / (1.0 - l)).collect();
+        Kernel::Full(crate::learn::krk::reconstruct_diag(&self.v, &l_eigs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::likelihood::log_prob;
+    use crate::dpp::Sampler;
+    use crate::rng::Rng;
+
+    fn random_marginal(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let w = rng.wishart(n, n as f64, 1.0 / n as f64);
+        // Normalize spectrum into (0,1): K = W(W+I)^{-1}.
+        let eig = SymEigen::new(&w).unwrap();
+        let vals: Vec<f64> = eig.values.iter().map(|&v| v.max(1e-4)).collect();
+        let kvals: Vec<f64> = vals.iter().map(|&v| v / (1.0 + v)).collect();
+        crate::learn::krk::reconstruct_diag(&eig.vectors, &kvals)
+    }
+
+    #[test]
+    fn marginal_formula_matches_l_formula() {
+        // |det(K − I_Ȳ)| = det(L_Y)/det(L+I) with L = K(I−K)^{-1}.
+        let k = random_marginal(6, 1);
+        let em = EmLearner::from_marginal(&k).unwrap();
+        let kernel = em.kernel();
+        for y in [vec![], vec![1usize, 4], vec![0, 2, 3, 5]] {
+            let m = k_minus_i_complement(&em.marginal(), &y);
+            let (_, logabs) = Lu::factor(&m).unwrap().slogdet();
+            let via_l = log_prob(&kernel, &y).unwrap();
+            assert!((logabs - via_l).abs() < 1e-7, "Y={y:?}: {logabs} vs {via_l}");
+        }
+    }
+
+    #[test]
+    fn posterior_matches_bruteforce() {
+        // p_ij = λ_j v_jᵀ(K−I_Ȳ)⁻¹v_j against exhaustive enumeration of J.
+        let n = 4;
+        let k = random_marginal(n, 2);
+        let em = EmLearner::from_marginal(&k).unwrap();
+        let kmat = em.marginal();
+        let y = vec![0usize, 2];
+        // Brute force over all J ⊆ {0..4}: P(J)·P(Y|J).
+        let mut post = vec![0.0f64; n];
+        let mut total = 0.0;
+        for mask in 0u32..(1 << n) {
+            let j: Vec<usize> = (0..n).filter(|&b| mask >> b & 1 == 1).collect();
+            if j.len() != y.len() {
+                continue; // elementary DPP gives |Y| = |J|
+            }
+            let mut pj = 1.0;
+            for b in 0..n {
+                pj *= if mask >> b & 1 == 1 {
+                    em.lambda[b]
+                } else {
+                    1.0 - em.lambda[b]
+                };
+            }
+            // P(Y|J) = det([V_J V_Jᵀ]_Y)
+            let vj = em.v.select_cols(&j);
+            let kj = matmul::matmul_nt(&vj, &vj).unwrap();
+            let pyj = crate::linalg::lu::det(&kj.principal_submatrix(&y)).unwrap();
+            let w = pj * pyj;
+            total += w;
+            for &b in &j {
+                post[b] += w;
+            }
+        }
+        for p in &mut post {
+            *p /= total;
+        }
+        // Formula.
+        let m = k_minus_i_complement(&kmat, &y);
+        let w = Lu::factor(&m).unwrap().inverse();
+        for j in 0..n {
+            let vj = em.v.col(j);
+            let lj = em.lambda[j];
+            let formula = lj + lj * (1.0 - lj) * w.quad_form(&vj).unwrap();
+            assert!(
+                (formula - post[j]).abs() < 1e-8,
+                "j={j}: formula {formula} vs brute {}",
+                post[j]
+            );
+        }
+    }
+
+    #[test]
+    fn em_increases_likelihood() {
+        let n = 8;
+        let mut rng = Rng::new(3);
+        let mut truth = rng.paper_init_kernel(n);
+        truth.scale_mut(1.5 / n as f64);
+        truth.add_diag_mut(0.4);
+        let kernel = Kernel::Full(truth);
+        let sampler = Sampler::new(&kernel).unwrap();
+        let subsets: Vec<Vec<usize>> = (0..40).map(|_| sampler.sample(&mut rng)).collect();
+        let data = TrainingSet::new(n, subsets).unwrap();
+        let k0 = random_marginal(n, 4);
+        let mut em = EmLearner::from_marginal(&k0).unwrap();
+        let ll0 = em.marginal_log_likelihood(&data).unwrap();
+        for _ in 0..8 {
+            em.step(&data).unwrap();
+        }
+        let ll1 = em.marginal_log_likelihood(&data).unwrap();
+        assert!(ll1 > ll0, "EM failed to improve: {ll0} -> {ll1}");
+    }
+
+    #[test]
+    fn eigenvalues_stay_in_unit_interval() {
+        let n = 6;
+        let mut rng = Rng::new(5);
+        let mut truth = rng.paper_init_kernel(n);
+        truth.scale_mut(1.0 / n as f64);
+        truth.add_diag_mut(0.4);
+        let sampler = Sampler::new(&Kernel::Full(truth)).unwrap();
+        let subsets: Vec<Vec<usize>> = (0..30).map(|_| sampler.sample(&mut rng)).collect();
+        let data = TrainingSet::new(n, subsets).unwrap();
+        let mut em = EmLearner::from_marginal(&random_marginal(n, 6)).unwrap();
+        for _ in 0..6 {
+            em.step(&data).unwrap();
+            for &l in em.eigenvalues() {
+                assert!((0.0..1.0).contains(&l), "λ = {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn retraction_is_orthonormal() {
+        let mut rng = Rng::new(7);
+        let m = rng.normal_matrix(6, 6);
+        let q = qr_retract(&m).unwrap();
+        let qtq = matmul::matmul_tn(&q, &q).unwrap();
+        assert!(qtq.rel_diff(&Matrix::identity(6)) < 1e-10);
+    }
+}

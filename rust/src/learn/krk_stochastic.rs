@@ -1,0 +1,202 @@
+//! Stochastic KRK-Picard (Thm. 3.3, second half).
+//!
+//! Instead of the full `Θ = (1/n)Σ_i U_i L_{Y_i}⁻¹U_iᵀ`, each half-update
+//! uses a minibatch estimate `Θ_B = (1/|B|)Σ_{i∈B} U_i L_{Y_i}⁻¹U_iᵀ`,
+//! which has only `O(|B|κ²)` non-zeros. The Θ-contractions then run on the
+//! sparse format (`O(κ²)` per update instead of `O(N²)`), and the
+//! `(I+L)⁻¹` half is unchanged (sub-eigenbases, `O(N₁³+N₂³)`), giving the
+//! paper's `O(Nκ² + N^{3/2})` time and `O(N + κ²)` space per iteration —
+//! this is the configuration that learns kernels too large to fit in
+//! memory (Fig. 1c).
+
+use crate::dpp::likelihood::theta_sparse;
+use crate::dpp::Kernel;
+use crate::error::Result;
+use crate::learn::krk::{b2_matrix, l1_b_l1};
+use crate::learn::traits::{Learner, TrainingSet};
+use crate::linalg::{matmul, Matrix};
+use crate::rng::Rng;
+
+/// Stochastic/minibatch KRK-Picard learner.
+pub struct KrkStochastic {
+    l1: Matrix,
+    l2: Matrix,
+    /// Step size `a`.
+    pub step_size: f64,
+    /// Minibatch size (1 = pure stochastic, as in the paper's Fig. 2b).
+    pub minibatch: usize,
+    rng: Rng,
+    cursor: usize,
+    order: Vec<usize>,
+}
+
+impl KrkStochastic {
+    /// Start from PD sub-kernels.
+    pub fn new(l1: Matrix, l2: Matrix, step_size: f64, minibatch: usize, seed: u64) -> Self {
+        KrkStochastic {
+            l1,
+            l2,
+            step_size,
+            minibatch: minibatch.max(1),
+            rng: Rng::new(seed),
+            cursor: 0,
+            order: Vec::new(),
+        }
+    }
+
+    /// Borrow the current sub-kernels.
+    pub fn subkernels(&self) -> (&Matrix, &Matrix) {
+        (&self.l1, &self.l2)
+    }
+
+    /// Next minibatch of subset indices (reshuffled each epoch).
+    fn next_batch(&mut self, n: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.minibatch);
+        for _ in 0..self.minibatch {
+            if self.cursor >= self.order.len() {
+                self.order = (0..n).collect();
+                let mut order = std::mem::take(&mut self.order);
+                self.rng.shuffle(&mut order);
+                self.order = order;
+                self.cursor = 0;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// One stochastic L₁ half-update: Θ from `batch` only, sparse.
+    fn update_l1(&mut self, data: &TrainingSet, batch: &[usize]) -> Result<()> {
+        let (n1, n2) = (self.l1.rows(), self.l2.rows());
+        let kernel = Kernel::Kron2(self.l1.clone(), self.l2.clone());
+        let subsets: Vec<Vec<usize>> =
+            batch.iter().map(|&i| data.subsets[i].clone()).collect();
+        let theta = theta_sparse(&kernel, &subsets, 1.0 / batch.len() as f64)?;
+        // A₁ on the sparse Θ: O(nnz).
+        let a1 = theta.block_trace(&self.l2, n1, n2)?;
+        let l1a1l1 = matmul::sandwich(&self.l1, &a1, &self.l1)?;
+        let l1bl1 = l1_b_l1(&self.l1, &self.l2)?;
+        let mut x = l1a1l1;
+        x -= &l1bl1;
+        self.l1.axpy(self.step_size / n2 as f64, &x)?;
+        self.l1.symmetrize_mut();
+        Ok(())
+    }
+
+    /// One stochastic L₂ half-update.
+    fn update_l2(&mut self, data: &TrainingSet, batch: &[usize]) -> Result<()> {
+        let (n1, n2) = (self.l1.rows(), self.l2.rows());
+        let kernel = Kernel::Kron2(self.l1.clone(), self.l2.clone());
+        let subsets: Vec<Vec<usize>> =
+            batch.iter().map(|&i| data.subsets[i].clone()).collect();
+        let theta = theta_sparse(&kernel, &subsets, 1.0 / batch.len() as f64)?;
+        let a2 = theta.weighted_block_sum(&self.l1, n1, n2)?;
+        let l2a2l2 = matmul::sandwich(&self.l2, &a2, &self.l2)?;
+        let b2 = b2_matrix(&self.l1, &self.l2)?;
+        let mut x = l2a2l2;
+        x -= &b2;
+        self.l2.axpy(self.step_size / n1 as f64, &x)?;
+        self.l2.symmetrize_mut();
+        Ok(())
+    }
+}
+
+impl Learner for KrkStochastic {
+    fn name(&self) -> &'static str {
+        "krk-stochastic"
+    }
+
+    fn step(&mut self, data: &TrainingSet) -> Result<()> {
+        let batch = self.next_batch(data.len());
+        self.update_l1(data, &batch)?;
+        let batch = self.next_batch(data.len());
+        self.update_l2(data, &batch)?;
+        Ok(())
+    }
+
+    fn kernel(&self) -> Kernel {
+        Kernel::Kron2(self.l1.clone(), self.l2.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::likelihood::log_likelihood;
+    use crate::dpp::Sampler;
+    use crate::linalg::cholesky;
+
+    fn sub_kernel(n: usize, rng: &mut Rng) -> Matrix {
+        let mut l = rng.paper_init_kernel(n);
+        l.scale_mut(1.5 / n as f64);
+        l.add_diag_mut(0.3);
+        l
+    }
+
+    fn setup(n1: usize, n2: usize, count: usize, seed: u64) -> (TrainingSet, KrkStochastic) {
+        let mut rng = Rng::new(seed);
+        let truth = Kernel::Kron2(sub_kernel(n1, &mut rng), sub_kernel(n2, &mut rng));
+        let sampler = Sampler::new(&truth).unwrap();
+        let subsets: Vec<Vec<usize>> =
+            (0..count).map(|_| sampler.sample(&mut rng)).collect();
+        let data = TrainingSet::new(n1 * n2, subsets).unwrap();
+        let learner = KrkStochastic::new(
+            sub_kernel(n1, &mut rng),
+            sub_kernel(n2, &mut rng),
+            0.6, // conservative stochastic step
+            4,
+            seed ^ 0xABCD,
+        );
+        (data, learner)
+    }
+
+    #[test]
+    fn improves_likelihood_on_average() {
+        let (data, mut learner) = setup(3, 4, 50, 21);
+        let ll0 = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+        for _ in 0..30 {
+            learner.step(&data).unwrap();
+        }
+        let ll1 = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+        assert!(ll1 > ll0, "stochastic learning failed to improve: {ll0} -> {ll1}");
+    }
+
+    #[test]
+    fn iterates_stay_pd() {
+        let (data, mut learner) = setup(3, 3, 40, 23);
+        for _ in 0..25 {
+            learner.step(&data).unwrap();
+            let (l1, l2) = learner.subkernels();
+            assert!(cholesky::is_pd(l1));
+            assert!(cholesky::is_pd(l2));
+        }
+    }
+
+    #[test]
+    fn epoch_reshuffling_covers_all_subsets() {
+        let (data, mut learner) = setup(2, 3, 10, 25);
+        let mut seen = vec![false; 10];
+        // 5 steps × (2 batches × 4) = 40 draws > 3 epochs of 10.
+        for _ in 0..5 {
+            for idx in learner.next_batch(data.len()) {
+                seen[idx] = true;
+            }
+            for idx in learner.next_batch(data.len()) {
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "epoch shuffling skipped subsets: {seen:?}");
+    }
+
+    #[test]
+    fn minibatch_one_runs() {
+        let (data, mut learner) = setup(2, 2, 20, 27);
+        learner.minibatch = 1;
+        for _ in 0..10 {
+            learner.step(&data).unwrap();
+        }
+        let (l1, l2) = learner.subkernels();
+        assert!(cholesky::is_pd(l1) && cholesky::is_pd(l2));
+    }
+}

@@ -1,0 +1,31 @@
+//! Kernel-learning algorithms: the paper's KRK-Picard (batch + stochastic),
+//! plus every baseline its evaluation compares against.
+//!
+//! - [`krk`]: KRK-Picard, Algorithm 1 (the paper's contribution).
+//! - [`krk_stochastic`]: stochastic/minibatch variant (Thm. 3.3 2nd half).
+//! - [`picard`]: the full Picard iteration baseline (ref. [25]).
+//! - [`joint`]: Joint-Picard, Algorithm 3 (§3.2 / App. C).
+//! - [`em`]: the EM baseline (ref. [10], Table-1 comparison).
+//! - [`clustering`]: greedy SUKP subset clustering (§3.3).
+//! - [`init`]: the paper's §5 initialization protocols.
+//! - [`traits`]: the shared `Learner` interface and training-set types.
+
+pub mod clustering;
+pub mod em;
+pub mod init;
+pub mod joint;
+pub mod krk;
+pub mod krk3;
+pub mod krk_stochastic;
+pub mod lowrank;
+pub mod picard;
+pub mod traits;
+
+pub use em::EmLearner;
+pub use joint::JointPicard;
+pub use krk::KrkPicard;
+pub use krk3::Krk3Picard;
+pub use krk_stochastic::KrkStochastic;
+pub use lowrank::LowRank;
+pub use picard::Picard;
+pub use traits::{IterRecord, Learner, LearnResult, TrainingSet};

@@ -1,0 +1,190 @@
+//! Shared learner interfaces: training sets, per-iteration records, and the
+//! [`Learner`] trait every algorithm (Picard, KRK-Picard, Joint-Picard, EM)
+//! implements so the figure harness and the coordinator's learning jobs can
+//! drive them interchangeably.
+
+use crate::dpp::likelihood;
+use crate::dpp::Kernel;
+use crate::error::{Error, Result};
+use std::time::{Duration, Instant};
+
+/// A training corpus: `n` observed subsets over a ground set of size
+/// `ground_size`.
+#[derive(Clone, Debug)]
+pub struct TrainingSet {
+    pub ground_size: usize,
+    pub subsets: Vec<Vec<usize>>,
+}
+
+impl TrainingSet {
+    /// Validate and build.
+    pub fn new(ground_size: usize, subsets: Vec<Vec<usize>>) -> Result<Self> {
+        for (k, y) in subsets.iter().enumerate() {
+            for &i in y {
+                if i >= ground_size {
+                    return Err(Error::Invalid(format!(
+                        "training subset {k} references item {i} ≥ N={ground_size}"
+                    )));
+                }
+            }
+            if y.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(Error::Invalid(format!(
+                    "training subset {k} is not sorted/unique"
+                )));
+            }
+        }
+        Ok(TrainingSet { ground_size, subsets })
+    }
+
+    /// Number of training subsets `n`.
+    pub fn len(&self) -> usize {
+        self.subsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subsets.is_empty()
+    }
+
+    /// Size of the largest subset (the paper's `κ`).
+    pub fn kappa(&self) -> usize {
+        self.subsets.iter().map(|y| y.len()).max().unwrap_or(0)
+    }
+
+    /// Mean subset size.
+    pub fn mean_size(&self) -> f64 {
+        if self.subsets.is_empty() {
+            return 0.0;
+        }
+        self.subsets.iter().map(|y| y.len()).sum::<usize>() as f64 / self.subsets.len() as f64
+    }
+}
+
+/// Per-iteration progress record.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    /// 1-based iteration number (0 = initial state).
+    pub iter: usize,
+    /// Cumulative wall-clock since learning started.
+    pub elapsed: Duration,
+    /// Mean log-likelihood φ after this iteration.
+    pub log_likelihood: f64,
+}
+
+/// Outcome of a learning run.
+#[derive(Debug)]
+pub struct LearnResult {
+    /// Final kernel estimate.
+    pub kernel: Kernel,
+    /// Objective trace; `history[0]` is the initial likelihood.
+    pub history: Vec<IterRecord>,
+    /// True if the δ-threshold stopping rule fired (vs. iteration cap).
+    pub converged: bool,
+}
+
+impl LearnResult {
+    /// Final log-likelihood.
+    pub fn final_ll(&self) -> f64 {
+        self.history.last().map(|r| r.log_likelihood).unwrap_or(f64::NAN)
+    }
+
+    /// Log-likelihood increase achieved by the first iteration — the
+    /// "NLL increase (1st iter.)" row of the paper's Table 2.
+    pub fn first_iter_gain(&self) -> f64 {
+        if self.history.len() < 2 {
+            return 0.0;
+        }
+        self.history[1].log_likelihood - self.history[0].log_likelihood
+    }
+
+    /// Mean seconds per iteration (excluding the initial evaluation).
+    pub fn mean_iter_secs(&self) -> f64 {
+        if self.history.len() < 2 {
+            return 0.0;
+        }
+        let total = self.history.last().unwrap().elapsed.as_secs_f64();
+        total / (self.history.len() - 1) as f64
+    }
+}
+
+/// A DPP kernel learner.
+pub trait Learner {
+    /// Human-readable name (appears in figure legends / bench rows).
+    fn name(&self) -> &'static str;
+
+    /// One optimization step in place; returns nothing — progress is
+    /// observed via `kernel()` and the driver's likelihood evaluation.
+    fn step(&mut self, data: &TrainingSet) -> Result<()>;
+
+    /// Current kernel estimate (cloned).
+    fn kernel(&self) -> Kernel;
+
+    /// Run `max_iters` steps with likelihood tracking; stops early when
+    /// `|φ_{k+1} − φ_k| < tol` (if `tol > 0`). The likelihood evaluation
+    /// is *not* counted in `elapsed` (matching how the paper reports
+    /// per-iteration runtimes).
+    fn run(&mut self, data: &TrainingSet, max_iters: usize, tol: f64) -> Result<LearnResult> {
+        let mut history = Vec::with_capacity(max_iters + 1);
+        let ll0 = likelihood::log_likelihood(&self.kernel(), &data.subsets)?;
+        history.push(IterRecord { iter: 0, elapsed: Duration::ZERO, log_likelihood: ll0 });
+        let mut elapsed = Duration::ZERO;
+        let mut converged = false;
+        for it in 1..=max_iters {
+            let t = Instant::now();
+            self.step(data)?;
+            elapsed += t.elapsed();
+            let ll = likelihood::log_likelihood(&self.kernel(), &data.subsets)?;
+            history.push(IterRecord { iter: it, elapsed, log_likelihood: ll });
+            let prev = history[history.len() - 2].log_likelihood;
+            if tol > 0.0 && (ll - prev).abs() < tol {
+                converged = true;
+                break;
+            }
+        }
+        Ok(LearnResult { kernel: self.kernel(), history, converged })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_set_validation() {
+        assert!(TrainingSet::new(5, vec![vec![0, 4]]).is_ok());
+        assert!(TrainingSet::new(5, vec![vec![0, 5]]).is_err());
+        assert!(TrainingSet::new(5, vec![vec![3, 1]]).is_err());
+        assert!(TrainingSet::new(5, vec![vec![2, 2]]).is_err());
+    }
+
+    #[test]
+    fn kappa_and_mean() {
+        let t = TrainingSet::new(10, vec![vec![0], vec![1, 2, 3], vec![4, 5]]).unwrap();
+        assert_eq!(t.kappa(), 3);
+        assert!((t.mean_size() - 2.0).abs() < 1e-12);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn result_accessors() {
+        let r = LearnResult {
+            kernel: Kernel::Full(crate::linalg::Matrix::identity(2)),
+            history: vec![
+                IterRecord { iter: 0, elapsed: Duration::ZERO, log_likelihood: -10.0 },
+                IterRecord {
+                    iter: 1,
+                    elapsed: Duration::from_secs(2),
+                    log_likelihood: -8.0,
+                },
+                IterRecord {
+                    iter: 2,
+                    elapsed: Duration::from_secs(4),
+                    log_likelihood: -7.5,
+                },
+            ],
+            converged: false,
+        };
+        assert_eq!(r.final_ll(), -7.5);
+        assert_eq!(r.first_iter_gain(), 2.0);
+        assert!((r.mean_iter_secs() - 2.0).abs() < 1e-12);
+    }
+}

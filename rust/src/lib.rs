@@ -1,0 +1,36 @@
+//! # krondpp — Kronecker Determinantal Point Processes
+//!
+//! A production-grade reproduction of *"Kronecker Determinantal Point
+//! Processes"* (Mariet & Sra, NIPS 2016): DPP kernels structured as
+//! `L = L₁ ⊗ L₂ (⊗ L₃)`, with
+//!
+//! - exact sampling in `O(N^{3/2} + Nk³)` (m=2) / `O(Nk³)` (m=3),
+//! - KRK-Picard kernel learning in `O(nκ³ + N²)` batch /
+//!   `O(Nκ² + N^{3/2})` stochastic time (Thm. 3.3),
+//! - the Picard, Joint-Picard and EM baselines the paper compares against,
+//! - a serving coordinator (diverse-recommendation service) and learning
+//!   orchestrator on top,
+//! - a PJRT runtime that executes JAX/Pallas-authored, AOT-lowered HLO
+//!   artifacts for the contraction hot paths.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-reproduction results.
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dpp;
+pub mod error;
+pub mod exec;
+pub mod figures;
+pub mod learn;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod ser;
+pub mod testing;
+
+pub use error::{Error, Result};
+pub use linalg::Matrix;

@@ -1,0 +1,411 @@
+//! Symmetric eigendecomposition (Householder tridiagonalization + implicit
+//! QL with Wilkinson shifts — the classic EISPACK `tred2`/`tql2` pair).
+//!
+//! This is the `O(n³)` substrate behind DPP sampling (Alg. 2 needs the
+//! spectrum of `L`), the `(I+L)⁻¹` diagonal-space computations of KRK-Picard
+//! (App. B computes `B` through the eigenbases of `L₁`, `L₂`), and the EM
+//! baseline. For KronDPP kernels only the *sub-kernels* are decomposed
+//! (`O(N₁³+N₂³) = O(N^{3/2})`), which is the source of the paper's speedups.
+//!
+//! jax's `eigh` lowers to LAPACK custom-calls that the pinned xla_extension
+//! CPU runtime cannot execute, so eigensolves deliberately live here in Rust
+//! rather than in the AOT artifacts (see DESIGN.md §3).
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Eigendecomposition `A = V · diag(λ) · Vᵀ` of a symmetric matrix.
+/// Eigenvalues ascend; `vectors.col(i)` pairs with `values[i]`.
+pub struct SymEigen {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors, one per column.
+    pub vectors: Matrix,
+}
+
+impl SymEigen {
+    /// Decompose a symmetric matrix. The input is symmetrized defensively
+    /// (average of `A` and `Aᵀ`) before reduction.
+    pub fn new(a: &Matrix) -> Result<Self> {
+        if !a.is_square() {
+            return Err(Error::Shape("eigen: matrix not square".into()));
+        }
+        let n = a.rows();
+        if n == 0 {
+            return Ok(SymEigen { values: vec![], vectors: Matrix::zeros(0, 0) });
+        }
+        // Work on a symmetrized copy.
+        let mut v = a.clone();
+        v.symmetrize_mut();
+        let mut d = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        tred2(&mut v, &mut d, &mut e);
+        tql2(&mut v, &mut d, &mut e)?;
+        // Sort ascending (tql2 output is ascending already, but make it a
+        // hard guarantee).
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+        let values: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+        let mut vectors = Matrix::zeros(n, n);
+        for (new_j, &old_j) in order.iter().enumerate() {
+            for i in 0..n {
+                vectors.set(i, new_j, v.get(i, old_j));
+            }
+        }
+        Ok(SymEigen { values, vectors })
+    }
+
+    /// Reconstruct `V diag(f(λ)) Vᵀ` — matrix functions of `A`.
+    pub fn apply_fn(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        let n = self.values.len();
+        let mut scaled = Matrix::zeros(n, n);
+        // scaled = V * diag(f(λ))
+        for i in 0..n {
+            for j in 0..n {
+                scaled.set(i, j, self.vectors.get(i, j) * f(self.values[j]));
+            }
+        }
+        crate::linalg::matmul::matmul_nt(&scaled, &self.vectors)
+            .expect("apply_fn: shapes consistent by construction")
+    }
+
+    /// Reconstruct the original matrix.
+    pub fn reconstruct(&self) -> Matrix {
+        self.apply_fn(|x| x)
+    }
+
+    /// Smallest eigenvalue.
+    pub fn min_eig(&self) -> f64 {
+        self.values.first().copied().unwrap_or(0.0)
+    }
+
+    /// Largest eigenvalue.
+    pub fn max_eig(&self) -> f64 {
+        self.values.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form,
+/// accumulating the orthogonal transform in `v` (EISPACK tred2).
+/// On exit `d` holds the diagonal, `e` the subdiagonal (`e[0]` unused).
+fn tred2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in 0..n {
+        d[i] = v.get(n - 1, i);
+    }
+    // Householder reduction.
+    for i in (1..n).rev() {
+        let l = i; // columns 0..l of row i
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 1 {
+            for k in 0..l {
+                scale += d[k].abs();
+            }
+        }
+        if scale == 0.0 || l <= 1 {
+            e[i] = if l >= 1 { d[l - 1] } else { 0.0 };
+            for j in 0..l {
+                d[j] = v.get(l - 1, j);
+                v.set(i, j, 0.0);
+                v.set(j, i, 0.0);
+            }
+        } else {
+            for k in 0..l {
+                d[k] /= scale;
+                h += d[k] * d[k];
+            }
+            let mut f = d[l - 1];
+            let mut g = if f > 0.0 { -h.sqrt() } else { h.sqrt() };
+            e[i] = scale * g;
+            h -= f * g;
+            d[l - 1] = f - g;
+            for j in 0..l {
+                e[j] = 0.0;
+            }
+            // Apply similarity transformation to remaining columns.
+            for j in 0..l {
+                f = d[j];
+                v.set(j, i, f);
+                g = e[j] + v.get(j, j) * f;
+                for k in (j + 1)..l {
+                    g += v.get(k, j) * d[k];
+                    e[k] += v.get(k, j) * f;
+                }
+                e[j] = g;
+            }
+            f = 0.0;
+            for j in 0..l {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..l {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..l {
+                f = d[j];
+                g = e[j];
+                for k in j..l {
+                    let val = v.get(k, j) - (f * e[k] + g * d[k]);
+                    v.set(k, j, val);
+                }
+                d[j] = v.get(l - 1, j);
+                v.set(i, j, 0.0);
+            }
+        }
+        d[i] = h;
+    }
+    // Accumulate transformations.
+    for i in 0..(n - 1) {
+        v.set(n - 1, i, v.get(i, i));
+        v.set(i, i, 1.0);
+        let l = i + 1;
+        if d[l] != 0.0 {
+            for k in 0..l {
+                d[k] = v.get(k, l) / d[l];
+            }
+            for j in 0..l {
+                let mut g = 0.0;
+                for k in 0..l {
+                    g += v.get(k, l) * v.get(k, j);
+                }
+                for k in 0..l {
+                    let val = v.get(k, j) - g * d[k];
+                    v.set(k, j, val);
+                }
+            }
+        }
+        for k in 0..l {
+            v.set(k, l, 0.0);
+        }
+    }
+    for j in 0..n {
+        d[j] = v.get(n - 1, j);
+        v.set(n - 1, j, 0.0);
+    }
+    v.set(n - 1, n - 1, 1.0);
+    e[0] = 0.0;
+}
+
+/// Implicit QL with Wilkinson shifts on a symmetric tridiagonal matrix,
+/// updating the eigenvector accumulation in `v` (EISPACK tql2).
+fn tql2(v: &mut Matrix, d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    let n = d.len();
+    if n == 1 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    let eps = f64::EPSILON;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        // Find small subdiagonal element.
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= eps * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m == n {
+            m = n - 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                if iter > 50 {
+                    return Err(Error::Numerical(
+                        "tql2: QL iteration failed to converge".into(),
+                    ));
+                }
+                // Compute implicit shift.
+                let mut g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = (p * p + 1.0).sqrt();
+                d[l] = e[l] / (p + if p < 0.0 { -r } else { r });
+                d[l + 1] = e[l] * (p + if p < 0.0 { -r } else { r });
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in (l + 2)..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // Implicit QL transformation.
+                p = d[m];
+                let mut c = 1.0;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0;
+                let mut s2 = 0.0;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    g = c * e[i];
+                    h = c * p;
+                    r = (p * p + e[i] * e[i]).sqrt();
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * g;
+                    d[i + 1] = h + s * (c * g + s * d[i]);
+                    // Accumulate transformation (raw slice walk: this
+                    // rotation is the O(n³) inner loop of tql2).
+                    {
+                        let vd = v.as_mut_slice();
+                        let mut idx = i;
+                        for _ in 0..n {
+                            let h2 = vd[idx + 1];
+                            let vi = vd[idx];
+                            vd[idx + 1] = s * vi + c * h2;
+                            vd[idx] = c * vi - s * h2;
+                            idx += n;
+                        }
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                // Check for convergence.
+                if e[l].abs() <= eps * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+    Ok(())
+}
+
+/// Eigenvalues only (same reduction, no vector accumulation would be faster,
+/// but decomposition dominates overall cost rarely enough that we reuse the
+/// full path for simplicity and correctness).
+pub fn eigvals(a: &Matrix) -> Result<Vec<f64>> {
+    Ok(SymEigen::new(a)?.values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul_nt, matmul_tn};
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        let x = Matrix::from_fn(n, n, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        });
+        let mut g = matmul_nt(&x, &x).unwrap();
+        g.add_diag_mut(0.5);
+        g
+    }
+
+    #[test]
+    fn diag_matrix_eigs() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let eig = SymEigen::new(&a).unwrap();
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 2.0).abs() < 1e-12);
+        assert!((eig.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1, 3
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]).unwrap();
+        let eig = SymEigen::new(&a).unwrap();
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_small() {
+        let a = spd(10, 77);
+        let eig = SymEigen::new(&a).unwrap();
+        assert!(eig.reconstruct().rel_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_medium() {
+        let a = spd(120, 5);
+        let eig = SymEigen::new(&a).unwrap();
+        assert!(eig.reconstruct().rel_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        let a = spd(40, 9);
+        let eig = SymEigen::new(&a).unwrap();
+        let vtv = matmul_tn(&eig.vectors, &eig.vectors).unwrap();
+        assert!(vtv.rel_diff(&Matrix::identity(40)) < 1e-10);
+    }
+
+    #[test]
+    fn eigenpairs_satisfy_definition() {
+        let a = spd(25, 33);
+        let eig = SymEigen::new(&a).unwrap();
+        for j in 0..25 {
+            let v = eig.vectors.col(j);
+            let av = a.matvec(&v).unwrap();
+            let residual: f64 = av
+                .iter()
+                .zip(&v)
+                .map(|(p, q)| (p - eig.values[j] * q).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(residual < 1e-8, "eigenpair {j} residual {residual}");
+        }
+    }
+
+    #[test]
+    fn apply_fn_inverse() {
+        let a = spd(15, 3);
+        let eig = SymEigen::new(&a).unwrap();
+        let inv = eig.apply_fn(|x| 1.0 / x);
+        let prod = crate::linalg::matmul::matmul(&a, &inv).unwrap();
+        assert!(prod.rel_diff(&Matrix::identity(15)) < 1e-9);
+    }
+
+    #[test]
+    fn trace_equals_sum_of_eigs() {
+        let a = spd(30, 12);
+        let eig = SymEigen::new(&a).unwrap();
+        let s: f64 = eig.values.iter().sum();
+        assert!((s - a.trace()).abs() / a.trace().abs() < 1e-10);
+    }
+
+    #[test]
+    fn handles_1x1_and_empty() {
+        let a = Matrix::diag(&[5.0]);
+        let eig = SymEigen::new(&a).unwrap();
+        assert_eq!(eig.values, vec![5.0]);
+        let e = SymEigen::new(&Matrix::zeros(0, 0)).unwrap();
+        assert!(e.values.is_empty());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(SymEigen::new(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        let a = Matrix::identity(6);
+        let eig = SymEigen::new(&a).unwrap();
+        for v in &eig.values {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+        assert!(eig.reconstruct().rel_diff(&a) < 1e-12);
+    }
+}

@@ -1,0 +1,520 @@
+//! Kronecker-product algebra — the mathematical core of KronDPP.
+//!
+//! Conventions: for `A (N₁×N₁)`, `B (N₂×N₂)`, the product `A ⊗ B` is the
+//! `N₁N₂ × N₁N₂` block matrix whose `(i,j)` block (written `M_(ij)` as in
+//! the paper) is `a_ij · B`. Item index `t ∈ {0..N₁N₂}` factors as
+//! `t = i·N₂ + r` with `i` the block (sub-kernel-1) index and `r` the
+//! within-block (sub-kernel-2) index.
+//!
+//! Everything the paper's Prop. 2.1–2.4 and App. A/B need is here:
+//! the product itself, matvecs that never materialize `A ⊗ B`, block
+//! extraction, partial traces `Tr₁`/`Tr₂` (Def. 2.3), and the *scaled*
+//! partial traces `Tr₁((I⊗S₂)M)` / `Tr₂((S₁⊗I)M)` that appear in the
+//! KRK-Picard updates (Prop. 3.1).
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::linalg::matmul::{self, dot};
+
+/// Dense Kronecker product `A ⊗ B`.
+pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let (p, q) = a.shape();
+    let (r, s) = b.shape();
+    let mut out = Matrix::zeros(p * r, q * s);
+    for i in 0..p {
+        for j in 0..q {
+            let aij = a.get(i, j);
+            if aij == 0.0 {
+                continue;
+            }
+            for bi in 0..r {
+                let brow = b.row(bi);
+                let orow = out.row_mut(i * r + bi);
+                let dst = &mut orow[j * s..(j + 1) * s];
+                for (d, &bv) in dst.iter_mut().zip(brow) {
+                    *d = aij * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Three-factor Kronecker product `A ⊗ B ⊗ C`.
+pub fn kron3(a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+    kron(&kron(a, b), c)
+}
+
+/// `y = (A ⊗ B) x` without forming the product: reshape `x` to an
+/// `N₁×N₂` matrix `X` (row-major) and compute `A · X · Bᵀ`.
+pub fn kron_matvec(a: &Matrix, b: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    let n1 = a.rows();
+    let n2 = b.rows();
+    if x.len() != a.cols() * b.cols() {
+        return Err(Error::Shape(format!(
+            "kron_matvec: ({}x{})⊗({}x{}) times len {}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols(),
+            x.len()
+        )));
+    }
+    let xm = Matrix::from_vec(a.cols(), b.cols(), x.to_vec())?;
+    let ax = matmul::matmul(a, &xm)?;
+    let axbt = matmul::matmul_nt(&ax, b)?;
+    debug_assert_eq!(axbt.shape(), (n1, n2));
+    Ok(axbt.into_vec())
+}
+
+/// Extract block `M_(ij)` (size `n2×n2`) of an `n1·n2`-square matrix.
+pub fn block(m: &Matrix, i: usize, j: usize, n2: usize) -> Matrix {
+    m.block(i * n2, j * n2, n2, n2)
+        .expect("kron::block: index within range by contract")
+}
+
+/// Partial trace `Tr₁(M)[i,j] = Tr(M_(ij))` (Def. 2.3) — an `n1×n1` matrix.
+pub fn partial_trace_1(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    check_kron_dims(m, n1, n2)?;
+    let n = n1 * n2;
+    let data = m.as_slice();
+    let mut out = Matrix::zeros(n1, n1);
+    for i in 0..n1 {
+        for j in 0..n1 {
+            let mut t = 0.0;
+            for r in 0..n2 {
+                t += data[(i * n2 + r) * n + (j * n2 + r)];
+            }
+            out.set(i, j, t);
+        }
+    }
+    Ok(out)
+}
+
+/// Partial trace `Tr₂(M) = Σ_i M_(ii)` (Def. 2.3) — an `n2×n2` matrix.
+pub fn partial_trace_2(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    check_kron_dims(m, n1, n2)?;
+    let n = n1 * n2;
+    let data = m.as_slice();
+    let mut out = Matrix::zeros(n2, n2);
+    for i in 0..n1 {
+        for r in 0..n2 {
+            let src = &data[(i * n2 + r) * n + i * n2..(i * n2 + r) * n + (i + 1) * n2];
+            let dst = out.row_mut(r);
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Scaled partial trace `Tr₁((I ⊗ S₂) M)[i,j] = Tr(S₂ · M_(ij))`
+/// = `Σ_{p,q} S₂[p,q] · M_(ij)[q,p]` — the contraction at the heart of the
+/// `L₁` update (Prop. 3.1 / App. B.1). `O(N₁² N₂²)` = `O(N²)`.
+pub fn tr1_scaled(m: &Matrix, s2: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    check_kron_dims(m, n1, n2)?;
+    if s2.shape() != (n2, n2) {
+        return Err(Error::Shape("tr1_scaled: S2 shape mismatch".into()));
+    }
+    let n = n1 * n2;
+    let data = m.as_slice();
+    let s2t = s2.transpose(); // so inner loops stream rows of both
+    let mut out = Matrix::zeros(n1, n1);
+    // Parallel over block rows when large.
+    let do_row = |i: usize, orow: &mut [f64]| {
+        for j in 0..n1 {
+            let mut t = 0.0;
+            for q in 0..n2 {
+                // Tr(S2 M_(ij)) = Σ_q Σ_p S2[q,p]·M_(ij)[p,q]... using
+                // transposed S2 rows: Σ_q  dot(S2ᵀ[q,:], M_(ij)[:,q]) is
+                // column access; instead iterate rows of the block:
+                // Σ_p dot(M_(ij)[p, :], S2ᵀ[p, :])  — since
+                // Tr(S2·B) = Σ_p (S2·B)[p,p] = Σ_p Σ_r S2[p,r] B[r,p]
+                //          = Σ_r Σ_p B[r,p] S2ᵀ[r,p]... wait, rewrite:
+                // Tr(S2·B) = Σ_{p,r} S2[p,r]·B[r,p] = Σ_r dot(B[r,:], S2ᵀ[r,:]).
+                let r = q; // rename for clarity: iterate block rows
+                let brow = &data[(i * n2 + r) * n + j * n2..(i * n2 + r) * n + (j + 1) * n2];
+                t += dot(brow, s2t.row(r));
+            }
+            orow[j] = t;
+        }
+    };
+    if n1 * n1 * n2 * n2 > 1 << 22 {
+        let nthreads = matmul::available_threads();
+        let band = n1.div_ceil(nthreads).max(1);
+        let out_slice = out.as_mut_slice();
+        std::thread::scope(|s| {
+            let mut rest = out_slice;
+            let mut start = 0usize;
+            let mut handles = Vec::new();
+            while start < n1 {
+                let len = band.min(n1 - start);
+                let (chunk, tail) = rest.split_at_mut(len * n1);
+                rest = tail;
+                let lo = start;
+                let do_row = &do_row;
+                handles.push(s.spawn(move || {
+                    for (k, i) in (lo..lo + len).enumerate() {
+                        do_row(i, &mut chunk[k * n1..(k + 1) * n1]);
+                    }
+                }));
+                start += len;
+            }
+            for h in handles {
+                h.join().expect("tr1_scaled worker panicked");
+            }
+        });
+    } else {
+        for i in 0..n1 {
+            let mut row = vec![0.0; n1];
+            do_row(i, &mut row);
+            out.row_mut(i).copy_from_slice(&row);
+        }
+    }
+    Ok(out)
+}
+
+/// Scaled partial trace `Tr₂((S₁ ⊗ I) M) = Σ_{i,l} S₁[i,l] · M_(li)` — the
+/// contraction of the `L₂` update (App. B.2). `O(N₁² N₂²)` = `O(N²)`.
+pub fn tr2_scaled(m: &Matrix, s1: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    check_kron_dims(m, n1, n2)?;
+    if s1.shape() != (n1, n1) {
+        return Err(Error::Shape("tr2_scaled: S1 shape mismatch".into()));
+    }
+    let n = n1 * n2;
+    let data = m.as_slice();
+    let mut out = Matrix::zeros(n2, n2);
+    for i in 0..n1 {
+        for l in 0..n1 {
+            let w = s1.get(i, l);
+            if w == 0.0 {
+                continue;
+            }
+            // out += w * M_(li)
+            for r in 0..n2 {
+                let src = &data[(l * n2 + r) * n + i * n2..(l * n2 + r) * n + (i + 1) * n2];
+                let dst = out.row_mut(r);
+                matmul::axpy_slice(dst, w, src);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Weighted block sum `Σ_{i,j} W[i,j] · M_(ij)` (an `n2×n2` matrix). This is
+/// the `A₂` contraction of App. B.2 with `W = L₁`. For symmetric `M` and
+/// `W`, equals [`tr2_scaled`].
+pub fn weighted_block_sum(m: &Matrix, w: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    check_kron_dims(m, n1, n2)?;
+    if w.shape() != (n1, n1) {
+        return Err(Error::Shape("weighted_block_sum: W shape mismatch".into()));
+    }
+    let n = n1 * n2;
+    let data = m.as_slice();
+    let mut out = Matrix::zeros(n2, n2);
+    for i in 0..n1 {
+        for j in 0..n1 {
+            let wij = w.get(i, j);
+            if wij == 0.0 {
+                continue;
+            }
+            for r in 0..n2 {
+                let src = &data[(i * n2 + r) * n + j * n2..(i * n2 + r) * n + (j + 1) * n2];
+                matmul::axpy_slice(out.row_mut(r), wij, src);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Block-trace contraction `A[k,l] = Tr(M_(kl) · B)` for all `(k,l)` — the
+/// `A₁` matrix of App. B.1 with `M = Θ`, `B = L₂`. Identical math to
+/// [`tr1_scaled`] with `S₂ = B`; kept as a named alias for readability at
+/// call sites mirroring the paper.
+pub fn block_trace(m: &Matrix, b: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    tr1_scaled(m, b, n1, n2)
+}
+
+/// Mixed weighted partial trace over a three-factor index split
+/// `t = (i, j, r)` with `i ∈ n1`, `j ∈ n2`, `r ∈ n3`:
+///
+/// `H[j', j] = Σ_{i,i',r,r'} W1[i,i'] · W3[r,r'] · M[(i',j',r'), (i,j,r)]`
+///
+/// — the middle-factor contraction of the m = 3 KRK-Picard update
+/// (§3.1.1 multiblock generalization; see `learn::krk3`). One pass over
+/// `M`, `O(N²)`.
+pub fn mixed_weighted_trace(
+    m: &Matrix,
+    w1: &Matrix,
+    w3: &Matrix,
+    n1: usize,
+    n2: usize,
+    n3: usize,
+) -> Result<Matrix> {
+    let n = n1 * n2 * n3;
+    if m.shape() != (n, n) {
+        return Err(Error::Shape(format!(
+            "mixed_weighted_trace: {}x{} vs n1·n2·n3 = {n}",
+            m.rows(),
+            m.cols()
+        )));
+    }
+    if w1.shape() != (n1, n1) || w3.shape() != (n3, n3) {
+        return Err(Error::Shape("mixed_weighted_trace: weight shape mismatch".into()));
+    }
+    let data = m.as_slice();
+    let mut h = Matrix::zeros(n2, n2);
+    for ip in 0..n1 {
+        for jp in 0..n2 {
+            for i in 0..n1 {
+                let w1v = w1.get(i, ip);
+                if w1v == 0.0 {
+                    continue;
+                }
+                for j in 0..n2 {
+                    // accumulate Σ_{r',r} W3[r,r']·M[(i',j',r'),(i,j,r)]
+                    let mut acc = 0.0;
+                    for rp in 0..n3 {
+                        let row = (ip * n2 + jp) * n3 + rp;
+                        let base = row * n + (i * n2 + j) * n3;
+                        let mrow = &data[base..base + n3];
+                        // Σ_r W3[r, r']·mrow[r] — use column of W3.
+                        let mut inner = 0.0;
+                        for (r, &mv) in mrow.iter().enumerate() {
+                            inner += w3.get(r, rp) * mv;
+                        }
+                        acc += inner;
+                    }
+                    let v = h.get(jp, j) + w1v * acc;
+                    h.set(jp, j, v);
+                }
+            }
+        }
+    }
+    Ok(h)
+}
+
+/// Eigendecomposition of `A ⊗ B` from sub-decompositions (Cor. 2.2):
+/// given eigenvalues of `A` and `B`, the spectrum of `A ⊗ B` is the outer
+/// product `λ_i(A)·λ_j(B)`, in item order `t = i·N₂ + j`.
+pub fn kron_eigenvalues(da: &[f64], db: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(da.len() * db.len());
+    for &a in da {
+        for &b in db {
+            out.push(a * b);
+        }
+    }
+    out
+}
+
+/// Entry `(row, col)` of `P_A ⊗ P_B` without forming it.
+#[inline(always)]
+pub fn kron_entry(pa: &Matrix, pb: &Matrix, n2: usize, row: usize, col: usize) -> f64 {
+    pa.get(row / n2, col / n2) * pb.get(row % n2, col % n2)
+}
+
+/// Column `col` of `P_A ⊗ P_B` (an eigenvector of the Kron kernel) in `O(N)`.
+pub fn kron_column(pa: &Matrix, pb: &Matrix, n2: usize, col: usize) -> Vec<f64> {
+    let n1 = pa.rows();
+    let (ca, cb) = (col / n2, col % n2);
+    let mut out = Vec::with_capacity(n1 * n2);
+    for i in 0..n1 {
+        let a = pa.get(i, ca);
+        for r in 0..n2 {
+            out.push(a * pb.get(r, cb));
+        }
+    }
+    out
+}
+
+fn check_kron_dims(m: &Matrix, n1: usize, n2: usize) -> Result<()> {
+    if m.shape() != (n1 * n2, n1 * n2) {
+        return Err(Error::Shape(format!(
+            "expected {}x{} (n1={n1} · n2={n2}), got {}x{}",
+            n1 * n2,
+            n1 * n2,
+            m.rows(),
+            m.cols()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+
+    fn rnd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        Matrix::from_fn(n, n, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn kron_small_manual() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        let b = Matrix::identity(2);
+        let k = kron(&a, &b);
+        assert_eq!(k.shape(), (4, 4));
+        assert_eq!(k[(0, 0)], 1.0);
+        assert_eq!(k[(0, 2)], 2.0);
+        assert_eq!(k[(1, 3)], 2.0);
+        assert_eq!(k[(2, 0)], 3.0);
+        assert_eq!(k[(3, 3)], 4.0);
+        assert_eq!(k[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn mixed_product_property() {
+        // Prop 2.1(iii): (A⊗B)(C⊗D) = (AC)⊗(BD)
+        let a = rnd(3, 1);
+        let b = rnd(4, 2);
+        let c = rnd(3, 3);
+        let d = rnd(4, 4);
+        let lhs = matmul(&kron(&a, &b), &kron(&c, &d)).unwrap();
+        let rhs = kron(&matmul(&a, &c).unwrap(), &matmul(&b, &d).unwrap());
+        assert!(lhs.rel_diff(&rhs) < 1e-12);
+    }
+
+    #[test]
+    fn kron_matvec_matches_dense() {
+        let a = rnd(3, 5);
+        let b = rnd(4, 6);
+        let x: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let dense = kron(&a, &b).matvec(&x).unwrap();
+        let fast = kron_matvec(&a, &b, &x).unwrap();
+        for (p, q) in dense.iter().zip(&fast) {
+            assert!((p - q).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn partial_traces_of_kron_product() {
+        // Tr1(A⊗B) = Tr(B)·A  and  Tr2(A⊗B) = Tr(A)·B
+        let a = rnd(3, 7);
+        let b = rnd(5, 8);
+        let m = kron(&a, &b);
+        let t1 = partial_trace_1(&m, 3, 5).unwrap();
+        assert!(t1.rel_diff(&a.scaled(b.trace())) < 1e-12);
+        let t2 = partial_trace_2(&m, 3, 5).unwrap();
+        assert!(t2.rel_diff(&b.scaled(a.trace())) < 1e-12);
+    }
+
+    #[test]
+    fn partial_trace_preserves_trace() {
+        let m = rnd(12, 9);
+        let t1 = partial_trace_1(&m, 3, 4).unwrap();
+        let t2 = partial_trace_2(&m, 3, 4).unwrap();
+        assert!((t1.trace() - m.trace()).abs() < 1e-12);
+        assert!((t2.trace() - m.trace()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tr1_scaled_matches_dense_formula() {
+        // Tr1((I⊗S2)·M) computed densely vs contraction.
+        let n1 = 3;
+        let n2 = 4;
+        let m = rnd(n1 * n2, 11);
+        let s2 = rnd(n2, 12);
+        let dense = matmul(&kron(&Matrix::identity(n1), &s2), &m).unwrap();
+        let expect = partial_trace_1(&dense, n1, n2).unwrap();
+        let got = tr1_scaled(&m, &s2, n1, n2).unwrap();
+        assert!(got.rel_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn tr2_scaled_matches_dense_formula() {
+        let n1 = 4;
+        let n2 = 3;
+        let m = rnd(n1 * n2, 13);
+        let s1 = rnd(n1, 14);
+        let dense = matmul(&kron(&s1, &Matrix::identity(n2)), &m).unwrap();
+        let expect = partial_trace_2(&dense, n1, n2).unwrap();
+        let got = tr2_scaled(&m, &s1, n1, n2).unwrap();
+        assert!(got.rel_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn weighted_block_sum_symmetric_equals_tr2() {
+        let n1 = 3;
+        let n2 = 4;
+        let mut m = rnd(n1 * n2, 15);
+        m.symmetrize_mut();
+        let mut w = rnd(n1, 16);
+        w.symmetrize_mut();
+        let a = weighted_block_sum(&m, &w, n1, n2).unwrap();
+        let b = tr2_scaled(&m, &w, n1, n2).unwrap();
+        assert!(a.rel_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn kron_eigen_structure() {
+        // Cor. 2.2 spectrum check via dense eigendecomposition.
+        use crate::linalg::eigen::SymEigen;
+        let mut a = rnd(3, 17);
+        a.symmetrize_mut();
+        let mut b = rnd(4, 18);
+        b.symmetrize_mut();
+        let ea = SymEigen::new(&a).unwrap();
+        let eb = SymEigen::new(&b).unwrap();
+        let mut kron_eigs = kron_eigenvalues(&ea.values, &eb.values);
+        kron_eigs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let dense = SymEigen::new(&kron(&a, &b)).unwrap();
+        for (p, q) in kron_eigs.iter().zip(&dense.values) {
+            assert!((p - q).abs() < 1e-10, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn kron_column_matches_dense_column() {
+        let a = rnd(3, 19);
+        let b = rnd(4, 20);
+        let dense = kron(&a, &b);
+        for col in [0usize, 5, 11] {
+            let fast = kron_column(&a, &b, 4, col);
+            let slow = dense.col(col);
+            for (p, q) in fast.iter().zip(&slow) {
+                assert!((p - q).abs() < 1e-14);
+            }
+        }
+        assert_eq!(kron_entry(&a, &b, 4, 7, 10), dense[(7, 10)]);
+    }
+
+    #[test]
+    fn block_extraction() {
+        let a = rnd(3, 21);
+        let b = rnd(4, 22);
+        let m = kron(&a, &b);
+        for i in 0..3 {
+            for j in 0..3 {
+                let blk = block(&m, i, j, 4);
+                assert!(blk.rel_diff(&b.scaled(a.get(i, j))) < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn dim_checks() {
+        let m = Matrix::zeros(6, 6);
+        assert!(partial_trace_1(&m, 2, 4).is_err());
+        assert!(tr1_scaled(&m, &Matrix::zeros(3, 3), 2, 3).is_ok());
+        assert!(tr1_scaled(&m, &Matrix::zeros(2, 2), 2, 3).is_err());
+    }
+
+    #[test]
+    fn kron3_shape_and_values() {
+        let a = Matrix::diag(&[2.0]);
+        let b = Matrix::diag(&[3.0, 5.0]);
+        let c = Matrix::identity(2);
+        let k = kron3(&a, &b, &c);
+        assert_eq!(k.shape(), (4, 4));
+        assert_eq!(k[(0, 0)], 6.0);
+        assert_eq!(k[(2, 2)], 10.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! LU factorization with partial pivoting.
+//!
+//! Used for general (non-symmetric or indefinite) solves: the marginal-kernel
+//! conversion `L = K(I−K)⁻¹`, determinants of non-PD submatrices inside the
+//! EM baseline, and as a fallback when a Cholesky pivot fails due to
+//! round-off.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// LU decomposition `P·A = L·U` with row pivoting.
+pub struct Lu {
+    /// Packed LU factors (unit lower diagonal implicit).
+    lu: Matrix,
+    /// Row permutation: `perm[i]` is the source row of output row `i`.
+    perm: Vec<usize>,
+    /// Sign of the permutation (±1).
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix. Fails on exact singularity.
+    pub fn factor(a: &Matrix) -> Result<Self> {
+        if !a.is_square() {
+            return Err(Error::Shape("lu: matrix not square".into()));
+        }
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot search
+            let mut p = k;
+            let mut pmax = lu.get(k, k).abs();
+            for i in (k + 1)..n {
+                let v = lu.get(i, k).abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax == 0.0 || !pmax.is_finite() {
+                return Err(Error::Numerical(format!("lu: singular at column {k}")));
+            }
+            if p != k {
+                // swap rows p and k
+                for j in 0..n {
+                    let t = lu.get(k, j);
+                    lu.set(k, j, lu.get(p, j));
+                    lu.set(p, j, t);
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu.get(k, k);
+            for i in (k + 1)..n {
+                let m = lu.get(i, k) / pivot;
+                lu.set(i, k, m);
+                if m != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu.get(i, j) - m * lu.get(k, j);
+                        lu.set(i, j, v);
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, perm, sign })
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// Determinant (sign · product of U diagonal).
+    pub fn det(&self) -> f64 {
+        let n = self.n();
+        let mut d = self.sign;
+        for i in 0..n {
+            d *= self.lu.get(i, i);
+        }
+        d
+    }
+
+    /// `log |det(A)|` and its sign, computed stably in log-space.
+    pub fn slogdet(&self) -> (f64, f64) {
+        let n = self.n();
+        let mut logabs = 0.0;
+        let mut sign = self.sign;
+        for i in 0..n {
+            let u = self.lu.get(i, i);
+            logabs += u.abs().ln();
+            if u < 0.0 {
+                sign = -sign;
+            }
+        }
+        (sign, logabs)
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.n();
+        if b.len() != n {
+            return Err(Error::Shape("lu solve: length mismatch".into()));
+        }
+        // apply permutation
+        let mut y: Vec<f64> = self.perm.iter().map(|&i| b[i]).collect();
+        let lu = self.lu.as_slice();
+        // forward (unit lower)
+        for i in 1..n {
+            let mut v = y[i];
+            for k in 0..i {
+                v -= lu[i * n + k] * y[k];
+            }
+            y[i] = v;
+        }
+        // backward
+        for i in (0..n).rev() {
+            let mut v = y[i];
+            for k in (i + 1)..n {
+                v -= lu[i * n + k] * y[k];
+            }
+            y[i] = v / lu[i * n + i];
+        }
+        Ok(y)
+    }
+
+    /// Solve `A X = B`.
+    pub fn solve_matrix(&self, b: &Matrix) -> Result<Matrix> {
+        let n = self.n();
+        if b.rows() != n {
+            return Err(Error::Shape("lu solve: row mismatch".into()));
+        }
+        let bt = b.transpose();
+        let mut xt = Matrix::zeros(b.cols(), n);
+        for j in 0..b.cols() {
+            let col = self.solve_vec(bt.row(j))?;
+            xt.row_mut(j).copy_from_slice(&col);
+        }
+        Ok(xt.transpose())
+    }
+
+    /// Inverse `A⁻¹`.
+    pub fn inverse(&self) -> Matrix {
+        self.solve_matrix(&Matrix::identity(self.n()))
+            .expect("lu inverse: identity solve cannot shape-fail")
+    }
+}
+
+/// Convenience: determinant of a square matrix.
+pub fn det(a: &Matrix) -> Result<f64> {
+    match Lu::factor(a) {
+        Ok(lu) => Ok(lu.det()),
+        // Singular ⇒ determinant zero.
+        Err(Error::Numerical(_)) => Ok(0.0),
+        Err(e) => Err(e),
+    }
+}
+
+/// Convenience: general inverse.
+pub fn inverse(a: &Matrix) -> Result<Matrix> {
+    Ok(Lu::factor(a)?.inverse())
+}
+
+/// Convenience: solve `A X = B` for general square `A`.
+pub fn solve(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    Lu::factor(a)?.solve_matrix(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+
+    fn rnd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        Matrix::from_fn(n, n, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn det_of_known_matrix() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        assert!((det(&a).unwrap() + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_of_singular_is_zero() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]).unwrap();
+        assert_eq!(det(&a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn solve_residual() {
+        let a = rnd(25, 5);
+        let lu = Lu::factor(&a).unwrap();
+        let b: Vec<f64> = (0..25).map(|i| (i as f64).cos()).collect();
+        let x = lu.solve_vec(&b).unwrap();
+        let ax = a.matvec(&x).unwrap();
+        let res: f64 = ax.iter().zip(&b).map(|(p, q)| (p - q).powi(2)).sum::<f64>().sqrt();
+        assert!(res < 1e-9, "residual {res}");
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = rnd(18, 13);
+        let inv = inverse(&a).unwrap();
+        let prod = matmul(&a, &inv).unwrap();
+        assert!(prod.rel_diff(&Matrix::identity(18)) < 1e-9);
+    }
+
+    #[test]
+    fn slogdet_matches_det() {
+        let a = rnd(10, 21);
+        let lu = Lu::factor(&a).unwrap();
+        let (sign, logabs) = lu.slogdet();
+        let d = lu.det();
+        assert!((sign * logabs.exp() - d).abs() / d.abs().max(1e-300) < 1e-9);
+    }
+
+    #[test]
+    fn permutation_sign_tracked() {
+        // A matrix requiring a swap: det([[0,1],[1,0]]) = -1
+        let a = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]).unwrap();
+        assert!((det(&a).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Lu::factor(&Matrix::zeros(2, 3)).is_err());
+    }
+}

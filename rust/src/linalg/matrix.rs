@@ -1,0 +1,614 @@
+//! Dense row-major `f64` matrix — the core container of the library.
+//!
+//! All DPP kernels, sub-kernels and intermediate quantities are `Matrix`
+//! values. The type is deliberately simple (a `Vec<f64>` plus dims) so that
+//! the blocked kernels in [`crate::linalg::matmul`] and the Kronecker
+//! routines in [`crate::linalg::kron`] can index raw slices without
+//! abstraction overhead.
+
+use crate::error::{Error, Result};
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub, SubAssign};
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Create a matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Create a matrix filled with `v`.
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    /// Build from a row-major `Vec` (takes ownership; length must match).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_vec: {}x{} needs {} elements, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from nested rows (for tests / small literals).
+    pub fn from_rows(rows: &[&[f64]]) -> Result<Self> {
+        let r = rows.len();
+        if r == 0 {
+            return Ok(Matrix::zeros(0, 0));
+        }
+        let c = rows[0].len();
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            if row.len() != c {
+                return Err(Error::Shape("from_rows: ragged rows".into()));
+            }
+            data.extend_from_slice(row);
+        }
+        Ok(Matrix { rows: r, cols: c, data })
+    }
+
+    /// Number of rows.
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// True if square.
+    #[inline(always)]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major slice.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw mutable row-major slice.
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the backing `Vec`.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Unchecked get (debug-asserted).
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Unchecked set (debug-asserted).
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow row `i` mutably.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column `j` into a new `Vec`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Transpose into a new matrix (cache-blocked for large sizes).
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                let imax = (ib + B).min(self.rows);
+                let jmax = (jb + B).min(self.cols);
+                for i in ib..imax {
+                    for j in jb..jmax {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Extract the submatrix indexed by `idx` on both axes: `M[idx, idx]`.
+    /// This is the `L_Y` operation at the core of DPP likelihoods.
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Matrix {
+        let k = idx.len();
+        let mut s = Matrix::zeros(k, k);
+        for (a, &i) in idx.iter().enumerate() {
+            let src = &self.data[i * self.cols..];
+            let dst = s.row_mut(a);
+            for (b, &j) in idx.iter().enumerate() {
+                dst[b] = src[j];
+            }
+        }
+        s
+    }
+
+    /// Extract rows `idx` (all columns): `M[idx, :]`.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut s = Matrix::zeros(idx.len(), self.cols);
+        for (a, &i) in idx.iter().enumerate() {
+            s.row_mut(a).copy_from_slice(self.row(i));
+        }
+        s
+    }
+
+    /// Extract columns `idx` (all rows): `M[:, idx]`.
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut s = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = s.row_mut(i);
+            for (b, &j) in idx.iter().enumerate() {
+                dst[b] = src[j];
+            }
+        }
+        s
+    }
+
+    /// Trace (sum of diagonal).
+    pub fn trace(&self) -> f64 {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.data[i * self.cols + i]).sum()
+    }
+
+    /// Diagonal entries as a `Vec`.
+    pub fn diagonal(&self) -> Vec<f64> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.data[i * self.cols + i]).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius inner product `<A, B> = Tr(AᵀB)`.
+    pub fn fro_dot(&self, other: &Matrix) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape("fro_dot: shape mismatch".into()));
+        }
+        Ok(self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum())
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// In-place scale by a scalar.
+    pub fn scale_mut(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scaled(&self, s: f64) -> Matrix {
+        self.map(|x| x * s)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape("axpy: shape mismatch".into()));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Add `alpha` to the diagonal in place (e.g. `L + I`).
+    pub fn add_diag_mut(&mut self, alpha: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Symmetrize in place: `A ← (A + Aᵀ)/2`. Keeps iterates numerically
+    /// symmetric across repeated updates.
+    pub fn symmetrize_mut(&mut self) {
+        debug_assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let a = self.data[i * n + j];
+                let b = self.data[j * n + i];
+                let m = 0.5 * (a + b);
+                self.data[i * n + j] = m;
+                self.data[j * n + i] = m;
+            }
+        }
+    }
+
+    /// Matrix-vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(Error::Shape(format!(
+                "matvec: {}x{} times vec of len {}",
+                self.rows,
+                self.cols,
+                x.len()
+            )));
+        }
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        Ok(y)
+    }
+
+    /// Vector-matrix product `y = xᵀ A` (returns a row as `Vec`).
+    pub fn vecmat(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.rows {
+            return Err(Error::Shape("vecmat: length mismatch".into()));
+        }
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for (yj, a) in y.iter_mut().zip(row) {
+                *yj += xi * a;
+            }
+        }
+        Ok(y)
+    }
+
+    /// Quadratic form `xᵀ A x`.
+    pub fn quad_form(&self, x: &[f64]) -> Result<f64> {
+        let ax = self.matvec(x)?;
+        Ok(x.iter().zip(&ax).map(|(a, b)| a * b).sum())
+    }
+
+    /// Check symmetry up to `tol` (max abs difference).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (self.data[i * n + j] - self.data[j * n + i]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Copy `block` into `self` starting at `(i0, j0)`.
+    pub fn set_block(&mut self, i0: usize, j0: usize, block: &Matrix) -> Result<()> {
+        if i0 + block.rows > self.rows || j0 + block.cols > self.cols {
+            return Err(Error::Shape("set_block: out of bounds".into()));
+        }
+        for i in 0..block.rows {
+            let dst =
+                &mut self.data[(i0 + i) * self.cols + j0..(i0 + i) * self.cols + j0 + block.cols];
+            dst.copy_from_slice(block.row(i));
+        }
+        Ok(())
+    }
+
+    /// Extract the `r x c` block at `(i0, j0)`.
+    pub fn block(&self, i0: usize, j0: usize, r: usize, c: usize) -> Result<Matrix> {
+        if i0 + r > self.rows || j0 + c > self.cols {
+            return Err(Error::Shape("block: out of bounds".into()));
+        }
+        let mut b = Matrix::zeros(r, c);
+        for i in 0..r {
+            b.row_mut(i)
+                .copy_from_slice(&self.data[(i0 + i) * self.cols + j0..(i0 + i) * self.cols + j0 + c]);
+        }
+        Ok(b)
+    }
+
+    /// Relative Frobenius distance `‖A−B‖_F / max(1, ‖B‖_F)`.
+    pub fn rel_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += (a - b) * (a - b);
+            den += b * b;
+        }
+        num.sqrt() / den.sqrt().max(1.0)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add<&Matrix> for &Matrix {
+    type Output = Matrix;
+    fn add(self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape(), "add: shape mismatch");
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl Sub<&Matrix> for &Matrix {
+    type Output = Matrix;
+    fn sub(self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape(), "sub: shape mismatch");
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+impl AddAssign<&Matrix> for Matrix {
+    fn add_assign(&mut self, rhs: &Matrix) {
+        assert_eq!(self.shape(), rhs.shape(), "add_assign: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+    }
+}
+
+impl SubAssign<&Matrix> for Matrix {
+    fn sub_assign(&mut self, rhs: &Matrix) {
+        assert_eq!(self.shape(), rhs.shape(), "sub_assign: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a -= b;
+        }
+    }
+}
+
+impl Neg for &Matrix {
+    type Output = Matrix;
+    fn neg(self) -> Matrix {
+        self.map(|x| -x)
+    }
+}
+
+impl Mul<f64> for &Matrix {
+    type Output = Matrix;
+    fn mul(self, s: f64) -> Matrix {
+        self.scaled(s)
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(8);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>12.5} ", self.get(i, j))?;
+            }
+            if self.cols > show_c {
+                write!(f, "...")?;
+            }
+            writeln!(f)?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn identity_and_diag() {
+        let i3 = Matrix::identity(3);
+        assert_eq!(i3.trace(), 3.0);
+        let d = Matrix::diag(&[1.0, 2.0, 3.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(37, 53, |i, j| (i * 53 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t[(10, 20)], m[(20, 10)]);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn principal_submatrix_matches_manual() {
+        let m = Matrix::from_fn(5, 5, |i, j| (i * 5 + j) as f64);
+        let s = m.principal_submatrix(&[1, 3]);
+        assert_eq!(s[(0, 0)], m[(1, 1)]);
+        assert_eq!(s[(0, 1)], m[(1, 3)]);
+        assert_eq!(s[(1, 0)], m[(3, 1)]);
+        assert_eq!(s[(1, 1)], m[(3, 3)]);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let r = m.select_rows(&[0, 2]);
+        assert_eq!(r.shape(), (2, 4));
+        assert_eq!(r.row(1), m.row(2));
+        let c = m.select_cols(&[1, 3]);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c[(2, 0)], m[(2, 1)]);
+    }
+
+    #[test]
+    fn matvec_vecmat_quadform() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        assert_eq!(m.matvec(&[1.0, 1.0]).unwrap(), vec![3.0, 7.0]);
+        assert_eq!(m.vecmat(&[1.0, 1.0]).unwrap(), vec![4.0, 6.0]);
+        // x^T A x = [1,1] [3,7]^T = 10
+        assert_eq!(m.quad_form(&[1.0, 1.0]).unwrap(), 10.0);
+    }
+
+    #[test]
+    fn norms_and_trace() {
+        let m = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 4.0]]).unwrap();
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.trace(), 7.0);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        let b = Matrix::identity(2);
+        let c = &a + &b;
+        assert_eq!(c[(0, 0)], 2.0);
+        let d = &c - &b;
+        assert_eq!(d, a);
+        let mut e = a.clone();
+        e.axpy(2.0, &b).unwrap();
+        assert_eq!(e[(1, 1)], 6.0);
+        let f = &a * 2.0;
+        assert_eq!(f[(0, 1)], 4.0);
+    }
+
+    #[test]
+    fn symmetrize_and_check() {
+        let mut m = Matrix::from_rows(&[&[1.0, 2.0], &[4.0, 1.0]]).unwrap();
+        assert!(!m.is_symmetric(1e-12));
+        m.symmetrize_mut();
+        assert!(m.is_symmetric(1e-12));
+        assert_eq!(m[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn blocks() {
+        let mut m = Matrix::zeros(4, 4);
+        let b = Matrix::filled(2, 2, 7.0);
+        m.set_block(1, 2, &b).unwrap();
+        assert_eq!(m[(1, 2)], 7.0);
+        assert_eq!(m[(2, 3)], 7.0);
+        assert_eq!(m[(0, 0)], 0.0);
+        let g = m.block(1, 2, 2, 2).unwrap();
+        assert_eq!(g, b);
+        assert!(m.block(3, 3, 2, 2).is_err());
+    }
+
+    #[test]
+    fn add_diag() {
+        let mut m = Matrix::zeros(3, 3);
+        m.add_diag_mut(2.5);
+        assert_eq!(m.trace(), 7.5);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Dense and structured linear algebra substrate.
+//!
+//! Implemented from scratch (no BLAS/LAPACK available in this environment):
+//! see DESIGN.md §1 for the substrate inventory. The modules mirror the
+//! mathematical toolkit of the paper:
+//!
+//! - [`matrix`]: dense row-major `f64` container.
+//! - [`matmul`]: blocked + multithreaded GEMM, Gram kernels.
+//! - [`cholesky`]: PD factorization → `log det(L_Y)`, solves, inverses.
+//! - [`lu`]: pivoted LU for general solves / signed determinants.
+//! - [`eigen`]: symmetric eigensolver (tred2/tql2) for sampling & App. B.
+//! - [`qr`]: Householder QR + the sampler's orthogonal-complement step.
+//! - [`kron`]: Kronecker products, partial traces (Def. 2.3), the scaled
+//!   partial-trace contractions of Prop. 3.1 / App. B.
+//! - [`nkp`]: nearest Kronecker product (Van Loan–Pitsianis) for
+//!   Joint-Picard (§3.2) and initializers.
+//! - [`sparse`]: CSR Θ for the §3.3 memory–time trade-off and stochastic
+//!   updates.
+
+pub mod cholesky;
+pub mod eigen;
+pub mod kron;
+pub mod lu;
+pub mod matmul;
+pub mod matrix;
+pub mod nkp;
+pub mod qr;
+pub mod sparse;
+
+pub use cholesky::Cholesky;
+pub use eigen::SymEigen;
+pub use lu::Lu;
+pub use matrix::Matrix;
+pub use qr::Qr;
+pub use sparse::{SparseBuilder, SparseMatrix};

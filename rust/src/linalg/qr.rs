@@ -1,0 +1,263 @@
+//! QR factorization (Householder) and orthonormalization helpers.
+//!
+//! The exact DPP sampler (Alg. 2) repeatedly replaces its eigenvector set
+//! `V` by an orthonormal basis of the subspace of `V` orthogonal to a
+//! coordinate vector `e_i`; [`orthonormal_complement_coord`] implements that
+//! step, and the general [`Qr`] supports the low-rank and Nyström-style
+//! utilities.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::linalg::matmul::dot;
+
+/// Householder QR: `A = Q·R` with `Q` (m×k) having orthonormal columns and
+/// `R` (k×k) upper-triangular, `k = min(m, n)` (thin QR).
+pub struct Qr {
+    /// Orthonormal factor (thin).
+    pub q: Matrix,
+    /// Upper-triangular factor.
+    pub r: Matrix,
+}
+
+impl Qr {
+    /// Factor a (possibly rectangular, m ≥ n preferred) matrix.
+    pub fn factor(a: &Matrix) -> Result<Self> {
+        let (m, n) = a.shape();
+        if m == 0 || n == 0 {
+            return Err(Error::Shape("qr: empty matrix".into()));
+        }
+        let k = m.min(n);
+        let mut work = a.clone();
+        // Householder vectors stored per reflection.
+        let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+        for j in 0..k {
+            // Build reflector for column j, rows j..m.
+            let mut v: Vec<f64> = (j..m).map(|i| work.get(i, j)).collect();
+            let alpha = -v[0].signum() * v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if alpha.abs() < f64::EPSILON {
+                vs.push(vec![0.0; m - j]);
+                continue;
+            }
+            v[0] -= alpha;
+            let vnorm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if vnorm > 0.0 {
+                for x in &mut v {
+                    *x /= vnorm;
+                }
+            }
+            // Apply reflector: work[j.., j..] -= 2 v (vᵀ work[j.., j..])
+            for col in j..n {
+                let mut proj = 0.0;
+                for (i, vi) in v.iter().enumerate() {
+                    proj += vi * work.get(j + i, col);
+                }
+                let proj2 = 2.0 * proj;
+                for (i, vi) in v.iter().enumerate() {
+                    let val = work.get(j + i, col) - proj2 * vi;
+                    work.set(j + i, col, val);
+                }
+            }
+            vs.push(v);
+        }
+        // R = leading k×n upper triangle of work.
+        let mut r = Matrix::zeros(k, n);
+        for i in 0..k {
+            for j in i..n {
+                r.set(i, j, work.get(i, j));
+            }
+        }
+        // Q = (H_0 H_1 ... H_{k-1}) applied to identity columns 0..k.
+        let mut q = Matrix::zeros(m, k);
+        for i in 0..k {
+            q.set(i, i, 1.0);
+        }
+        for j in (0..k).rev() {
+            let v = &vs[j];
+            if v.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            for col in 0..k {
+                let mut proj = 0.0;
+                for (i, vi) in v.iter().enumerate() {
+                    proj += vi * q.get(j + i, col);
+                }
+                let proj2 = 2.0 * proj;
+                for (i, vi) in v.iter().enumerate() {
+                    let val = q.get(j + i, col) - proj2 * vi;
+                    q.set(j + i, col, val);
+                }
+            }
+        }
+        Ok(Qr { q, r })
+    }
+}
+
+/// Orthonormalize the columns of `a` via modified Gram–Schmidt, dropping
+/// columns whose residual norm falls below `tol` (rank-revealing-lite).
+/// Returns a matrix whose columns form an orthonormal basis of span(a).
+pub fn orthonormalize_columns(a: &Matrix, tol: f64) -> Matrix {
+    let (m, n) = a.shape();
+    // Work column-major for contiguous access.
+    let at = a.transpose();
+    let mut basis: Vec<Vec<f64>> = Vec::new();
+    for j in 0..n {
+        let mut v = at.row(j).to_vec();
+        // Two rounds of MGS for numerical orthogonality.
+        for _ in 0..2 {
+            for b in &basis {
+                let proj = dot(b, &v);
+                for (vi, bi) in v.iter_mut().zip(b) {
+                    *vi -= proj * bi;
+                }
+            }
+        }
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > tol {
+            for x in &mut v {
+                *x /= norm;
+            }
+            basis.push(v);
+        }
+    }
+    let k = basis.len();
+    let mut q = Matrix::zeros(m, k);
+    for (j, b) in basis.iter().enumerate() {
+        for i in 0..m {
+            q.set(i, j, b[i]);
+        }
+    }
+    q
+}
+
+/// Given orthonormal columns `V` (m×k), return an orthonormal basis of the
+/// subspace `{x ∈ span(V) : x[coord] = 0}` — the `V⊥` step of DPP sampling
+/// (Alg. 2). Output has k−1 columns (or fewer if span degenerates).
+pub fn orthonormal_complement_coord(v: &Matrix, coord: usize) -> Matrix {
+    let (m, k) = v.shape();
+    debug_assert!(coord < m);
+    if k == 0 {
+        return Matrix::zeros(m, 0);
+    }
+    // Find the column with the largest |v[coord, j]| to use as the pivot.
+    let mut pivot = 0usize;
+    let mut pmax = 0.0f64;
+    for j in 0..k {
+        let val = v.get(coord, j).abs();
+        if val > pmax {
+            pmax = val;
+            pivot = j;
+        }
+    }
+    if pmax < 1e-14 {
+        // Subspace already orthogonal to e_coord: drop nothing but one
+        // dimension must still go (degenerate); return first k-1 columns.
+        let idx: Vec<usize> = (0..k.saturating_sub(1)).collect();
+        return v.select_cols(&idx);
+    }
+    let vt = v.transpose(); // rows are columns of v
+    let pcol = vt.row(pivot).to_vec();
+    let pval = pcol[coord];
+    // Subtract multiples of the pivot column so every other column has a
+    // zero at `coord`, then orthonormalize.
+    let mut reduced = Matrix::zeros(m, k - 1);
+    let mut out_j = 0usize;
+    for j in 0..k {
+        if j == pivot {
+            continue;
+        }
+        let cj = vt.row(j);
+        let factor = cj[coord] / pval;
+        for i in 0..m {
+            reduced.set(i, out_j, cj[i] - factor * pcol[i]);
+        }
+        out_j += 1;
+    }
+    orthonormalize_columns(&reduced, 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matmul_tn};
+
+    fn rnd(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        Matrix::from_fn(m, n, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let a = rnd(20, 12, 1);
+        let qr = Qr::factor(&a).unwrap();
+        let rec = matmul(&qr.q, &qr.r).unwrap();
+        assert!(rec.rel_diff(&a) < 1e-11);
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let a = rnd(15, 15, 2);
+        let qr = Qr::factor(&a).unwrap();
+        let qtq = matmul_tn(&qr.q, &qr.q).unwrap();
+        assert!(qtq.rel_diff(&Matrix::identity(15)) < 1e-11);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let a = rnd(10, 8, 3);
+        let qr = Qr::factor(&a).unwrap();
+        for i in 0..qr.r.rows() {
+            for j in 0..i.min(qr.r.cols()) {
+                assert!(qr.r.get(i, j).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormalize_drops_dependent_columns() {
+        let mut a = rnd(10, 3, 4);
+        // Make column 2 a copy of column 0.
+        for i in 0..10 {
+            let v = a.get(i, 0);
+            a.set(i, 2, v);
+        }
+        let q = orthonormalize_columns(&a, 1e-10);
+        assert_eq!(q.cols(), 2);
+        let qtq = matmul_tn(&q, &q).unwrap();
+        assert!(qtq.rel_diff(&Matrix::identity(2)) < 1e-11);
+    }
+
+    #[test]
+    fn complement_zeroes_coordinate() {
+        let a = rnd(8, 4, 5);
+        let q = orthonormalize_columns(&a, 1e-12);
+        assert_eq!(q.cols(), 4);
+        let comp = orthonormal_complement_coord(&q, 3);
+        assert_eq!(comp.cols(), 3);
+        // Every basis vector has zero at coordinate 3.
+        for j in 0..comp.cols() {
+            assert!(comp.get(3, j).abs() < 1e-10, "coord leak {}", comp.get(3, j));
+        }
+        // Still orthonormal.
+        let ctc = matmul_tn(&comp, &comp).unwrap();
+        assert!(ctc.rel_diff(&Matrix::identity(comp.cols())) < 1e-10);
+        // Still inside span(q): projecting onto q's span preserves them.
+        let qt_c = matmul_tn(&q, &comp).unwrap();
+        let back = matmul(&q, &qt_c).unwrap();
+        assert!(back.rel_diff(&comp) < 1e-10);
+    }
+
+    #[test]
+    fn complement_when_already_orthogonal() {
+        // Basis = {e0, e1}; complement w.r.t. coordinate 3 keeps dimension-1.
+        let mut v = Matrix::zeros(4, 2);
+        v.set(0, 0, 1.0);
+        v.set(1, 1, 1.0);
+        let comp = orthonormal_complement_coord(&v, 3);
+        assert_eq!(comp.cols(), 1);
+    }
+}

@@ -1,0 +1,290 @@
+//! Sparse matrices for the memory–time trade-off of §3.3.
+//!
+//! The batch gradient term `Θ = (1/n) Σ_i U_i L_{Y_i}⁻¹ U_iᵀ` is an N×N
+//! matrix whose support is `∪_i Y_i × Y_i`. When the training set is
+//! partitioned by subset clustering (Eq. 9) each part's `Θ_k` touches at
+//! most `z²` entries, so a COO/CSR representation brings the storage to
+//! `O(mz² + N)`. The contractions that KRK-Picard needs (`A₁[k,l] =
+//! Tr(Θ_(kl)L₂)` and `A₂ = Σ_{ij} L1_{ij}Θ_(ij)`) are implemented directly
+//! on the sparse format, costing `O(nnz·1)` per output contribution.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Coordinate-format sparse accumulator (duplicate-merging on build).
+#[derive(Clone, Default)]
+pub struct SparseBuilder {
+    n: usize,
+    entries: HashMap<(u32, u32), f64>,
+}
+
+impl SparseBuilder {
+    /// New builder for an `n×n` matrix.
+    pub fn new(n: usize) -> Self {
+        SparseBuilder { n, entries: HashMap::new() }
+    }
+
+    /// Accumulate `v` at `(i, j)`.
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n && j < self.n);
+        *self.entries.entry((i as u32, j as u32)).or_insert(0.0) += v;
+    }
+
+    /// Scatter a dense `k×k` block onto rows/cols `idx` (the
+    /// `U_i B U_iᵀ` pattern with `B = L_{Y_i}⁻¹`), scaled by `w`.
+    pub fn scatter_block(&mut self, idx: &[usize], block: &Matrix, w: f64) -> Result<()> {
+        let k = idx.len();
+        if block.shape() != (k, k) {
+            return Err(Error::Shape("scatter_block: block/index size mismatch".into()));
+        }
+        for (a, &i) in idx.iter().enumerate() {
+            let row = block.row(a);
+            for (b, &j) in idx.iter().enumerate() {
+                self.add(i, j, w * row[b]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of stored entries so far.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Finalize into CSR.
+    pub fn build(self) -> SparseMatrix {
+        let n = self.n;
+        let mut triplets: Vec<(u32, u32, f64)> =
+            self.entries.into_iter().map(|((i, j), v)| (i, j, v)).collect();
+        triplets.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let nnz = triplets.len();
+        let mut row_ptr = vec![0usize; n + 1];
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for (i, j, v) in triplets {
+            row_ptr[i as usize + 1] += 1;
+            col_idx.push(j);
+            values.push(v);
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        SparseMatrix { n, row_ptr, col_idx, values }
+    }
+}
+
+/// CSR sparse square matrix.
+#[derive(Clone)]
+pub struct SparseMatrix {
+    n: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate `(row, col, value)` triplets.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f64)> + '_ {
+        (0..self.n).flat_map(move |i| {
+            (self.row_ptr[i]..self.row_ptr[i + 1])
+                .map(move |k| (i, self.col_idx[k] as usize, self.values[k]))
+        })
+    }
+
+    /// Densify (tests / small sizes only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.n);
+        for (i, j, v) in self.iter() {
+            m.set(i, j, m.get(i, j) + v);
+        }
+        m
+    }
+
+    /// `y = S·x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.n {
+            return Err(Error::Shape("sparse matvec: length mismatch".into()));
+        }
+        let mut y = vec![0.0; self.n];
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                acc += self.values[k] * x[self.col_idx[k] as usize];
+            }
+            y[i] = acc;
+        }
+        Ok(y)
+    }
+
+    /// Scale all values in place.
+    pub fn scale_mut(&mut self, s: f64) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+
+    /// Block-trace contraction against a dense `n2×n2` matrix:
+    /// `A[k,l] = Tr(S_(kl) · B) = Σ S_(kl)[p,q]·B[q,p]` — `O(nnz)`.
+    /// This is the sparse-Θ form of the `A₁` matrix (App. B.1); with Θ
+    /// holding `κ²` non-zeros it realizes the `O(N₁²κ²)`→`O(κ²)` term of
+    /// Thm. 3.3's stochastic complexity.
+    pub fn block_trace(&self, b: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+        self.check_kron(b, n1, n2, b.rows() == n2)?;
+        let mut a = Matrix::zeros(n1, n1);
+        for (r, c, v) in self.iter() {
+            let (k, p) = (r / n2, r % n2);
+            let (l, q) = (c / n2, c % n2);
+            let val = a.get(k, l) + v * b.get(q, p);
+            a.set(k, l, val);
+        }
+        Ok(a)
+    }
+
+    /// Weighted block sum `Σ_{ij} W[i,j] · S_(ij)` (dense `n2×n2` out) —
+    /// the sparse-Θ form of the `A₂` contraction (App. B.2), `O(nnz)`.
+    pub fn weighted_block_sum(&self, w: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+        self.check_kron(w, n1, n2, w.rows() == n1)?;
+        let mut out = Matrix::zeros(n2, n2);
+        for (r, c, v) in self.iter() {
+            let (i, p) = (r / n2, r % n2);
+            let (j, q) = (c / n2, c % n2);
+            let val = out.get(p, q) + w.get(i, j) * v;
+            out.set(p, q, val);
+        }
+        Ok(out)
+    }
+
+    fn check_kron(&self, _m: &Matrix, n1: usize, n2: usize, dims_ok: bool) -> Result<()> {
+        if self.n != n1 * n2 || !dims_ok {
+            return Err(Error::Shape(format!(
+                "sparse kron op: n={} vs n1·n2={}·{}",
+                self.n, n1, n2
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kron;
+
+    fn rnd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        Matrix::from_fn(n, n, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn build_and_densify() {
+        let mut b = SparseBuilder::new(4);
+        b.add(0, 1, 2.0);
+        b.add(0, 1, 3.0); // merge
+        b.add(3, 2, -1.0);
+        let s = b.build();
+        assert_eq!(s.nnz(), 2);
+        let d = s.to_dense();
+        assert_eq!(d[(0, 1)], 5.0);
+        assert_eq!(d[(3, 2)], -1.0);
+        assert_eq!(d[(1, 1)], 0.0);
+    }
+
+    #[test]
+    fn scatter_block_matches_dense_scatter() {
+        let mut b = SparseBuilder::new(6);
+        let blk = rnd(3, 1);
+        let idx = [1usize, 3, 5];
+        b.scatter_block(&idx, &blk, 2.0).unwrap();
+        let d = b.build().to_dense();
+        for (a, &i) in idx.iter().enumerate() {
+            for (c, &j) in idx.iter().enumerate() {
+                assert!((d[(i, j)] - 2.0 * blk[(a, c)]).abs() < 1e-14);
+            }
+        }
+        assert_eq!(d[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let dense = rnd(8, 3);
+        let mut b = SparseBuilder::new(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                if (i + j) % 3 == 0 {
+                    b.add(i, j, dense[(i, j)]);
+                }
+            }
+        }
+        let s = b.build();
+        let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let ys = s.matvec(&x).unwrap();
+        let yd = s.to_dense().matvec(&x).unwrap();
+        for (p, q) in ys.iter().zip(&yd) {
+            assert!((p - q).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn sparse_block_trace_matches_dense() {
+        let n1 = 3;
+        let n2 = 4;
+        let dense = rnd(n1 * n2, 7);
+        let mut b = SparseBuilder::new(n1 * n2);
+        for i in 0..n1 * n2 {
+            for j in 0..n1 * n2 {
+                if (i * 13 + j * 7) % 4 == 0 {
+                    b.add(i, j, dense[(i, j)]);
+                }
+            }
+        }
+        let s = b.build();
+        let l2 = rnd(n2, 9);
+        let got = s.block_trace(&l2, n1, n2).unwrap();
+        let expect = kron::block_trace(&s.to_dense(), &l2, n1, n2).unwrap();
+        assert!(got.rel_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn sparse_weighted_block_sum_matches_dense() {
+        let n1 = 4;
+        let n2 = 3;
+        let dense = rnd(n1 * n2, 17);
+        let mut b = SparseBuilder::new(n1 * n2);
+        for i in 0..n1 * n2 {
+            for j in 0..n1 * n2 {
+                if (i + 2 * j) % 3 == 1 {
+                    b.add(i, j, dense[(i, j)]);
+                }
+            }
+        }
+        let s = b.build();
+        let w = rnd(n1, 19);
+        let got = s.weighted_block_sum(&w, n1, n2).unwrap();
+        let expect = kron::weighted_block_sum(&s.to_dense(), &w, n1, n2).unwrap();
+        assert!(got.rel_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn shape_checks() {
+        let s = SparseBuilder::new(6).build();
+        assert!(s.block_trace(&Matrix::zeros(4, 4), 2, 3).is_err());
+        assert!(s.matvec(&[0.0; 5]).is_err());
+    }
+}

@@ -1,0 +1,402 @@
+//! krondpp CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   figures   regenerate the paper's tables/figures (CSV + stdout rows)
+//!   learn     fit a DPP kernel to a dataset file (or synthetic data)
+//!   sample    draw subsets from a learned kernel
+//!   serve     run the sampling service over a synthetic request trace
+//!   datagen   generate + save datasets (registry / genes / synthetic)
+//!   info      environment + artifact status
+
+use krondpp::cli::Args;
+use krondpp::config::{Algorithm, ServiceConfig};
+use krondpp::coordinator::DppService;
+use krondpp::dpp::{Kernel, Sampler};
+use krondpp::error::Result;
+use krondpp::figures::{fig1, fig2, tables, Scale};
+use krondpp::learn::{init, Learner};
+use krondpp::rng::Rng;
+use krondpp::ser::matio;
+use std::path::Path;
+
+const USAGE: &str = "\
+krondpp — Kronecker Determinantal Point Processes (NIPS 2016 reproduction)
+
+USAGE: krondpp <command> [flags]
+
+COMMANDS:
+  figures  --fig 1a|1b|1c|2 | --table 1|2   [--scale small|paper] [--seed S]
+  learn    --algo picard|krk|krk-stochastic|joint|em --data FILE.kds
+           [--n1 N --n2 N] [--iters I] [--step A] [--tol T] [--out PREFIX]
+  sample   --kernel PREFIX [--k K] [--count C] [--seed S]
+  serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
+           [--learn-live]
+  datagen  --kind synthetic|genes|registry --out FILE.kds [--n1 N --n2 N]
+           [--count C] [--seed S]
+  info
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(tokens: Vec<String>) -> Result<()> {
+    let args = Args::parse(tokens, &["learn-live", "help"])?;
+    match args.command.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("learn") => cmd_learn(&args),
+        Some("sample") => cmd_sample(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("datagen") => cmd_datagen(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = Scale::parse(args.str_flag("scale").unwrap_or("small"))?;
+    let seed: u64 = args.get_or("seed", 2016)?;
+    let mut ran = false;
+    if let Some(fig) = args.str_flag("fig") {
+        ran = true;
+        match fig {
+            "1a" => fig1::fig1a(scale, seed)?,
+            "1b" => fig1::fig1b(scale, seed)?,
+            "1c" => fig1::fig1c(scale, seed)?,
+            "2" | "2a" | "2b" => fig2::fig2(scale, seed)?,
+            "all" => {
+                fig1::fig1a(scale, seed)?;
+                fig1::fig1b(scale, seed)?;
+                fig1::fig1c(scale, seed)?;
+                fig2::fig2(scale, seed)?;
+            }
+            other => return Err(krondpp::Error::Parse(format!("unknown figure '{other}'"))),
+        }
+    }
+    if let Some(table) = args.str_flag("table") {
+        ran = true;
+        match table {
+            "1" => {
+                tables::table1(scale, seed)?;
+            }
+            "2" => fig2::table2(scale, seed)?,
+            "all" => {
+                tables::table1(scale, seed)?;
+                fig2::table2(scale, seed)?;
+            }
+            other => return Err(krondpp::Error::Parse(format!("unknown table '{other}'"))),
+        }
+    }
+    if !ran {
+        // Default: everything.
+        fig1::fig1a(scale, seed)?;
+        fig1::fig1b(scale, seed)?;
+        fig1::fig1c(scale, seed)?;
+        fig2::fig2(scale, seed)?;
+        tables::table1(scale, seed)?;
+        fig2::table2(scale, seed)?;
+    }
+    Ok(())
+}
+
+fn cmd_learn(args: &Args) -> Result<()> {
+    let algo = Algorithm::parse(args.str_flag("algo").unwrap_or("krk"))?;
+    let iters: usize = args.get_or("iters", 20)?;
+    let step: f64 = args.get_or("step", 1.0)?;
+    let tol: f64 = args.get_or("tol", 1e-4)?;
+    let seed: u64 = args.get_or("seed", 2016)?;
+
+    // Load or synthesize data.
+    let (n, subsets) = match args.str_flag("data") {
+        Some(path) => matio::read_dataset(Path::new(path))?,
+        None => {
+            let n1: usize = args.get_or("n1", 20)?;
+            let n2: usize = args.get_or("n2", 20)?;
+            let count: usize = args.get_or("count", 100)?;
+            let mut rng = Rng::new(seed);
+            let truth = krondpp::data::paper_truth_kernel(n1, n2, &mut rng);
+            let data = krondpp::data::sample_training_set(
+                &truth,
+                count,
+                (n1 * n2 / 50).max(2),
+                (n1 * n2 / 8).max(4),
+                &mut rng,
+            )?;
+            println!("synthetic data: N={} n={count}", n1 * n2);
+            (n1 * n2, data.subsets)
+        }
+    };
+    let data = krondpp::learn::TrainingSet::new(n, subsets)?;
+    let n1: usize = args.get_or("n1", (n as f64).sqrt() as usize)?;
+    let n2: usize = args.get_or("n2", n / n1.max(1))?;
+    if n1 * n2 != n
+        && matches!(
+            algo,
+            Algorithm::Krk | Algorithm::KrkStochastic | Algorithm::JointPicard
+        )
+    {
+        return Err(krondpp::Error::Invalid(format!(
+            "n1*n2 = {} must equal N = {n} for Kronecker learners",
+            n1 * n2
+        )));
+    }
+    println!(
+        "learning: algo={} N={n} n={} κ={} iters≤{iters} a={step} δ={tol}",
+        algo.name(),
+        data.len(),
+        data.kappa()
+    );
+    let mut rng = Rng::new(seed ^ 0x1EA2);
+    let result = match algo {
+        Algorithm::Picard => {
+            let l = if n1 * n2 == n {
+                let l1 = init::paper_subkernel(n1, &mut rng);
+                let l2 = init::paper_subkernel(n2, &mut rng);
+                krondpp::linalg::kron::kron(&l1, &l2)
+            } else {
+                init::paper_subkernel(n, &mut rng)
+            };
+            krondpp::learn::Picard::new(l, step)?.run(&data, iters, tol)?
+        }
+        Algorithm::Krk => {
+            let l1 = init::paper_subkernel(n1, &mut rng);
+            let l2 = init::paper_subkernel(n2, &mut rng);
+            krondpp::learn::KrkPicard::new(l1, l2, step)?.run(&data, iters, tol)?
+        }
+        Algorithm::KrkStochastic => {
+            let l1 = init::paper_subkernel(n1, &mut rng);
+            let l2 = init::paper_subkernel(n2, &mut rng);
+            let mb: usize = args.get_or("minibatch", 1)?;
+            krondpp::learn::KrkStochastic::new(l1, l2, step, mb, seed).run(&data, iters, tol)?
+        }
+        Algorithm::JointPicard => {
+            let l1 = init::paper_subkernel(n1, &mut rng);
+            let l2 = init::paper_subkernel(n2, &mut rng);
+            krondpp::learn::JointPicard::new(l1, l2, step)?.run(&data, iters, tol)?
+        }
+        Algorithm::Em => {
+            let k0 = init::wishart_marginal(n, &mut rng)?;
+            krondpp::learn::EmLearner::from_marginal(&k0)?.run(&data, iters, tol)?
+        }
+    };
+    for r in &result.history {
+        println!(
+            "  iter {:>3}  t={:>8.2}s  ll={:.6}",
+            r.iter,
+            r.elapsed.as_secs_f64(),
+            r.log_likelihood
+        );
+    }
+    println!(
+        "done: final ll {:.6} ({} iterations, converged={})",
+        result.final_ll(),
+        result.history.len() - 1,
+        result.converged
+    );
+    if let Some(prefix) = args.str_flag("out") {
+        save_kernel(&result.kernel, prefix)?;
+    }
+    Ok(())
+}
+
+fn save_kernel(kernel: &Kernel, prefix: &str) -> Result<()> {
+    match kernel {
+        Kernel::Full(l) => {
+            matio::write_matrix(Path::new(&format!("{prefix}.full.kdm")), l)?;
+            println!("saved {prefix}.full.kdm");
+        }
+        Kernel::Kron2(l1, l2) => {
+            matio::write_matrix(Path::new(&format!("{prefix}.l1.kdm")), l1)?;
+            matio::write_matrix(Path::new(&format!("{prefix}.l2.kdm")), l2)?;
+            println!("saved {prefix}.l1.kdm / {prefix}.l2.kdm");
+        }
+        Kernel::Kron3(l1, l2, l3) => {
+            matio::write_matrix(Path::new(&format!("{prefix}.l1.kdm")), l1)?;
+            matio::write_matrix(Path::new(&format!("{prefix}.l2.kdm")), l2)?;
+            matio::write_matrix(Path::new(&format!("{prefix}.l3.kdm")), l3)?;
+            println!("saved {prefix}.l{{1,2,3}}.kdm");
+        }
+    }
+    Ok(())
+}
+
+fn load_kernel(prefix: &str) -> Result<Kernel> {
+    let full = format!("{prefix}.full.kdm");
+    if Path::new(&full).exists() {
+        return Ok(Kernel::Full(matio::read_matrix(Path::new(&full))?));
+    }
+    let l1 = format!("{prefix}.l1.kdm");
+    let l2 = format!("{prefix}.l2.kdm");
+    let l3 = format!("{prefix}.l3.kdm");
+    if Path::new(&l3).exists() {
+        return Ok(Kernel::Kron3(
+            matio::read_matrix(Path::new(&l1))?,
+            matio::read_matrix(Path::new(&l2))?,
+            matio::read_matrix(Path::new(&l3))?,
+        ));
+    }
+    Ok(Kernel::Kron2(
+        matio::read_matrix(Path::new(&l1))?,
+        matio::read_matrix(Path::new(&l2))?,
+    ))
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let prefix = args.require_str("kernel")?;
+    let kernel = load_kernel(prefix)?;
+    let k: usize = args.get_or("k", 0)?;
+    let count: usize = args.get_or("count", 5)?;
+    let seed: u64 = args.get_or("seed", 0)?;
+    let sampler = Sampler::new(&kernel)?;
+    let mut rng = Rng::new(seed);
+    for i in 0..count {
+        let y = if k == 0 { sampler.sample(&mut rng) } else { sampler.sample_k(k, &mut rng) };
+        println!("sample {i}: {y:?}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n1: usize = args.get_or("n1", 20)?;
+    let n2: usize = args.get_or("n2", 20)?;
+    let requests: usize = args.get_or("requests", 2000)?;
+    let rate: f64 = args.get_or("rate", 500.0)?;
+    let seed: u64 = args.get_or("seed", 2016)?;
+    let mut cfg = ServiceConfig::default();
+    if let Some(w) = args.get_opt::<usize>("workers")? {
+        cfg.workers = w.max(1);
+    }
+    let mut rng = Rng::new(seed);
+    let truth = krondpp::data::paper_truth_kernel(n1, n2, &mut rng);
+    println!(
+        "starting service: N={} workers={} max_batch={}",
+        n1 * n2,
+        cfg.workers,
+        cfg.max_batch
+    );
+    let svc = std::sync::Arc::new(DppService::start(&truth, &cfg, seed)?);
+
+    // Optional live learning job feeding kernel refreshes.
+    let job = if args.switch("learn-live") {
+        let data =
+            krondpp::data::sample_training_set(&truth, 60, (n1 / 2).max(2), n1 + 2, &mut rng)?;
+        let l1 = init::paper_subkernel(n1, &mut rng);
+        let l2 = init::paper_subkernel(n2, &mut rng);
+        let learner = krondpp::learn::KrkPicard::new(l1, l2, 1.0)?;
+        println!("live learning job started (KRK-Picard, kernel hot-swap per iteration)");
+        Some(krondpp::coordinator::LearningJob::spawn(
+            Box::new(learner),
+            data,
+            10,
+            0.0,
+            Some(std::sync::Arc::clone(&svc)),
+        ))
+    } else {
+        None
+    };
+
+    // Drive the synthetic trace.
+    let spec = krondpp::data::workload::WorkloadSpec {
+        rate_hz: rate,
+        count: requests,
+        k_lo: 3,
+        k_hi: n1.max(4),
+    };
+    let trace = krondpp::data::workload::generate(&spec, &mut rng);
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(trace.len());
+    for req in &trace {
+        let target = req.at;
+        while t0.elapsed() < target {
+            std::thread::yield_now();
+        }
+        match svc.submit(krondpp::coordinator::SampleRequest { k: req.k }) {
+            Ok(t) => tickets.push(t),
+            Err(_) => {} // rejected by backpressure; counted in metrics
+        }
+    }
+    let mut ok = 0usize;
+    for t in tickets {
+        if t.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {ok}/{requests} in {wall:.2}s ({:.0} req/s)", ok as f64 / wall);
+    println!("{}", svc.metrics().report());
+    if let Some(job) = job {
+        job.cancel();
+        let history = job.join()?;
+        println!(
+            "learning job: ll {:.4} -> {:.4} over {} iterations",
+            history.first().map(|r| r.log_likelihood).unwrap_or(f64::NAN),
+            history.last().map(|r| r.log_likelihood).unwrap_or(f64::NAN),
+            history.len() - 1
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let kind = args.str_flag("kind").unwrap_or("synthetic");
+    let out = args.require_str("out")?;
+    let seed: u64 = args.get_or("seed", 2016)?;
+    let count: usize = args.get_or("count", 100)?;
+    match kind {
+        "synthetic" => {
+            let n1: usize = args.get_or("n1", 50)?;
+            let n2: usize = args.get_or("n2", 50)?;
+            let p = krondpp::data::fig1_problem(n1, n2, count, seed)?;
+            matio::write_dataset(Path::new(out), p.train.ground_size, &p.train.subsets)?;
+            println!("wrote {} ({} subsets over N={})", out, count, n1 * n2);
+        }
+        "genes" => {
+            let n: usize = args.get_or("n", 576)?;
+            let p =
+                krondpp::data::genes::genes_problem(n, 48, count, n / 50 + 2, n / 12 + 4, seed)?;
+            matio::write_dataset(Path::new(out), n, &p.train.subsets)?;
+            println!("wrote {out} ({count} subsets over N={n})");
+        }
+        "registry" => {
+            let n: usize = args.get_or("n", 100)?;
+            let cats = krondpp::data::registry::all_categories(n, count, count / 2, seed)?;
+            for cat in &cats {
+                let path = format!("{out}.{}.kds", cat.name);
+                matio::write_dataset(Path::new(&path), n, &cat.train.subsets)?;
+                println!("wrote {path}");
+            }
+        }
+        other => return Err(krondpp::Error::Parse(format!("unknown kind '{other}'"))),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("krondpp {}", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", krondpp::linalg::matmul::available_threads());
+    match krondpp::runtime::Engine::load_default() {
+        Ok(engine) => {
+            println!(
+                "pjrt: {} ({} artifacts)",
+                engine.platform(),
+                engine.manifest().artifacts.len()
+            );
+            for a in &engine.manifest().artifacts {
+                println!("  {} in={:?} out={:?}", a.name, a.inputs, a.outputs);
+            }
+        }
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}

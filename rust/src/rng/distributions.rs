@@ -1,0 +1,236 @@
+//! Non-uniform distributions and random matrix/subset helpers.
+
+use super::Rng;
+use crate::linalg::{matmul, Matrix};
+
+impl Rng {
+    /// Standard normal via Box–Muller (one value; simple and adequate —
+    /// Gaussian draws are not on any hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 0.0 {
+                let u2 = self.uniform();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang (k ≥ 0 handled through
+    /// the boost trick for k < 1).
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        assert!(k > 0.0, "gamma: shape must be positive");
+        if k < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) · U^{1/k}
+            let g = self.gamma(k + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Chi-square with `df` degrees of freedom.
+    pub fn chi_square(&mut self, df: f64) -> f64 {
+        2.0 * self.gamma(df / 2.0)
+    }
+
+    /// Matrix with i.i.d. uniform entries in `[lo, hi)`.
+    pub fn uniform_matrix(&mut self, rows: usize, cols: usize, lo: f64, hi: f64) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| self.uniform_range(lo, hi))
+    }
+
+    /// Matrix with i.i.d. standard normal entries.
+    pub fn normal_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| self.normal())
+    }
+
+    /// Random PD kernel `XᵀX` with `X` uniform in `[0, √2)` — the paper's
+    /// synthetic sub-kernel initializer (§5.1).
+    pub fn paper_init_kernel(&mut self, n: usize) -> Matrix {
+        let x = self.uniform_matrix(n, n, 0.0, std::f64::consts::SQRT_2);
+        matmul::matmul_tn(&x, &x).expect("square by construction")
+    }
+
+    /// Wishart(identity/`n`·scale, df) sample via Bartlett decomposition:
+    /// `W = A·Aᵀ` with `A` lower triangular, `A[i,i] = √χ²(df−i)`,
+    /// `A[i,j] ~ N(0,1)` below the diagonal, then scaled.
+    /// Used to initialize EM's marginal kernel `K` (§5.2 uses
+    /// Wishart(N, I)/N).
+    pub fn wishart(&mut self, n: usize, df: f64, scale: f64) -> Matrix {
+        assert!(df > (n - 1) as f64, "wishart: df must exceed n-1");
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            a.set(i, i, self.chi_square(df - i as f64).sqrt());
+            for j in 0..i {
+                a.set(i, j, self.normal());
+            }
+        }
+        let mut w = matmul::matmul_nt(&a, &a).expect("square by construction");
+        w.scale_mut(scale);
+        w.symmetrize_mut();
+        w
+    }
+
+    /// Fisher–Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Uniform random subset of `{0..n}` of size `k` (sorted).
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "subset: k > n");
+        // Floyd's algorithm.
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "weighted_index: all-zero weights");
+        let mut target = self.uniform() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::is_pd;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(5);
+        let n = 50_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            m += x;
+            v += x * x;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Rng::new(6);
+        for &k in &[0.5, 1.0, 2.5, 8.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| rng.gamma(k)).sum::<f64>() / n as f64;
+            assert!((mean - k).abs() < 0.1 * k.max(1.0), "shape {k}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn chi_square_mean() {
+        let mut rng = Rng::new(7);
+        let df = 10.0;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.chi_square(df)).sum::<f64>() / n as f64;
+        assert!((mean - df).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn wishart_is_pd_and_mean_scales() {
+        let mut rng = Rng::new(8);
+        let n = 10;
+        let w = rng.wishart(n, n as f64, 1.0 / n as f64);
+        assert!(is_pd(&w));
+        // E[Wishart(df, I)] = df·I, so scaled by 1/n: trace ≈ n.
+        let mut tr = 0.0;
+        for _ in 0..50 {
+            tr += rng.wishart(n, n as f64, 1.0 / n as f64).trace();
+        }
+        tr /= 50.0;
+        assert!((tr - n as f64).abs() < 1.5, "avg trace {tr}");
+    }
+
+    #[test]
+    fn paper_init_kernel_pd() {
+        let mut rng = Rng::new(9);
+        let k = rng.paper_init_kernel(20);
+        assert!(k.is_symmetric(1e-9));
+        assert!(is_pd(&k));
+    }
+
+    #[test]
+    fn subset_sorted_unique_correct_size() {
+        let mut rng = Rng::new(10);
+        for _ in 0..100 {
+            let s = rng.subset(50, 12);
+            assert_eq!(s.len(), 12);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(*s.last().unwrap() < 50);
+        }
+    }
+
+    #[test]
+    fn subset_full_and_empty() {
+        let mut rng = Rng::new(11);
+        assert_eq!(rng.subset(5, 5), vec![0, 1, 2, 3, 4]);
+        assert!(rng.subset(5, 0).is_empty());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(12);
+        let mut v: Vec<usize> = (0..20).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Rng::new(13);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..8000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.4, "ratio {ratio}");
+    }
+}

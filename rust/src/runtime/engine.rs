@@ -1,0 +1,232 @@
+//! PJRT execution engine: loads AOT-lowered HLO-text artifacts and runs
+//! them on the XLA CPU client from the Rust hot path (the `xla` crate's
+//! PJRT C-API bindings; pattern adapted from /opt/xla-example/load_hlo).
+//!
+//! Artifacts are compiled lazily on first use and cached for the life of
+//! the engine, so the steady-state request path is: wrap inputs as
+//! literals → `execute` → unwrap the output tuple. Python is never
+//! involved at runtime.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// PJRT engine over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+fn xerr(context: &str, e: xla::Error) -> Error {
+    Error::Runtime(format!("{context}: {e}"))
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| xerr("pjrt cpu client", e))?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load from the default artifact directory
+    /// (`$KRONDPP_ARTIFACTS` or `./artifacts`).
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&crate::runtime::manifest::default_dir())
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact specs available.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Does the engine have an artifact of this name?
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.find(name).is_some()
+    }
+
+    /// Compile (or fetch cached) an executable.
+    fn executable(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))?;
+        let path = self.manifest.file_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| xerr(&format!("parse {}", path.display()), e))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| xerr(&format!("compile {name}"), e))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on flat `f64` buffers (shapes validated
+    /// against the manifest). Returns one flat buffer per tuple output.
+    pub fn execute(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            if buf.len() != spec.input_len(i) {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} expects shape {:?} ({} elems), got {}",
+                    spec.inputs[i],
+                    spec.input_len(i),
+                    buf.len()
+                )));
+            }
+            let dims: Vec<i64> = spec.inputs[i].iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| xerr(&format!("{name}: reshape input {i}"), e))?;
+            literals.push(lit);
+        }
+        self.executable(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| xerr(&format!("execute {name}"), e))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| xerr(&format!("{name}: fetch result"), e))?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = root.to_tuple().map_err(|e| xerr(&format!("{name}: untuple"), e))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: manifest promises {} outputs, runtime returned {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let v: Vec<f64> =
+                part.to_vec().map_err(|e| xerr(&format!("{name}: read output {i}"), e))?;
+            if v.len() != spec.output_len(i) {
+                return Err(Error::Runtime(format!(
+                    "{name}: output {i} expects {} elems, got {}",
+                    spec.output_len(i),
+                    v.len()
+                )));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Execute on matrices, returning matrices shaped per the manifest.
+    pub fn execute_matrices(&self, name: &str, inputs: &[&Matrix]) -> Result<Vec<Matrix>> {
+        let bufs: Vec<&[f64]> = inputs.iter().map(|m| m.as_slice()).collect();
+        let spec_outputs: Vec<Vec<usize>> = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact named '{name}'")))?
+            .outputs
+            .clone();
+        let flat = self.execute(name, &bufs)?;
+        flat.into_iter()
+            .zip(spec_outputs)
+            .map(|(v, shape)| {
+                let (r, c) = match shape.len() {
+                    2 => (shape[0], shape[1]),
+                    1 => (shape[0], 1),
+                    _ => (v.len(), 1),
+                };
+                Matrix::from_vec(r, c, v)
+            })
+            .collect()
+    }
+
+    /// Artifact spec accessor.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.manifest.find(name)
+    }
+}
+
+/// [`crate::learn::krk::Contractions`] backend that routes the two Θ
+/// contractions through AOT-compiled artifacts when a size variant
+/// exists, falling back to the CPU implementation otherwise.
+pub struct HloContractions {
+    engine: Engine,
+}
+
+impl HloContractions {
+    pub fn new(engine: Engine) -> Self {
+        HloContractions { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn artifact_name(n1: usize, n2: usize) -> String {
+        format!("krk_contractions_{n1}x{n2}")
+    }
+
+    /// True if this (n1, n2) has a lowered variant.
+    pub fn supports(&self, n1: usize, n2: usize) -> bool {
+        self.engine.has(&Self::artifact_name(n1, n2))
+    }
+}
+
+impl crate::learn::krk::Contractions for HloContractions {
+    fn block_trace(&self, theta: &Matrix, l2: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+        let name = Self::artifact_name(n1, n2);
+        if !self.engine.has(&name) {
+            return crate::linalg::kron::block_trace(theta, l2, n1, n2);
+        }
+        // The artifact computes both contractions; L1 is only used for A2,
+        // pass zeros (same shapes) and keep A1.
+        let zero_l1 = Matrix::zeros(n1, n1);
+        let out = self.engine.execute_matrices(&name, &[theta, &zero_l1, l2])?;
+        Ok(out.into_iter().next().expect("two outputs"))
+    }
+
+    fn weighted_block_sum(
+        &self,
+        theta: &Matrix,
+        w: &Matrix,
+        n1: usize,
+        n2: usize,
+    ) -> Result<Matrix> {
+        let name = Self::artifact_name(n1, n2);
+        if !self.engine.has(&name) {
+            return crate::linalg::kron::weighted_block_sum(theta, w, n1, n2);
+        }
+        let zero_l2 = Matrix::zeros(n2, n2);
+        let out = self.engine.execute_matrices(&name, &[theta, w, &zero_l2])?;
+        Ok(out.into_iter().nth(1).expect("two outputs"))
+    }
+}
+
+// `xla::PjRtClient` wraps a thread-safe C++ client; executions are
+// synchronized by the cache mutex at compile time and PJRT internally at
+// run time.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}

@@ -1,0 +1,138 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The manifest records every lowered HLO artifact with its
+//! input/output shapes so call sites are validated at load time rather
+//! than failing inside PJRT.
+
+use crate::error::{Error, Result};
+use crate::ser::Json;
+use std::path::{Path, PathBuf};
+
+/// One lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO-text file, relative to the artifact directory.
+    pub file: PathBuf,
+    /// Input shapes in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (tuple elements) in order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    /// Total element count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+
+    /// Total element count of output `i`.
+    pub fn output_len(&self, i: usize) -> usize {
+        self.outputs[i].iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (directory recorded for file resolution).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let json = Json::parse(text)?;
+        let dtype = json.get("dtype")?.as_str()?;
+        if dtype != "f64" {
+            return Err(Error::Runtime(format!(
+                "manifest dtype '{dtype}' unsupported (runtime is f64)"
+            )));
+        }
+        let mut artifacts = Vec::new();
+        for a in json.get("artifacts")?.as_arr()? {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                a.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_arr()?.iter().map(|d| d.as_usize()).collect())
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: a.get("name")?.as_str()?.to_string(),
+                file: PathBuf::from(a.get("file")?.as_str()?),
+                inputs: shapes("inputs")?,
+                outputs: shapes("outputs")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn file_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+/// Default artifact directory: `$KRONDPP_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("KRONDPP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "dtype": "f64",
+      "artifacts": [
+        {"name": "krk_contractions_8x8", "file": "krk_contractions_8x8.hlo.txt",
+         "inputs": [[64,64],[8,8],[8,8]], "outputs": [[8,8],[8,8]], "dtype": "f64"},
+        {"name": "gram_256x64", "file": "gram_256x64.hlo.txt",
+         "inputs": [[256,64]], "outputs": [[64,64]], "dtype": "f64"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("krk_contractions_8x8").unwrap();
+        assert_eq!(a.inputs[0], vec![64, 64]);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.input_len(0), 4096);
+        assert_eq!(a.output_len(1), 64);
+        assert!(m.find("nope").is_none());
+        assert!(m.file_path(a).ends_with("krk_contractions_8x8.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let text = SAMPLE.replace("\"dtype\": \"f64\",", "\"dtype\": \"f32\",");
+        assert!(Manifest::parse(Path::new("."), &text).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load + execute the AOT-lowered JAX/Pallas artifacts from
+//! the Rust request path. See DESIGN.md §3 ("Runtime") — Python runs only
+//! at build time (`make artifacts`); the binary is self-contained given
+//! `artifacts/`.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HloContractions};
+pub use manifest::{ArtifactSpec, Manifest};

@@ -1,0 +1,202 @@
+//! Binary matrix and dataset IO.
+//!
+//! Format `KDM1` (krondpp matrix v1): magic, u64 rows, u64 cols, then
+//! little-endian f64 data row-major. Datasets (`KDS1`) store the ground-set
+//! size and each subset as a u32 length + u32 indices. Both formats are
+//! written atomically (tmp + rename) so partially-written artifacts are
+//! never observed by concurrent readers.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MATRIX_MAGIC: &[u8; 4] = b"KDM1";
+const DATASET_MAGIC: &[u8; 4] = b"KDS1";
+
+/// Write a matrix to `path`.
+pub fn write_matrix(path: &Path, m: &Matrix) -> Result<()> {
+    let tmp = tmp_path(path);
+    {
+        let f = std::fs::File::create(&tmp)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MATRIX_MAGIC)?;
+        w.write_all(&(m.rows() as u64).to_le_bytes())?;
+        w.write_all(&(m.cols() as u64).to_le_bytes())?;
+        for &v in m.as_slice() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read a matrix from `path`.
+pub fn read_matrix(path: &Path) -> Result<Matrix> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MATRIX_MAGIC {
+        return Err(Error::Parse(format!("{}: not a KDM1 matrix file", path.display())));
+    }
+    let rows = read_u64(&mut r)? as usize;
+    let cols = read_u64(&mut r)? as usize;
+    let count = rows.checked_mul(cols).ok_or_else(|| Error::Parse("matrix too large".into()))?;
+    let mut data = vec![0.0f64; count];
+    let mut buf = [0u8; 8];
+    for v in &mut data {
+        r.read_exact(&mut buf)?;
+        *v = f64::from_le_bytes(buf);
+    }
+    Matrix::from_vec(rows, cols, data)
+}
+
+/// Write a training set (list of subsets over `{0..n}`).
+pub fn write_dataset(path: &Path, n: usize, subsets: &[Vec<usize>]) -> Result<()> {
+    let tmp = tmp_path(path);
+    {
+        let f = std::fs::File::create(&tmp)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(DATASET_MAGIC)?;
+        w.write_all(&(n as u64).to_le_bytes())?;
+        w.write_all(&(subsets.len() as u64).to_le_bytes())?;
+        for s in subsets {
+            w.write_all(&(s.len() as u32).to_le_bytes())?;
+            for &i in s {
+                if i >= n {
+                    return Err(Error::Invalid(format!("dataset item {i} out of range {n}")));
+                }
+                w.write_all(&(i as u32).to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read a training set; returns `(ground_set_size, subsets)`.
+pub fn read_dataset(path: &Path) -> Result<(usize, Vec<Vec<usize>>)> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != DATASET_MAGIC {
+        return Err(Error::Parse(format!("{}: not a KDS1 dataset file", path.display())));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let count = read_u64(&mut r)? as usize;
+    let mut subsets = Vec::with_capacity(count);
+    for _ in 0..count {
+        let k = read_u32(&mut r)? as usize;
+        let mut s = Vec::with_capacity(k);
+        for _ in 0..k {
+            let idx = read_u32(&mut r)? as usize;
+            if idx >= n {
+                return Err(Error::Parse(format!("dataset item {idx} out of range {n}")));
+            }
+            s.push(idx);
+        }
+        subsets.push(s);
+    }
+    Ok((n, subsets))
+}
+
+/// Write a simple CSV: header row + f64 rows. Used by the figure harness.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    let tmp = tmp_path(path);
+    {
+        let f = std::fs::File::create(&tmp)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        for row in rows {
+            let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+            writeln!(w, "{}", line.join(","))?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut tmp = path.to_path_buf();
+    let name = format!(
+        ".{}.tmp-{}",
+        path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        std::process::id()
+    );
+    tmp.set_file_name(name);
+    tmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("krondpp-matio-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let dir = tmpdir();
+        let path = dir.join("m.kdm");
+        let m = Matrix::from_fn(7, 5, |i, j| (i * 5 + j) as f64 * 0.5 - 3.0);
+        write_matrix(&path, &m).unwrap();
+        let back = read_matrix(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let dir = tmpdir();
+        let path = dir.join("d.kds");
+        let subsets = vec![vec![0, 3, 4], vec![], vec![9]];
+        write_dataset(&path, 10, &subsets).unwrap();
+        let (n, back) = read_dataset(&path).unwrap();
+        assert_eq!(n, 10);
+        assert_eq!(back, subsets);
+    }
+
+    #[test]
+    fn dataset_rejects_out_of_range() {
+        let dir = tmpdir();
+        let path = dir.join("bad.kds");
+        assert!(write_dataset(&path, 3, &[vec![5]]).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = tmpdir();
+        let path = dir.join("x.kdm");
+        std::fs::write(&path, b"NOPE and more").unwrap();
+        assert!(read_matrix(&path).is_err());
+        assert!(read_dataset(&path).is_err());
+    }
+
+    #[test]
+    fn csv_writes_expected_text() {
+        let dir = tmpdir();
+        let path = dir.join("r.csv");
+        write_csv(&path, &["iter", "nll"], &[vec![1.0, -10.5], vec![2.0, -9.0]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iter,nll\n1,-10.5\n2,-9\n"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Serialization substrate: JSON (artifact manifests, configs, results)
+//! and binary matrix/dataset IO.
+
+pub mod json;
+pub mod matio;
+
+pub use json::Json;

@@ -1,0 +1,212 @@
+//! Property-based testing harness (proptest is not available offline).
+//!
+//! [`check`] runs a property against `cases` randomized inputs drawn from a
+//! generator; on failure it performs greedy shrinking via the generator's
+//! `shrink` hook and reports the minimal failing input. Deterministic per
+//! seed, with the seed printed on failure so a run is reproducible with
+//! `KRONDPP_PROP_SEED`.
+
+use crate::rng::Rng;
+
+/// A value generator with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    /// Draw a random value.
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simplifications of a failing value (smaller-first).
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run a property. Panics (test failure) with the minimal failing case.
+pub fn check<G: Gen>(name: &str, gen: &G, cases: usize, prop: impl Fn(&G::Value) -> bool) {
+    let seed = std::env::var("KRONDPP_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xD1CE5EED_u64);
+    let mut rng = Rng::new(seed ^ fxhash(name));
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(gen, value, &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}); minimal failing input: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
+    // Greedy descent, bounded to avoid pathological generators.
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generator for usize in `[lo, hi]`, shrinking toward `lo`.
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.int_range(self.lo, self.hi)
+    }
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*value - self.lo) / 2);
+            out.push(value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator pairing two sub-generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Generator for symmetric PD matrices of a size drawn from `[nlo, nhi]`.
+pub struct SpdGen {
+    pub nlo: usize,
+    pub nhi: usize,
+    /// Diagonal boost, controls conditioning.
+    pub ridge: f64,
+}
+
+impl Gen for SpdGen {
+    type Value = crate::linalg::Matrix;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.int_range(self.nlo, self.nhi);
+        let x = rng.normal_matrix(n, n);
+        let mut g = crate::linalg::matmul::matmul_nt(&x, &x).expect("square");
+        g.scale_mut(1.0 / n as f64);
+        g.add_diag_mut(self.ridge);
+        g
+    }
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        // Shrink by taking leading principal submatrices (stay PD).
+        let n = value.rows();
+        let mut out = Vec::new();
+        if n > self.nlo {
+            for target in [self.nlo, n / 2, n - 1] {
+                if target >= self.nlo && target < n {
+                    let idx: Vec<usize> = (0..target).collect();
+                    out.push(value.principal_submatrix(&idx));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Generator for random subsets of `{0..n}` with size in `[klo, khi]`.
+pub struct SubsetGen {
+    pub n: usize,
+    pub klo: usize,
+    pub khi: usize,
+}
+
+impl Gen for SubsetGen {
+    type Value = Vec<usize>;
+    fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+        let k = rng.int_range(self.klo, self.khi.min(self.n));
+        rng.subset(self.n, k)
+    }
+    fn shrink(&self, value: &Vec<usize>) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if value.len() > self.klo {
+            out.push(value[..value.len() - 1].to_vec());
+            out.push(value[1..].to_vec());
+            out.push(value[..self.klo.max(1)].to_vec());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("usize in range", &UsizeGen { lo: 3, hi: 10 }, 100, |&v| (3..=10).contains(&v));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal failing input: 6")]
+    fn failing_property_shrinks_to_boundary() {
+        // Fails for v >= 6; shrinking should land exactly on 6.
+        check("shrinks", &UsizeGen { lo: 0, hi: 100 }, 200, |&v| v < 6);
+    }
+
+    #[test]
+    fn spd_gen_produces_pd_matrices() {
+        check("spd gen PD", &SpdGen { nlo: 2, nhi: 8, ridge: 0.1 }, 20, |m| {
+            crate::linalg::cholesky::is_pd(m)
+        });
+    }
+
+    #[test]
+    fn subset_gen_in_range() {
+        let g = SubsetGen { n: 12, klo: 1, khi: 5 };
+        check("subset gen", &g, 50, |s| {
+            !s.is_empty()
+                && s.len() <= 5
+                && s.iter().all(|&i| i < 12)
+                && s.windows(2).all(|w| w[0] < w[1])
+        });
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = PairGen(UsizeGen { lo: 0, hi: 10 }, UsizeGen { lo: 0, hi: 10 });
+        let shrunk = g.shrink(&(5, 7));
+        assert!(shrunk.iter().any(|&(a, b)| a < 5 && b == 7));
+        assert!(shrunk.iter().any(|&(a, b)| a == 5 && b < 7));
+    }
+}

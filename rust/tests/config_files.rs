@@ -1,0 +1,38 @@
+//! The checked-in experiment configs under `configs/` must stay parseable
+//! by the config system (they are the documented entry points for the
+//! paper-scale runs).
+
+use krondpp::config::{LearnConfig, ServiceConfig};
+use std::path::Path;
+
+fn configs_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("configs")
+}
+
+#[test]
+fn learn_configs_parse() {
+    for name in ["fig1a.json", "table2_paper.json", "stochastic_large.json"] {
+        let path = configs_dir().join(name);
+        let cfg = LearnConfig::load(&path)
+            .unwrap_or_else(|e| panic!("{name} failed to parse: {e}"));
+        assert!(cfg.n() > 0, "{name}: empty ground set");
+        assert!(cfg.step_size > 0.0);
+    }
+}
+
+#[test]
+fn paper_scale_dimensions_recorded() {
+    let cfg = LearnConfig::load(&configs_dir().join("table2_paper.json")).unwrap();
+    assert_eq!((cfg.n1, cfg.n2), (100, 100), "Table 2 is defined at N1=N2=100");
+    let cfg = LearnConfig::load(&configs_dir().join("stochastic_large.json")).unwrap();
+    assert_eq!(cfg.n(), 22_500, "Fig 1c scale");
+    assert!(cfg.minibatch >= 1);
+}
+
+#[test]
+fn service_config_parses() {
+    let cfg = ServiceConfig::load(&configs_dir().join("service.json")).unwrap();
+    assert_eq!(cfg.max_batch, 32);
+    assert!(cfg.workers >= 1);
+    assert_eq!(cfg.queue_capacity, 1024);
+}

@@ -1,0 +1,179 @@
+//! Integration: AOT-compiled HLO artifacts vs the pure-Rust implementations
+//! of the same math. This is the cross-layer correctness contract — the
+//! JAX/Pallas kernels (already validated against `ref.py` by pytest) must
+//! agree with the Rust `linalg::kron` contractions to f64 precision once
+//! round-tripped through PJRT.
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) otherwise
+//! so plain `cargo test` still passes in a fresh checkout.
+
+use krondpp::learn::krk::Contractions;
+use krondpp::linalg::{kron, matmul, Matrix};
+use krondpp::rng::Rng;
+use krondpp::runtime::{Engine, HloContractions};
+
+fn engine_or_skip() -> Option<Engine> {
+    match Engine::load_default() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime parity tests: {err}");
+            None
+        }
+    }
+}
+
+fn rnd(n: usize, m: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    rng.normal_matrix(n, m)
+}
+
+#[test]
+fn krk_contractions_artifact_matches_rust() {
+    let Some(engine) = engine_or_skip() else { return };
+    for &(n1, n2) in &[(8usize, 8usize), (16, 16)] {
+        let name = format!("krk_contractions_{n1}x{n2}");
+        if !engine.has(&name) {
+            continue;
+        }
+        let theta = rnd(n1 * n2, n1 * n2, 1);
+        let l1 = rnd(n1, n1, 2);
+        let l2 = rnd(n2, n2, 3);
+        let out = engine.execute_matrices(&name, &[&theta, &l1, &l2]).unwrap();
+        assert_eq!(out.len(), 2);
+        let a1_rust = kron::block_trace(&theta, &l2, n1, n2).unwrap();
+        let a2_rust = kron::weighted_block_sum(&theta, &l1, n1, n2).unwrap();
+        assert!(
+            out[0].rel_diff(&a1_rust) < 1e-11,
+            "A1 mismatch at {n1}x{n2}: {}",
+            out[0].rel_diff(&a1_rust)
+        );
+        assert!(
+            out[1].rel_diff(&a2_rust) < 1e-11,
+            "A2 mismatch at {n1}x{n2}: {}",
+            out[1].rel_diff(&a2_rust)
+        );
+    }
+}
+
+#[test]
+fn krk_term_artifacts_match_rust_sandwiches() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (n1, n2) = (8usize, 8usize);
+    if !engine.has("krk_l1_term_8x8") {
+        return;
+    }
+    let theta = rnd(n1 * n2, n1 * n2, 4);
+    let l1 = rnd(n1, n1, 5);
+    let l2 = rnd(n2, n2, 6);
+    let t1 = engine.execute_matrices("krk_l1_term_8x8", &[&theta, &l1, &l2]).unwrap();
+    let a1 = kron::block_trace(&theta, &l2, n1, n2).unwrap();
+    let want1 = matmul::sandwich(&l1, &a1, &l1).unwrap();
+    assert!(t1[0].rel_diff(&want1) < 1e-11);
+
+    let t2 = engine.execute_matrices("krk_l2_term_8x8", &[&theta, &l1, &l2]).unwrap();
+    let a2 = kron::weighted_block_sum(&theta, &l1, n1, n2).unwrap();
+    let want2 = matmul::sandwich(&l2, &a2, &l2).unwrap();
+    assert!(t2[0].rel_diff(&want2) < 1e-11);
+}
+
+#[test]
+fn gram_artifact_matches_rust() {
+    let Some(engine) = engine_or_skip() else { return };
+    if !engine.has("gram_256x64") {
+        return;
+    }
+    let x = rnd(256, 64, 7);
+    let out = engine.execute_matrices("gram_256x64", &[&x]).unwrap();
+    let want = matmul::matmul_tn(&x, &x).unwrap();
+    assert!(out[0].rel_diff(&want) < 1e-11, "gram mismatch {}", out[0].rel_diff(&want));
+}
+
+#[test]
+fn picard_ldl_artifact_matches_rust() {
+    let Some(engine) = engine_or_skip() else { return };
+    if !engine.has("picard_ldl_64") {
+        return;
+    }
+    let l = rnd(64, 64, 8);
+    let delta = rnd(64, 64, 9);
+    let out = engine.execute_matrices("picard_ldl_64", &[&l, &delta]).unwrap();
+    let ldl = matmul::sandwich(&l, &delta, &l).unwrap();
+    let mut want = l.clone();
+    want += &ldl;
+    assert!(out[0].rel_diff(&want) < 1e-11);
+}
+
+#[test]
+fn kron_inv_action_matches_dense_solve() {
+    let Some(engine) = engine_or_skip() else { return };
+    if !engine.has("kron_inv_action_8x8") {
+        return;
+    }
+    let (n1, n2) = (8usize, 8usize);
+    let mut rng = Rng::new(10);
+    let l1 = {
+        let mut m = rng.paper_init_kernel(n1);
+        m.scale_mut(1.0 / n1 as f64);
+        m.add_diag_mut(0.3);
+        m
+    };
+    let l2 = {
+        let mut m = rng.paper_init_kernel(n2);
+        m.scale_mut(1.0 / n2 as f64);
+        m.add_diag_mut(0.3);
+        m
+    };
+    let e1 = krondpp::linalg::SymEigen::new(&l1).unwrap();
+    let e2 = krondpp::linalg::SymEigen::new(&l2).unwrap();
+    let rhs: Vec<f64> = (0..n1 * n2).map(|i| (i as f64 * 0.37).sin()).collect();
+    let out = engine
+        .execute(
+            "kron_inv_action_8x8",
+            &[
+                e1.vectors.as_slice(),
+                e2.vectors.as_slice(),
+                &e1.values,
+                &e2.values,
+                &rhs,
+            ],
+        )
+        .unwrap();
+    // Dense check: (I + L1⊗L2)^{-1} rhs.
+    let mut dense = kron::kron(&l1, &l2);
+    dense.add_diag_mut(1.0);
+    let want = krondpp::linalg::Cholesky::factor(&dense).unwrap().solve_vec(&rhs).unwrap();
+    for (p, q) in out[0].iter().zip(&want) {
+        assert!((p - q).abs() < 1e-9, "{p} vs {q}");
+    }
+}
+
+#[test]
+fn hlo_contractions_backend_drop_in() {
+    // The HLO backend must be usable inside KrkPicard and agree with CPU.
+    let Some(engine) = engine_or_skip() else { return };
+    let backend = HloContractions::new(engine);
+    if !backend.supports(8, 8) {
+        return;
+    }
+    let theta = rnd(64, 64, 11);
+    let l2 = rnd(8, 8, 12);
+    let w = rnd(8, 8, 13);
+    let a1 = backend.block_trace(&theta, &l2, 8, 8).unwrap();
+    let a1_cpu = kron::block_trace(&theta, &l2, 8, 8).unwrap();
+    assert!(a1.rel_diff(&a1_cpu) < 1e-11);
+    let a2 = backend.weighted_block_sum(&theta, &w, 8, 8).unwrap();
+    let a2_cpu = kron::weighted_block_sum(&theta, &w, 8, 8).unwrap();
+    assert!(a2.rel_diff(&a2_cpu) < 1e-11);
+}
+
+#[test]
+fn engine_validates_shapes() {
+    let Some(engine) = engine_or_skip() else { return };
+    if !engine.has("gram_256x64") {
+        return;
+    }
+    let wrong = rnd(4, 4, 14);
+    let err = engine.execute_matrices("gram_256x64", &[&wrong]).unwrap_err();
+    assert!(err.to_string().contains("shape") || err.to_string().contains("elems"));
+    assert!(engine.execute("no_such_artifact", &[]).is_err());
+}
