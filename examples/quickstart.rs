@@ -31,6 +31,9 @@ fn main() -> krondpp::Result<()> {
     println!("a diverse subset: {sample:?}");
     let five = sampler.sample_k(5, &mut rng);
     println!("exactly five diverse items: {five:?}");
+    // Batched draws fan across threads; deterministic in the seed.
+    let many = sampler.sample_batch(1000, Some(5), 42);
+    println!("batched: {} five-item subsets, first = {:?}", many.len(), many[0]);
 
     // Training data: 80 subsets with sizes in [8, 40].
     let train = data::sample_training_set(&truth, 80, 8, 40, &mut rng)?;

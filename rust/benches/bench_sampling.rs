@@ -1,10 +1,16 @@
 //! §4 sampling claims: exact-sampling preprocessing is O(N³) for a dense
 //! kernel vs O(N^{3/2}) for Kron2 vs ~O(N) for Kron3; per-draw cost is
 //! O(Nk³)-ish for all. The crossover table shows who wins where.
+//!
+//! The batched-engine section compares the three per-draw regimes at
+//! N = 1024: fresh-scratch sequential draws, scratch-reuse sequential
+//! draws (1 thread), and `sample_batch` fanned across all threads —
+//! the multi-threaded row is the serving stack's hot path.
 
 use krondpp::bench_util::{black_box, section, Bencher};
 use krondpp::data;
 use krondpp::dpp::{Kernel, Sampler};
+use krondpp::linalg::matmul::available_threads;
 use krondpp::rng::Rng;
 
 fn main() {
@@ -83,6 +89,54 @@ fn main() {
         b.run("sample (unconstrained, N=1024)", || {
             black_box(sampler.sample(&mut draw_rng));
         });
+    }
+
+    section("batched engine (N=1024): sequential vs scratch-reuse vs threads");
+    {
+        let mut rng = Rng::new(99);
+        let kernel = data::paper_truth_kernel(32, 32, &mut rng);
+        let sampler = Sampler::new(&kernel).unwrap();
+        let nthreads = available_threads();
+        for &(draws, k) in &[(64usize, Some(10usize)), (64, None)] {
+            let label = match k {
+                Some(k) => format!("k={k}"),
+                None => "unconstrained".into(),
+            };
+            let t_fresh = b
+                .run(&format!("{draws} draws, fresh scratch each ({label})"), || {
+                    let mut r = Rng::new(5);
+                    for _ in 0..draws {
+                        match k {
+                            Some(k) => {
+                                black_box(sampler.sample_k(k, &mut r));
+                            }
+                            None => {
+                                black_box(sampler.sample(&mut r));
+                            }
+                        }
+                    }
+                })
+                .secs();
+            let t_seq = b
+                .run(&format!("{draws} draws, batch on 1 thread ({label})"), || {
+                    black_box(sampler.sample_batch_threads(draws, k, 7, 1));
+                })
+                .secs();
+            let t_par = b
+                .run(&format!("{draws} draws, batch on {nthreads} threads ({label})"), || {
+                    black_box(sampler.sample_batch(draws, k, 7));
+                })
+                .secs();
+            println!(
+                "  {label}: {:.0} draws/s sequential, {:.0} draws/s scratch-reuse, \
+                 {:.0} draws/s batched ({:.1}x vs sequential, {:.1}x vs scratch-reuse)",
+                draws as f64 / t_fresh,
+                draws as f64 / t_seq,
+                draws as f64 / t_par,
+                t_fresh / t_par,
+                t_seq / t_par,
+            );
+        }
     }
 
     section("MCMC baseline: cost per effective sample (burn 2N steps)");

@@ -10,16 +10,21 @@ use std::sync::Arc;
 use std::time::Instant;
 
 fn drive(svc: &Arc<DppService>, requests: usize, k: usize) -> (f64, f64, f64) {
+    drive_ks(svc, &vec![k; requests])
+}
+
+/// Drive one request per entry of `ks` (request i asks for k = ks[i]).
+fn drive_ks(svc: &Arc<DppService>, ks: &[usize]) -> (f64, f64, f64) {
     let t0 = Instant::now();
     let tickets: Vec<_> =
-        (0..requests).map(|_| svc.submit(SampleRequest { k }).unwrap()).collect();
+        ks.iter().map(|&k| svc.submit(SampleRequest { k }).unwrap()).collect();
     for t in tickets {
         t.wait().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let p95 = svc.metrics().latency.quantile(0.95).as_secs_f64() * 1e3;
     let p50 = svc.metrics().latency.quantile(0.50).as_secs_f64() * 1e3;
-    (requests as f64 / wall, p50, p95)
+    (ks.len() as f64 / wall, p50, p95)
 }
 
 fn main() {
@@ -55,6 +60,28 @@ fn main() {
         let (rps, p50, p95) = drive(&svc, requests, 10);
         println!("{max_batch:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
         drop(svc); // Drop drains + joins
+    }
+
+    section("same-k coalescing: uniform vs mixed k (4 workers, max_batch=32)");
+    println!("{:<14} {:>12} {:>10} {:>10}", "workload", "req/s", "p50 ms", "p95 ms");
+    {
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+        };
+        // Uniform k: every batch coalesces into one sample_k_many group.
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let (rps, p50, p95) = drive(&svc, requests, 10);
+        println!("{:<14} {rps:>12.0} {p50:>10.3} {p95:>10.3}", "uniform k=10");
+        drop(svc);
+        // Mixed k: groups shrink, each batch pays several phase-1 setups.
+        let ks: Vec<usize> = (0..requests).map(|i| 5 + (i % 4) * 5).collect();
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let (rps, p50, p95) = drive_ks(&svc, &ks);
+        println!("{:<14} {rps:>12.0} {p50:>10.3} {p95:>10.3}", "mixed k 5-20");
+        drop(svc);
     }
 
     section("latency vs requested k (4 workers)");

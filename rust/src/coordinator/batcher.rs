@@ -88,6 +88,25 @@ impl<T> BatchQueue<T> {
     }
 }
 
+/// Group a dispatched batch by an integer key, preserving arrival (FIFO)
+/// order within each group; groups come out in ascending key order.
+///
+/// The server uses this to coalesce same-`k` sampling jobs of one batch so
+/// the batched engine ([`crate::dpp::Sampler::sample_k_many`]) shares the
+/// per-`k` phase-1 setup across the whole group instead of looping single
+/// draws.
+pub fn coalesce_by_key<T>(
+    items: Vec<T>,
+    key: impl Fn(&T) -> usize,
+) -> Vec<(usize, Vec<T>)> {
+    let mut groups: std::collections::BTreeMap<usize, Vec<T>> =
+        std::collections::BTreeMap::new();
+    for item in items {
+        groups.entry(key(&item)).or_default().push(item);
+    }
+    groups.into_iter().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +192,23 @@ mod tests {
             // FIFO over the whole run → seen is exactly 0..next_id in order.
             seen == (0..next_id).collect::<Vec<_>>()
         });
+    }
+
+    #[test]
+    fn coalesce_groups_by_key_fifo_within_group() {
+        let items = vec![(3usize, 'a'), (1, 'b'), (3, 'c'), (2, 'd'), (1, 'e')];
+        let groups = coalesce_by_key(items, |&(k, _)| k);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0, 1);
+        assert_eq!(groups[0].1, vec![(1, 'b'), (1, 'e')]);
+        assert_eq!(groups[1].0, 2);
+        assert_eq!(groups[1].1, vec![(2, 'd')]);
+        assert_eq!(groups[2].0, 3);
+        assert_eq!(groups[2].1, vec![(3, 'a'), (3, 'c')]);
+        // No loss, no duplication.
+        let total: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        assert_eq!(total, 5);
+        assert!(coalesce_by_key(Vec::<(usize, char)>::new(), |&(k, _)| k).is_empty());
     }
 
     // Property: ready() is monotone in time — once ready, stays ready.

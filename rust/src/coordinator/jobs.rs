@@ -1,11 +1,17 @@
-//! Learning jobs: run a [`crate::learn::Learner`] in the background and
-//! (optionally) hot-swap each improved kernel into a running
-//! [`super::server::DppService`] — continuous learning behind a live
-//! sampling endpoint.
+//! Background jobs around the serving core:
+//!
+//! - [`LearningJob`]: run a [`crate::learn::Learner`] in the background and
+//!   (optionally) hot-swap each improved kernel into a running
+//!   [`super::server::DppService`] — continuous learning behind a live
+//!   sampling endpoint.
+//! - [`SamplingJob`]: bulk-draw samples off the caller's thread through the
+//!   batched engine ([`crate::dpp::Sampler::sample_batch`]) instead of
+//!   looping single draws — offline sample caches, evaluation sweeps,
+//!   cache warming.
 
 use crate::coordinator::server::DppService;
-use crate::dpp::likelihood;
-use crate::error::Result;
+use crate::dpp::{likelihood, Kernel, Sampler};
+use crate::error::{Error, Result};
 use crate::learn::traits::{IterRecord, Learner, TrainingSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -102,6 +108,72 @@ impl LearningJob {
     }
 }
 
+/// A background bulk-sampling job: eigendecomposes once, then draws through
+/// the batched multi-threaded engine in cancellable chunks. The draw-stream
+/// layout is chunking-invariant, so a completed job returns exactly
+/// `Sampler::sample_batch(draws, k, seed)` and a cancelled job returns an
+/// exact prefix of it.
+pub struct SamplingJob {
+    handle: JoinHandle<Vec<Vec<usize>>>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl SamplingJob {
+    /// Chunk size between cancellation checks. Each chunk pays the batch
+    /// fan-out setup (thread spawn + per-thread scratch + shared k-DPP
+    /// table), so it is sized to keep that overhead well under a percent
+    /// of the chunk's drawing time while still cancelling promptly.
+    const CHUNK: usize = 1024;
+
+    /// Spawn: draws `draws` samples from `kernel` (`k = None` for
+    /// unconstrained DPP draws, `Some(κ)` for k-DPPs). The
+    /// eigendecomposition runs on the caller's thread so invalid kernels
+    /// fail fast.
+    pub fn spawn(
+        kernel: &Kernel,
+        draws: usize,
+        k: Option<usize>,
+        seed: u64,
+    ) -> Result<SamplingJob> {
+        let sampler = Sampler::new(kernel)?;
+        if let Some(kk) = k {
+            if kk > sampler.n() {
+                return Err(Error::Invalid(format!(
+                    "sampling job: k={kk} > ground set {}",
+                    sampler.n()
+                )));
+            }
+        }
+        let cancel = Arc::new(AtomicBool::new(false));
+        let cancel2 = Arc::clone(&cancel);
+        let handle = std::thread::Builder::new()
+            .name("krondpp-sample".into())
+            .spawn(move || {
+                let threads = crate::linalg::matmul::available_threads();
+                let mut out: Vec<Vec<usize>> = Vec::with_capacity(draws);
+                while out.len() < draws && !cancel2.load(Ordering::SeqCst) {
+                    let m = Self::CHUNK.min(draws - out.len());
+                    out.extend(sampler.sample_batch_offset(out.len(), m, k, seed, threads));
+                }
+                out
+            })
+            .expect("spawn sampling job");
+        Ok(SamplingJob { handle, cancel })
+    }
+
+    /// Request cancellation (takes effect at the next chunk boundary).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for completion, returning the draws.
+    pub fn join(self) -> Result<Vec<Vec<usize>>> {
+        self.handle
+            .join()
+            .map_err(|_| Error::Service("sampling job panicked".into()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +226,33 @@ mod tests {
         // Service still serves after swaps.
         let y = svc.sample(3).unwrap();
         assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn sampling_job_matches_direct_batch() {
+        let (_, _, truth) = setup();
+        let job = SamplingJob::spawn(&truth, 150, Some(3), 77).unwrap();
+        let got = job.join().unwrap();
+        let want = Sampler::new(&truth).unwrap().sample_batch(150, Some(3), 77);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sampling_job_rejects_oversized_k() {
+        let (_, _, truth) = setup();
+        assert!(SamplingJob::spawn(&truth, 5, Some(1000), 1).is_err());
+    }
+
+    #[test]
+    fn cancelled_sampling_job_returns_prefix() {
+        let (_, _, truth) = setup();
+        let job = SamplingJob::spawn(&truth, 100_000, None, 3).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        job.cancel();
+        let got = job.join().unwrap();
+        assert!(got.len() % SamplingJob::CHUNK == 0 || got.len() == 100_000);
+        let want = Sampler::new(&truth).unwrap().sample_batch(got.len(), None, 3);
+        assert_eq!(got, want);
     }
 
     #[test]

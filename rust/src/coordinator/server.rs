@@ -14,10 +14,10 @@
 //! it, `submit` fails fast instead of growing latency unboundedly.
 
 use crate::config::ServiceConfig;
-use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending};
+use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pending};
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::coordinator::router::WorkerLoad;
-use crate::dpp::{Kernel, Sampler};
+use crate::dpp::{Kernel, SampleScratch, Sampler};
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -263,26 +263,52 @@ fn worker_loop(
     loads: WorkerLoad,
     rng: &mut Rng,
 ) {
+    // One scratch per worker: every draw this worker ever makes reuses the
+    // same buffers (the batched engine's zero-allocation hot path).
+    let mut scratch = SampleScratch::new();
     while let Ok(jobs) = rx.recv() {
         let sampler = Arc::clone(&shared.sampler.read().unwrap());
-        for job in jobs {
-            let result = if job.req.k == 0 {
-                Ok(sampler.sample(rng))
-            } else if job.req.k <= sampler.n() {
-                Ok(sampler.sample_k(job.req.k, rng))
+        // Coalesce same-k jobs so one phase-1 setup serves the whole group
+        // instead of looping single draws.
+        for (k, group) in coalesce_by_key(jobs, |j| j.req.k) {
+            if k > sampler.n() {
+                for job in group {
+                    finish(
+                        &shared,
+                        job,
+                        Err(Error::Invalid(format!(
+                            "requested k={} > ground set {}",
+                            k,
+                            sampler.n()
+                        ))),
+                    );
+                }
+                continue;
+            }
+            // Respond per draw (not per group) so coalescing never inflates
+            // head-of-group latency beyond a single draw.
+            if k == 0 {
+                for job in group {
+                    let y = sampler.sample_with_scratch(rng, &mut scratch);
+                    finish(&shared, job, Ok(y));
+                }
             } else {
-                Err(Error::Invalid(format!(
-                    "requested k={} > ground set {}",
-                    job.req.k,
-                    sampler.n()
-                )))
-            };
-            shared.metrics.latency.record(job.accepted.elapsed());
-            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
-            let _ = job.respond.send(result);
+                let n = group.len();
+                let mut jobs = group.into_iter();
+                sampler.sample_k_each(k, n, rng, &mut scratch, |y| {
+                    let job = jobs.next().expect("one job per draw");
+                    finish(&shared, job, Ok(y));
+                });
+            }
         }
         loads.end(w);
     }
+}
+
+fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
+    shared.metrics.latency.record(job.accepted.elapsed());
+    shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    let _ = job.respond.send(result);
 }
 
 #[cfg(test)]
@@ -338,6 +364,27 @@ mod tests {
             svc.metrics().accepted.load(Ordering::Relaxed)
         );
         assert!(svc.metrics().batches.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn coalesced_mixed_k_batch_serves_each_request() {
+        // A burst with repeated k values coalesces into grouped draws; every
+        // request must still get its own correctly-sized response.
+        let mut cfg = small_cfg();
+        cfg.max_batch = 16;
+        cfg.batch_window_us = 5_000;
+        let svc = DppService::start(&test_kernel(3, 4, 6), &cfg, 13).unwrap();
+        let ks = [0usize, 3, 3, 5, 0, 3, 5, 1];
+        let tickets: Vec<Ticket> =
+            ks.iter().map(|&k| svc.submit(SampleRequest { k }).unwrap()).collect();
+        for (k, t) in ks.iter().zip(tickets) {
+            let y = t.wait().unwrap();
+            if *k > 0 {
+                assert_eq!(y.len(), *k);
+            }
+            assert!(y.iter().all(|&i| i < 12));
+        }
+        svc.shutdown();
     }
 
     #[test]

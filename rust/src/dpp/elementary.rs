@@ -71,39 +71,50 @@ impl ElementaryTable {
         }
         (lambda_n.ln() + num - den).exp().clamp(0.0, 1.0)
     }
+
+    /// Draw one k-subset of eigenvector indices (`P(J) ∝ Π_{i∈J} λ_i`,
+    /// `|J| = k`) from this prebuilt table. `lambda` must be the spectrum
+    /// the table was built from. The batched sampling engine shares one
+    /// table across many draws of the same `k`, amortizing the `O(Nk)` DP.
+    pub fn sample(&self, lambda: &[f64], rng: &mut crate::rng::Rng) -> Vec<usize> {
+        let n = lambda.len();
+        let k = self.k;
+        assert!(k <= n, "k-DPP: k > N");
+        let mut j = k;
+        let mut out = Vec::with_capacity(k);
+        for i in (1..=n).rev() {
+            if j == 0 {
+                break;
+            }
+            if i == j {
+                // Must take all remaining.
+                for t in (0..i).rev() {
+                    out.push(t);
+                }
+                break;
+            }
+            let p = self.select_prob(lambda[i - 1], i, j);
+            if rng.bernoulli(p) {
+                out.push(i - 1);
+                j -= 1;
+            }
+        }
+        out.reverse();
+        out
+    }
 }
 
 /// Sample a k-subset of eigenvector indices with `P(J) ∝ Π_{i∈J} λ_i`
-/// constrained to `|J| = k` (phase 1 of k-DPP sampling).
+/// constrained to `|J| = k` (phase 1 of k-DPP sampling). Builds the DP
+/// table for a single draw; use [`ElementaryTable::sample`] to share the
+/// table across draws.
 pub fn sample_k_eigenvectors(
     lambda: &[f64],
     k: usize,
     rng: &mut crate::rng::Rng,
 ) -> Vec<usize> {
-    let n = lambda.len();
-    assert!(k <= n, "k-DPP: k > N");
-    let table = ElementaryTable::new(lambda, k);
-    let mut j = k;
-    let mut out = Vec::with_capacity(k);
-    for i in (1..=n).rev() {
-        if j == 0 {
-            break;
-        }
-        if i == j {
-            // Must take all remaining.
-            for t in (0..i).rev() {
-                out.push(t);
-            }
-            break;
-        }
-        let p = table.select_prob(lambda[i - 1], i, j);
-        if rng.bernoulli(p) {
-            out.push(i - 1);
-            j -= 1;
-        }
-    }
-    out.reverse();
-    out
+    assert!(k <= lambda.len(), "k-DPP: k > N");
+    ElementaryTable::new(lambda, k).sample(lambda, rng)
 }
 
 #[cfg(test)]
@@ -168,6 +179,18 @@ mod tests {
             }
         }
         assert!(hits01 as f64 / trials as f64 > 0.95, "{hits01}/{trials}");
+    }
+
+    #[test]
+    fn shared_table_matches_per_draw_tables() {
+        // One prebuilt table must reproduce the exact per-draw sequence.
+        let lam: Vec<f64> = (1..=15).map(|i| (i as f64 * 0.37).sin().abs() + 0.1).collect();
+        let table = ElementaryTable::new(&lam, 4);
+        let mut ra = Rng::new(21);
+        let mut rb = Rng::new(21);
+        for _ in 0..30 {
+            assert_eq!(table.sample(&lam, &mut ra), sample_k_eigenvectors(&lam, 4, &mut rb));
+        }
     }
 
     #[test]

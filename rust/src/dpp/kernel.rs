@@ -215,28 +215,61 @@ pub enum EigenVectors {
 }
 
 impl EigenVectors {
+    /// Ground-set size `N` (the length of each eigenvector).
+    pub fn dim(&self) -> usize {
+        match self {
+            EigenVectors::Dense(p) => p.rows(),
+            EigenVectors::Kron2 { p1, p2 } => p1.rows() * p2.rows(),
+            EigenVectors::Kron3 { p1, p2, p3 } => p1.rows() * p2.rows() * p3.rows(),
+        }
+    }
+
     /// Extract eigenvector `idx` as a dense column — `O(N)` for all
     /// structures (the paper's "k eigenvectors in O(kN)" claim, §4).
     pub fn column(&self, idx: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.column_into(idx, &mut out);
+        out
+    }
+
+    /// Write eigenvector `idx` into `out` (length `N`) without allocating —
+    /// the batched sampling engine's scratch-reuse gather path.
+    pub fn column_into(&self, idx: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim());
         match self {
-            EigenVectors::Dense(p) => p.col(idx),
-            EigenVectors::Kron2 { p1, p2 } => kron::kron_column(p1, p2, p2.rows(), idx),
+            EigenVectors::Dense(p) => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = p.get(i, idx);
+                }
+            }
+            EigenVectors::Kron2 { p1, p2 } => {
+                let n2 = p2.rows();
+                let (c1, c2) = (idx / n2, idx % n2);
+                let mut t = 0usize;
+                for i in 0..p1.rows() {
+                    let a = p1.get(i, c1);
+                    for r in 0..n2 {
+                        out[t] = a * p2.get(r, c2);
+                        t += 1;
+                    }
+                }
+            }
             EigenVectors::Kron3 { p1, p2, p3 } => {
                 let n23 = p2.rows() * p3.rows();
                 let n3 = p3.rows();
                 let (c1, rest) = (idx / n23, idx % n23);
                 let (c2, c3) = (rest / n3, rest % n3);
-                let mut out = Vec::with_capacity(p1.rows() * n23);
+                let mut t = 0usize;
                 for i in 0..p1.rows() {
                     let a = p1.get(i, c1);
                     for j in 0..p2.rows() {
                         let ab = a * p2.get(j, c2);
                         for k in 0..p3.rows() {
-                            out.push(ab * p3.get(k, c3));
+                            out[t] = ab * p3.get(k, c3);
+                            t += 1;
                         }
                     }
                 }
-                out
             }
         }
     }

@@ -183,7 +183,11 @@ mod tests {
         // Burn-in.
         s.run(2000, &mut rng).unwrap();
         let mut counts = vec![0usize; 5];
-        let sweeps = 30_000;
+        // Chain samples are autocorrelated (τ ≈ tens of steps for this
+        // insert/delete chain), so the effective sample size is sweeps/2τ;
+        // 60k sweeps with a 0.06 tolerance keeps every item's margin at
+        // ≥ 4 effective standard errors (was 30k/0.05 ≈ 2.4σ — flaky).
+        let sweeps = 60_000;
         for _ in 0..sweeps {
             s.step(&mut rng).unwrap();
             for &i in s.state() {
@@ -193,7 +197,7 @@ mod tests {
         for i in 0..5 {
             let emp = counts[i] as f64 / sweeps as f64;
             let expect = marg[(i, i)];
-            assert!((emp - expect).abs() < 0.05, "item {i}: {emp} vs {expect}");
+            assert!((emp - expect).abs() < 0.06, "item {i}: {emp} vs {expect}");
         }
     }
 }

@@ -4,7 +4,9 @@
 //!   structure-exploiting spectra (§2 of the paper).
 //! - [`likelihood`]: the learning objective `φ(L)` (Eq. 3) and the `Θ`
 //!   gradient component (Eq. 4), dense and sparse.
-//! - [`sampler`]: exact sampling (Alg. 2) and k-DPP sampling.
+//! - [`sampler`]: exact sampling (Alg. 2) and k-DPP sampling — the
+//!   incremental batched engine ([`sampler::SampleScratch`],
+//!   [`Sampler::sample_batch`]).
 //! - [`elementary`]: elementary symmetric polynomials (k-DPP phase 1).
 //! - [`mcmc`]: the approximate insert/delete chain baseline (§4, ref [13]).
 
@@ -15,4 +17,4 @@ pub mod mcmc;
 pub mod sampler;
 
 pub use kernel::{EigenVectors, Kernel, KernelEigen};
-pub use sampler::Sampler;
+pub use sampler::{SampleScratch, Sampler};

@@ -1,22 +1,66 @@
-//! Exact DPP sampling (Alg. 2 of the paper, after Hough et al. [12]).
+//! Exact DPP sampling (Alg. 2 of the paper, after Hough et al. [12]) —
+//! incremental, batched engine.
 //!
 //! Phase 1 selects an elementary DPP: eigenvector `i` joins `J` with
-//! probability `λ_i/(λ_i+1)`. Phase 2 iteratively samples items with
-//! probability `(1/|V|) Σ_{v∈V} v_i²` and contracts `V` to the orthonormal
-//! basis of its subspace orthogonal to `e_i`.
+//! probability `λ_i/(λ_i+1)` (or, for k-DPPs, via elementary symmetric
+//! polynomials). Phase 2 iteratively samples items with probability
+//! `(1/|V|) Σ_{v∈V} v_i²` and contracts `V` to the orthonormal basis of
+//! its subspace orthogonal to `e_i`.
 //!
 //! The cost split is exactly the paper's §4: the eigendecomposition
 //! (`O(N³)` dense, `O(N^{3/2})` Kron2, `O(N)`-ish Kron3) happens once in
-//! [`Sampler::new`] and is reused across draws; each draw then costs
-//! `O(Nk² + k³)`-ish for the orthonormalizations (`O(Nk³)` in the paper's
-//! coarser accounting).
+//! [`Sampler::new`] and is reused across draws. Phase 2 is implemented
+//! incrementally:
+//!
+//! - the contraction is one Householder reflection in coefficient space
+//!   ([`crate::linalg::qr::contract_orthonormal_coord`]), `O(Nk)` per step
+//!   instead of the `O(Nk²)` Gram–Schmidt rebuild;
+//! - selection weights `w_i = Σ_j V[i,j]²` are maintained by a rank-1
+//!   downdate `w_i -= p_i²` (where `p` is the unit direction removed from
+//!   the span) instead of a full `O(Nk)` rescan each step, with a periodic
+//!   exact refresh to bound floating-point drift;
+//! - all per-draw buffers (`V`, weights, Householder workspace) live in a
+//!   caller-held [`SampleScratch`], so repeated draws allocate nothing
+//!   beyond their result vectors.
+//!
+//! [`Sampler::sample_batch`] fans independent draws across threads (one
+//! scratch and one deterministic RNG stream per draw), which is how the
+//! serving stack amortizes the per-kernel eigendecomposition across many
+//! requests.
 
-use crate::dpp::elementary::sample_k_eigenvectors;
+use crate::dpp::elementary::{sample_k_eigenvectors, ElementaryTable};
 use crate::dpp::kernel::{Kernel, KernelEigen};
 use crate::error::Result;
-use crate::linalg::qr::orthonormal_complement_coord;
-use crate::linalg::Matrix;
+use crate::linalg::qr::{contract_orthonormal_coord, ContractScratch};
 use crate::rng::Rng;
+
+/// Refresh the weights exactly every this many rank-1 downdates. The
+/// downdate is exact in exact arithmetic; the refresh only bounds
+/// accumulated round-off over long contraction chains.
+const WEIGHT_REFRESH_EVERY: usize = 64;
+
+/// Reusable per-draw workspace for the phase-2 contraction loop. Holding
+/// one `SampleScratch` across draws (per thread) removes every per-draw
+/// allocation except the returned subset itself.
+#[derive(Default)]
+pub struct SampleScratch {
+    /// Selected eigenvectors, column-major (`v[j*n + i]` = row `i`, col `j`).
+    v: Vec<f64>,
+    /// Selection weights `w_i = Σ_j V[i,j]²`.
+    weights: Vec<f64>,
+    /// Householder contraction buffers (includes the dropped direction).
+    contract: ContractScratch,
+    /// Phase-1 eigenvector index buffer.
+    j: Vec<usize>,
+    /// Clamped spectrum buffer (k-DPP phase 1).
+    lam: Vec<f64>,
+}
+
+impl SampleScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// A reusable exact sampler holding the kernel's eigendecomposition.
 pub struct Sampler {
@@ -44,56 +88,254 @@ impl Sampler {
 
     /// Draw one subset `Y ~ DPP(L)`.
     pub fn sample(&self, rng: &mut Rng) -> Vec<usize> {
-        // Phase 1: elementary DPP selection.
-        let mut j = Vec::new();
+        self.sample_with_scratch(rng, &mut SampleScratch::new())
+    }
+
+    /// Draw one subset of fixed size `k` (k-DPP, ref. [16]).
+    pub fn sample_k(&self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        self.sample_k_with_scratch(k, rng, &mut SampleScratch::new())
+    }
+
+    /// [`Sampler::sample`] with caller-held scratch: identical draws,
+    /// no per-draw buffer allocation.
+    pub fn sample_with_scratch(&self, rng: &mut Rng, scratch: &mut SampleScratch) -> Vec<usize> {
+        let mut j = std::mem::take(&mut scratch.j);
+        j.clear();
         for (i, &lam) in self.eigen.values.iter().enumerate() {
             let lam = lam.max(0.0); // clamp tiny negative round-off
             if rng.bernoulli(lam / (lam + 1.0)) {
                 j.push(i);
             }
         }
-        self.sample_phase2(&j, rng)
+        let y = self.sample_phase2(&j, rng, scratch);
+        scratch.j = j;
+        y
     }
 
-    /// Draw one subset of fixed size `k` (k-DPP, ref. [16]).
-    pub fn sample_k(&self, k: usize, rng: &mut Rng) -> Vec<usize> {
-        let lam: Vec<f64> = self.eigen.values.iter().map(|&l| l.max(0.0)).collect();
+    /// [`Sampler::sample_k`] with caller-held scratch.
+    pub fn sample_k_with_scratch(
+        &self,
+        k: usize,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+    ) -> Vec<usize> {
+        scratch.lam.clear();
+        scratch.lam.extend(self.eigen.values.iter().map(|&l| l.max(0.0)));
+        let lam = std::mem::take(&mut scratch.lam);
         let j = sample_k_eigenvectors(&lam, k, rng);
-        self.sample_phase2(&j, rng)
+        scratch.lam = lam;
+        self.sample_phase2(&j, rng, scratch)
     }
 
-    /// Phase 2 of Alg. 2 given selected eigenvector indices.
-    fn sample_phase2(&self, j: &[usize], rng: &mut Rng) -> Vec<usize> {
-        if j.is_empty() {
+    /// Draw `draws` k-DPP subsets sequentially from one RNG, sharing a
+    /// single elementary-symmetric-polynomial table (and the scratch)
+    /// across the whole group, delivering each draw to `each` as soon as
+    /// it completes — the coordinator's per-worker path for coalesced
+    /// same-`k` request batches (streaming responses keeps head-of-group
+    /// latency at one draw instead of the whole group).
+    pub fn sample_k_each(
+        &self,
+        k: usize,
+        draws: usize,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        mut each: impl FnMut(Vec<usize>),
+    ) {
+        assert!(k <= self.n, "k-DPP: k > N");
+        scratch.lam.clear();
+        scratch.lam.extend(self.eigen.values.iter().map(|&l| l.max(0.0)));
+        let lam = std::mem::take(&mut scratch.lam);
+        let table = ElementaryTable::new(&lam, k);
+        for _ in 0..draws {
+            let j = table.sample(&lam, rng);
+            each(self.sample_phase2(&j, rng, scratch));
+        }
+        scratch.lam = lam;
+    }
+
+    /// Collecting variant of [`Sampler::sample_k_each`].
+    pub fn sample_k_many(
+        &self,
+        k: usize,
+        draws: usize,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+    ) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(draws);
+        self.sample_k_each(k, draws, rng, scratch, |y| out.push(y));
+        out
+    }
+
+    /// Draw `draws` independent samples, fanned across
+    /// [`crate::linalg::matmul::available_threads`] worker threads.
+    /// `k = None` draws unconstrained DPP samples, `k = Some(κ)` k-DPP
+    /// samples of exactly that size.
+    ///
+    /// Draw `d` always uses RNG stream `d` derived from `seed`, so the
+    /// result is deterministic in `seed` and **independent of the thread
+    /// count** — `sample_batch` on 8 threads, on 1 thread, and
+    /// [`Sampler::sample_batch_threads`] all agree element-wise.
+    pub fn sample_batch(&self, draws: usize, k: Option<usize>, seed: u64) -> Vec<Vec<usize>> {
+        self.sample_batch_threads(draws, k, seed, crate::linalg::matmul::available_threads())
+    }
+
+    /// [`Sampler::sample_batch`] with an explicit thread count (used by the
+    /// benches and tests to compare sequential vs parallel throughput).
+    pub fn sample_batch_threads(
+        &self,
+        draws: usize,
+        k: Option<usize>,
+        seed: u64,
+        threads: usize,
+    ) -> Vec<Vec<usize>> {
+        self.sample_batch_offset(0, draws, k, seed, threads)
+    }
+
+    /// Batch draws `first .. first + draws` of the stream family defined by
+    /// `seed` (so chunked producers like the coordinator's sampling jobs
+    /// emit exact prefixes of `sample_batch(total, ..)`).
+    pub(crate) fn sample_batch_offset(
+        &self,
+        first: usize,
+        draws: usize,
+        k: Option<usize>,
+        seed: u64,
+        threads: usize,
+    ) -> Vec<Vec<usize>> {
+        if let Some(kk) = k {
+            assert!(kk <= self.n, "k-DPP: k > N");
+        }
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); draws];
+        if draws == 0 {
+            return out;
+        }
+        // k-DPP phase 1 shares one DP table across all draws and threads.
+        let shared = k.map(|kk| {
+            let lam: Vec<f64> = self.eigen.values.iter().map(|&l| l.max(0.0)).collect();
+            (ElementaryTable::new(&lam, kk), lam)
+        });
+        let run = |slots: &mut [Vec<usize>], lo: usize| {
+            let mut scratch = SampleScratch::new();
+            for (off, slot) in slots.iter_mut().enumerate() {
+                let mut rng = draw_stream(seed, first + lo + off);
+                *slot = match &shared {
+                    None => self.sample_with_scratch(&mut rng, &mut scratch),
+                    Some((table, lam)) => {
+                        let j = table.sample(lam, &mut rng);
+                        self.sample_phase2(&j, &mut rng, &mut scratch)
+                    }
+                };
+            }
+        };
+        let threads = threads.clamp(1, draws);
+        if threads <= 1 {
+            run(&mut out, 0);
+            return out;
+        }
+        let chunk = draws.div_ceil(threads);
+        std::thread::scope(|sc| {
+            let run = &run;
+            let mut rest: &mut [Vec<usize>] = &mut out;
+            let mut start = 0usize;
+            while start < draws {
+                let len = chunk.min(draws - start);
+                let (head, tail) = rest.split_at_mut(len);
+                rest = tail;
+                let lo = start;
+                sc.spawn(move || run(head, lo));
+                start += len;
+            }
+        });
+        out
+    }
+
+    /// Phase 2 of Alg. 2 given selected eigenvector indices: gather the
+    /// eigenvectors in `O(Nk)` (Kronecker column structure, §4), then per
+    /// selected item do one `O(N)` weight downdate plus one `O(Nk)`
+    /// Householder contraction — `O(Nk²)` per draw overall, vs the
+    /// `O(Nk³)`-ish full-rebuild accounting of the naive loop.
+    fn sample_phase2(&self, j: &[usize], rng: &mut Rng, s: &mut SampleScratch) -> Vec<usize> {
+        let n = self.n;
+        let mut k = j.len();
+        if k == 0 {
             return Vec::new();
         }
-        // Gather eigenvectors into V (N×k): O(Nk) thanks to the Kronecker
-        // column structure (§4's "k eigenvectors in O(kN)").
-        let mut v: Matrix = self.eigen.vectors.gather(j);
-        let mut y = Vec::with_capacity(j.len());
-        let mut weights = vec![0.0f64; self.n];
-        while v.cols() > 0 {
-            // P(item i) = (1/|V|) Σ_j V[i,j]².
-            for i in 0..self.n {
-                let row = v.row(i);
-                weights[i] = row.iter().map(|x| x * x).sum();
-            }
-            let item = rng.weighted_index(&weights);
+        s.v.clear();
+        s.v.resize(n * k, 0.0);
+        for (c, &idx) in j.iter().enumerate() {
+            self.eigen.vectors.column_into(idx, &mut s.v[c * n..(c + 1) * n]);
+        }
+        s.weights.clear();
+        s.weights.resize(n, 0.0);
+        refresh_weights(&s.v, n, k, &mut s.weights);
+        let mut y = Vec::with_capacity(k);
+        let mut since_refresh = 0usize;
+        while k > 0 {
+            // P(item i) = (1/|V|) Σ_j V[i,j]² ∝ w_i.
+            let item = rng.weighted_index(&s.weights);
             y.push(item);
             // Contract V to the orthonormal basis orthogonal to e_item.
-            v = orthonormal_complement_coord(&v, item);
+            let downdated = contract_orthonormal_coord(&mut s.v, n, k, item, &mut s.contract);
+            k -= 1;
+            if k == 0 {
+                break;
+            }
+            if downdated {
+                // Rank-1 downdate: the removed direction p carries exactly
+                // p_i² of each item's weight (V'V'ᵀ = VVᵀ − ppᵀ).
+                for (w, &p) in s.weights.iter_mut().zip(&s.contract.dropped) {
+                    *w = (*w - p * p).max(0.0);
+                }
+                s.weights[item] = 0.0;
+                since_refresh += 1;
+                if since_refresh >= WEIGHT_REFRESH_EVERY {
+                    since_refresh = 0;
+                    refresh_weights(&s.v, n, k, &mut s.weights);
+                }
+            } else {
+                // Degenerate contraction: recompute from V.
+                refresh_weights(&s.v, n, k, &mut s.weights);
+                since_refresh = 0;
+            }
         }
         y.sort_unstable();
         y
     }
 }
 
+/// Exact weights `w_i = Σ_j V[i,j]²` from the column-major basis.
+fn refresh_weights(v: &[f64], n: usize, k: usize, weights: &mut [f64]) {
+    for w in weights.iter_mut() {
+        *w = 0.0;
+    }
+    for j in 0..k {
+        let col = &v[j * n..(j + 1) * n];
+        for (w, &x) in weights.iter_mut().zip(col) {
+            *w += x * x;
+        }
+    }
+}
+
+/// Deterministic per-draw RNG: draw `d` of a batch always gets the same
+/// independent PCG stream, no matter how draws are partitioned across
+/// threads or chunks. (SplitMix64 finalizer decorrelates the seeds;
+/// distinct stream ids make the sequences independent even on collisions.)
+fn draw_stream(seed: u64, draw: usize) -> Rng {
+    let d = draw as u64;
+    let mut z = seed ^ d.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    Rng::with_stream(z, d)
+}
+
 /// Empirical inclusion frequencies over `draws` samples — used by the
 /// statistical tests to check `P(i ∈ Y) = K_ii`.
 pub fn empirical_marginals(sampler: &Sampler, draws: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut scratch = SampleScratch::new();
     let mut counts = vec![0usize; sampler.n()];
     for _ in 0..draws {
-        for i in sampler.sample(rng) {
+        for i in sampler.sample_with_scratch(rng, &mut scratch) {
             counts[i] += 1;
         }
     }
@@ -103,6 +345,7 @@ pub fn empirical_marginals(sampler: &Sampler, draws: usize, rng: &mut Rng) -> Ve
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::rng::Rng;
 
     fn spd(n: usize, seed: u64) -> Matrix {
@@ -225,5 +468,118 @@ mod tests {
         let mut rng = Rng::new(29);
         let sizes: usize = (0..200).map(|_| s.sample(&mut rng).len()).sum();
         assert_eq!(sizes, 0);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // Reusing one scratch across draws must not change the draws.
+        let kernel = Kernel::Kron2(spd(4, 31), spd(4, 32));
+        let s = Sampler::new(&kernel).unwrap();
+        let mut ra = Rng::new(41);
+        let mut rb = Rng::new(41);
+        let mut scratch = SampleScratch::new();
+        for i in 0..60 {
+            let reused = if i % 2 == 0 {
+                s.sample_with_scratch(&mut ra, &mut scratch)
+            } else {
+                s.sample_k_with_scratch(3, &mut ra, &mut scratch)
+            };
+            let fresh = if i % 2 == 0 {
+                s.sample(&mut rb)
+            } else {
+                s.sample_k(3, &mut rb)
+            };
+            assert_eq!(reused, fresh, "draw {i} diverged");
+        }
+    }
+
+    #[test]
+    fn sample_k_many_matches_individual_draws() {
+        let kernel = Kernel::Kron2(spd(3, 33), spd(4, 34));
+        let s = Sampler::new(&kernel).unwrap();
+        let mut ra = Rng::new(43);
+        let mut rb = Rng::new(43);
+        let mut sa = SampleScratch::new();
+        let mut sb = SampleScratch::new();
+        let many = s.sample_k_many(4, 25, &mut ra, &mut sa);
+        for (d, y) in many.iter().enumerate() {
+            assert_eq!(y, &s.sample_k_with_scratch(4, &mut rb, &mut sb), "draw {d}");
+        }
+    }
+
+    #[test]
+    fn batch_deterministic_and_thread_invariant() {
+        let kernel = Kernel::Kron2(spd(4, 35), spd(3, 36));
+        let s = Sampler::new(&kernel).unwrap();
+        for k in [None, Some(3usize)] {
+            let a = s.sample_batch_threads(32, k, 99, 1);
+            let b = s.sample_batch_threads(32, k, 99, 4);
+            let c = s.sample_batch(32, k, 99);
+            assert_eq!(a, b, "thread count changed draws (k={k:?})");
+            assert_eq!(a, c, "default fan-out changed draws (k={k:?})");
+            let d = s.sample_batch(32, k, 100);
+            assert_ne!(a, d, "seed ignored (k={k:?})");
+        }
+    }
+
+    #[test]
+    fn batch_offset_is_a_prefix_slice() {
+        let kernel = Kernel::Kron2(spd(3, 37), spd(3, 38));
+        let s = Sampler::new(&kernel).unwrap();
+        let whole = s.sample_batch(20, Some(2), 7);
+        let head = s.sample_batch_offset(0, 8, Some(2), 7, 2);
+        let tail = s.sample_batch_offset(8, 12, Some(2), 7, 3);
+        assert_eq!(&whole[..8], &head[..]);
+        assert_eq!(&whole[8..], &tail[..]);
+    }
+
+    #[test]
+    fn batch_marginals_match_k_diagonal() {
+        // The parallel batch path must sample the same distribution.
+        let kernel = Kernel::Kron2(spd(3, 39), spd(4, 40));
+        let s = Sampler::new(&kernel).unwrap();
+        let draws = 6000;
+        let batch = s.sample_batch(draws, None, 2024);
+        let mut counts = vec![0usize; s.n()];
+        for y in &batch {
+            for &i in y {
+                counts[i] += 1;
+            }
+        }
+        let marg = kernel.marginal_kernel().unwrap();
+        for i in 0..s.n() {
+            let emp = counts[i] as f64 / draws as f64;
+            let expect = marg[(i, i)];
+            let se = (expect * (1.0 - expect) / draws as f64).sqrt();
+            assert!(
+                (emp - expect).abs() < 5.0 * se + 0.01,
+                "item {i}: {emp} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_k_dpp_sizes_exact() {
+        let kernel = Kernel::Kron2(spd(3, 44), spd(4, 45));
+        let s = Sampler::new(&kernel).unwrap();
+        for y in s.sample_batch(64, Some(5), 5) {
+            assert_eq!(y.len(), 5);
+            assert!(y.windows(2).all(|w| w[0] < w[1]));
+            assert!(y.iter().all(|&i| i < 12));
+        }
+    }
+
+    #[test]
+    fn long_contraction_chain_stays_consistent() {
+        // k = N forces the maximum-length downdate chain (plus refreshes):
+        // a k-DPP with k = N must return the full ground set every time.
+        let kernel = Kernel::Kron2(spd(4, 46), spd(4, 47));
+        let s = Sampler::new(&kernel).unwrap();
+        let mut rng = Rng::new(48);
+        let mut scratch = SampleScratch::new();
+        for _ in 0..5 {
+            let y = s.sample_k_with_scratch(16, &mut rng, &mut scratch);
+            assert_eq!(y, (0..16).collect::<Vec<_>>());
+        }
     }
 }

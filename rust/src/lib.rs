@@ -5,6 +5,7 @@
 //! `L = L₁ ⊗ L₂ (⊗ L₃)`, with
 //!
 //! - exact sampling in `O(N^{3/2} + Nk³)` (m=2) / `O(Nk³)` (m=3),
+//!   served by an incremental, batched, multi-threaded engine,
 //! - KRK-Picard kernel learning in `O(nκ³ + N²)` batch /
 //!   `O(Nκ² + N^{3/2})` stochastic time (Thm. 3.3),
 //! - the Picard, Joint-Picard and EM baselines the paper compares against,
@@ -13,7 +14,41 @@
 //! - a PJRT runtime that executes JAX/Pallas-authored, AOT-lowered HLO
 //!   artifacts for the contraction hot paths.
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! ## Paper → module map
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | §2, Prop. 2.1–2.4: Kronecker algebra, `Tr₁`/`Tr₂` (Def. 2.3) | [`linalg::kron`] |
+//! | Cor. 2.2: factored eigendecomposition of `L₁ ⊗ L₂ (⊗ L₃)` | [`dpp::kernel`] |
+//! | Eq. 3 (objective `φ`), Eq. 4 (gradient `Θ − (L+I)⁻¹`) | [`dpp::likelihood`] |
+//! | Alg. 1 / Prop. 3.1 / Thm. 3.2: KRK-Picard block ascent | [`learn::krk`] |
+//! | §3.1.1: step-size-`a` generalization, m = 3 multiblock | [`learn::krk3`] |
+//! | Thm. 3.3 (2nd half): stochastic/minibatch KRK updates | [`learn::krk_stochastic`] |
+//! | §3.2 / Alg. 3 / App. C: Joint-Picard | [`learn::joint`] |
+//! | §3.3: SUKP subset clustering (memory–time trade-off) | [`learn::clustering`] |
+//! | §4 / Alg. 2: exact sampling after Hough et al., k-DPPs | [`dpp::sampler`] |
+//! | §4 cost table: `O(N^{3/2})` / `O(N)` preprocessing | [`dpp::kernel`] + [`linalg::kron`] |
+//! | §4 baseline: insert/delete MCMC chain (ref. [13]) | [`dpp::mcmc`] |
+//! | k-DPP phase 1: elementary symmetric polynomials (ref. [16]) | [`dpp::elementary`] |
+//! | §5 experiment protocols (init, synthetic data, figures) | [`learn::init`], [`data`], [`figures`] |
+//! | Baselines: full Picard (ref. [25]), EM (ref. [10]) | [`learn::picard`], [`learn::em`] |
+//!
+//! ## Sampling engine
+//!
+//! [`dpp::Sampler`] eigendecomposes once per kernel (the §4 preprocessing),
+//! then draws through an incremental phase 2: selection weights are
+//! maintained by rank-1 downdates and the basis contraction is a single
+//! `O(Nk)` Householder reflection
+//! ([`linalg::qr::contract_orthonormal_coord`]) instead of an `O(Nk²)`
+//! re-orthonormalization. Per-draw buffers live in a caller-held
+//! [`dpp::SampleScratch`]; [`dpp::Sampler::sample_batch`] fans draws across
+//! threads with one deterministic RNG stream per draw, so results are
+//! reproducible regardless of thread count. The serving stack
+//! ([`coordinator`]) reuses one scratch per worker and coalesces same-`k`
+//! requests through [`dpp::Sampler::sample_k_many`].
+//!
+//! See `README.md` for the architecture tour and quickstart,
+//! `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-reproduction results.
 
 pub mod bench_util;

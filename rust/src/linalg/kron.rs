@@ -16,7 +16,20 @@ use super::matrix::Matrix;
 use crate::error::{Error, Result};
 use crate::linalg::matmul::{self, dot};
 
-/// Dense Kronecker product `A ⊗ B`.
+/// Dense Kronecker product `A ⊗ B` (Prop. 2.1 notation): the block matrix
+/// with `(i,j)` block `a_ij·B`. `O(N²)` time and space for the `N×N`
+/// result (`N = pr`), so this is reserved for sub-kernel-sized operands
+/// and tests — the library's DPP operations never materialize `L₁ ⊗ L₂`.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+/// let k = kron::kron(&a, &Matrix::identity(2));
+/// assert_eq!(k.shape(), (4, 4));
+/// assert_eq!(k[(0, 2)], 2.0); // block (0,1) = 2·I
+/// assert_eq!(k[(2, 0)], 3.0); // block (1,0) = 3·I
+/// assert_eq!(k[(0, 1)], 0.0);
+/// ```
 pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
     let (p, q) = a.shape();
     let (r, s) = b.shape();
@@ -40,13 +53,40 @@ pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
-/// Three-factor Kronecker product `A ⊗ B ⊗ C`.
+/// Three-factor Kronecker product `A ⊗ B ⊗ C` — the paper's m = 3 KronDPP
+/// kernel (§2, associativity of ⊗). `O(N²)` for the `N = n₁n₂n₃` result;
+/// tests/small-N only, like [`kron`].
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let k = kron::kron3(
+///     &Matrix::diag(&[2.0]),
+///     &Matrix::diag(&[3.0, 5.0]),
+///     &Matrix::identity(2),
+/// );
+/// assert_eq!(k.shape(), (4, 4));
+/// assert_eq!(k[(0, 0)], 6.0);  // 2·3·1
+/// assert_eq!(k[(2, 2)], 10.0); // 2·5·1
+/// ```
 pub fn kron3(a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
     kron(&kron(a, b), c)
 }
 
-/// `y = (A ⊗ B) x` without forming the product: reshape `x` to an
-/// `N₁×N₂` matrix `X` (row-major) and compute `A · X · Bᵀ`.
+/// `y = (A ⊗ B)·x` without forming the product (Prop. 2.1(ii)): reshape
+/// `x` to an `N₁×N₂` matrix `X` (row-major) and compute `A · X · Bᵀ` —
+/// `O(N(N₁+N₂)) = O(N^{3/2})` for square factors instead of `O(N²)`.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 1.0], &[0.0, 2.0]]).unwrap();
+/// let b = Matrix::identity(3);
+/// let x: Vec<f64> = (0..6).map(|i| i as f64).collect();
+/// let fast = kron::kron_matvec(&a, &b, &x).unwrap();
+/// let dense = kron::kron(&a, &b).matvec(&x).unwrap();
+/// for (p, q) in fast.iter().zip(&dense) {
+///     assert!((p - q).abs() < 1e-12);
+/// }
+/// ```
 pub fn kron_matvec(a: &Matrix, b: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
     let n1 = a.rows();
     let n2 = b.rows();
@@ -67,13 +107,36 @@ pub fn kron_matvec(a: &Matrix, b: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
     Ok(axbt.into_vec())
 }
 
-/// Extract block `M_(ij)` (size `n2×n2`) of an `n1·n2`-square matrix.
+/// Extract block `M_(ij)` (size `n2×n2`) of an `n1·n2`-square matrix —
+/// the paper's `M_(ij)` block notation (§2). `O(n2²)`.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+/// let b = Matrix::diag(&[5.0, 6.0]);
+/// let m = kron::kron(&a, &b);
+/// // Block (1,0) of A⊗B is a_10·B = 3·B.
+/// let blk = kron::block(&m, 1, 0, 2);
+/// assert_eq!(blk[(0, 0)], 15.0);
+/// assert_eq!(blk[(1, 1)], 18.0);
+/// ```
 pub fn block(m: &Matrix, i: usize, j: usize, n2: usize) -> Matrix {
     m.block(i * n2, j * n2, n2, n2)
         .expect("kron::block: index within range by contract")
 }
 
-/// Partial trace `Tr₁(M)[i,j] = Tr(M_(ij))` (Def. 2.3) — an `n1×n1` matrix.
+/// Partial trace `Tr₁(M)[i,j] = Tr(M_(ij))` (Def. 2.3) — an `n1×n1`
+/// matrix, `O(N²)` in one pass over `M`. For a Kronecker product,
+/// `Tr₁(A ⊗ B) = Tr(B)·A` (Prop. 2.4).
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+/// let b = Matrix::diag(&[5.0, 6.0]); // Tr(B) = 11
+/// let m = kron::kron(&a, &b);
+/// let t1 = kron::partial_trace_1(&m, 2, 2).unwrap();
+/// assert!(t1.rel_diff(&a.scaled(11.0)) < 1e-12);
+/// ```
 pub fn partial_trace_1(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     check_kron_dims(m, n1, n2)?;
     let n = n1 * n2;
@@ -91,7 +154,18 @@ pub fn partial_trace_1(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     Ok(out)
 }
 
-/// Partial trace `Tr₂(M) = Σ_i M_(ii)` (Def. 2.3) — an `n2×n2` matrix.
+/// Partial trace `Tr₂(M) = Σ_i M_(ii)` (Def. 2.3) — an `n2×n2` matrix,
+/// `O(N·n₂)` (it touches only the diagonal blocks). For a Kronecker
+/// product, `Tr₂(A ⊗ B) = Tr(A)·B` (Prop. 2.4).
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap(); // Tr = 5
+/// let b = Matrix::diag(&[5.0, 6.0]);
+/// let m = kron::kron(&a, &b);
+/// let t2 = kron::partial_trace_2(&m, 2, 2).unwrap();
+/// assert!(t2.rel_diff(&b.scaled(5.0)) < 1e-12);
+/// ```
 pub fn partial_trace_2(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     check_kron_dims(m, n1, n2)?;
     let n = n1 * n2;
@@ -111,7 +185,20 @@ pub fn partial_trace_2(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
 
 /// Scaled partial trace `Tr₁((I ⊗ S₂) M)[i,j] = Tr(S₂ · M_(ij))`
 /// = `Σ_{p,q} S₂[p,q] · M_(ij)[q,p]` — the contraction at the heart of the
-/// `L₁` update (Prop. 3.1 / App. B.1). `O(N₁² N₂²)` = `O(N²)`.
+/// `L₁` update of KRK-Picard (Prop. 3.1 / App. B.1, with `S₂ = L₂⁻¹` or
+/// `L₂`). `O(N₁² N₂²)` = `O(N²)` in one pass over `M`, multithreaded above
+/// ~4M multiply-adds; never materializes `I ⊗ S₂`.
+///
+/// ```
+/// use krondpp::linalg::{kron, matmul, Matrix};
+/// let m = Matrix::from_fn(6, 6, |i, j| (i * 6 + j) as f64);
+/// let s2 = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 0.5]]).unwrap();
+/// let fast = kron::tr1_scaled(&m, &s2, 3, 2).unwrap();
+/// // Definition: Tr₁ of the dense product (I ⊗ S₂)·M.
+/// let dense = matmul::matmul(&kron::kron(&Matrix::identity(3), &s2), &m).unwrap();
+/// let want = kron::partial_trace_1(&dense, 3, 2).unwrap();
+/// assert!(fast.rel_diff(&want) < 1e-12);
+/// ```
 pub fn tr1_scaled(m: &Matrix, s2: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     check_kron_dims(m, n1, n2)?;
     if s2.shape() != (n2, n2) {
@@ -176,7 +263,18 @@ pub fn tr1_scaled(m: &Matrix, s2: &Matrix, n1: usize, n2: usize) -> Result<Matri
 }
 
 /// Scaled partial trace `Tr₂((S₁ ⊗ I) M) = Σ_{i,l} S₁[i,l] · M_(li)` — the
-/// contraction of the `L₂` update (App. B.2). `O(N₁² N₂²)` = `O(N²)`.
+/// contraction of the KRK-Picard `L₂` update (App. B.2, with `S₁ = L₁⁻¹`).
+/// `O(N₁² N₂²)` = `O(N²)`; never materializes `S₁ ⊗ I`.
+///
+/// ```
+/// use krondpp::linalg::{kron, matmul, Matrix};
+/// let m = Matrix::from_fn(6, 6, |i, j| ((i + 2 * j) % 5) as f64);
+/// let s1 = Matrix::from_rows(&[&[1.0, 2.0], &[0.0, 1.0]]).unwrap();
+/// let fast = kron::tr2_scaled(&m, &s1, 2, 3).unwrap();
+/// let dense = matmul::matmul(&kron::kron(&s1, &Matrix::identity(3)), &m).unwrap();
+/// let want = kron::partial_trace_2(&dense, 2, 3).unwrap();
+/// assert!(fast.rel_diff(&want) < 1e-12);
+/// ```
 pub fn tr2_scaled(m: &Matrix, s1: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     check_kron_dims(m, n1, n2)?;
     if s1.shape() != (n1, n1) {
@@ -202,9 +300,18 @@ pub fn tr2_scaled(m: &Matrix, s1: &Matrix, n1: usize, n2: usize) -> Result<Matri
     Ok(out)
 }
 
-/// Weighted block sum `Σ_{i,j} W[i,j] · M_(ij)` (an `n2×n2` matrix). This is
-/// the `A₂` contraction of App. B.2 with `W = L₁`. For symmetric `M` and
-/// `W`, equals [`tr2_scaled`].
+/// Weighted block sum `Σ_{i,j} W[i,j] · M_(ij)` (an `n2×n2` matrix) — the
+/// `A₂` contraction of App. B.2 with `W = L₁`. `O(N²)` (skipping zero
+/// weights). For symmetric `M` and `W`, equals [`tr2_scaled`].
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let m = Matrix::from_fn(6, 6, |i, j| (i as f64 - j as f64).abs());
+/// // W = I sums the diagonal blocks: exactly Tr₂ (Def. 2.3).
+/// let summed = kron::weighted_block_sum(&m, &Matrix::identity(2), 2, 3).unwrap();
+/// let tr2 = kron::partial_trace_2(&m, 2, 3).unwrap();
+/// assert!(summed.rel_diff(&tr2) < 1e-13);
+/// ```
 pub fn weighted_block_sum(m: &Matrix, w: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     check_kron_dims(m, n1, n2)?;
     if w.shape() != (n1, n1) {
@@ -230,8 +337,16 @@ pub fn weighted_block_sum(m: &Matrix, w: &Matrix, n1: usize, n2: usize) -> Resul
 
 /// Block-trace contraction `A[k,l] = Tr(M_(kl) · B)` for all `(k,l)` — the
 /// `A₁` matrix of App. B.1 with `M = Θ`, `B = L₂`. Identical math to
-/// [`tr1_scaled`] with `S₂ = B`; kept as a named alias for readability at
-/// call sites mirroring the paper.
+/// [`tr1_scaled`] with `S₂ = B` (`O(N²)`); kept as a named alias for
+/// readability at call sites mirroring the paper.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let m = Matrix::from_fn(6, 6, |i, j| (i * j) as f64);
+/// let b = Matrix::diag(&[1.0, 3.0]);
+/// let a1 = kron::block_trace(&m, &b, 3, 2).unwrap();
+/// assert!(a1.rel_diff(&kron::tr1_scaled(&m, &b, 3, 2).unwrap()) < 1e-15);
+/// ```
 pub fn block_trace(m: &Matrix, b: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     tr1_scaled(m, b, n1, n2)
 }
@@ -242,8 +357,21 @@ pub fn block_trace(m: &Matrix, b: &Matrix, n1: usize, n2: usize) -> Result<Matri
 /// `H[j', j] = Σ_{i,i',r,r'} W1[i,i'] · W3[r,r'] · M[(i',j',r'), (i,j,r)]`
 ///
 /// — the middle-factor contraction of the m = 3 KRK-Picard update
-/// (§3.1.1 multiblock generalization; see `learn::krk3`). One pass over
-/// `M`, `O(N²)`.
+/// (§3.1.1 multiblock generalization; see [`crate::learn::krk3`]). One
+/// pass over `M`, `O(N²)`.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// // With W₁ = I, W₃ = I and M = A⊗B⊗C this reduces to Tr(A)·Tr(C)·B.
+/// let a = Matrix::diag(&[1.0, 2.0]);                             // Tr = 3
+/// let b = Matrix::from_rows(&[&[1.0, 4.0], &[4.0, 2.0]]).unwrap();
+/// let c = Matrix::diag(&[2.0, 3.0]);                             // Tr = 5
+/// let m = kron::kron3(&a, &b, &c);
+/// let h = kron::mixed_weighted_trace(
+///     &m, &Matrix::identity(2), &Matrix::identity(2), 2, 2, 2,
+/// ).unwrap();
+/// assert!(h.rel_diff(&b.scaled(15.0)) < 1e-12);
+/// ```
 pub fn mixed_weighted_trace(
     m: &Matrix,
     w1: &Matrix,
@@ -297,7 +425,14 @@ pub fn mixed_weighted_trace(
 
 /// Eigendecomposition of `A ⊗ B` from sub-decompositions (Cor. 2.2):
 /// given eigenvalues of `A` and `B`, the spectrum of `A ⊗ B` is the outer
-/// product `λ_i(A)·λ_j(B)`, in item order `t = i·N₂ + j`.
+/// product `λ_i(A)·λ_j(B)`, in item order `t = i·N₂ + j`. `O(N)` — this is
+/// why KronDPP sampling preprocessing is `O(N^{3/2})` (§4): only the
+/// sub-kernels are ever eigendecomposed.
+///
+/// ```
+/// use krondpp::linalg::kron::kron_eigenvalues;
+/// assert_eq!(kron_eigenvalues(&[1.0, 2.0], &[3.0, 4.0]), vec![3.0, 4.0, 6.0, 8.0]);
+/// ```
 pub fn kron_eigenvalues(da: &[f64], db: &[f64]) -> Vec<f64> {
     let mut out = Vec::with_capacity(da.len() * db.len());
     for &a in da {
@@ -308,13 +443,35 @@ pub fn kron_eigenvalues(da: &[f64], db: &[f64]) -> Vec<f64> {
     out
 }
 
-/// Entry `(row, col)` of `P_A ⊗ P_B` without forming it.
+/// Entry `(row, col)` of `P_A ⊗ P_B` without forming it — `O(1)` per entry
+/// (the index split `t = i·N₂ + r` of §2), used for `L_Y` principal
+/// submatrices in `O(κ²)`.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+/// let b = Matrix::diag(&[5.0, 7.0]);
+/// let dense = kron::kron(&a, &b);
+/// assert_eq!(kron::kron_entry(&a, &b, 2, 3, 1), dense[(3, 1)]);
+/// assert_eq!(kron::kron_entry(&a, &b, 2, 2, 0), dense[(2, 0)]);
+/// ```
 #[inline(always)]
 pub fn kron_entry(pa: &Matrix, pb: &Matrix, n2: usize, row: usize, col: usize) -> f64 {
     pa.get(row / n2, col / n2) * pb.get(row % n2, col % n2)
 }
 
-/// Column `col` of `P_A ⊗ P_B` (an eigenvector of the Kron kernel) in `O(N)`.
+/// Column `col` of `P_A ⊗ P_B` (an eigenvector of the Kron kernel) in
+/// `O(N)` — the §4 claim that `k` eigenvectors cost `O(kN)`, which keeps
+/// phase 2 of sampling independent of the `O(N³)` dense eigenvector cost.
+///
+/// ```
+/// use krondpp::linalg::{kron, Matrix};
+/// let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+/// let b = Matrix::diag(&[5.0, 7.0]);
+/// let col = kron::kron_column(&a, &b, 2, 3);
+/// let dense = kron::kron(&a, &b).col(3);
+/// assert_eq!(col, dense);
+/// ```
 pub fn kron_column(pa: &Matrix, pb: &Matrix, n2: usize, col: usize) -> Vec<f64> {
     let n1 = pa.rows();
     let (ca, cb) = (col / n2, col % n2);

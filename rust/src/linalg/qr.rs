@@ -2,9 +2,17 @@
 //!
 //! The exact DPP sampler (Alg. 2) repeatedly replaces its eigenvector set
 //! `V` by an orthonormal basis of the subspace of `V` orthogonal to a
-//! coordinate vector `e_i`; [`orthonormal_complement_coord`] implements that
-//! step, and the general [`Qr`] supports the low-rank and Nyström-style
-//! utilities.
+//! coordinate vector `e_i`. Two implementations live here:
+//!
+//! - [`orthonormal_complement_coord`]: the allocating reference path
+//!   (pivoted elimination + modified Gram–Schmidt, `O(nk²)` per call);
+//! - [`contract_orthonormal_coord`]: the in-place workspace variant used by
+//!   the batched sampling engine — a single Householder reflection in
+//!   coefficient space (`O(nk)` per call) that also exposes the dropped
+//!   unit direction so selection weights can be rank-1-downdated instead
+//!   of rescanned.
+//!
+//! The general [`Qr`] supports the low-rank and Nyström-style utilities.
 
 use super::matrix::Matrix;
 use crate::error::{Error, Result};
@@ -175,6 +183,118 @@ pub fn orthonormal_complement_coord(v: &Matrix, coord: usize) -> Matrix {
     orthonormalize_columns(&reduced, 1e-12)
 }
 
+/// Reusable buffers for [`contract_orthonormal_coord`] so the sampling hot
+/// loop performs no per-step allocations.
+#[derive(Default)]
+pub struct ContractScratch {
+    /// The unit direction `p = V·ĉ` removed from the span by the last
+    /// contraction (length `n`). Valid after a call that returned `true`;
+    /// callers maintaining weights `w_i = Σ_j V[i,j]²` downdate with
+    /// `w_i -= p_i²`.
+    pub dropped: Vec<f64>,
+    /// Coefficient-space buffer (length `k`): holds the normalized row,
+    /// then the Householder vector.
+    coef: Vec<f64>,
+    /// Item-space buffer for `q = V·û` (length `n`).
+    q: Vec<f64>,
+}
+
+impl ContractScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// In-place, allocation-free variant of [`orthonormal_complement_coord`]
+/// for the sampling hot loop. `v` holds `k` orthonormal columns of length
+/// `n` stored **column-major** (`v[j*n + i]` is row `i` of column `j`).
+/// The routine replaces the column set by an orthonormal basis of
+/// `{x ∈ span(V) : x[coord] = 0}` and truncates `v` to `k − 1` columns.
+///
+/// Instead of re-orthonormalizing (`O(nk²)`), it applies one Householder
+/// reflection `H = I − 2ûûᵀ` in coefficient space chosen so that the
+/// normalized `coord`-row `ĉ` maps to `±e_{k−1}`: `V·H` then has orthonormal
+/// columns, its last column is `±V·ĉ` (the direction leaving the span), and
+/// its first `k − 1` columns all vanish at `coord` — total cost `O(nk)`.
+///
+/// Returns `true` when the contraction ran and `scratch.dropped` holds the
+/// removed unit direction (enabling the `w_i -= p_i²` weight downdate).
+/// Returns `false` on the degenerate path (row `coord` numerically zero,
+/// matching [`orthonormal_complement_coord`]): the last column is dropped
+/// unchanged and callers must recompute weights from `v`.
+pub fn contract_orthonormal_coord(
+    v: &mut Vec<f64>,
+    n: usize,
+    k: usize,
+    coord: usize,
+    scratch: &mut ContractScratch,
+) -> bool {
+    debug_assert_eq!(v.len(), n * k);
+    debug_assert!(coord < n);
+    debug_assert!(k > 0);
+    // Row `coord` of V, in coefficient space.
+    scratch.coef.clear();
+    let mut rn2 = 0.0;
+    for j in 0..k {
+        let x = v[j * n + coord];
+        scratch.coef.push(x);
+        rn2 += x * x;
+    }
+    let rn = rn2.sqrt();
+    if rn < 1e-14 {
+        // span(V) is already (numerically) orthogonal to e_coord; one
+        // dimension still goes (mirrors the reference degenerate path).
+        v.truncate((k - 1) * n);
+        return false;
+    }
+    // ĉ = row/‖row‖ and p = V·ĉ (the unit direction that leaves the span).
+    scratch.dropped.clear();
+    scratch.dropped.resize(n, 0.0);
+    for j in 0..k {
+        let c = scratch.coef[j] / rn;
+        scratch.coef[j] = c;
+        if c != 0.0 {
+            let col = &v[j * n..(j + 1) * n];
+            for (p, &x) in scratch.dropped.iter_mut().zip(col) {
+                *p += c * x;
+            }
+        }
+    }
+    // Householder vector u = ĉ − α·e_{k−1} with α = −sign(ĉ_{k−1}) so the
+    // subtraction never cancels (‖u‖² = 2(1 + |ĉ_{k−1}|) ≥ 2).
+    let alpha = if scratch.coef[k - 1] >= 0.0 { -1.0 } else { 1.0 };
+    scratch.coef[k - 1] -= alpha;
+    let unorm = scratch.coef.iter().map(|&x| x * x).sum::<f64>().sqrt();
+    let inv_unorm = 1.0 / unorm;
+    for c in scratch.coef.iter_mut() {
+        *c *= inv_unorm;
+    }
+    // q = V·û = (p − α·v_{k−1})/‖u‖; then column j < k−1: v_j -= 2·û_j·q.
+    // (Column k−1 would become ±p; it is dropped, so we skip updating it.)
+    scratch.q.clear();
+    scratch.q.resize(n, 0.0);
+    {
+        let last = &v[(k - 1) * n..k * n];
+        for ((q, &p), &vl) in scratch.q.iter_mut().zip(&scratch.dropped).zip(last) {
+            *q = (p - alpha * vl) * inv_unorm;
+        }
+    }
+    for j in 0..k - 1 {
+        let uj2 = 2.0 * scratch.coef[j];
+        if uj2 != 0.0 {
+            let col = &mut v[j * n..(j + 1) * n];
+            for (x, &q) in col.iter_mut().zip(&scratch.q) {
+                *x -= uj2 * q;
+            }
+        }
+        // Row `coord` of every surviving column is exactly zero in exact
+        // arithmetic; pin it to kill accumulated round-off.
+        v[j * n + coord] = 0.0;
+    }
+    v.truncate((k - 1) * n);
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +379,93 @@ mod tests {
         v.set(1, 1, 1.0);
         let comp = orthonormal_complement_coord(&v, 3);
         assert_eq!(comp.cols(), 1);
+    }
+
+    /// Column-major copy of a Matrix (the layout the in-place contraction
+    /// operates on).
+    fn to_colmajor(m: &Matrix) -> Vec<f64> {
+        let (rows, cols) = m.shape();
+        let mut v = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                v.push(m.get(i, j));
+            }
+        }
+        v
+    }
+
+    fn from_colmajor(v: &[f64], rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| v[j * rows + i])
+    }
+
+    #[test]
+    fn inplace_contract_matches_reference_span() {
+        let (n, k, coord) = (12usize, 5usize, 3usize);
+        let q = orthonormalize_columns(&rnd(n, k, 7), 1e-12);
+        assert_eq!(q.cols(), k);
+        let mut v = to_colmajor(&q);
+        let mut ws = ContractScratch::new();
+        let downdated = contract_orthonormal_coord(&mut v, n, k, coord, &mut ws);
+        assert!(downdated);
+        assert_eq!(v.len(), n * (k - 1));
+        let got = from_colmajor(&v, n, k - 1);
+        // Orthonormal and zero at `coord`.
+        let gtg = matmul_tn(&got, &got).unwrap();
+        assert!(gtg.rel_diff(&Matrix::identity(k - 1)) < 1e-10);
+        for j in 0..k - 1 {
+            assert!(got.get(coord, j).abs() < 1e-12);
+        }
+        // Same subspace as the allocating reference: equal projectors.
+        let reference = orthonormal_complement_coord(&q, coord);
+        let p_got = matmul(&got, &got.transpose()).unwrap();
+        let p_ref = matmul(&reference, &reference.transpose()).unwrap();
+        assert!(p_got.rel_diff(&p_ref) < 1e-9, "{}", p_got.rel_diff(&p_ref));
+    }
+
+    #[test]
+    fn inplace_contract_weight_downdate_identity() {
+        // New weights (recomputed) must equal old weights − dropped².
+        let (n, k, coord) = (10usize, 4usize, 6usize);
+        let q = orthonormalize_columns(&rnd(n, k, 11), 1e-12);
+        let old_w: Vec<f64> =
+            (0..n).map(|i| q.row(i).iter().map(|x| x * x).sum::<f64>()).collect();
+        let mut v = to_colmajor(&q);
+        let mut ws = ContractScratch::new();
+        assert!(contract_orthonormal_coord(&mut v, n, k, coord, &mut ws));
+        // dropped is a unit vector with dropped[coord] = ‖row coord‖.
+        let pn: f64 = ws.dropped.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((pn - 1.0).abs() < 1e-10, "‖p‖ = {pn}");
+        let rn: f64 = q.row(coord).iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((ws.dropped[coord] - rn).abs() < 1e-10);
+        let got = from_colmajor(&v, n, k - 1);
+        for i in 0..n {
+            let new_w: f64 = got.row(i).iter().map(|x| x * x).sum();
+            let want = old_w[i] - ws.dropped[i] * ws.dropped[i];
+            assert!((new_w - want).abs() < 1e-10, "row {i}: {new_w} vs {want}");
+        }
+    }
+
+    #[test]
+    fn inplace_contract_degenerate_path() {
+        // Basis = {e0, e1} (column-major, n = 4): coordinate-3 row is zero,
+        // so the contraction reports `false` and drops the last column.
+        let mut v = vec![0.0; 8];
+        v[0] = 1.0; // column 0 = e0
+        v[5] = 1.0; // column 1 = e1
+        let mut ws = ContractScratch::new();
+        let downdated = contract_orthonormal_coord(&mut v, 4, 2, 3, &mut ws);
+        assert!(!downdated);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn inplace_contract_to_empty() {
+        // k = 1: contracting removes the final dimension.
+        let q = orthonormalize_columns(&rnd(6, 1, 13), 1e-12);
+        let mut v = to_colmajor(&q);
+        let mut ws = ContractScratch::new();
+        assert!(contract_orthonormal_coord(&mut v, 6, 1, 2, &mut ws));
+        assert!(v.is_empty());
     }
 }

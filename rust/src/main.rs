@@ -259,9 +259,16 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let count: usize = args.get_or("count", 5)?;
     let seed: u64 = args.get_or("seed", 0)?;
     let sampler = Sampler::new(&kernel)?;
-    let mut rng = Rng::new(seed);
-    for i in 0..count {
-        let y = if k == 0 { sampler.sample(&mut rng) } else { sampler.sample_k(k, &mut rng) };
+    if k > sampler.n() {
+        return Err(krondpp::Error::Invalid(format!(
+            "requested k={k} > ground set {}",
+            sampler.n()
+        )));
+    }
+    // Batched engine: one eigendecomposition, draws fanned across threads,
+    // deterministic in --seed regardless of thread count.
+    let draws = sampler.sample_batch(count, if k == 0 { None } else { Some(k) }, seed);
+    for (i, y) in draws.iter().enumerate() {
         println!("sample {i}: {y:?}");
     }
     Ok(())

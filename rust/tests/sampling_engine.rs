@@ -1,0 +1,115 @@
+//! Integration coverage for the incremental batched sampling engine:
+//! determinism contracts of `sample_batch`, statistical agreement between
+//! the batch path and the exact marginal kernel, scratch-reuse equivalence,
+//! and the coordinator serving through the grouped engine.
+
+use krondpp::config::ServiceConfig;
+use krondpp::coordinator::DppService;
+use krondpp::data;
+use krondpp::dpp::{Kernel, SampleScratch, Sampler};
+use krondpp::rng::Rng;
+
+fn kernel(n1: usize, n2: usize, seed: u64) -> Kernel {
+    let mut rng = Rng::new(seed);
+    data::paper_truth_kernel(n1, n2, &mut rng)
+}
+
+#[test]
+fn batch_is_deterministic_given_seed() {
+    let s = Sampler::new(&kernel(4, 4, 1)).unwrap();
+    for k in [None, Some(4usize)] {
+        let a = s.sample_batch(50, k, 42);
+        let b = s.sample_batch(50, k, 42);
+        assert_eq!(a, b, "same seed must reproduce draws (k={k:?})");
+    }
+}
+
+#[test]
+fn batch_independent_of_thread_count() {
+    let s = Sampler::new(&kernel(5, 4, 2)).unwrap();
+    for k in [None, Some(3usize)] {
+        let reference = s.sample_batch_threads(40, k, 7, 1);
+        for threads in [2usize, 3, 8, 64] {
+            assert_eq!(
+                s.sample_batch_threads(40, k, 7, threads),
+                reference,
+                "threads={threads} changed draws (k={k:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_marginals_agree_with_sequential_marginals() {
+    // Batch draws and sequential scratch-reuse draws target the same
+    // distribution: both empirical marginal vectors must sit within
+    // sampling error of the exact K_ii.
+    let kernel = kernel(3, 4, 3);
+    let s = Sampler::new(&kernel).unwrap();
+    let n = s.n();
+    let draws = 4000;
+
+    let batch = s.sample_batch(draws, None, 11);
+    let mut batch_counts = vec![0usize; n];
+    for y in &batch {
+        for &i in y {
+            batch_counts[i] += 1;
+        }
+    }
+
+    let mut rng = Rng::new(12);
+    let mut scratch = SampleScratch::new();
+    let mut seq_counts = vec![0usize; n];
+    for _ in 0..draws {
+        for i in s.sample_with_scratch(&mut rng, &mut scratch) {
+            seq_counts[i] += 1;
+        }
+    }
+
+    let marg = kernel.marginal_kernel().unwrap();
+    for i in 0..n {
+        let expect = marg[(i, i)];
+        let se = (expect * (1.0 - expect) / draws as f64).sqrt();
+        let tol = 5.0 * se + 0.01;
+        let b = batch_counts[i] as f64 / draws as f64;
+        let q = seq_counts[i] as f64 / draws as f64;
+        assert!((b - expect).abs() < tol, "batch item {i}: {b} vs {expect}");
+        assert!((q - expect).abs() < tol, "sequential item {i}: {q} vs {expect}");
+    }
+}
+
+#[test]
+fn scratch_reuse_is_invisible_in_results() {
+    let s = Sampler::new(&kernel(4, 5, 4)).unwrap();
+    let mut ra = Rng::new(31);
+    let mut rb = Rng::new(31);
+    let mut scratch = SampleScratch::new();
+    for i in 0..40 {
+        let with = s.sample_k_with_scratch(6, &mut ra, &mut scratch);
+        let without = s.sample_k(6, &mut rb);
+        assert_eq!(with, without, "draw {i}");
+    }
+}
+
+#[test]
+fn service_under_batched_engine_preserves_contract() {
+    // End-to-end: the coordinator (grouped worker draws, per-worker
+    // scratch) still honors per-request k and ground-set bounds.
+    let cfg = ServiceConfig {
+        workers: 3,
+        max_batch: 8,
+        batch_window_us: 300,
+        queue_capacity: 10_000,
+    };
+    let svc = DppService::start(&kernel(4, 4, 5), &cfg, 17).unwrap();
+    for round in 0..30 {
+        let k = round % 6; // mixes k = 0 (unconstrained) with k-DPPs
+        let y = svc.sample(k).unwrap();
+        if k > 0 {
+            assert_eq!(y.len(), k);
+        }
+        assert!(y.windows(2).all(|w| w[0] < w[1]));
+        assert!(y.iter().all(|&i| i < 16));
+    }
+    svc.shutdown();
+}
