@@ -2,10 +2,22 @@
 //!
 //! These are the primitives every learner is built from; their throughput
 //! bounds everything in EXPERIMENTS.md §Perf. GFLOP/s annotations use the
-//! standard op counts (2n³ GEMM, n³/3 Cholesky).
+//! standard op counts (2n³ GEMM, n³/3 Cholesky, ~(4+4/3)n³ two-stage
+//! eigensolve).
+//!
+//! Two before/after sections track the zero-copy core refactor per commit:
+//! packed register-tiled GEMM vs. the legacy blocked kernel, and the
+//! blocked two-stage eigensolver vs. sequential tred2/tql2 — speedup
+//! ratios land in `BENCH_linalg.json` (uploaded as a CI artifact by the
+//! bench smoke job).
+//!
+//! Knobs: `KRONDPP_BENCH_BUDGET_MS` (per-case budget),
+//! `KRONDPP_BENCH_MAX_N` (skip cases above this size — the CI smoke job
+//! sets it low so the run finishes in seconds).
 
-use krondpp::bench_util::{black_box, section, Bencher};
-use krondpp::linalg::{cholesky, eigen::SymEigen, kron, matmul, Matrix};
+use krondpp::bench_util::{black_box, section, Bencher, Report};
+use krondpp::linalg::eigen::SymEigen;
+use krondpp::linalg::{cholesky, kron, matmul, Matrix};
 use krondpp::rng::Rng;
 
 fn spd(n: usize, rng: &mut Rng) -> Matrix {
@@ -15,43 +27,87 @@ fn spd(n: usize, rng: &mut Rng) -> Matrix {
     m
 }
 
+fn max_n() -> usize {
+    std::env::var("KRONDPP_BENCH_MAX_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX)
+}
+
 fn main() {
     let b = Bencher::default();
     let mut rng = Rng::new(1);
+    let mut report = Report::new();
+    let cap = max_n();
 
-    section("matmul (C = A·B)");
-    for n in [128usize, 256, 512, 1024] {
+    section("GEMM: packed register-tiled vs legacy blocked (C = A·B)");
+    for n in [128usize, 512, 1024] {
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
         let a = rng.normal_matrix(n, n);
         let x = rng.normal_matrix(n, n);
-        let stats = b.run(&format!("matmul {n}x{n}"), || {
+        let flops = 2.0 * (n as f64).powi(3);
+        let packed = b.run(&format!("gemm packed {n}x{n}"), || {
             black_box(matmul::matmul(&a, &x).unwrap());
         });
-        let gflops = 2.0 * (n as f64).powi(3) / stats.secs() / 1e9;
-        println!("    -> {gflops:.2} GFLOP/s");
+        let pg = flops / packed.secs() / 1e9;
+        println!("    -> {pg:.2} GFLOP/s");
+        let legacy = b.run(&format!("gemm legacy {n}x{n}"), || {
+            black_box(matmul::matmul_blocked_legacy(&a, &x));
+        });
+        let lg = flops / legacy.secs() / 1e9;
+        let speedup = legacy.secs() / packed.secs();
+        println!("    -> {lg:.2} GFLOP/s  (packed speedup {speedup:.2}x)");
+        report.case(&packed, &[("gflops", pg)]);
+        report.case(&legacy, &[("gflops", lg)]);
+        report.derived(&format!("gemm_packed_vs_legacy_speedup_n{n}"), speedup);
+    }
+
+    section("symmetric eigendecomposition: blocked two-stage vs tred2/tql2");
+    for n in [128usize, 256, 512] {
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
+        let a = spd(n, &mut rng);
+        let par = b.run(&format!("eigh blocked {n}"), || {
+            black_box(SymEigen::new_blocked(&a).unwrap());
+        });
+        let seq = b.run(&format!("eigh sequential {n}"), || {
+            black_box(SymEigen::new_seq(&a).unwrap());
+        });
+        let speedup = seq.secs() / par.secs();
+        println!("    -> blocked speedup {speedup:.2}x");
+        report.case(&par, &[]);
+        report.case(&seq, &[]);
+        report.derived(&format!("eigen_blocked_vs_seq_speedup_n{n}"), speedup);
     }
 
     section("cholesky factor + inverse");
     for n in [128usize, 256, 512] {
+        if n > cap {
+            continue;
+        }
         let a = spd(n, &mut rng);
-        b.run(&format!("cholesky factor {n}"), || {
+        let f = b.run(&format!("cholesky factor {n}"), || {
             black_box(cholesky::Cholesky::factor(&a).unwrap());
         });
-        b.run(&format!("pd inverse {n}"), || {
+        let inv = b.run(&format!("pd inverse {n}"), || {
             black_box(cholesky::inverse_pd(&a).unwrap());
         });
-    }
-
-    section("symmetric eigendecomposition (tred2/tql2)");
-    for n in [64usize, 128, 256] {
-        let a = spd(n, &mut rng);
-        b.run(&format!("eigh {n}"), || {
-            black_box(SymEigen::new(&a).unwrap());
-        });
+        report.case(&f, &[]);
+        report.case(&inv, &[]);
     }
 
     section("kron contractions (the KRK hot spot, App. B)");
     for (n1, n2) in [(32usize, 32usize), (50, 50), (64, 64)] {
         let n = n1 * n2;
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
         let theta = rng.normal_matrix(n, n);
         let l2 = rng.normal_matrix(n2, n2);
         let w = rng.normal_matrix(n1, n1);
@@ -61,21 +117,35 @@ fn main() {
         // 2 flops per Θ element.
         let gbs = (n * n) as f64 * 8.0 / stats.secs() / 1e9;
         println!("    -> {gbs:.2} GB/s effective Θ bandwidth");
-        b.run(&format!("weighted_block_sum (A2) {n1}x{n2}"), || {
+        report.case(&stats, &[("theta_gbs", gbs)]);
+        let wbs = b.run(&format!("weighted_block_sum (A2) {n1}x{n2}"), || {
             black_box(kron::weighted_block_sum(&theta, &w, n1, n2).unwrap());
         });
-        b.run(&format!("partial_trace_1 {n1}x{n2}"), || {
+        report.case(&wbs, &[]);
+        let pt = b.run(&format!("partial_trace_1 {n1}x{n2}"), || {
             black_box(kron::partial_trace_1(&theta, n1, n2).unwrap());
         });
+        report.case(&pt, &[]);
     }
 
     section("nearest Kronecker product (Joint-Picard inner loop)");
     for (n1, n2) in [(16usize, 16usize), (32, 32)] {
+        if n1 * n2 > cap {
+            println!("  (skipped N={}: KRONDPP_BENCH_MAX_N)", n1 * n2);
+            continue;
+        }
         let a = spd(n1, &mut rng);
         let c = spd(n2, &mut rng);
         let m = kron::kron(&a, &c);
-        b.run(&format!("nkp {n1}x{n2}"), || {
+        let stats = b.run(&format!("nkp {n1}x{n2}"), || {
             black_box(krondpp::linalg::nkp::nearest_kronecker(&m, n1, n2, 100, 1e-10).unwrap());
         });
+        report.case(&stats, &[]);
+    }
+
+    let out = "BENCH_linalg.json";
+    match report.write("linalg", out) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
     }
 }

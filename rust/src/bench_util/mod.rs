@@ -6,6 +6,8 @@
 //! `harness = false` and drive this directly, printing rows that the
 //! EXPERIMENTS.md tables are copied from.
 
+use crate::ser::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Result statistics for one benchmark case.
@@ -135,6 +137,51 @@ impl Bencher {
     }
 }
 
+/// Structured bench output: accumulates measured cases plus derived
+/// quantities (speedup ratios) and writes a `BENCH_<name>.json` document,
+/// so CI can archive the perf trajectory per commit.
+#[derive(Default)]
+pub struct Report {
+    cases: Vec<Json>,
+    derived: BTreeMap<String, Json>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a measured case with optional named throughput metrics
+    /// (e.g. `("gflops", 12.3)`).
+    pub fn case(&mut self, stats: &Stats, metrics: &[(&str, f64)]) {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(stats.name.clone()));
+        obj.insert("iters".into(), Json::Num(stats.iters as f64));
+        obj.insert("mean_s".into(), Json::Num(stats.mean.as_secs_f64()));
+        obj.insert("median_s".into(), Json::Num(stats.median.as_secs_f64()));
+        obj.insert("min_s".into(), Json::Num(stats.min.as_secs_f64()));
+        obj.insert("p95_s".into(), Json::Num(stats.p95.as_secs_f64()));
+        for (k, v) in metrics {
+            obj.insert((*k).into(), Json::Num(*v));
+        }
+        self.cases.push(Json::Obj(obj));
+    }
+
+    /// Record a derived quantity (e.g. `packed_vs_legacy_speedup_n1024`).
+    pub fn derived(&mut self, key: &str, value: f64) {
+        self.derived.insert(key.into(), Json::Num(value));
+    }
+
+    /// Write the report (compact JSON) to `path`.
+    pub fn write(&self, bench: &str, path: &str) -> std::io::Result<()> {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Json::Str(bench.into()));
+        root.insert("cases".into(), Json::Arr(self.cases.clone()));
+        root.insert("derived".into(), Json::Obj(self.derived.clone()));
+        std::fs::write(path, Json::Obj(root).to_string())
+    }
+}
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -164,6 +211,31 @@ mod tests {
         });
         assert!(stats.iters >= 3);
         assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+
+    #[test]
+    fn report_writes_valid_json() {
+        let b = Bencher {
+            budget: Duration::from_millis(10),
+            warmup: Duration::from_millis(2),
+            max_iters: 50,
+            min_iters: 3,
+        };
+        let stats = b.run("case-a", || {
+            black_box(1 + 1);
+        });
+        let mut r = Report::new();
+        r.case(&stats, &[("gflops", 1.5)]);
+        r.derived("speedup", 2.0);
+        let path = std::env::temp_dir().join("krondpp_bench_report_test.json");
+        r.write("unit", path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        let Json::Obj(root) = parsed else { panic!("not an object") };
+        assert_eq!(root["bench"], Json::Str("unit".into()));
+        let Json::Arr(cases) = &root["cases"] else { panic!("no cases") };
+        assert_eq!(cases.len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

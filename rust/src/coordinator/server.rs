@@ -72,6 +72,10 @@ struct Shared {
     metrics: ServiceMetrics,
     shutdown: AtomicBool,
     capacity: usize,
+    /// Kernel-assembly workspace for hot swaps: repeated `update_kernel`
+    /// calls re-eigendecompose through one reused scratch (panels,
+    /// rotation buffers, GEMM pack buffers) instead of reallocating.
+    swap_scratch: Mutex<SampleScratch>,
 }
 
 /// The running service.
@@ -97,6 +101,7 @@ impl DppService {
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
             capacity: cfg.queue_capacity,
+            swap_scratch: Mutex::new(SampleScratch::new()),
         });
         let loads = WorkerLoad::new(cfg.workers);
         let mut worker_txs = Vec::with_capacity(cfg.workers);
@@ -158,7 +163,10 @@ impl DppService {
     /// eigendecomposition happens on the caller's thread; in-flight
     /// requests finish on the old kernel.
     pub fn update_kernel(&self, kernel: &Kernel) -> Result<()> {
-        let sampler = Arc::new(Sampler::new(kernel)?);
+        let sampler = {
+            let mut scratch = self.shared.swap_scratch.lock().unwrap();
+            Arc::new(Sampler::new_with_scratch(kernel, &mut scratch)?)
+        };
         *self.shared.sampler.write().unwrap() = sampler;
         Ok(())
     }

@@ -68,11 +68,33 @@ impl Kernel {
 
     /// Principal submatrix `L_Y` (κ×κ) — `O(κ²)` for any structure.
     pub fn principal_submatrix(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.principal_submatrix_into(idx, &mut out);
+        out
+    }
+
+    /// [`Kernel::principal_submatrix`] into a caller-held buffer — the
+    /// allocation-free form behind the per-subset likelihood sweep.
+    pub fn principal_submatrix_into(&self, idx: &[usize], out: &mut Matrix) {
+        let k = idx.len();
+        out.resize_zeroed(k, k);
         match self {
-            Kernel::Full(l) => l.principal_submatrix(idx),
+            Kernel::Full(l) => {
+                for (a, &i) in idx.iter().enumerate() {
+                    let src = l.row(i);
+                    let dst = out.row_mut(a);
+                    for (b, &j) in idx.iter().enumerate() {
+                        dst[b] = src[j];
+                    }
+                }
+            }
             _ => {
-                let k = idx.len();
-                Matrix::from_fn(k, k, |a, b| self.entry(idx[a], idx[b]))
+                for (a, &i) in idx.iter().enumerate() {
+                    let dst = out.row_mut(a);
+                    for (b, &j) in idx.iter().enumerate() {
+                        dst[b] = self.entry(i, j);
+                    }
+                }
             }
         }
     }
@@ -153,14 +175,26 @@ impl Kernel {
 
     /// Eigendecompose, exploiting structure (Cor. 2.2).
     pub fn eigen(&self) -> Result<KernelEigen> {
+        let mut scratch = crate::linalg::eigen::SymEigenScratch::new();
+        self.eigen_with(&mut scratch)
+    }
+
+    /// [`Kernel::eigen`] reusing a caller-held eigensolver scratch (panel,
+    /// rotation and GEMM pack buffers) across the per-factor
+    /// decompositions — and across repeated kernel assemblies when the
+    /// caller keeps the scratch alive (the coordinator's hot-swap path).
+    pub fn eigen_with(
+        &self,
+        scratch: &mut crate::linalg::eigen::SymEigenScratch,
+    ) -> Result<KernelEigen> {
         match self {
             Kernel::Full(l) => {
-                let e = SymEigen::new(l)?;
+                let e = SymEigen::new_with(l, scratch)?;
                 Ok(KernelEigen { values: e.values, vectors: EigenVectors::Dense(e.vectors) })
             }
             Kernel::Kron2(a, b) => {
-                let ea = SymEigen::new(a)?;
-                let eb = SymEigen::new(b)?;
+                let ea = SymEigen::new_with(a, scratch)?;
+                let eb = SymEigen::new_with(b, scratch)?;
                 let values = kron::kron_eigenvalues(&ea.values, &eb.values);
                 Ok(KernelEigen {
                     values,
@@ -168,9 +202,9 @@ impl Kernel {
                 })
             }
             Kernel::Kron3(a, b, c) => {
-                let ea = SymEigen::new(a)?;
-                let eb = SymEigen::new(b)?;
-                let ec = SymEigen::new(c)?;
+                let ea = SymEigen::new_with(a, scratch)?;
+                let eb = SymEigen::new_with(b, scratch)?;
+                let ec = SymEigen::new_with(c, scratch)?;
                 let inner = kron::kron_eigenvalues(&eb.values, &ec.values);
                 let values = kron::kron_eigenvalues(&ea.values, &inner);
                 Ok(KernelEigen {

@@ -9,17 +9,27 @@
 
 use crate::dpp::kernel::Kernel;
 use crate::error::Result;
-use crate::linalg::{cholesky::Cholesky, Matrix};
+use crate::linalg::{cholesky, cholesky::Cholesky, Matrix};
 
 /// Mean log-likelihood of `subsets` under kernel `kernel`.
+///
+/// The per-subset `log det(L_Y)` sweep reuses one submatrix buffer and one
+/// Cholesky factor buffer across all subsets (this runs once per learner
+/// iteration, so it is a steady-state hot path).
 pub fn log_likelihood(kernel: &Kernel, subsets: &[Vec<usize>]) -> Result<f64> {
     if subsets.is_empty() {
         return Ok(0.0);
     }
     let normalizer = kernel.logdet_l_plus_i()?;
     let mut total = 0.0;
+    let mut sub = Matrix::zeros(0, 0);
+    let mut chol = Matrix::zeros(0, 0);
     for y in subsets {
-        total += subset_logdet(kernel, y)?;
+        if y.is_empty() {
+            continue; // det(L_∅) = 1, log 0.0
+        }
+        kernel.principal_submatrix_into(y, &mut sub);
+        total += cholesky::logdet_pd_with(&sub, &mut chol)?;
     }
     Ok(total / subsets.len() as f64 - normalizer)
 }

@@ -31,6 +31,7 @@
 use crate::dpp::elementary::{sample_k_eigenvectors, ElementaryTable};
 use crate::dpp::kernel::{Kernel, KernelEigen};
 use crate::error::Result;
+use crate::linalg::eigen::SymEigenScratch;
 use crate::linalg::qr::{contract_orthonormal_coord, ContractScratch};
 use crate::rng::Rng;
 
@@ -54,6 +55,11 @@ pub struct SampleScratch {
     j: Vec<usize>,
     /// Clamped spectrum buffer (k-DPP phase 1).
     lam: Vec<f64>,
+    /// Eigensolver workspaces — including the GEMM pack buffers — reused
+    /// by [`Sampler::new_with_scratch`] so a worker that assembles kernels
+    /// repeatedly (the coordinator's hot-swap path) re-decomposes without
+    /// heap traffic beyond the sampler's own outputs.
+    pub(crate) eigen: SymEigenScratch,
 }
 
 impl SampleScratch {
@@ -72,6 +78,15 @@ impl Sampler {
     /// Eigendecompose `kernel` (the expensive, once-per-kernel step).
     pub fn new(kernel: &Kernel) -> Result<Self> {
         let eigen = kernel.eigen()?;
+        let n = kernel.n();
+        Ok(Sampler { eigen, n })
+    }
+
+    /// [`Sampler::new`] reusing the eigensolver workspaces (and their GEMM
+    /// pack buffers) held in a caller's [`SampleScratch`] — the repeated
+    /// kernel-assembly path of the serving coordinator.
+    pub fn new_with_scratch(kernel: &Kernel, scratch: &mut SampleScratch) -> Result<Self> {
+        let eigen = kernel.eigen_with(&mut scratch.eigen)?;
         let n = kernel.n();
         Ok(Sampler { eigen, n })
     }
@@ -566,6 +581,20 @@ mod tests {
             assert_eq!(y.len(), 5);
             assert!(y.windows(2).all(|w| w[0] < w[1]));
             assert!(y.iter().all(|&i| i < 12));
+        }
+    }
+
+    #[test]
+    fn scratch_built_sampler_matches_fresh_sampler() {
+        // Sampler::new_with_scratch reuses eigen workspaces across kernel
+        // assemblies; draws must be identical to a fresh Sampler's.
+        let mut scratch = SampleScratch::new();
+        for seed in [51u64, 52, 53] {
+            let kernel = Kernel::Kron2(spd(4, seed), spd(3, seed + 10));
+            let a = Sampler::new(&kernel).unwrap();
+            let b = Sampler::new_with_scratch(&kernel, &mut scratch).unwrap();
+            assert_eq!(a.sample_batch(16, None, 9), b.sample_batch(16, None, 9));
+            assert_eq!(a.sample_batch(8, Some(3), 9), b.sample_batch(8, Some(3), 9));
         }
     }
 

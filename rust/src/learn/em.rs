@@ -87,11 +87,15 @@ impl EmLearner {
         let mut lambda_new = vec![0.0f64; n];
         // Gradient accumulator for the eigenvector step: (2/n) Σ W_i V Λ.
         let mut grad = Matrix::zeros(n, n);
+        // Per-subset product buffer + GEMM pack buffers, reused across the
+        // whole E-step sweep.
+        let mut wv = Matrix::zeros(0, 0);
+        let mut gemm = matmul::GemmScratch::new();
         for y in &data.subsets {
             let m = k_minus_i_complement(&k, y);
             let w = Lu::factor(&m)?.inverse();
             // p_ij = λ_j + λ_j(1−λ_j)·v_jᵀWv_j via diag(VᵀWV).
-            let wv = matmul::matmul(&w, &self.v)?;
+            matmul::matmul_into(&mut wv, &w, &self.v, &mut gemm)?;
             for j in 0..n {
                 let vj_wvj: f64 =
                     (0..n).map(|r| self.v.get(r, j) * wv.get(r, j)).sum();

@@ -110,40 +110,49 @@ impl<'a> RearrangedGradient<'a> {
         })
     }
 
-    /// `y = R(M)·x`, `x ∈ R^{N₂²}`, `y ∈ R^{N₁²}`.
-    fn apply(&self, x: &[f64]) -> Vec<f64> {
+    /// `y = R(M)·x`, `x ∈ R^{N₂²}`, `y ∈ R^{N₁²}` (caller-held output and
+    /// mid buffers: the power loop allocates nothing).
+    fn apply_into(&self, x: &[f64], y: &mut Vec<f64>, mid: &mut Vec<f64>, mid2: &mut Vec<f64>) {
         // Θ part.
-        let mut y = nkp::r_apply(self.theta, self.n1, self.n2, x);
+        nkp::r_apply_into(self.theta, self.n1, self.n2, x, y);
         // + vec(L1⁻¹)·(vec(L2⁻¹)ᵀ x)
         let dot2: f64 = self.vl2inv.iter().zip(x).map(|(a, b)| a * b).sum();
         for (yi, li) in y.iter_mut().zip(&self.vl1inv) {
             *yi += li * dot2;
         }
         // − u_mat·(v_mat·x)
-        let vx = self.v_mat.matvec(x).expect("v_mat dims");
-        let uvx = self.u_mat.matvec(&vx).expect("u_mat dims");
-        for (yi, c) in y.iter_mut().zip(&uvx) {
+        mid.clear();
+        mid.resize(self.n1, 0.0);
+        matmul::matvec_into(mid, self.v_mat.view(), x);
+        mid2.clear();
+        mid2.resize(self.n1 * self.n1, 0.0);
+        matmul::matvec_into(mid2, self.u_mat.view(), mid);
+        for (yi, c) in y.iter_mut().zip(mid2.iter()) {
             *yi -= c;
         }
-        y
     }
 
-    /// `x = R(M)ᵀ·y`, `y ∈ R^{N₁²}`, `x ∈ R^{N₂²}`.
-    fn apply_t(&self, y: &[f64]) -> Vec<f64> {
-        let mut x = nkp::rt_apply(self.theta, self.n1, self.n2, y);
+    /// `x = R(M)ᵀ·y`, `y ∈ R^{N₁²}`, `x ∈ R^{N₂²}` (caller-held buffers;
+    /// the transposed matvecs are free transpose views).
+    fn apply_t_into(&self, y: &[f64], x: &mut Vec<f64>, mid: &mut Vec<f64>, mid2: &mut Vec<f64>) {
+        nkp::rt_apply_into(self.theta, self.n1, self.n2, y, x);
         let dot1: f64 = self.vl1inv.iter().zip(y).map(|(a, b)| a * b).sum();
         for (xi, li) in x.iter_mut().zip(&self.vl2inv) {
             *xi += li * dot1;
         }
-        let uty = self.u_mat.vecmat(y).expect("u_mat dims");
-        let vtuy = self.v_mat.vecmat(&uty).expect("v_mat dims");
-        for (xi, c) in x.iter_mut().zip(&vtuy) {
+        mid.clear();
+        mid.resize(self.n1, 0.0);
+        matmul::matvec_into(mid, self.u_mat.view().t(), y);
+        mid2.clear();
+        mid2.resize(self.n2 * self.n2, 0.0);
+        matmul::matvec_into(mid2, self.v_mat.view().t(), mid);
+        for (xi, c) in x.iter_mut().zip(mid2.iter()) {
             *xi -= c;
         }
-        x
     }
 
-    /// Top singular triple via power iteration on `RᵀR`.
+    /// Top singular triple via power iteration on `RᵀR` (all iterate and
+    /// intermediate buffers reused across iterations).
     fn top_singular(&self, iters: usize, tol: f64) -> Result<(Matrix, Matrix, f64)> {
         let mut v: Vec<f64> = vec![0.0; self.n2 * self.n2];
         // Deterministic PD-aligned start: identity.
@@ -152,12 +161,13 @@ impl<'a> RearrangedGradient<'a> {
         }
         normalize(&mut v)?;
         let mut u = vec![0.0; self.n1 * self.n1];
+        let (mut mid, mut mid2) = (Vec::new(), Vec::new());
         let mut sigma = 0.0;
         let mut prev = 0.0;
         for _ in 0..iters {
-            u = self.apply(&v);
+            self.apply_into(&v, &mut u, &mut mid, &mut mid2);
             normalize(&mut u)?;
-            v = self.apply_t(&u);
+            self.apply_t_into(&u, &mut v, &mut mid, &mut mid2);
             sigma = normalize(&mut v)?;
             if (sigma - prev).abs() <= tol * sigma.abs().max(1e-300) {
                 break;
@@ -266,13 +276,15 @@ mod tests {
         m += &theta;
         m -= &lpi_inv;
         let x: Vec<f64> = (0..16).map(|i| ((i * 7 % 11) as f64) - 5.0).collect();
-        let fast = op.apply(&x);
+        let (mut fast, mut mid, mut mid2) = (Vec::new(), Vec::new(), Vec::new());
+        op.apply_into(&x, &mut fast, &mut mid, &mut mid2);
         let slow = nkp::r_apply(&m, 3, 4, &x);
         for (p, q) in fast.iter().zip(&slow) {
             assert!((p - q).abs() < 1e-9, "{p} vs {q}");
         }
         let y: Vec<f64> = (0..9).map(|i| ((i * 5 % 7) as f64) - 3.0).collect();
-        let fast_t = op.apply_t(&y);
+        let mut fast_t = Vec::new();
+        op.apply_t_into(&y, &mut fast_t, &mut mid, &mut mid2);
         let slow_t = nkp::rt_apply(&m, 3, 4, &y);
         for (p, q) in fast_t.iter().zip(&slow_t) {
             assert!((p - q).abs() < 1e-9, "{p} vs {q}");

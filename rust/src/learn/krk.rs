@@ -24,7 +24,8 @@ use crate::dpp::likelihood::theta_dense;
 use crate::dpp::Kernel;
 use crate::error::{Error, Result};
 use crate::learn::traits::{Learner, TrainingSet};
-use crate::linalg::eigen::SymEigen;
+use crate::linalg::eigen::{self, SymEigenScratch};
+use crate::linalg::matmul::GemmScratch;
 use crate::linalg::{kron, matmul, Matrix};
 
 /// Pluggable backend for the two `O(N²)` Θ-contractions, so the PJRT
@@ -41,6 +42,34 @@ pub trait Contractions: Send + Sync {
         n1: usize,
         n2: usize,
     ) -> Result<Matrix>;
+    /// [`Contractions::block_trace`] into a caller-held output. The default
+    /// allocates through `block_trace`; backends with a true in-place path
+    /// (the CPU backend) override it so learner steady state stays
+    /// allocation-free.
+    fn block_trace_into(
+        &self,
+        theta: &Matrix,
+        l2: &Matrix,
+        n1: usize,
+        n2: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        *out = self.block_trace(theta, l2, n1, n2)?;
+        Ok(())
+    }
+    /// [`Contractions::weighted_block_sum`] into a caller-held output
+    /// (default allocates; see [`Contractions::block_trace_into`]).
+    fn weighted_block_sum_into(
+        &self,
+        theta: &Matrix,
+        w: &Matrix,
+        n1: usize,
+        n2: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        *out = self.weighted_block_sum(theta, w, n1, n2)?;
+        Ok(())
+    }
 }
 
 /// Pure-Rust contraction backend (cache-blocked, multithreaded).
@@ -59,6 +88,52 @@ impl Contractions for CpuContractions {
     ) -> Result<Matrix> {
         kron::weighted_block_sum(theta, w, n1, n2)
     }
+    fn block_trace_into(
+        &self,
+        theta: &Matrix,
+        l2: &Matrix,
+        n1: usize,
+        n2: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        kron::block_trace_into(theta, l2, n1, n2, out)
+    }
+    fn weighted_block_sum_into(
+        &self,
+        theta: &Matrix,
+        w: &Matrix,
+        n1: usize,
+        n2: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
+        kron::weighted_block_sum_into(theta, w, n1, n2, out)
+    }
+}
+
+/// Reusable workspaces of one KRK-Picard-style learner: eigendecomposition
+/// scratches for both sub-kernels, GEMM pack buffers, contraction /
+/// sandwich outputs, and the candidate + PD-check buffers of the step
+/// safeguard. After the first step (which grows the buffers) every
+/// half-update runs without touching the heap.
+#[derive(Default)]
+pub(crate) struct KrkScratch {
+    pub(crate) e1: SymEigenScratch,
+    pub(crate) e2: SymEigenScratch,
+    /// Θ-contraction output (`A₁` or `A₂`).
+    pub(crate) contr: Matrix,
+    /// `L·A·L` sandwich output; becomes the step direction `X` in place.
+    pub(crate) sand: Matrix,
+    /// GEMM association temporary.
+    pub(crate) tmp: Matrix,
+    /// `L₁·B·L₁` / `B₂` output.
+    pub(crate) bmat: Matrix,
+    pub(crate) diag: Vec<f64>,
+    /// Step candidate; after the swap in [`apply_step_into`] it holds the
+    /// previous iterate — the rollback buffer of the next backtrack.
+    pub(crate) candidate: Matrix,
+    /// Cholesky factor buffer of the PD safeguard.
+    pub(crate) cholwork: Matrix,
+    pub(crate) gemm: GemmScratch,
 }
 
 /// The KRK-Picard learner (batch updates).
@@ -70,6 +145,7 @@ pub struct KrkPicard {
     /// PD-safeguard fallback for a > 1 (see `apply_safeguarded`).
     pub safeguard: bool,
     backend: Box<dyn Contractions>,
+    scratch: KrkScratch,
 }
 
 impl KrkPicard {
@@ -88,7 +164,14 @@ impl KrkPicard {
         if !l1.is_square() || !l2.is_square() {
             return Err(Error::Shape("krk: sub-kernels must be square".into()));
         }
-        Ok(KrkPicard { l1, l2, step_size, safeguard: true, backend })
+        Ok(KrkPicard {
+            l1,
+            l2,
+            step_size,
+            safeguard: true,
+            backend,
+            scratch: KrkScratch::default(),
+        })
     }
 
     /// Sub-kernel sizes `(N₁, N₂)`.
@@ -102,26 +185,48 @@ impl KrkPicard {
     }
 
     /// One L₁ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`.
-    pub(crate) fn update_l1_from_theta(&mut self, theta: &Matrix) -> Result<()> {
+    ///
+    /// Steady-state allocation-free: the contraction, the `L₁·A₁·L₁`
+    /// sandwich, the eigen-space `L₁·B·L₁` term and the PD-safeguarded
+    /// step all run in learner-held buffers (asserted by the counting-
+    /// allocator suite in `tests/alloc_free.rs`).
+    pub fn update_l1_from_theta(&mut self, theta: &Matrix) -> Result<()> {
         let (n1, n2) = self.dims();
-        let a1 = self.backend.block_trace(theta, &self.l2, n1, n2)?;
-        let l1a1l1 = matmul::sandwich(&self.l1, &a1, &self.l1)?;
-        let l1bl1 = l1_b_l1(&self.l1, &self.l2)?;
-        let mut x = l1a1l1;
-        x -= &l1bl1;
-        apply_step(&mut self.l1, &x, self.step_size / n2 as f64, 1.0 / n2 as f64, self.safeguard);
+        let s = &mut self.scratch;
+        self.backend.block_trace_into(theta, &self.l2, n1, n2, &mut s.contr)?;
+        matmul::sandwich_into(&mut s.sand, &self.l1, &s.contr, &self.l1, &mut s.tmp, &mut s.gemm)?;
+        l1_b_l1_into(&self.l1, &self.l2, s)?;
+        s.sand -= &s.bmat;
+        apply_step_into(
+            &mut self.l1,
+            &s.sand,
+            self.step_size / n2 as f64,
+            1.0 / n2 as f64,
+            self.safeguard,
+            &mut s.candidate,
+            &mut s.cholwork,
+        );
         Ok(())
     }
 
-    /// One L₂ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`.
-    pub(crate) fn update_l2_from_theta(&mut self, theta: &Matrix) -> Result<()> {
+    /// One L₂ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`;
+    /// steady-state allocation-free like [`KrkPicard::update_l1_from_theta`].
+    pub fn update_l2_from_theta(&mut self, theta: &Matrix) -> Result<()> {
         let (n1, n2) = self.dims();
-        let a2 = self.backend.weighted_block_sum(theta, &self.l1, n1, n2)?;
-        let l2a2l2 = matmul::sandwich(&self.l2, &a2, &self.l2)?;
-        let b2 = b2_matrix(&self.l1, &self.l2)?;
-        let mut x = l2a2l2;
-        x -= &b2;
-        apply_step(&mut self.l2, &x, self.step_size / n1 as f64, 1.0 / n1 as f64, self.safeguard);
+        let s = &mut self.scratch;
+        self.backend.weighted_block_sum_into(theta, &self.l1, n1, n2, &mut s.contr)?;
+        matmul::sandwich_into(&mut s.sand, &self.l2, &s.contr, &self.l2, &mut s.tmp, &mut s.gemm)?;
+        b2_matrix_into(&self.l1, &self.l2, s)?;
+        s.sand -= &s.bmat;
+        apply_step_into(
+            &mut self.l2,
+            &s.sand,
+            self.step_size / n1 as f64,
+            1.0 / n1 as f64,
+            self.safeguard,
+            &mut s.candidate,
+            &mut s.cholwork,
+        );
         Ok(())
     }
 }
@@ -133,65 +238,122 @@ pub(crate) fn apply_safeguarded(l: &mut Matrix, x: &Matrix, scaled: f64, unit: f
     apply_step(l, x, scaled, unit, true);
 }
 
-/// As [`apply_safeguarded`], with the fallback optional.
+/// As [`apply_safeguarded`], with the fallback optional (allocating
+/// wrapper around [`apply_step_into`], kept for the m = 3 learner).
 pub(crate) fn apply_step(l: &mut Matrix, x: &Matrix, scaled: f64, unit: f64, safeguard: bool) {
-    let mut candidate = l.clone();
+    let mut candidate = Matrix::zeros(0, 0);
+    let mut cholwork = Matrix::zeros(0, 0);
+    apply_step_into(l, x, scaled, unit, safeguard, &mut candidate, &mut cholwork);
+}
+
+/// The in-place PD-safeguarded step: build the candidate in a learner-held
+/// buffer, check PD in a reused Cholesky buffer, and *swap* the candidate
+/// into place — after which `candidate` holds the previous iterate, i.e.
+/// the rollback copy of the next step-size backtrack. No `clone()` per
+/// backtrack.
+pub(crate) fn apply_step_into(
+    l: &mut Matrix,
+    x: &Matrix,
+    scaled: f64,
+    unit: f64,
+    safeguard: bool,
+    candidate: &mut Matrix,
+    cholwork: &mut Matrix,
+) {
+    candidate.copy_from(l);
     candidate.axpy(scaled, x).expect("shape-consistent by construction");
     candidate.symmetrize_mut();
     if safeguard
         && (scaled - unit).abs() > 1e-15
-        && !crate::linalg::cholesky::is_pd(&candidate)
+        && !crate::linalg::cholesky::is_pd_with(candidate, cholwork)
     {
-        candidate = l.clone();
+        candidate.copy_from(l);
         candidate.axpy(unit, x).expect("shape-consistent by construction");
         candidate.symmetrize_mut();
     }
-    *l = candidate;
+    std::mem::swap(l, candidate);
 }
 
 /// `L₁·B·L₁ = P₁·diag(d₁ₖ²·Qₖ)·P₁ᵀ` with `Qₖ = Σ_r d₂ᵣ/(1+d₁ₖd₂ᵣ)`
 /// (App. B.1). `O(N₁³ + N₂³ + N₁N₂)`.
 pub(crate) fn l1_b_l1(l1: &Matrix, l2: &Matrix) -> Result<Matrix> {
-    let e1 = SymEigen::new(l1)?;
-    let e2 = SymEigen::new(l2)?;
+    let mut s = KrkScratch::default();
+    l1_b_l1_into(l1, l2, &mut s)?;
+    Ok(std::mem::replace(&mut s.bmat, Matrix::zeros(0, 0)))
+}
+
+/// [`l1_b_l1`] into `s.bmat`, reusing the scratch's eigen workspaces,
+/// diagonal buffer and GEMM pack buffers.
+pub(crate) fn l1_b_l1_into(l1: &Matrix, l2: &Matrix, s: &mut KrkScratch) -> Result<()> {
+    eigen::factor_into(l1, &mut s.e1)?;
+    eigen::factor_into(l2, &mut s.e2)?;
     let n1 = l1.rows();
-    let mut diag = vec![0.0; n1];
-    for (k, dk) in diag.iter_mut().enumerate() {
-        let d1k = e1.values[k];
-        let q: f64 = e2.values.iter().map(|&d2r| d2r / (1.0 + d1k * d2r)).sum();
+    s.diag.clear();
+    s.diag.resize(n1, 0.0);
+    for (k, dk) in s.diag.iter_mut().enumerate() {
+        let d1k = s.e1.values[k];
+        let q: f64 = s.e2.values.iter().map(|&d2r| d2r / (1.0 + d1k * d2r)).sum();
         *dk = d1k * d1k * q;
     }
-    Ok(reconstruct_diag(&e1.vectors, &diag))
+    reconstruct_diag_into(&s.e1.vectors, &s.diag, &mut s.bmat, &mut s.tmp, &mut s.gemm);
+    Ok(())
 }
 
 /// `B₂ = P₂·diag_r(Σ_k d₁ₖd₂ᵣ²/(1+d₁ₖd₂ᵣ))·P₂ᵀ` (App. B.2; the
 /// `Σ_i P₁[i,k]²` factor is 1 by orthonormality). `O(N₁³+N₂³+N₁N₂)`.
 pub(crate) fn b2_matrix(l1: &Matrix, l2: &Matrix) -> Result<Matrix> {
-    let e1 = SymEigen::new(l1)?;
-    let e2 = SymEigen::new(l2)?;
+    let mut s = KrkScratch::default();
+    b2_matrix_into(l1, l2, &mut s)?;
+    Ok(std::mem::replace(&mut s.bmat, Matrix::zeros(0, 0)))
+}
+
+/// [`b2_matrix`] into `s.bmat` (see [`l1_b_l1_into`]).
+pub(crate) fn b2_matrix_into(l1: &Matrix, l2: &Matrix, s: &mut KrkScratch) -> Result<()> {
+    eigen::factor_into(l1, &mut s.e1)?;
+    eigen::factor_into(l2, &mut s.e2)?;
     let n2 = l2.rows();
-    let mut diag = vec![0.0; n2];
-    for (r, dr) in diag.iter_mut().enumerate() {
-        let d2r = e2.values[r];
-        let s: f64 =
-            e1.values.iter().map(|&d1k| d1k * d2r * d2r / (1.0 + d1k * d2r)).sum();
-        *dr = s;
+    s.diag.clear();
+    s.diag.resize(n2, 0.0);
+    for (r, dr) in s.diag.iter_mut().enumerate() {
+        let d2r = s.e2.values[r];
+        let sum: f64 =
+            s.e1.values.iter().map(|&d1k| d1k * d2r * d2r / (1.0 + d1k * d2r)).sum();
+        *dr = sum;
     }
-    Ok(reconstruct_diag(&e2.vectors, &diag))
+    reconstruct_diag_into(&s.e2.vectors, &s.diag, &mut s.bmat, &mut s.tmp, &mut s.gemm);
+    Ok(())
 }
 
 /// `P·diag(d)·Pᵀ`.
 pub(crate) fn reconstruct_diag(p: &Matrix, d: &[f64]) -> Matrix {
+    let mut out = Matrix::zeros(0, 0);
+    let mut tmp = Matrix::zeros(0, 0);
+    let mut gemm = GemmScratch::new();
+    reconstruct_diag_into(p, d, &mut out, &mut tmp, &mut gemm);
+    out
+}
+
+/// `out = P·diag(d)·Pᵀ` in caller-held buffers: scale columns into `tmp`,
+/// one view-GEMM against `Pᵀ` (a free transpose view), symmetrize.
+pub(crate) fn reconstruct_diag_into(
+    p: &Matrix,
+    d: &[f64],
+    out: &mut Matrix,
+    tmp: &mut Matrix,
+    gemm: &mut GemmScratch,
+) {
     let n = p.rows();
-    let mut scaled = Matrix::zeros(n, n);
+    tmp.resize_zeroed(n, n);
     for i in 0..n {
-        for j in 0..n {
-            scaled.set(i, j, p.get(i, j) * d[j]);
+        let prow = p.row(i);
+        let trow = tmp.row_mut(i);
+        for ((t, &pv), &dv) in trow.iter_mut().zip(prow).zip(d) {
+            *t = pv * dv;
         }
     }
-    let mut out = matmul::matmul_nt(&scaled, p).expect("square by construction");
+    out.resize_zeroed(n, n);
+    matmul::gemm_into(out.view_mut(), 1.0, tmp.view(), p.view().t(), false, gemm);
     out.symmetrize_mut();
-    out
 }
 
 impl Learner for KrkPicard {

@@ -12,7 +12,7 @@
 use crate::dpp::likelihood::theta_sparse;
 use crate::dpp::Kernel;
 use crate::error::Result;
-use crate::learn::krk::{b2_matrix, l1_b_l1};
+use crate::learn::krk::{b2_matrix_into, l1_b_l1_into, KrkScratch};
 use crate::learn::traits::{Learner, TrainingSet};
 use crate::linalg::{matmul, Matrix};
 use crate::rng::Rng;
@@ -28,6 +28,9 @@ pub struct KrkStochastic {
     rng: Rng,
     cursor: usize,
     order: Vec<usize>,
+    /// Shared KRK workspaces (eigen scratches, GEMM pack buffers, sandwich
+    /// outputs) — the dense half of each stochastic step reuses them.
+    scratch: KrkScratch,
 }
 
 impl KrkStochastic {
@@ -41,6 +44,7 @@ impl KrkStochastic {
             rng: Rng::new(seed),
             cursor: 0,
             order: Vec::new(),
+            scratch: KrkScratch::default(),
         }
     }
 
@@ -66,20 +70,21 @@ impl KrkStochastic {
         out
     }
 
-    /// One stochastic L₁ half-update: Θ from `batch` only, sparse.
+    /// One stochastic L₁ half-update: Θ from `batch` only, sparse; the
+    /// dense algebra runs in the shared [`KrkScratch`] buffers.
     fn update_l1(&mut self, data: &TrainingSet, batch: &[usize]) -> Result<()> {
         let (n1, n2) = (self.l1.rows(), self.l2.rows());
         let kernel = Kernel::Kron2(self.l1.clone(), self.l2.clone());
         let subsets: Vec<Vec<usize>> =
             batch.iter().map(|&i| data.subsets[i].clone()).collect();
         let theta = theta_sparse(&kernel, &subsets, 1.0 / batch.len() as f64)?;
-        // A₁ on the sparse Θ: O(nnz).
-        let a1 = theta.block_trace(&self.l2, n1, n2)?;
-        let l1a1l1 = matmul::sandwich(&self.l1, &a1, &self.l1)?;
-        let l1bl1 = l1_b_l1(&self.l1, &self.l2)?;
-        let mut x = l1a1l1;
-        x -= &l1bl1;
-        self.l1.axpy(self.step_size / n2 as f64, &x)?;
+        // A₁ on the sparse Θ: O(nnz), into the reused contraction buffer.
+        let s = &mut self.scratch;
+        theta.block_trace_into(&self.l2, n1, n2, &mut s.contr)?;
+        matmul::sandwich_into(&mut s.sand, &self.l1, &s.contr, &self.l1, &mut s.tmp, &mut s.gemm)?;
+        l1_b_l1_into(&self.l1, &self.l2, s)?;
+        s.sand -= &s.bmat;
+        self.l1.axpy(self.step_size / n2 as f64, &s.sand)?;
         self.l1.symmetrize_mut();
         Ok(())
     }
@@ -91,12 +96,12 @@ impl KrkStochastic {
         let subsets: Vec<Vec<usize>> =
             batch.iter().map(|&i| data.subsets[i].clone()).collect();
         let theta = theta_sparse(&kernel, &subsets, 1.0 / batch.len() as f64)?;
-        let a2 = theta.weighted_block_sum(&self.l1, n1, n2)?;
-        let l2a2l2 = matmul::sandwich(&self.l2, &a2, &self.l2)?;
-        let b2 = b2_matrix(&self.l1, &self.l2)?;
-        let mut x = l2a2l2;
-        x -= &b2;
-        self.l2.axpy(self.step_size / n1 as f64, &x)?;
+        let s = &mut self.scratch;
+        theta.weighted_block_sum_into(&self.l1, n1, n2, &mut s.contr)?;
+        matmul::sandwich_into(&mut s.sand, &self.l2, &s.contr, &self.l2, &mut s.tmp, &mut s.gemm)?;
+        b2_matrix_into(&self.l1, &self.l2, s)?;
+        s.sand -= &s.bmat;
+        self.l2.axpy(self.step_size / n1 as f64, &s.sand)?;
         self.l2.symmetrize_mut();
         Ok(())
     }

@@ -22,6 +22,10 @@ pub struct Picard {
     /// cone (on by default; the step-size ablation disables it to measure
     /// the raw admissible range).
     pub safeguard: bool,
+    /// Step candidate / rollback buffer (no per-step kernel clone).
+    candidate: Matrix,
+    /// PD-check factor buffer.
+    cholwork: Matrix,
 }
 
 impl Picard {
@@ -30,7 +34,13 @@ impl Picard {
         if !l0.is_square() {
             return Err(Error::Shape("picard: kernel must be square".into()));
         }
-        Ok(Picard { l: l0, step_size, safeguard: true })
+        Ok(Picard {
+            l: l0,
+            step_size,
+            safeguard: true,
+            candidate: Matrix::zeros(0, 0),
+            cholwork: Matrix::zeros(0, 0),
+        })
     }
 
     /// Borrow the current kernel matrix.
@@ -56,16 +66,17 @@ impl Learner for Picard {
         delta -= &inv;
         // L ← L + a·LΔL. For a > 1 PD is no longer guaranteed (§3.1.1 /
         // [25]); safeguard by falling back to the a = 1 step, which is.
+        // Candidate + rollback live in learner-held buffers (no clones).
         let ldl = matmul::sandwich(&self.l, &delta, &self.l)?;
-        let mut candidate = self.l.clone();
-        candidate.axpy(self.step_size, &ldl)?;
-        candidate.symmetrize_mut();
-        if self.safeguard && self.step_size != 1.0 && !cholesky::is_pd(&candidate) {
-            candidate = self.l.clone();
-            candidate.axpy(1.0, &ldl)?;
-            candidate.symmetrize_mut();
-        }
-        self.l = candidate;
+        crate::learn::krk::apply_step_into(
+            &mut self.l,
+            &ldl,
+            self.step_size,
+            1.0,
+            self.safeguard,
+            &mut self.candidate,
+            &mut self.cholwork,
+        );
         Ok(())
     }
 

@@ -33,6 +33,19 @@
 //! | §5 experiment protocols (init, synthetic data, figures) | [`learn::init`], [`data`], [`figures`] |
 //! | Baselines: full Picard (ref. [25]), EM (ref. [10]) | [`learn::picard`], [`learn::em`] |
 //!
+//! ## Zero-copy linalg core
+//!
+//! Everything above bottoms out in [`linalg`]: borrowed stride-aware views
+//! ([`linalg::MatRef`]/[`linalg::MatMut`]; sub-blocks and transposes are
+//! O(1)), a packed register-tiled GEMM ([`linalg::matmul::gemm_into`],
+//! 8×4 f64 micro-kernel, row-panel parallelism, bitwise thread-count
+//! invariant), and a two-stage symmetric eigensolver
+//! ([`linalg::eigen::SymEigen`]: blocked Householder tridiagonalization
+//! whose trailing updates are GEMMs, plus tql2 with parallel rotation
+//! replay). Steady-state hot paths — the sampler's phase 2, the KRK-Picard
+//! half-updates, the likelihood sweep — run allocation-free through
+//! caller-held scratches (see DESIGN.md §1 and `tests/alloc_free.rs`).
+//!
 //! ## Sampling engine
 //!
 //! [`dpp::Sampler`] eigendecomposes once per kernel (the §4 preprocessing),

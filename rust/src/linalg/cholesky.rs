@@ -18,11 +18,33 @@ impl Cholesky {
     /// Factor a symmetric PD matrix. Fails with `Error::Numerical` if a
     /// pivot is non-positive (matrix not PD to machine precision).
     pub fn factor(a: &Matrix) -> Result<Self> {
+        let mut l = Matrix::zeros(0, 0);
+        Self::factor_into(a, &mut l)?;
+        Ok(Cholesky { l })
+    }
+
+    /// Factor into a caller-held lower-triangular buffer (resized in
+    /// place) — the allocation-free form behind [`is_pd_with`] and the
+    /// learners' PD safeguards.
+    pub fn factor_into(a: &Matrix, l: &mut Matrix) -> Result<()> {
         if !a.is_square() {
             return Err(Error::Shape("cholesky: matrix not square".into()));
         }
+        Self::factor_raw(a, l).map_err(|(j, d)| {
+            Error::Numerical(format!(
+                "cholesky: non-PD pivot {d:.3e} at index {j} (n={})",
+                a.rows()
+            ))
+        })
+    }
+
+    /// Allocation-free factorization core: reports a bad pivot as
+    /// `(index, value)` without constructing an error string, so the PD
+    /// *check* stays heap-silent even when it fails (which is its job in
+    /// the learners' step-size safeguards).
+    fn factor_raw(a: &Matrix, l: &mut Matrix) -> std::result::Result<(), (usize, f64)> {
         let n = a.rows();
-        let mut l = Matrix::zeros(n, n);
+        l.resize_zeroed(n, n);
         for j in 0..n {
             // diagonal
             let mut d = a.get(j, j);
@@ -31,9 +53,7 @@ impl Cholesky {
                 d -= v * v;
             }
             if d <= 0.0 || !d.is_finite() {
-                return Err(Error::Numerical(format!(
-                    "cholesky: non-PD pivot {d:.3e} at index {j} (n={n})"
-                )));
+                return Err((j, d));
             }
             let dj = d.sqrt();
             l.set(j, j, dj);
@@ -47,7 +67,7 @@ impl Cholesky {
                 l.set(i, j, v / dj);
             }
         }
-        Ok(Cholesky { l })
+        Ok(())
     }
 
     /// Matrix dimension.
@@ -89,19 +109,24 @@ impl Cholesky {
         Ok(y)
     }
 
-    /// Solve `A X = B` column-by-column.
+    /// Solve `A X = B` — two row-oriented triangular sweeps across all
+    /// right-hand sides at once ([`crate::linalg::trisolve`]); the `Lᵀ`
+    /// sweep reads the factor through a transpose view.
     pub fn solve_matrix(&self, b: &Matrix) -> Result<Matrix> {
-        let n = self.n();
-        if b.rows() != n {
+        let mut x = b.clone();
+        self.solve_matrix_in_place(&mut x)?;
+        Ok(x)
+    }
+
+    /// In-place form of [`Cholesky::solve_matrix`]: `x` holds `B` on entry
+    /// and `A⁻¹B` on exit. No transposes, no per-column allocation.
+    pub fn solve_matrix_in_place(&self, x: &mut Matrix) -> Result<()> {
+        if x.rows() != self.n() {
             return Err(Error::Shape("cholesky solve: row mismatch".into()));
         }
-        let bt = b.transpose();
-        let mut xt = Matrix::zeros(b.cols(), n);
-        for j in 0..b.cols() {
-            let col = self.solve_vec(bt.row(j))?;
-            xt.row_mut(j).copy_from_slice(&col);
-        }
-        Ok(xt.transpose())
+        crate::linalg::trisolve::solve_lower_in_place(self.l.view(), x, false);
+        crate::linalg::trisolve::solve_upper_in_place(self.l.view().t(), x, false);
+        Ok(())
     }
 
     /// Full inverse `A⁻¹ = L⁻ᵀ·L⁻¹` (symmetric). Computes the triangular
@@ -197,6 +222,14 @@ pub fn logdet_pd(a: &Matrix) -> Result<f64> {
     Ok(Cholesky::factor(a)?.logdet())
 }
 
+/// [`logdet_pd`] into a caller-held factor buffer — allocation-free once
+/// `work` has capacity (the per-subset likelihood sweep).
+pub fn logdet_pd_with(a: &Matrix, work: &mut Matrix) -> Result<f64> {
+    Cholesky::factor_into(a, work)?;
+    let n = work.rows();
+    Ok(2.0 * (0..n).map(|i| work.get(i, i).ln()).sum::<f64>())
+}
+
 /// Convenience: inverse of a symmetric PD matrix.
 pub fn inverse_pd(a: &Matrix) -> Result<Matrix> {
     Ok(Cholesky::factor(a)?.inverse())
@@ -205,6 +238,13 @@ pub fn inverse_pd(a: &Matrix) -> Result<Matrix> {
 /// Fast PD check (factor succeeds).
 pub fn is_pd(a: &Matrix) -> bool {
     Cholesky::factor(a).is_ok()
+}
+
+/// PD check into a caller-held factor buffer — the allocation-free form
+/// used by the learners' step-size safeguards (heap-silent even when the
+/// check fails).
+pub fn is_pd_with(a: &Matrix, work: &mut Matrix) -> bool {
+    a.is_square() && Cholesky::factor_raw(a, work).is_ok()
 }
 
 #[cfg(test)]
@@ -281,5 +321,28 @@ mod tests {
         let x = ch.solve_matrix(&b).unwrap();
         let ax = matmul(&a, &x).unwrap();
         assert!(ax.rel_diff(&b) < 1e-9);
+        // The row-oriented multi-RHS solve must agree with per-vector
+        // substitution.
+        let bt = b.transpose();
+        for j in 0..b.cols() {
+            let col = ch.solve_vec(bt.row(j)).unwrap();
+            for i in 0..12 {
+                assert!((x[(i, j)] - col[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn factor_into_and_is_pd_with_reuse_buffer() {
+        let mut work = Matrix::zeros(0, 0);
+        let a = spd(10, 13);
+        assert!(is_pd_with(&a, &mut work));
+        let ch = Cholesky::factor(&a).unwrap();
+        assert_eq!(work, ch.l);
+        let mut bad = Matrix::identity(3);
+        bad.set(2, 2, -1.0);
+        assert!(!is_pd_with(&bad, &mut work));
+        // Buffer is reusable after a failure and across sizes.
+        assert!(is_pd_with(&spd(6, 14), &mut work));
     }
 }

@@ -200,66 +200,90 @@ pub fn partial_trace_2(m: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
 /// assert!(fast.rel_diff(&want) < 1e-12);
 /// ```
 pub fn tr1_scaled(m: &Matrix, s2: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    let mut out = Matrix::zeros(0, 0);
+    tr1_scaled_into(m, s2, n1, n2, &mut out)?;
+    Ok(out)
+}
+
+/// [`tr1_scaled`] into a caller-held output — the allocation-free form
+/// behind the KRK-Picard hot loop (the transposed `S₂` staging buffer is
+/// a reused thread-local).
+pub fn tr1_scaled_into(
+    m: &Matrix,
+    s2: &Matrix,
+    n1: usize,
+    n2: usize,
+    out: &mut Matrix,
+) -> Result<()> {
     check_kron_dims(m, n1, n2)?;
     if s2.shape() != (n2, n2) {
         return Err(Error::Shape("tr1_scaled: S2 shape mismatch".into()));
     }
     let n = n1 * n2;
     let data = m.as_slice();
-    let s2t = s2.transpose(); // so inner loops stream rows of both
-    let mut out = Matrix::zeros(n1, n1);
-    // Parallel over block rows when large.
-    let do_row = |i: usize, orow: &mut [f64]| {
-        for j in 0..n1 {
-            let mut t = 0.0;
-            for q in 0..n2 {
-                // Tr(S2 M_(ij)) = Σ_q Σ_p S2[q,p]·M_(ij)[p,q]... using
-                // transposed S2 rows: Σ_q  dot(S2ᵀ[q,:], M_(ij)[:,q]) is
-                // column access; instead iterate rows of the block:
-                // Σ_p dot(M_(ij)[p, :], S2ᵀ[p, :])  — since
-                // Tr(S2·B) = Σ_p (S2·B)[p,p] = Σ_p Σ_r S2[p,r] B[r,p]
-                //          = Σ_r Σ_p B[r,p] S2ᵀ[r,p]... wait, rewrite:
-                // Tr(S2·B) = Σ_{p,r} S2[p,r]·B[r,p] = Σ_r dot(B[r,:], S2ᵀ[r,:]).
-                let r = q; // rename for clarity: iterate block rows
-                let brow = &data[(i * n2 + r) * n + j * n2..(i * n2 + r) * n + (j + 1) * n2];
-                t += dot(brow, s2t.row(r));
+    out.resize_zeroed(n1, n1);
+    // Transposed S2 (thread-local staging) so inner loops stream rows of
+    // both operands: Tr(S2·B) = Σ_{p,r} S2[p,r]·B[r,p]
+    //                         = Σ_r dot(B[r,:], S2ᵀ[r,:]).
+    with_transposed(s2, |s2t| {
+        let do_row = |i: usize, orow: &mut [f64]| {
+            for (j, oj) in orow.iter_mut().enumerate() {
+                let mut t = 0.0;
+                for r in 0..n2 {
+                    let brow =
+                        &data[(i * n2 + r) * n + j * n2..(i * n2 + r) * n + (j + 1) * n2];
+                    t += dot(brow, s2t.row(r));
+                }
+                *oj = t;
             }
-            orow[j] = t;
+        };
+        // Parallel over block rows when large.
+        if n1 * n1 * n2 * n2 > 1 << 22 {
+            let nthreads = matmul::available_threads();
+            let band = n1.div_ceil(nthreads).max(1);
+            let out_slice = out.as_mut_slice();
+            std::thread::scope(|s| {
+                let mut rest = out_slice;
+                let mut start = 0usize;
+                let mut handles = Vec::new();
+                while start < n1 {
+                    let len = band.min(n1 - start);
+                    let (chunk, tail) = rest.split_at_mut(len * n1);
+                    rest = tail;
+                    let lo = start;
+                    let do_row = &do_row;
+                    handles.push(s.spawn(move || {
+                        for (k, i) in (lo..lo + len).enumerate() {
+                            do_row(i, &mut chunk[k * n1..(k + 1) * n1]);
+                        }
+                    }));
+                    start += len;
+                }
+                for h in handles {
+                    h.join().expect("tr1_scaled worker panicked");
+                }
+            });
+        } else {
+            for i in 0..n1 {
+                do_row(i, out.row_mut(i));
+            }
         }
-    };
-    if n1 * n1 * n2 * n2 > 1 << 22 {
-        let nthreads = matmul::available_threads();
-        let band = n1.div_ceil(nthreads).max(1);
-        let out_slice = out.as_mut_slice();
-        std::thread::scope(|s| {
-            let mut rest = out_slice;
-            let mut start = 0usize;
-            let mut handles = Vec::new();
-            while start < n1 {
-                let len = band.min(n1 - start);
-                let (chunk, tail) = rest.split_at_mut(len * n1);
-                rest = tail;
-                let lo = start;
-                let do_row = &do_row;
-                handles.push(s.spawn(move || {
-                    for (k, i) in (lo..lo + len).enumerate() {
-                        do_row(i, &mut chunk[k * n1..(k + 1) * n1]);
-                    }
-                }));
-                start += len;
-            }
-            for h in handles {
-                h.join().expect("tr1_scaled worker panicked");
-            }
-        });
-    } else {
-        for i in 0..n1 {
-            let mut row = vec![0.0; n1];
-            do_row(i, &mut row);
-            out.row_mut(i).copy_from_slice(&row);
-        }
+    });
+    Ok(())
+}
+
+/// Run `f` with a thread-local transposed copy of `s` (allocation-free
+/// once the staging buffer has grown to the working size).
+fn with_transposed<R>(s: &Matrix, f: impl FnOnce(&Matrix) -> R) -> R {
+    use std::cell::RefCell;
+    thread_local! {
+        static BUF: RefCell<Matrix> = RefCell::new(Matrix::zeros(0, 0));
     }
-    Ok(out)
+    BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        s.transpose_into(&mut b);
+        f(&b)
+    })
 }
 
 /// Scaled partial trace `Tr₂((S₁ ⊗ I) M) = Σ_{i,l} S₁[i,l] · M_(li)` — the
@@ -276,13 +300,27 @@ pub fn tr1_scaled(m: &Matrix, s2: &Matrix, n1: usize, n2: usize) -> Result<Matri
 /// assert!(fast.rel_diff(&want) < 1e-12);
 /// ```
 pub fn tr2_scaled(m: &Matrix, s1: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    let mut out = Matrix::zeros(0, 0);
+    tr2_scaled_into(m, s1, n1, n2, &mut out)?;
+    Ok(out)
+}
+
+/// [`tr2_scaled`] into a caller-held output (allocation-free once `out`
+/// has capacity).
+pub fn tr2_scaled_into(
+    m: &Matrix,
+    s1: &Matrix,
+    n1: usize,
+    n2: usize,
+    out: &mut Matrix,
+) -> Result<()> {
     check_kron_dims(m, n1, n2)?;
     if s1.shape() != (n1, n1) {
         return Err(Error::Shape("tr2_scaled: S1 shape mismatch".into()));
     }
     let n = n1 * n2;
     let data = m.as_slice();
-    let mut out = Matrix::zeros(n2, n2);
+    out.resize_zeroed(n2, n2);
     for i in 0..n1 {
         for l in 0..n1 {
             let w = s1.get(i, l);
@@ -297,7 +335,7 @@ pub fn tr2_scaled(m: &Matrix, s1: &Matrix, n1: usize, n2: usize) -> Result<Matri
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Weighted block sum `Σ_{i,j} W[i,j] · M_(ij)` (an `n2×n2` matrix) — the
@@ -313,13 +351,27 @@ pub fn tr2_scaled(m: &Matrix, s1: &Matrix, n1: usize, n2: usize) -> Result<Matri
 /// assert!(summed.rel_diff(&tr2) < 1e-13);
 /// ```
 pub fn weighted_block_sum(m: &Matrix, w: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+    let mut out = Matrix::zeros(0, 0);
+    weighted_block_sum_into(m, w, n1, n2, &mut out)?;
+    Ok(out)
+}
+
+/// [`weighted_block_sum`] into a caller-held output (allocation-free once
+/// `out` has capacity).
+pub fn weighted_block_sum_into(
+    m: &Matrix,
+    w: &Matrix,
+    n1: usize,
+    n2: usize,
+    out: &mut Matrix,
+) -> Result<()> {
     check_kron_dims(m, n1, n2)?;
     if w.shape() != (n1, n1) {
         return Err(Error::Shape("weighted_block_sum: W shape mismatch".into()));
     }
     let n = n1 * n2;
     let data = m.as_slice();
-    let mut out = Matrix::zeros(n2, n2);
+    out.resize_zeroed(n2, n2);
     for i in 0..n1 {
         for j in 0..n1 {
             let wij = w.get(i, j);
@@ -332,7 +384,7 @@ pub fn weighted_block_sum(m: &Matrix, w: &Matrix, n1: usize, n2: usize) -> Resul
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Block-trace contraction `A[k,l] = Tr(M_(kl) · B)` for all `(k,l)` — the
@@ -349,6 +401,18 @@ pub fn weighted_block_sum(m: &Matrix, w: &Matrix, n1: usize, n2: usize) -> Resul
 /// ```
 pub fn block_trace(m: &Matrix, b: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
     tr1_scaled(m, b, n1, n2)
+}
+
+/// [`block_trace`] into a caller-held output (alias of
+/// [`tr1_scaled_into`], kept for call-site readability).
+pub fn block_trace_into(
+    m: &Matrix,
+    b: &Matrix,
+    n1: usize,
+    n2: usize,
+    out: &mut Matrix,
+) -> Result<()> {
+    tr1_scaled_into(m, b, n1, n2, out)
 }
 
 /// Mixed weighted partial trace over a three-factor index split
@@ -654,6 +718,24 @@ mod tests {
                 assert!(blk.rel_diff(&b.scaled(a.get(i, j))) < 1e-13);
             }
         }
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let n1 = 3;
+        let n2 = 4;
+        let m = rnd(n1 * n2, 41);
+        let s2 = rnd(n2, 42);
+        let s1 = rnd(n1, 43);
+        let mut out = Matrix::zeros(7, 7); // wrong shape: must be resized
+        tr1_scaled_into(&m, &s2, n1, n2, &mut out).unwrap();
+        assert!(out.rel_diff(&tr1_scaled(&m, &s2, n1, n2).unwrap()) < 1e-15);
+        tr2_scaled_into(&m, &s1, n1, n2, &mut out).unwrap();
+        assert!(out.rel_diff(&tr2_scaled(&m, &s1, n1, n2).unwrap()) < 1e-15);
+        weighted_block_sum_into(&m, &s1, n1, n2, &mut out).unwrap();
+        assert!(out.rel_diff(&weighted_block_sum(&m, &s1, n1, n2).unwrap()) < 1e-15);
+        block_trace_into(&m, &s2, n1, n2, &mut out).unwrap();
+        assert!(out.rel_diff(&block_trace(&m, &s2, n1, n2).unwrap()) < 1e-15);
     }
 
     #[test]

@@ -125,19 +125,24 @@ impl Lu {
         Ok(y)
     }
 
-    /// Solve `A X = B`.
+    /// Solve `A X = B`: permute rows of `B`, then two row-oriented
+    /// triangular sweeps over all right-hand sides at once
+    /// ([`crate::linalg::trisolve`]) against the packed factors — no
+    /// transposes, no per-column allocation.
     pub fn solve_matrix(&self, b: &Matrix) -> Result<Matrix> {
         let n = self.n();
         if b.rows() != n {
             return Err(Error::Shape("lu solve: row mismatch".into()));
         }
-        let bt = b.transpose();
-        let mut xt = Matrix::zeros(b.cols(), n);
-        for j in 0..b.cols() {
-            let col = self.solve_vec(bt.row(j))?;
-            xt.row_mut(j).copy_from_slice(&col);
+        let mut x = Matrix::zeros(n, b.cols());
+        for (i, &src) in self.perm.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(b.row(src));
         }
-        Ok(xt.transpose())
+        // Unit lower factor (multipliers below the diagonal of `lu`).
+        crate::linalg::trisolve::solve_lower_in_place(self.lu.view(), &mut x, true);
+        // Upper factor (the upper triangle of `lu`).
+        crate::linalg::trisolve::solve_upper_in_place(self.lu.view(), &mut x, false);
+        Ok(x)
     }
 
     /// Inverse `A⁻¹`.
@@ -232,5 +237,22 @@ mod tests {
     #[test]
     fn rejects_non_square() {
         assert!(Lu::factor(&Matrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn solve_matrix_matches_per_vector_solves() {
+        let a = rnd(14, 31);
+        let lu = Lu::factor(&a).unwrap();
+        let b = rnd(14, 33).block(0, 0, 14, 6).unwrap();
+        let x = lu.solve_matrix(&b).unwrap();
+        let bt = b.transpose();
+        for j in 0..6 {
+            let col = lu.solve_vec(bt.row(j)).unwrap();
+            for i in 0..14 {
+                assert!((x[(i, j)] - col[i]).abs() < 1e-10, "({i},{j})");
+            }
+        }
+        let ax = matmul(&a, &x).unwrap();
+        assert!(ax.rel_diff(&b) < 1e-9);
     }
 }

@@ -1,29 +1,173 @@
-//! Matrix multiplication kernels.
+//! Matrix multiplication: packed, register-tiled GEMM over views.
 //!
-//! Three tiers, dispatched by size:
+//! Every variant (`matmul`, `matmul_nt`, `matmul_tn`, [`gram`],
+//! [`sandwich`], the `_into` forms) is expressed once over stride-aware
+//! views ([`MatRef`]/[`MatMut`]) and funnels into [`gemm_into`], which
+//! dispatches by problem volume:
 //!
-//! 1. `matmul_small` — straightforward ikj loops, best below ~64².
-//! 2. `matmul_blocked` — cache-blocked with a packed (transposed) RHS so the
-//!    inner loop is two contiguous streams; dot product unrolled 4-wide so
-//!    LLVM auto-vectorizes it.
-//! 3. `matmul_parallel` — the blocked kernel sharded over row bands across
-//!    `std::thread::scope` threads; used above a size threshold.
+//! 1. **naive** — ikj loops with vectorized row axpys, best below ~48³;
+//! 2. **packed** — A and B panels are copied into contiguous pack buffers
+//!    and an 8×4 f64 register-tile micro-kernel runs over them (32
+//!    accumulators live in registers; LLVM emits FMA-vectorized code);
+//! 3. **parallel** — the packed kernel sharded over C row-panels with
+//!    `std::thread::scope`, each worker packing A into its own buffer.
 //!
-//! `matmul` is the public entry point and picks the tier. Symmetric rank-k
-//! style helpers (`gram`, `sandwich`) are provided for the common DPP
-//! patterns `XᵀX` and `B A B`.
+//! Results are **bitwise deterministic and independent of the thread
+//! count**: each output element is accumulated by exactly one worker in a
+//! fixed k-order, so row-band partitioning never changes the arithmetic.
+//!
+//! Blocking arithmetic (f64 = 8 bytes):
+//!
+//! - `MR×NR = 8×4` register tile → 32 accumulators = 8 AVX2 vectors, with
+//!   room left for the A broadcast and B row loads.
+//! - `KC = 256`: one packed A micro-panel is `MR·KC = 16 KiB` and one
+//!   packed B micro-panel `NR·KC = 8 KiB`, so both stream through a 32 KiB
+//!   L1d alongside the C tile.
+//! - `MC = 128`: a packed A block is `MC·KC = 256 KiB` ≈ half a typical
+//!   512 KiB L2, leaving the other half for B panels and C traffic.
+//! - B is packed across the full output width per `KC` slab (no `NC`
+//!   blocking: ground-set sizes here keep `KC·N` comfortably inside L3).
+//!
+//! Pack buffers live in a [`GemmScratch`] (or a thread-local default for
+//! the convenience API), so steady-state callers allocate nothing.
 
 use super::matrix::Matrix;
+use super::view::{MatMut, MatRef};
 use crate::error::{Error, Result};
 
-/// Below this `m*n*k` volume, use the naive kernel.
+/// Below this `m·n·k` volume, use the naive kernel.
 const SMALL_VOLUME: usize = 48 * 48 * 48;
-/// Above this `m*n*k` volume, shard across threads.
+/// At or above this `m·n·k` volume, shard across threads.
 const PARALLEL_VOLUME: usize = 160 * 160 * 160;
-/// Cache block edge (f64 elements). 64×64 doubles = 32 KiB ≈ L1-friendly.
-const BLOCK: usize = 96;
 
-/// `C = A · B`. Dispatches on problem volume.
+/// Register-tile rows (micro-panel height of packed A).
+const MR: usize = 8;
+/// Register-tile columns (micro-panel width of packed B).
+const NR: usize = 4;
+/// k-extent of one packed slab: `MR·KC` = 16 KiB, `NR·KC` = 8 KiB (L1d).
+const KC: usize = 256;
+/// Row extent of one packed A block: `MC·KC` = 256 KiB (≈ half of L2).
+const MC: usize = 128;
+
+/// Reusable pack buffers for the packed GEMM. One `pack_b` slab is shared
+/// by all workers of a call; each worker owns one `pack_a` buffer. Grown
+/// on first use and reused, so repeated GEMMs allocate nothing.
+#[derive(Default)]
+pub struct GemmScratch {
+    pack_a: Vec<Vec<f64>>,
+    pack_b: Vec<f64>,
+}
+
+impl GemmScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, threads: usize, n: usize) {
+        let pb_len = n.div_ceil(NR) * NR * KC;
+        if self.pack_b.len() < pb_len {
+            self.pack_b.resize(pb_len, 0.0);
+        }
+        if self.pack_a.len() < threads {
+            self.pack_a.resize_with(threads, Vec::new);
+        }
+        for buf in &mut self.pack_a[..threads] {
+            if buf.len() < MC * KC {
+                buf.resize(MC * KC, 0.0);
+            }
+        }
+    }
+}
+
+/// Run `f` with the calling thread's default [`GemmScratch`] — the
+/// allocation-free backing of the convenience API.
+fn with_scratch<R>(f: impl FnOnce(&mut GemmScratch) -> R) -> R {
+    use std::cell::RefCell;
+    thread_local! {
+        static SCRATCH: RefCell<GemmScratch> = RefCell::new(GemmScratch::new());
+    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// General matrix multiply over views:
+/// `C = alpha·A·B` (or `C += alpha·A·B` when `accumulate`).
+///
+/// `A` and `B` may be any strided views (transposes and sub-blocks are
+/// free); `C` needs contiguous rows for the packed path and falls back to
+/// the naive kernel otherwise. Dispatches naive → packed → packed+parallel
+/// by volume. Bitwise deterministic, independent of thread count.
+pub fn gemm_into(
+    mut c: MatMut<'_>,
+    alpha: f64,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    accumulate: bool,
+    scratch: &mut GemmScratch,
+) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    assert_eq!(b.rows(), k, "gemm: inner dimension mismatch");
+    assert_eq!(c.shape(), (m, n), "gemm: output shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        return;
+    }
+    let volume = m * n * k;
+    if volume <= SMALL_VOLUME || c.col_stride() != 1 {
+        gemm_naive(c, alpha, a, b, accumulate);
+        return;
+    }
+    let row_blocks = m.div_ceil(MC);
+    let threads =
+        if volume >= PARALLEL_VOLUME { available_threads().min(row_blocks) } else { 1 };
+    scratch.ensure(threads, n);
+    let (pack_a_bufs, pack_b) = (&mut scratch.pack_a, &mut scratch.pack_b);
+    let mut first = true;
+    let mut pc = 0usize;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        pack_b_slab(b.submatrix(pc, 0, kc, n), pack_b, kc);
+        let add = accumulate || !first;
+        if threads <= 1 {
+            gemm_row_band(c.reborrow(), a, 0, pc, kc, pack_b, &mut pack_a_bufs[0], alpha, add);
+        } else {
+            let nblk = row_blocks.div_ceil(threads);
+            let pb: &[f64] = pack_b;
+            let rest0 = c.reborrow();
+            let bufs0 = pack_a_bufs.iter_mut();
+            std::thread::scope(|s| {
+                let mut rest = rest0;
+                let mut bufs = bufs0;
+                let mut row0 = 0usize;
+                let mut blk = 0usize;
+                while blk < row_blocks {
+                    let hi_blk = (blk + nblk).min(row_blocks);
+                    let hi_row = (hi_blk * MC).min(m);
+                    let rows = hi_row - row0;
+                    let (band, tail) = rest.split_rows_at(rows);
+                    rest = tail;
+                    let pa = bufs.next().expect("pack buffers sized to thread count");
+                    let lo = row0;
+                    s.spawn(move || {
+                        gemm_row_band(band, a, lo, pc, kc, pb, pa, alpha, add);
+                    });
+                    row0 = hi_row;
+                    blk = hi_blk;
+                }
+            });
+        }
+        first = false;
+        pc += kc;
+    }
+}
+
+/// `C = A·B`. Dispatches on problem volume; allocates only the result
+/// (pack buffers come from the thread-local scratch).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if a.cols() != b.rows() {
         return Err(Error::Shape(format!(
@@ -34,17 +178,35 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Result<Matrix> {
             b.cols()
         )));
     }
-    let volume = a.rows() * a.cols() * b.cols();
-    if volume <= SMALL_VOLUME {
-        Ok(matmul_small(a, b))
-    } else if volume <= PARALLEL_VOLUME {
-        Ok(matmul_blocked(a, b))
-    } else {
-        Ok(matmul_parallel(a, b, available_threads()))
-    }
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    with_scratch(|s| gemm_into(c.view_mut(), 1.0, a.view(), b.view(), false, s));
+    Ok(c)
 }
 
-/// `A · Bᵀ` without materializing the transpose.
+/// `C = A·B` into a caller-held output (resized in place; allocation-free
+/// once `out` has capacity).
+pub fn matmul_into(
+    out: &mut Matrix,
+    a: &Matrix,
+    b: &Matrix,
+    scratch: &mut GemmScratch,
+) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::Shape(format!(
+            "matmul_into: {}x{} times {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    out.resize_zeroed(a.rows(), b.cols());
+    gemm_into(out.view_mut(), 1.0, a.view(), b.view(), false, scratch);
+    Ok(())
+}
+
+/// `A · Bᵀ` — a transpose *view* of `B` routed through the same packed
+/// kernel (never materializes the transpose).
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if a.cols() != b.cols() {
         return Err(Error::Shape(format!(
@@ -55,24 +217,13 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
             b.cols()
         )));
     }
-    let (m, k) = a.shape();
-    let n = b.rows();
-    let mut c = Matrix::zeros(m, n);
-    let run = |rows: std::ops::Range<usize>, out: &mut [f64]| {
-        for (oi, i) in rows.clone().enumerate() {
-            let arow = a.row(i);
-            let crow = &mut out[oi * n..(oi + 1) * n];
-            for j in 0..n {
-                crow[j] = dot(arow, b.row(j));
-            }
-        }
-        let _ = k;
-    };
-    shard_rows(m, n, a.cols(), &run, c.as_mut_slice());
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    with_scratch(|s| gemm_into(c.view_mut(), 1.0, a.view(), b.view().t(), false, s));
     Ok(c)
 }
 
-/// `Aᵀ · B` without materializing the transpose.
+/// `Aᵀ · B` — a transpose *view* of `A` routed through the same packed
+/// kernel (never materializes the transpose).
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if a.rows() != b.rows() {
         return Err(Error::Shape(format!(
@@ -83,76 +234,26 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
             b.cols()
         )));
     }
-    // AᵀB with A row-major: accumulate outer products row by row. Output is
-    // (a.cols x b.cols); parallelize over output row bands.
-    let m = a.cols();
-    let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
-    let nthreads = if m * n * a.rows() > PARALLEL_VOLUME { available_threads() } else { 1 };
-    let band = m.div_ceil(nthreads);
-    let cdata = c.as_mut_slice();
-    std::thread::scope(|s| {
-        let mut rest = cdata;
-        let mut start = 0usize;
-        let mut handles = Vec::new();
-        while start < m {
-            let len = band.min(m - start);
-            let (chunk, tail) = rest.split_at_mut(len * n);
-            rest = tail;
-            let lo = start;
-            handles.push(s.spawn(move || {
-                for r in 0..a.rows() {
-                    let arow = a.row(r);
-                    let brow = b.row(r);
-                    for (oi, i) in (lo..lo + len).enumerate() {
-                        let ai = arow[i];
-                        if ai == 0.0 {
-                            continue;
-                        }
-                        let crow = &mut chunk[oi * n..(oi + 1) * n];
-                        for (cv, bv) in crow.iter_mut().zip(brow) {
-                            *cv += ai * bv;
-                        }
-                    }
-                }
-            }));
-            start += len;
-        }
-        for h in handles {
-            h.join().expect("matmul_tn worker panicked");
-        }
-    });
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    with_scratch(|s| gemm_into(c.view_mut(), 1.0, a.view().t(), b.view(), false, s));
     Ok(c)
 }
 
-/// Gram matrix `XᵀX` (symmetric; computes upper triangle and mirrors).
+/// Gram matrix `XᵀX` (exactly symmetric).
 pub fn gram(x: &Matrix) -> Matrix {
     let n = x.cols();
-    let xt = x.transpose(); // rows of xt are columns of x: contiguous dots
     let mut g = Matrix::zeros(n, n);
-    for i in 0..n {
-        let xi = xt.row(i);
-        for j in i..n {
-            let v = dot(xi, xt.row(j));
-            g.set(i, j, v);
-            g.set(j, i, v);
-        }
-    }
+    with_scratch(|s| gemm_into(g.view_mut(), 1.0, x.view().t(), x.view(), false, s));
+    g.symmetrize_mut();
     g
 }
 
-/// Gram matrix `X Xᵀ` (rows as points).
+/// Gram matrix `X Xᵀ` (rows as points; exactly symmetric).
 pub fn gram_rows(x: &Matrix) -> Matrix {
     let n = x.rows();
     let mut g = Matrix::zeros(n, n);
-    for i in 0..n {
-        let xi = x.row(i);
-        for j in i..n {
-            let v = dot(xi, x.row(j));
-            g.set(i, j, v);
-            g.set(j, i, v);
-        }
-    }
+    with_scratch(|s| gemm_into(g.view_mut(), 1.0, x.view(), x.view().t(), false, s));
+    g.symmetrize_mut();
     g
 }
 
@@ -168,6 +269,71 @@ pub fn sandwich(a: &Matrix, b: &Matrix, c: &Matrix) -> Result<Matrix> {
     } else {
         matmul(a, &matmul(b, c)?)
     }
+}
+
+/// `out = A·B·C` with caller-held temp and pack buffers — the
+/// allocation-free form used by the learners' hot loops.
+pub fn sandwich_into(
+    out: &mut Matrix,
+    a: &Matrix,
+    b: &Matrix,
+    c: &Matrix,
+    tmp: &mut Matrix,
+    scratch: &mut GemmScratch,
+) -> Result<()> {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let p = c.cols();
+    let left_first = m * k * n + m * n * p <= k * n * p + m * k * p;
+    if left_first {
+        matmul_into(tmp, a, b, scratch)?;
+        matmul_into(out, tmp, c, scratch)
+    } else {
+        matmul_into(tmp, b, c, scratch)?;
+        matmul_into(out, a, tmp, scratch)
+    }
+}
+
+/// `y = A·x` over a view, sharded across threads for large problems.
+/// Deterministic: each `y[i]` is one fixed-order dot product.
+pub fn matvec_into(y: &mut [f64], a: MatRef<'_>, x: &[f64]) {
+    let (m, k) = a.shape();
+    assert_eq!(y.len(), m, "matvec: output length");
+    assert_eq!(x.len(), k, "matvec: input length");
+    let run = |rows: std::ops::Range<usize>, out: &mut [f64]| {
+        if a.rows_contiguous() {
+            for (o, i) in rows.enumerate() {
+                out[o] = dot(a.row_slice(i), x);
+            }
+        } else {
+            for (o, i) in rows.enumerate() {
+                let mut s = 0.0;
+                for (j, xv) in x.iter().enumerate() {
+                    s += a.get(i, j) * xv;
+                }
+                out[o] = s;
+            }
+        }
+    };
+    let threads = if m * k >= 1 << 21 { available_threads().min(m.max(1)) } else { 1 };
+    if threads <= 1 {
+        run(0..m, y);
+        return;
+    }
+    let band = m.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        let mut rest = y;
+        let mut start = 0usize;
+        while start < m {
+            let len = band.min(m - start);
+            let (chunk, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let range = start..start + len;
+            let run = &run;
+            s.spawn(move || run(range, chunk));
+            start += len;
+        }
+    });
 }
 
 /// Unrolled dot product over two equal-length slices.
@@ -199,38 +365,211 @@ pub fn axpy_slice(y: &mut [f64], alpha: f64, x: &[f64]) {
     }
 }
 
-fn matmul_small(a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, k) = a.shape();
-    let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        // split borrow: write into raw slice
-        for l in 0..k {
-            let al = arow[l];
-            if al == 0.0 {
-                continue;
+// ---------------------------------------------------------------------------
+// Packed kernel internals
+// ---------------------------------------------------------------------------
+
+/// Pack an `mc × kc` block of A into MR-row micro-panels, k-major within
+/// each panel (`dst[panel·MR·kc + kk·MR + r]`), zero-padding the row tail.
+fn pack_a_block(src: MatRef<'_>, dst: &mut [f64], kc: usize) {
+    let mc = src.rows();
+    debug_assert_eq!(src.cols(), kc);
+    let npan = mc.div_ceil(MR);
+    for ip in 0..npan {
+        let base = ip * MR * kc;
+        let m_eff = MR.min(mc - ip * MR);
+        if src.rows_contiguous() {
+            for r in 0..m_eff {
+                let row = src.row_slice(ip * MR + r);
+                for (kk, &v) in row.iter().enumerate() {
+                    dst[base + kk * MR + r] = v;
+                }
             }
-            let brow = b.row(l);
-            let crow = &mut c.as_mut_slice()[i * n..(i + 1) * n];
-            axpy_slice(crow, al, brow);
+            for kk in 0..kc {
+                for r in m_eff..MR {
+                    dst[base + kk * MR + r] = 0.0;
+                }
+            }
+        } else {
+            for kk in 0..kc {
+                let d = &mut dst[base + kk * MR..base + kk * MR + MR];
+                for (r, dv) in d.iter_mut().enumerate() {
+                    *dv = if r < m_eff { src.get(ip * MR + r, kk) } else { 0.0 };
+                }
+            }
         }
     }
-    c
 }
 
-fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+/// Pack a `kc × n` slab of B into NR-column micro-panels, k-major within
+/// each panel (`dst[panel·NR·kc + kk·NR + c]`), zero-padding the column
+/// tail.
+fn pack_b_slab(src: MatRef<'_>, dst: &mut [f64], kc: usize) {
+    let n = src.cols();
+    debug_assert_eq!(src.rows(), kc);
+    let npan = n.div_ceil(NR);
+    for jp in 0..npan {
+        let base = jp * NR * kc;
+        let j0 = jp * NR;
+        let n_eff = NR.min(n - j0);
+        if src.rows_contiguous() {
+            for kk in 0..kc {
+                let row = &src.row_slice(kk)[j0..j0 + n_eff];
+                let d = &mut dst[base + kk * NR..base + kk * NR + NR];
+                d[..n_eff].copy_from_slice(row);
+                for dv in &mut d[n_eff..] {
+                    *dv = 0.0;
+                }
+            }
+        } else {
+            for kk in 0..kc {
+                let d = &mut dst[base + kk * NR..base + kk * NR + NR];
+                for (c, dv) in d.iter_mut().enumerate() {
+                    *dv = if c < n_eff { src.get(kk, j0 + c) } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+/// The 8×4 register-tile micro-kernel: 32 accumulators held in registers,
+/// 32 FMAs per 12 loads. `pa`/`pb` are one packed micro-panel each.
+#[inline(always)]
+fn micro_8x4(pa: &[f64], pb: &[f64], kc: usize) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for kk in 0..kc {
+        let a = &pa[kk * MR..kk * MR + MR];
+        let b = &pb[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            for c in 0..NR {
+                acc[r][c] += ar * b[c];
+            }
+        }
+    }
+    acc
+}
+
+/// Write one micro-tile into C (`add` accumulates, otherwise stores —
+/// the first `KC` slab stores, later slabs accumulate).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn write_tile(
+    c: &mut MatMut<'_>,
+    r0: usize,
+    j0: usize,
+    m_eff: usize,
+    n_eff: usize,
+    acc: &[[f64; NR]; MR],
+    alpha: f64,
+    add: bool,
+) {
+    for (r, arow) in acc.iter().enumerate().take(m_eff) {
+        let crow = &mut c.row_slice_mut(r0 + r)[j0..j0 + n_eff];
+        if add {
+            for (cv, av) in crow.iter_mut().zip(arow) {
+                *cv += alpha * av;
+            }
+        } else {
+            for (cv, av) in crow.iter_mut().zip(arow) {
+                *cv = alpha * av;
+            }
+        }
+    }
+}
+
+/// Compute one C row band for one `KC` slab: pack A blocks into the
+/// worker-local buffer, then sweep B panels × A panels with the
+/// micro-kernel. `row0` is the band's global row offset into A.
+#[allow(clippy::too_many_arguments)]
+fn gemm_row_band(
+    mut c: MatMut<'_>,
+    a: MatRef<'_>,
+    row0: usize,
+    pc: usize,
+    kc: usize,
+    pb: &[f64],
+    pa_buf: &mut Vec<f64>,
+    alpha: f64,
+    add: bool,
+) {
+    let n = c.cols();
+    let m_band = c.rows();
+    let npan_b = n.div_ceil(NR);
+    let pa = pa_buf.as_mut_slice();
+    for ic in (0..m_band).step_by(MC) {
+        let mc = MC.min(m_band - ic);
+        pack_a_block(a.submatrix(row0 + ic, pc, mc, kc), pa, kc);
+        let npan_a = mc.div_ceil(MR);
+        for jp in 0..npan_b {
+            let j0 = jp * NR;
+            let n_eff = NR.min(n - j0);
+            let pbp = &pb[jp * NR * kc..(jp + 1) * NR * kc];
+            for ip in 0..npan_a {
+                let r0 = ic + ip * MR;
+                let m_eff = MR.min(mc - ip * MR);
+                let pap = &pa[ip * MR * kc..(ip + 1) * MR * kc];
+                let acc = micro_8x4(pap, pbp, kc);
+                write_tile(&mut c, r0, j0, m_eff, n_eff, &acc, alpha, add);
+            }
+        }
+    }
+}
+
+/// Naive ikj fallback for small volumes and exotically-strided outputs.
+fn gemm_naive(mut c: MatMut<'_>, alpha: f64, a: MatRef<'_>, b: MatRef<'_>, accumulate: bool) {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    if !accumulate {
+        c.fill(0.0);
+    }
+    if c.col_stride() == 1 && b.rows_contiguous() {
+        for i in 0..m {
+            for l in 0..k {
+                let al = alpha * a.get(i, l);
+                if al != 0.0 {
+                    axpy_slice(c.row_slice_mut(i), al, b.row_slice(l));
+                }
+            }
+        }
+    } else {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += a.get(i, l) * b.get(l, j);
+                }
+                let v = c.get(i, j) + alpha * s;
+                c.set(i, j, v);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Legacy blocked kernel (kept for before/after benchmarking)
+// ---------------------------------------------------------------------------
+
+/// Cache block edge of the legacy kernel: 96×96 doubles = 72 KiB per
+/// operand block — an L2-resident tile (it never fit L1; the stale
+/// "64×64 = 32 KiB" note this constant used to carry was wrong). The
+/// packed kernel above replaces it; this stays as the benchmark baseline.
+const LEGACY_BLOCK: usize = 96;
+
+/// The pre-refactor cache-blocked GEMM (RHS streamed unpacked, 2-row
+/// micro-tile). Retained so `bench_linalg` can report packed-vs-legacy
+/// speedups per commit; not used by any hot path.
+pub fn matmul_blocked_legacy(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, _) = a.shape();
     let n = b.cols();
     let mut c = Matrix::zeros(m, n);
-    block_kernel(a, b, 0..m, c.as_mut_slice());
+    legacy_block_kernel(a, b, 0..m, c.as_mut_slice());
     c
 }
 
-/// `c[j] += a0·b0[j] + a1·b1[j] + a2·b2[j] + a3·b3[j]` — four fused
-/// rank-1 contributions per C-row traversal (4 FMAs per load/store of
-/// `c`, vs 1 for a plain axpy). This is the matmul micro-kernel.
+/// `c[j] += a0·b0[j] + ... + a3·b3[j]` — the legacy 4-wide fused axpy.
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn axpy4_slice(
     c: &mut [f64],
     a0: f64,
@@ -249,19 +588,16 @@ fn axpy4_slice(
     }
 }
 
-/// Blocked ikj kernel writing rows `rows` of the output into `out`
-/// (`out` holds exactly those rows, row-major). The l loop is unrolled
-/// 4-wide through [`axpy4_slice`].
-fn block_kernel(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f64]) {
+/// Legacy blocked ikj kernel writing rows `rows` of the output into `out`.
+fn legacy_block_kernel(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut [f64]) {
     let k = a.cols();
     let n = b.cols();
     let row0 = rows.start;
-    for lb in (0..k).step_by(BLOCK) {
-        let lmax = (lb + BLOCK).min(k);
-        for jb in (0..n).step_by(BLOCK) {
-            let jmax = (jb + BLOCK).min(n);
+    for lb in (0..k).step_by(LEGACY_BLOCK) {
+        let lmax = (lb + LEGACY_BLOCK).min(k);
+        for jb in (0..n).step_by(LEGACY_BLOCK) {
+            let jmax = (jb + LEGACY_BLOCK).min(n);
             let mut i = rows.start;
-            // 2-row micro-tile: each loaded B panel row feeds two C rows.
             while i + 2 <= rows.end {
                 let (a0row, a1row) = (a.row(i), a.row(i + 1));
                 let base = (i - row0) * n;
@@ -288,7 +624,6 @@ fn block_kernel(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut 
                 }
                 i += 2;
             }
-            // Remainder row: 4-wide l unroll.
             while i < rows.end {
                 let arow = a.row(i);
                 let crow = &mut out[(i - row0) * n + jb..(i - row0) * n + jmax];
@@ -318,63 +653,6 @@ fn block_kernel(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out: &mut 
             }
         }
     }
-}
-
-fn matmul_parallel(a: &Matrix, b: &Matrix, nthreads: usize) -> Matrix {
-    let (m, _) = a.shape();
-    let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
-    let band = m.div_ceil(nthreads).max(1);
-    let cdata = c.as_mut_slice();
-    std::thread::scope(|s| {
-        let mut rest = cdata;
-        let mut start = 0usize;
-        let mut handles = Vec::new();
-        while start < m {
-            let len = band.min(m - start);
-            let (chunk, tail) = rest.split_at_mut(len * n);
-            rest = tail;
-            let range = start..start + len;
-            handles.push(s.spawn(move || block_kernel(a, b, range, chunk)));
-            start += len;
-        }
-        for h in handles {
-            h.join().expect("matmul worker panicked");
-        }
-    });
-    c
-}
-
-/// Helper: run `f` over row bands, possibly in parallel, writing into `out`.
-fn shard_rows(
-    m: usize,
-    n: usize,
-    k: usize,
-    f: &(dyn Fn(std::ops::Range<usize>, &mut [f64]) + Sync),
-    out: &mut [f64],
-) {
-    let nthreads = if m * n * k > PARALLEL_VOLUME { available_threads() } else { 1 };
-    if nthreads <= 1 {
-        f(0..m, out);
-        return;
-    }
-    let band = m.div_ceil(nthreads).max(1);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0usize;
-        let mut handles = Vec::new();
-        while start < m {
-            let len = band.min(m - start);
-            let (chunk, tail) = rest.split_at_mut(len * n);
-            rest = tail;
-            let range = start..start + len;
-            handles.push(s.spawn(move || f(range, chunk)));
-            start += len;
-        }
-        for h in handles {
-            h.join().expect("shard_rows worker panicked");
-        }
-    });
 }
 
 /// Number of worker threads to use for parallel kernels.
@@ -420,7 +698,8 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matches_naive() {
+    fn packed_matches_naive() {
+        // Above SMALL_VOLUME, below PARALLEL_VOLUME: single-thread packed.
         let a = pseudo_random(90, 77, 3);
         let b = pseudo_random(77, 85, 4);
         let c = matmul(&a, &b).unwrap();
@@ -428,11 +707,35 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_blocked() {
+    fn parallel_matches_naive() {
         let a = pseudo_random(200, 180, 5);
         let b = pseudo_random(180, 190, 6);
-        let c = matmul_parallel(&a, &b, 4);
-        assert!(c.rel_diff(&matmul_blocked(&a, &b)) < 1e-12);
+        let c = matmul(&a, &b).unwrap();
+        assert!(c.rel_diff(&naive(&a, &b)) < 1e-12);
+    }
+
+    #[test]
+    fn legacy_matches_packed() {
+        let a = pseudo_random(130, 120, 15);
+        let b = pseudo_random(120, 125, 16);
+        let c = matmul(&a, &b).unwrap();
+        assert!(c.rel_diff(&matmul_blocked_legacy(&a, &b)) < 1e-12);
+    }
+
+    #[test]
+    fn ragged_panel_edges() {
+        // Shapes straddling every MR/NR/KC boundary.
+        for (m, k, n, seed) in
+            [(8, 256, 4, 20), (9, 257, 5, 21), (65, 300, 67, 22), (1, 513, 1, 23)]
+        {
+            let a = pseudo_random(m, k, seed);
+            let b = pseudo_random(k, n, seed + 100);
+            let c = matmul(&a, &b).unwrap();
+            assert!(
+                c.rel_diff(&naive(&a, &b)) < 1e-12,
+                "mismatch at {m}x{k}x{n}"
+            );
+        }
     }
 
     #[test]
@@ -440,6 +743,16 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         assert!(matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let a = Matrix::zeros(0, 3);
+        let b = Matrix::zeros(3, 4);
+        assert_eq!(matmul(&a, &b).unwrap().shape(), (0, 4));
+        let a = Matrix::zeros(2, 0);
+        let b = Matrix::zeros(0, 4);
+        assert_eq!(matmul(&a, &b).unwrap(), Matrix::zeros(2, 4));
     }
 
     #[test]
@@ -456,12 +769,67 @@ mod tests {
     }
 
     #[test]
-    fn tn_parallel_path() {
-        // Force the threaded path in matmul_tn.
+    fn nt_tn_large_use_packed_path() {
         let a = pseudo_random(180, 170, 19);
-        let b = pseudo_random(180, 175, 20);
-        let c = matmul_tn(&a, &b).unwrap();
-        assert!(c.rel_diff(&naive(&a.transpose(), &b)) < 1e-11);
+        let b = pseudo_random(175, 170, 20);
+        let c = matmul_nt(&a, &b).unwrap();
+        assert!(c.rel_diff(&naive(&a, &b.transpose())) < 1e-11);
+        let c2 = matmul_tn(&pseudo_random(180, 170, 24), &pseudo_random(180, 175, 25)).unwrap();
+        let a2 = pseudo_random(180, 170, 24);
+        let b2 = pseudo_random(180, 175, 25);
+        assert!(c2.rel_diff(&naive(&a2.transpose(), &b2)) < 1e-11);
+    }
+
+    #[test]
+    fn gemm_accumulate_and_alpha() {
+        let a = pseudo_random(60, 70, 11);
+        let b = pseudo_random(70, 55, 12);
+        let mut c = pseudo_random(60, 55, 13);
+        let c0 = c.clone();
+        let mut s = GemmScratch::new();
+        gemm_into(c.view_mut(), -2.0, a.view(), b.view(), true, &mut s);
+        let mut want = c0.clone();
+        want.axpy(-2.0, &naive(&a, &b)).unwrap();
+        assert!(c.rel_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_on_strided_subviews() {
+        let big_a = pseudo_random(40, 50, 14);
+        let big_b = pseudo_random(50, 45, 15);
+        let av = big_a.view().submatrix(3, 5, 20, 30);
+        let bv = big_b.view().submatrix(7, 2, 30, 25);
+        let mut c = Matrix::zeros(20, 25);
+        let mut s = GemmScratch::new();
+        gemm_into(c.view_mut(), 1.0, av, bv, false, &mut s);
+        let a_owned = big_a.block(3, 5, 20, 30).unwrap();
+        let b_owned = big_b.block(7, 2, 30, 25).unwrap();
+        assert!(c.rel_diff(&naive(&a_owned, &b_owned)) < 1e-13);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        // The parallel dispatch must be bitwise identical to a manually
+        // driven single-worker slab loop: each element is a fixed-order
+        // accumulation, so row-band partitioning never changes arithmetic.
+        let (m, k, n) = (200usize, 180usize, 190usize);
+        let a = pseudo_random(m, k, 26);
+        let b = pseudo_random(k, n, 27);
+        assert!(m * k * n >= PARALLEL_VOLUME, "test must exercise the parallel path");
+        let c1 = matmul(&a, &b).unwrap();
+        let mut c2 = Matrix::zeros(m, n);
+        let mut pb = vec![0.0; n.div_ceil(NR) * NR * KC];
+        let mut pa = vec![0.0; MC * KC];
+        let mut first = true;
+        let mut pc = 0usize;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b_slab(b.view().submatrix(pc, 0, kc, n), &mut pb, kc);
+            gemm_row_band(c2.view_mut(), a.view(), 0, pc, kc, &pb, &mut pa, 1.0, !first);
+            first = false;
+            pc += kc;
+        }
+        assert_eq!(c1.as_slice(), c2.as_slice(), "parallel dispatch changed bits");
     }
 
     #[test]
@@ -482,6 +850,32 @@ mod tests {
         let s = sandwich(&a, &b, &c).unwrap();
         let expect = naive(&naive(&a, &b), &c);
         assert!(s.rel_diff(&expect) < 1e-12);
+
+        let mut out = Matrix::zeros(0, 0);
+        let mut tmp = Matrix::zeros(0, 0);
+        let mut gs = GemmScratch::new();
+        sandwich_into(&mut out, &a, &b, &c, &mut tmp, &mut gs).unwrap();
+        assert!(out.rel_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matrix_path() {
+        let a = pseudo_random(37, 53, 17);
+        let x: Vec<f64> = (0..53).map(|i| (i as f64).sin()).collect();
+        let mut y = vec![0.0; 37];
+        matvec_into(&mut y, a.view(), &x);
+        let want = a.matvec(&x).unwrap();
+        for (p, q) in y.iter().zip(&want) {
+            assert!((p - q).abs() < 1e-12);
+        }
+        // Transposed view.
+        let mut yt = vec![0.0; 53];
+        let xt: Vec<f64> = (0..37).map(|i| (i as f64).cos()).collect();
+        matvec_into(&mut yt, a.view().t(), &xt);
+        let want_t = a.vecmat(&xt).unwrap();
+        for (p, q) in yt.iter().zip(&want_t) {
+            assert!((p - q).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -490,4 +884,5 @@ mod tests {
         let b = vec![2.0; 7];
         assert_eq!(dot(&a, &b), 42.0);
     }
+
 }

@@ -164,7 +164,15 @@ impl Matrix {
 
     /// Transpose into a new matrix (cache-blocked for large sizes).
     pub fn transpose(&self) -> Matrix {
-        let mut t = Matrix::zeros(self.cols, self.rows);
+        let mut t = Matrix::zeros(0, 0);
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Transpose into a caller-held matrix (resized in place;
+    /// allocation-free once capacity suffices). Cache-blocked.
+    pub fn transpose_into(&self, t: &mut Matrix) {
+        t.resize_zeroed(self.cols, self.rows);
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
@@ -177,7 +185,6 @@ impl Matrix {
                 }
             }
         }
-        t
     }
 
     /// Extract the submatrix indexed by `idx` on both axes: `M[idx, idx]`.
@@ -392,6 +399,25 @@ impl Matrix {
         Ok(b)
     }
 
+    /// Reshape in place to `rows × cols`, zero-filled, reusing the
+    /// allocation (no heap traffic once capacity suffices). The workhorse
+    /// of the `_into` APIs that keep steady-state iterations allocation-free.
+    pub fn resize_zeroed(&mut self, rows: usize, cols: usize) {
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Copy `other` into `self`, resizing as needed (allocation-free once
+    /// capacity suffices).
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+        self.rows = other.rows;
+        self.cols = other.cols;
+    }
+
     /// Relative Frobenius distance `‖A−B‖_F / max(1, ‖B‖_F)`.
     pub fn rel_diff(&self, other: &Matrix) -> f64 {
         assert_eq!(self.shape(), other.shape());
@@ -602,6 +628,17 @@ mod tests {
         let g = m.block(1, 2, 2, 2).unwrap();
         assert_eq!(g, b);
         assert!(m.block(3, 3, 2, 2).is_err());
+    }
+
+    #[test]
+    fn resize_and_copy_reuse_storage() {
+        let mut m = Matrix::filled(4, 4, 3.0);
+        m.resize_zeroed(2, 3);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.as_slice(), &[0.0; 6]);
+        let src = Matrix::from_fn(3, 2, |i, j| (i + j) as f64);
+        m.copy_from(&src);
+        assert_eq!(m, src);
     }
 
     #[test]

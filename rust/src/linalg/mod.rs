@@ -5,11 +5,18 @@
 //! mathematical toolkit of the paper:
 //!
 //! - [`matrix`]: dense row-major `f64` container.
-//! - [`matmul`]: blocked + multithreaded GEMM, Gram kernels.
+//! - [`view`]: borrowed stride-aware views ([`MatRef`]/[`MatMut`]) — free
+//!   sub-blocks and transposes, the zero-copy spine of every kernel.
+//! - [`matmul`]: packed register-tiled GEMM (8×4 micro-kernel, pack
+//!   buffers, row-panel parallelism) expressed once over views.
 //! - [`cholesky`]: PD factorization → `log det(L_Y)`, solves, inverses.
 //! - [`lu`]: pivoted LU for general solves / signed determinants.
-//! - [`eigen`]: symmetric eigensolver (tred2/tql2) for sampling & App. B.
+//! - [`eigen`]: two-stage symmetric eigensolver — blocked Householder
+//!   tridiagonalization (GEMM trailing updates) + tql2 with parallel
+//!   back-transformation — for sampling & App. B.
 //! - [`qr`]: Householder QR + the sampler's orthogonal-complement step.
+//! - [`trisolve`]: row-oriented triangular solves with matrix RHS, shared
+//!   by the three factorizations above.
 //! - [`kron`]: Kronecker products, partial traces (Def. 2.3), the scaled
 //!   partial-trace contractions of Prop. 3.1 / App. B.
 //! - [`nkp`]: nearest Kronecker product (Van Loan–Pitsianis) for
@@ -26,6 +33,8 @@ pub mod matrix;
 pub mod nkp;
 pub mod qr;
 pub mod sparse;
+pub mod trisolve;
+pub mod view;
 
 pub use cholesky::Cholesky;
 pub use eigen::SymEigen;
@@ -33,3 +42,4 @@ pub use lu::Lu;
 pub use matrix::Matrix;
 pub use qr::Qr;
 pub use sparse::{SparseBuilder, SparseMatrix};
+pub use view::{MatMut, MatRef};

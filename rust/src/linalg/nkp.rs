@@ -39,9 +39,18 @@ impl NkpResult {
 
 /// `y = R · x` with `x ∈ R^{N₂²}`: `y[(i,j)] = <M_(ij), mat(x)>_F`.
 pub fn r_apply(m: &Matrix, n1: usize, n2: usize, x: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    r_apply_into(m, n1, n2, x, &mut y);
+    y
+}
+
+/// [`r_apply`] into a caller-held output — the allocation-free form behind
+/// the NKP / Joint-Picard power iterations.
+pub fn r_apply_into(m: &Matrix, n1: usize, n2: usize, x: &[f64], y: &mut Vec<f64>) {
     let n = n1 * n2;
     let data = m.as_slice();
-    let mut y = vec![0.0; n1 * n1];
+    y.clear();
+    y.resize(n1 * n1, 0.0);
     for i in 0..n1 {
         for j in 0..n1 {
             let mut acc = 0.0;
@@ -52,14 +61,21 @@ pub fn r_apply(m: &Matrix, n1: usize, n2: usize, x: &[f64]) -> Vec<f64> {
             y[i * n1 + j] = acc;
         }
     }
-    y
 }
 
 /// `y = Rᵀ · x` with `x ∈ R^{N₁²}`: `mat(y) = Σ_{ij} x[(i,j)] · M_(ij)`.
 pub fn rt_apply(m: &Matrix, n1: usize, n2: usize, x: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    rt_apply_into(m, n1, n2, x, &mut y);
+    y
+}
+
+/// [`rt_apply`] into a caller-held output (see [`r_apply_into`]).
+pub fn rt_apply_into(m: &Matrix, n1: usize, n2: usize, x: &[f64], y: &mut Vec<f64>) {
     let n = n1 * n2;
     let data = m.as_slice();
-    let mut y = vec![0.0; n2 * n2];
+    y.clear();
+    y.resize(n2 * n2, 0.0);
     for i in 0..n1 {
         for j in 0..n1 {
             let w = x[i * n1 + j];
@@ -75,7 +91,6 @@ pub fn rt_apply(m: &Matrix, n1: usize, n2: usize, x: &[f64]) -> Vec<f64> {
             }
         }
     }
-    y
 }
 
 fn norm(x: &[f64]) -> f64 {
@@ -124,7 +139,8 @@ pub fn nearest_kronecker(
     let mut iters = 0;
     for it in 0..max_iters {
         iters = it + 1;
-        u = r_apply(m, n1, n2, &v);
+        // Reused iterate buffers: the power loop allocates nothing.
+        r_apply_into(m, n1, n2, &v, &mut u);
         let nu = norm(&u);
         if nu < 1e-300 {
             return Err(Error::Numerical("nearest_kronecker: zero iterate".into()));
@@ -132,7 +148,7 @@ pub fn nearest_kronecker(
         for x in &mut u {
             *x /= nu;
         }
-        v = rt_apply(m, n1, n2, &u);
+        rt_apply_into(m, n1, n2, &u, &mut v);
         sigma = norm(&v);
         if sigma < 1e-300 {
             return Err(Error::Numerical("nearest_kronecker: zero sigma".into()));

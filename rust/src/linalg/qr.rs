@@ -98,6 +98,22 @@ impl Qr {
         }
         Ok(Qr { q, r })
     }
+
+    /// Least-squares solve `argmin_X ‖A·X − B‖_F` via `R·X = Qᵀ·B` —
+    /// one GEMM plus a row-oriented upper-triangular sweep
+    /// ([`crate::linalg::trisolve`]) shared with the Cholesky/LU solvers.
+    /// Requires `A` to have full column rank (thin factor, `m ≥ n`).
+    pub fn solve_matrix(&self, b: &Matrix) -> Result<Matrix> {
+        if b.rows() != self.q.rows() {
+            return Err(Error::Shape("qr solve: row mismatch".into()));
+        }
+        if self.r.rows() != self.r.cols() {
+            return Err(Error::Shape("qr solve: wide factor (m < n)".into()));
+        }
+        let mut y = crate::linalg::matmul::matmul_tn(&self.q, b)?;
+        crate::linalg::trisolve::solve_upper_in_place(self.r.view(), &mut y, false);
+        Ok(y)
+    }
 }
 
 /// Orthonormalize the columns of `a` via modified Gram–Schmidt, dropping
@@ -324,6 +340,26 @@ mod tests {
         let qr = Qr::factor(&a).unwrap();
         let qtq = matmul_tn(&qr.q, &qr.q).unwrap();
         assert!(qtq.rel_diff(&Matrix::identity(15)) < 1e-11);
+    }
+
+    #[test]
+    fn least_squares_solve() {
+        // Overdetermined: X* = (AᵀA)⁻¹AᵀB; check the normal equations
+        // residual AᵀA X = Aᵀ B.
+        let a = rnd(20, 8, 31);
+        let b = rnd(20, 3, 32);
+        let qr = Qr::factor(&a).unwrap();
+        let x = qr.solve_matrix(&b).unwrap();
+        assert_eq!(x.shape(), (8, 3));
+        let ata_x = matmul(&matmul_tn(&a, &a).unwrap(), &x).unwrap();
+        let atb = matmul_tn(&a, &b).unwrap();
+        assert!(ata_x.rel_diff(&atb) < 1e-9);
+        // Square consistent system: exact solve.
+        let a2 = rnd(9, 9, 33);
+        let want = rnd(9, 2, 34);
+        let b2 = matmul(&a2, &want).unwrap();
+        let x2 = Qr::factor(&a2).unwrap().solve_matrix(&b2).unwrap();
+        assert!(x2.rel_diff(&want) < 1e-8);
     }
 
     #[test]

@@ -141,29 +141,58 @@ impl SparseMatrix {
     /// holding `κ²` non-zeros it realizes the `O(N₁²κ²)`→`O(κ²)` term of
     /// Thm. 3.3's stochastic complexity.
     pub fn block_trace(&self, b: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+        let mut a = Matrix::zeros(0, 0);
+        self.block_trace_into(b, n1, n2, &mut a)?;
+        Ok(a)
+    }
+
+    /// [`SparseMatrix::block_trace`] into a caller-held output
+    /// (allocation-free once `out` has capacity — the stochastic learner's
+    /// per-step path).
+    pub fn block_trace_into(
+        &self,
+        b: &Matrix,
+        n1: usize,
+        n2: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
         self.check_kron(b, n1, n2, b.rows() == n2)?;
-        let mut a = Matrix::zeros(n1, n1);
+        out.resize_zeroed(n1, n1);
         for (r, c, v) in self.iter() {
             let (k, p) = (r / n2, r % n2);
             let (l, q) = (c / n2, c % n2);
-            let val = a.get(k, l) + v * b.get(q, p);
-            a.set(k, l, val);
+            let val = out.get(k, l) + v * b.get(q, p);
+            out.set(k, l, val);
         }
-        Ok(a)
+        Ok(())
     }
 
     /// Weighted block sum `Σ_{ij} W[i,j] · S_(ij)` (dense `n2×n2` out) —
     /// the sparse-Θ form of the `A₂` contraction (App. B.2), `O(nnz)`.
     pub fn weighted_block_sum(&self, w: &Matrix, n1: usize, n2: usize) -> Result<Matrix> {
+        let mut out = Matrix::zeros(0, 0);
+        self.weighted_block_sum_into(w, n1, n2, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`SparseMatrix::weighted_block_sum`] into a caller-held output
+    /// (see [`SparseMatrix::block_trace_into`]).
+    pub fn weighted_block_sum_into(
+        &self,
+        w: &Matrix,
+        n1: usize,
+        n2: usize,
+        out: &mut Matrix,
+    ) -> Result<()> {
         self.check_kron(w, n1, n2, w.rows() == n1)?;
-        let mut out = Matrix::zeros(n2, n2);
+        out.resize_zeroed(n2, n2);
         for (r, c, v) in self.iter() {
             let (i, p) = (r / n2, r % n2);
             let (j, q) = (c / n2, c % n2);
             let val = out.get(p, q) + w.get(i, j) * v;
             out.set(p, q, val);
         }
-        Ok(out)
+        Ok(())
     }
 
     fn check_kron(&self, _m: &Matrix, n1: usize, n2: usize, dims_ok: bool) -> Result<()> {

@@ -1,0 +1,161 @@
+//! Row-oriented triangular solves with matrix right-hand sides.
+//!
+//! The factorizations ([`crate::linalg::cholesky`], [`crate::linalg::lu`],
+//! [`crate::linalg::qr`]) all reduce `A X = B` to triangular solves. These
+//! used to run column-by-column through transposed copies of `B`; here the
+//! substitution sweeps *rows* of `X` instead:
+//!
+//! ```text
+//! x_i ← (b_i − Σ_{k<i} T[i,k] · x_k) / T[i,i]
+//! ```
+//!
+//! where `x_i` is the whole `i`-th row of `X`. Each step is a handful of
+//! vectorized row axpys across all right-hand sides at once — no
+//! transposes, no per-column allocation, and the triangular coefficient
+//! matrix is read through a [`MatRef`] so `Lᵀ` solves are a free transpose
+//! view of the same factor.
+
+use super::matrix::Matrix;
+use super::view::MatRef;
+use crate::linalg::matmul::axpy_slice;
+
+/// Solve `T·X = B` in place where `T` is lower-triangular (entries read
+/// from the lower triangle of `t`, which may be a transpose view). `x`
+/// holds `B` on entry and `X` on exit. `unit_diag` skips the division
+/// (LU's implicit unit lower factor).
+pub fn solve_lower_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
+    let n = t.rows();
+    debug_assert_eq!(t.cols(), n, "trisolve: T not square");
+    debug_assert_eq!(x.rows(), n, "trisolve: RHS row mismatch");
+    let cols = x.cols();
+    let data = x.as_mut_slice();
+    for i in 0..n {
+        let (prev, cur) = data.split_at_mut(i * cols);
+        let xi = &mut cur[..cols];
+        for k in 0..i {
+            let tik = t.get(i, k);
+            if tik != 0.0 {
+                axpy_slice(xi, -tik, &prev[k * cols..(k + 1) * cols]);
+            }
+        }
+        if !unit_diag {
+            let inv = 1.0 / t.get(i, i);
+            for v in xi.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+/// Solve `T·X = B` in place where `T` is upper-triangular (entries read
+/// from the upper triangle of `t`; pass `l.view().t()` to solve against
+/// `Lᵀ` without materializing it).
+pub fn solve_upper_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
+    let n = t.rows();
+    debug_assert_eq!(t.cols(), n, "trisolve: T not square");
+    debug_assert_eq!(x.rows(), n, "trisolve: RHS row mismatch");
+    let cols = x.cols();
+    let data = x.as_mut_slice();
+    for i in (0..n).rev() {
+        let (head, tail) = data.split_at_mut((i + 1) * cols);
+        let xi = &mut head[i * cols..];
+        for k in (i + 1)..n {
+            let tik = t.get(i, k);
+            if tik != 0.0 {
+                axpy_slice(xi, -tik, &tail[(k - i - 1) * cols..(k - i) * cols]);
+            }
+        }
+        if !unit_diag {
+            let inv = 1.0 / t.get(i, i);
+            for v in xi.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+
+    fn lower(n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        Matrix::from_fn(n, n, |i, j| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let v = (state as f64 / u64::MAX as f64) - 0.5;
+            match i.cmp(&j) {
+                std::cmp::Ordering::Less => 0.0,
+                std::cmp::Ordering::Equal => v.abs() + 1.0,
+                std::cmp::Ordering::Greater => v,
+            }
+        })
+    }
+
+    fn rnd(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        Matrix::from_fn(r, c, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn lower_solve_residual() {
+        let l = lower(12, 1);
+        let b = rnd(12, 5, 2);
+        let mut x = b.clone();
+        solve_lower_in_place(l.view(), &mut x, false);
+        let lx = matmul(&l, &x).unwrap();
+        assert!(lx.rel_diff(&b) < 1e-11);
+    }
+
+    #[test]
+    fn upper_solve_via_transpose_view() {
+        // Solve Lᵀ X = B through a transpose view of L.
+        let l = lower(10, 3);
+        let b = rnd(10, 4, 4);
+        let mut x = b.clone();
+        solve_upper_in_place(l.view().t(), &mut x, false);
+        let ltx = matmul(&l.transpose(), &x).unwrap();
+        assert!(ltx.rel_diff(&b) < 1e-11);
+    }
+
+    #[test]
+    fn unit_diag_skips_division() {
+        let mut l = lower(8, 5);
+        // Unit solve must ignore whatever sits on the diagonal.
+        let b = rnd(8, 3, 6);
+        let mut x = b.clone();
+        solve_lower_in_place(l.view(), &mut x, true);
+        for i in 0..8 {
+            l.set(i, i, 1.0);
+        }
+        let lx = matmul(&l, &x).unwrap();
+        assert!(lx.rel_diff(&b) < 1e-11);
+    }
+
+    #[test]
+    fn single_column_matches_vec_solve() {
+        let l = lower(9, 7);
+        let b = rnd(9, 1, 8);
+        let mut x = b.clone();
+        solve_lower_in_place(l.view(), &mut x, false);
+        // forward-substitute manually
+        let mut y: Vec<f64> = (0..9).map(|i| b[(i, 0)]).collect();
+        for i in 0..9 {
+            for k in 0..i {
+                let t = l[(i, k)] * y[k];
+                y[i] -= t;
+            }
+            y[i] /= l[(i, i)];
+        }
+        for i in 0..9 {
+            assert!((x[(i, 0)] - y[i]).abs() < 1e-12);
+        }
+    }
+}

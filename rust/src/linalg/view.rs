@@ -1,0 +1,384 @@
+//! Borrowed, stride-aware matrix views — the zero-copy core of the linalg
+//! substrate (DESIGN.md §1).
+//!
+//! [`MatRef`] / [`MatMut`] describe a rectangular window into an `f64`
+//! buffer through a `(row_stride, col_stride)` pair, so sub-blocks and
+//! transposes are O(1) *views* rather than copies:
+//!
+//! - `Matrix::view()` / `Matrix::view_mut()` wrap the owned container
+//!   (`row_stride = cols`, `col_stride = 1`);
+//! - [`MatRef::t`] swaps the strides — `A·Bᵀ` and `Aᵀ·B` route through the
+//!   exact same packed GEMM as `A·B` without materializing a transpose;
+//! - [`MatRef::submatrix`] offsets into the buffer — the Kronecker block
+//!   `M_(ij)` and eigensolver trailing blocks are strided windows.
+//!
+//! The packed GEMM ([`crate::linalg::matmul::gemm_into`]) copies panels of
+//! either view layout into contiguous pack buffers before the micro-kernel
+//! runs, so strided views carry no inner-loop penalty.
+
+use super::matrix::Matrix;
+
+/// Immutable stride-aware view of an `f64` matrix.
+///
+/// Entry `(i, j)` lives at `data[i·rs + j·cs]`. A row-major contiguous
+/// matrix has `rs = cols, cs = 1`; its transpose view has `rs = 1,
+/// cs = cols`.
+#[derive(Clone, Copy)]
+pub struct MatRef<'a> {
+    data: &'a [f64],
+    rows: usize,
+    cols: usize,
+    rs: usize,
+    cs: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// Build a view from raw parts. `data` must cover every addressed
+    /// element (checked for the corner element).
+    #[inline]
+    pub fn from_parts(data: &'a [f64], rows: usize, cols: usize, rs: usize, cs: usize) -> Self {
+        if rows > 0 && cols > 0 {
+            debug_assert!((rows - 1) * rs + (cols - 1) * cs < data.len());
+        }
+        MatRef { data, rows, cols, rs, cs }
+    }
+
+    /// Number of rows.
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Row stride.
+    #[inline(always)]
+    pub fn row_stride(&self) -> usize {
+        self.rs
+    }
+
+    /// Column stride.
+    #[inline(always)]
+    pub fn col_stride(&self) -> usize {
+        self.cs
+    }
+
+    /// Entry `(i, j)`.
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.rs + j * self.cs]
+    }
+
+    /// Transpose view — O(1), no copy.
+    #[inline]
+    pub fn t(self) -> MatRef<'a> {
+        MatRef { data: self.data, rows: self.cols, cols: self.rows, rs: self.cs, cs: self.rs }
+    }
+
+    /// `r × c` sub-block view starting at `(i0, j0)` — O(1), no copy.
+    #[inline]
+    pub fn submatrix(self, i0: usize, j0: usize, r: usize, c: usize) -> MatRef<'a> {
+        debug_assert!(i0 + r <= self.rows && j0 + c <= self.cols);
+        let off = if r > 0 && c > 0 { i0 * self.rs + j0 * self.cs } else { 0 };
+        MatRef { data: &self.data[off..], rows: r, cols: c, rs: self.rs, cs: self.cs }
+    }
+
+    /// True when rows are contiguous (`col_stride == 1`): [`Self::row_slice`]
+    /// is valid.
+    #[inline(always)]
+    pub fn rows_contiguous(&self) -> bool {
+        self.cs == 1
+    }
+
+    /// Row `i` as a contiguous slice (requires `col_stride == 1`).
+    #[inline(always)]
+    pub fn row_slice(&self, i: usize) -> &'a [f64] {
+        debug_assert!(self.cs == 1 && i < self.rows);
+        &self.data[i * self.rs..i * self.rs + self.cols]
+    }
+}
+
+/// Mutable stride-aware view of an `f64` matrix.
+///
+/// The mutable twin of [`MatRef`]; additionally supports splitting into
+/// disjoint row bands ([`MatMut::split_rows_at`]) so parallel kernels can
+/// hand each worker its own exclusive output window.
+pub struct MatMut<'a> {
+    data: &'a mut [f64],
+    rows: usize,
+    cols: usize,
+    rs: usize,
+    cs: usize,
+}
+
+impl<'a> MatMut<'a> {
+    /// Build a mutable view from raw parts (corner element checked).
+    #[inline]
+    pub fn from_parts(
+        data: &'a mut [f64],
+        rows: usize,
+        cols: usize,
+        rs: usize,
+        cs: usize,
+    ) -> Self {
+        if rows > 0 && cols > 0 {
+            debug_assert!((rows - 1) * rs + (cols - 1) * cs < data.len());
+        }
+        MatMut { data, rows, cols, rs, cs }
+    }
+
+    /// Number of rows.
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)` pair.
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Row stride.
+    #[inline(always)]
+    pub fn row_stride(&self) -> usize {
+        self.rs
+    }
+
+    /// Column stride.
+    #[inline(always)]
+    pub fn col_stride(&self) -> usize {
+        self.cs
+    }
+
+    /// Entry `(i, j)`.
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.rs + j * self.cs]
+    }
+
+    /// Set entry `(i, j)`.
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.rs + j * self.cs] = v;
+    }
+
+    /// Immutable snapshot of this view.
+    #[inline]
+    pub fn as_const(&self) -> MatRef<'_> {
+        MatRef { data: self.data, rows: self.rows, cols: self.cols, rs: self.rs, cs: self.cs }
+    }
+
+    /// Reborrow as a shorter-lived mutable view (keeps the original alive).
+    #[inline]
+    pub fn reborrow(&mut self) -> MatMut<'_> {
+        MatMut { data: self.data, rows: self.rows, cols: self.cols, rs: self.rs, cs: self.cs }
+    }
+
+    /// `r × c` mutable sub-block starting at `(i0, j0)` — O(1), consumes
+    /// the view (use [`MatMut::reborrow`] to keep the parent).
+    #[inline]
+    pub fn submatrix(self, i0: usize, j0: usize, r: usize, c: usize) -> MatMut<'a> {
+        debug_assert!(i0 + r <= self.rows && j0 + c <= self.cols);
+        let off = if r > 0 && c > 0 { i0 * self.rs + j0 * self.cs } else { 0 };
+        MatMut { data: &mut self.data[off..], rows: r, cols: c, rs: self.rs, cs: self.cs }
+    }
+
+    /// Split into disjoint row bands `[0, i)` and `[i, rows)`.
+    ///
+    /// Requires contiguous rows (`col_stride == 1`) and `row_stride ≥ cols`
+    /// so the cut lands between rows — true for every view derived from a
+    /// row-major [`Matrix`] (including sub-blocks).
+    #[inline]
+    pub fn split_rows_at(self, i: usize) -> (MatMut<'a>, MatMut<'a>) {
+        debug_assert!(self.cs == 1 && self.rs >= self.cols);
+        debug_assert!(i <= self.rows);
+        let cut = (i * self.rs).min(self.data.len());
+        let (head, tail) = self.data.split_at_mut(cut);
+        (
+            MatMut { data: head, rows: i, cols: self.cols, rs: self.rs, cs: self.cs },
+            MatMut { data: tail, rows: self.rows - i, cols: self.cols, rs: self.rs, cs: self.cs },
+        )
+    }
+
+    /// Row `i` as a contiguous mutable slice (requires `col_stride == 1`).
+    #[inline(always)]
+    pub fn row_slice_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(self.cs == 1 && i < self.rows);
+        &mut self.data[i * self.rs..i * self.rs + self.cols]
+    }
+
+    /// Copy every entry from `src` (shapes must match).
+    pub fn copy_from(&mut self, src: MatRef<'_>) {
+        assert_eq!(self.shape(), src.shape(), "copy_from: shape mismatch");
+        if self.cs == 1 && src.rows_contiguous() {
+            for i in 0..self.rows {
+                let r = src.row_slice(i);
+                self.row_slice_mut(i).copy_from_slice(r);
+            }
+        } else {
+            for i in 0..self.rows {
+                for j in 0..self.cols {
+                    self.set(i, j, src.get(i, j));
+                }
+            }
+        }
+    }
+
+    /// Fill with a constant.
+    pub fn fill(&mut self, v: f64) {
+        if self.cs == 1 {
+            for i in 0..self.rows {
+                self.row_slice_mut(i).fill(v);
+            }
+        } else {
+            for i in 0..self.rows {
+                for j in 0..self.cols {
+                    self.set(i, j, v);
+                }
+            }
+        }
+    }
+}
+
+impl Matrix {
+    /// Borrow as an immutable view (`row_stride = cols`, `col_stride = 1`).
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef::from_parts(self.as_slice(), self.rows(), self.cols(), self.cols(), 1)
+    }
+
+    /// Borrow as a mutable view.
+    #[inline]
+    pub fn view_mut(&mut self) -> MatMut<'_> {
+        let (r, c) = self.shape();
+        MatMut::from_parts(self.as_mut_slice(), r, c, c, 1)
+    }
+
+    /// Materialize a view into a new owned matrix.
+    pub fn from_view(v: MatRef<'_>) -> Matrix {
+        let mut m = Matrix::zeros(v.rows(), v.cols());
+        m.view_mut().copy_from(v);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        Matrix::from_fn(4, 5, |i, j| (i * 10 + j) as f64)
+    }
+
+    #[test]
+    fn view_roundtrip() {
+        let m = sample();
+        let v = m.view();
+        assert_eq!(v.shape(), (4, 5));
+        assert_eq!(v.get(2, 3), 23.0);
+        assert_eq!(v.row_slice(1), m.row(1));
+        assert!(v.rows_contiguous());
+    }
+
+    #[test]
+    fn transpose_view_is_free() {
+        let m = sample();
+        let t = m.view().t();
+        assert_eq!(t.shape(), (5, 4));
+        assert_eq!(t.get(3, 2), m[(2, 3)]);
+        assert!(!t.rows_contiguous());
+        // Double transpose restores.
+        let tt = t.t();
+        assert_eq!(tt.get(2, 3), m[(2, 3)]);
+    }
+
+    #[test]
+    fn submatrix_views() {
+        let m = sample();
+        let s = m.view().submatrix(1, 2, 2, 3);
+        assert_eq!(s.shape(), (2, 3));
+        assert_eq!(s.get(0, 0), m[(1, 2)]);
+        assert_eq!(s.get(1, 2), m[(2, 4)]);
+        // Transposed sub-block.
+        let st = s.t();
+        assert_eq!(st.get(2, 1), m[(2, 4)]);
+        // Materialize matches manual extraction.
+        let owned = Matrix::from_view(s);
+        assert_eq!(owned, m.block(1, 2, 2, 3).unwrap());
+    }
+
+    #[test]
+    fn mut_views_write_through() {
+        let mut m = Matrix::zeros(3, 3);
+        {
+            let mut v = m.view_mut().submatrix(1, 1, 2, 2);
+            v.set(0, 0, 7.0);
+            v.fill(5.0);
+        }
+        assert_eq!(m[(1, 1)], 5.0);
+        assert_eq!(m[(2, 2)], 5.0);
+        assert_eq!(m[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn split_rows() {
+        let mut m = sample();
+        let (mut top, mut bot) = m.view_mut().split_rows_at(1);
+        assert_eq!(top.shape(), (1, 5));
+        assert_eq!(bot.shape(), (3, 5));
+        top.set(0, 0, -1.0);
+        bot.set(0, 0, -2.0);
+        assert_eq!(m[(0, 0)], -1.0);
+        assert_eq!(m[(1, 0)], -2.0);
+    }
+
+    #[test]
+    fn split_rows_of_submatrix() {
+        // Split a strided sub-block (rs > cols) — both halves must address
+        // the parent buffer correctly.
+        let mut m = sample();
+        let sub = m.view_mut().submatrix(0, 1, 4, 3);
+        let (mut a, mut b) = sub.split_rows_at(2);
+        a.set(1, 0, 100.0);
+        b.set(0, 2, 200.0);
+        assert_eq!(m[(1, 1)], 100.0);
+        assert_eq!(m[(2, 3)], 200.0);
+    }
+
+    #[test]
+    fn copy_from_strided() {
+        let m = sample();
+        let mut out = Matrix::zeros(5, 4);
+        out.view_mut().copy_from(m.view().t());
+        assert_eq!(out, m.transpose());
+    }
+
+    #[test]
+    fn empty_views() {
+        let m = Matrix::zeros(0, 0);
+        assert_eq!(m.view().shape(), (0, 0));
+        let m2 = sample();
+        let e = m2.view().submatrix(4, 5, 0, 0);
+        assert_eq!(e.shape(), (0, 0));
+    }
+}
