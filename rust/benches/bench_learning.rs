@@ -2,14 +2,90 @@
 //! the Table-2 companion. The paper (MATLAB, N = 10⁴): Picard 161.5 s,
 //! KRK 8.9 s (18×), stochastic 1.2 s (134×). The *ratios* are the claim
 //! under test; sweep N to show the widening gap.
+//!
+//! The dense-Θ-vs-engine section measures the compressed-statistics
+//! refactor head-to-head: the *literal pre-engine step* — two
+//! `theta_dense` builds (no dedup, every duplicate subset factored
+//! again) feeding `update_l{1,2}_from_theta`, exactly what
+//! `KrkPicard::step` used to do — against the Θ-free `O(nκ²)` engine
+//! sweep, at duplicate ratios 1× and 8× (dedup collapses repeats into
+//! multiplicity weights, so the engine's sweep cost stays ~flat along
+//! the dup axis while the dense path scales with raw `n`). Speedups land
+//! in `BENCH_learning.json`, uploaded by the CI bench-smoke job next to
+//! `BENCH_linalg.json` — see EXPERIMENTS.md §Learning.
+//!
+//! Knobs: `KRONDPP_BENCH_BUDGET_MS` (per-case budget),
+//! `KRONDPP_BENCH_MAX_N` (skip cases above this ground-set size).
 
-use krondpp::bench_util::{section, Bencher};
+use krondpp::bench_util::{section, Bencher, Report};
 use krondpp::data;
-use krondpp::learn::{init, KrkPicard, KrkStochastic, Learner, Picard};
+use krondpp::dpp::likelihood::theta_dense;
+use krondpp::learn::{init, KrkPicard, KrkStochastic, Learner, Picard, TrainingSet};
 use krondpp::rng::Rng;
+
+fn max_n() -> usize {
+    std::env::var("KRONDPP_BENCH_MAX_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX)
+}
 
 fn main() {
     let b = Bencher { min_iters: 2, ..Default::default() };
+    let cap = max_n();
+    let mut report = Report::new();
+
+    section("dense-Θ vs compressed engine (KRK batch step)");
+    for (n1, n2) in [(16usize, 16usize), (32, 32)] {
+        let n = n1 * n2;
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
+        for dup in [1usize, 8] {
+            let mut rng = Rng::new(100 + (n + dup) as u64);
+            let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+            let base =
+                data::sample_training_set(&truth, 50, (n / 50).max(3), (n / 8).max(6), &mut rng)
+                    .unwrap();
+            let mut subsets = Vec::new();
+            for _ in 0..dup {
+                subsets.extend(base.subsets.iter().cloned());
+            }
+            let data_set = TrainingSet::new(n, subsets).unwrap();
+            let l1 = init::paper_subkernel(n1, &mut rng);
+            let l2 = init::paper_subkernel(n2, &mut rng);
+
+            let mut dense = KrkPicard::new(l1.clone(), l2.clone(), 1.0).unwrap();
+            let ds = b.run(&format!("krk dense-Θ N={n} dup={dup}x"), || {
+                // The pre-engine step, verbatim: dense Θ per half-update,
+                // no dedup — every one of the n (not n_unique) subsets is
+                // gathered, factored and scattered, twice.
+                let theta = theta_dense(&dense.kernel(), &data_set.subsets).unwrap();
+                dense.update_l1_from_theta(&theta).unwrap();
+                let theta = theta_dense(&dense.kernel(), &data_set.subsets).unwrap();
+                dense.update_l2_from_theta(&theta).unwrap();
+            });
+            let mut engine = KrkPicard::new(l1.clone(), l2.clone(), 1.0).unwrap();
+            let es = b.run(&format!("krk engine  N={n} dup={dup}x"), || {
+                engine.step(&data_set).unwrap();
+            });
+            let speedup = ds.secs() / es.secs();
+            println!(
+                "    -> engine {speedup:.1}x faster ({}×{} Θ never materialized; n={} → {} unique sweeps)",
+                n,
+                n,
+                data_set.len(),
+                data_set.len() / dup
+            );
+            report.case(&ds, &[("ground_n", n as f64), ("dup", dup as f64)]);
+            report.case(&es, &[("ground_n", n as f64), ("dup", dup as f64)]);
+            report.derived(&format!("engine_speedup_n{n}_dup{dup}"), speedup);
+        }
+    }
+    report.write("learning", "BENCH_learning.json").expect("write BENCH_learning.json");
+    println!("  report -> BENCH_learning.json");
+
     section("per-iteration cost (Table 2 shape)");
     println!(
         "{:<10} {:>12} {:>12} {:>14} {:>10} {:>12}",
@@ -17,6 +93,10 @@ fn main() {
     );
     for (n1, n2) in [(16usize, 16usize), (24, 24), (32, 32), (40, 40)] {
         let n = n1 * n2;
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
         let mut rng = Rng::new(7 + n as u64);
         let truth = data::paper_truth_kernel(n1, n2, &mut rng);
         let data =
@@ -52,7 +132,7 @@ fn main() {
     }
 
     section("EM baseline per-iteration (Table-1 scale, N=64)");
-    {
+    if 64 <= cap {
         let mut rng = Rng::new(5);
         let cat =
             krondpp::data::registry::generate_category("bench", 64, 150, 0, &mut rng).unwrap();
@@ -67,43 +147,51 @@ fn main() {
     {
         let (n1, n2) = (32usize, 32usize);
         let n = n1 * n2;
-        let mut rng = Rng::new(11);
-        let truth = data::paper_truth_kernel(n1, n2, &mut rng);
-        let data =
-            data::sample_training_set(&truth, 60, 8, 40, &mut rng).unwrap();
-        let kappa = data.kappa();
-        let l1 = init::paper_subkernel(n1, &mut rng);
-        let l2 = init::paper_subkernel(n2, &mut rng);
-        let mut krk = KrkStochastic::new(l1, l2, 0.7, 1, 13);
-        let krk_stats = b.run(&format!("krk stochastic update N={n}"), || {
-            krk.step(&data).unwrap();
-        });
-        // Low-rank with K = 2κ (needs K ≥ κ to score the data at all).
-        let mut lowrank = krondpp::learn::LowRank::init(n, 2 * kappa, 0.02, 17);
-        lowrank.minibatch = 1;
-        let lr_stats = b.run(&format!("lowrank stochastic update N={n} K={}", 2 * kappa), || {
-            lowrank.step(&data).unwrap();
-        });
-        println!(
-            "    -> krk stochastic is {:.1}x faster per update (and has no rank ceiling)",
-            lr_stats.secs() / krk_stats.secs()
-        );
+        if n <= cap {
+            let mut rng = Rng::new(11);
+            let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+            let data = data::sample_training_set(&truth, 60, 8, 40, &mut rng).unwrap();
+            let kappa = data.kappa();
+            let l1 = init::paper_subkernel(n1, &mut rng);
+            let l2 = init::paper_subkernel(n2, &mut rng);
+            let mut krk = KrkStochastic::new(l1, l2, 0.7, 1, 13);
+            let krk_stats = b.run(&format!("krk stochastic update N={n}"), || {
+                krk.step(&data).unwrap();
+            });
+            // Low-rank with K = 2κ (needs K ≥ κ to score the data at all).
+            let mut lowrank = krondpp::learn::LowRank::init(n, 2 * kappa, 0.02, 17);
+            lowrank.minibatch = 1;
+            let lr_stats =
+                b.run(&format!("lowrank stochastic update N={n} K={}", 2 * kappa), || {
+                    lowrank.step(&data).unwrap();
+                });
+            println!(
+                "    -> krk stochastic is {:.1}x faster per update (and has no rank ceiling)",
+                lr_stats.secs() / krk_stats.secs()
+            );
+        } else {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+        }
     }
 
     section("joint-picard per-iteration (Fig-1 scale)");
     {
         let (n1, n2) = (24usize, 24usize);
-        let mut rng = Rng::new(9);
-        let truth = data::paper_truth_kernel(n1, n2, &mut rng);
-        let data = data::sample_training_set(&truth, 40, 6, 60, &mut rng).unwrap();
-        let mut joint = krondpp::learn::JointPicard::new(
-            init::paper_subkernel(n1, &mut rng),
-            init::paper_subkernel(n2, &mut rng),
-            1.0,
-        )
-        .unwrap();
-        b.run(&format!("joint-picard N={}", n1 * n2), || {
-            joint.step(&data).unwrap();
-        });
+        if n1 * n2 <= cap {
+            let mut rng = Rng::new(9);
+            let truth = data::paper_truth_kernel(n1, n2, &mut rng);
+            let data = data::sample_training_set(&truth, 40, 6, 60, &mut rng).unwrap();
+            let mut joint = krondpp::learn::JointPicard::new(
+                init::paper_subkernel(n1, &mut rng),
+                init::paper_subkernel(n2, &mut rng),
+                1.0,
+            )
+            .unwrap();
+            b.run(&format!("joint-picard N={}", n1 * n2), || {
+                joint.step(&data).unwrap();
+            });
+        } else {
+            println!("  (skipped N={}: KRONDPP_BENCH_MAX_N)", n1 * n2);
+        }
     }
 }

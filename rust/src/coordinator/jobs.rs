@@ -10,7 +10,7 @@
 //!   cache warming.
 
 use crate::coordinator::server::DppService;
-use crate::dpp::{likelihood, Kernel, Sampler};
+use crate::dpp::{Kernel, Sampler};
 use crate::error::{Error, Result};
 use crate::learn::traits::{IterRecord, Learner, TrainingSet};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -52,7 +52,10 @@ impl LearningJob {
             .name("krondpp-learn".into())
             .spawn(move || -> Result<Vec<IterRecord>> {
                 let mut history = Vec::new();
-                let ll0 = likelihood::log_likelihood(&learner.kernel(), &data.subsets)?;
+                // `objective` routes learners with compressed statistics
+                // through their fused engine sweep (dedup + parallel);
+                // everyone else falls back to the dense Eq.-3 evaluation.
+                let ll0 = learner.objective(&data)?;
                 history.push(IterRecord {
                     iter: 0,
                     elapsed: Duration::ZERO,
@@ -66,7 +69,7 @@ impl LearningJob {
                     let t = Instant::now();
                     learner.step(&data)?;
                     elapsed += t.elapsed();
-                    let ll = likelihood::log_likelihood(&learner.kernel(), &data.subsets)?;
+                    let ll = learner.objective(&data)?;
                     let record = IterRecord { iter: it, elapsed, log_likelihood: ll };
                     history.push(record.clone());
                     let mut installed = false;

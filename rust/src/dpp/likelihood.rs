@@ -11,26 +11,72 @@ use crate::dpp::kernel::Kernel;
 use crate::error::Result;
 use crate::linalg::{cholesky, cholesky::Cholesky, Matrix};
 
+/// Number of deterministic reduction stripes of the parallel sweeps below:
+/// subset `i` belongs to stripe `i % LL_STRIPES` and stripes reduce in
+/// ascending order, so the result is identical for any worker count.
+const LL_STRIPES: usize = 16;
+
+/// Below this many subsets the likelihood sweep stays inline (thread
+/// spawns cost more than they save).
+const LL_PAR_MIN: usize = 48;
+
 /// Mean log-likelihood of `subsets` under kernel `kernel`.
 ///
-/// The per-subset `log det(L_Y)` sweep reuses one submatrix buffer and one
-/// Cholesky factor buffer across all subsets (this runs once per learner
-/// iteration, so it is a steady-state hot path).
+/// The per-subset `log det(L_Y)` sweep runs in parallel with per-worker
+/// submatrix/Cholesky buffers and a deterministic chunked reduction
+/// (stripe partials summed in fixed order — worker-count invariant). This
+/// is the generic path for callers without compressed statistics; learners
+/// holding a [`crate::learn::stats::ThetaEngine`] get the same sweep fused
+/// into their gradient pass (deduplicated, allocation-free) via
+/// `Learner::objective`.
 pub fn log_likelihood(kernel: &Kernel, subsets: &[Vec<usize>]) -> Result<f64> {
     if subsets.is_empty() {
         return Ok(0.0);
     }
     let normalizer = kernel.logdet_l_plus_i()?;
-    let mut total = 0.0;
-    let mut sub = Matrix::zeros(0, 0);
-    let mut chol = Matrix::zeros(0, 0);
-    for y in subsets {
-        if y.is_empty() {
-            continue; // det(L_∅) = 1, log 0.0
+    let mut partials = [0.0f64; LL_STRIPES];
+    let stripe_sum =
+        |stripe: usize, sub: &mut Matrix, chol: &mut Matrix| -> Result<f64> {
+            let mut acc = 0.0;
+            let mut i = stripe;
+            while i < subsets.len() {
+                let y = &subsets[i];
+                if !y.is_empty() {
+                    // det(L_∅) = 1, log 0.0 — empty subsets contribute nothing.
+                    kernel.principal_submatrix_into(y, sub);
+                    acc += cholesky::logdet_pd_with(&*sub, chol)?;
+                }
+                i += LL_STRIPES;
+            }
+            Ok(acc)
+        };
+    let nthreads = crate::linalg::matmul::available_threads().min(LL_STRIPES);
+    if nthreads > 1 && subsets.len() >= LL_PAR_MIN {
+        let per = LL_STRIPES.div_ceil(nthreads);
+        std::thread::scope(|sc| -> Result<()> {
+            let mut handles = Vec::new();
+            for (w, chunk) in partials.chunks_mut(per).enumerate() {
+                let base = w * per;
+                let stripe_sum = &stripe_sum;
+                handles.push(sc.spawn(move || -> Result<()> {
+                    let mut sub = Matrix::zeros(0, 0);
+                    let mut chol = Matrix::zeros(0, 0);
+                    for (off, p) in chunk.iter_mut().enumerate() {
+                        *p = stripe_sum(base + off, &mut sub, &mut chol)?;
+                    }
+                    Ok(())
+                }));
+            }
+            crate::linalg::matmul::join_first_error(handles)
+        })?;
+    } else {
+        let mut sub = Matrix::zeros(0, 0);
+        let mut chol = Matrix::zeros(0, 0);
+        for (s, p) in partials.iter_mut().enumerate() {
+            *p = stripe_sum(s, &mut sub, &mut chol)?;
         }
-        kernel.principal_submatrix_into(y, &mut sub);
-        total += cholesky::logdet_pd_with(&sub, &mut chol)?;
     }
+    let total: f64 = partials.iter().sum();
     Ok(total / subsets.len() as f64 - normalizer)
 }
 
@@ -51,48 +97,69 @@ pub fn log_prob(kernel: &Kernel, y: &[usize]) -> Result<f64> {
 /// The full-gradient helper matrix `Θ = (1/n) Σ_i U_i L_{Y_i}⁻¹ U_iᵀ`
 /// (dense). The gradient of φ is `Δ = Θ − (L+I)⁻¹` (Eq. 4).
 ///
-/// The `O(nκ³)` subset inversions are embarrassingly parallel and run
-/// across threads; the `O(nκ²)` scatter is serial (it would contend on
-/// Θ) — see EXPERIMENTS.md §Perf.
+/// This is the *oracle* Θ: the batch learners never materialize it any
+/// more (their contractions come straight from the subset inverses — see
+/// [`crate::learn::stats`]), but the full-kernel Picard path, the property
+/// suites and the figures still need one. Both phases run in parallel:
+/// the `O(nκ³)` inversions over contiguous chunks (slot-independent, so
+/// deterministic), and the `O(nκ²)` scatter over disjoint Θ row panels —
+/// each row receives its contributions in subset order, so the result is
+/// worker-count invariant (no `Mutex`, no serial scatter; see
+/// EXPERIMENTS.md §Perf).
 pub fn theta_dense(kernel: &Kernel, subsets: &[Vec<usize>]) -> Result<Matrix> {
     let n = kernel.n();
     let mut theta = Matrix::zeros(n, n);
     let w = 1.0 / subsets.len().max(1) as f64;
-    // Parallel phase: per-subset L_Y⁻¹.
     let nthreads = crate::linalg::matmul::available_threads().min(subsets.len().max(1));
+    // Phase 1: per-subset L_Y⁻¹, written into disjoint chunks of a
+    // preallocated slot vector.
     let inverses: Vec<Result<Option<Matrix>>> = if nthreads > 1 && subsets.len() > 8 {
-        let results: Vec<std::sync::Mutex<Vec<(usize, Result<Option<Matrix>>)>>> =
-            (0..nthreads).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        let mut slots: Vec<Result<Option<Matrix>>> = Vec::with_capacity(subsets.len());
+        slots.resize_with(subsets.len(), || Ok(None));
+        let chunk_len = subsets.len().div_ceil(nthreads);
         std::thread::scope(|s| {
-            for t in 0..nthreads {
-                let bucket = &results[t];
-                let subsets = &subsets;
+            for (ochunk, schunk) in
+                slots.chunks_mut(chunk_len).zip(subsets.chunks(chunk_len))
+            {
                 s.spawn(move || {
-                    let mut local = Vec::new();
-                    let mut i = t;
-                    while i < subsets.len() {
-                        local.push((i, invert_subset(kernel, &subsets[i])));
-                        i += nthreads;
+                    for (o, y) in ochunk.iter_mut().zip(schunk) {
+                        *o = invert_subset(kernel, y);
                     }
-                    *bucket.lock().unwrap() = local;
                 });
             }
         });
-        let mut ordered: Vec<Option<Result<Option<Matrix>>>> =
-            (0..subsets.len()).map(|_| None).collect();
-        for bucket in results {
-            for (i, r) in bucket.into_inner().unwrap() {
-                ordered[i] = Some(r);
-            }
-        }
-        ordered.into_iter().map(|o| o.expect("all indices covered")).collect()
+        slots
     } else {
         subsets.iter().map(|y| invert_subset(kernel, y)).collect()
     };
-    // Serial scatter.
-    for (y, inv) in subsets.iter().zip(inverses) {
-        if let Some(inv) = inv? {
-            scatter_inverse(&mut theta, y, &inv, w);
+    let inverses: Vec<Option<Matrix>> = inverses.into_iter().collect::<Result<_>>()?;
+    // Phase 2: scatter by disjoint row panels.
+    if nthreads > 1 && n >= nthreads {
+        let band = n.div_ceil(nthreads);
+        let inverses = &inverses;
+        std::thread::scope(|s| {
+            let mut rest = theta.as_mut_slice();
+            let mut lo = 0usize;
+            while lo < n {
+                let len = band.min(n - lo);
+                let (chunk, tail) = rest.split_at_mut(len * n);
+                rest = tail;
+                let start = lo;
+                s.spawn(move || {
+                    for (y, inv) in subsets.iter().zip(inverses) {
+                        if let Some(inv) = inv {
+                            scatter_inverse_rows(chunk, n, start, start + len, y, inv, w);
+                        }
+                    }
+                });
+                lo += len;
+            }
+        });
+    } else {
+        for (y, inv) in subsets.iter().zip(&inverses) {
+            if let Some(inv) = inv {
+                scatter_inverse(&mut theta, y, inv, w);
+            }
         }
     }
     Ok(theta)
@@ -106,12 +173,33 @@ fn invert_subset(kernel: &Kernel, y: &[usize]) -> Result<Option<Matrix>> {
     Ok(Some(Cholesky::factor(&sub)?.inverse()))
 }
 
+/// Scatter one subset inverse onto the full Θ (the single shared scatter
+/// loop — [`accumulate_theta`] and the serial path of [`theta_dense`] both
+/// route through it).
 fn scatter_inverse(theta: &mut Matrix, y: &[usize], inv: &Matrix, w: f64) {
+    let n = theta.cols();
+    scatter_inverse_rows(theta.as_mut_slice(), n, 0, n, y, inv, w);
+}
+
+/// Scatter the rows of `w·U_Y L_Y⁻¹ U_Yᵀ` that fall in `[lo, hi)` onto the
+/// row band `band` (rows `lo..hi` of Θ, row-major, width `n`).
+fn scatter_inverse_rows(
+    band: &mut [f64],
+    n: usize,
+    lo: usize,
+    hi: usize,
+    y: &[usize],
+    inv: &Matrix,
+    w: f64,
+) {
     for (a, &i) in y.iter().enumerate() {
-        let row = inv.row(a);
+        if i < lo || i >= hi {
+            continue;
+        }
+        let src = inv.row(a);
+        let row = &mut band[(i - lo) * n..(i - lo + 1) * n];
         for (b, &j) in y.iter().enumerate() {
-            let v = theta.get(i, j) + w * row[b];
-            theta.set(i, j, v);
+            row[j] += w * src[b];
         }
     }
 }
@@ -128,13 +216,7 @@ pub fn accumulate_theta(
     }
     let sub = kernel.principal_submatrix(y);
     let inv = Cholesky::factor(&sub)?.inverse();
-    for (a, &i) in y.iter().enumerate() {
-        let row = inv.row(a);
-        for (b, &j) in y.iter().enumerate() {
-            let v = theta.get(i, j) + w * row[b];
-            theta.set(i, j, v);
-        }
-    }
+    scatter_inverse(theta, y, &inv, w);
     Ok(())
 }
 

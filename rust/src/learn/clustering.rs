@@ -14,6 +14,7 @@
 
 use crate::dpp::Kernel;
 use crate::error::{Error, Result};
+use crate::learn::stats::ThetaEngine;
 use crate::linalg::{Matrix, SparseBuilder, SparseMatrix};
 use std::collections::BTreeSet;
 
@@ -87,6 +88,22 @@ impl ClusteredTheta {
         n1: usize,
         n2: usize,
     ) -> Result<Self> {
+        let mut engine = ThetaEngine::new();
+        Self::build_with(kernel, subsets, clusters, n1, n2, &mut engine)
+    }
+
+    /// [`ClusteredTheta::build`] with a caller-held [`ThetaEngine`]: every
+    /// per-subset gather/factor/inverse runs in the engine's reused
+    /// buffers, so rebuilding the clustered Θ each iteration only
+    /// allocates the sparse parts themselves.
+    pub fn build_with(
+        kernel: &Kernel,
+        subsets: &[Vec<usize>],
+        clusters: &[Cluster],
+        n1: usize,
+        n2: usize,
+        engine: &mut ThetaEngine,
+    ) -> Result<Self> {
         let n = subsets.len().max(1) as f64;
         let mut parts = Vec::with_capacity(clusters.len());
         for cluster in clusters {
@@ -96,9 +113,8 @@ impl ClusteredTheta {
                 if y.is_empty() {
                     continue;
                 }
-                let sub = kernel.principal_submatrix(y);
-                let inv = crate::linalg::Cholesky::factor(&sub)?.inverse();
-                b.scatter_block(y, &inv, 1.0 / n)?;
+                let inv = engine.invert_subset_with(kernel, y)?;
+                b.scatter_block(y, inv, 1.0 / n)?;
             }
             parts.push(b.build());
         }

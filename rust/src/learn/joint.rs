@@ -23,9 +23,9 @@
 //! guarantee does **not** apply here; the paper observes slower, noisier
 //! convergence (Fig. 1), which our Fig-1 harness reproduces.
 
-use crate::dpp::likelihood::theta_dense;
 use crate::dpp::Kernel;
 use crate::error::{Error, Result};
+use crate::learn::stats::{KernelRef, KernelShape, StatsCache, ThetaEngine};
 use crate::learn::traits::{Learner, TrainingSet};
 use crate::linalg::eigen::SymEigen;
 use crate::linalg::{cholesky, matmul, nkp, Matrix};
@@ -40,6 +40,12 @@ pub struct JointPicard {
     pub power_iters: usize,
     /// Power-method relative tolerance.
     pub power_tol: f64,
+    /// Θ assembly engine: `R(Θ)` streams a dense Θ, so this path keeps one
+    /// — engine-built (dedup, pooled inverses, row-panel scatter) into a
+    /// learner-held buffer instead of freshly allocated per step.
+    engine: ThetaEngine,
+    cache: StatsCache,
+    theta: Matrix,
 }
 
 impl JointPicard {
@@ -48,7 +54,16 @@ impl JointPicard {
         if !l1.is_square() || !l2.is_square() {
             return Err(Error::Shape("joint-picard: sub-kernels must be square".into()));
         }
-        Ok(JointPicard { l1, l2, step_size, power_iters: 200, power_tol: 1e-11 })
+        Ok(JointPicard {
+            l1,
+            l2,
+            step_size,
+            power_iters: 200,
+            power_tol: 1e-11,
+            engine: ThetaEngine::new(),
+            cache: StatsCache::default(),
+            theta: Matrix::zeros(0, 0),
+        })
     }
 
     /// Borrow current sub-kernels.
@@ -199,9 +214,16 @@ impl Learner for JointPicard {
     }
 
     fn step(&mut self, data: &TrainingSet) -> Result<()> {
-        let kernel = Kernel::Kron2(self.l1.clone(), self.l2.clone());
-        let theta = theta_dense(&kernel, &data.subsets)?;
-        let op = RearrangedGradient::new(&self.l1, &self.l2, &theta)?;
+        let (n1, n2) = (self.l1.rows(), self.l2.rows());
+        {
+            let stats = self.cache.get(&data.subsets, KernelShape::Kron2 { n1, n2 })?;
+            self.engine.theta_dense_into(
+                KernelRef::Kron2(&self.l1, &self.l2),
+                stats,
+                &mut self.theta,
+            )?;
+        }
+        let op = RearrangedGradient::new(&self.l1, &self.l2, &self.theta)?;
         let (mut u, mut v, sigma) = op.top_singular(self.power_iters, self.power_tol)?;
         // Thm. C.1: U, V are both PD or both ND; fix the sign from U₁₁.
         if u.get(0, 0) < 0.0 {
@@ -235,7 +257,7 @@ impl Learner for JointPicard {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dpp::likelihood::log_likelihood;
+    use crate::dpp::likelihood::{log_likelihood, theta_dense};
     use crate::dpp::Sampler;
     use crate::rng::Rng;
 

@@ -16,13 +16,21 @@
 //!   `L₁·B·L₁ = P₁·diag(d₁ₖ²·Qₖ)·P₁ᵀ`, `Qₖ = Σ_r d₂ᵣ/(1+d₁ₖd₂ᵣ)`, and
 //!   `B₂ = P₂·diag_r(Σ_k d₁ₖd₂ᵣ²/(1+d₁ₖd₂ᵣ))·P₂ᵀ`.
 //!
-//! Total: `O(nκ³ + N²)` time / `O(N²)` space per batch iteration
-//! (Thm. 3.3). With `a = 1` the iterates stay PD and the likelihood is
-//! non-decreasing (Prop. 3.1 + Thm. 3.2).
+//! The Θ half never materializes Θ either: since both contractions are
+//! *linear* in Θ, [`crate::learn::stats::ThetaEngine`] accumulates them
+//! directly from the `κ×κ` subset inverses in `O(nκ²)` — dropping the
+//! paper's `O(nκ³ + N²)` batch iteration (Thm. 3.3) to
+//! `O(nκ³ + nκ² + N₁³ + N₂³)` time and `O(nκ + N₁² + N₂²)` extra space.
+//! The same sweep returns `Σᵢ wᵢ·log det L_{Yᵢ}` for free, fusing
+//! objective tracking into the gradient pass. With `a = 1` the iterates
+//! stay PD and the likelihood is non-decreasing (Prop. 3.1 + Thm. 3.2).
 
-use crate::dpp::likelihood::theta_dense;
 use crate::dpp::Kernel;
 use crate::error::{Error, Result};
+use crate::learn::stats::{
+    logdet_lpi_kron2, CompressedTraining, Contraction, KernelRef, KernelShape, StatsCache,
+    ThetaEngine,
+};
 use crate::learn::traits::{Learner, TrainingSet};
 use crate::linalg::eigen::{self, SymEigenScratch};
 use crate::linalg::matmul::GemmScratch;
@@ -70,6 +78,43 @@ pub trait Contractions: Send + Sync {
         *out = self.weighted_block_sum(theta, w, n1, n2)?;
         Ok(())
     }
+
+    /// Fused Θ-free entry point: contract compressed training statistics
+    /// straight into `out` (the `A₁`/`A₂` of App. B) and return the fused
+    /// data term `Σᵢ wᵢ·log det L_{Yᵢ}` — no dense Θ anywhere on the CPU
+    /// path. The default synthesizes a dense Θ through
+    /// [`ThetaEngine::theta_dense_into`] and routes it to the backend's
+    /// Θ-contraction (so Θ-only backends like the PJRT runtime keep
+    /// working unchanged, at their previous `O(N²)` cost);
+    /// [`CpuContractions`] overrides it with the `O(nκ²)` engine sweep.
+    /// m = 2 kernels only — the m = 3 learner drives the engine directly.
+    fn contract_compressed(
+        &self,
+        kernel: KernelRef<'_>,
+        stats: &CompressedTraining,
+        engine: &mut ThetaEngine,
+        op: Contraction,
+        out: &mut Matrix,
+    ) -> Result<f64> {
+        let KernelRef::Kron2(l1, l2) = kernel else {
+            return Err(Error::Invalid(
+                "contract_compressed: default backend supports m = 2 kernels only".into(),
+            ));
+        };
+        let (n1, n2) = (l1.rows(), l2.rows());
+        let mut theta = Matrix::zeros(0, 0);
+        let data_term = engine.theta_dense_into(kernel, stats, &mut theta)?;
+        match op {
+            Contraction::A1 => self.block_trace_into(&theta, l2, n1, n2, out)?,
+            Contraction::A2 => self.weighted_block_sum_into(&theta, l1, n1, n2, out)?,
+            Contraction::Mid => {
+                return Err(Error::Invalid(
+                    "contract_compressed: Mid is a three-factor contraction".into(),
+                ))
+            }
+        }
+        Ok(data_term)
+    }
 }
 
 /// Pure-Rust contraction backend (cache-blocked, multithreaded).
@@ -108,6 +153,17 @@ impl Contractions for CpuContractions {
     ) -> Result<()> {
         kron::weighted_block_sum_into(theta, w, n1, n2, out)
     }
+
+    fn contract_compressed(
+        &self,
+        kernel: KernelRef<'_>,
+        stats: &CompressedTraining,
+        engine: &mut ThetaEngine,
+        op: Contraction,
+        out: &mut Matrix,
+    ) -> Result<f64> {
+        engine.contract(kernel, stats, op, out)
+    }
 }
 
 /// Reusable workspaces of one KRK-Picard-style learner: eigendecomposition
@@ -142,10 +198,19 @@ pub struct KrkPicard {
     pub(crate) l2: Matrix,
     /// Step size `a` (§3.1.1; 1.0 = guaranteed monotonic ascent).
     pub step_size: f64,
-    /// PD-safeguard fallback for a > 1 (see `apply_safeguarded`).
+    /// PD-safeguard fallback for a > 1 (fall back to the `a = 1` step,
+    /// which Prop. 3.1 guarantees PD, when the aggressive step leaves the
+    /// PD cone).
     pub safeguard: bool,
     backend: Box<dyn Contractions>,
     scratch: KrkScratch,
+    /// Θ-free sweep engine (per-stripe partials + factor scratch).
+    engine: ThetaEngine,
+    /// Compressed training statistics, rebuilt only when the data changes.
+    cache: StatsCache,
+    /// Objective at the iterate that entered the last [`Learner::step`] —
+    /// fused out of that step's `A₁` sweep at zero extra factorizations.
+    pre_step_ll: Option<f64>,
 }
 
 impl KrkPicard {
@@ -171,7 +236,20 @@ impl KrkPicard {
             safeguard: true,
             backend,
             scratch: KrkScratch::default(),
+            engine: ThetaEngine::new(),
+            cache: StatsCache::default(),
+            pre_step_ll: None,
         })
+    }
+
+    /// Mean log-likelihood of the iterate that *entered* the most recent
+    /// [`Learner::step`], fused out of that step's `A₁` sweep
+    /// (`Σᵢ wᵢ·log det L_{Yᵢ}` from the shared factorization, normalizer
+    /// from the sub-spectra already eigendecomposed for the `B`-half) — the
+    /// free objective signal for backtracking and monitoring. `None` before
+    /// the first step or when the training set was empty.
+    pub fn pre_step_objective(&self) -> Option<f64> {
+        self.pre_step_ll
     }
 
     /// Sub-kernel sizes `(N₁, N₂)`.
@@ -184,7 +262,9 @@ impl KrkPicard {
         (&self.l1, &self.l2)
     }
 
-    /// One L₁ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`.
+    /// One L₁ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`. Kept as
+    /// the Θ-consuming API (runtime backends, oracle tests); the batch
+    /// [`Learner::step`] goes through the Θ-free compressed path instead.
     ///
     /// Steady-state allocation-free: the contraction, the `L₁·A₁·L₁`
     /// sandwich, the eigen-space `L₁·B·L₁` term and the PD-safeguarded
@@ -192,8 +272,23 @@ impl KrkPicard {
     /// allocator suite in `tests/alloc_free.rs`).
     pub fn update_l1_from_theta(&mut self, theta: &Matrix) -> Result<()> {
         let (n1, n2) = self.dims();
+        self.backend.block_trace_into(theta, &self.l2, n1, n2, &mut self.scratch.contr)?;
+        self.apply_l1_direction()
+    }
+
+    /// One L₂ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`;
+    /// steady-state allocation-free like [`KrkPicard::update_l1_from_theta`].
+    pub fn update_l2_from_theta(&mut self, theta: &Matrix) -> Result<()> {
+        let (n1, n2) = self.dims();
+        self.backend.weighted_block_sum_into(theta, &self.l1, n1, n2, &mut self.scratch.contr)?;
+        self.apply_l2_direction()
+    }
+
+    /// Finish the L₁ half-update from `scratch.contr` holding `A₁`:
+    /// sandwich, eigen-space `B`-term, PD-safeguarded step.
+    fn apply_l1_direction(&mut self) -> Result<()> {
+        let (_, n2) = self.dims();
         let s = &mut self.scratch;
-        self.backend.block_trace_into(theta, &self.l2, n1, n2, &mut s.contr)?;
         matmul::sandwich_into(&mut s.sand, &self.l1, &s.contr, &self.l1, &mut s.tmp, &mut s.gemm)?;
         l1_b_l1_into(&self.l1, &self.l2, s)?;
         s.sand -= &s.bmat;
@@ -209,12 +304,10 @@ impl KrkPicard {
         Ok(())
     }
 
-    /// One L₂ half-update given a Θ (dense). `O(N² + N₁³ + N₂³)`;
-    /// steady-state allocation-free like [`KrkPicard::update_l1_from_theta`].
-    pub fn update_l2_from_theta(&mut self, theta: &Matrix) -> Result<()> {
-        let (n1, n2) = self.dims();
+    /// Finish the L₂ half-update from `scratch.contr` holding `A₂`.
+    fn apply_l2_direction(&mut self) -> Result<()> {
+        let (n1, _) = self.dims();
         let s = &mut self.scratch;
-        self.backend.weighted_block_sum_into(theta, &self.l1, n1, n2, &mut s.contr)?;
         matmul::sandwich_into(&mut s.sand, &self.l2, &s.contr, &self.l2, &mut s.tmp, &mut s.gemm)?;
         b2_matrix_into(&self.l1, &self.l2, s)?;
         s.sand -= &s.bmat;
@@ -229,21 +322,6 @@ impl KrkPicard {
         );
         Ok(())
     }
-}
-
-/// `L ← L + scaled·X`, falling back to the `a = 1` scaling (which
-/// Prop. 3.1 guarantees PD) when an aggressive step (`a > 1`, §3.1.1)
-/// leaves the PD cone.
-pub(crate) fn apply_safeguarded(l: &mut Matrix, x: &Matrix, scaled: f64, unit: f64) {
-    apply_step(l, x, scaled, unit, true);
-}
-
-/// As [`apply_safeguarded`], with the fallback optional (allocating
-/// wrapper around [`apply_step_into`], kept for the m = 3 learner).
-pub(crate) fn apply_step(l: &mut Matrix, x: &Matrix, scaled: f64, unit: f64, safeguard: bool) {
-    let mut candidate = Matrix::zeros(0, 0);
-    let mut cholwork = Matrix::zeros(0, 0);
-    apply_step_into(l, x, scaled, unit, safeguard, &mut candidate, &mut cholwork);
 }
 
 /// The in-place PD-safeguarded step: build the candidate in a learner-held
@@ -275,7 +353,9 @@ pub(crate) fn apply_step_into(
 }
 
 /// `L₁·B·L₁ = P₁·diag(d₁ₖ²·Qₖ)·P₁ᵀ` with `Qₖ = Σ_r d₂ᵣ/(1+d₁ₖd₂ᵣ)`
-/// (App. B.1). `O(N₁³ + N₂³ + N₁N₂)`.
+/// (App. B.1). `O(N₁³ + N₂³ + N₁N₂)`. Allocating wrapper, kept as the
+/// test oracle of the m = 3 grouped B-halves.
+#[cfg(test)]
 pub(crate) fn l1_b_l1(l1: &Matrix, l2: &Matrix) -> Result<Matrix> {
     let mut s = KrkScratch::default();
     l1_b_l1_into(l1, l2, &mut s)?;
@@ -301,6 +381,8 @@ pub(crate) fn l1_b_l1_into(l1: &Matrix, l2: &Matrix, s: &mut KrkScratch) -> Resu
 
 /// `B₂ = P₂·diag_r(Σ_k d₁ₖd₂ᵣ²/(1+d₁ₖd₂ᵣ))·P₂ᵀ` (App. B.2; the
 /// `Σ_i P₁[i,k]²` factor is 1 by orthonormality). `O(N₁³+N₂³+N₁N₂)`.
+/// Allocating wrapper, kept as the m = 3 grouped-B-half test oracle.
+#[cfg(test)]
 pub(crate) fn b2_matrix(l1: &Matrix, l2: &Matrix) -> Result<Matrix> {
     let mut s = KrkScratch::default();
     b2_matrix_into(l1, l2, &mut s)?;
@@ -362,13 +444,63 @@ impl Learner for KrkPicard {
     }
 
     fn step(&mut self, data: &TrainingSet) -> Result<()> {
-        // Block-coordinate: each half-update uses Θ evaluated at the
-        // *current* kernel (Alg. 1 computes Δ fresh per line).
-        let theta = theta_dense(&self.kernel(), &data.subsets)?;
-        self.update_l1_from_theta(&theta)?;
-        let theta = theta_dense(&self.kernel(), &data.subsets)?;
-        self.update_l2_from_theta(&theta)?;
+        // Block-coordinate: each half-update uses the Θ-statistics of the
+        // *current* kernel (Alg. 1 computes Δ fresh per line) — contracted
+        // straight from the compressed subset inverses; no N×N Θ exists on
+        // this path.
+        let (n1, n2) = self.dims();
+        let shape = KernelShape::Kron2 { n1, n2 };
+        let data_term = {
+            let stats = self.cache.get(&data.subsets, shape)?;
+            self.backend.contract_compressed(
+                KernelRef::Kron2(&self.l1, &self.l2),
+                stats,
+                &mut self.engine,
+                Contraction::A1,
+                &mut self.scratch.contr,
+            )?
+        };
+        self.apply_l1_direction()?;
+        // Fused objective: the A₁ sweep's Σ wᵢ·logdet L_{Yᵢ} minus the
+        // normalizer from the sub-spectra the B-half just eigendecomposed
+        // (still the pre-update kernel) — φ at the iterate entering this
+        // step, at zero extra factorizations.
+        self.pre_step_ll = if data.subsets.is_empty() {
+            None
+        } else {
+            Some(
+                data_term
+                    - logdet_lpi_kron2(&self.scratch.e1.values, &self.scratch.e2.values)?,
+            )
+        };
+        {
+            let stats = self.cache.get(&data.subsets, shape)?;
+            self.backend.contract_compressed(
+                KernelRef::Kron2(&self.l1, &self.l2),
+                stats,
+                &mut self.engine,
+                Contraction::A2,
+                &mut self.scratch.contr,
+            )?;
+        }
+        self.apply_l2_direction()?;
         Ok(())
+    }
+
+    fn objective(&mut self, data: &TrainingSet) -> Result<f64> {
+        // Compressed-path objective: deduplicated, parallel, allocation-
+        // free logdet sweep + sub-spectrum normalizer — same value as the
+        // dense Eq.-3 evaluation, without re-factorizing duplicates.
+        if data.subsets.is_empty() {
+            return Ok(0.0);
+        }
+        let (n1, n2) = self.dims();
+        let stats = self.cache.get(&data.subsets, KernelShape::Kron2 { n1, n2 })?;
+        let data_term =
+            self.engine.sum_logdet(KernelRef::Kron2(&self.l1, &self.l2), stats)?;
+        eigen::factor_into(&self.l1, &mut self.scratch.e1)?;
+        eigen::factor_into(&self.l2, &mut self.scratch.e2)?;
+        Ok(data_term - logdet_lpi_kron2(&self.scratch.e1.values, &self.scratch.e2.values)?)
     }
 
     fn kernel(&self) -> Kernel {

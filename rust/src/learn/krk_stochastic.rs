@@ -2,17 +2,19 @@
 //!
 //! Instead of the full `Θ = (1/n)Σ_i U_i L_{Y_i}⁻¹U_iᵀ`, each half-update
 //! uses a minibatch estimate `Θ_B = (1/|B|)Σ_{i∈B} U_i L_{Y_i}⁻¹U_iᵀ`,
-//! which has only `O(|B|κ²)` non-zeros. The Θ-contractions then run on the
-//! sparse format (`O(κ²)` per update instead of `O(N²)`), and the
-//! `(I+L)⁻¹` half is unchanged (sub-eigenbases, `O(N₁³+N₂³)`), giving the
-//! paper's `O(Nκ² + N^{3/2})` time and `O(N + κ²)` space per iteration —
-//! this is the configuration that learns kernels too large to fit in
-//! memory (Fig. 1c).
+//! which has only `O(|B|κ²)` non-zeros — so the Θ-contractions are
+//! accumulated straight from the minibatch subset inverses by
+//! [`ThetaEngine::contract_batch`] (`O(|B|κ²)` per update, no sparse
+//! matrix, no kernel or subset clones), and the `(I+L)⁻¹` half is
+//! unchanged (sub-eigenbases, `O(N₁³+N₂³)`), giving the paper's
+//! `O(Nκ² + N^{3/2})` time and `O(N + κ²)` space per iteration — this is
+//! the configuration that learns kernels too large to fit in memory
+//! (Fig. 1c).
 
-use crate::dpp::likelihood::theta_sparse;
 use crate::dpp::Kernel;
 use crate::error::Result;
 use crate::learn::krk::{b2_matrix_into, l1_b_l1_into, KrkScratch};
+use crate::learn::stats::{Contraction, KernelRef, ThetaEngine};
 use crate::learn::traits::{Learner, TrainingSet};
 use crate::linalg::{matmul, Matrix};
 use crate::rng::Rng;
@@ -31,6 +33,8 @@ pub struct KrkStochastic {
     /// Shared KRK workspaces (eigen scratches, GEMM pack buffers, sandwich
     /// outputs) — the dense half of each stochastic step reuses them.
     scratch: KrkScratch,
+    /// Minibatch Θ-contraction engine (per-subset gather/factor buffers).
+    engine: ThetaEngine,
 }
 
 impl KrkStochastic {
@@ -45,6 +49,7 @@ impl KrkStochastic {
             cursor: 0,
             order: Vec::new(),
             scratch: KrkScratch::default(),
+            engine: ThetaEngine::new(),
         }
     }
 
@@ -70,17 +75,20 @@ impl KrkStochastic {
         out
     }
 
-    /// One stochastic L₁ half-update: Θ from `batch` only, sparse; the
-    /// dense algebra runs in the shared [`KrkScratch`] buffers.
+    /// One stochastic L₁ half-update: `A₁` accumulated straight from the
+    /// minibatch subset inverses; the dense algebra runs in the shared
+    /// [`KrkScratch`] buffers.
     fn update_l1(&mut self, data: &TrainingSet, batch: &[usize]) -> Result<()> {
-        let (n1, n2) = (self.l1.rows(), self.l2.rows());
-        let kernel = Kernel::Kron2(self.l1.clone(), self.l2.clone());
-        let subsets: Vec<Vec<usize>> =
-            batch.iter().map(|&i| data.subsets[i].clone()).collect();
-        let theta = theta_sparse(&kernel, &subsets, 1.0 / batch.len() as f64)?;
-        // A₁ on the sparse Θ: O(nnz), into the reused contraction buffer.
+        let n2 = self.l2.rows();
         let s = &mut self.scratch;
-        theta.block_trace_into(&self.l2, n1, n2, &mut s.contr)?;
+        self.engine.contract_batch(
+            KernelRef::Kron2(&self.l1, &self.l2),
+            &data.subsets,
+            batch,
+            1.0 / batch.len() as f64,
+            Contraction::A1,
+            &mut s.contr,
+        )?;
         matmul::sandwich_into(&mut s.sand, &self.l1, &s.contr, &self.l1, &mut s.tmp, &mut s.gemm)?;
         l1_b_l1_into(&self.l1, &self.l2, s)?;
         s.sand -= &s.bmat;
@@ -91,13 +99,16 @@ impl KrkStochastic {
 
     /// One stochastic L₂ half-update.
     fn update_l2(&mut self, data: &TrainingSet, batch: &[usize]) -> Result<()> {
-        let (n1, n2) = (self.l1.rows(), self.l2.rows());
-        let kernel = Kernel::Kron2(self.l1.clone(), self.l2.clone());
-        let subsets: Vec<Vec<usize>> =
-            batch.iter().map(|&i| data.subsets[i].clone()).collect();
-        let theta = theta_sparse(&kernel, &subsets, 1.0 / batch.len() as f64)?;
+        let n1 = self.l1.rows();
         let s = &mut self.scratch;
-        theta.weighted_block_sum_into(&self.l1, n1, n2, &mut s.contr)?;
+        self.engine.contract_batch(
+            KernelRef::Kron2(&self.l1, &self.l2),
+            &data.subsets,
+            batch,
+            1.0 / batch.len() as f64,
+            Contraction::A2,
+            &mut s.contr,
+        )?;
         matmul::sandwich_into(&mut s.sand, &self.l2, &s.contr, &self.l2, &mut s.tmp, &mut s.gemm)?;
         b2_matrix_into(&self.l1, &self.l2, s)?;
         s.sand -= &s.bmat;
@@ -192,6 +203,44 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s), "epoch shuffling skipped subsets: {seen:?}");
+    }
+
+    #[test]
+    fn batch_contraction_matches_sparse_theta_reference() {
+        // The engine's direct minibatch accumulation must agree with the
+        // sparse-Θ path it replaced (kept in dpp::likelihood as oracle).
+        let (data, learner) = setup(3, 4, 20, 29);
+        let (l1, l2) = learner.subkernels();
+        let kernel = Kernel::Kron2(l1.clone(), l2.clone());
+        let batch = [0usize, 3, 7, 7]; // repeat included
+        let subsets: Vec<Vec<usize>> =
+            batch.iter().map(|&i| data.subsets[i].clone()).collect();
+        let theta =
+            crate::dpp::likelihood::theta_sparse(&kernel, &subsets, 0.25).unwrap();
+        let a1_ref = theta.block_trace(l2, 3, 4).unwrap();
+        let a2_ref = theta.weighted_block_sum(l1, 3, 4).unwrap();
+        let mut eng = ThetaEngine::new();
+        let mut out = Matrix::zeros(0, 0);
+        eng.contract_batch(
+            KernelRef::Kron2(l1, l2),
+            &data.subsets,
+            &batch,
+            0.25,
+            Contraction::A1,
+            &mut out,
+        )
+        .unwrap();
+        assert!(out.rel_diff(&a1_ref) < 1e-12, "A1: {}", out.rel_diff(&a1_ref));
+        eng.contract_batch(
+            KernelRef::Kron2(l1, l2),
+            &data.subsets,
+            &batch,
+            0.25,
+            Contraction::A2,
+            &mut out,
+        )
+        .unwrap();
+        assert!(out.rel_diff(&a2_ref) < 1e-12, "A2: {}", out.rel_diff(&a2_ref));
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! - [`em`]: the EM baseline (ref. [10], Table-1 comparison).
 //! - [`clustering`]: greedy SUKP subset clustering (§3.3).
 //! - [`init`]: the paper's §5 initialization protocols.
+//! - [`stats`]: compressed training statistics — the Θ-free `O(nκ²)`
+//!   gradient-contraction engine every batch learner routes through.
 //! - [`traits`]: the shared `Learner` interface and training-set types.
 
 pub mod clustering;
@@ -19,6 +21,7 @@ pub mod krk3;
 pub mod krk_stochastic;
 pub mod lowrank;
 pub mod picard;
+pub mod stats;
 pub mod traits;
 
 pub use em::EmLearner;
@@ -28,4 +31,5 @@ pub use krk3::Krk3Picard;
 pub use krk_stochastic::KrkStochastic;
 pub use lowrank::LowRank;
 pub use picard::Picard;
+pub use stats::{CompressedTraining, ThetaEngine};
 pub use traits::{IterRecord, Learner, LearnResult, TrainingSet};

@@ -3,13 +3,18 @@
 //!
 //! Iterates `L ← L + a·LΔL` with `Δ = Θ − (I+L)⁻¹` (Eqs. 4–5). Each step
 //! costs `O(nκ³ + N³)`: `Θ` assembly plus the dense inverse and the two
-//! `N×N` products. With `a = 1` the log-likelihood is guaranteed
-//! non-decreasing ([25, Thm 2.2]); `a > 1` (the paper uses 1.3) trades the
-//! guarantee for speed.
+//! `N×N` products. The full kernel genuinely needs the dense Θ (there is
+//! no sub-factor structure to contract into), so this path routes Θ
+//! assembly through [`crate::learn::stats::ThetaEngine::theta_dense_into`]:
+//! duplicate subsets factor once, the inverses pool in reused buffers, and
+//! the scatter runs over per-worker Θ row panels instead of serially — the
+//! Θ buffer itself persists across iterations. With `a = 1` the
+//! log-likelihood is guaranteed non-decreasing ([25, Thm 2.2]); `a > 1`
+//! (the paper uses 1.3) trades the guarantee for speed.
 
-use crate::dpp::likelihood::theta_dense;
 use crate::dpp::Kernel;
 use crate::error::{Error, Result};
+use crate::learn::stats::{KernelRef, KernelShape, StatsCache, ThetaEngine};
 use crate::learn::traits::{Learner, TrainingSet};
 use crate::linalg::{cholesky, matmul, Matrix};
 
@@ -26,6 +31,12 @@ pub struct Picard {
     candidate: Matrix,
     /// PD-check factor buffer.
     cholwork: Matrix,
+    /// Θ assembly engine (pooled subset inverses, row-panel scatter).
+    engine: ThetaEngine,
+    /// Compressed training statistics (dedup weights).
+    cache: StatsCache,
+    /// Θ buffer, reused across iterations (holds Δ after the subtraction).
+    theta: Matrix,
 }
 
 impl Picard {
@@ -40,6 +51,9 @@ impl Picard {
             safeguard: true,
             candidate: Matrix::zeros(0, 0),
             cholwork: Matrix::zeros(0, 0),
+            engine: ThetaEngine::new(),
+            cache: StatsCache::default(),
+            theta: Matrix::zeros(0, 0),
         })
     }
 
@@ -55,19 +69,22 @@ impl Learner for Picard {
     }
 
     fn step(&mut self, data: &TrainingSet) -> Result<()> {
-        let kernel = Kernel::Full(self.l.clone());
-        // Θ = (1/n) Σ U_i L_{Y_i}^{-1} U_iᵀ — O(nκ³).
-        let theta = theta_dense(&kernel, &data.subsets)?;
-        // Δ = Θ − (I+L)^{-1}.
+        // Θ = (1/n) Σ U_i L_{Y_i}^{-1} U_iᵀ — O(nκ³), engine-assembled
+        // (dedup weights, pooled inverses, row-panel parallel scatter).
+        let n = self.l.rows();
+        {
+            let stats = self.cache.get(&data.subsets, KernelShape::Full { n })?;
+            self.engine.theta_dense_into(KernelRef::Full(&self.l), stats, &mut self.theta)?;
+        }
+        // Δ = Θ − (I+L)^{-1}, in the Θ buffer.
         let mut l_plus_i = self.l.clone();
         l_plus_i.add_diag_mut(1.0);
         let inv = cholesky::inverse_pd(&l_plus_i)?;
-        let mut delta = theta;
-        delta -= &inv;
+        self.theta -= &inv;
         // L ← L + a·LΔL. For a > 1 PD is no longer guaranteed (§3.1.1 /
         // [25]); safeguard by falling back to the a = 1 step, which is.
         // Candidate + rollback live in learner-held buffers (no clones).
-        let ldl = matmul::sandwich(&self.l, &delta, &self.l)?;
+        let ldl = matmul::sandwich(&self.l, &self.theta, &self.l)?;
         crate::learn::krk::apply_step_into(
             &mut self.l,
             &ldl,

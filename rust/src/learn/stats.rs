@@ -1,0 +1,1175 @@
+//! Compressed training statistics — the Θ-free gradient engine.
+//!
+//! The batch learners' gradient statistics are
+//! `Θ = (1/n) Σᵢ Uᵢ L_{Yᵢ}⁻¹ Uᵢᵀ` (Eq. 4) feeding block contractions that
+//! are *linear* in Θ (App. B): `A₁[k,l] = Tr(Θ_(kl)·L₂)` and
+//! `A₂ = Σ_{ij} L₁[i,j]·Θ_(ij)`. Materializing the dense `N×N` Θ just to
+//! contract it costs `O(N²)` time and space per half-update; this module
+//! accumulates the contractions *directly from the `κ×κ` subset inverses*
+//! in `O(nκ²)` — the same observation behind the paper's sparse/stochastic
+//! updates (§3.2–3.3) — so the batch step drops from
+//! `O(nκ³ + N²)` time / `O(N²)` extra space to
+//! `O(nκ³ + nκ² + N₁³ + N₂³)` time / `O(nκ + N₁² + N₂²)` extra space, and
+//! learning works at ground-set sizes where an `N×N` Θ does not fit.
+//!
+//! Two pieces:
+//!
+//! - [`CompressedTraining`]: built once per training set — sorts and
+//!   deduplicates identical subsets into multiplicity weights (real basket
+//!   data repeats subsets; dedup shrinks the effective `n`) and flattens
+//!   the indices into a CSR-style arena with *precomputed* Kronecker index
+//!   splits `t ↦ (k, p)` (m = 2) / `(k, p, q)` (m = 3), so the
+//!   per-iteration sweep is cache-linear with no divisions in the inner
+//!   loops.
+//! - [`ThetaEngine`]: one parallel sweep per half-update that gathers each
+//!   `L_Y`, Cholesky-factors it once, and accumulates the requested
+//!   contraction into per-stripe sub-kernel-sized partials with a fixed
+//!   subset→stripe map and ordered reduction — bitwise invariant to the
+//!   worker-thread count. The same factorization is fused to also return
+//!   `Σᵢ wᵢ·log det L_{Yᵢ}`, so objective tracking costs no extra
+//!   factorizations. All state lives in engine-held scratch: steady-state
+//!   sweeps are allocation-free (asserted by `tests/alloc_free.rs`).
+//!
+//! The dense [`crate::dpp::likelihood::theta_dense`] remains as the test
+//! oracle; the engine-vs-oracle property suite lives in
+//! `tests/learning_stats.rs`, and the dense-Θ-vs-engine speedups land in
+//! `BENCH_learning.json` (see EXPERIMENTS.md §Learning).
+
+use crate::error::{Error, Result};
+use crate::linalg::{cholesky, matmul, Matrix};
+
+/// Number of deterministic accumulation stripes. Unique subset `u` belongs
+/// to stripe `u % STRIPES` and is processed in ascending `u` within its
+/// stripe; each stripe owns its own partial accumulator and the final
+/// reduction sums stripes in ascending order. Workers own whole stripes,
+/// so the result is bitwise identical for **any** worker count (including
+/// the inline single-thread path).
+const STRIPES: usize = 16;
+
+/// Below this many unique subsets the sweep runs inline: thread spawns
+/// allocate and cost more than they save on small corpora (and the
+/// counting-allocator suite measures this regime).
+const PAR_MIN_SUBSETS: usize = 48;
+
+/// Kernel structure a [`CompressedTraining`] is built for; the index
+/// splits of the arena are precomputed against these factor sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelShape {
+    /// Unstructured kernel over `n` items.
+    Full { n: usize },
+    /// `L₁ ⊗ L₂`; item `t = k·n2 + p` (§2 index split).
+    Kron2 { n1: usize, n2: usize },
+    /// `L₁ ⊗ L₂ ⊗ L₃`; item `t = (k·n2 + p)·n3 + q`.
+    Kron3 { n1: usize, n2: usize, n3: usize },
+}
+
+impl KernelShape {
+    /// Ground-set size `N`.
+    pub fn ground_size(&self) -> usize {
+        match *self {
+            KernelShape::Full { n } => n,
+            KernelShape::Kron2 { n1, n2 } => n1 * n2,
+            KernelShape::Kron3 { n1, n2, n3 } => n1 * n2 * n3,
+        }
+    }
+}
+
+/// Borrowed kernel factors — what the engine reads entries from. Learners
+/// pass their sub-kernels directly, avoiding the per-step `Kernel` clone.
+#[derive(Clone, Copy)]
+pub enum KernelRef<'a> {
+    /// Dense `L`.
+    Full(&'a Matrix),
+    /// `L₁ ⊗ L₂`.
+    Kron2(&'a Matrix, &'a Matrix),
+    /// `L₁ ⊗ L₂ ⊗ L₃`.
+    Kron3(&'a Matrix, &'a Matrix, &'a Matrix),
+}
+
+impl KernelRef<'_> {
+    /// The [`KernelShape`] these factors define.
+    pub fn shape(&self) -> KernelShape {
+        match *self {
+            KernelRef::Full(l) => KernelShape::Full { n: l.rows() },
+            KernelRef::Kron2(a, b) => KernelShape::Kron2 { n1: a.rows(), n2: b.rows() },
+            KernelRef::Kron3(a, b, c) => {
+                KernelShape::Kron3 { n1: a.rows(), n2: b.rows(), n3: c.rows() }
+            }
+        }
+    }
+}
+
+/// Which App.-B block contraction to accumulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Contraction {
+    /// First factor: `A₁[k,l] = Tr(Θ_(kl)·B)` with `B` the remaining
+    /// factor(s). For m = 3 the grouped `B = L₂ ⊗ L₃` is *not*
+    /// materialized — its entries factor along the index split.
+    A1,
+    /// Middle factor (m = 3 only): the mixed weighted trace `H` of
+    /// [`crate::linalg::kron::mixed_weighted_trace`] with `W₁ = L₁`,
+    /// `W₃ = L₃`.
+    Mid,
+    /// Last factor: `A₂ = Σ_{ij} W[i,j]·Θ_(ij)` with `W` the leading
+    /// factor(s) (grouped `W = L₁ ⊗ L₂` for m = 3, never materialized).
+    A2,
+}
+
+/// A training set compressed for the Θ-free sweep: duplicate subsets
+/// merged into multiplicity weights, indices flattened into a CSR-style
+/// arena, Kronecker index splits precomputed.
+pub struct CompressedTraining {
+    shape: KernelShape,
+    /// Arena offsets; unique subset `u` occupies `items[offsets[u]..offsets[u+1]]`.
+    offsets: Vec<usize>,
+    /// Flat ground-set item ids (sorted within each subset).
+    items: Vec<usize>,
+    /// Factor-1 index `k` per arena slot (empty for [`KernelShape::Full`]).
+    s1: Vec<u32>,
+    /// Factor-2 index `p` per arena slot (empty for `Full`).
+    s2: Vec<u32>,
+    /// Factor-3 index `q` per arena slot (`Kron3` only).
+    s3: Vec<u32>,
+    /// `multiplicity / n` per unique subset — the Θ mean weights.
+    weights: Vec<f64>,
+    /// Multiplicity counts.
+    counts: Vec<u32>,
+    /// Original (pre-dedup) subset count, including empty subsets.
+    n_total: usize,
+    /// Largest subset size κ.
+    kappa: usize,
+    fingerprint: u64,
+}
+
+impl CompressedTraining {
+    /// Build from a subset list. Subsets must be sorted and duplicate-free
+    /// (as [`crate::learn::traits::TrainingSet`] guarantees) with items in
+    /// range for `shape`. `O(n log n + nκ)`.
+    pub fn new(subsets: &[Vec<usize>], shape: KernelShape) -> Result<Self> {
+        let n_items = shape.ground_size();
+        for (k, y) in subsets.iter().enumerate() {
+            if y.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(Error::Invalid(format!(
+                    "compressed stats: subset {k} is not sorted/unique"
+                )));
+            }
+            if let Some(&last) = y.last() {
+                if last >= n_items {
+                    return Err(Error::Invalid(format!(
+                        "compressed stats: subset {k} references item {last} ≥ N={n_items}"
+                    )));
+                }
+            }
+        }
+        // Sort subset indices by content; equal runs collapse to one arena
+        // entry with a multiplicity count.
+        let mut order: Vec<usize> =
+            (0..subsets.len()).filter(|&i| !subsets[i].is_empty()).collect();
+        order.sort_by(|&a, &b| subsets[a].cmp(&subsets[b]));
+        let mut offsets = vec![0usize];
+        let mut items: Vec<usize> = Vec::new();
+        let mut counts: Vec<u32> = Vec::new();
+        let mut kappa = 0usize;
+        let mut i = 0;
+        while i < order.len() {
+            let y = &subsets[order[i]];
+            let mut j = i + 1;
+            while j < order.len() && subsets[order[j]] == *y {
+                j += 1;
+            }
+            items.extend_from_slice(y);
+            offsets.push(items.len());
+            counts.push((j - i) as u32);
+            kappa = kappa.max(y.len());
+            i = j;
+        }
+        // Precomputed index splits: the sweep's inner loops never divide.
+        let (mut s1, mut s2, mut s3) = (Vec::new(), Vec::new(), Vec::new());
+        match shape {
+            KernelShape::Full { .. } => {}
+            KernelShape::Kron2 { n2, .. } => {
+                s1.reserve(items.len());
+                s2.reserve(items.len());
+                for &t in &items {
+                    let (k, p) = split_item2(t, n2);
+                    s1.push(k);
+                    s2.push(p);
+                }
+            }
+            KernelShape::Kron3 { n2, n3, .. } => {
+                s1.reserve(items.len());
+                s2.reserve(items.len());
+                s3.reserve(items.len());
+                for &t in &items {
+                    let (k, p, q) = split_item3(t, n2, n3);
+                    s1.push(k);
+                    s2.push(p);
+                    s3.push(q);
+                }
+            }
+        }
+        let n_total = subsets.len();
+        let weights =
+            counts.iter().map(|&c| c as f64 / n_total.max(1) as f64).collect();
+        Ok(CompressedTraining {
+            shape,
+            offsets,
+            items,
+            s1,
+            s2,
+            s3,
+            weights,
+            counts,
+            n_total,
+            kappa,
+            fingerprint: Self::fingerprint_of(subsets),
+        })
+    }
+
+    /// Number of unique non-empty subsets.
+    pub fn unique(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Original subset count `n` (the Θ mean denominator).
+    pub fn n_total(&self) -> usize {
+        self.n_total
+    }
+
+    /// Largest subset size κ.
+    pub fn kappa(&self) -> usize {
+        self.kappa
+    }
+
+    /// Shape the splits were precomputed for.
+    pub fn shape(&self) -> KernelShape {
+        self.shape
+    }
+
+    /// `(non-empty subsets) / unique` — the factor dedup shrinks the sweep by.
+    pub fn dedup_ratio(&self) -> f64 {
+        let nonempty: u64 = self.counts.iter().map(|&c| c as u64).sum();
+        nonempty as f64 / self.unique().max(1) as f64
+    }
+
+    /// Items of unique subset `u`.
+    pub fn subset(&self, u: usize) -> &[usize] {
+        &self.items[self.offsets[u]..self.offsets[u + 1]]
+    }
+
+    /// Mean weight (`multiplicity / n`) of unique subset `u`.
+    pub fn weight(&self, u: usize) -> f64 {
+        self.weights[u]
+    }
+
+    /// Arena range of unique subset `u`.
+    fn range(&self, u: usize) -> (usize, usize) {
+        (self.offsets[u], self.offsets[u + 1])
+    }
+
+    /// Split-index slices for arena range `[lo, hi)` (empty for factors the
+    /// shape does not have).
+    fn splits(&self, lo: usize, hi: usize) -> (&[u32], &[u32], &[u32]) {
+        (
+            if self.s1.is_empty() { &[] } else { &self.s1[lo..hi] },
+            if self.s2.is_empty() { &[] } else { &self.s2[lo..hi] },
+            if self.s3.is_empty() { &[] } else { &self.s3[lo..hi] },
+        )
+    }
+
+    /// Does this compression still describe `subsets`? An `O(nκ)`
+    /// allocation-free fingerprint pass — the learners' per-step
+    /// rebuild-on-change check.
+    pub fn matches(&self, subsets: &[Vec<usize>]) -> bool {
+        self.n_total == subsets.len() && self.fingerprint == Self::fingerprint_of(subsets)
+    }
+
+    /// Order-sensitive FNV-1a over subset lengths and items.
+    pub fn fingerprint_of(subsets: &[Vec<usize>]) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for y in subsets {
+            mix(y.len() as u64 ^ 0x9e37_79b9_7f4a_7c15);
+            for &i in y {
+                mix(i as u64 + 1);
+            }
+        }
+        h
+    }
+}
+
+/// Rebuild-on-change cache for a learner-held [`CompressedTraining`]: the
+/// cheap fingerprint pass detects training-set changes; the arena is
+/// rebuilt only when the data (or the kernel shape) actually changed, so
+/// steady-state steps never allocate here.
+#[derive(Default)]
+pub struct StatsCache {
+    stats: Option<CompressedTraining>,
+}
+
+impl StatsCache {
+    /// Current compression of `subsets` for `shape`, rebuilding if stale.
+    pub fn get(
+        &mut self,
+        subsets: &[Vec<usize>],
+        shape: KernelShape,
+    ) -> Result<&CompressedTraining> {
+        let stale = match &self.stats {
+            Some(s) => s.shape() != shape || !s.matches(subsets),
+            None => true,
+        };
+        if stale {
+            self.stats = Some(CompressedTraining::new(subsets, shape)?);
+        }
+        Ok(self.stats.as_ref().expect("just ensured"))
+    }
+}
+
+/// `log det(L₁⊗L₂ + I) = Σ_{k,r} ln(1 + d₁ₖ·d₂ᵣ)` from sub-spectra — the
+/// Eq.-3 normalizer without touching the product space (Cor. 2.2).
+pub fn logdet_lpi_kron2(d1: &[f64], d2: &[f64]) -> Result<f64> {
+    let mut s = 0.0;
+    for &x in d1 {
+        for &y in d2 {
+            let v = 1.0 + x * y;
+            if v <= 0.0 {
+                return Err(Error::Numerical("logdet(L+I): non-PD Kron spectrum".into()));
+            }
+            s += v.ln();
+        }
+    }
+    Ok(s)
+}
+
+/// Three-factor form of [`logdet_lpi_kron2`].
+pub fn logdet_lpi_kron3(d1: &[f64], d2: &[f64], d3: &[f64]) -> Result<f64> {
+    let mut s = 0.0;
+    for &x in d1 {
+        for &y in d2 {
+            let xy = x * y;
+            for &z in d3 {
+                let v = 1.0 + xy * z;
+                if v <= 0.0 {
+                    return Err(Error::Numerical(
+                        "logdet(L+I): non-PD Kron spectrum".into(),
+                    ));
+                }
+                s += v.ln();
+            }
+        }
+    }
+    Ok(s)
+}
+
+/// The Θ-free sweep engine: per-stripe partials, gather/factor/inverse
+/// scratch, and the inverse pool of the dense-Θ compatibility path — all
+/// reused across iterations, so steady-state sweeps are allocation-free.
+pub struct ThetaEngine {
+    /// Worker-thread cap (0 = [`matmul::available_threads`]). Results are
+    /// bitwise identical for every cap — the knob exists for the
+    /// determinism tests and for embedding in already-parallel callers.
+    thread_cap: usize,
+    /// Per-stripe contraction partials (sub-kernel sized).
+    partials: Vec<Matrix>,
+    /// Per-stripe fused `Σ w·logdet` partials.
+    logdets: Vec<f64>,
+    /// Per-stripe `L_Y` gather buffers.
+    subs: Vec<Matrix>,
+    /// Per-stripe Cholesky factor buffers.
+    chols: Vec<Matrix>,
+    /// Per-stripe triangular-inverse buffers.
+    tris: Vec<Matrix>,
+    /// Per-stripe `L_Y⁻¹` buffers.
+    invs: Vec<Matrix>,
+    /// Per-unique-subset inverses of the dense-Θ path (Picard/Joint).
+    inv_pool: Vec<Matrix>,
+    /// Per-unique-subset weighted logdets (summed in `u` order).
+    pool_logdets: Vec<f64>,
+    /// Minibatch split scratch (the stochastic path has no precomputed splits).
+    b1: Vec<u32>,
+    b2: Vec<u32>,
+    b3: Vec<u32>,
+}
+
+impl Default for ThetaEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThetaEngine {
+    pub fn new() -> Self {
+        let mats = || (0..STRIPES).map(|_| Matrix::zeros(0, 0)).collect::<Vec<_>>();
+        ThetaEngine {
+            thread_cap: 0,
+            partials: mats(),
+            logdets: vec![0.0; STRIPES],
+            subs: mats(),
+            chols: mats(),
+            tris: mats(),
+            invs: mats(),
+            inv_pool: Vec::new(),
+            pool_logdets: Vec::new(),
+            b1: Vec::new(),
+            b2: Vec::new(),
+            b3: Vec::new(),
+        }
+    }
+
+    /// Cap worker threads (0 restores the [`matmul::available_threads`]
+    /// default). Purely a scheduling knob: every cap produces bitwise
+    /// identical results.
+    pub fn set_thread_cap(&mut self, cap: usize) {
+        self.thread_cap = cap;
+    }
+
+    fn workers(&self, unique: usize) -> usize {
+        if unique < PAR_MIN_SUBSETS {
+            return 1;
+        }
+        let cap = if self.thread_cap == 0 {
+            matmul::available_threads()
+        } else {
+            self.thread_cap
+        };
+        cap.min(STRIPES).max(1)
+    }
+
+    /// One fused sweep: gather each unique `L_Y`, factor once, accumulate
+    /// contraction `op` into `out` (resized to the factor's size), and
+    /// return `Σᵢ wᵢ·log det L_{Yᵢ}`. `O(nκ³ + nκ²)`, never touches the
+    /// product space; bitwise thread-count-invariant; allocation-free in
+    /// steady state.
+    pub fn contract(
+        &mut self,
+        kernel: KernelRef<'_>,
+        stats: &CompressedTraining,
+        op: Contraction,
+        out: &mut Matrix,
+    ) -> Result<f64> {
+        check_shape(kernel, stats)?;
+        let dim = contraction_dim(kernel, op)?;
+        out.resize_zeroed(dim, dim);
+        for p in &mut self.partials {
+            p.resize_zeroed(dim, dim);
+        }
+        self.logdets.fill(0.0);
+        let nworkers = self.workers(stats.unique());
+        self.run_stripes(kernel, stats, Some(op), nworkers)?;
+        let mut total = 0.0;
+        for s in 0..STRIPES {
+            *out += &self.partials[s];
+            total += self.logdets[s];
+        }
+        Ok(total)
+    }
+
+    /// Logdet-only sweep: `Σᵢ wᵢ·log det L_{Yᵢ}` (the Eq.-3 data term)
+    /// without computing inverses — the fused objective path. Parallel,
+    /// deduplicated, allocation-free, bitwise thread-count-invariant.
+    pub fn sum_logdet(
+        &mut self,
+        kernel: KernelRef<'_>,
+        stats: &CompressedTraining,
+    ) -> Result<f64> {
+        check_shape(kernel, stats)?;
+        self.logdets.fill(0.0);
+        let nworkers = self.workers(stats.unique());
+        self.run_stripes(kernel, stats, None, nworkers)?;
+        Ok(self.logdets.iter().sum())
+    }
+
+    fn run_stripes(
+        &mut self,
+        kernel: KernelRef<'_>,
+        stats: &CompressedTraining,
+        op: Option<Contraction>,
+        nworkers: usize,
+    ) -> Result<()> {
+        if nworkers <= 1 {
+            for s in 0..STRIPES {
+                stripe_sweep(
+                    kernel,
+                    stats,
+                    op,
+                    s,
+                    &mut self.partials[s],
+                    &mut self.subs[s],
+                    &mut self.chols[s],
+                    &mut self.tris[s],
+                    &mut self.invs[s],
+                    &mut self.logdets[s],
+                )?;
+            }
+            return Ok(());
+        }
+        // Workers own whole stripes (contiguous blocks — which worker runs
+        // a stripe never affects that stripe's arithmetic).
+        let per = STRIPES.div_ceil(nworkers);
+        let ThetaEngine { partials, subs, chols, tris, invs, logdets, .. } = self;
+        std::thread::scope(|sc| -> Result<()> {
+            let mut handles = Vec::new();
+            let (mut pr, mut sr, mut cr, mut tr, mut ir, mut lr) = (
+                &mut partials[..],
+                &mut subs[..],
+                &mut chols[..],
+                &mut tris[..],
+                &mut invs[..],
+                &mut logdets[..],
+            );
+            let mut start = 0usize;
+            while start < STRIPES {
+                let take = per.min(STRIPES - start);
+                let (p, rest) = pr.split_at_mut(take);
+                pr = rest;
+                let (sb, rest) = sr.split_at_mut(take);
+                sr = rest;
+                let (cb, rest) = cr.split_at_mut(take);
+                cr = rest;
+                let (tb, rest) = tr.split_at_mut(take);
+                tr = rest;
+                let (ib, rest) = ir.split_at_mut(take);
+                ir = rest;
+                let (lb, rest) = lr.split_at_mut(take);
+                lr = rest;
+                let lo = start;
+                handles.push(sc.spawn(move || -> Result<()> {
+                    for off in 0..take {
+                        stripe_sweep(
+                            kernel,
+                            stats,
+                            op,
+                            lo + off,
+                            &mut p[off],
+                            &mut sb[off],
+                            &mut cb[off],
+                            &mut tb[off],
+                            &mut ib[off],
+                            &mut lb[off],
+                        )?;
+                    }
+                    Ok(())
+                }));
+                start += take;
+            }
+            matmul::join_first_error(handles)
+        })
+    }
+
+    /// Dense Θ for the full-kernel Picard / Joint-Picard paths:
+    /// deduplicated subset inverses (phase 1, contiguous chunks into the
+    /// engine's inverse pool) scattered by disjoint Θ row panels (phase 2)
+    /// — no serial scatter, no `Mutex` recollection, deterministic for any
+    /// worker count (each Θ row is owned by exactly one worker and receives
+    /// its contributions in unique-subset order). Returns the fused
+    /// `Σᵢ wᵢ·log det L_{Yᵢ}`.
+    pub fn theta_dense_into(
+        &mut self,
+        kernel: KernelRef<'_>,
+        stats: &CompressedTraining,
+        out: &mut Matrix,
+    ) -> Result<f64> {
+        check_shape(kernel, stats)?;
+        let n = stats.shape().ground_size();
+        let unique = stats.unique();
+        if self.inv_pool.len() < unique {
+            self.inv_pool.resize_with(unique, || Matrix::zeros(0, 0));
+        }
+        self.pool_logdets.clear();
+        self.pool_logdets.resize(unique, 0.0);
+        let nworkers = self.workers(unique);
+        // Phase 1: pool the κ×κ inverses (slots are independent, so any
+        // contiguous partition is deterministic).
+        {
+            let ThetaEngine { subs, chols, tris, inv_pool, pool_logdets, .. } = self;
+            if nworkers <= 1 {
+                pool_range(
+                    kernel,
+                    stats,
+                    0,
+                    &mut subs[0],
+                    &mut chols[0],
+                    &mut tris[0],
+                    &mut inv_pool[..unique],
+                    &mut pool_logdets[..],
+                )?;
+            } else {
+                let chunk = unique.div_ceil(nworkers);
+                std::thread::scope(|sc| -> Result<()> {
+                    let mut handles = Vec::new();
+                    let mut ip = &mut inv_pool[..unique];
+                    let mut pl = &mut pool_logdets[..];
+                    let mut sr = &mut subs[..];
+                    let mut cr = &mut chols[..];
+                    let mut tr = &mut tris[..];
+                    let mut base = 0usize;
+                    while base < unique {
+                        let take = chunk.min(unique - base);
+                        let (ipc, rest) = ip.split_at_mut(take);
+                        ip = rest;
+                        let (plc, rest) = pl.split_at_mut(take);
+                        pl = rest;
+                        let (sb, rest) = sr.split_at_mut(1);
+                        sr = rest;
+                        let (cb, rest) = cr.split_at_mut(1);
+                        cr = rest;
+                        let (tb, rest) = tr.split_at_mut(1);
+                        tr = rest;
+                        let lo = base;
+                        handles.push(sc.spawn(move || {
+                            pool_range(
+                                kernel,
+                                stats,
+                                lo,
+                                &mut sb[0],
+                                &mut cb[0],
+                                &mut tb[0],
+                                ipc,
+                                plc,
+                            )
+                        }));
+                        base += take;
+                    }
+                    matmul::join_first_error(handles)
+                })?;
+            }
+        }
+        // Fused data term, reduced in ascending unique-subset order.
+        let total: f64 = self.pool_logdets.iter().sum();
+        // Phase 2: row-panel scatter.
+        out.resize_zeroed(n, n);
+        if nworkers <= 1 || n < nworkers {
+            scatter_rows(stats, &self.inv_pool, 0, n, out.as_mut_slice(), n);
+        } else {
+            let band = n.div_ceil(nworkers);
+            let inv_pool = &self.inv_pool;
+            std::thread::scope(|sc| {
+                let mut rest = out.as_mut_slice();
+                let mut lo = 0usize;
+                while lo < n {
+                    let len = band.min(n - lo);
+                    let (chunk, tail) = rest.split_at_mut(len * n);
+                    rest = tail;
+                    let start = lo;
+                    sc.spawn(move || {
+                        scatter_rows(stats, inv_pool, start, start + len, chunk, n)
+                    });
+                    lo += len;
+                }
+            });
+        }
+        Ok(total)
+    }
+
+    /// Minibatch contraction without precomputed splits (the stochastic
+    /// learner's batch changes every step): `O(|B|κ³ + |B|κ²)` straight
+    /// from the subset inverses — no sparse Θ, no subset clones. Serial
+    /// (minibatches are tiny) and trivially deterministic. Returns
+    /// `weight·Σ_{i∈B} log det L_{Yᵢ}`.
+    pub fn contract_batch(
+        &mut self,
+        kernel: KernelRef<'_>,
+        subsets: &[Vec<usize>],
+        batch: &[usize],
+        weight: f64,
+        op: Contraction,
+        out: &mut Matrix,
+    ) -> Result<f64> {
+        let dim = contraction_dim(kernel, op)?;
+        let n = kernel.shape().ground_size();
+        out.resize_zeroed(dim, dim);
+        let mut total = 0.0;
+        for &bi in batch {
+            let y = subsets.get(bi).ok_or_else(|| {
+                Error::Invalid(format!("contract_batch: index {bi} out of range"))
+            })?;
+            if y.is_empty() {
+                continue;
+            }
+            if y.iter().any(|&t| t >= n) {
+                return Err(Error::Invalid(format!(
+                    "contract_batch: subset {bi} references an item ≥ N={n}"
+                )));
+            }
+            split_indices(kernel, y, &mut self.b1, &mut self.b2, &mut self.b3);
+            gather_subset(kernel, y, &self.b1, &self.b2, &self.b3, &mut self.subs[0]);
+            cholesky::Cholesky::factor_into(&self.subs[0], &mut self.chols[0])?;
+            let mut ld = 0.0;
+            for i in 0..y.len() {
+                ld += self.chols[0].get(i, i).ln();
+            }
+            total += weight * 2.0 * ld;
+            cholesky::inverse_from_factor_into(
+                &self.chols[0],
+                &mut self.tris[0],
+                &mut self.invs[0],
+            );
+            accumulate(kernel, op, weight, &self.invs[0], &self.b1, &self.b2, &self.b3, out);
+        }
+        Ok(total)
+    }
+
+    /// Factor + invert one `L_Y` entirely in engine-held buffers — the
+    /// §3.3 clustering builder's per-subset path.
+    pub fn invert_subset_with(
+        &mut self,
+        kernel: &crate::dpp::Kernel,
+        y: &[usize],
+    ) -> Result<&Matrix> {
+        kernel.principal_submatrix_into(y, &mut self.subs[0]);
+        cholesky::Cholesky::factor_into(&self.subs[0], &mut self.chols[0])?;
+        cholesky::inverse_from_factor_into(
+            &self.chols[0],
+            &mut self.tris[0],
+            &mut self.invs[0],
+        );
+        Ok(&self.invs[0])
+    }
+}
+
+/// Output size of contraction `op` against `kernel` (validates the combo).
+fn contraction_dim(kernel: KernelRef<'_>, op: Contraction) -> Result<usize> {
+    match (kernel, op) {
+        (KernelRef::Kron2(l1, _), Contraction::A1) => Ok(l1.rows()),
+        (KernelRef::Kron2(_, l2), Contraction::A2) => Ok(l2.rows()),
+        (KernelRef::Kron2(..), Contraction::Mid) => Err(Error::Invalid(
+            "contraction Mid requires a three-factor kernel".into(),
+        )),
+        (KernelRef::Kron3(l1, _, _), Contraction::A1) => Ok(l1.rows()),
+        (KernelRef::Kron3(_, l2, _), Contraction::Mid) => Ok(l2.rows()),
+        (KernelRef::Kron3(_, _, l3), Contraction::A2) => Ok(l3.rows()),
+        (KernelRef::Full(_), _) => Err(Error::Invalid(
+            "full kernels have no block contraction — use theta_dense_into".into(),
+        )),
+    }
+}
+
+fn check_shape(kernel: KernelRef<'_>, stats: &CompressedTraining) -> Result<()> {
+    if kernel.shape() != stats.shape() {
+        return Err(Error::Shape(format!(
+            "compressed stats built for {:?}, kernel is {:?}",
+            stats.shape(),
+            kernel.shape()
+        )));
+    }
+    Ok(())
+}
+
+/// Sweep one stripe: unique subsets `u ≡ stripe (mod STRIPES)` in
+/// ascending `u`, accumulating into this stripe's own partial — the unit
+/// of the thread-count-invariance guarantee.
+#[allow(clippy::too_many_arguments)]
+fn stripe_sweep(
+    kernel: KernelRef<'_>,
+    stats: &CompressedTraining,
+    op: Option<Contraction>,
+    stripe: usize,
+    partial: &mut Matrix,
+    sub: &mut Matrix,
+    chol: &mut Matrix,
+    tri: &mut Matrix,
+    inv: &mut Matrix,
+    logdet: &mut f64,
+) -> Result<()> {
+    let mut u = stripe;
+    while u < stats.unique() {
+        let (lo, hi) = stats.range(u);
+        let w = stats.weight(u);
+        let (s1, s2, s3) = stats.splits(lo, hi);
+        let items = &stats.items[lo..hi];
+        gather_subset(kernel, items, s1, s2, s3, sub);
+        cholesky::Cholesky::factor_into(sub, chol)?;
+        let mut ld = 0.0;
+        for i in 0..items.len() {
+            ld += chol.get(i, i).ln();
+        }
+        *logdet += w * 2.0 * ld;
+        if let Some(op) = op {
+            cholesky::inverse_from_factor_into(chol, tri, inv);
+            accumulate(kernel, op, w, inv, s1, s2, s3, partial);
+        }
+        u += STRIPES;
+    }
+    Ok(())
+}
+
+/// Gather `L_Y` into `sub` from kernel factors and precomputed splits —
+/// `O(κ²)` with no divisions.
+fn gather_subset(
+    kernel: KernelRef<'_>,
+    items: &[usize],
+    s1: &[u32],
+    s2: &[u32],
+    s3: &[u32],
+    sub: &mut Matrix,
+) {
+    let k = items.len();
+    sub.resize_zeroed(k, k);
+    match kernel {
+        KernelRef::Full(l) => {
+            for a in 0..k {
+                let src = l.row(items[a]);
+                let dst = sub.row_mut(a);
+                for (d, &j) in dst.iter_mut().zip(items) {
+                    *d = src[j];
+                }
+            }
+        }
+        KernelRef::Kron2(l1, l2) => {
+            for a in 0..k {
+                let r1 = l1.row(s1[a] as usize);
+                let r2 = l2.row(s2[a] as usize);
+                let dst = sub.row_mut(a);
+                for b in 0..k {
+                    dst[b] = r1[s1[b] as usize] * r2[s2[b] as usize];
+                }
+            }
+        }
+        KernelRef::Kron3(l1, l2, l3) => {
+            for a in 0..k {
+                let r1 = l1.row(s1[a] as usize);
+                let r2 = l2.row(s2[a] as usize);
+                let r3 = l3.row(s3[a] as usize);
+                let dst = sub.row_mut(a);
+                for b in 0..k {
+                    dst[b] = r1[s1[b] as usize] * r2[s2[b] as usize] * r3[s3[b] as usize];
+                }
+            }
+        }
+    }
+}
+
+/// Accumulate one subset's `w·inv` into the requested contraction — the
+/// O(κ²) core replacing the O(N²) dense scatter-then-contract. Derivation
+/// (App. B): Θ[t_a, t_b] += w·inv[a,b] with `t = (k, p(, q))`, and each
+/// contraction is linear in Θ, so the Θ entry's coefficient lands directly:
+///
+/// - `A₁[k_a, k_b] += w·inv[a,b]·L₂[p_b, p_a]` (× `L₃[q_b, q_a]` grouped),
+/// - `H [p_a, p_b] += w·inv[a,b]·L₁[k_b, k_a]·L₃[q_b, q_a]`,
+/// - `A₂[p_a, p_b] += w·inv[a,b]·L₁[k_a, k_b]`
+///   (m = 3: `A₂[q_a, q_b] += w·inv[a,b]·L₁[k_a, k_b]·L₂[p_a, p_b]`).
+#[allow(clippy::too_many_arguments)]
+fn accumulate(
+    kernel: KernelRef<'_>,
+    op: Contraction,
+    w: f64,
+    inv: &Matrix,
+    s1: &[u32],
+    s2: &[u32],
+    s3: &[u32],
+    out: &mut Matrix,
+) {
+    let k = inv.rows();
+    match (kernel, op) {
+        (KernelRef::Kron2(_, l2), Contraction::A1) => {
+            for a in 0..k {
+                let iv = inv.row(a);
+                let pa = s2[a] as usize;
+                let orow = out.row_mut(s1[a] as usize);
+                for b in 0..k {
+                    orow[s1[b] as usize] += w * iv[b] * l2.get(s2[b] as usize, pa);
+                }
+            }
+        }
+        (KernelRef::Kron2(l1, _), Contraction::A2) => {
+            for a in 0..k {
+                let iv = inv.row(a);
+                let ka = s1[a] as usize;
+                let orow = out.row_mut(s2[a] as usize);
+                for b in 0..k {
+                    orow[s2[b] as usize] += w * iv[b] * l1.get(ka, s1[b] as usize);
+                }
+            }
+        }
+        (KernelRef::Kron3(_, l2, l3), Contraction::A1) => {
+            for a in 0..k {
+                let iv = inv.row(a);
+                let (pa, qa) = (s2[a] as usize, s3[a] as usize);
+                let orow = out.row_mut(s1[a] as usize);
+                for b in 0..k {
+                    orow[s1[b] as usize] += w
+                        * iv[b]
+                        * l2.get(s2[b] as usize, pa)
+                        * l3.get(s3[b] as usize, qa);
+                }
+            }
+        }
+        (KernelRef::Kron3(l1, _, l3), Contraction::Mid) => {
+            for a in 0..k {
+                let iv = inv.row(a);
+                let (ka, qa) = (s1[a] as usize, s3[a] as usize);
+                let orow = out.row_mut(s2[a] as usize);
+                for b in 0..k {
+                    orow[s2[b] as usize] += w
+                        * iv[b]
+                        * l1.get(s1[b] as usize, ka)
+                        * l3.get(s3[b] as usize, qa);
+                }
+            }
+        }
+        (KernelRef::Kron3(l1, l2, _), Contraction::A2) => {
+            for a in 0..k {
+                let iv = inv.row(a);
+                let (ka, pa) = (s1[a] as usize, s2[a] as usize);
+                let orow = out.row_mut(s3[a] as usize);
+                for b in 0..k {
+                    orow[s3[b] as usize] += w
+                        * iv[b]
+                        * l1.get(ka, s1[b] as usize)
+                        * l2.get(pa, s2[b] as usize);
+                }
+            }
+        }
+        // Validated away in `contraction_dim`.
+        (KernelRef::Kron2(..), Contraction::Mid) | (KernelRef::Full(_), _) => {
+            unreachable!("contraction_dim rejects this combination")
+        }
+    }
+}
+
+/// Phase 1 of the dense-Θ path: inverses (and weighted logdets) for unique
+/// subsets `[lo, lo + invs.len())` into the pool chunk.
+#[allow(clippy::too_many_arguments)]
+fn pool_range(
+    kernel: KernelRef<'_>,
+    stats: &CompressedTraining,
+    lo: usize,
+    sub: &mut Matrix,
+    chol: &mut Matrix,
+    tri: &mut Matrix,
+    invs: &mut [Matrix],
+    lds: &mut [f64],
+) -> Result<()> {
+    for (off, (inv, ld)) in invs.iter_mut().zip(lds.iter_mut()).enumerate() {
+        let u = lo + off;
+        let (s, e) = stats.range(u);
+        let (s1, s2, s3) = stats.splits(s, e);
+        gather_subset(kernel, &stats.items[s..e], s1, s2, s3, sub);
+        cholesky::Cholesky::factor_into(sub, chol)?;
+        let mut d = 0.0;
+        for i in 0..(e - s) {
+            d += chol.get(i, i).ln();
+        }
+        *ld = stats.weight(u) * 2.0 * d;
+        cholesky::inverse_from_factor_into(chol, tri, inv);
+    }
+    Ok(())
+}
+
+/// Phase 2 of the dense-Θ path: scatter all pooled inverses into the Θ
+/// rows `[lo, hi)` — each row receives its contributions in unique-subset
+/// order, so the result is independent of how rows are banded.
+fn scatter_rows(
+    stats: &CompressedTraining,
+    inv_pool: &[Matrix],
+    lo: usize,
+    hi: usize,
+    band: &mut [f64],
+    n: usize,
+) {
+    for u in 0..stats.unique() {
+        let (s, e) = stats.range(u);
+        let w = stats.weight(u);
+        let items = &stats.items[s..e];
+        for (a, &ta) in items.iter().enumerate() {
+            if ta < lo || ta >= hi {
+                continue;
+            }
+            let iv = inv_pool[u].row(a);
+            let row = &mut band[(ta - lo) * n..(ta - lo + 1) * n];
+            for (b, &tb) in items.iter().enumerate() {
+                row[tb] += w * iv[b];
+            }
+        }
+    }
+}
+
+/// Item index split for `L₁ ⊗ L₂`: `t = k·n2 + p ↦ (k, p)` (§2) — the one
+/// shared definition behind the precomputed arena splits and the ad-hoc
+/// minibatch splits.
+#[inline]
+fn split_item2(t: usize, n2: usize) -> (u32, u32) {
+    ((t / n2) as u32, (t % n2) as u32)
+}
+
+/// Item index split for `L₁ ⊗ L₂ ⊗ L₃`: `t = (k·n2 + p)·n3 + q ↦ (k, p, q)`.
+#[inline]
+fn split_item3(t: usize, n2: usize, n3: usize) -> (u32, u32, u32) {
+    let rest = t / n3;
+    ((rest / n2) as u32, ((rest % n2) as u32), (t % n3) as u32)
+}
+
+/// Per-item index splits for an ad-hoc subset (the minibatch path).
+fn split_indices(
+    kernel: KernelRef<'_>,
+    y: &[usize],
+    b1: &mut Vec<u32>,
+    b2: &mut Vec<u32>,
+    b3: &mut Vec<u32>,
+) {
+    b1.clear();
+    b2.clear();
+    b3.clear();
+    match kernel {
+        KernelRef::Full(_) => {}
+        KernelRef::Kron2(_, l2) => {
+            let n2 = l2.rows();
+            for &t in y {
+                let (k, p) = split_item2(t, n2);
+                b1.push(k);
+                b2.push(p);
+            }
+        }
+        KernelRef::Kron3(_, l2, l3) => {
+            let (n2, n3) = (l2.rows(), l3.rows());
+            for &t in y {
+                let (k, p, q) = split_item3(t, n2, n3);
+                b1.push(k);
+                b2.push(p);
+                b3.push(q);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = rng.paper_init_kernel(n);
+        m.scale_mut(1.0 / n as f64);
+        m.add_diag_mut(0.3);
+        m
+    }
+
+    #[test]
+    fn dedup_collapses_duplicates_and_weights_sum() {
+        let subsets = vec![
+            vec![0, 3],
+            vec![1],
+            vec![0, 3],
+            vec![],
+            vec![0, 3],
+            vec![2, 4, 5],
+        ];
+        let c =
+            CompressedTraining::new(&subsets, KernelShape::Kron2 { n1: 2, n2: 3 }).unwrap();
+        assert_eq!(c.unique(), 3);
+        assert_eq!(c.n_total(), 6);
+        assert_eq!(c.kappa(), 3);
+        // Weights sum to (non-empty)/n.
+        let total: f64 = (0..c.unique()).map(|u| c.weight(u)).sum();
+        assert!((total - 5.0 / 6.0).abs() < 1e-15);
+        // Dedup ratio counts multiplicity.
+        assert!((c.dedup_ratio() - 5.0 / 3.0).abs() < 1e-15);
+        // Sorted order: [0,3] (count 3), [1], [2,4,5].
+        assert_eq!(c.subset(0), &[0, 3]);
+        assert_eq!(c.subset(1), &[1]);
+        assert_eq!(c.subset(2), &[2, 4, 5]);
+        assert!((c.weight(0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn precomputed_splits_match_division() {
+        let subsets = vec![vec![0, 5, 11], vec![7]];
+        let c =
+            CompressedTraining::new(&subsets, KernelShape::Kron3 { n1: 2, n2: 3, n3: 2 })
+                .unwrap();
+        for u in 0..c.unique() {
+            let (lo, hi) = c.range(u);
+            let (s1, s2, s3) = c.splits(lo, hi);
+            for (i, &t) in c.subset(u).iter().enumerate() {
+                assert_eq!(s3[i] as usize, t % 2);
+                assert_eq!(s2[i] as usize, (t / 2) % 3);
+                assert_eq!(s1[i] as usize, t / 6);
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprint_detects_changes() {
+        let a = vec![vec![0, 1], vec![2]];
+        let shape = KernelShape::Full { n: 4 };
+        let c = CompressedTraining::new(&a, shape).unwrap();
+        assert!(c.matches(&a));
+        assert!(!c.matches(&[vec![0, 1], vec![3]]));
+        assert!(!c.matches(&[vec![0, 1]]));
+        // Order-sensitive (the fingerprint is a cheap identity check, not
+        // a multiset hash — reordered data triggers a rebuild, which is
+        // safe).
+        assert!(!c.matches(&[vec![2], vec![0, 1]]));
+    }
+
+    #[test]
+    fn rejects_bad_subsets_and_shape_mismatch() {
+        let shape = KernelShape::Kron2 { n1: 2, n2: 2 };
+        assert!(CompressedTraining::new(&[vec![1, 0]], shape).is_err());
+        assert!(CompressedTraining::new(&[vec![0, 0]], shape).is_err());
+        assert!(CompressedTraining::new(&[vec![4]], shape).is_err());
+        let stats = CompressedTraining::new(&[vec![0, 1]], shape).unwrap();
+        let l1 = spd(2, 1);
+        let l2 = spd(3, 2);
+        let mut eng = ThetaEngine::new();
+        let mut out = Matrix::zeros(0, 0);
+        // Kernel 2×3 vs stats built for 2×2.
+        assert!(eng
+            .contract(KernelRef::Kron2(&l1, &l2), &stats, Contraction::A1, &mut out)
+            .is_err());
+        // Mid needs three factors; Full has no block contraction.
+        let l22 = spd(2, 3);
+        assert!(eng
+            .contract(KernelRef::Kron2(&l1, &l22), &stats, Contraction::Mid, &mut out)
+            .is_err());
+        let lf = spd(4, 4);
+        let fstats =
+            CompressedTraining::new(&[vec![0, 1]], KernelShape::Full { n: 4 }).unwrap();
+        assert!(eng
+            .contract(KernelRef::Full(&lf), &fstats, Contraction::A1, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn stats_cache_rebuilds_only_on_change() {
+        let shape = KernelShape::Full { n: 6 };
+        let mut cache = StatsCache::default();
+        let a = vec![vec![0, 2], vec![1]];
+        let p1 = {
+            let s = cache.get(&a, shape).unwrap();
+            s as *const CompressedTraining
+        };
+        let p2 = {
+            let s = cache.get(&a, shape).unwrap();
+            s as *const CompressedTraining
+        };
+        assert_eq!(p1, p2, "unchanged data must not rebuild");
+        let b = vec![vec![0, 2], vec![3]];
+        let s = cache.get(&b, shape).unwrap();
+        assert!(s.matches(&b));
+        // Shape change also rebuilds.
+        let s = cache.get(&b, KernelShape::Kron2 { n1: 2, n2: 3 }).unwrap();
+        assert_eq!(s.shape(), KernelShape::Kron2 { n1: 2, n2: 3 });
+    }
+
+    #[test]
+    fn logdet_lpi_matches_kernel_normalizer() {
+        use crate::dpp::Kernel;
+        use crate::linalg::eigen;
+        let (l1, l2) = (spd(3, 11), spd(4, 12));
+        let k = Kernel::Kron2(l1.clone(), l2.clone());
+        let d1 = eigen::eigvals(&l1).unwrap();
+        let d2 = eigen::eigvals(&l2).unwrap();
+        let fast = logdet_lpi_kron2(&d1, &d2).unwrap();
+        assert!((fast - k.logdet_l_plus_i().unwrap()).abs() < 1e-10);
+        let l3 = spd(2, 13);
+        let k3 = Kernel::Kron3(l1.clone(), l2.clone(), l3.clone());
+        let d3 = eigen::eigvals(&l3).unwrap();
+        let fast3 = logdet_lpi_kron3(&d1, &d2, &d3).unwrap();
+        assert!((fast3 - k3.logdet_l_plus_i().unwrap()).abs() < 1e-10);
+    }
+}

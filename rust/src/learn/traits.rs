@@ -118,13 +118,22 @@ pub trait Learner {
     /// Current kernel estimate (cloned).
     fn kernel(&self) -> Kernel;
 
+    /// Mean log-likelihood φ (Eq. 3) of the current iterate — what
+    /// [`Learner::run`] records per iteration. The default evaluates the
+    /// dense path; learners holding compressed statistics override it with
+    /// the fused engine sweep (deduplicated, parallel, allocation-free —
+    /// same value up to floating-point association).
+    fn objective(&mut self, data: &TrainingSet) -> Result<f64> {
+        likelihood::log_likelihood(&self.kernel(), &data.subsets)
+    }
+
     /// Run `max_iters` steps with likelihood tracking; stops early when
     /// `|φ_{k+1} − φ_k| < tol` (if `tol > 0`). The likelihood evaluation
     /// is *not* counted in `elapsed` (matching how the paper reports
     /// per-iteration runtimes).
     fn run(&mut self, data: &TrainingSet, max_iters: usize, tol: f64) -> Result<LearnResult> {
         let mut history = Vec::with_capacity(max_iters + 1);
-        let ll0 = likelihood::log_likelihood(&self.kernel(), &data.subsets)?;
+        let ll0 = self.objective(data)?;
         history.push(IterRecord { iter: 0, elapsed: Duration::ZERO, log_likelihood: ll0 });
         let mut elapsed = Duration::ZERO;
         let mut converged = false;
@@ -132,7 +141,7 @@ pub trait Learner {
             let t = Instant::now();
             self.step(data)?;
             elapsed += t.elapsed();
-            let ll = likelihood::log_likelihood(&self.kernel(), &data.subsets)?;
+            let ll = self.objective(data)?;
             history.push(IterRecord { iter: it, elapsed, log_likelihood: ll });
             let prev = history[history.len() - 2].log_likelihood;
             if tol > 0.0 && (ll - prev).abs() < tol {

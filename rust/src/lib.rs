@@ -6,8 +6,10 @@
 //!
 //! - exact sampling in `O(N^{3/2} + Nk³)` (m=2) / `O(Nk³)` (m=3),
 //!   served by an incremental, batched, multi-threaded engine,
-//! - KRK-Picard kernel learning in `O(nκ³ + N²)` batch /
-//!   `O(Nκ² + N^{3/2})` stochastic time (Thm. 3.3),
+//! - KRK-Picard kernel learning with Θ-free compressed statistics:
+//!   `O(nκ³ + nκ² + N₁³+N₂³)` batch (below the paper's `O(nκ³ + N²)`,
+//!   Thm. 3.3 — the `N×N` Θ is never materialized) /
+//!   `O(Nκ² + N^{3/2})` stochastic time,
 //! - the Picard, Joint-Picard and EM baselines the paper compares against,
 //! - a serving coordinator (diverse-recommendation service) and learning
 //!   orchestrator on top,
@@ -21,6 +23,7 @@
 //! | §2, Prop. 2.1–2.4: Kronecker algebra, `Tr₁`/`Tr₂` (Def. 2.3) | [`linalg::kron`] |
 //! | Cor. 2.2: factored eigendecomposition of `L₁ ⊗ L₂ (⊗ L₃)` | [`dpp::kernel`] |
 //! | Eq. 3 (objective `φ`), Eq. 4 (gradient `Θ − (L+I)⁻¹`) | [`dpp::likelihood`] |
+//! | App. B contractions, Θ-free compressed statistics | [`learn::stats`] |
 //! | Alg. 1 / Prop. 3.1 / Thm. 3.2: KRK-Picard block ascent | [`learn::krk`] |
 //! | §3.1.1: step-size-`a` generalization, m = 3 multiblock | [`learn::krk3`] |
 //! | Thm. 3.3 (2nd half): stochastic/minibatch KRK updates | [`learn::krk_stochastic`] |

@@ -198,23 +198,78 @@ impl Cholesky {
 
     /// Triangular inverse `T = L⁻¹` (lower triangular), column-oriented.
     fn tri_inverse(&self) -> Matrix {
-        let n = self.n();
-        let l = self.l.as_slice();
-        let mut t = Matrix::zeros(n, n);
-        for j in 0..n {
-            // Solve L·t_j = e_j for the lower part (rows j..n).
-            t.set(j, j, 1.0 / l[j * n + j]);
-            for i in (j + 1)..n {
-                let row = &l[i * n + j..i * n + i];
-                let mut acc = 0.0;
-                for (k, lik) in row.iter().enumerate() {
-                    acc += lik * t.get(j + k, j);
-                }
-                t.set(i, j, -acc / l[i * n + i]);
-            }
-        }
+        let mut t = Matrix::zeros(0, 0);
+        tri_inverse_into(&self.l, &mut t);
         t
     }
+}
+
+/// `t = L⁻¹` for a lower-triangular `L` (resized in place, upper part
+/// zeroed), column-oriented. Shared by [`Cholesky::inverse`] and the
+/// buffer-reusing [`inverse_from_factor_into`].
+fn tri_inverse_into(lmat: &Matrix, t: &mut Matrix) {
+    let n = lmat.rows();
+    let l = lmat.as_slice();
+    t.resize_zeroed(n, n);
+    for j in 0..n {
+        // Solve L·t_j = e_j for the lower part (rows j..n).
+        t.set(j, j, 1.0 / l[j * n + j]);
+        for i in (j + 1)..n {
+            let row = &l[i * n + j..i * n + i];
+            let mut acc = 0.0;
+            for (k, lik) in row.iter().enumerate() {
+                acc += lik * t.get(j + k, j);
+            }
+            t.set(i, j, -acc / l[i * n + i]);
+        }
+    }
+}
+
+/// `out = A⁻¹` from a precomputed Cholesky factor `l`, entirely in
+/// caller-held buffers (`tri` receives `L⁻¹`). This is the serial
+/// small-matrix path behind the compressed-statistics engine's per-subset
+/// `L_Y⁻¹` sweep (`κ×κ` operands, allocation-free once the buffers have
+/// capacity); the row-band-parallel large-`N` inverse stays in
+/// [`Cholesky::inverse`].
+pub fn inverse_from_factor_into(l: &Matrix, tri: &mut Matrix, out: &mut Matrix) {
+    let n = l.rows();
+    tri_inverse_into(l, tri);
+    // A⁻¹[i,j] = Σ_{k ≥ max(i,j)} T[k,i]·T[k,j]: iterate rows of T
+    // (contiguous) accumulating into the upper triangle, then mirror.
+    let tdata = tri.as_slice();
+    out.resize_zeroed(n, n);
+    for i in 0..n {
+        let orow = out.row_mut(i);
+        for k in i..n {
+            let trow = &tdata[k * n..k * n + k + 1];
+            let tki = trow[i];
+            if tki == 0.0 {
+                continue;
+            }
+            crate::linalg::matmul::axpy_slice(&mut orow[i..k + 1], tki, &trow[i..k + 1]);
+        }
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = out.get(i, j);
+            out.set(j, i, v);
+        }
+    }
+}
+
+/// `out = A⁻¹` for symmetric PD `A` in caller-held buffers (`chol` holds
+/// the factor, `tri` the triangular inverse) — the fully allocation-free
+/// composition of [`Cholesky::factor_into`] and
+/// [`inverse_from_factor_into`].
+pub fn inverse_pd_with(
+    a: &Matrix,
+    chol: &mut Matrix,
+    tri: &mut Matrix,
+    out: &mut Matrix,
+) -> Result<()> {
+    Cholesky::factor_into(a, chol)?;
+    inverse_from_factor_into(chol, tri, out);
+    Ok(())
 }
 
 /// Convenience: `log det(A)` of a symmetric PD matrix.
@@ -330,6 +385,25 @@ mod tests {
                 assert!((x[(i, j)] - col[i]).abs() < 1e-10);
             }
         }
+    }
+
+    #[test]
+    fn inverse_pd_with_matches_inverse_across_sizes() {
+        let (mut chol, mut tri, mut out) =
+            (Matrix::zeros(0, 0), Matrix::zeros(0, 0), Matrix::zeros(0, 0));
+        for (n, seed) in [(1usize, 21), (7, 22), (20, 23), (5, 24)] {
+            let a = spd(n, seed);
+            inverse_pd_with(&a, &mut chol, &mut tri, &mut out).unwrap();
+            let want = inverse_pd(&a).unwrap();
+            assert!(out.rel_diff(&want) < 1e-12, "n={n}: {}", out.rel_diff(&want));
+        }
+        // Fails cleanly on non-PD input, buffers stay reusable.
+        let mut bad = Matrix::identity(3);
+        bad.set(2, 2, -1.0);
+        assert!(inverse_pd_with(&bad, &mut chol, &mut tri, &mut out).is_err());
+        let a = spd(9, 25);
+        inverse_pd_with(&a, &mut chol, &mut tri, &mut out).unwrap();
+        assert!(out.rel_diff(&inverse_pd(&a).unwrap()) < 1e-12);
     }
 
     #[test]

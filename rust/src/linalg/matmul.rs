@@ -655,6 +655,23 @@ fn legacy_block_kernel(a: &Matrix, b: &Matrix, rows: std::ops::Range<usize>, out
     }
 }
 
+/// Join a batch of scoped fallible workers, surfacing the first error in
+/// spawn order (a panicking worker propagates the panic). Shared by the
+/// deterministic fan-outs in `learn::stats` and `dpp::likelihood` so the
+/// join/error policy lives in one place.
+pub(crate) fn join_first_error<'scope>(
+    handles: Vec<std::thread::ScopedJoinHandle<'scope, crate::error::Result<()>>>,
+) -> crate::error::Result<()> {
+    let mut first = Ok(());
+    for h in handles {
+        let r = h.join().expect("worker thread panicked");
+        if first.is_ok() {
+            first = r;
+        }
+    }
+    first
+}
+
 /// Number of worker threads to use for parallel kernels.
 pub fn available_threads() -> usize {
     static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();

@@ -172,6 +172,14 @@ impl Engine {
 /// [`crate::learn::krk::Contractions`] backend that routes the two Θ
 /// contractions through AOT-compiled artifacts when a size variant
 /// exists, falling back to the CPU implementation otherwise.
+///
+/// This backend consumes a dense Θ (the HLO signature is
+/// `(Θ, L₁, L₂) → (A₁, A₂)`), so it relies on the trait's default
+/// `contract_compressed`, which synthesizes Θ from the compressed
+/// statistics before dispatching here — the learner stays correct at the
+/// backend's native `O(N²)` cost. Re-lowering the artifacts against the
+/// CSR arena (`O(nκ²)` on device) is the natural next step; see
+/// `crate::learn::stats` for the CPU reference semantics.
 pub struct HloContractions {
     engine: Engine,
 }

@@ -1,18 +1,28 @@
-//! Counting-allocator proof that steady-state KRK-Picard half-updates
-//! perform **zero heap allocations** in the update path.
+//! Counting-allocator proof that steady-state KRK-Picard updates perform
+//! **zero heap allocations**, on both the Θ-consuming half-update API and
+//! the full Θ-free compressed step.
 //!
-//! The measured region is the Prop. 3.1 update given a precomputed Θ:
-//! Θ-contraction (`A₁`/`A₂`), the `L·A·L` sandwich, the eigen-space
-//! `L·B·L` term (two sub-kernel eigendecompositions), and the
-//! PD-safeguarded step — everything `update_l1_from_theta` /
-//! `update_l2_from_theta` touch. Buffers are grown on the warm-up
-//! iterations; after that the loop must never hit the allocator.
+//! Region A — the Prop. 3.1 update given a precomputed Θ: Θ-contraction
+//! (`A₁`/`A₂`), the `L·A·L` sandwich, the eigen-space `L·B·L` term (two
+//! sub-kernel eigendecompositions), and the PD-safeguarded step —
+//! everything `update_l1_from_theta` / `update_l2_from_theta` touch.
 //!
-//! Scope note: the claim is asserted at sub-kernel sizes below the
-//! parallel-dispatch thresholds (the common KronDPP regime, N₁, N₂ ≲ 100),
-//! where no worker threads are spawned — thread spawns allocate by nature.
-//! This file holds exactly one test so no concurrent test can perturb the
-//! global counter.
+//! Region B — a full `Learner::step` on the Θ-free path: the compressed-
+//! statistics fingerprint check, two fused engine sweeps (gather each
+//! `L_Y`, Cholesky factor, in-place inverse, `O(κ²)` contraction
+//! accumulation into stripe partials, logdet fusion), the fused-objective
+//! bookkeeping, and both half-updates. No `N×N` Θ exists on this path at
+//! all.
+//!
+//! Buffers are grown on the warm-up iterations; after that neither region
+//! may hit the allocator.
+//!
+//! Scope note: the claim is asserted with `KRONDPP_THREADS=1` (set before
+//! any thread-count lookup) and at sub-kernel sizes below the
+//! parallel-dispatch thresholds (the common KronDPP regime,
+//! N₁, N₂ ≲ 100) — worker-thread spawns allocate by nature. This file
+//! holds exactly one test so no concurrent test can perturb the global
+//! counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -63,8 +73,21 @@ fn sub_kernel(n: usize, rng: &mut Rng) -> Matrix {
     l
 }
 
+fn measure(label: &str, mut f: impl FnMut()) {
+    ALLOCS.store(0, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+    f();
+    ENABLED.store(false, Ordering::SeqCst);
+    let count = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(count, 0, "steady-state {label} hit the allocator {count} times");
+}
+
 #[test]
-fn krk_update_path_is_allocation_free_in_steady_state() {
+fn krk_update_and_step_paths_are_allocation_free_in_steady_state() {
+    // Pin the thread count before anything caches it: single-worker mode
+    // makes every parallel dispatch take its inline path.
+    std::env::set_var("KRONDPP_THREADS", "1");
+
     let (n1, n2) = (8usize, 8usize);
     let mut rng = Rng::new(42);
     let truth = Kernel::Kron2(sub_kernel(n1, &mut rng), sub_kernel(n2, &mut rng));
@@ -73,35 +96,42 @@ fn krk_update_path_is_allocation_free_in_steady_state() {
     let data = TrainingSet::new(n1 * n2, subsets).unwrap();
 
     // step_size > 1 exercises the PD-safeguard (candidate build, Cholesky
-    // check, possible unit-step rebuild) inside the measured region.
+    // check, possible unit-step rebuild) inside the measured regions.
     let mut learner =
         KrkPicard::new(sub_kernel(n1, &mut rng), sub_kernel(n2, &mut rng), 1.3).unwrap();
     let theta = theta_dense(&learner.kernel(), &data.subsets).unwrap();
 
-    // Warm-up: grows every learner-held buffer (contractions, sandwich
-    // temps, eigen scratches, candidate/rollback, GEMM packs, the
+    // Region A warm-up: grows every learner-held buffer (contractions,
+    // sandwich temps, eigen scratches, candidate/rollback, GEMM packs, the
     // thread-local transpose staging) to its steady-state size.
     for _ in 0..3 {
         learner.update_l1_from_theta(&theta).unwrap();
         learner.update_l2_from_theta(&theta).unwrap();
     }
+    measure("Θ-based half-update path", || {
+        for _ in 0..5 {
+            learner.update_l1_from_theta(&theta).unwrap();
+            learner.update_l2_from_theta(&theta).unwrap();
+        }
+    });
 
-    ALLOCS.store(0, Ordering::SeqCst);
-    ENABLED.store(true, Ordering::SeqCst);
-    for _ in 0..5 {
-        learner.update_l1_from_theta(&theta).unwrap();
-        learner.update_l2_from_theta(&theta).unwrap();
+    // Region B warm-up: builds the compressed-statistics arena (sorted
+    // dedup + index splits) and grows the engine's stripe partials and
+    // gather/factor/inverse buffers.
+    for _ in 0..3 {
+        learner.step(&data).unwrap();
     }
-    ENABLED.store(false, Ordering::SeqCst);
-    let count = ALLOCS.load(Ordering::SeqCst);
-    assert_eq!(
-        count, 0,
-        "steady-state KRK-Picard update path hit the allocator {count} times"
-    );
+    measure("Θ-free compressed step path", || {
+        for _ in 0..5 {
+            learner.step(&data).unwrap();
+        }
+    });
 
     // The updates above must still be doing real work: the learner's
-    // kernel should have moved and stayed PD.
+    // kernel should have moved and stayed PD, and the fused objective
+    // must be populated.
     let (l1, l2) = learner.subkernels();
     assert!(krondpp::linalg::cholesky::is_pd(l1));
     assert!(krondpp::linalg::cholesky::is_pd(l2));
+    assert!(learner.pre_step_objective().unwrap().is_finite());
 }

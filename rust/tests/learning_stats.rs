@@ -1,0 +1,271 @@
+//! Engine-vs-oracle property suite for the Θ-free compressed training
+//! statistics (`learn::stats`): the engine's `O(nκ²)` accumulations must
+//! reproduce the dense scatter-then-contract oracle
+//! (`theta_dense` + `kron::{block_trace, weighted_block_sum,
+//! mixed_weighted_trace}`) to ≤ 1e-12 relative difference on random
+//! Kronecker kernels — including duplicate, singleton and empty subsets —
+//! and be bitwise invariant to the worker-thread count.
+
+use krondpp::dpp::likelihood::{log_likelihood, subset_logdet, theta_dense};
+use krondpp::dpp::Kernel;
+use krondpp::learn::krk::{Contractions, KrkPicard};
+use krondpp::learn::stats::{
+    CompressedTraining, Contraction, KernelRef, KernelShape, ThetaEngine,
+};
+use krondpp::learn::traits::{Learner, TrainingSet};
+use krondpp::linalg::{kron, Matrix};
+use krondpp::rng::Rng;
+
+fn spd(n: usize, rng: &mut Rng) -> Matrix {
+    let mut m = rng.paper_init_kernel(n);
+    m.scale_mut(1.5 / n as f64);
+    m.add_diag_mut(0.3);
+    m
+}
+
+/// Random subsets over `[0, n)` with duplicates, singletons and empties.
+fn messy_subsets(n: usize, count: usize, kmax: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for i in 0..count {
+        if i % 7 == 3 {
+            out.push(Vec::new()); // empty
+        } else if i % 5 == 2 && !out.is_empty() {
+            let prev = out[rng.int_range(0, out.len() - 1)].clone();
+            out.push(prev); // duplicate of an earlier subset
+        } else if i % 4 == 1 {
+            out.push(vec![rng.int_range(0, n - 1)]); // singleton
+        } else {
+            let k = rng.int_range(1, kmax);
+            out.push(rng.subset(n, k));
+        }
+    }
+    out
+}
+
+#[test]
+fn m2_contractions_match_dense_oracle() {
+    let mut rng = Rng::new(101);
+    let (n1, n2) = (3usize, 4usize);
+    let (l1, l2) = (spd(n1, &mut rng), spd(n2, &mut rng));
+    let kernel = Kernel::Kron2(l1.clone(), l2.clone());
+    let subsets = messy_subsets(n1 * n2, 30, 5, &mut rng);
+    let theta = theta_dense(&kernel, &subsets).unwrap();
+    let a1_oracle = kron::block_trace(&theta, &l2, n1, n2).unwrap();
+    let a2_oracle = kron::weighted_block_sum(&theta, &l1, n1, n2).unwrap();
+
+    let stats =
+        CompressedTraining::new(&subsets, KernelShape::Kron2 { n1, n2 }).unwrap();
+    assert!(stats.unique() < subsets.len(), "test data must contain duplicates");
+    let mut eng = ThetaEngine::new();
+    let mut a1 = Matrix::zeros(0, 0);
+    let ld1 = eng
+        .contract(KernelRef::Kron2(&l1, &l2), &stats, Contraction::A1, &mut a1)
+        .unwrap();
+    let mut a2 = Matrix::zeros(0, 0);
+    let ld2 = eng
+        .contract(KernelRef::Kron2(&l1, &l2), &stats, Contraction::A2, &mut a2)
+        .unwrap();
+    assert!(a1.rel_diff(&a1_oracle) <= 1e-12, "A1: {}", a1.rel_diff(&a1_oracle));
+    assert!(a2.rel_diff(&a2_oracle) <= 1e-12, "A2: {}", a2.rel_diff(&a2_oracle));
+
+    // Fused data term = (1/n)·Σᵢ log det L_{Yᵢ} (empties contribute 0).
+    let want: f64 = subsets
+        .iter()
+        .map(|y| subset_logdet(&kernel, y).unwrap())
+        .sum::<f64>()
+        / subsets.len() as f64;
+    assert!((ld1 - want).abs() < 1e-12, "{ld1} vs {want}");
+    assert!((ld2 - want).abs() < 1e-12);
+    let only_ld = eng.sum_logdet(KernelRef::Kron2(&l1, &l2), &stats).unwrap();
+    assert!((only_ld - want).abs() < 1e-12);
+}
+
+#[test]
+fn m3_contractions_match_dense_oracle() {
+    let mut rng = Rng::new(202);
+    let (n1, n2, n3) = (2usize, 3usize, 2usize);
+    let (l1, l2, l3) = (spd(n1, &mut rng), spd(n2, &mut rng), spd(n3, &mut rng));
+    let kernel = Kernel::Kron3(l1.clone(), l2.clone(), l3.clone());
+    let subsets = messy_subsets(n1 * n2 * n3, 24, 4, &mut rng);
+    let theta = theta_dense(&kernel, &subsets).unwrap();
+    // Oracles: grouped factors materialized only here, in the test.
+    let b = kron::kron(&l2, &l3);
+    let a = kron::kron(&l1, &l2);
+    let a1_oracle = kron::block_trace(&theta, &b, n1, n2 * n3).unwrap();
+    let h_oracle =
+        kron::mixed_weighted_trace(&theta, &l1, &l3, n1, n2, n3).unwrap();
+    let a2_oracle = kron::weighted_block_sum(&theta, &a, n1 * n2, n3).unwrap();
+
+    let stats =
+        CompressedTraining::new(&subsets, KernelShape::Kron3 { n1, n2, n3 }).unwrap();
+    let mut eng = ThetaEngine::new();
+    let kref = KernelRef::Kron3(&l1, &l2, &l3);
+    let mut out = Matrix::zeros(0, 0);
+    eng.contract(kref, &stats, Contraction::A1, &mut out).unwrap();
+    assert!(out.rel_diff(&a1_oracle) <= 1e-12, "A1g: {}", out.rel_diff(&a1_oracle));
+    eng.contract(kref, &stats, Contraction::Mid, &mut out).unwrap();
+    assert!(out.rel_diff(&h_oracle) <= 1e-12, "H: {}", out.rel_diff(&h_oracle));
+    eng.contract(kref, &stats, Contraction::A2, &mut out).unwrap();
+    assert!(out.rel_diff(&a2_oracle) <= 1e-12, "A2g: {}", out.rel_diff(&a2_oracle));
+}
+
+#[test]
+fn results_are_bitwise_invariant_across_thread_caps() {
+    let mut rng = Rng::new(303);
+    let (n1, n2) = (4usize, 5usize);
+    let (l1, l2) = (spd(n1, &mut rng), spd(n2, &mut rng));
+    // Enough unique subsets to cross the parallel-dispatch threshold.
+    let subsets = messy_subsets(n1 * n2, 160, 6, &mut rng);
+    let stats =
+        CompressedTraining::new(&subsets, KernelShape::Kron2 { n1, n2 }).unwrap();
+    assert!(stats.unique() >= 48, "need enough uniques to spawn workers");
+    let kref = KernelRef::Kron2(&l1, &l2);
+    let mut reference: Option<(Vec<f64>, Vec<f64>, f64)> = None;
+    for cap in [1usize, 2, 5, 16] {
+        let mut eng = ThetaEngine::new();
+        eng.set_thread_cap(cap);
+        let mut a1 = Matrix::zeros(0, 0);
+        let ld = eng.contract(kref, &stats, Contraction::A1, &mut a1).unwrap();
+        let mut a2 = Matrix::zeros(0, 0);
+        eng.contract(kref, &stats, Contraction::A2, &mut a2).unwrap();
+        match &reference {
+            None => reference = Some((a1.as_slice().to_vec(), a2.as_slice().to_vec(), ld)),
+            Some((r1, r2, rld)) => {
+                assert_eq!(a1.as_slice(), &r1[..], "A1 not bitwise equal at cap={cap}");
+                assert_eq!(a2.as_slice(), &r2[..], "A2 not bitwise equal at cap={cap}");
+                assert!(ld.to_bits() == rld.to_bits(), "logdet differs at cap={cap}");
+            }
+        }
+    }
+    // The dense-Θ path (phase-1 pool + row-panel scatter) too.
+    let mut reference: Option<(Vec<f64>, f64)> = None;
+    for cap in [1usize, 3, 16] {
+        let mut eng = ThetaEngine::new();
+        eng.set_thread_cap(cap);
+        let mut theta = Matrix::zeros(0, 0);
+        let ld = eng.theta_dense_into(kref, &stats, &mut theta).unwrap();
+        match &reference {
+            None => reference = Some((theta.as_slice().to_vec(), ld)),
+            Some((r, rld)) => {
+                assert_eq!(theta.as_slice(), &r[..], "Θ not bitwise equal at cap={cap}");
+                assert!(ld.to_bits() == rld.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn theta_dense_into_matches_oracle() {
+    let mut rng = Rng::new(404);
+    let (n1, n2) = (3usize, 4usize);
+    let (l1, l2) = (spd(n1, &mut rng), spd(n2, &mut rng));
+    let kernel = Kernel::Kron2(l1.clone(), l2.clone());
+    let subsets = messy_subsets(n1 * n2, 25, 5, &mut rng);
+    let oracle = theta_dense(&kernel, &subsets).unwrap();
+    let stats =
+        CompressedTraining::new(&subsets, KernelShape::Kron2 { n1, n2 }).unwrap();
+    let mut eng = ThetaEngine::new();
+    let mut theta = Matrix::zeros(0, 0);
+    eng.theta_dense_into(KernelRef::Kron2(&l1, &l2), &stats, &mut theta).unwrap();
+    assert!(theta.rel_diff(&oracle) <= 1e-12, "{}", theta.rel_diff(&oracle));
+    // Full (unstructured) gather path.
+    let lf = kernel.to_dense();
+    let fstats =
+        CompressedTraining::new(&subsets, KernelShape::Full { n: n1 * n2 }).unwrap();
+    eng.theta_dense_into(KernelRef::Full(&lf), &fstats, &mut theta).unwrap();
+    assert!(theta.rel_diff(&oracle) <= 1e-12);
+}
+
+#[test]
+fn krk_engine_step_matches_dense_backend_step() {
+    /// Θ-consuming backend exercising the trait's dense default for
+    /// `contract_compressed` — the pre-engine semantics.
+    struct DenseOracle;
+    impl Contractions for DenseOracle {
+        fn block_trace(
+            &self,
+            theta: &Matrix,
+            l2: &Matrix,
+            n1: usize,
+            n2: usize,
+        ) -> krondpp::error::Result<Matrix> {
+            kron::block_trace(theta, l2, n1, n2)
+        }
+        fn weighted_block_sum(
+            &self,
+            theta: &Matrix,
+            w: &Matrix,
+            n1: usize,
+            n2: usize,
+        ) -> krondpp::error::Result<Matrix> {
+            kron::weighted_block_sum(theta, w, n1, n2)
+        }
+    }
+
+    let mut rng = Rng::new(505);
+    let (n1, n2) = (3usize, 4usize);
+    let (l1, l2) = (spd(n1, &mut rng), spd(n2, &mut rng));
+    let subsets = messy_subsets(n1 * n2, 30, 5, &mut rng);
+    let data = TrainingSet::new(n1 * n2, subsets).unwrap();
+    let mut engine_learner = KrkPicard::new(l1.clone(), l2.clone(), 1.0).unwrap();
+    let mut dense_learner =
+        KrkPicard::with_backend(l1, l2, 1.0, Box::new(DenseOracle)).unwrap();
+    for it in 0..3 {
+        engine_learner.step(&data).unwrap();
+        dense_learner.step(&data).unwrap();
+        let (e1, e2) = engine_learner.subkernels();
+        let (d1, d2) = dense_learner.subkernels();
+        // Per-contraction agreement is ≤ 1e-12 (asserted above); across
+        // three full steps the tiny association differences compound
+        // through sandwiches and eigensolves, so the iterate tolerance is
+        // a notch looser.
+        assert!(e1.rel_diff(d1) <= 1e-10, "iter {it} L1: {}", e1.rel_diff(d1));
+        assert!(e2.rel_diff(d2) <= 1e-10, "iter {it} L2: {}", e2.rel_diff(d2));
+    }
+}
+
+#[test]
+fn fused_pre_step_objective_and_objective_match_dense_likelihood() {
+    let mut rng = Rng::new(606);
+    let (n1, n2) = (3usize, 3usize);
+    let (l1, l2) = (spd(n1, &mut rng), spd(n2, &mut rng));
+    let subsets = messy_subsets(n1 * n2, 26, 4, &mut rng);
+    let data = TrainingSet::new(n1 * n2, subsets).unwrap();
+    let mut learner = KrkPicard::new(l1, l2, 1.0).unwrap();
+    assert!(learner.pre_step_objective().is_none());
+    // objective() (engine path) vs the dense Eq.-3 evaluation.
+    let dense = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+    let fused = learner.objective(&data).unwrap();
+    assert!((fused - dense).abs() < 1e-9, "{fused} vs {dense}");
+    // pre_step_objective = φ at the iterate entering the step.
+    let before = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+    learner.step(&data).unwrap();
+    let fused_pre = learner.pre_step_objective().unwrap();
+    assert!((fused_pre - before).abs() < 1e-9, "{fused_pre} vs {before}");
+}
+
+#[test]
+fn contract_batch_over_everything_matches_compressed_sweep() {
+    let mut rng = Rng::new(707);
+    let (n1, n2) = (3usize, 4usize);
+    let (l1, l2) = (spd(n1, &mut rng), spd(n2, &mut rng));
+    let subsets = messy_subsets(n1 * n2, 20, 5, &mut rng);
+    let stats =
+        CompressedTraining::new(&subsets, KernelShape::Kron2 { n1, n2 }).unwrap();
+    let kref = KernelRef::Kron2(&l1, &l2);
+    let mut eng = ThetaEngine::new();
+    let mut full = Matrix::zeros(0, 0);
+    eng.contract(kref, &stats, Contraction::A1, &mut full).unwrap();
+    let batch: Vec<usize> = (0..subsets.len()).collect();
+    let mut batched = Matrix::zeros(0, 0);
+    eng.contract_batch(
+        kref,
+        &subsets,
+        &batch,
+        1.0 / subsets.len() as f64,
+        Contraction::A1,
+        &mut batched,
+    )
+    .unwrap();
+    assert!(batched.rel_diff(&full) <= 1e-12, "{}", batched.rel_diff(&full));
+}
