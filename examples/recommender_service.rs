@@ -52,7 +52,7 @@ fn main() -> krondpp::Result<()> {
         while t0.elapsed() < req.at {
             std::hint::spin_loop();
         }
-        match svc.submit(SampleRequest { k: req.k }) {
+        match svc.submit(SampleRequest::new(req.k)) {
             Ok(t) => tickets.push((req.k, t)),
             Err(_) => rejected += 1,
         }
@@ -74,7 +74,7 @@ fn main() -> krondpp::Result<()> {
         done as f64 / wall
     );
     assert!(sizes_ok, "some responses had the wrong cardinality");
-    println!("{}", svc.metrics().report());
+    println!("{}", svc.report());
 
     // Learning-job outcome.
     let history = job.join()?;

@@ -24,10 +24,7 @@ use krondpp::learn::{init, KrkPicard, KrkStochastic, Learner, Picard, TrainingSe
 use krondpp::rng::Rng;
 
 fn max_n() -> usize {
-    std::env::var("KRONDPP_BENCH_MAX_N")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(usize::MAX)
+    krondpp::bench_util::bench_max_n()
 }
 
 fn main() {

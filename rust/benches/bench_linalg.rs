@@ -28,10 +28,7 @@ fn spd(n: usize, rng: &mut Rng) -> Matrix {
 }
 
 fn max_n() -> usize {
-    std::env::var("KRONDPP_BENCH_MAX_N")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(usize::MAX)
+    krondpp::bench_util::bench_max_n()
 }
 
 fn main() {

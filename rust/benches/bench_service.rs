@@ -1,36 +1,53 @@
-//! Coordinator throughput/latency: requests/s across worker counts and
-//! batch policies on a fixed synthetic workload (offered-load sweep).
+//! Coordinator throughput/latency: requests/s across worker counts, batch
+//! policies, and tenant counts on fixed synthetic workloads.
+//!
+//! Writes `BENCH_service.json` (see `bench_util::Report`) so CI can track
+//! the serving-path trajectory per commit. Honors the smoke-mode env vars:
+//! `KRONDPP_BENCH_BUDGET_MS` scales the request counts down and
+//! `KRONDPP_BENCH_MAX_N` caps the catalog size (the EXPERIMENTS.md
+//! §Service tables are produced at full budget).
 
-use krondpp::bench_util::section;
+use krondpp::bench_util::{bench_budget_ms, bench_max_n, section, Report};
 use krondpp::config::ServiceConfig;
-use krondpp::coordinator::{DppService, SampleRequest};
+use krondpp::coordinator::{DppService, SampleRequest, TenantId};
 use krondpp::data;
 use krondpp::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
 
 fn drive(svc: &Arc<DppService>, requests: usize, k: usize) -> (f64, f64, f64) {
-    drive_ks(svc, &vec![k; requests])
+    let reqs: Vec<SampleRequest> = (0..requests).map(|_| SampleRequest::new(k)).collect();
+    drive_reqs(svc, &reqs)
 }
 
-/// Drive one request per entry of `ks` (request i asks for k = ks[i]).
-fn drive_ks(svc: &Arc<DppService>, ks: &[usize]) -> (f64, f64, f64) {
+/// Drive one request per entry of `reqs`, wait for all, and report
+/// (req/s, p50 ms, p95 ms) from the service's latency histogram.
+fn drive_reqs(svc: &Arc<DppService>, reqs: &[SampleRequest]) -> (f64, f64, f64) {
     let t0 = Instant::now();
-    let tickets: Vec<_> =
-        ks.iter().map(|&k| svc.submit(SampleRequest { k }).unwrap()).collect();
+    let tickets: Vec<_> = reqs.iter().map(|&r| svc.submit(r).unwrap()).collect();
     for t in tickets {
         t.wait().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
     let p95 = svc.metrics().latency.quantile(0.95).as_secs_f64() * 1e3;
     let p50 = svc.metrics().latency.quantile(0.50).as_secs_f64() * 1e3;
-    (ks.len() as f64 / wall, p50, p95)
+    (reqs.len() as f64 / wall, p50, p95)
 }
 
 fn main() {
+    // Smoke gating: CI runs with a small budget and capped N; full runs
+    // reproduce the EXPERIMENTS.md tables.
+    let budget_ms = bench_budget_ms();
+    let max_n = bench_max_n();
+    // Largest square catalog within the cap (the sweeps can't skip the
+    // kernel the way bench_linalg skips cases, so shrink it instead).
+    let side = [32usize, 16, 8, 4].into_iter().find(|s| s * s <= max_n).unwrap_or(4);
+    let (n1, n2) = (side, side);
+    let requests = (budget_ms * 2).clamp(200, 3000);
     let mut rng = Rng::new(1);
-    let kernel = data::paper_truth_kernel(32, 32, &mut rng); // N = 1024
-    let requests = 3000;
+    let kernel = data::paper_truth_kernel(n1, n2, &mut rng);
+    println!("catalog N = {} ({} requests per case)", n1 * n2, requests);
+    let mut report = Report::new();
 
     section("throughput vs workers (k=10, max_batch=32)");
     println!("{:<10} {:>12} {:>10} {:>10}", "workers", "req/s", "p50 ms", "p95 ms");
@@ -40,10 +57,15 @@ fn main() {
             max_batch: 32,
             batch_window_us: 200,
             queue_capacity: 100_000,
+            ..ServiceConfig::default()
         };
         let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
         let (rps, p50, p95) = drive(&svc, requests, 10);
         println!("{workers:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        report.case_raw(
+            &format!("workers_{workers}"),
+            &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
+        );
         drop(svc); // Drop drains + joins
     }
 
@@ -55,10 +77,15 @@ fn main() {
             max_batch,
             batch_window_us: 200,
             queue_capacity: 100_000,
+            ..ServiceConfig::default()
         };
         let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
         let (rps, p50, p95) = drive(&svc, requests, 10);
         println!("{max_batch:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        report.case_raw(
+            &format!("max_batch_{max_batch}"),
+            &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
+        );
         drop(svc); // Drop drains + joins
     }
 
@@ -70,17 +97,117 @@ fn main() {
             max_batch: 32,
             batch_window_us: 200,
             queue_capacity: 100_000,
+            ..ServiceConfig::default()
         };
         // Uniform k: every batch coalesces into one sample_k_many group.
         let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
         let (rps, p50, p95) = drive(&svc, requests, 10);
         println!("{:<14} {rps:>12.0} {p50:>10.3} {p95:>10.3}", "uniform k=10");
+        report.case_raw(
+            "coalescing_uniform_k10",
+            &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
+        );
         drop(svc);
         // Mixed k: groups shrink, each batch pays several phase-1 setups.
-        let ks: Vec<usize> = (0..requests).map(|i| 5 + (i % 4) * 5).collect();
+        let reqs: Vec<SampleRequest> =
+            (0..requests).map(|i| SampleRequest::new(5 + (i % 4) * 5)).collect();
         let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
-        let (rps, p50, p95) = drive_ks(&svc, &ks);
+        let (rps, p50, p95) = drive_reqs(&svc, &reqs);
         println!("{:<14} {rps:>12.0} {p50:>10.3} {p95:>10.3}", "mixed k 5-20");
+        report.case_raw(
+            "coalescing_mixed_k",
+            &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
+        );
+        drop(svc);
+    }
+
+    section("multi-tenant: coalescing vs tenant count (4 workers, k=10, fixed total load)");
+    println!("{:<10} {:>12} {:>10} {:>10}", "tenants", "req/s", "p50 ms", "p95 ms");
+    let mut tenant_rps = Vec::new();
+    for tenants in [1usize, 2, 4, 8] {
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+            ..ServiceConfig::default()
+        };
+        // Same-size catalogs; traffic round-robins across tenants, so
+        // per-(tenant, k) coalesced groups shrink as tenant count grows.
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let mut ids: Vec<TenantId> = vec![svc.tenant("default").unwrap()];
+        for t in 1..tenants {
+            let mut trng = Rng::new(100 + t as u64);
+            let k = data::paper_truth_kernel(n1, n2, &mut trng);
+            ids.push(svc.add_tenant(&format!("tenant-{t}"), &k).unwrap());
+        }
+        let reqs: Vec<SampleRequest> = (0..requests)
+            .map(|i| SampleRequest::for_tenant(ids[i % ids.len()], 10))
+            .collect();
+        let (rps, p50, p95) = drive_reqs(&svc, &reqs);
+        println!("{tenants:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        report.case_raw(
+            &format!("tenants_{tenants}"),
+            &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
+        );
+        tenant_rps.push(rps);
+        drop(svc);
+    }
+    if let (Some(&first), Some(&last)) = (tenant_rps.first(), tenant_rps.last()) {
+        // < 1.0 quantifies the coalescing loss from spreading one load
+        // over 8 catalogs (each (tenant, k) group is 1/8 the size).
+        report.derived("tenant8_vs_tenant1_throughput", last / first.max(1e-12));
+    }
+
+    section("hot-swap publish under load (2 tenants, k=10)");
+    {
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+            ..ServiceConfig::default()
+        };
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let mut trng = Rng::new(7);
+        let other = data::paper_truth_kernel(n1, n2, &mut trng);
+        let b = svc.add_tenant("b", &other).unwrap();
+        // Publisher thread republished tenant b the whole time; requests
+        // target both tenants and must not stall on the publishes.
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let publisher = {
+            let svc2 = Arc::clone(&svc);
+            let stop2 = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut publishes = 0u64;
+                let mut prng = Rng::new(11);
+                while !stop2.load(std::sync::atomic::Ordering::SeqCst) {
+                    let k = data::paper_truth_kernel(n1, n2, &mut prng);
+                    svc2.publish(b, &k).unwrap();
+                    publishes += 1;
+                }
+                publishes
+            })
+        };
+        let ids = [svc.tenant("default").unwrap(), b];
+        let reqs: Vec<SampleRequest> = (0..requests)
+            .map(|i| SampleRequest::for_tenant(ids[i % 2], 10))
+            .collect();
+        let (rps, p50, p95) = drive_reqs(&svc, &reqs);
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let publishes = publisher.join().unwrap();
+        println!(
+            "served {rps:.0} req/s (p50 {p50:.3} ms, p95 {p95:.3} ms) through {publishes} live epoch publishes"
+        );
+        report.case_raw(
+            "hot_swap_under_load",
+            &[
+                ("req_per_s", rps),
+                ("p50_ms", p50),
+                ("p95_ms", p95),
+                ("publishes", publishes as f64),
+            ],
+        );
         drop(svc);
     }
 
@@ -92,10 +219,20 @@ fn main() {
             max_batch: 32,
             batch_window_us: 200,
             queue_capacity: 100_000,
+            ..ServiceConfig::default()
         };
         let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
-        let (rps, p50, p95) = drive(&svc, 1200, k);
+        let (rps, p50, p95) = drive(&svc, (requests * 2) / 5, k);
         println!("{k:<10} {rps:>12.0} {p50:>10.3} {p95:>10.3}");
+        report.case_raw(
+            &format!("latency_k{k}"),
+            &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
+        );
         drop(svc); // Drop drains + joins
     }
+
+    report
+        .write("service", "BENCH_service.json")
+        .expect("write BENCH_service.json");
+    println!("\nwrote BENCH_service.json");
 }

@@ -65,15 +65,28 @@ pub struct Bencher {
     pub min_iters: usize,
 }
 
+/// Parse a `usize` knob from the environment (the `KRONDPP_BENCH_*`
+/// variables), falling back to `default` when unset or unparsable. One
+/// definition so every bench binary agrees on the parse rule.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The `KRONDPP_BENCH_BUDGET_MS` per-case budget (default 1500 ms — keeps
+/// full `cargo bench` runs in minutes; CI smoke sets it low).
+pub fn bench_budget_ms() -> usize {
+    env_usize("KRONDPP_BENCH_BUDGET_MS", 1500)
+}
+
+/// The `KRONDPP_BENCH_MAX_N` case-size cap (default unbounded; CI smoke
+/// sets it low so runs finish in seconds).
+pub fn bench_max_n() -> usize {
+    env_usize("KRONDPP_BENCH_MAX_N", usize::MAX)
+}
+
 impl Default for Bencher {
     fn default() -> Self {
-        // Modest defaults: bench suites cover many cases; a per-case budget
-        // of ~1.5 s keeps full `cargo bench` runs in minutes. Override via
-        // KRONDPP_BENCH_BUDGET_MS for precision runs.
-        let ms = std::env::var("KRONDPP_BENCH_BUDGET_MS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(1500u64);
+        let ms = bench_budget_ms() as u64;
         Bencher {
             budget: Duration::from_millis(ms),
             warmup: Duration::from_millis(ms / 5),
@@ -161,6 +174,19 @@ impl Report {
         obj.insert("median_s".into(), Json::Num(stats.median.as_secs_f64()));
         obj.insert("min_s".into(), Json::Num(stats.min.as_secs_f64()));
         obj.insert("p95_s".into(), Json::Num(stats.p95.as_secs_f64()));
+        for (k, v) in metrics {
+            obj.insert((*k).into(), Json::Num(*v));
+        }
+        self.cases.push(Json::Obj(obj));
+    }
+
+    /// Record a case from raw named metrics — for benches that measure
+    /// end-to-end throughput/latency themselves (e.g. the service bench
+    /// driving a live coordinator) instead of timing a closure via
+    /// [`Bencher`].
+    pub fn case_raw(&mut self, name: &str, metrics: &[(&str, f64)]) {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(name.into()));
         for (k, v) in metrics {
             obj.insert((*k).into(), Json::Num(*v));
         }

@@ -141,6 +141,42 @@ impl LearnConfig {
     }
 }
 
+/// Declaration of one serving tenant (a named catalog/model): the
+/// coordinator provisions a synthetic `n1×n2` KronDPP for it at startup
+/// (production deployments publish learned kernels over it via
+/// [`crate::coordinator::KernelRegistry::publish`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Registry name (`--tenant` on the CLI).
+    pub name: String,
+    /// Sub-kernel sizes; ground set `n = n1 * n2`.
+    pub n1: usize,
+    pub n2: usize,
+    /// Seed for the tenant's synthetic kernel.
+    pub seed: u64,
+}
+
+impl TenantSpec {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let name = v.get("name")?.as_str()?.to_string();
+        if name.is_empty() {
+            return Err(crate::Error::Parse("tenant name must be non-empty".into()));
+        }
+        let n1 = v.get("n1")?.as_usize()?;
+        let n2 = v.get("n2")?.as_usize()?;
+        if n1 == 0 || n2 == 0 {
+            return Err(crate::Error::Parse(format!(
+                "tenant '{name}': n1/n2 must be positive"
+            )));
+        }
+        let seed = match v.get_opt("seed") {
+            Some(x) => x.as_f64()? as u64,
+            None => 2016,
+        };
+        Ok(TenantSpec { name, n1, n2, seed })
+    }
+}
+
 /// Configuration for the serving coordinator.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -152,6 +188,13 @@ pub struct ServiceConfig {
     pub batch_window_us: u64,
     /// Bounded queue capacity (backpressure limit).
     pub queue_capacity: usize,
+    /// LRU bound on resident per-tenant eigendecompositions (0 =
+    /// unbounded): cold tenants drop their cached epoch and lazily
+    /// rebuild on the next request.
+    pub max_resident_epochs: usize,
+    /// Tenants to provision at startup. Empty means the caller supplies
+    /// the (single, "default") tenant kernel programmatically.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for ServiceConfig {
@@ -161,6 +204,8 @@ impl Default for ServiceConfig {
             max_batch: 32,
             batch_window_us: 500,
             queue_capacity: 1024,
+            max_resident_epochs: 0,
+            tenants: Vec::new(),
         }
     }
 }
@@ -179,6 +224,29 @@ impl ServiceConfig {
         }
         if let Some(x) = v.get_opt("queue_capacity") {
             c.queue_capacity = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.get_opt("max_resident_epochs") {
+            c.max_resident_epochs = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("tenants") {
+            c.tenants = x
+                .as_arr()?
+                .iter()
+                .map(TenantSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            if c.tenants.iter().any(|t| t.name == "default") {
+                // The coordinator registers the initial kernel under this
+                // name; catch the collision at parse time, not startup.
+                return Err(crate::Error::Parse(
+                    "tenant name 'default' is reserved for the initial kernel".into(),
+                ));
+            }
+            let mut names: Vec<&str> =
+                c.tenants.iter().map(|t| t.name.as_str()).collect();
+            names.sort_unstable();
+            if names.windows(2).any(|w| w[0] == w[1]) {
+                return Err(crate::Error::Parse("duplicate tenant names".into()));
+            }
         }
         Ok(c)
     }
@@ -221,6 +289,41 @@ mod tests {
         let s = ServiceConfig::from_json(&j).unwrap();
         assert_eq!(s.workers, 2);
         assert_eq!(s.max_batch, 8);
+        // Untouched multi-tenant defaults: unbounded, no declarations.
+        assert_eq!(s.max_resident_epochs, 0);
+        assert!(s.tenants.is_empty());
+    }
+
+    #[test]
+    fn service_tenants_parse() {
+        let j = Json::parse(
+            r#"{"max_resident_epochs": 2, "tenants": [
+                {"name": "market-eu", "n1": 8, "n2": 8, "seed": 1},
+                {"name": "market-us", "n1": 10, "n2": 6}
+            ]}"#,
+        )
+        .unwrap();
+        let s = ServiceConfig::from_json(&j).unwrap();
+        assert_eq!(s.max_resident_epochs, 2);
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(
+            s.tenants[0],
+            TenantSpec { name: "market-eu".into(), n1: 8, n2: 8, seed: 1 }
+        );
+        assert_eq!(s.tenants[1].seed, 2016, "seed defaults");
+    }
+
+    #[test]
+    fn service_tenants_validate() {
+        let dup = r#"{"tenants": [{"name": "a", "n1": 2, "n2": 2},
+                                  {"name": "a", "n1": 3, "n2": 3}]}"#;
+        assert!(ServiceConfig::from_json(&Json::parse(dup).unwrap()).is_err());
+        let zero = r#"{"tenants": [{"name": "a", "n1": 0, "n2": 2}]}"#;
+        assert!(ServiceConfig::from_json(&Json::parse(zero).unwrap()).is_err());
+        let unnamed = r#"{"tenants": [{"n1": 2, "n2": 2}]}"#;
+        assert!(ServiceConfig::from_json(&Json::parse(unnamed).unwrap()).is_err());
+        let reserved = r#"{"tenants": [{"name": "default", "n1": 2, "n2": 2}]}"#;
+        assert!(ServiceConfig::from_json(&Json::parse(reserved).unwrap()).is_err());
     }
 
     #[test]

@@ -88,18 +88,21 @@ impl<T> BatchQueue<T> {
     }
 }
 
-/// Group a dispatched batch by an integer key, preserving arrival (FIFO)
+/// Group a dispatched batch by an ordered key, preserving arrival (FIFO)
 /// order within each group; groups come out in ascending key order.
 ///
-/// The server uses this to coalesce same-`k` sampling jobs of one batch so
-/// the batched engine ([`crate::dpp::Sampler::sample_k_many`]) shares the
-/// per-`k` phase-1 setup across the whole group instead of looping single
-/// draws.
-pub fn coalesce_by_key<T>(
+/// The server uses this twice per batch: the pump groups by tenant (so
+/// each tenant-group routes as one unit and per-tenant load is accounted
+/// exactly), and each worker re-groups its tenant batch by `k` so the
+/// batched engine ([`crate::dpp::Sampler::sample_k_many`]) shares the
+/// per-tenant, per-`k` phase-1 elementary-DP table across the whole group
+/// instead of looping single draws. Keys are anything `Ord` — `usize`,
+/// `TenantId`, or `(tenant, k)` tuples.
+pub fn coalesce_by_key<T, K: Ord>(
     items: Vec<T>,
-    key: impl Fn(&T) -> usize,
-) -> Vec<(usize, Vec<T>)> {
-    let mut groups: std::collections::BTreeMap<usize, Vec<T>> =
+    key: impl Fn(&T) -> K,
+) -> Vec<(K, Vec<T>)> {
+    let mut groups: std::collections::BTreeMap<K, Vec<T>> =
         std::collections::BTreeMap::new();
     for item in items {
         groups.entry(key(&item)).or_default().push(item);
@@ -209,6 +212,19 @@ mod tests {
         let total: usize = groups.iter().map(|(_, g)| g.len()).sum();
         assert_eq!(total, 5);
         assert!(coalesce_by_key(Vec::<(usize, char)>::new(), |&(k, _)| k).is_empty());
+    }
+
+    #[test]
+    fn coalesce_supports_composite_keys() {
+        // (tenant, k) grouping: same tenant+k coalesce, everything else
+        // stays separate, FIFO within each group.
+        let items = vec![(0u32, 3usize, 'a'), (1, 3, 'b'), (0, 3, 'c'), (0, 5, 'd')];
+        let groups = coalesce_by_key(items, |&(t, k, _)| (t, k));
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].0, (0, 3));
+        assert_eq!(groups[0].1, vec![(0, 3, 'a'), (0, 3, 'c')]);
+        assert_eq!(groups[1].0, (0, 5));
+        assert_eq!(groups[2].0, (1, 3));
     }
 
     // Property: ready() is monotone in time — once ready, stays ready.

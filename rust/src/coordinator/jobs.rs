@@ -1,14 +1,17 @@
 //! Background jobs around the serving core:
 //!
 //! - [`LearningJob`]: run a [`crate::learn::Learner`] in the background and
-//!   (optionally) hot-swap each improved kernel into a running
-//!   [`super::server::DppService`] — continuous learning behind a live
-//!   sampling endpoint.
+//!   (optionally) publish each improved kernel to a target tenant of a
+//!   running [`super::server::DppService`] — continuous learning behind a
+//!   live multi-tenant sampling endpoint. Each publication is an epoch
+//!   hot-swap: readers of the tenant keep drawing, the eigendecomposition
+//!   happens on the job thread.
 //! - [`SamplingJob`]: bulk-draw samples off the caller's thread through the
 //!   batched engine ([`crate::dpp::Sampler::sample_batch`]) instead of
 //!   looping single draws — offline sample caches, evaluation sweeps,
 //!   cache warming.
 
+use crate::coordinator::registry::TenantId;
 use crate::coordinator::server::DppService;
 use crate::dpp::{Kernel, Sampler};
 use crate::error::{Error, Result};
@@ -35,15 +38,31 @@ pub struct LearningJob {
 
 impl LearningJob {
     /// Spawn: runs `learner` for up to `max_iters` over `data`. If
-    /// `service` is given, each iteration's kernel is installed (swap
-    /// cost is the sub-kernel eigendecompositions — cheap for KronDPP,
-    /// which is exactly the paper's point).
+    /// `service` is given, each iteration's kernel is published to the
+    /// service's **default** tenant (swap cost is the sub-kernel
+    /// eigendecompositions — cheap for KronDPP, which is exactly the
+    /// paper's point). Multi-tenant deployments use
+    /// [`LearningJob::spawn_into`] to target a specific tenant.
     pub fn spawn(
+        learner: Box<dyn Learner + Send>,
+        data: TrainingSet,
+        max_iters: usize,
+        tol: f64,
+        service: Option<Arc<DppService>>,
+    ) -> LearningJob {
+        Self::spawn_into(learner, data, max_iters, tol, service, TenantId::DEFAULT)
+    }
+
+    /// [`LearningJob::spawn`] publishing refreshed kernels to `tenant`.
+    /// Each improving iteration becomes a new epoch generation for that
+    /// tenant; other tenants are untouched.
+    pub fn spawn_into(
         mut learner: Box<dyn Learner + Send>,
         data: TrainingSet,
         max_iters: usize,
         tol: f64,
         service: Option<Arc<DppService>>,
+        tenant: TenantId,
     ) -> LearningJob {
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
@@ -74,10 +93,10 @@ impl LearningJob {
                     history.push(record.clone());
                     let mut installed = false;
                     if let Some(svc) = &service {
-                        // Only install improving kernels.
+                        // Only publish improving kernels.
                         let prev = history[history.len() - 2].log_likelihood;
                         if ll >= prev {
-                            svc.update_kernel(&learner.kernel())?;
+                            svc.publish(tenant, &learner.kernel())?;
                             installed = true;
                         }
                     }
@@ -220,6 +239,7 @@ mod tests {
             max_batch: 2,
             batch_window_us: 100,
             queue_capacity: 16,
+            ..ServiceConfig::default()
         };
         let svc = Arc::new(DppService::start(&truth, &cfg, 3).unwrap());
         let job =
@@ -228,6 +248,36 @@ mod tests {
         assert_eq!(history.len(), 5);
         // Service still serves after swaps.
         let y = svc.sample(3).unwrap();
+        assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn job_publishes_into_target_tenant_only() {
+        let (data, learner, truth) = setup();
+        let cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 2,
+            batch_window_us: 100,
+            queue_capacity: 16,
+            ..ServiceConfig::default()
+        };
+        let svc = Arc::new(DppService::start(&truth, &cfg, 4).unwrap());
+        let fresh = svc.add_tenant("fresh", &truth).unwrap();
+        let job = LearningJob::spawn_into(
+            Box::new(learner),
+            data,
+            3,
+            0.0,
+            Some(Arc::clone(&svc)),
+            fresh,
+        );
+        let history = job.join().unwrap();
+        assert!(history.len() >= 2);
+        // The target tenant advanced generations; default stayed at 1.
+        let reg = svc.registry();
+        assert!(reg.entry(fresh).unwrap().generation() > 1);
+        assert_eq!(reg.entry(TenantId::DEFAULT).unwrap().generation(), 1);
+        let y = svc.sample_tenant(fresh, 3).unwrap();
         assert_eq!(y.len(), 3);
     }
 

@@ -2,8 +2,12 @@
 //!
 //! Lock-free-ish (atomics for counters; a mutex-guarded log-bucketed
 //! histogram for latencies — contention is negligible next to a sampling
-//! operation). The serving benches print these as the
-//! latency/throughput rows in EXPERIMENTS.md.
+//! operation). Global counters live in [`ServiceMetrics`]; each registry
+//! tenant additionally carries its own [`TenantMetrics`] (per-tenant
+//! counters + latency histogram), and the registry itself exposes a gauge
+//! line (resident epochs, evictions, rebuilds) via
+//! [`super::registry::KernelRegistry::report`]. The serving benches print
+//! these as the latency/throughput rows in EXPERIMENTS.md.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -107,6 +111,40 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-tenant counters + latency histogram, held by each registry tenant.
+#[derive(Default)]
+pub struct TenantMetrics {
+    /// Requests accepted into the queue for this tenant.
+    pub accepted: AtomicU64,
+    /// Requests rejected as invalid (`k` > ground set) — at admission or,
+    /// after a shrinking hot-swap raced the queue, at the worker.
+    pub rejected_invalid: AtomicU64,
+    /// Requests completed successfully for this tenant.
+    pub completed: AtomicU64,
+    /// Accepted requests that failed service-side (epoch build error).
+    pub failed: AtomicU64,
+    /// End-to-end latency of this tenant's requests.
+    pub latency: LatencyHistogram,
+}
+
+impl TenantMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line per-tenant summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "accepted={} rejected_invalid={} completed={} failed={} latency: {}",
+            self.accepted.load(Ordering::Relaxed),
+            self.rejected_invalid.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.latency.summary(),
+        )
+    }
+}
+
 /// Service-wide counters.
 #[derive(Default)]
 pub struct ServiceMetrics {
@@ -114,8 +152,17 @@ pub struct ServiceMetrics {
     pub accepted: AtomicU64,
     /// Requests rejected by backpressure.
     pub rejected: AtomicU64,
-    /// Requests completed.
+    /// Requests rejected as invalid with [`crate::error::Error::Rejected`]:
+    /// at admission control (unknown tenant, `k` larger than the tenant's
+    /// current ground set — no queue slot burned) or, rarely, at the
+    /// worker when a shrinking hot-swap raced an already-queued request.
+    pub rejected_invalid: AtomicU64,
+    /// Requests completed successfully.
     pub completed: AtomicU64,
+    /// Accepted requests that failed service-side (epoch build error).
+    /// Invariant: every accepted request ends in exactly one of
+    /// `completed`, `failed`, or (worker-side) `rejected_invalid`.
+    pub failed: AtomicU64,
     /// Batches dispatched.
     pub batches: AtomicU64,
     /// Sum of batch sizes (for mean batch size).
@@ -141,10 +188,12 @@ impl ServiceMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "accepted={} rejected={} completed={} batches={} mean_batch={:.2}\n  latency: {}\n  queue:   {}",
+            "accepted={} rejected={} rejected_invalid={} completed={} failed={} batches={} mean_batch={:.2}\n  latency: {}\n  queue:   {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency.summary(),
@@ -187,5 +236,18 @@ mod tests {
         m.batched_requests.store(10, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
         assert!(m.report().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn tenant_metrics_summary() {
+        let t = TenantMetrics::new();
+        t.accepted.store(7, Ordering::Relaxed);
+        t.rejected_invalid.store(2, Ordering::Relaxed);
+        t.completed.store(5, Ordering::Relaxed);
+        t.latency.record(Duration::from_micros(250));
+        let s = t.summary();
+        assert!(s.contains("accepted=7"));
+        assert!(s.contains("rejected_invalid=2"));
+        assert!(s.contains("completed=5"));
     }
 }

@@ -1,19 +1,27 @@
-//! The Layer-3 coordinator: a production serving + learning system around
-//! the KronDPP core (DESIGN.md §3).
+//! The Layer-3 coordinator: a production multi-tenant serving + learning
+//! system around the KronDPP core (DESIGN.md §3).
 //!
-//! - [`server`]: the sampling service (request queue → dynamic batcher →
-//!   least-loaded workers → exact DPP samples), with kernel hot-swap.
-//! - [`batcher`]: the two-trigger (size/age) batch policy, property-tested.
-//! - [`router`]: least-loaded work routing.
-//! - [`jobs`]: background learning jobs feeding refreshed kernels to the
-//!   service.
-//! - [`metrics`]: latency histograms + service counters.
+//! - [`registry`]: the multi-tenant [`KernelRegistry`] — named tenants
+//!   publishing generation-stamped [`SamplerEpoch`]s (kernel + cached
+//!   eigendecomposition + sampler) atomically, with an LRU bound on
+//!   resident eigendecompositions and lazy rebuild for cold tenants.
+//! - [`server`]: the sampling service (admission control → request queue
+//!   → dynamic batcher → tenant-grouped least-loaded dispatch → exact DPP
+//!   samples from the tenant's current epoch).
+//! - [`batcher`]: the two-trigger (size/age) batch policy plus the
+//!   `(tenant, k)` coalescer, property-tested.
+//! - [`router`]: job-weighted least-loaded work routing.
+//! - [`jobs`]: background learning jobs publishing refreshed kernels to
+//!   their target tenant.
+//! - [`metrics`]: latency histograms + global and per-tenant counters.
 
 pub mod batcher;
 pub mod jobs;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use jobs::LearningJob;
+pub use registry::{KernelRegistry, SamplerEpoch, TenantId};
 pub use server::{DppService, SampleRequest, Ticket};

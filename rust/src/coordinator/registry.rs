@@ -1,0 +1,615 @@
+//! Multi-tenant kernel registry with epoch-published hot swaps.
+//!
+//! One deployment serves many catalogs/models at once — per-market
+//! kernels, A/B variants, freshly learned refreshes — each with its own
+//! cached `O(N₁³+N₂³)` eigendecomposition that is too expensive to rebuild
+//! per request and too large to keep resident unboundedly. The
+//! [`KernelRegistry`] holds named **tenants**; each tenant publishes
+//! generation-stamped [`SamplerEpoch`]s (kernel + cached eigendecomposition
+//! + sampler) atomically:
+//!
+//! - **Readers never block on writers.** A reader grabs the current epoch
+//!   with an `Arc` clone under a briefly-held per-tenant `RwLock` read
+//!   guard; no reader-visible lock is ever held while an
+//!   eigendecomposition runs.
+//! - **Writers build off the read path.** [`KernelRegistry::publish`]
+//!   eigendecomposes the next kernel through the shared swap scratch
+//!   (locked only by writers/rebuilders; concurrent builds fall back to a
+//!   fresh scratch instead of serializing across tenants), then installs
+//!   the new epoch and bumps the generation under a momentary write lock —
+//!   a pointer swap. In-flight draws keep their old epoch alive through
+//!   their `Arc` until they finish.
+//! - **Cold tenants are evicted, not dropped.** A `max_resident_epochs`
+//!   LRU bound caps how many eigendecompositions stay resident; an evicted
+//!   tenant keeps its (cheap, factored) kernel and lazily rebuilds its
+//!   epoch on the next [`KernelRegistry::acquire`].
+//!
+//! The serving stack ([`super::server`]) resolves tenants to [`TenantId`]s
+//! at admission, coalesces requests by `(tenant, k)`, and acquires one
+//! epoch per coalesced group, so per-tenant elementary-DP tables and the
+//! batched engine's determinism guarantees are preserved.
+
+use crate::coordinator::metrics::TenantMetrics;
+use crate::dpp::{Kernel, SampleScratch, Sampler};
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Stable, copyable handle to a registry tenant. Ids are assigned densely
+/// in creation order and never reused (tenants' epochs are evicted, the
+/// tenants themselves are never removed), so an id stays valid for the
+/// registry's lifetime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub(crate) u32);
+
+impl TenantId {
+    /// The first tenant created (single-tenant deployments' implicit
+    /// tenant; [`super::server::DppService::start`] names it "default").
+    pub const DEFAULT: TenantId = TenantId(0);
+
+    /// Dense index of this tenant (creation order).
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One published serving state of a tenant: the kernel's cached
+/// eigendecomposition wrapped in a ready [`Sampler`], stamped with the
+/// generation that produced it. Immutable once published; shared by `Arc`
+/// clone. A draw that started on generation `g` finishes on generation `g`
+/// even if `g+1` is published mid-draw.
+pub struct SamplerEpoch {
+    /// Owning tenant.
+    pub tenant: TenantId,
+    /// Owning tenant's name (for logs/metrics labels).
+    pub name: String,
+    /// Monotone per-tenant publication counter (1 = initial kernel).
+    pub generation: u64,
+    /// Ready sampler over the epoch's cached eigendecomposition.
+    pub sampler: Sampler,
+}
+
+/// Mutable per-tenant state behind the per-tenant `RwLock`: the source
+/// kernel (always resident — factored kernels are `O(N₁²+N₂²)`, cheap),
+/// the ground-set size (admission checks read it without touching the
+/// epoch), the generation counter, and the possibly-evicted epoch.
+struct TenantSlot {
+    kernel: Kernel,
+    n: usize,
+    generation: u64,
+    epoch: Option<Arc<SamplerEpoch>>,
+}
+
+/// A registry tenant: identity, the epoch slot, LRU/load accounting and
+/// per-tenant metrics. Shared as `Arc` between the registry, queued jobs
+/// and metric reporters.
+pub struct TenantEntry {
+    name: String,
+    id: TenantId,
+    slot: RwLock<TenantSlot>,
+    /// Lamport-style touch stamp for LRU eviction.
+    last_touch: AtomicU64,
+    /// Jobs dispatched to workers and not yet finished (per-tenant load).
+    pub(crate) in_flight: AtomicUsize,
+    metrics: TenantMetrics,
+}
+
+impl TenantEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn id(&self) -> TenantId {
+        self.id
+    }
+
+    /// Per-tenant counters + latency histogram.
+    pub fn metrics(&self) -> &TenantMetrics {
+        &self.metrics
+    }
+
+    /// Jobs currently dispatched for this tenant (load accounting).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Current ground-set size — readable without building an epoch, so
+    /// admission control can reject `k > n` for a cold tenant without
+    /// forcing an eigendecomposition.
+    pub fn n(&self) -> usize {
+        self.slot.read().unwrap().n
+    }
+
+    /// Current publication generation.
+    pub fn generation(&self) -> u64 {
+        self.slot.read().unwrap().generation
+    }
+
+    /// Is this tenant's eigendecomposition resident right now?
+    pub fn resident(&self) -> bool {
+        self.slot.read().unwrap().epoch.is_some()
+    }
+}
+
+/// Name → id map plus id-indexed entry list, guarded together so tenant
+/// creation is atomic.
+#[derive(Default)]
+struct Tenants {
+    list: Vec<Arc<TenantEntry>>,
+    names: BTreeMap<String, TenantId>,
+}
+
+/// The multi-tenant kernel registry. See the module docs for the epoch
+/// publication protocol.
+pub struct KernelRegistry {
+    tenants: RwLock<Tenants>,
+    /// LRU bound on resident eigendecompositions (0 = unbounded).
+    max_resident: usize,
+    /// Monotone clock stamping tenant touches for LRU ordering.
+    clock: AtomicU64,
+    /// Shared kernel-assembly workspace: epoch builds (publish or lazy
+    /// rebuild) re-eigendecompose through one reused scratch — panels,
+    /// rotation buffers, GEMM pack buffers — instead of reallocating.
+    /// Writer-side only; readers never take this lock, and concurrent
+    /// builders fall back to a fresh scratch rather than contending
+    /// (see `build_sampler`).
+    swap_scratch: Mutex<SampleScratch>,
+    evictions: AtomicU64,
+    rebuilds: AtomicU64,
+    publishes: AtomicU64,
+}
+
+impl KernelRegistry {
+    /// Empty registry. `max_resident_epochs = 0` disables eviction.
+    pub fn new(max_resident_epochs: usize) -> Self {
+        KernelRegistry {
+            tenants: RwLock::new(Tenants::default()),
+            max_resident: max_resident_epochs,
+            clock: AtomicU64::new(0),
+            swap_scratch: Mutex::new(SampleScratch::new()),
+            evictions: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+        }
+    }
+
+    /// Register a new tenant with its initial kernel (published as
+    /// generation 1). Fails on duplicate names.
+    pub fn add_tenant(&self, name: &str, kernel: &Kernel) -> Result<TenantId> {
+        // Eigendecompose before taking the registry lock: tenant creation
+        // never stalls readers of other tenants.
+        let sampler = self.build_sampler(kernel)?;
+        let touch = self.tick();
+        let mut tenants = self.tenants.write().unwrap();
+        if tenants.names.contains_key(name) {
+            return Err(Error::Invalid(format!("tenant '{name}' already exists")));
+        }
+        let id = TenantId(u32::try_from(tenants.list.len()).map_err(|_| {
+            Error::Invalid("tenant id space exhausted".into())
+        })?);
+        let epoch = Arc::new(SamplerEpoch {
+            tenant: id,
+            name: name.to_string(),
+            generation: 1,
+            sampler,
+        });
+        tenants.list.push(Arc::new(TenantEntry {
+            name: name.to_string(),
+            id,
+            slot: RwLock::new(TenantSlot {
+                kernel: kernel.clone(),
+                n: kernel.n(),
+                generation: 1,
+                epoch: Some(epoch),
+            }),
+            last_touch: AtomicU64::new(touch),
+            in_flight: AtomicUsize::new(0),
+            metrics: TenantMetrics::new(),
+        }));
+        tenants.names.insert(name.to_string(), id);
+        drop(tenants);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        self.enforce_budget(id);
+        Ok(id)
+    }
+
+    /// Look up a tenant id by name.
+    pub fn resolve(&self, name: &str) -> Option<TenantId> {
+        self.tenants.read().unwrap().names.get(name).copied()
+    }
+
+    /// Tenant entry by id (shared handle).
+    pub fn entry(&self, id: TenantId) -> Result<Arc<TenantEntry>> {
+        self.tenants
+            .read()
+            .unwrap()
+            .list
+            .get(id.index())
+            .cloned()
+            .ok_or_else(|| Error::Rejected(format!("unknown tenant id {}", id.0)))
+    }
+
+    /// All tenant names in id order.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.read().unwrap().list.iter().map(|e| e.name.clone()).collect()
+    }
+
+    /// Snapshot of all tenant entries in id order (metrics/report sweeps).
+    pub fn entries(&self) -> Vec<Arc<TenantEntry>> {
+        self.tenants.read().unwrap().list.clone()
+    }
+
+    /// Number of registered tenants.
+    pub fn len(&self) -> usize {
+        self.tenants.read().unwrap().list.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Grab the tenant's current epoch: an `Arc` clone under a momentary
+    /// read lock. If the tenant was evicted, rebuild its
+    /// eigendecomposition first — entirely off the read path (only the
+    /// writer-side swap scratch is locked while the eigensolver runs).
+    pub fn acquire(&self, id: TenantId) -> Result<Arc<SamplerEpoch>> {
+        let entry = self.entry(id)?;
+        self.acquire_entry(&entry)
+    }
+
+    /// [`KernelRegistry::acquire`] given an already-resolved entry (the
+    /// server's worker path — jobs carry their entry).
+    pub fn acquire_entry(&self, entry: &Arc<TenantEntry>) -> Result<Arc<SamplerEpoch>> {
+        entry.last_touch.store(self.tick(), Ordering::Relaxed);
+        loop {
+            let (kernel, generation) = {
+                let slot = entry.slot.read().unwrap();
+                match &slot.epoch {
+                    Some(e) => return Ok(Arc::clone(e)),
+                    // Cold tenant: copy out what the rebuild needs, then
+                    // release the reader-visible lock before any heavy work.
+                    None => (slot.kernel.clone(), slot.generation),
+                }
+            };
+            let sampler = self.build_sampler(&kernel)?;
+            let epoch = Arc::new(SamplerEpoch {
+                tenant: entry.id,
+                name: entry.name.clone(),
+                generation,
+                sampler,
+            });
+            let installed = {
+                let mut slot = entry.slot.write().unwrap();
+                if slot.generation != generation {
+                    // A publish landed mid-rebuild; our epoch is stale.
+                    // Retry against the new generation (usually resident).
+                    None
+                } else if let Some(e) = &slot.epoch {
+                    // A concurrent rebuilder won the race; epochs of the
+                    // same generation are interchangeable — use theirs.
+                    Some(Arc::clone(e))
+                } else {
+                    slot.epoch = Some(Arc::clone(&epoch));
+                    self.rebuilds.fetch_add(1, Ordering::Relaxed);
+                    Some(epoch)
+                }
+            };
+            if let Some(e) = installed {
+                self.enforce_budget(entry.id);
+                return Ok(e);
+            }
+        }
+    }
+
+    /// Publish a refreshed kernel to a tenant: eigendecompose off the read
+    /// path, then atomically install the new epoch and bump the
+    /// generation. Returns the new generation. Readers holding the old
+    /// epoch finish on it; new acquires see the new one immediately.
+    pub fn publish(&self, id: TenantId, kernel: &Kernel) -> Result<u64> {
+        let entry = self.entry(id)?;
+        // Stamp the LRU touch before building: a long-cold tenant being
+        // refreshed must not look like an eviction victim to a concurrent
+        // enforce_budget while (or right after) its new epoch is built.
+        entry.last_touch.store(self.tick(), Ordering::Relaxed);
+        let sampler = self.build_sampler(kernel)?;
+        let generation = {
+            let mut slot = entry.slot.write().unwrap();
+            slot.generation += 1;
+            slot.kernel = kernel.clone();
+            slot.n = kernel.n();
+            slot.epoch = Some(Arc::new(SamplerEpoch {
+                tenant: id,
+                name: entry.name.clone(),
+                generation: slot.generation,
+                sampler,
+            }));
+            slot.generation
+        };
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        self.enforce_budget(id);
+        Ok(generation)
+    }
+
+    /// Number of tenants whose eigendecomposition is currently resident.
+    pub fn resident_epochs(&self) -> usize {
+        self.tenants
+            .read()
+            .unwrap()
+            .list
+            .iter()
+            .filter(|e| e.slot.read().unwrap().epoch.is_some())
+            .count()
+    }
+
+    /// Epochs dropped by the LRU bound so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Lazy epoch rebuilds after eviction so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Epoch publications (tenant creations + kernel refreshes) so far.
+    pub fn publishes(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
+    }
+
+    /// Configured LRU bound (0 = unbounded).
+    pub fn max_resident_epochs(&self) -> usize {
+        self.max_resident
+    }
+
+    /// One-line registry gauge for reports: tenant count, resident
+    /// epochs vs bound, eviction/rebuild/publication counters.
+    pub fn report(&self) -> String {
+        let bound = if self.max_resident == 0 {
+            "∞".to_string()
+        } else {
+            self.max_resident.to_string()
+        };
+        format!(
+            "tenants={} resident_epochs={}/{} evictions={} rebuilds={} publishes={}",
+            self.len(),
+            self.resident_epochs(),
+            bound,
+            self.evictions(),
+            self.rebuilds(),
+            self.publishes(),
+        )
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Eigendecompose `kernel`, preferably through the shared swap
+    /// scratch. This is the only heavy step of a publish/rebuild, and it
+    /// holds no lock any reader ever takes. The scratch is an allocation
+    /// optimization, not a serialization point: if another publish or
+    /// rebuild holds it (its eigendecomposition can run for a while), we
+    /// build with a fresh local scratch instead of queueing this tenant
+    /// behind that tenant's work — so a cold tenant's lazy rebuild never
+    /// waits on an unrelated tenant's publish.
+    fn build_sampler(&self, kernel: &Kernel) -> Result<Sampler> {
+        match self.swap_scratch.try_lock() {
+            Ok(mut scratch) => Sampler::new_with_scratch(kernel, &mut scratch),
+            Err(_) => Sampler::new_with_scratch(kernel, &mut SampleScratch::new()),
+        }
+    }
+
+    /// Evict least-recently-touched epochs until the resident count is
+    /// within `max_resident`, never evicting `keep` (the tenant that was
+    /// just touched). Eviction only drops the registry's `Arc`; in-flight
+    /// draws keep their epoch alive until they finish.
+    fn enforce_budget(&self, keep: TenantId) {
+        if self.max_resident == 0 {
+            return;
+        }
+        loop {
+            let entries: Vec<Arc<TenantEntry>> =
+                self.tenants.read().unwrap().list.clone();
+            let mut resident: Vec<(u64, usize)> = entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.slot.read().unwrap().epoch.is_some())
+                .map(|(i, e)| (e.last_touch.load(Ordering::Relaxed), i))
+                .collect();
+            if resident.len() <= self.max_resident {
+                return;
+            }
+            resident.sort_unstable();
+            let Some(victim) = resident
+                .iter()
+                .map(|&(_, i)| i)
+                .find(|&i| entries[i].id != keep)
+            else {
+                return;
+            };
+            let dropped = entries[victim].slot.write().unwrap().epoch.take();
+            if dropped.is_some() {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::rng::Rng;
+
+    fn test_kernel(n1: usize, n2: usize, seed: u64) -> Kernel {
+        let mut rng = Rng::new(seed);
+        let mk = |n: usize, rng: &mut Rng| -> Matrix {
+            let mut m = rng.paper_init_kernel(n);
+            m.scale_mut(1.0 / n as f64);
+            m.add_diag_mut(0.3);
+            m
+        };
+        Kernel::Kron2(mk(n1, &mut rng), mk(n2, &mut rng))
+    }
+
+    #[test]
+    fn create_resolve_acquire_roundtrip() {
+        let reg = KernelRegistry::new(0);
+        let a = reg.add_tenant("market-eu", &test_kernel(3, 4, 1)).unwrap();
+        let b = reg.add_tenant("market-us", &test_kernel(2, 3, 2)).unwrap();
+        assert_eq!(a, TenantId::DEFAULT);
+        assert_ne!(a, b);
+        assert_eq!(reg.resolve("market-eu"), Some(a));
+        assert_eq!(reg.resolve("market-us"), Some(b));
+        assert_eq!(reg.resolve("nope"), None);
+        assert_eq!(reg.tenant_names(), vec!["market-eu".to_string(), "market-us".into()]);
+        let ea = reg.acquire(a).unwrap();
+        assert_eq!(ea.generation, 1);
+        assert_eq!(ea.name, "market-eu");
+        assert_eq!(ea.sampler.n(), 12);
+        let eb = reg.acquire(b).unwrap();
+        assert_eq!(eb.sampler.n(), 6);
+        // Same generation → same Arc (no rebuild on a warm acquire).
+        assert!(Arc::ptr_eq(&ea, &reg.acquire(a).unwrap()));
+        assert_eq!(reg.resident_epochs(), 2);
+        assert_eq!(reg.rebuilds(), 0);
+    }
+
+    #[test]
+    fn duplicate_tenant_rejected() {
+        let reg = KernelRegistry::new(0);
+        reg.add_tenant("t", &test_kernel(2, 2, 3)).unwrap();
+        assert!(reg.add_tenant("t", &test_kernel(2, 2, 4)).is_err());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn unknown_tenant_is_rejected_error() {
+        let reg = KernelRegistry::new(0);
+        match reg.acquire(TenantId(9)) {
+            Err(Error::Rejected(_)) => {}
+            Err(other) => panic!("expected Rejected, got {other:?}"),
+            Ok(_) => panic!("expected Rejected, got an epoch"),
+        }
+    }
+
+    #[test]
+    fn publish_bumps_generation_and_old_epoch_survives() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 5)).unwrap();
+        let old = reg.acquire(t).unwrap();
+        assert_eq!((old.generation, old.sampler.n()), (1, 4));
+        let g = reg.publish(t, &test_kernel(3, 4, 6)).unwrap();
+        assert_eq!(g, 2);
+        let new = reg.acquire(t).unwrap();
+        assert_eq!((new.generation, new.sampler.n()), (2, 12));
+        // The held pre-swap epoch still draws from the old kernel.
+        let mut rng = Rng::new(7);
+        let y = old.sampler.sample_k(2, &mut rng);
+        assert!(y.iter().all(|&i| i < 4));
+        let entry = reg.entry(t).unwrap();
+        assert_eq!(entry.generation(), 2);
+        assert_eq!(entry.n(), 12);
+    }
+
+    #[test]
+    fn lru_evicts_cold_tenant_and_lazily_rebuilds() {
+        let reg = KernelRegistry::new(1);
+        let a = reg.add_tenant("a", &test_kernel(2, 2, 8)).unwrap();
+        let b = reg.add_tenant("b", &test_kernel(2, 3, 9)).unwrap();
+        // Creating b evicted a (bound 1, a least-recently-touched).
+        assert_eq!(reg.resident_epochs(), 1);
+        assert_eq!(reg.evictions(), 1);
+        assert!(!reg.entry(a).unwrap().resident());
+        assert!(reg.entry(b).unwrap().resident());
+        // Touching a rebuilds it lazily and evicts b.
+        let ea = reg.acquire(a).unwrap();
+        assert_eq!(ea.generation, 1, "rebuild must not change the generation");
+        assert_eq!(ea.sampler.n(), 4);
+        assert_eq!(reg.rebuilds(), 1);
+        assert_eq!(reg.resident_epochs(), 1);
+        assert_eq!(reg.evictions(), 2);
+        assert!(!reg.entry(b).unwrap().resident());
+        // Round-trip: b comes back too, and draws stay valid.
+        let eb = reg.acquire(b).unwrap();
+        let mut rng = Rng::new(11);
+        assert!(eb.sampler.sample_k(2, &mut rng).iter().all(|&i| i < 6));
+        assert_eq!(reg.rebuilds(), 2);
+        assert!(reg.report().contains("evictions=3"));
+    }
+
+    #[test]
+    fn unbounded_registry_never_evicts() {
+        let reg = KernelRegistry::new(0);
+        for i in 0..6u64 {
+            reg.add_tenant(&format!("t{i}"), &test_kernel(2, 2, 20 + i)).unwrap();
+        }
+        assert_eq!(reg.resident_epochs(), 6);
+        assert_eq!(reg.evictions(), 0);
+    }
+
+    #[test]
+    fn epoch_draws_are_tenant_count_and_thread_invariant() {
+        // The engine's one-RNG-stream-per-draw guarantee must survive the
+        // registry: the same kernel served as the only tenant, or as one
+        // of many (with eviction + lazy rebuild in between), draws
+        // identical batches for the same seed — on any thread count.
+        let kernel = test_kernel(3, 4, 70);
+        let solo = KernelRegistry::new(0);
+        let t = solo.add_tenant("only", &kernel).unwrap();
+        let crowded = KernelRegistry::new(2);
+        for i in 0..4u64 {
+            crowded.add_tenant(&format!("noise-{i}"), &test_kernel(2, 2, 80 + i)).unwrap();
+        }
+        let u = crowded.add_tenant("same", &kernel).unwrap();
+        // Touch the noise tenants so "same" gets evicted and must rebuild.
+        for i in 0..2u64 {
+            crowded.acquire(crowded.resolve(&format!("noise-{i}")).unwrap()).unwrap();
+        }
+        let a = solo.acquire(t).unwrap().sampler.sample_batch(16, Some(3), 9);
+        let b = crowded.acquire(u).unwrap().sampler.sample_batch(16, Some(3), 9);
+        assert_eq!(a, b, "tenant count changed draws");
+        let c = crowded.acquire(u).unwrap().sampler.sample_batch_threads(16, Some(3), 9, 1);
+        assert_eq!(a, c, "thread count changed draws");
+    }
+
+    #[test]
+    fn concurrent_acquire_and_publish_smoke() {
+        let reg = Arc::new(KernelRegistry::new(1));
+        let a = reg.add_tenant("a", &test_kernel(3, 3, 30)).unwrap();
+        let b = reg.add_tenant("b", &test_kernel(3, 3, 31)).unwrap();
+        let mut handles = Vec::new();
+        for (t, seed) in [(a, 40u64), (b, 41)] {
+            for r in 0..2u64 {
+                let reg2 = Arc::clone(&reg);
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed * 10 + r);
+                    for _ in 0..40 {
+                        let epoch = reg2.acquire(t).unwrap();
+                        let y = epoch.sampler.sample_k(3, &mut rng);
+                        assert_eq!(y.len(), 3);
+                        assert!(y.iter().all(|&i| i < 9));
+                    }
+                }));
+            }
+        }
+        {
+            let reg2 = Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                for s in 0..8u64 {
+                    reg2.publish(a, &test_kernel(3, 3, 50 + s)).unwrap();
+                    reg2.publish(b, &test_kernel(3, 3, 60 + s)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.entry(a).unwrap().generation(), 9);
+        assert_eq!(reg.entry(b).unwrap().generation(), 9);
+        // With bound 1 and two hot tenants, evictions + rebuilds happened.
+        assert!(reg.evictions() > 0);
+        assert!(reg.resident_epochs() <= 1);
+    }
+}

@@ -2,8 +2,11 @@
 //!
 //! Workers expose an in-flight count; the router picks the least-loaded
 //! worker (ties → lowest index, keeping placement deterministic for
-//! tests). Pure logic, property-tested; the server owns the actual worker
-//! threads.
+//! tests). Load is counted in **jobs**, not batches
+//! ([`WorkerLoad::begin_n`]), so the tenant-grouped dispatch of the
+//! multi-tenant server weighs a 12-request tenant-group as 12, keeping
+//! placement fair when tenant-groups have uneven sizes. Pure logic,
+//! property-tested; the server owns the actual worker threads.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -26,13 +29,22 @@ impl WorkerLoad {
         self.0[w].load(Ordering::SeqCst)
     }
 
-    /// Record assignment / completion.
+    /// Record assignment / completion of one unit of work.
     pub fn begin(&self, w: usize) {
-        self.0[w].fetch_add(1, Ordering::SeqCst);
+        self.begin_n(w, 1);
     }
 
     pub fn end(&self, w: usize) {
-        self.0[w].fetch_sub(1, Ordering::SeqCst);
+        self.end_n(w, 1);
+    }
+
+    /// Record assignment of `n` jobs at once (a dispatched tenant-group).
+    pub fn begin_n(&self, w: usize, n: usize) {
+        self.0[w].fetch_add(n, Ordering::SeqCst);
+    }
+
+    pub fn end_n(&self, w: usize, n: usize) {
+        self.0[w].fetch_sub(n, Ordering::SeqCst);
     }
 
     /// Least-loaded worker (lowest index on ties).
@@ -89,6 +101,22 @@ mod tests {
             let min = *loads.iter().min().unwrap();
             r.total() == k && max - min <= 1
         });
+    }
+
+    #[test]
+    fn weighted_groups_steer_placement() {
+        // A 5-job group on worker 0 makes three 1-job groups prefer 1.
+        let r = WorkerLoad::new(2);
+        r.begin_n(0, 5);
+        for _ in 0..3 {
+            let w = r.pick();
+            assert_eq!(w, 1);
+            r.begin(w);
+        }
+        assert_eq!(r.total(), 8);
+        r.end_n(0, 5);
+        assert_eq!(r.pick(), 0);
+        assert_eq!(r.total(), 3);
     }
 
     #[test]

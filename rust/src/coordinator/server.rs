@@ -1,39 +1,66 @@
-//! The serving coordinator: a diverse-subset sampling service.
+//! The serving coordinator: a multi-tenant diverse-subset sampling service.
 //!
 //! This is the production face of KronDPP (the paper's motivating
-//! recommender application): clients submit "give me k diverse items"
-//! requests; the service batches them ([`super::batcher`]), routes batches
-//! to the least-loaded worker ([`super::router`]), and each worker draws
-//! exact DPP/k-DPP samples from the current kernel's cached
-//! eigendecomposition. Learning jobs ([`super::jobs`]) hot-swap refreshed
-//! kernels without stopping the service.
+//! recommender application): clients submit "give me k diverse items from
+//! catalog T" requests; the service validates them at admission
+//! ([`DppService::submit`] fails fast on unknown tenants and oversized
+//! `k`), batches them ([`super::batcher`]), routes each tenant-group to
+//! the least-loaded worker ([`super::router`]), and each worker draws
+//! exact DPP/k-DPP samples from the tenant's current
+//! [`super::registry::SamplerEpoch`] — an `Arc`-published kernel +
+//! cached eigendecomposition grabbed from the [`KernelRegistry`] without
+//! ever blocking on writers. Learning jobs ([`super::jobs`]) hot-swap
+//! refreshed kernels into their target tenant while requests keep flowing:
+//! in-flight draws finish on the epoch they started with.
 //!
-//! Threading: one pump thread runs the batch policy; `workers` threads
-//! consume per-worker channels; requests carry a oneshot-style mpsc
-//! response channel. Backpressure is a hard queue-capacity bound — beyond
-//! it, `submit` fails fast instead of growing latency unboundedly.
+//! Threading: one pump thread runs the batch policy and splits each batch
+//! by tenant; `workers` threads consume per-worker channels; requests
+//! carry a oneshot-style mpsc response channel. Backpressure is a hard
+//! queue-capacity bound — beyond it, `submit` fails fast instead of
+//! growing latency unboundedly. Within a dispatched tenant-group, workers
+//! coalesce same-`k` jobs so one per-tenant elementary-DP table serves the
+//! whole group; the engine's one-RNG-stream-per-draw guarantee
+//! ([`crate::dpp::Sampler::sample_batch`]) is untouched by tenant count.
 
 use crate::config::ServiceConfig;
 use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pending};
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::coordinator::registry::{KernelRegistry, TenantEntry, TenantId};
 use crate::coordinator::router::WorkerLoad;
-use crate::dpp::{Kernel, SampleScratch, Sampler};
+use crate::dpp::{Kernel, SampleScratch};
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One sampling request: `k = 0` draws an unconstrained DPP sample,
-/// `k > 0` a k-DPP sample of exactly that size.
+/// One sampling request against a tenant: `k = 0` draws an unconstrained
+/// DPP sample, `k > 0` a k-DPP sample of exactly that size.
 #[derive(Clone, Copy, Debug)]
 pub struct SampleRequest {
+    /// Target tenant (resolve names via [`DppService::tenant`]).
+    pub tenant: TenantId,
     pub k: usize,
+}
+
+impl SampleRequest {
+    /// Request against the default tenant (single-tenant deployments).
+    pub fn new(k: usize) -> Self {
+        SampleRequest { tenant: TenantId::DEFAULT, k }
+    }
+
+    /// Request against a specific tenant.
+    pub fn for_tenant(tenant: TenantId, k: usize) -> Self {
+        SampleRequest { tenant, k }
+    }
 }
 
 struct Job {
     req: SampleRequest,
+    /// Resolved at admission so workers and metrics never re-lock the
+    /// registry name table.
+    entry: Arc<TenantEntry>,
     respond: mpsc::Sender<Result<Vec<usize>>>,
     accepted: Instant,
 }
@@ -68,14 +95,12 @@ impl Ticket {
 struct Shared {
     queue: Mutex<BatchQueue<Job>>,
     cv: Condvar,
-    sampler: RwLock<Arc<Sampler>>,
+    /// The multi-tenant kernel registry: epoch publication, LRU eviction
+    /// and the writer-side swap scratch all live here.
+    registry: Arc<KernelRegistry>,
     metrics: ServiceMetrics,
     shutdown: AtomicBool,
     capacity: usize,
-    /// Kernel-assembly workspace for hot swaps: repeated `update_kernel`
-    /// calls re-eigendecompose through one reused scratch (panels,
-    /// rotation buffers, GEMM pack buffers) instead of reallocating.
-    swap_scratch: Mutex<SampleScratch>,
 }
 
 /// The running service.
@@ -88,20 +113,41 @@ pub struct DppService {
 }
 
 impl DppService {
-    /// Start the service over an initial kernel.
+    /// Start the service with `kernel` as the "default" tenant, plus any
+    /// tenants declared in `cfg` (each provisioned with a synthetic
+    /// paper-style KronDPP from its spec — production callers publish
+    /// learned kernels over them).
     pub fn start(kernel: &Kernel, cfg: &ServiceConfig, seed: u64) -> Result<Self> {
-        let sampler = Arc::new(Sampler::new(kernel)?);
+        let registry = Arc::new(KernelRegistry::new(cfg.max_resident_epochs));
+        registry.add_tenant("default", kernel)?;
+        for spec in &cfg.tenants {
+            let mut rng = Rng::new(spec.seed);
+            let k = crate::data::paper_truth_kernel(spec.n1, spec.n2, &mut rng);
+            registry.add_tenant(&spec.name, &k)?;
+        }
+        Self::start_with_registry(registry, cfg, seed)
+    }
+
+    /// Start the service over a pre-populated registry (multi-tenant
+    /// deployments that build their own tenants/kernels).
+    pub fn start_with_registry(
+        registry: Arc<KernelRegistry>,
+        cfg: &ServiceConfig,
+        seed: u64,
+    ) -> Result<Self> {
+        if registry.is_empty() {
+            return Err(Error::Invalid("registry has no tenants".into()));
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(BatchQueue::new(BatchPolicy {
                 max_batch: cfg.max_batch,
                 window: Duration::from_micros(cfg.batch_window_us),
             })),
             cv: Condvar::new(),
-            sampler: RwLock::new(sampler),
+            registry,
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
             capacity: cfg.queue_capacity,
-            swap_scratch: Mutex::new(SampleScratch::new()),
         });
         let loads = WorkerLoad::new(cfg.workers);
         let mut worker_txs = Vec::with_capacity(cfg.workers);
@@ -132,10 +178,48 @@ impl DppService {
         Ok(DppService { shared, pump: Some(pump), workers, worker_txs, loads })
     }
 
-    /// Submit a request; fails fast under backpressure.
+    /// The underlying registry (for direct publishes, gauges, tenants).
+    pub fn registry(&self) -> &Arc<KernelRegistry> {
+        &self.shared.registry
+    }
+
+    /// Resolve a tenant name to its id.
+    pub fn tenant(&self, name: &str) -> Result<TenantId> {
+        self.shared
+            .registry
+            .resolve(name)
+            .ok_or_else(|| Error::Rejected(format!("unknown tenant '{name}'")))
+    }
+
+    /// Register a new tenant on the live service.
+    pub fn add_tenant(&self, name: &str, kernel: &Kernel) -> Result<TenantId> {
+        self.shared.registry.add_tenant(name, kernel)
+    }
+
+    /// Submit a request; fails fast on admission errors (unknown tenant,
+    /// `k` larger than the tenant's current ground set — these return
+    /// [`Error::Rejected`] without burning a queue slot) and under
+    /// backpressure.
     pub fn submit(&self, req: SampleRequest) -> Result<Ticket> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Service("service is shut down".into()));
+        }
+        let entry = match self.shared.registry.entry(req.tenant) {
+            Ok(e) => e,
+            Err(e) => {
+                self.shared.metrics.rejected_invalid.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        let n = entry.n();
+        if req.k > n {
+            self.shared.metrics.rejected_invalid.fetch_add(1, Ordering::Relaxed);
+            entry.metrics().rejected_invalid.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Rejected(format!(
+                "tenant '{}': requested k={} > ground set {n}",
+                entry.name(),
+                req.k
+            )));
         }
         let (tx, rx) = mpsc::channel();
         {
@@ -147,38 +231,74 @@ impl DppService {
                     self.shared.capacity
                 )));
             }
-            q.push(Job { req, respond: tx, accepted: Instant::now() }, Instant::now());
+            let job =
+                Job { req, entry: Arc::clone(&entry), respond: tx, accepted: Instant::now() };
+            q.push(job, Instant::now());
             self.shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+            entry.metrics().accepted.fetch_add(1, Ordering::Relaxed);
         }
         self.shared.cv.notify_one();
         Ok(Ticket { rx })
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit against the default tenant and wait.
     pub fn sample(&self, k: usize) -> Result<Vec<usize>> {
-        self.submit(SampleRequest { k })?.wait()
+        self.submit(SampleRequest::new(k))?.wait()
     }
 
-    /// Hot-swap the serving kernel (e.g. from a learning job). The
-    /// eigendecomposition happens on the caller's thread; in-flight
-    /// requests finish on the old kernel.
-    pub fn update_kernel(&self, kernel: &Kernel) -> Result<()> {
-        let sampler = {
-            let mut scratch = self.shared.swap_scratch.lock().unwrap();
-            Arc::new(Sampler::new_with_scratch(kernel, &mut scratch)?)
-        };
-        *self.shared.sampler.write().unwrap() = sampler;
-        Ok(())
+    /// Convenience: submit against `tenant` and wait.
+    pub fn sample_tenant(&self, tenant: TenantId, k: usize) -> Result<Vec<usize>> {
+        self.submit(SampleRequest::for_tenant(tenant, k))?.wait()
     }
 
-    /// Service metrics.
+    /// Hot-swap the default tenant's kernel (single-tenant deployments).
+    /// The eigendecomposition happens on the caller's thread, off the read
+    /// path; in-flight requests finish on the old epoch. Returns the new
+    /// generation.
+    pub fn update_kernel(&self, kernel: &Kernel) -> Result<u64> {
+        self.publish(TenantId::DEFAULT, kernel)
+    }
+
+    /// Publish a refreshed kernel to `tenant` (e.g. from a learning job).
+    /// Returns the tenant's new generation.
+    pub fn publish(&self, tenant: TenantId, kernel: &Kernel) -> Result<u64> {
+        self.shared.registry.publish(tenant, kernel)
+    }
+
+    /// Service metrics (global counters; per-tenant counters live on the
+    /// registry entries).
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.shared.metrics
+    }
+
+    /// Full report: global counters, registry gauge, per-tenant lines.
+    pub fn report(&self) -> String {
+        let mut out = self.shared.metrics.report();
+        out.push_str("\n  registry: ");
+        out.push_str(&self.shared.registry.report());
+        for entry in self.shared.registry.entries() {
+            out.push_str(&format!(
+                "\n  tenant {} (gen {}): {}",
+                entry.name(),
+                entry.generation(),
+                entry.metrics().summary()
+            ));
+        }
+        out
     }
 
     /// Current total in-flight work across workers.
     pub fn in_flight(&self) -> usize {
         self.loads.total()
+    }
+
+    /// Current in-flight work for one tenant.
+    pub fn tenant_in_flight(&self, tenant: TenantId) -> usize {
+        self.shared
+            .registry
+            .entry(tenant)
+            .map(|e| e.in_flight())
+            .unwrap_or(0)
     }
 
     /// Stop accepting work, drain, and join all threads.
@@ -238,6 +358,10 @@ fn pump_loop(shared: Arc<Shared>, txs: Vec<mpsc::Sender<Vec<Job>>>, loads: Worke
     }
 }
 
+/// Split a popped batch by tenant and route each tenant-group to the
+/// least-loaded worker (job-weighted, so uneven tenant-groups balance).
+/// Keeping a tenant's jobs together is what lets the worker share one
+/// epoch acquire and one elementary-DP table per `(tenant, k)` group.
 fn dispatch(
     shared: &Arc<Shared>,
     txs: &[mpsc::Sender<Vec<Job>>],
@@ -247,20 +371,33 @@ fn dispatch(
     if batch.is_empty() {
         return;
     }
-    shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
-    shared
-        .metrics
-        .batched_requests
-        .fetch_add(batch.len() as u64, Ordering::Relaxed);
     let now = Instant::now();
     for p in &batch {
         shared.metrics.queue_wait.record(now.duration_since(p.enqueued));
     }
     let jobs: Vec<Job> = batch.into_iter().map(|p| p.item).collect();
-    let w = loads.pick();
-    loads.begin(w);
-    if txs[w].send(jobs).is_err() {
-        loads.end(w);
+    for (_, group) in coalesce_by_key(jobs, |j| j.req.tenant) {
+        shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        shared
+            .metrics
+            .batched_requests
+            .fetch_add(group.len() as u64, Ordering::Relaxed);
+        let n = group.len();
+        let entry = Arc::clone(&group[0].entry);
+        entry.in_flight.fetch_add(n, Ordering::SeqCst);
+        let w = loads.pick();
+        loads.begin_n(w, n);
+        if let Err(mpsc::SendError(group)) = txs[w].send(group) {
+            // Only reachable if the worker thread died (panic): fail the
+            // group's jobs so accepted = completed + failed +
+            // rejected_invalid stays exact and tickets get a real error
+            // instead of a disconnect.
+            loads.end_n(w, n);
+            entry.in_flight.fetch_sub(n, Ordering::SeqCst);
+            for job in group {
+                finish(shared, job, Err(Error::Service("worker unavailable".into())));
+            }
+        }
     }
 }
 
@@ -275,47 +412,86 @@ fn worker_loop(
     // same buffers (the batched engine's zero-allocation hot path).
     let mut scratch = SampleScratch::new();
     while let Ok(jobs) = rx.recv() {
-        let sampler = Arc::clone(&shared.sampler.read().unwrap());
-        // Coalesce same-k jobs so one phase-1 setup serves the whole group
-        // instead of looping single draws.
-        for (k, group) in coalesce_by_key(jobs, |j| j.req.k) {
-            if k > sampler.n() {
-                for job in group {
-                    finish(
-                        &shared,
-                        job,
-                        Err(Error::Invalid(format!(
-                            "requested k={} > ground set {}",
-                            k,
-                            sampler.n()
-                        ))),
-                    );
+        // The pump dispatches single-tenant groups: acquire the tenant's
+        // current epoch once for the whole delivery (an `Arc` clone; a
+        // cold tenant lazily rebuilds here, off every other tenant's path).
+        let entry = Arc::clone(&jobs[0].entry);
+        let n_jobs = jobs.len();
+        match shared.registry.acquire_entry(&entry) {
+            Err(e) => {
+                let msg = format!("tenant '{}': epoch build failed: {e}", entry.name());
+                for job in jobs {
+                    finish(&shared, job, Err(Error::Service(msg.clone())));
                 }
-                continue;
             }
-            // Respond per draw (not per group) so coalescing never inflates
-            // head-of-group latency beyond a single draw.
-            if k == 0 {
-                for job in group {
-                    let y = sampler.sample_with_scratch(rng, &mut scratch);
-                    finish(&shared, job, Ok(y));
+            Ok(epoch) => {
+                let sampler = &epoch.sampler;
+                // Coalesce same-k jobs so one phase-1 setup serves the
+                // whole group instead of looping single draws.
+                for (k, group) in coalesce_by_key(jobs, |j| j.req.k) {
+                    if k > sampler.n() {
+                        // Admission raced a shrinking publish; reject late
+                        // with the same distinct error class.
+                        for job in group {
+                            finish(
+                                &shared,
+                                job,
+                                Err(Error::Rejected(format!(
+                                    "tenant '{}': requested k={k} > ground set {} (gen {})",
+                                    entry.name(),
+                                    sampler.n(),
+                                    epoch.generation
+                                ))),
+                            );
+                        }
+                        continue;
+                    }
+                    // Respond per draw (not per group) so coalescing never
+                    // inflates head-of-group latency beyond a single draw.
+                    if k == 0 {
+                        for job in group {
+                            let y = sampler.sample_with_scratch(rng, &mut scratch);
+                            finish(&shared, job, Ok(y));
+                        }
+                    } else {
+                        let n = group.len();
+                        let mut jobs = group.into_iter();
+                        sampler.sample_k_each(k, n, rng, &mut scratch, |y| {
+                            let job = jobs.next().expect("one job per draw");
+                            finish(&shared, job, Ok(y));
+                        });
+                    }
                 }
-            } else {
-                let n = group.len();
-                let mut jobs = group.into_iter();
-                sampler.sample_k_each(k, n, rng, &mut scratch, |y| {
-                    let job = jobs.next().expect("one job per draw");
-                    finish(&shared, job, Ok(y));
-                });
             }
         }
-        loads.end(w);
+        entry.in_flight.fetch_sub(n_jobs, Ordering::SeqCst);
+        loads.end_n(w, n_jobs);
     }
 }
 
+/// Respond to one job and account for its outcome: every accepted request
+/// ends in exactly one of `completed` (Ok), `rejected_invalid` (a
+/// shrinking hot-swap raced the queue — worker-side `Error::Rejected`),
+/// or `failed` (epoch build error), globally and per tenant.
 fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
-    shared.metrics.latency.record(job.accepted.elapsed());
-    shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    let elapsed = job.accepted.elapsed();
+    shared.metrics.latency.record(elapsed);
+    let tm = job.entry.metrics();
+    tm.latency.record(elapsed);
+    match &result {
+        Ok(_) => {
+            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            tm.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(Error::Rejected(_)) => {
+            shared.metrics.rejected_invalid.fetch_add(1, Ordering::Relaxed);
+            tm.rejected_invalid.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => {
+            shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            tm.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
     let _ = job.respond.send(result);
 }
 
@@ -336,7 +512,13 @@ mod tests {
     }
 
     fn small_cfg() -> ServiceConfig {
-        ServiceConfig { workers: 2, max_batch: 4, batch_window_us: 200, queue_capacity: 64 }
+        ServiceConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_window_us: 200,
+            queue_capacity: 64,
+            ..ServiceConfig::default()
+        }
     }
 
     #[test]
@@ -384,7 +566,7 @@ mod tests {
         let svc = DppService::start(&test_kernel(3, 4, 6), &cfg, 13).unwrap();
         let ks = [0usize, 3, 3, 5, 0, 3, 5, 1];
         let tickets: Vec<Ticket> =
-            ks.iter().map(|&k| svc.submit(SampleRequest { k }).unwrap()).collect();
+            ks.iter().map(|&k| svc.submit(SampleRequest::new(k)).unwrap()).collect();
         for (k, t) in ks.iter().zip(tickets) {
             let y = t.wait().unwrap();
             if *k > 0 {
@@ -396,9 +578,59 @@ mod tests {
     }
 
     #[test]
-    fn rejects_oversized_k() {
+    fn multi_tenant_requests_route_to_their_kernels() {
+        let mut cfg = small_cfg();
+        cfg.max_batch = 16;
+        cfg.batch_window_us = 2_000;
+        let svc = DppService::start(&test_kernel(2, 2, 3), &cfg, 14).unwrap();
+        let big = svc.add_tenant("big", &test_kernel(3, 4, 4)).unwrap();
+        let deflt = svc.tenant("default").unwrap();
+        assert_eq!(deflt, TenantId::DEFAULT);
+        // Interleave tenants in one burst: the pump splits per tenant.
+        let mut tickets = Vec::new();
+        for i in 0..12usize {
+            let (t, k) = if i % 2 == 0 { (deflt, 2) } else { (big, 7) };
+            tickets.push((t, k, svc.submit(SampleRequest::for_tenant(t, k)).unwrap()));
+        }
+        for (t, k, ticket) in tickets {
+            let y = ticket.wait().unwrap();
+            assert_eq!(y.len(), k);
+            let bound = if t == deflt { 4 } else { 12 };
+            assert!(y.iter().all(|&i| i < bound), "tenant bound violated: {y:?}");
+        }
+        // Per-tenant accounting saw both tenants.
+        let e = svc.registry().entry(big).unwrap();
+        assert_eq!(e.metrics().completed.load(Ordering::Relaxed), 6);
+        assert!(svc.report().contains("tenant big"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rejects_oversized_k_at_admission() {
         let svc = DppService::start(&test_kernel(2, 2, 3), &small_cfg(), 9).unwrap();
-        assert!(svc.sample(100).is_err());
+        match svc.sample(100) {
+            Err(Error::Rejected(m)) => assert!(m.contains("k=100")),
+            other => panic!("expected admission rejection, got {other:?}"),
+        }
+        // No queue slot burned: never accepted, counted as invalid.
+        assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.metrics().rejected_invalid.load(Ordering::Relaxed), 1);
+        let e = svc.registry().entry(TenantId::DEFAULT).unwrap();
+        assert_eq!(e.metrics().rejected_invalid.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rejects_unknown_tenant_at_admission() {
+        let svc = DppService::start(&test_kernel(2, 2, 4), &small_cfg(), 10).unwrap();
+        match svc.submit(SampleRequest::for_tenant(TenantId(7), 2)) {
+            Err(Error::Rejected(m)) => assert!(m.contains("unknown tenant")),
+            Err(other) => panic!("expected admission rejection, got {other:?}"),
+            Ok(_) => panic!("expected admission rejection, got a ticket"),
+        }
+        assert!(svc.tenant("nope").is_err());
+        assert_eq!(svc.metrics().rejected_invalid.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 0);
         svc.shutdown();
     }
 
@@ -414,7 +646,7 @@ mod tests {
         let mut tickets = Vec::new();
         let mut rejected = 0;
         for _ in 0..200 {
-            match svc.submit(SampleRequest { k: 3 }) {
+            match svc.submit(SampleRequest::new(3)) {
                 Ok(t) => tickets.push(t),
                 Err(_) => rejected += 1,
             }
@@ -425,6 +657,7 @@ mod tests {
         // Either we saw rejections, or the worker kept up; metrics must
         // agree with what we observed.
         assert_eq!(svc.metrics().rejected.load(Ordering::Relaxed), rejected as u64);
+        assert_eq!(svc.metrics().rejected_invalid.load(Ordering::Relaxed), 0);
         svc.shutdown();
     }
 
@@ -433,7 +666,8 @@ mod tests {
         let svc = DppService::start(&test_kernel(2, 2, 5), &small_cfg(), 11).unwrap();
         let y = svc.sample(2).unwrap();
         assert!(y.iter().all(|&i| i < 4));
-        svc.update_kernel(&test_kernel(3, 4, 6)).unwrap();
+        let generation = svc.update_kernel(&test_kernel(3, 4, 6)).unwrap();
+        assert_eq!(generation, 2);
         let y2 = svc.sample(8).unwrap();
         assert_eq!(y2.len(), 8);
         assert!(y2.iter().any(|&i| i >= 4), "new kernel should expose items ≥ 4");
@@ -441,10 +675,29 @@ mod tests {
     }
 
     #[test]
+    fn config_declared_tenants_are_provisioned() {
+        let mut cfg = small_cfg();
+        cfg.tenants = vec![
+            crate::config::TenantSpec { name: "eu".into(), n1: 3, n2: 3, seed: 1 },
+            crate::config::TenantSpec { name: "us".into(), n1: 2, n2: 4, seed: 2 },
+        ];
+        let svc = DppService::start(&test_kernel(2, 2, 7), &cfg, 12).unwrap();
+        assert_eq!(
+            svc.registry().tenant_names(),
+            vec!["default".to_string(), "eu".into(), "us".into()]
+        );
+        let eu = svc.tenant("eu").unwrap();
+        let y = svc.sample_tenant(eu, 4).unwrap();
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|&i| i < 9));
+        svc.shutdown();
+    }
+
+    #[test]
     fn shutdown_drains_pending() {
         let svc = DppService::start(&test_kernel(3, 3, 7), &small_cfg(), 12).unwrap();
         let tickets: Vec<Ticket> =
-            (0..16).map(|_| svc.submit(SampleRequest { k: 2 }).unwrap()).collect();
+            (0..16).map(|_| svc.submit(SampleRequest::new(2)).unwrap()).collect();
         svc.shutdown();
         let mut done = 0;
         for t in tickets {

@@ -75,7 +75,17 @@ impl Kernel {
 
     /// [`Kernel::principal_submatrix`] into a caller-held buffer — the
     /// allocation-free form behind the per-subset likelihood sweep.
+    ///
+    /// For the Kronecker structures, each index's sub-kernel split
+    /// (`i ↦ (i₁, i₂[, i₃])`) is precomputed once per call (`O(κ)` setup
+    /// into thread-local staging, allocation-free after warmup) instead of
+    /// re-deriving the div/mod pairs inside the `κ²` entry loop.
     pub fn principal_submatrix_into(&self, idx: &[usize], out: &mut Matrix) {
+        use std::cell::RefCell;
+        thread_local! {
+            static SPLIT2: RefCell<Vec<(usize, usize)>> = RefCell::new(Vec::new());
+            static SPLIT3: RefCell<Vec<(usize, usize, usize)>> = RefCell::new(Vec::new());
+        }
         let k = idx.len();
         out.resize_zeroed(k, k);
         match self {
@@ -88,13 +98,37 @@ impl Kernel {
                     }
                 }
             }
-            _ => {
-                for (a, &i) in idx.iter().enumerate() {
-                    let dst = out.row_mut(a);
-                    for (b, &j) in idx.iter().enumerate() {
-                        dst[b] = self.entry(i, j);
+            Kernel::Kron2(l1, l2) => {
+                let n2 = l2.rows();
+                SPLIT2.with(|buf| {
+                    let mut split = buf.borrow_mut();
+                    split.clear();
+                    split.extend(idx.iter().map(|&i| (i / n2, i % n2)));
+                    for (r, &(i1, i2)) in split.iter().enumerate() {
+                        let dst = out.row_mut(r);
+                        for (c, &(j1, j2)) in split.iter().enumerate() {
+                            dst[c] = l1.get(i1, j1) * l2.get(i2, j2);
+                        }
                     }
-                }
+                });
+            }
+            Kernel::Kron3(l1, l2, l3) => {
+                let n3 = l3.rows();
+                let n23 = l2.rows() * n3;
+                SPLIT3.with(|buf| {
+                    let mut split = buf.borrow_mut();
+                    split.clear();
+                    split.extend(idx.iter().map(|&i| {
+                        let r = i % n23;
+                        (i / n23, r / n3, r % n3)
+                    }));
+                    for (r, &(i1, i2, i3)) in split.iter().enumerate() {
+                        let dst = out.row_mut(r);
+                        for (c, &(j1, j2, j3)) in split.iter().enumerate() {
+                            dst[c] = l1.get(i1, j1) * l2.get(i2, j2) * l3.get(i3, j3);
+                        }
+                    }
+                });
             }
         }
     }
@@ -376,6 +410,35 @@ mod tests {
         let sub = k.principal_submatrix(&idx);
         let dense_sub = k.to_dense().principal_submatrix(&idx);
         assert!(sub.rel_diff(&dense_sub) < 1e-13);
+    }
+
+    #[test]
+    fn submatrix_kron3_matches_dense() {
+        let k = Kernel::Kron3(spd(2, 30), spd(3, 31), spd(2, 32));
+        // Duplicates, unsorted order, boundary indices all exercise the
+        // precomputed split path.
+        for idx in [vec![0usize, 5, 11], vec![11, 0, 4, 4, 7], vec![6]] {
+            let sub = k.principal_submatrix(&idx);
+            let dense_sub = k.to_dense().principal_submatrix(&idx);
+            assert!(sub.rel_diff(&dense_sub) < 1e-13, "idx {idx:?}");
+        }
+    }
+
+    #[test]
+    fn submatrix_entrywise_against_entry_oracle() {
+        // The split-precompute path must agree with Kernel::entry exactly
+        // (same factor products, bitwise).
+        let k2 = Kernel::Kron2(spd(3, 33), spd(4, 34));
+        let k3 = Kernel::Kron3(spd(2, 35), spd(2, 36), spd(3, 37));
+        for kern in [&k2, &k3] {
+            let idx = [1usize, 2, 5, 10, 11];
+            let sub = kern.principal_submatrix(&idx);
+            for (a, &i) in idx.iter().enumerate() {
+                for (b, &j) in idx.iter().enumerate() {
+                    assert_eq!(sub[(a, b)], kern.entry(i, j), "({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -84,7 +84,10 @@ impl Sampler {
 
     /// [`Sampler::new`] reusing the eigensolver workspaces (and their GEMM
     /// pack buffers) held in a caller's [`SampleScratch`] — the repeated
-    /// kernel-assembly path of the serving coordinator.
+    /// kernel-assembly path of the serving coordinator: every epoch the
+    /// [`crate::coordinator::KernelRegistry`] builds (tenant creation,
+    /// hot-swap publish, lazy rebuild after eviction) re-decomposes
+    /// through one registry-held swap scratch instead of reallocating.
     pub fn new_with_scratch(kernel: &Kernel, scratch: &mut SampleScratch) -> Result<Self> {
         let eigen = kernel.eigen_with(&mut scratch.eigen)?;
         let n = kernel.n();

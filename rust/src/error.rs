@@ -28,6 +28,10 @@ pub enum Error {
     Runtime(String),
     /// Coordinator/service failure (queue closed, worker died, timeout).
     Service(String),
+    /// Request rejected at admission control (unknown tenant, `k` larger
+    /// than the tenant's current ground set) — distinct from [`Error::Service`]
+    /// so clients can tell a bad request from a saturated or dying service.
+    Rejected(String),
 }
 
 impl fmt::Display for Error {
@@ -40,6 +44,7 @@ impl fmt::Display for Error {
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Rejected(m) => write!(f, "request rejected: {m}"),
         }
     }
 }
@@ -89,6 +94,8 @@ mod tests {
         assert!(e.to_string().contains("numerical"));
         let e = Error::Parse("bad json".into());
         assert!(e.to_string().contains("parse"));
+        let e = Error::Rejected("k=9 > ground set 4".into());
+        assert!(e.to_string().contains("rejected"));
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //!   Thm. 3.3 — the `N×N` Θ is never materialized) /
 //!   `O(Nκ² + N^{3/2})` stochastic time,
 //! - the Picard, Joint-Picard and EM baselines the paper compares against,
-//! - a serving coordinator (diverse-recommendation service) and learning
-//!   orchestrator on top,
+//! - a multi-tenant serving coordinator (diverse-recommendation service
+//!   over a registry of named kernels with epoch-published hot swaps) and
+//!   learning orchestrator on top,
 //! - a PJRT runtime that executes JAX/Pallas-authored, AOT-lowered HLO
 //!   artifacts for the contraction hot paths.
 //!
@@ -60,8 +61,12 @@
 //! [`dpp::SampleScratch`]; [`dpp::Sampler::sample_batch`] fans draws across
 //! threads with one deterministic RNG stream per draw, so results are
 //! reproducible regardless of thread count. The serving stack
-//! ([`coordinator`]) reuses one scratch per worker and coalesces same-`k`
-//! requests through [`dpp::Sampler::sample_k_many`].
+//! ([`coordinator`]) is multi-tenant: a [`coordinator::KernelRegistry`]
+//! publishes generation-stamped epochs (kernel + cached eigendecomposition
+//! + sampler) that readers grab with an `Arc` clone — hot swaps and LRU
+//! eviction never block the draw path — while workers reuse one scratch
+//! each and coalesce `(tenant, k)` request groups through
+//! [`dpp::Sampler::sample_k_many`].
 //!
 //! See `README.md` for the architecture tour and quickstart,
 //! `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the

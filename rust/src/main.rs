@@ -28,12 +28,18 @@ COMMANDS:
   figures  --fig 1a|1b|1c|2 | --table 1|2   [--scale small|paper] [--seed S]
   learn    --algo picard|krk|krk-stochastic|joint|em --data FILE.kds
            [--n1 N --n2 N] [--iters I] [--step A] [--tol T] [--out PREFIX]
-  sample   --kernel PREFIX [--k K] [--count C] [--seed S]
+  sample   --kernel PREFIX [--tenant NAME] [--k K] [--count C] [--seed S]
   serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
-           [--learn-live]
+           [--config FILE.json] [--tenants T] [--tenant NAME] [--learn-live]
   datagen  --kind synthetic|genes|registry --out FILE.kds [--n1 N --n2 N]
            [--count C] [--seed S]
   info
+
+Multi-tenant serving: --config declares named tenants + the LRU epoch
+bound (see configs/service.json); --tenants T provisions T extra synthetic
+market tenants; --tenant NAME pins the request trace (and the --learn-live
+publish target) to one tenant instead of round-robining over all of them.
+For `sample`, --tenant NAME loads the kernel saved under PREFIX.NAME.
 ";
 
 fn main() {
@@ -254,7 +260,14 @@ fn load_kernel(prefix: &str) -> Result<Kernel> {
 
 fn cmd_sample(args: &Args) -> Result<()> {
     let prefix = args.require_str("kernel")?;
-    let kernel = load_kernel(prefix)?;
+    // A multi-tenant deployment saves one kernel per tenant under
+    // PREFIX.TENANT (see `learn --out`); --tenant selects which to draw
+    // from.
+    let prefix = match args.str_flag("tenant") {
+        Some(tenant) => format!("{prefix}.{tenant}"),
+        None => prefix.to_string(),
+    };
+    let kernel = load_kernel(&prefix)?;
     let k: usize = args.get_or("k", 0)?;
     let count: usize = args.get_or("count", 5)?;
     let seed: u64 = args.get_or("seed", 0)?;
@@ -280,34 +293,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests: usize = args.get_or("requests", 2000)?;
     let rate: f64 = args.get_or("rate", 500.0)?;
     let seed: u64 = args.get_or("seed", 2016)?;
-    let mut cfg = ServiceConfig::default();
+    let mut cfg = match args.str_flag("config") {
+        Some(path) => ServiceConfig::load(Path::new(path))?,
+        None => ServiceConfig::default(),
+    };
     if let Some(w) = args.get_opt::<usize>("workers")? {
         cfg.workers = w.max(1);
     }
+    // --tenants T provisions T extra synthetic market tenants on top of
+    // the default one and anything the config file declares.
+    let extra_tenants: usize = args.get_or("tenants", 0)?;
+    for t in 0..extra_tenants {
+        cfg.tenants.push(krondpp::config::TenantSpec {
+            name: format!("market-{t}"),
+            n1,
+            n2,
+            seed: seed ^ (t as u64 + 1),
+        });
+    }
     let mut rng = Rng::new(seed);
     let truth = krondpp::data::paper_truth_kernel(n1, n2, &mut rng);
+    let svc = std::sync::Arc::new(DppService::start(&truth, &cfg, seed)?);
     println!(
-        "starting service: N={} workers={} max_batch={}",
+        "starting service: N={} workers={} max_batch={} tenants={:?} (max_resident_epochs={})",
         n1 * n2,
         cfg.workers,
-        cfg.max_batch
+        cfg.max_batch,
+        svc.registry().tenant_names(),
+        cfg.max_resident_epochs,
     );
-    let svc = std::sync::Arc::new(DppService::start(&truth, &cfg, seed)?);
+    // The trace targets one pinned tenant (--tenant) or round-robins all.
+    let targets: Vec<krondpp::coordinator::TenantId> = match args.str_flag("tenant") {
+        Some(name) => vec![svc.tenant(name)?],
+        None => svc
+            .registry()
+            .tenant_names()
+            .iter()
+            .map(|n| svc.tenant(n))
+            .collect::<Result<Vec<_>>>()?,
+    };
 
-    // Optional live learning job feeding kernel refreshes.
+    // Optional live learning job publishing kernel refreshes to the first
+    // target tenant.
     let job = if args.switch("learn-live") {
         let data =
             krondpp::data::sample_training_set(&truth, 60, (n1 / 2).max(2), n1 + 2, &mut rng)?;
         let l1 = init::paper_subkernel(n1, &mut rng);
         let l2 = init::paper_subkernel(n2, &mut rng);
         let learner = krondpp::learn::KrkPicard::new(l1, l2, 1.0)?;
-        println!("live learning job started (KRK-Picard, kernel hot-swap per iteration)");
-        Some(krondpp::coordinator::LearningJob::spawn(
+        println!(
+            "live learning job started (KRK-Picard, epoch publish per iteration, target tenant id {:?})",
+            targets[0]
+        );
+        Some(krondpp::coordinator::LearningJob::spawn_into(
             Box::new(learner),
             data,
             10,
             0.0,
             Some(std::sync::Arc::clone(&svc)),
+            targets[0],
         ))
     } else {
         None
@@ -323,14 +367,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace = krondpp::data::workload::generate(&spec, &mut rng);
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(trace.len());
-    for req in &trace {
+    for (i, req) in trace.iter().enumerate() {
         let target = req.at;
         while t0.elapsed() < target {
             std::thread::yield_now();
         }
-        match svc.submit(krondpp::coordinator::SampleRequest { k: req.k }) {
+        let tenant = targets[i % targets.len()];
+        match svc.submit(krondpp::coordinator::SampleRequest::for_tenant(tenant, req.k)) {
             Ok(t) => tickets.push(t),
-            Err(_) => {} // rejected by backpressure; counted in metrics
+            Err(_) => {} // rejected (backpressure/admission); in metrics
         }
     }
     let mut ok = 0usize;
@@ -341,7 +386,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("completed {ok}/{requests} in {wall:.2}s ({:.0} req/s)", ok as f64 / wall);
-    println!("{}", svc.metrics().report());
+    println!("{}", svc.report());
     if let Some(job) = job {
         job.cancel();
         let history = job.join()?;

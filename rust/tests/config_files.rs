@@ -35,4 +35,10 @@ fn service_config_parses() {
     assert_eq!(cfg.max_batch, 32);
     assert!(cfg.workers >= 1);
     assert_eq!(cfg.queue_capacity, 1024);
+    // Multi-tenant section: bounded residency + declared tenants.
+    assert_eq!(cfg.max_resident_epochs, 8);
+    assert_eq!(cfg.tenants.len(), 2);
+    assert_eq!(cfg.tenants[0].name, "market-eu");
+    assert_eq!(cfg.tenants[1].name, "market-us");
+    assert!(cfg.tenants.iter().all(|t| t.n1 > 0 && t.n2 > 0));
 }

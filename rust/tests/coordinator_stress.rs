@@ -1,13 +1,14 @@
 //! Coordinator integration under load and failure injection: concurrent
-//! clients, hot-swaps mid-flight, backpressure accounting, and
-//! metrics-vs-observed consistency.
+//! clients, multi-tenant epoch hot-swaps mid-flight, LRU eviction + lazy
+//! rebuild round-trips, backpressure accounting, and metrics-vs-observed
+//! consistency.
 
 use krondpp::config::ServiceConfig;
 use krondpp::coordinator::{DppService, LearningJob, SampleRequest};
 use krondpp::data;
 use krondpp::learn::init;
 use krondpp::rng::Rng;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 fn kernel(n1: usize, n2: usize, seed: u64) -> krondpp::dpp::Kernel {
@@ -22,6 +23,7 @@ fn many_clients_with_live_hot_swaps() {
         max_batch: 16,
         batch_window_us: 100,
         queue_capacity: 50_000,
+        ..ServiceConfig::default()
     };
     let svc = Arc::new(DppService::start(&kernel(4, 4, 1), &cfg, 2).unwrap());
     let done = Arc::new(AtomicUsize::new(0));
@@ -58,6 +60,115 @@ fn many_clients_with_live_hot_swaps() {
     assert_eq!(m.completed.load(Ordering::Relaxed), m.accepted.load(Ordering::Relaxed));
 }
 
+/// The tentpole's acceptance scenario: continuous submits across two
+/// tenants while both tenants' epochs are republished (including
+/// ground-set-size changes). Every accepted request must complete, with
+/// indices valid for either the pre- or post-swap generation — and epoch
+/// publication must not wedge readers (clients of the *other* tenant keep
+/// completing while a publish's eigendecomposition runs).
+#[test]
+fn hot_swap_under_load_across_tenants() {
+    let cfg = ServiceConfig {
+        workers: 4,
+        max_batch: 16,
+        batch_window_us: 100,
+        queue_capacity: 50_000,
+        ..ServiceConfig::default()
+    };
+    // Tenant a alternates N ∈ {16, 9}; tenant b alternates N ∈ {12, 6}.
+    // Clients request k ≤ 5, valid for every generation of both tenants.
+    let svc = Arc::new(DppService::start(&kernel(4, 4, 1), &cfg, 3).unwrap());
+    let a = svc.tenant("default").unwrap();
+    let b = svc.add_tenant("b", &kernel(3, 4, 2)).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let svc2 = Arc::clone(&svc);
+        let done2 = Arc::clone(&done);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..60usize {
+                let (tenant, bound) = if (t as usize + i) % 2 == 0 { (a, 16) } else { (b, 12) };
+                let k = (t as usize + i) % 5 + 1;
+                let y = svc2.sample_tenant(tenant, k).expect("accepted request failed");
+                assert_eq!(y.len(), k);
+                assert!(
+                    y.iter().all(|&item| item < bound),
+                    "index out of both generations' bounds: {y:?} (tenant bound {bound})"
+                );
+                done2.fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+    }
+    // Swapper: republish both tenants continuously until clients finish.
+    let swapper = {
+        let svc2 = Arc::clone(&svc);
+        let stop2 = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut swaps = 0u64;
+            while !stop2.load(Ordering::SeqCst) {
+                let (na1, na2) = if swaps % 2 == 0 { (3, 3) } else { (4, 4) };
+                let (nb1, nb2) = if swaps % 2 == 0 { (2, 3) } else { (3, 4) };
+                svc2.publish(a, &kernel(na1, na2, 200 + swaps)).unwrap();
+                svc2.publish(b, &kernel(nb1, nb2, 300 + swaps)).unwrap();
+                swaps += 1;
+            }
+            swaps
+        })
+    };
+    for h in handles {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    let swaps = swapper.join().unwrap();
+    assert_eq!(done.load(Ordering::SeqCst), 360);
+    assert!(swaps > 0, "swapper never ran");
+    let m = svc.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), m.accepted.load(Ordering::Relaxed));
+    // Generations advanced on both tenants while serving.
+    let reg = svc.registry();
+    assert_eq!(reg.entry(a).unwrap().generation(), 1 + swaps);
+    assert_eq!(reg.entry(b).unwrap().generation(), 1 + swaps);
+    // Per-tenant accounting: both tenants saw traffic, and the per-tenant
+    // completion counters sum to the global one.
+    let ca = reg.entry(a).unwrap().metrics().completed.load(Ordering::Relaxed);
+    let cb = reg.entry(b).unwrap().metrics().completed.load(Ordering::Relaxed);
+    assert_eq!(ca, 180);
+    assert_eq!(cb, 180);
+}
+
+/// LRU bound 1 with two live tenants: every request thrashes the resident
+/// slot, so epochs are continually evicted and lazily rebuilt — and every
+/// request still completes with valid indices and unchanged generations.
+#[test]
+fn eviction_and_lazy_rebuild_round_trips() {
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window_us: 50,
+        queue_capacity: 10_000,
+        max_resident_epochs: 1,
+        ..ServiceConfig::default()
+    };
+    let svc = DppService::start(&kernel(3, 3, 5), &cfg, 6).unwrap();
+    let a = svc.tenant("default").unwrap();
+    let b = svc.add_tenant("b", &kernel(2, 3, 7)).unwrap();
+    for i in 0..30usize {
+        let (tenant, bound) = if i % 2 == 0 { (a, 9) } else { (b, 6) };
+        let y = svc.sample_tenant(tenant, 2).unwrap();
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|&item| item < bound));
+    }
+    let reg = svc.registry();
+    assert!(reg.resident_epochs() <= 1, "LRU bound violated");
+    assert!(reg.evictions() > 0, "bound 1 with 2 tenants must evict");
+    assert!(reg.rebuilds() > 0, "cold tenants must lazily rebuild");
+    // Rebuilds must not masquerade as publishes: generation is untouched.
+    assert_eq!(reg.entry(a).unwrap().generation(), 1);
+    assert_eq!(reg.entry(b).unwrap().generation(), 1);
+    svc.shutdown();
+}
+
 #[test]
 fn backpressure_accounting_exact() {
     let cfg = ServiceConfig {
@@ -65,13 +176,14 @@ fn backpressure_accounting_exact() {
         max_batch: 1,
         batch_window_us: 0,
         queue_capacity: 4,
+        ..ServiceConfig::default()
     };
     let svc = DppService::start(&kernel(3, 3, 3), &cfg, 4).unwrap();
     let mut accepted = 0u64;
     let mut rejected = 0u64;
     let mut tickets = Vec::new();
     for _ in 0..500 {
-        match svc.submit(SampleRequest { k: 2 }) {
+        match svc.submit(SampleRequest::new(2)) {
             Ok(t) => {
                 accepted += 1;
                 tickets.push(t);
@@ -86,6 +198,34 @@ fn backpressure_accounting_exact() {
     assert_eq!(m.accepted.load(Ordering::Relaxed), accepted);
     assert_eq!(m.rejected.load(Ordering::Relaxed), rejected);
     assert_eq!(m.completed.load(Ordering::Relaxed), accepted);
+    // Backpressure is not admission rejection.
+    assert_eq!(m.rejected_invalid.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn invalid_requests_fail_fast_without_queue_slots() {
+    let cfg = ServiceConfig {
+        workers: 1,
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_capacity: 16,
+        ..ServiceConfig::default()
+    };
+    let svc = DppService::start(&kernel(2, 2, 9), &cfg, 10).unwrap();
+    // k > N: distinct error class, counted as invalid, never queued.
+    for _ in 0..5 {
+        match svc.sample(100) {
+            Err(krondpp::Error::Rejected(_)) => {}
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+    let m = svc.metrics();
+    assert_eq!(m.rejected_invalid.load(Ordering::Relaxed), 5);
+    assert_eq!(m.accepted.load(Ordering::Relaxed), 0);
+    assert_eq!(m.rejected.load(Ordering::Relaxed), 0);
+    // Valid work still flows afterwards.
+    assert_eq!(svc.sample(3).unwrap().len(), 3);
     svc.shutdown();
 }
 
@@ -96,6 +236,7 @@ fn learning_job_and_serving_share_the_system() {
         max_batch: 8,
         batch_window_us: 100,
         queue_capacity: 10_000,
+        ..ServiceConfig::default()
     };
     let truth = kernel(3, 3, 5);
     let svc = Arc::new(DppService::start(&truth, &cfg, 6).unwrap());
@@ -132,6 +273,7 @@ fn service_rng_streams_give_distinct_samples() {
         max_batch: 1,
         batch_window_us: 0,
         queue_capacity: 10_000,
+        ..ServiceConfig::default()
     };
     let svc = DppService::start(&kernel(4, 4, 8), &cfg, 9).unwrap();
     let mut samples = Vec::new();

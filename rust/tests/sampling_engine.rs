@@ -100,6 +100,7 @@ fn service_under_batched_engine_preserves_contract() {
         max_batch: 8,
         batch_window_us: 300,
         queue_capacity: 10_000,
+        ..ServiceConfig::default()
     };
     let svc = DppService::start(&kernel(4, 4, 5), &cfg, 17).unwrap();
     for round in 0..30 {
