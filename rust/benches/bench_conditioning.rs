@@ -1,0 +1,108 @@
+//! Conditional-inference benches: conditioned-draw throughput and setup
+//! cost as the forced include set `|A|` grows, plus the factored-vs-dense
+//! marginal-diagonal sweep (the `O(N·(N₁+N₂))` two-GEMM path against the
+//! `O(N³)` dense `K = L(L+I)⁻¹` oracle).
+//!
+//! Writes `BENCH_conditioning.json` (see `bench_util::Report`) so CI can
+//! track the conditioning trajectory per commit. Honors the smoke-mode
+//! env vars: `KRONDPP_BENCH_BUDGET_MS` (per-case budget) and
+//! `KRONDPP_BENCH_MAX_N` (catalog cap; the dense sweep additionally skips
+//! sizes whose `O(N³)` oracle would dwarf the budget).
+
+use krondpp::bench_util::{bench_max_n, black_box, section, Bencher, Report};
+use krondpp::data;
+use krondpp::dpp::{
+    ConditionScratch, ConditionedSampler, Constraint, MarginalScratch, SampleScratch, Sampler,
+};
+use krondpp::rng::Rng;
+
+fn main() {
+    let b = Bencher { min_iters: 2, ..Default::default() };
+    let max_n = bench_max_n();
+    let mut report = Report::new();
+
+    section("conditioned-draw throughput vs |A| (Kron2, fixed |B| = 8)");
+    {
+        let side = [32usize, 16, 8, 4].into_iter().find(|s| s * s <= max_n).unwrap_or(4);
+        let n = side * side;
+        let mut rng = Rng::new(2016);
+        let kernel = data::paper_truth_kernel(side, side, &mut rng);
+        println!("catalog N = {n}");
+        let exclude: Vec<usize> = (0..8.min(n / 4)).map(|i| n - 1 - 2 * i).collect();
+        let mut cond_scratch = ConditionScratch::new();
+        let mut scratch = SampleScratch::new();
+        for a_size in [0usize, 1, 2, 4, 8] {
+            if a_size >= n / 4 {
+                continue;
+            }
+            let include: Vec<usize> = (0..a_size).map(|i| 3 * i).collect();
+            let constraint = Constraint::new(include, exclude.clone()).unwrap();
+            let setup = b.run(&format!("setup |A|={a_size} (N={n})"), || {
+                black_box(
+                    ConditionedSampler::new_with_scratch(
+                        &kernel,
+                        constraint.clone(),
+                        &mut cond_scratch,
+                    )
+                    .unwrap(),
+                );
+            });
+            let cs =
+                ConditionedSampler::new_with_scratch(&kernel, constraint, &mut cond_scratch)
+                    .unwrap();
+            let mut draw_rng = Rng::new(7);
+            let mut out = Vec::new();
+            let draws_per_iter = 16usize;
+            let draw = b.run(&format!("draw  |A|={a_size} (N={n}, 16 draws)"), || {
+                for _ in 0..draws_per_iter {
+                    cs.sample_into(&mut draw_rng, &mut scratch, &mut out);
+                }
+                black_box(&out);
+            });
+            let draws_per_s = draws_per_iter as f64 / draw.secs();
+            println!("  |A|={a_size}: {draws_per_s:.0} conditioned draws/s");
+            report.case(&setup, &[("a_size", a_size as f64), ("n", n as f64)]);
+            report.case(&draw, &[
+                ("a_size", a_size as f64),
+                ("n", n as f64),
+                ("draws_per_s", draws_per_s),
+            ]);
+        }
+    }
+
+    section("factored vs dense marginal diagonal (all N inclusion probabilities)");
+    {
+        let mut mscratch = MarginalScratch::new();
+        let mut diag = Vec::new();
+        for side in [16usize, 32, 64] {
+            let n = side * side;
+            if n > max_n {
+                continue;
+            }
+            let mut rng = Rng::new(side as u64);
+            let kernel = data::paper_truth_kernel(side, side, &mut rng);
+            let sampler = Sampler::new(&kernel).unwrap();
+            let fact = b.run(&format!("factored diag N={n}"), || {
+                sampler.eigen().inclusion_probabilities_into(&mut diag, &mut mscratch);
+                black_box(&diag);
+            });
+            report.case(&fact, &[("n", n as f64)]);
+            // The dense oracle inverts (L+I): O(N³). Keep it to sizes the
+            // smoke budget tolerates.
+            if n <= 1024 {
+                let dense = b.run(&format!("dense    diag N={n}"), || {
+                    black_box(kernel.marginal_kernel().unwrap());
+                });
+                report.case(&dense, &[("n", n as f64)]);
+                let speedup = dense.secs() / fact.secs();
+                println!("  N={n}: factored is {speedup:.0}x faster than dense");
+                report.derived(&format!("factored_vs_dense_diag_speedup_n{n}"), speedup);
+            }
+        }
+    }
+
+    report
+        .write("conditioning", "BENCH_conditioning.json")
+        .expect("write BENCH_conditioning.json");
+    println!("\nwrote BENCH_conditioning.json");
+}

@@ -24,7 +24,7 @@ fn drive(svc: &Arc<DppService>, requests: usize, k: usize) -> (f64, f64, f64) {
 /// (req/s, p50 ms, p95 ms) from the service's latency histogram.
 fn drive_reqs(svc: &Arc<DppService>, reqs: &[SampleRequest]) -> (f64, f64, f64) {
     let t0 = Instant::now();
-    let tickets: Vec<_> = reqs.iter().map(|&r| svc.submit(r).unwrap()).collect();
+    let tickets: Vec<_> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
     for t in tickets {
         t.wait().unwrap();
     }

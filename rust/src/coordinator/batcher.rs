@@ -93,11 +93,17 @@ impl<T> BatchQueue<T> {
 ///
 /// The server uses this twice per batch: the pump groups by tenant (so
 /// each tenant-group routes as one unit and per-tenant load is accounted
-/// exactly), and each worker re-groups its tenant batch by `k` so the
-/// batched engine ([`crate::dpp::Sampler::sample_k_many`]) shares the
-/// per-tenant, per-`k` phase-1 elementary-DP table across the whole group
-/// instead of looping single draws. Keys are anything `Ord` — `usize`,
-/// `TenantId`, or `(tenant, k)` tuples.
+/// exactly), and each worker re-groups its tenant batch by
+/// `(k, constraint)` so the batched engine
+/// ([`crate::dpp::Sampler::sample_k_many`]) shares the per-tenant,
+/// per-`k` phase-1 elementary-DP table — and, for conditioned requests,
+/// one whole conditioning setup (Schur assembly + eigendecomposition,
+/// [`crate::dpp::ConditionedSampler`]) — across every job of the same
+/// slate context instead of looping single draws. Keys are anything `Ord`
+/// — `usize`, `TenantId`, or the worker's `(k, fingerprint, constraint)`
+/// triple (constraints are normalized on construction, so equal slate
+/// contexts compare equal; the fingerprint leads so distinct contexts
+/// usually compare on one `u64`).
 pub fn coalesce_by_key<T, K: Ord>(
     items: Vec<T>,
     key: impl Fn(&T) -> K,

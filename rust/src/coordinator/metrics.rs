@@ -116,11 +116,14 @@ impl LatencyHistogram {
 pub struct TenantMetrics {
     /// Requests accepted into the queue for this tenant.
     pub accepted: AtomicU64,
-    /// Requests rejected as invalid (`k` > ground set) — at admission or,
-    /// after a shrinking hot-swap raced the queue, at the worker.
+    /// Requests rejected as invalid (`k` > ground set, unsatisfiable or
+    /// out-of-bounds constraint) — at admission or, after a shrinking
+    /// hot-swap raced the queue, at the worker.
     pub rejected_invalid: AtomicU64,
     /// Requests completed successfully for this tenant.
     pub completed: AtomicU64,
+    /// Completed requests that carried a conditioning constraint.
+    pub conditioned: AtomicU64,
     /// Accepted requests that failed service-side (epoch build error).
     pub failed: AtomicU64,
     /// End-to-end latency of this tenant's requests.
@@ -135,10 +138,11 @@ impl TenantMetrics {
     /// One-line per-tenant summary for reports.
     pub fn summary(&self) -> String {
         format!(
-            "accepted={} rejected_invalid={} completed={} failed={} latency: {}",
+            "accepted={} rejected_invalid={} completed={} conditioned={} failed={} latency: {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.conditioned.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.latency.summary(),
         )
@@ -159,6 +163,13 @@ pub struct ServiceMetrics {
     pub rejected_invalid: AtomicU64,
     /// Requests completed successfully.
     pub completed: AtomicU64,
+    /// Completed requests that carried a conditioning constraint.
+    pub conditioned: AtomicU64,
+    /// Conditioning setups performed by workers (Schur assembly + `Lᶜ`
+    /// eigendecomposition). `conditioned / conditioning_setups` is the
+    /// slate-context sharing ratio the `(tenant, k, constraint)`
+    /// coalescing buys.
+    pub conditioning_setups: AtomicU64,
     /// Accepted requests that failed service-side (epoch build error).
     /// Invariant: every accepted request ends in exactly one of
     /// `completed`, `failed`, or (worker-side) `rejected_invalid`.
@@ -188,11 +199,14 @@ impl ServiceMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "accepted={} rejected={} rejected_invalid={} completed={} failed={} batches={} mean_batch={:.2}\n  latency: {}\n  queue:   {}",
+            "accepted={} rejected={} rejected_invalid={} completed={} conditioned={} \
+             conditioning_setups={} failed={} batches={} mean_batch={:.2}\n  latency: {}\n  queue:   {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.conditioned.load(Ordering::Relaxed),
+            self.conditioning_setups.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),

@@ -7,9 +7,14 @@
 //!   resident eigendecompositions and lazy rebuild for cold tenants.
 //! - [`server`]: the sampling service (admission control → request queue
 //!   → dynamic batcher → tenant-grouped least-loaded dispatch → exact DPP
-//!   samples from the tenant's current epoch).
+//!   samples from the tenant's current epoch), constraint-aware end to
+//!   end: requests may carry a [`crate::dpp::Constraint`]
+//!   (`A ⊆ Y, B ∩ Y = ∅`), validated at admission and served through a
+//!   per-group conditioning setup; epochs cache the factored
+//!   marginal-diagonal table for instant scoring
+//!   ([`server::DppService::marginals`]).
 //! - [`batcher`]: the two-trigger (size/age) batch policy plus the
-//!   `(tenant, k)` coalescer, property-tested.
+//!   `(tenant, k, constraint)` coalescer, property-tested.
 //! - [`router`]: job-weighted least-loaded work routing.
 //! - [`jobs`]: background learning jobs publishing refreshed kernels to
 //!   their target tenant.

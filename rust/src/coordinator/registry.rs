@@ -30,7 +30,7 @@
 //! batched engine's determinism guarantees are preserved.
 
 use crate::coordinator::metrics::TenantMetrics;
-use crate::dpp::{Kernel, SampleScratch, Sampler};
+use crate::dpp::{Kernel, MarginalScratch, SampleScratch, Sampler};
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -54,11 +54,12 @@ impl TenantId {
     }
 }
 
-/// One published serving state of a tenant: the kernel's cached
-/// eigendecomposition wrapped in a ready [`Sampler`], stamped with the
-/// generation that produced it. Immutable once published; shared by `Arc`
-/// clone. A draw that started on generation `g` finishes on generation `g`
-/// even if `g+1` is published mid-draw.
+/// One published serving state of a tenant: the kernel, its cached
+/// eigendecomposition wrapped in a ready [`Sampler`], and the factored
+/// marginal-diagonal table, stamped with the generation that produced
+/// them. Immutable once published; shared by `Arc` clone. A draw that
+/// started on generation `g` finishes on generation `g` even if `g+1` is
+/// published mid-draw.
 pub struct SamplerEpoch {
     /// Owning tenant.
     pub tenant: TenantId,
@@ -66,8 +67,26 @@ pub struct SamplerEpoch {
     pub name: String,
     /// Monotone per-tenant publication counter (1 = initial kernel).
     pub generation: u64,
+    /// The epoch's source kernel (factored: `O(N₁²+N₂²)` to keep) — what
+    /// conditioned requests gather their Schur blocks from, pinned to the
+    /// epoch so a hot swap mid-draw can't mix generations.
+    pub kernel: Kernel,
     /// Ready sampler over the epoch's cached eigendecomposition.
     pub sampler: Sampler,
+    /// Cached inclusion probabilities `P(i ∈ Y) = K_ii` for all `N`
+    /// items, computed once per publish by the factored
+    /// `O(N·(N₁+N₂))` path
+    /// ([`crate::dpp::KernelEigen::inclusion_probabilities_into`]) — the
+    /// instant "relevance × diversity" scoring table; never a dense `K`.
+    /// `Arc`-wrapped so scoring endpoints hand it out without copying.
+    pub marginal_diag: Arc<Vec<f64>>,
+}
+
+impl SamplerEpoch {
+    /// The cached factored marginal-diagonal table.
+    pub fn inclusion_probabilities(&self) -> &[f64] {
+        &self.marginal_diag
+    }
 }
 
 /// Mutable per-tenant state behind the per-tenant `RwLock`: the source
@@ -155,6 +174,10 @@ pub struct KernelRegistry {
     /// builders fall back to a fresh scratch rather than contending
     /// (see `build_sampler`).
     swap_scratch: Mutex<SampleScratch>,
+    /// Companion workspace for the epoch marginal-diagonal build (squared
+    /// eigenvector matrices, weight grid, GEMM packs) — same
+    /// writer-side-only, try-lock-or-fresh discipline as `swap_scratch`.
+    marginal_scratch: Mutex<MarginalScratch>,
     evictions: AtomicU64,
     rebuilds: AtomicU64,
     publishes: AtomicU64,
@@ -168,6 +191,7 @@ impl KernelRegistry {
             max_resident: max_resident_epochs,
             clock: AtomicU64::new(0),
             swap_scratch: Mutex::new(SampleScratch::new()),
+            marginal_scratch: Mutex::new(MarginalScratch::new()),
             evictions: AtomicU64::new(0),
             rebuilds: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
@@ -179,7 +203,7 @@ impl KernelRegistry {
     pub fn add_tenant(&self, name: &str, kernel: &Kernel) -> Result<TenantId> {
         // Eigendecompose before taking the registry lock: tenant creation
         // never stalls readers of other tenants.
-        let sampler = self.build_sampler(kernel)?;
+        let (sampler, marginal_diag) = self.build_parts(kernel)?;
         let touch = self.tick();
         let mut tenants = self.tenants.write().unwrap();
         if tenants.names.contains_key(name) {
@@ -192,7 +216,9 @@ impl KernelRegistry {
             tenant: id,
             name: name.to_string(),
             generation: 1,
+            kernel: kernel.clone(),
             sampler,
+            marginal_diag,
         });
         tenants.list.push(Arc::new(TenantEntry {
             name: name.to_string(),
@@ -272,12 +298,14 @@ impl KernelRegistry {
                     None => (slot.kernel.clone(), slot.generation),
                 }
             };
-            let sampler = self.build_sampler(&kernel)?;
+            let (sampler, marginal_diag) = self.build_parts(&kernel)?;
             let epoch = Arc::new(SamplerEpoch {
                 tenant: entry.id,
                 name: entry.name.clone(),
                 generation,
+                kernel: kernel.clone(),
                 sampler,
+                marginal_diag,
             });
             let installed = {
                 let mut slot = entry.slot.write().unwrap();
@@ -312,7 +340,7 @@ impl KernelRegistry {
         // refreshed must not look like an eviction victim to a concurrent
         // enforce_budget while (or right after) its new epoch is built.
         entry.last_touch.store(self.tick(), Ordering::Relaxed);
-        let sampler = self.build_sampler(kernel)?;
+        let (sampler, marginal_diag) = self.build_parts(kernel)?;
         let generation = {
             let mut slot = entry.slot.write().unwrap();
             slot.generation += 1;
@@ -322,7 +350,9 @@ impl KernelRegistry {
                 tenant: id,
                 name: entry.name.clone(),
                 generation: slot.generation,
+                kernel: kernel.clone(),
                 sampler,
+                marginal_diag,
             }));
             slot.generation
         };
@@ -385,7 +415,8 @@ impl KernelRegistry {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Eigendecompose `kernel`, preferably through the shared swap
+    /// Eigendecompose `kernel` and derive the epoch's factored
+    /// marginal-diagonal table, preferably through the shared swap
     /// scratch. This is the only heavy step of a publish/rebuild, and it
     /// holds no lock any reader ever takes. The scratch is an allocation
     /// optimization, not a serialization point: if another publish or
@@ -393,11 +424,24 @@ impl KernelRegistry {
     /// build with a fresh local scratch instead of queueing this tenant
     /// behind that tenant's work — so a cold tenant's lazy rebuild never
     /// waits on an unrelated tenant's publish.
-    fn build_sampler(&self, kernel: &Kernel) -> Result<Sampler> {
-        match self.swap_scratch.try_lock() {
+    fn build_parts(&self, kernel: &Kernel) -> Result<(Sampler, Arc<Vec<f64>>)> {
+        let sampler = match self.swap_scratch.try_lock() {
             Ok(mut scratch) => Sampler::new_with_scratch(kernel, &mut scratch),
             Err(_) => Sampler::new_with_scratch(kernel, &mut SampleScratch::new()),
+        }?;
+        // O(N·(N₁+N₂)) factored diagonal — cheap next to the
+        // eigendecomposition it rides on, cached for the epoch's lifetime
+        // and built through the reused writer-side scratch.
+        let mut diag = Vec::new();
+        match self.marginal_scratch.try_lock() {
+            Ok(mut scratch) => {
+                sampler.eigen().inclusion_probabilities_into(&mut diag, &mut scratch)
+            }
+            Err(_) => sampler
+                .eigen()
+                .inclusion_probabilities_into(&mut diag, &mut MarginalScratch::new()),
         }
+        Ok((sampler, Arc::new(diag)))
     }
 
     /// Evict least-recently-touched epochs until the resident count is
@@ -537,6 +581,33 @@ mod tests {
         assert!(eb.sampler.sample_k(2, &mut rng).iter().all(|&i| i < 6));
         assert_eq!(reg.rebuilds(), 2);
         assert!(reg.report().contains("evictions=3"));
+    }
+
+    #[test]
+    fn epoch_caches_kernel_and_factored_marginal_table() {
+        let reg = KernelRegistry::new(0);
+        let kernel = test_kernel(3, 4, 12);
+        let t = reg.add_tenant("t", &kernel).unwrap();
+        let epoch = reg.acquire(t).unwrap();
+        assert_eq!(epoch.kernel.n(), 12);
+        // The cached table is the factored diagonal of the epoch's kernel.
+        let want = kernel.eigen().unwrap().inclusion_probabilities();
+        assert_eq!(epoch.inclusion_probabilities().len(), 12);
+        for (a, b) in epoch.inclusion_probabilities().iter().zip(&want) {
+            assert!((a - b).abs() < 1e-14);
+            assert!((0.0..=1.0).contains(a));
+        }
+        // A publish refreshes both kernel and table atomically.
+        let next = test_kernel(2, 3, 13);
+        reg.publish(t, &next).unwrap();
+        let epoch2 = reg.acquire(t).unwrap();
+        assert_eq!(epoch2.kernel.n(), 6);
+        let want2 = next.eigen().unwrap().inclusion_probabilities();
+        for (a, b) in epoch2.inclusion_probabilities().iter().zip(&want2) {
+            assert!((a - b).abs() < 1e-14);
+        }
+        // The held pre-publish epoch keeps its own kernel and table.
+        assert_eq!(epoch.kernel.n(), 12);
     }
 
     #[test]

@@ -2,16 +2,22 @@
 //!
 //! This is the production face of KronDPP (the paper's motivating
 //! recommender application): clients submit "give me k diverse items from
-//! catalog T" requests; the service validates them at admission
-//! ([`DppService::submit`] fails fast on unknown tenants and oversized
-//! `k`), batches them ([`super::batcher`]), routes each tenant-group to
-//! the least-loaded worker ([`super::router`]), and each worker draws
-//! exact DPP/k-DPP samples from the tenant's current
-//! [`super::registry::SamplerEpoch`] — an `Arc`-published kernel +
-//! cached eigendecomposition grabbed from the [`KernelRegistry`] without
-//! ever blocking on writers. Learning jobs ([`super::jobs`]) hot-swap
-//! refreshed kernels into their target tenant while requests keep flowing:
-//! in-flight draws finish on the epoch they started with.
+//! catalog T" requests — optionally constrained ("the user already picked
+//! items A, never show items B": a [`Constraint`] rides on the
+//! [`SampleRequest`]); the service validates them at admission
+//! ([`DppService::submit`] fails fast on unknown tenants, oversized `k`
+//! and unsatisfiable constraints), batches them ([`super::batcher`]),
+//! routes each tenant-group to the least-loaded worker
+//! ([`super::router`]), and each worker draws exact DPP/k-DPP samples
+//! from the tenant's current [`super::registry::SamplerEpoch`] — an
+//! `Arc`-published kernel + cached eigendecomposition + factored
+//! marginal-diagonal table grabbed from the [`KernelRegistry`] without
+//! ever blocking on writers. Conditioned jobs coalesce by
+//! `(tenant, k, constraint)` so repeated slate contexts share one
+//! conditioning setup ([`crate::dpp::ConditionedSampler`], built through
+//! per-worker [`ConditionScratch`]es). Learning jobs ([`super::jobs`])
+//! hot-swap refreshed kernels into their target tenant while requests
+//! keep flowing: in-flight draws finish on the epoch they started with.
 //!
 //! Threading: one pump thread runs the batch policy and splits each batch
 //! by tenant; `workers` threads consume per-worker channels; requests
@@ -27,7 +33,7 @@ use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pend
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::coordinator::registry::{KernelRegistry, TenantEntry, TenantId};
 use crate::coordinator::router::WorkerLoad;
-use crate::dpp::{Kernel, SampleScratch};
+use crate::dpp::{ConditionScratch, ConditionedSampler, Constraint, Kernel, SampleScratch};
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -36,23 +42,35 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// One sampling request against a tenant: `k = 0` draws an unconstrained
-/// DPP sample, `k > 0` a k-DPP sample of exactly that size.
-#[derive(Clone, Copy, Debug)]
+/// DPP sample, `k > 0` a k-DPP sample of exactly that size (`k` counts
+/// any forced include items). An optional [`Constraint`] conditions the
+/// draw on `A ⊆ Y, B ∩ Y = ∅` — the slate-filling scenario: items the
+/// user already picked, items never to show.
+#[derive(Clone, Debug)]
 pub struct SampleRequest {
     /// Target tenant (resolve names via [`DppService::tenant`]).
     pub tenant: TenantId,
     pub k: usize,
+    /// Optional conditioning constraint; `None` (or an empty constraint,
+    /// normalized away at admission) draws unconditioned samples.
+    pub constraint: Option<Constraint>,
 }
 
 impl SampleRequest {
     /// Request against the default tenant (single-tenant deployments).
     pub fn new(k: usize) -> Self {
-        SampleRequest { tenant: TenantId::DEFAULT, k }
+        SampleRequest { tenant: TenantId::DEFAULT, k, constraint: None }
     }
 
     /// Request against a specific tenant.
     pub fn for_tenant(tenant: TenantId, k: usize) -> Self {
-        SampleRequest { tenant, k }
+        SampleRequest { tenant, k, constraint: None }
+    }
+
+    /// Attach a conditioning constraint (builder style).
+    pub fn with_constraint(mut self, constraint: Constraint) -> Self {
+        self.constraint = Some(constraint);
+        self
     }
 }
 
@@ -197,13 +215,14 @@ impl DppService {
     }
 
     /// Submit a request; fails fast on admission errors (unknown tenant,
-    /// `k` larger than the tenant's current ground set — these return
-    /// [`Error::Rejected`] without burning a queue slot) and under
-    /// backpressure.
+    /// `k` larger than the tenant's current ground set, an unsatisfiable
+    /// or out-of-bounds [`Constraint`] — these return [`Error::Rejected`]
+    /// without burning a queue slot) and under backpressure.
     pub fn submit(&self, req: SampleRequest) -> Result<Ticket> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Service("service is shut down".into()));
         }
+        let mut req = req;
         let entry = match self.shared.registry.entry(req.tenant) {
             Ok(e) => e,
             Err(e) => {
@@ -212,14 +231,30 @@ impl DppService {
             }
         };
         let n = entry.n();
-        if req.k > n {
+        let reject = |msg: String| {
             self.shared.metrics.rejected_invalid.fetch_add(1, Ordering::Relaxed);
             entry.metrics().rejected_invalid.fetch_add(1, Ordering::Relaxed);
-            return Err(Error::Rejected(format!(
-                "tenant '{}': requested k={} > ground set {n}",
-                entry.name(),
-                req.k
-            )));
+            Err(Error::Rejected(format!("tenant '{}': {msg}", entry.name())))
+        };
+        if req.k > n {
+            return reject(format!("requested k={} > ground set {n}", req.k));
+        }
+        // Normalize the empty constraint away so workers coalesce it with
+        // plain requests; validate real constraints against the tenant's
+        // current ground set (the slate must fit include/exclude).
+        if req.constraint.as_ref().is_some_and(|c| c.is_empty()) {
+            req.constraint = None;
+        }
+        if let Some(c) = &req.constraint {
+            let check =
+                if req.k > 0 { c.validate_k(req.k, n) } else { c.validate(n) };
+            if let Err(e) = check {
+                let msg = match e {
+                    Error::Invalid(m) => m,
+                    other => other.to_string(),
+                };
+                return reject(msg);
+            }
         }
         let (tx, rx) = mpsc::channel();
         {
@@ -249,6 +284,27 @@ impl DppService {
     /// Convenience: submit against `tenant` and wait.
     pub fn sample_tenant(&self, tenant: TenantId, k: usize) -> Result<Vec<usize>> {
         self.submit(SampleRequest::for_tenant(tenant, k))?.wait()
+    }
+
+    /// Convenience: submit a constrained request against `tenant` and
+    /// wait — "user already picked `constraint.include()`, never show
+    /// `constraint.exclude()`, fill the slate to `k` diverse items".
+    pub fn sample_constrained(
+        &self,
+        tenant: TenantId,
+        k: usize,
+        constraint: Constraint,
+    ) -> Result<Vec<usize>> {
+        self.submit(SampleRequest::for_tenant(tenant, k).with_constraint(constraint))?.wait()
+    }
+
+    /// All `N` inclusion probabilities `P(i ∈ Y) = K_ii` for `tenant`,
+    /// served from the epoch's cached factored marginal-diagonal table —
+    /// no eigen work, no dense `K`, no copy (an `Arc` clone of the
+    /// epoch's table: the "relevance × diversity" scoring endpoint). A
+    /// cold tenant lazily rebuilds its epoch first.
+    pub fn marginals(&self, tenant: TenantId) -> Result<Arc<Vec<f64>>> {
+        Ok(Arc::clone(&self.shared.registry.acquire(tenant)?.marginal_diag))
     }
 
     /// Hot-swap the default tenant's kernel (single-tenant deployments).
@@ -408,9 +464,12 @@ fn worker_loop(
     loads: WorkerLoad,
     rng: &mut Rng,
 ) {
-    // One scratch per worker: every draw this worker ever makes reuses the
-    // same buffers (the batched engine's zero-allocation hot path).
+    // One scratch pair per worker: every draw this worker ever makes
+    // reuses the same sample buffers (the batched engine's
+    // zero-allocation hot path), and every conditioning setup reuses the
+    // same bordered-block/eigensolver buffers.
     let mut scratch = SampleScratch::new();
+    let mut cond_scratch = ConditionScratch::new();
     while let Ok(jobs) = rx.recv() {
         // The pump dispatches single-tenant groups: acquire the tenant's
         // current epoch once for the whole delivery (an `Arc` clone; a
@@ -425,47 +484,167 @@ fn worker_loop(
                 }
             }
             Ok(epoch) => {
-                let sampler = &epoch.sampler;
-                // Coalesce same-k jobs so one phase-1 setup serves the
-                // whole group instead of looping single draws.
-                for (k, group) in coalesce_by_key(jobs, |j| j.req.k) {
-                    if k > sampler.n() {
-                        // Admission raced a shrinking publish; reject late
-                        // with the same distinct error class.
-                        for job in group {
-                            finish(
-                                &shared,
-                                job,
-                                Err(Error::Rejected(format!(
-                                    "tenant '{}': requested k={k} > ground set {} (gen {})",
-                                    entry.name(),
-                                    sampler.n(),
-                                    epoch.generation
-                                ))),
-                            );
-                        }
-                        continue;
-                    }
-                    // Respond per draw (not per group) so coalescing never
-                    // inflates head-of-group latency beyond a single draw.
-                    if k == 0 {
-                        for job in group {
-                            let y = sampler.sample_with_scratch(rng, &mut scratch);
-                            finish(&shared, job, Ok(y));
-                        }
-                    } else {
-                        let n = group.len();
-                        let mut jobs = group.into_iter();
-                        sampler.sample_k_each(k, n, rng, &mut scratch, |y| {
-                            let job = jobs.next().expect("one job per draw");
-                            finish(&shared, job, Ok(y));
-                        });
+                // Coalesce same-(k, constraint) jobs so one phase-1 setup
+                // — and for conditioned groups one whole conditioning
+                // setup (Schur assembly + eigendecomposition) — serves
+                // repeated slate contexts instead of looping single draws.
+                // The constraint fingerprint leads the key so distinct
+                // slate contexts compare on one u64; the full constraint
+                // follows as the exactness tiebreak (a fingerprint
+                // collision can never merge different constraints).
+                for ((k, _fp, constraint), group) in coalesce_by_key(jobs, |j| {
+                    (
+                        j.req.k,
+                        j.req.constraint.as_ref().map(Constraint::fingerprint),
+                        j.req.constraint.clone(),
+                    )
+                }) {
+                    match constraint {
+                        None => serve_plain(&shared, &epoch, k, group, rng, &mut scratch),
+                        Some(c) => serve_conditioned(
+                            &shared,
+                            &epoch,
+                            k,
+                            c,
+                            group,
+                            rng,
+                            &mut scratch,
+                            &mut cond_scratch,
+                        ),
                     }
                 }
             }
         }
         entry.in_flight.fetch_sub(n_jobs, Ordering::SeqCst);
         loads.end_n(w, n_jobs);
+    }
+}
+
+/// Serve one unconstrained `(tenant, k)` group from its epoch.
+fn serve_plain(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    let sampler = &epoch.sampler;
+    if k > sampler.n() {
+        // Admission raced a shrinking publish; reject late with the same
+        // distinct error class.
+        for job in group {
+            finish(
+                shared,
+                job,
+                Err(Error::Rejected(format!(
+                    "tenant '{}': requested k={k} > ground set {} (gen {})",
+                    epoch.name,
+                    sampler.n(),
+                    epoch.generation
+                ))),
+            );
+        }
+        return;
+    }
+    // Respond per draw (not per group) so coalescing never inflates
+    // head-of-group latency beyond a single draw.
+    if k == 0 {
+        for job in group {
+            let y = sampler.sample_with_scratch(rng, scratch);
+            finish(shared, job, Ok(y));
+        }
+    } else {
+        let n = group.len();
+        let mut jobs = group.into_iter();
+        sampler.sample_k_each(k, n, rng, scratch, |y| {
+            let job = jobs.next().expect("one job per draw");
+            finish(shared, job, Ok(y));
+        });
+    }
+}
+
+/// Serve one conditioned `(tenant, k, constraint)` group: one conditioning
+/// setup (counted in `conditioning_setups`) shared by every job in the
+/// group, then per-draw responses like the plain path.
+#[allow(clippy::too_many_arguments)]
+fn serve_conditioned(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Constraint,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+    cond_scratch: &mut ConditionScratch,
+) {
+    let cs = match ConditionedSampler::new_with_scratch(&epoch.kernel, constraint, cond_scratch)
+    {
+        Ok(cs) => cs,
+        Err(e) => {
+            // Out-of-bounds constraint (admission raced a shrinking
+            // publish) or a zero-probability include set surface as
+            // `Invalid`: the request is bad, not the service. Anything
+            // else (e.g. eigensolver non-convergence, also `Numerical`)
+            // is a service fault and counts in `failed`.
+            let (reject, msg) = match e {
+                Error::Invalid(m) => (
+                    true,
+                    format!("tenant '{}' (gen {}): {m}", epoch.name, epoch.generation),
+                ),
+                other => (
+                    false,
+                    format!("tenant '{}': conditioning setup failed: {other}", epoch.name),
+                ),
+            };
+            for job in group {
+                let err = if reject {
+                    Error::Rejected(msg.clone())
+                } else {
+                    Error::Service(msg.clone())
+                };
+                finish(shared, job, Err(err));
+            }
+            return;
+        }
+    };
+    shared.metrics.conditioning_setups.fetch_add(1, Ordering::Relaxed);
+    if k > 0 && !(cs.min_k()..=cs.max_k()).contains(&k) {
+        // Only reachable through a shrinking hot-swap race (admission
+        // validated against the old ground set).
+        for job in group {
+            finish(
+                shared,
+                job,
+                Err(Error::Rejected(format!(
+                    "tenant '{}': constrained k={k} outside [{}, {}] (gen {})",
+                    epoch.name,
+                    cs.min_k(),
+                    cs.max_k(),
+                    epoch.generation
+                ))),
+            );
+        }
+        return;
+    }
+    let count_conditioned = |job: &Job| {
+        shared.metrics.conditioned.fetch_add(1, Ordering::Relaxed);
+        job.entry.metrics().conditioned.fetch_add(1, Ordering::Relaxed);
+    };
+    if k == 0 {
+        for job in group {
+            let y = cs.sample_with_scratch(rng, scratch);
+            count_conditioned(&job);
+            finish(shared, job, Ok(y));
+        }
+    } else {
+        let n = group.len();
+        let mut jobs = group.into_iter();
+        cs.sample_k_each(k, n, rng, scratch, |y| {
+            let job = jobs.next().expect("one job per draw");
+            count_conditioned(&job);
+            finish(shared, job, Ok(y));
+        });
     }
 }
 
@@ -602,6 +781,91 @@ mod tests {
         let e = svc.registry().entry(big).unwrap();
         assert_eq!(e.metrics().completed.load(Ordering::Relaxed), 6);
         assert!(svc.report().contains("tenant big"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn constrained_requests_honor_include_exclude_and_share_setups() {
+        let mut cfg = small_cfg();
+        cfg.max_batch = 16;
+        cfg.batch_window_us = 5_000;
+        cfg.workers = 1;
+        let svc = DppService::start(&test_kernel(3, 4, 20), &cfg, 21).unwrap();
+        let c = Constraint::new(vec![0, 5], vec![3]).unwrap();
+        // One burst of identical slate contexts: the worker coalesces them
+        // into a single conditioning setup.
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| {
+                svc.submit(SampleRequest::new(5).with_constraint(c.clone())).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let y = t.wait().unwrap();
+            assert_eq!(y.len(), 5);
+            assert!(y.contains(&0) && y.contains(&5), "include violated: {y:?}");
+            assert!(!y.contains(&3), "exclude violated: {y:?}");
+            assert!(y.iter().all(|&i| i < 12));
+        }
+        assert_eq!(svc.metrics().conditioned.load(Ordering::Relaxed), 8);
+        // One setup per dispatched batch of this slate context: typically 1
+        // (one burst, one batch), never more than one per request even if
+        // the pump's timing splits the burst.
+        let setups = svc.metrics().conditioning_setups.load(Ordering::Relaxed);
+        assert!(
+            (1..=8).contains(&setups),
+            "8 identical contexts produced {setups} conditioning setups"
+        );
+        let e = svc.registry().entry(TenantId::DEFAULT).unwrap();
+        assert_eq!(e.metrics().conditioned.load(Ordering::Relaxed), 8);
+        assert!(svc.report().contains("conditioned=8"));
+        // An unconstrained and an empty-constraint request still serve.
+        let y = svc.sample(4).unwrap();
+        assert_eq!(y.len(), 4);
+        let y = svc
+            .submit(SampleRequest::new(2).with_constraint(Constraint::none()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(y.len(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rejects_bad_constraints_at_admission() {
+        let svc = DppService::start(&test_kernel(2, 2, 22), &small_cfg(), 23).unwrap();
+        // Out-of-bounds item.
+        let c = Constraint::including(vec![99]).unwrap();
+        match svc.submit(SampleRequest::new(0).with_constraint(c)) {
+            Err(Error::Rejected(m)) => assert!(m.contains("outside ground set"), "{m}"),
+            other => panic!("expected admission rejection, got {other:?}"),
+        }
+        // Slate smaller than the forced include set.
+        let c = Constraint::including(vec![0, 1, 2]).unwrap();
+        match svc.submit(SampleRequest::new(2).with_constraint(c)) {
+            Err(Error::Rejected(m)) => assert!(m.contains("smaller than"), "{m}"),
+            other => panic!("expected admission rejection, got {other:?}"),
+        }
+        // Slate larger than what survives exclusion.
+        let c = Constraint::excluding(vec![0, 1]).unwrap();
+        match svc.submit(SampleRequest::new(3).with_constraint(c)) {
+            Err(Error::Rejected(m)) => assert!(m.contains("surviving exclusion"), "{m}"),
+            other => panic!("expected admission rejection, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().rejected_invalid.load(Ordering::Relaxed), 3);
+        assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn marginals_endpoint_serves_cached_table() {
+        let kernel = test_kernel(3, 3, 24);
+        let svc = DppService::start(&kernel, &small_cfg(), 25).unwrap();
+        let got = svc.marginals(TenantId::DEFAULT).unwrap();
+        let want = kernel.eigen().unwrap().inclusion_probabilities();
+        assert_eq!(got.len(), 9);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-14);
+        }
         svc.shutdown();
     }
 

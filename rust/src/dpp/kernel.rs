@@ -10,10 +10,25 @@
 //!   `O(1)` per entry (never materializing `L`),
 //! - `log det(L + I)` uses sub-spectra (`O(N₁³+N₂³)` instead of `O(N³)`),
 //! - the eigendecomposition factorizes per Cor. 2.2, giving the paper's
-//!   `O(N^{3/2})` (m=2) / `O(N)` (m=3) sampling preprocessing.
+//!   `O(N^{3/2})` (m=2) / `O(N)` (m=3) sampling preprocessing,
+//! - marginal-kernel queries (`P(i ∈ Y) = K_ii`, slate blocks `K_A`) stay
+//!   factored: [`KernelEigen::inclusion_probabilities_into`] produces all
+//!   `N` diagonals of `K = L(L+I)⁻¹` in `O(N·(N₁+N₂))` (m=2) /
+//!   `O(N·(N₁+N₂+N₃))` (m=3) as GEMMs over squared eigenvector matrices
+//!   against the `λ/(1+λ)` grid; [`KernelEigen::marginal_entry`] /
+//!   [`KernelEigen::marginal_block_into`] answer `O(κ²)`-entry slate
+//!   queries without ever materializing the `N×N` `K`
+//!   ([`Kernel::marginal_kernel`] remains as the small-N test oracle).
 
 use crate::error::{Error, Result};
+use crate::linalg::view::{MatMut, MatRef};
 use crate::linalg::{cholesky, eigen::SymEigen, kron, matmul, Matrix};
+
+/// Largest ground set for which [`Kernel::marginal_kernel`] will densify a
+/// *structured* kernel in debug builds. The dense `K` is a test oracle;
+/// production marginal queries go through the factored
+/// [`KernelEigen`] paths, which never allocate an `N×N` intermediate.
+pub const MARGINAL_ORACLE_MAX_N: usize = 4096;
 
 /// A DPP kernel `L`, dense or Kronecker-structured.
 #[derive(Clone, Debug)]
@@ -128,6 +143,76 @@ impl Kernel {
                             dst[c] = l1.get(i1, j1) * l2.get(i2, j2) * l3.get(i3, j3);
                         }
                     }
+                });
+            }
+        }
+    }
+
+    /// Rectangular gather `L[rows, cols]` into a caller-held buffer — the
+    /// conditioning path's bordered-block form of
+    /// [`Kernel::principal_submatrix_into`] (the `L_{A,R}` coupling block
+    /// of the Schur complement). Same discipline: each axis's sub-kernel
+    /// splits are precomputed once per call into thread-local staging
+    /// (allocation-free after warmup), so the `|rows|·|cols|` entry loop
+    /// does no div/mod.
+    pub fn cross_submatrix_into(&self, rows: &[usize], cols: &[usize], out: &mut Matrix) {
+        use std::cell::RefCell;
+        thread_local! {
+            static RSPLIT2: RefCell<Vec<(usize, usize)>> = RefCell::new(Vec::new());
+            static CSPLIT2: RefCell<Vec<(usize, usize)>> = RefCell::new(Vec::new());
+            static RSPLIT3: RefCell<Vec<(usize, usize, usize)>> = RefCell::new(Vec::new());
+            static CSPLIT3: RefCell<Vec<(usize, usize, usize)>> = RefCell::new(Vec::new());
+        }
+        out.resize_zeroed(rows.len(), cols.len());
+        match self {
+            Kernel::Full(l) => {
+                for (a, &i) in rows.iter().enumerate() {
+                    let src = l.row(i);
+                    let dst = out.row_mut(a);
+                    for (b, &j) in cols.iter().enumerate() {
+                        dst[b] = src[j];
+                    }
+                }
+            }
+            Kernel::Kron2(l1, l2) => {
+                let n2 = l2.rows();
+                RSPLIT2.with(|rb| {
+                    CSPLIT2.with(|cb| {
+                        let (mut rs, mut cs) = (rb.borrow_mut(), cb.borrow_mut());
+                        rs.clear();
+                        rs.extend(rows.iter().map(|&i| (i / n2, i % n2)));
+                        cs.clear();
+                        cs.extend(cols.iter().map(|&j| (j / n2, j % n2)));
+                        for (r, &(i1, i2)) in rs.iter().enumerate() {
+                            let dst = out.row_mut(r);
+                            for (c, &(j1, j2)) in cs.iter().enumerate() {
+                                dst[c] = l1.get(i1, j1) * l2.get(i2, j2);
+                            }
+                        }
+                    })
+                });
+            }
+            Kernel::Kron3(l1, l2, l3) => {
+                let n3 = l3.rows();
+                let n23 = l2.rows() * n3;
+                let split = |i: usize| {
+                    let r = i % n23;
+                    (i / n23, r / n3, r % n3)
+                };
+                RSPLIT3.with(|rb| {
+                    CSPLIT3.with(|cb| {
+                        let (mut rs, mut cs) = (rb.borrow_mut(), cb.borrow_mut());
+                        rs.clear();
+                        rs.extend(rows.iter().map(|&i| split(i)));
+                        cs.clear();
+                        cs.extend(cols.iter().map(|&j| split(j)));
+                        for (r, &(i1, i2, i3)) in rs.iter().enumerate() {
+                            let dst = out.row_mut(r);
+                            for (c, &(j1, j2, j3)) in cs.iter().enumerate() {
+                                dst[c] = l1.get(i1, j1) * l2.get(i2, j2) * l3.get(i3, j3);
+                            }
+                        }
+                    })
                 });
             }
         }
@@ -253,9 +338,26 @@ impl Kernel {
         }
     }
 
-    /// Marginal kernel `K = L(L+I)⁻¹` (dense; small N only). For any DPP,
-    /// `P(i ∈ Y) = K_ii`.
+    /// Marginal kernel `K = L(L+I)⁻¹` (`P(i ∈ Y) = K_ii`) — **small-N test
+    /// oracle only**. This materializes the dense `N×N` `L` and inverts
+    /// `L+I`, silently costing `O(N²)` memory and `O(N³)` time even for a
+    /// Kronecker kernel whose whole point is never to form that matrix.
+    /// Production callers that need diagonals or `κ×κ` slate blocks must
+    /// use the factored queries instead:
+    /// [`KernelEigen::inclusion_probabilities_into`] (all `N` diagonals in
+    /// `O(N·(N₁+N₂))`), [`KernelEigen::marginal_entry`] and
+    /// [`KernelEigen::marginal_block_into`]. Debug builds assert a size
+    /// guard ([`MARGINAL_ORACLE_MAX_N`]) on structured kernels to catch
+    /// accidental dense materialization.
     pub fn marginal_kernel(&self) -> Result<Matrix> {
+        if !matches!(self, Kernel::Full(_)) {
+            debug_assert!(
+                self.n() <= MARGINAL_ORACLE_MAX_N,
+                "marginal_kernel would materialize a dense {0}×{0} K for a Kronecker \
+                 kernel; use the factored KernelEigen marginal queries instead",
+                self.n()
+            );
+        }
         let l = self.to_dense();
         let mut li = l.clone();
         li.add_diag_mut(1.0);
@@ -356,11 +458,259 @@ impl EigenVectors {
     }
 }
 
+/// Reusable workspace for the factored marginal queries: squared
+/// eigenvector matrices, the `λ/(1+λ)` weight grid, GEMM staging and pack
+/// buffers. Holding one across repeated queries (the registry's epoch
+/// builds, the benches) keeps the diagonal sweep allocation-free once
+/// capacity suffices.
+#[derive(Default)]
+pub struct MarginalScratch {
+    sq1: Matrix,
+    sq2: Matrix,
+    sq3: Matrix,
+    w: Matrix,
+    t1: Matrix,
+    t2: Matrix,
+    gemm: matmul::GemmScratch,
+}
+
+impl MarginalScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// `λ ↦ λ/(1+λ)` with the same tiny-negative clamp the sampler applies to
+/// round-off in the factored spectrum.
+#[inline]
+fn marginal_weight(lam: f64) -> f64 {
+    let l = lam.max(0.0);
+    l / (1.0 + l)
+}
+
+/// `out[i][t] = p[i][t]²` (resized in place).
+fn square_into(p: &Matrix, out: &mut Matrix) {
+    out.resize_zeroed(p.rows(), p.cols());
+    for (o, &v) in out.as_mut_slice().iter_mut().zip(p.as_slice()) {
+        *o = v * v;
+    }
+}
+
 impl KernelEigen {
     /// Number of eigenpairs.
     pub fn n(&self) -> usize {
         self.values.len()
     }
+
+    /// All `N` inclusion probabilities `P(i ∈ Y) = K_ii` (allocating
+    /// convenience for [`KernelEigen::inclusion_probabilities_into`]).
+    pub fn inclusion_probabilities(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.inclusion_probabilities_into(&mut out, &mut MarginalScratch::new());
+        out
+    }
+
+    /// Write all `N` diagonals of `K = L(L+I)⁻¹` into `out` **without ever
+    /// forming `K`**. Because `K_ii = Σ_t w_t v_t[i]²` with
+    /// `w_t = λ_t/(1+λ_t)` and factored eigenvectors square factor-wise
+    /// (`v_t[i]² = p₁[i₁,t₁]²·p₂[i₂,t₂]²`, Cor. 2.2), the whole diagonal is
+    ///
+    /// ```text
+    /// m = 2:  diag(K) = (P₁∘P₁) · W · (P₂∘P₂)ᵀ          (N₁×N₂ grid)
+    /// m = 3:  one more squared-GEMM pass per i₁ block    (N₂×N₃ grids)
+    /// ```
+    ///
+    /// — two GEMMs over squared eigenvector matrices against the
+    /// `λ/(1+λ)` grid `W`: `O(N·(N₁+N₂))` for m=2, `O(N·(N₁+N₂+N₃))` for
+    /// m=3, versus `O(N³)` for the dense oracle. Item order matches the
+    /// kernel's (`i = i₁·N₂ + i₂`), so `out[i]` is item `i`'s probability.
+    pub fn inclusion_probabilities_into(&self, out: &mut Vec<f64>, s: &mut MarginalScratch) {
+        let n = self.values.len();
+        out.clear();
+        out.resize(n, 0.0);
+        match &self.vectors {
+            EigenVectors::Dense(p) => {
+                // K_ii = Σ_t w_t P[i,t]² — one O(N) row sweep per item.
+                for (i, o) in out.iter_mut().enumerate() {
+                    let row = p.row(i);
+                    let mut acc = 0.0;
+                    for (t, &v) in row.iter().enumerate() {
+                        acc += marginal_weight(self.values[t]) * v * v;
+                    }
+                    *o = acc;
+                }
+            }
+            EigenVectors::Kron2 { p1, p2 } => {
+                let (n1, n2) = (p1.rows(), p2.rows());
+                square_into(p1, &mut s.sq1);
+                square_into(p2, &mut s.sq2);
+                s.w.resize_zeroed(n1, n2);
+                for (w, &lam) in s.w.as_mut_slice().iter_mut().zip(&self.values) {
+                    *w = marginal_weight(lam);
+                }
+                s.t1.resize_zeroed(n1, n2);
+                matmul::gemm_into(
+                    s.t1.view_mut(),
+                    1.0,
+                    s.sq1.view(),
+                    s.w.view(),
+                    false,
+                    &mut s.gemm,
+                );
+                let grid = MatMut::from_parts(out, n1, n2, n2, 1);
+                matmul::gemm_into(grid, 1.0, s.t1.view(), s.sq2.view().t(), false, &mut s.gemm);
+            }
+            EigenVectors::Kron3 { p1, p2, p3 } => {
+                let (n1, n2, n3) = (p1.rows(), p2.rows(), p3.rows());
+                let n23 = n2 * n3;
+                square_into(p1, &mut s.sq1);
+                square_into(p2, &mut s.sq2);
+                square_into(p3, &mut s.sq3);
+                s.w.resize_zeroed(n1, n23);
+                for (w, &lam) in s.w.as_mut_slice().iter_mut().zip(&self.values) {
+                    *w = marginal_weight(lam);
+                }
+                s.t1.resize_zeroed(n1, n23);
+                matmul::gemm_into(
+                    s.t1.view_mut(),
+                    1.0,
+                    s.sq1.view(),
+                    s.w.view(),
+                    false,
+                    &mut s.gemm,
+                );
+                s.t2.resize_zeroed(n2, n3);
+                for i1 in 0..n1 {
+                    // Row i1 of t1, reshaped to an N₂×N₃ grid over (t₂,t₃).
+                    let g = MatRef::from_parts(s.t1.row(i1), n2, n3, n3, 1);
+                    matmul::gemm_into(s.t2.view_mut(), 1.0, s.sq2.view(), g, false, &mut s.gemm);
+                    let blk =
+                        MatMut::from_parts(&mut out[i1 * n23..(i1 + 1) * n23], n2, n3, n3, 1);
+                    matmul::gemm_into(blk, 1.0, s.t2.view(), s.sq3.view().t(), false, &mut s.gemm);
+                }
+            }
+        }
+    }
+
+    /// One entry `K_ij` of the marginal kernel, factored:
+    /// `K_ij = Σ_t w_t v_t[i] v_t[j]` collapses to a bilinear form
+    /// `aᵀ W b` over per-factor eigenvector products (`O(N)` per entry for
+    /// Kron2/Kron3, `O(N)` for dense) — no `N×N` intermediate.
+    pub fn marginal_entry(&self, i: usize, j: usize) -> f64 {
+        use std::cell::RefCell;
+        thread_local! {
+            static STAGE: RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+                RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+        }
+        match &self.vectors {
+            EigenVectors::Dense(p) => {
+                let (ri, rj) = (p.row(i), p.row(j));
+                let mut acc = 0.0;
+                for (t, (&a, &b)) in ri.iter().zip(rj).enumerate() {
+                    acc += marginal_weight(self.values[t]) * a * b;
+                }
+                acc
+            }
+            EigenVectors::Kron2 { p1, p2 } => {
+                let n2 = p2.rows();
+                let (i1, i2) = (i / n2, i % n2);
+                let (j1, j2) = (j / n2, j % n2);
+                STAGE.with(|st| {
+                    let (a, b, _) = &mut *st.borrow_mut();
+                    fill_products(p1, i1, j1, a);
+                    fill_products(p2, i2, j2, b);
+                    let mut acc = 0.0;
+                    for (t1, &av) in a.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let vals = &self.values[t1 * n2..(t1 + 1) * n2];
+                        let mut inner = 0.0;
+                        for (&bv, &lam) in b.iter().zip(vals) {
+                            inner += bv * marginal_weight(lam);
+                        }
+                        acc += av * inner;
+                    }
+                    acc
+                })
+            }
+            EigenVectors::Kron3 { p1, p2, p3 } => {
+                let (n2, n3) = (p2.rows(), p3.rows());
+                let n23 = n2 * n3;
+                let (i1, ir) = (i / n23, i % n23);
+                let (j1, jr) = (j / n23, j % n23);
+                let (i2, i3) = (ir / n3, ir % n3);
+                let (j2, j3) = (jr / n3, jr % n3);
+                STAGE.with(|st| {
+                    let (a, b, c) = &mut *st.borrow_mut();
+                    fill_products(p1, i1, j1, a);
+                    fill_products(p2, i2, j2, b);
+                    fill_products(p3, i3, j3, c);
+                    let mut acc = 0.0;
+                    for (t1, &av) in a.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for (t2, &bv) in b.iter().enumerate() {
+                            let ab = av * bv;
+                            if ab == 0.0 {
+                                continue;
+                            }
+                            let base = t1 * n23 + t2 * n3;
+                            let vals = &self.values[base..base + n3];
+                            let mut inner = 0.0;
+                            for (&cv, &lam) in c.iter().zip(vals) {
+                                inner += cv * marginal_weight(lam);
+                            }
+                            acc += ab * inner;
+                        }
+                    }
+                    acc
+                })
+            }
+        }
+    }
+
+    /// Gather the `κ×κ` marginal block `K[idx, idx]` into a caller-held
+    /// buffer — `κ²` factored [`KernelEigen::marginal_entry`] evaluations
+    /// (symmetry halves the work), so a slate probability
+    /// `P(A ⊆ Y) = det(K_A)` costs `O(κ²·N) + O(κ³)` instead of the dense
+    /// oracle's `O(N³)`.
+    pub fn marginal_block_into(&self, idx: &[usize], out: &mut Matrix) {
+        let k = idx.len();
+        out.resize_zeroed(k, k);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate().skip(a) {
+                let v = self.marginal_entry(i, j);
+                out.set(a, b, v);
+                out.set(b, a, v);
+            }
+        }
+    }
+
+    /// Allocating convenience for [`KernelEigen::marginal_block_into`].
+    pub fn marginal_block(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(0, 0);
+        self.marginal_block_into(idx, &mut out);
+        out
+    }
+
+    /// Slate inclusion probability `P(A ⊆ Y) = det(K_A)` through the
+    /// factored block gather.
+    pub fn subset_inclusion_probability(&self, idx: &[usize]) -> Result<f64> {
+        if idx.is_empty() {
+            return Ok(1.0);
+        }
+        let block = self.marginal_block(idx);
+        crate::linalg::lu::det(&block)
+    }
+}
+
+/// `out[t] = p[i,t]·p[j,t]` — the per-factor eigenvector product vector of
+/// the bilinear marginal-entry form.
+fn fill_products(p: &Matrix, i: usize, j: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(p.row(i).iter().zip(p.row(j)).map(|(&a, &b)| a * b));
 }
 
 #[cfg(test)]
@@ -506,6 +856,101 @@ mod tests {
         for i in 0..9 {
             let p = marg[(i, i)];
             assert!((0.0..=1.0).contains(&p), "K_ii = {p}");
+        }
+    }
+
+    #[test]
+    fn cross_submatrix_matches_entry_oracle() {
+        let k2 = Kernel::Kron2(spd(3, 50), spd(4, 51));
+        let k3 = Kernel::Kron3(spd(2, 52), spd(3, 53), spd(2, 54));
+        let kf = Kernel::Full(spd(12, 55));
+        let mut out = Matrix::zeros(0, 0);
+        for kern in [&k2, &k3, &kf] {
+            let rows = [1usize, 7, 7, 0];
+            let cols = [11usize, 2, 5];
+            kern.cross_submatrix_into(&rows, &cols, &mut out);
+            assert_eq!(out.shape(), (4, 3));
+            for (a, &i) in rows.iter().enumerate() {
+                for (b, &j) in cols.iter().enumerate() {
+                    assert_eq!(out[(a, b)], kern.entry(i, j), "({i},{j})");
+                }
+            }
+            // Rows == cols reduces to the principal submatrix.
+            kern.cross_submatrix_into(&cols, &cols, &mut out);
+            assert_eq!(out, kern.principal_submatrix(&cols));
+        }
+    }
+
+    #[test]
+    fn factored_inclusion_probabilities_match_dense_oracle() {
+        let kernels = [
+            Kernel::Kron2(spd(4, 60), spd(5, 61)),
+            Kernel::Kron3(spd(3, 62), spd(2, 63), spd(3, 64)),
+            Kernel::Full(spd(10, 65)),
+        ];
+        for k in &kernels {
+            let eig = k.eigen().unwrap();
+            let fast = eig.inclusion_probabilities();
+            let dense = k.marginal_kernel().unwrap();
+            assert_eq!(fast.len(), k.n());
+            for (i, &p) in fast.iter().enumerate() {
+                assert!(
+                    (p - dense[(i, i)]).abs() < 1e-12,
+                    "item {i}: factored {p} vs dense {}",
+                    dense[(i, i)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inclusion_probabilities_into_reuses_buffers_across_kernels() {
+        // Same scratch, different structures and sizes: results must match
+        // the allocating path exactly.
+        let mut scratch = MarginalScratch::new();
+        let mut out = Vec::new();
+        for k in [
+            Kernel::Kron2(spd(3, 66), spd(4, 67)),
+            Kernel::Kron3(spd(2, 68), spd(2, 69), spd(2, 70)),
+            Kernel::Kron2(spd(5, 71), spd(2, 72)),
+        ] {
+            let eig = k.eigen().unwrap();
+            eig.inclusion_probabilities_into(&mut out, &mut scratch);
+            assert_eq!(out, eig.inclusion_probabilities());
+        }
+    }
+
+    #[test]
+    fn marginal_entry_and_block_match_dense_oracle() {
+        let kernels = [
+            Kernel::Kron2(spd(3, 73), spd(4, 74)),
+            Kernel::Kron3(spd(2, 75), spd(3, 76), spd(2, 77)),
+            Kernel::Full(spd(9, 78)),
+        ];
+        for k in &kernels {
+            let eig = k.eigen().unwrap();
+            let dense = k.marginal_kernel().unwrap();
+            let n = k.n();
+            for i in 0..n {
+                for j in 0..n {
+                    let e = eig.marginal_entry(i, j);
+                    assert!(
+                        (e - dense[(i, j)]).abs() < 1e-12,
+                        "K[{i},{j}]: factored {e} vs dense {}",
+                        dense[(i, j)]
+                    );
+                }
+            }
+            let idx = [0usize, 2, 5, n - 1];
+            let block = eig.marginal_block(&idx);
+            let dense_block = dense.principal_submatrix(&idx);
+            assert!(block.rel_diff(&dense_block) < 1e-12);
+            // P(A ⊆ Y) = det(K_A) stays a probability.
+            let p = eig.subset_inclusion_probability(&idx).unwrap();
+            let oracle = crate::linalg::lu::det(&dense_block).unwrap();
+            assert!((p - oracle).abs() < 1e-12);
+            assert!((0.0..=1.0 + 1e-12).contains(&p), "det K_A = {p}");
+            assert_eq!(eig.subset_inclusion_probability(&[]).unwrap(), 1.0);
         }
     }
 

@@ -1,28 +1,63 @@
-//! MCMC (add/delete/swap) sampler — the approximate-sampling baseline the
+//! MCMC (add/delete) sampler — the approximate-sampling baseline the
 //! paper contrasts against (Kang [13]; see §4's discussion).
 //!
-//! The chain state is a subset `Y`; moves propose inserting, removing, or
-//! swapping a single item and accept with the Metropolis ratio of
-//! `det(L_Y)`. Determinant ratios are computed incrementally through a
-//! maintained Cholesky factor of `L_Y`:
+//! The chain state is a subset `Y`; moves propose inserting or removing a
+//! single item and accept with the Metropolis ratio of `det(L_Y)`.
+//! Determinant ratios are computed incrementally through a **maintained**
+//! Cholesky factor of `L_Y` held in insertion order (the determinant is
+//! permutation-invariant):
 //!
-//! - insertion ratio: the Schur complement `L_ii − L_{Y,i}ᵀ L_Y⁻¹ L_{Y,i}`,
-//! - removal ratio: `1 / (inverse diagonal)` via a solve,
+//! - insertion ratio: the Schur complement `L_ii − wᵀw` where `w` solves
+//!   `F·w = L_{Y,i}` (one `O(κ²)` forward sweep, the same row-oriented
+//!   substitution as [`crate::linalg::trisolve`]); an accepted insert
+//!   *appends* `[wᵀ, √d]` as the factor's new row — the solve **is** the
+//!   update, no refactorization;
+//! - removal ratio: `[L_Y⁻¹]_pp = ‖F⁻¹·e_p‖²` via the same sweep; an
+//!   accepted removal deletes the factor's row `p` and restores
+//!   triangularity of the trailing block with one rank-one update
+//!   ([`crate::linalg::cholesky::rank_one_update_block`], the stable
+//!   *plus*-sign `cholupdate`).
 //!
-//! so a step costs `O(κ²)` instead of `O(κ³)`.
+//! A step therefore costs `O(κ²)` with **zero heap allocations in steady
+//! state**: the factor, the solve buffers and the subset vector are all
+//! caller-held and grown once (the previous implementation rebuilt
+//! `Cholesky::factor(&kernel.principal_submatrix(..))` per accepted move,
+//! allocating a fresh `κ×κ` matrix and factor each time). A periodic
+//! exact refactorization (every [`FACTOR_REFRESH_EVERY`] accepted moves)
+//! bounds floating-point drift over long chains, matching the sampler's
+//! weight-refresh discipline.
 
 use crate::dpp::kernel::Kernel;
-use crate::error::Result;
-use crate::linalg::Cholesky;
+use crate::error::{Error, Result};
+use crate::linalg::cholesky::{rank_one_update_block, Cholesky};
+use crate::linalg::Matrix;
 use crate::rng::Rng;
+
+/// Exact-refactorization cadence (accepted moves). Up/downdates are exact
+/// in exact arithmetic; the refresh only bounds round-off accumulation.
+const FACTOR_REFRESH_EVERY: usize = 256;
 
 /// MCMC sampler state over subsets of a DPP.
 pub struct McmcSampler<'a> {
     kernel: &'a Kernel,
     /// Current subset (sorted).
     y: Vec<usize>,
-    /// Cholesky factor of `L_Y` (refreshed after each accepted move).
-    chol: Option<Cholesky>,
+    /// Items in factor (insertion) order — `fac` factors `L[order, order]`.
+    order: Vec<usize>,
+    /// Row-major `κ×κ` lower Cholesky factor of `L[order, order]`,
+    /// maintained across moves (stride = current `κ`).
+    fac: Vec<f64>,
+    /// Forward-solve workspace (doubles as the new factor row on insert
+    /// and the deleted column on removal).
+    w: Vec<f64>,
+    /// Right-hand-side gather / second solve workspace.
+    b: Vec<f64>,
+    /// Cold-path staging: the gathered `L_Y` and its factor (the periodic
+    /// exact refresh reuses the shared linalg factorization).
+    sub: Matrix,
+    lmat: Matrix,
+    /// Accepted moves since the last exact refactorization.
+    since_refresh: usize,
     /// Accepted / proposed counters (diagnostics).
     pub accepted: usize,
     pub proposed: usize,
@@ -31,7 +66,19 @@ pub struct McmcSampler<'a> {
 impl<'a> McmcSampler<'a> {
     /// Start from the empty set.
     pub fn new(kernel: &'a Kernel) -> Self {
-        McmcSampler { kernel, y: Vec::new(), chol: None, accepted: 0, proposed: 0 }
+        McmcSampler {
+            kernel,
+            y: Vec::new(),
+            order: Vec::new(),
+            fac: Vec::new(),
+            w: Vec::new(),
+            b: Vec::new(),
+            sub: Matrix::default(),
+            lmat: Matrix::default(),
+            since_refresh: 0,
+            accepted: 0,
+            proposed: 0,
+        }
     }
 
     /// Start from a given subset.
@@ -41,15 +88,30 @@ impl<'a> McmcSampler<'a> {
         Ok(s)
     }
 
+    /// Replace the chain state, refactoring `L_Y` into the held buffers
+    /// (`O(κ³)` once; no allocation once the buffers have capacity).
     fn set_state(&mut self, mut y: Vec<usize>) -> Result<()> {
         y.sort_unstable();
         y.dedup();
-        self.chol = if y.is_empty() {
-            None
-        } else {
-            Some(Cholesky::factor(&self.kernel.principal_submatrix(&y))?)
-        };
+        self.order.clear();
+        self.order.extend_from_slice(&y);
         self.y = y;
+        self.refactor()
+    }
+
+    /// Exact refactorization of `L[order, order]` into `fac` — the cold
+    /// path (state resets and the periodic drift refresh) goes through
+    /// the shared factored gather and Cholesky, then lays the factor into
+    /// the packed maintenance buffer. Allocation-free once the staging
+    /// matrices have capacity.
+    fn refactor(&mut self) -> Result<()> {
+        self.kernel.principal_submatrix_into(&self.order, &mut self.sub);
+        Cholesky::factor_into(&self.sub, &mut self.lmat).map_err(|e| {
+            Error::Numerical(format!("mcmc: L_Y not PD (κ={}): {e}", self.order.len()))
+        })?;
+        self.fac.clear();
+        self.fac.extend_from_slice(self.lmat.as_slice());
+        self.since_refresh = 0;
         Ok(())
     }
 
@@ -58,30 +120,111 @@ impl<'a> McmcSampler<'a> {
         &self.y
     }
 
-    /// Determinant ratio `det(L_{Y∪{i}}) / det(L_Y)` (Schur complement).
-    fn insert_ratio(&self, item: usize) -> f64 {
-        let lii = self.kernel.entry(item, item);
-        match &self.chol {
-            None => lii,
-            Some(ch) => {
-                let b: Vec<f64> = self.y.iter().map(|&j| self.kernel.entry(j, item)).collect();
-                let x = ch.solve_vec(&b).expect("dimension consistent");
-                let quad: f64 = b.iter().zip(&x).map(|(p, q)| p * q).sum();
-                lii - quad
+    /// Determinant ratio `det(L_{Y∪{i}}) / det(L_Y)` (Schur complement
+    /// `L_ii − wᵀw`). Leaves `w` holding the prospective factor row, so an
+    /// accepting caller finishes the insert with [`McmcSampler::append`]
+    /// at no extra cost.
+    fn insert_ratio(&mut self, item: usize) -> f64 {
+        let k = self.order.len();
+        self.b.clear();
+        self.b.extend(self.order.iter().map(|&j| self.kernel.entry(j, item)));
+        self.w.clear();
+        self.w.resize(k, 0.0);
+        let mut quad = 0.0;
+        for i in 0..k {
+            let mut v = self.b[i];
+            let row = &self.fac[i * k..i * k + i];
+            for (t, &l) in row.iter().enumerate() {
+                v -= l * self.w[t];
             }
+            let wi = v / self.fac[i * k + i];
+            self.w[i] = wi;
+            quad += wi * wi;
         }
+        self.kernel.entry(item, item) - quad
     }
 
-    /// Determinant ratio `det(L_{Y\{pos}}) / det(L_Y)` where `pos` indexes
-    /// into the current subset. Equals the `pos`-th diagonal entry of
-    /// `L_Y⁻¹` (inverse of the Schur complement).
-    fn remove_ratio(&self, pos: usize) -> f64 {
-        let ch = self.chol.as_ref().expect("non-empty state");
-        let k = self.y.len();
-        let mut e = vec![0.0; k];
-        e[pos] = 1.0;
-        let x = ch.solve_vec(&e).expect("dimension consistent");
-        x[pos]
+    /// Finish an accepted insert: grow the factor's stride in place and
+    /// append `[wᵀ, √d]` as the new last row (`w`/`d` from the preceding
+    /// [`McmcSampler::insert_ratio`] call).
+    fn append(&mut self, item: usize, d: f64) {
+        let k = self.order.len();
+        let ns = k + 1;
+        self.fac.resize(ns * ns, 0.0);
+        // Re-stride rows back-to-front (regions shift right; row i's new
+        // start i·(k+1) never overlaps any unread row j < i).
+        for i in (1..k).rev() {
+            self.fac.copy_within(i * k..i * k + k, i * ns);
+        }
+        // New (upper-triangle) column must be zero in every old row.
+        for i in 0..k {
+            self.fac[i * ns + k] = 0.0;
+        }
+        let base = k * ns;
+        self.fac[base..base + k].copy_from_slice(&self.w[..k]);
+        self.fac[base + k] = d.sqrt();
+        self.order.push(item);
+        let ins = self.y.binary_search(&item).unwrap_err();
+        self.y.insert(ins, item);
+    }
+
+    /// Determinant ratio `det(L_{Y∖{pos}}) / det(L_Y)` where `pos` indexes
+    /// into the current (sorted) subset. Equals `[L_Y⁻¹]_pp =
+    /// ‖F⁻¹·e_p‖²` — one forward sweep starting at the item's factor row.
+    fn remove_ratio(&mut self, pos: usize) -> f64 {
+        let p = self.factor_pos(pos);
+        let k = self.order.len();
+        self.b.clear();
+        self.b.resize(k, 0.0);
+        let mut acc = 0.0;
+        for i in p..k {
+            let mut v = if i == p { 1.0 } else { 0.0 };
+            let row = &self.fac[i * k + p..i * k + i];
+            for (t, &l) in row.iter().enumerate() {
+                v -= l * self.b[p + t];
+            }
+            let zi = v / self.fac[i * k + i];
+            self.b[i] = zi;
+            acc += zi * zi;
+        }
+        acc
+    }
+
+    /// Factor-order position of subset position `pos` (O(κ) scan).
+    fn factor_pos(&self, pos: usize) -> usize {
+        let item = self.y[pos];
+        self.order.iter().position(|&o| o == item).expect("subset/order in sync")
+    }
+
+    /// Finish an accepted removal: drop the item's factor row/column in
+    /// place and repair the trailing block with one rank-one update.
+    fn remove(&mut self, pos: usize) {
+        let p = self.factor_pos(pos);
+        let k = self.order.len();
+        let t = k - 1 - p;
+        // Save the deleted column below the diagonal: the trailing block
+        // then satisfies L₃₃·L₃₃ᵀ + l₃₂·l₃₂ᵀ.
+        self.w.clear();
+        self.w.resize(t, 0.0);
+        for i in 0..t {
+            self.w[i] = self.fac[(p + 1 + i) * k + p];
+        }
+        // Compact to stride k−1, dropping row/col p (writes trail reads).
+        let ns = k - 1;
+        for r in 0..ns {
+            let s = if r < p { r } else { r + 1 };
+            for c in 0..=r {
+                let sc = if c < p { c } else { c + 1 };
+                self.fac[r * ns + c] = self.fac[s * k + sc];
+            }
+            for c in (r + 1)..ns {
+                self.fac[r * ns + c] = 0.0;
+            }
+        }
+        self.fac.truncate(ns * ns);
+        rank_one_update_block(&mut self.fac, ns, p, t, &mut self.w);
+        self.order.remove(p);
+        self.y.remove(pos);
     }
 
     /// One Metropolis step (insert-or-delete proposal mix).
@@ -89,34 +232,38 @@ impl<'a> McmcSampler<'a> {
         self.proposed += 1;
         let n = self.kernel.n();
         let item = rng.below(n);
-        let pos = self.y.binary_search(&item);
-        match pos {
+        match self.y.binary_search(&item) {
             Err(_) => {
-                // Propose insertion: accept w.p. min(1, ratio/(1+ratio))
-                // — the standard lazy insert/delete chain for DPPs uses
-                // ratio/(1+ratio) to keep the move reversible.
+                // Propose insertion: accept w.p. ratio/(1+ratio) — the
+                // standard lazy insert/delete chain for DPPs keeps the
+                // move reversible with this acceptance.
                 let ratio = self.insert_ratio(item);
                 let p = if ratio <= 0.0 { 0.0 } else { ratio / (1.0 + ratio) };
                 if rng.bernoulli(p) {
-                    let mut y = self.y.clone();
-                    let ins = y.binary_search(&item).unwrap_err();
-                    y.insert(ins, item);
-                    self.set_state(y)?;
+                    self.append(item, ratio);
                     self.accepted += 1;
+                    self.maybe_refresh()?;
                 }
             }
             Ok(pos) => {
-                // Propose removal: accept w.p. min(1, r/(1+r)) with
-                // r = det ratio of removal.
+                // Propose removal: accept w.p. r/(1+r).
                 let ratio = self.remove_ratio(pos).max(0.0);
                 let p = ratio / (1.0 + ratio);
                 if rng.bernoulli(p) {
-                    let mut y = self.y.clone();
-                    y.remove(pos);
-                    self.set_state(y)?;
+                    self.remove(pos);
                     self.accepted += 1;
+                    self.maybe_refresh()?;
                 }
             }
+        }
+        Ok(())
+    }
+
+    /// Periodic exact refactorization bounding up/downdate drift.
+    fn maybe_refresh(&mut self) -> Result<()> {
+        self.since_refresh += 1;
+        if self.since_refresh >= FACTOR_REFRESH_EVERY {
+            self.refactor()?;
         }
         Ok(())
     }
@@ -146,7 +293,7 @@ mod tests {
     #[test]
     fn ratios_match_direct_determinants() {
         let kernel = Kernel::Full(spd(6, 1));
-        let s = McmcSampler::with_state(&kernel, vec![0, 2, 4]).unwrap();
+        let mut s = McmcSampler::with_state(&kernel, vec![0, 2, 4]).unwrap();
         // Insert 5
         let direct = {
             let d1 = crate::linalg::lu::det(&kernel.principal_submatrix(&[0, 2, 4, 5])).unwrap();
@@ -161,6 +308,36 @@ mod tests {
             d1 / d0
         };
         assert!((s.remove_ratio(1) - direct_rm).abs() / direct_rm.abs() < 1e-9);
+    }
+
+    #[test]
+    fn maintained_factor_tracks_refactorization() {
+        // Drive the chain through inserts and removals; the up/downdated
+        // factor must always equal a from-scratch factorization of the
+        // *sorted* submatrix in the maintained order's permutation.
+        let kernel = Kernel::Kron2(spd(3, 8), spd(3, 9));
+        let mut s = McmcSampler::new(&kernel);
+        let mut rng = Rng::new(13);
+        for step in 0..400 {
+            s.step(&mut rng).unwrap();
+            let k = s.order.len();
+            if k == 0 {
+                continue;
+            }
+            let mut fresh = McmcSampler::new(&kernel);
+            fresh.order = s.order.clone();
+            fresh.fac = vec![0.0; k * k];
+            fresh.refactor().unwrap();
+            for i in 0..k * k {
+                assert!(
+                    (s.fac[i] - fresh.fac[i]).abs() < 1e-9,
+                    "step {step}: factor drifted at {i}: {} vs {}",
+                    s.fac[i],
+                    fresh.fac[i]
+                );
+            }
+        }
+        assert!(s.accepted > 0);
     }
 
     #[test]

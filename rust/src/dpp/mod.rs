@@ -1,20 +1,28 @@
 //! Determinantal point process core: kernels, likelihoods, samplers.
 //!
 //! - [`kernel`]: dense / Kron2 / Kron3 kernel representations with
-//!   structure-exploiting spectra (§2 of the paper).
+//!   structure-exploiting spectra (§2 of the paper) and factored marginal
+//!   queries ([`KernelEigen::inclusion_probabilities_into`] and friends —
+//!   the dense `K` is never formed).
 //! - [`likelihood`]: the learning objective `φ(L)` (Eq. 3) and the `Θ`
 //!   gradient component (Eq. 4), dense and sparse.
 //! - [`sampler`]: exact sampling (Alg. 2) and k-DPP sampling — the
 //!   incremental batched engine ([`sampler::SampleScratch`],
 //!   [`Sampler::sample_batch`]).
+//! - [`condition`]: conditional inference — [`Constraint`]-constrained
+//!   sampling (`A ⊆ Y, B ∩ Y = ∅`) via Schur-complement conditional
+//!   kernels on the restricted ground set.
 //! - [`elementary`]: elementary symmetric polynomials (k-DPP phase 1).
-//! - [`mcmc`]: the approximate insert/delete chain baseline (§4, ref [13]).
+//! - [`mcmc`]: the approximate insert/delete chain baseline (§4, ref [13])
+//!   with an incrementally maintained `L_Y` Cholesky factor.
 
+pub mod condition;
 pub mod elementary;
 pub mod kernel;
 pub mod likelihood;
 pub mod mcmc;
 pub mod sampler;
 
-pub use kernel::{EigenVectors, Kernel, KernelEigen};
+pub use condition::{ConditionScratch, ConditionedSampler, Constraint};
+pub use kernel::{EigenVectors, Kernel, KernelEigen, MarginalScratch};
 pub use sampler::{SampleScratch, Sampler};

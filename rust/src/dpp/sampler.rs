@@ -94,6 +94,15 @@ impl Sampler {
         Ok(Sampler { eigen, n })
     }
 
+    /// Wrap an already-computed eigendecomposition (the conditioning
+    /// path: [`crate::dpp::ConditionedSampler`] eigendecomposes the
+    /// Schur-complement kernel of the restricted problem itself and
+    /// samples through the same phase-1/phase-2 engine).
+    pub(crate) fn from_eigen(eigen: KernelEigen) -> Self {
+        let n = eigen.n();
+        Sampler { eigen, n }
+    }
+
     /// Ground-set size.
     pub fn n(&self) -> usize {
         self.n
@@ -117,17 +126,35 @@ impl Sampler {
     /// [`Sampler::sample`] with caller-held scratch: identical draws,
     /// no per-draw buffer allocation.
     pub fn sample_with_scratch(&self, rng: &mut Rng, scratch: &mut SampleScratch) -> Vec<usize> {
+        let mut y = Vec::new();
+        self.sample_into_with_scratch(rng, scratch, &mut y);
+        y
+    }
+
+    /// [`Sampler::sample_with_scratch`] writing the draw into a caller-held
+    /// result buffer — with a warmed scratch *and* a warmed `out`, a draw
+    /// performs zero heap allocations (the conditioned hot path asserted
+    /// by `tests/alloc_free.rs`).
+    pub fn sample_into_with_scratch(
+        &self,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) {
         let mut j = std::mem::take(&mut scratch.j);
         j.clear();
+        // Reserve the worst case (every eigenvector selected) once, so a
+        // warmed scratch never reallocates mid-draw regardless of how many
+        // eigenvectors phase 1 happens to select.
+        j.reserve(self.eigen.values.len());
         for (i, &lam) in self.eigen.values.iter().enumerate() {
             let lam = lam.max(0.0); // clamp tiny negative round-off
             if rng.bernoulli(lam / (lam + 1.0)) {
                 j.push(i);
             }
         }
-        let y = self.sample_phase2(&j, rng, scratch);
+        self.sample_phase2_into(&j, rng, scratch, out);
         scratch.j = j;
-        y
     }
 
     /// [`Sampler::sample_k`] with caller-held scratch.
@@ -137,12 +164,28 @@ impl Sampler {
         rng: &mut Rng,
         scratch: &mut SampleScratch,
     ) -> Vec<usize> {
+        let mut y = Vec::new();
+        self.sample_k_into_with_scratch(k, rng, scratch, &mut y);
+        y
+    }
+
+    /// [`Sampler::sample_k_with_scratch`] writing into a caller-held
+    /// result buffer (see [`Sampler::sample_into_with_scratch`]). Note the
+    /// phase-1 elementary-DP table is rebuilt per call; grouped draws
+    /// should go through [`Sampler::sample_k_each`].
+    pub fn sample_k_into_with_scratch(
+        &self,
+        k: usize,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) {
         scratch.lam.clear();
         scratch.lam.extend(self.eigen.values.iter().map(|&l| l.max(0.0)));
         let lam = std::mem::take(&mut scratch.lam);
         let j = sample_k_eigenvectors(&lam, k, rng);
         scratch.lam = lam;
-        self.sample_phase2(&j, rng, scratch)
+        self.sample_phase2_into(&j, rng, scratch, out);
     }
 
     /// Draw `draws` k-DPP subsets sequentially from one RNG, sharing a
@@ -273,10 +316,25 @@ impl Sampler {
     /// Householder contraction — `O(Nk²)` per draw overall, vs the
     /// `O(Nk³)`-ish full-rebuild accounting of the naive loop.
     fn sample_phase2(&self, j: &[usize], rng: &mut Rng, s: &mut SampleScratch) -> Vec<usize> {
+        let mut y = Vec::with_capacity(j.len());
+        self.sample_phase2_into(j, rng, s, &mut y);
+        y
+    }
+
+    /// [`Sampler::sample_phase2`] into a caller-held result buffer
+    /// (cleared first) — the allocation-free form once `out` has capacity.
+    fn sample_phase2_into(
+        &self,
+        j: &[usize],
+        rng: &mut Rng,
+        s: &mut SampleScratch,
+        y: &mut Vec<usize>,
+    ) {
+        y.clear();
         let n = self.n;
         let mut k = j.len();
         if k == 0 {
-            return Vec::new();
+            return;
         }
         s.v.clear();
         s.v.resize(n * k, 0.0);
@@ -286,7 +344,6 @@ impl Sampler {
         s.weights.clear();
         s.weights.resize(n, 0.0);
         refresh_weights(&s.v, n, k, &mut s.weights);
-        let mut y = Vec::with_capacity(k);
         let mut since_refresh = 0usize;
         while k > 0 {
             // P(item i) = (1/|V|) Σ_j V[i,j]² ∝ w_i.
@@ -317,7 +374,6 @@ impl Sampler {
             }
         }
         y.sort_unstable();
-        y
     }
 }
 
@@ -409,7 +465,8 @@ mod tests {
     }
 
     #[test]
-    fn kron_marginals_match_dense_marginals() {
+    fn kron_marginals_match_factored_inclusion_probabilities() {
+        // Kron kernels go through the factored diagonal — no dense K.
         let k1 = spd(2, 4);
         let k2 = spd(3, 5);
         let kron_kernel = Kernel::Kron2(k1.clone(), k2.clone());
@@ -417,9 +474,9 @@ mod tests {
         let mut rng = Rng::new(13);
         let draws = 6000;
         let emp = empirical_marginals(&s, draws, &mut rng);
-        let marg = kron_kernel.marginal_kernel().unwrap();
+        let marg = s.eigen().inclusion_probabilities();
         for i in 0..6 {
-            let expect = marg[(i, i)];
+            let expect = marg[i];
             let se = (expect * (1.0 - expect) / draws as f64).sqrt();
             assert!(
                 (emp[i] - expect).abs() < 5.0 * se + 0.01,
@@ -437,7 +494,8 @@ mod tests {
         let draws = 4000;
         let mean_size: f64 =
             (0..draws).map(|_| s.sample(&mut rng).len() as f64).sum::<f64>() / draws as f64;
-        let expect: f64 = kernel.marginal_kernel().unwrap().trace();
+        // E[|Y|] = Tr K = Σ_i K_ii, via the factored diagonal.
+        let expect: f64 = s.eigen().inclusion_probabilities().iter().sum();
         assert!((mean_size - expect).abs() < 0.15, "mean {mean_size} vs {expect}");
     }
 
@@ -564,10 +622,10 @@ mod tests {
                 counts[i] += 1;
             }
         }
-        let marg = kernel.marginal_kernel().unwrap();
+        let marg = s.eigen().inclusion_probabilities();
         for i in 0..s.n() {
             let emp = counts[i] as f64 / draws as f64;
-            let expect = marg[(i, i)];
+            let expect = marg[i];
             let se = (expect * (1.0 - expect) / draws as f64).sqrt();
             assert!(
                 (emp - expect).abs() < 5.0 * se + 0.01,

@@ -33,6 +33,8 @@
 //! | §4 / Alg. 2: exact sampling after Hough et al., k-DPPs | [`dpp::sampler`] |
 //! | §4 cost table: `O(N^{3/2})` / `O(N)` preprocessing | [`dpp::kernel`] + [`linalg::kron`] |
 //! | §4 baseline: insert/delete MCMC chain (ref. [13]) | [`dpp::mcmc`] |
+//! | Conditioning `A ⊆ Y, B ∩ Y = ∅` (Borodin–Rains; Kulesza–Taskar §2.4) | [`dpp::condition`] |
+//! | Marginal kernel `K = L(L+I)⁻¹`, factored diagonals/blocks | [`dpp::kernel`] ([`dpp::KernelEigen`]) |
 //! | k-DPP phase 1: elementary symmetric polynomials (ref. [16]) | [`dpp::elementary`] |
 //! | §5 experiment protocols (init, synthetic data, figures) | [`learn::init`], [`data`], [`figures`] |
 //! | Baselines: full Picard (ref. [25]), EM (ref. [10]) | [`learn::picard`], [`learn::em`] |
@@ -60,13 +62,32 @@
 //! re-orthonormalization. Per-draw buffers live in a caller-held
 //! [`dpp::SampleScratch`]; [`dpp::Sampler::sample_batch`] fans draws across
 //! threads with one deterministic RNG stream per draw, so results are
-//! reproducible regardless of thread count. The serving stack
-//! ([`coordinator`]) is multi-tenant: a [`coordinator::KernelRegistry`]
-//! publishes generation-stamped epochs (kernel + cached eigendecomposition
-//! + sampler) that readers grab with an `Arc` clone — hot swaps and LRU
-//! eviction never block the draw path — while workers reuse one scratch
-//! each and coalesce `(tenant, k)` request groups through
-//! [`dpp::Sampler::sample_k_many`].
+//! reproducible regardless of thread count.
+//!
+//! ## Conditional inference
+//!
+//! [`dpp::ConditionedSampler`] draws from `P(Y | A ⊆ Y, B ∩ Y = ∅)` —
+//! the slate-filling query — via a Schur-complement conditional kernel on
+//! the restricted ground set, assembled from factored bordered-block
+//! gathers (never a dense `N×N` object) and sampled through the same
+//! engine. [`dpp::KernelEigen`] answers marginal queries factored:
+//! [`dpp::KernelEigen::inclusion_probabilities_into`] computes all `N`
+//! diagonals of `K = L(L+I)⁻¹` in `O(N·(N₁+N₂))` as two GEMMs over
+//! squared eigenvector matrices, and
+//! [`dpp::KernelEigen::marginal_block_into`] serves `κ×κ` slate
+//! probabilities.
+//!
+//! The serving stack
+//! ([`coordinator`]) is multi-tenant and constraint-aware end to end: a
+//! [`coordinator::KernelRegistry`] publishes generation-stamped epochs
+//! (kernel + cached eigendecomposition + sampler + factored
+//! marginal-diagonal table) that readers grab with an `Arc` clone — hot
+//! swaps and LRU eviction never block the draw path — while workers
+//! reuse one scratch pair each and coalesce `(tenant, k, constraint)`
+//! request groups through [`dpp::Sampler::sample_k_many`] /
+//! [`dpp::ConditionedSampler::sample_k_each`], sharing one conditioning
+//! setup per slate context; [`coordinator::DppService::marginals`] serves
+//! each tenant's cached inclusion probabilities.
 //!
 //! See `README.md` for the architecture tour and quickstart,
 //! `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the

@@ -272,6 +272,39 @@ pub fn inverse_pd_with(
     Ok(())
 }
 
+/// In-place rank-one **update** of a lower-triangular Cholesky factor
+/// block: the `t×t` lower-triangular block with top-left corner
+/// `(row0, row0)` of the row-major, `stride`-wide buffer `fac` is
+/// overwritten with the factor of `T·Tᵀ + x·xᵀ` (classic Givens-sweep
+/// `cholupdate`, `O(t²)`, unconditionally stable for the *plus* sign).
+/// `x` is consumed as workspace. Allocation-free — this is the
+/// row-deletion maintenance step of the MCMC sampler's incrementally
+/// factored `L_Y`: deleting row `p` leaves the trailing block satisfying
+/// `L₃₃·L₃₃ᵀ + l₃₂·l₃₂ᵀ`, exactly one rank-one update.
+pub fn rank_one_update_block(
+    fac: &mut [f64],
+    stride: usize,
+    row0: usize,
+    t: usize,
+    x: &mut [f64],
+) {
+    debug_assert!(x.len() >= t);
+    debug_assert!(t == 0 || (row0 + t - 1) * stride + row0 + t - 1 < fac.len());
+    for j in 0..t {
+        let jj = (row0 + j) * stride + row0 + j;
+        let d = fac[jj];
+        let r = d.hypot(x[j]);
+        let c = r / d;
+        let s = x[j] / d;
+        fac[jj] = r;
+        for i in (j + 1)..t {
+            let ij = (row0 + i) * stride + row0 + j;
+            fac[ij] = (fac[ij] + s * x[i]) / c;
+            x[i] = c * x[i] - s * fac[ij];
+        }
+    }
+}
+
 /// Convenience: `log det(A)` of a symmetric PD matrix.
 pub fn logdet_pd(a: &Matrix) -> Result<f64> {
     Ok(Cholesky::factor(a)?.logdet())
@@ -404,6 +437,72 @@ mod tests {
         let a = spd(9, 25);
         inverse_pd_with(&a, &mut chol, &mut tri, &mut out).unwrap();
         assert!(out.rel_diff(&inverse_pd(&a).unwrap()) < 1e-12);
+    }
+
+    #[test]
+    fn rank_one_update_matches_refactorization() {
+        // Full-buffer update: chol(L·Lᵀ + x·xᵀ) from chol(L·Lᵀ).
+        let a = spd(9, 31);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+        let x0: Vec<f64> = (0..9).map(|i| ((i * 7 + 3) as f64 * 0.31).sin()).collect();
+        let mut x = x0.clone();
+        rank_one_update_block(&mut fac, 9, 0, 9, &mut x);
+        let mut want = a.clone();
+        for i in 0..9 {
+            for j in 0..9 {
+                let v = want.get(i, j) + x0[i] * x0[j];
+                want.set(i, j, v);
+            }
+        }
+        let ref_fac = Cholesky::factor(&want).unwrap();
+        for i in 0..9 {
+            for j in 0..=i {
+                assert!(
+                    (fac[i * 9 + j] - ref_fac.l.get(i, j)).abs() < 1e-10,
+                    "({i},{j}): {} vs {}",
+                    fac[i * 9 + j],
+                    ref_fac.l.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rank_one_update_block_touches_only_the_block() {
+        // Update the trailing 4×4 block of a 7×7 factor in place; the
+        // leading rows/columns must be untouched and the block must match
+        // an independent refactorization of its updated Gram matrix.
+        let a = spd(7, 33);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+        let before = fac.clone();
+        let x0 = [0.4, -0.2, 0.7, 0.1];
+        let mut x = x0;
+        rank_one_update_block(&mut fac, 7, 3, 4, &mut x);
+        // Block Gram: T·Tᵀ + x·xᵀ over rows/cols 3..7 of the factor.
+        let mut gram = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut v = x0[i] * x0[j];
+                for t in 0..4 {
+                    v += before[(3 + i) * 7 + 3 + t] * before[(3 + j) * 7 + 3 + t];
+                }
+                gram.set(i, j, v);
+            }
+        }
+        let ref_fac = Cholesky::factor(&gram).unwrap();
+        for i in 0..7 {
+            for j in 0..7 {
+                let got = fac[i * 7 + j];
+                if (3..7).contains(&i) && (3..=i).contains(&j) {
+                    let want = ref_fac.l.get(i - 3, j - 3);
+                    assert!((got - want).abs() < 1e-10, "({i},{j}): {got} vs {want}");
+                } else {
+                    assert_eq!(got, before[i * 7 + j], "({i},{j}) outside block changed");
+                }
+            }
+        }
     }
 
     #[test]

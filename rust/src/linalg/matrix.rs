@@ -431,6 +431,16 @@ impl Matrix {
     }
 }
 
+impl Default for Matrix {
+    /// The empty `0×0` matrix — the starting state of every `_into` /
+    /// scratch buffer (`resize_zeroed` grows it on first use), which is
+    /// what lets the scratch structs (`SymEigenScratch`,
+    /// `MarginalScratch`, `ConditionScratch`, …) `#[derive(Default)]`.
+    fn default() -> Self {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl Index<(usize, usize)> for Matrix {
     type Output = f64;
     #[inline(always)]
@@ -628,6 +638,13 @@ mod tests {
         let g = m.block(1, 2, 2, 2).unwrap();
         assert_eq!(g, b);
         assert!(m.block(3, 3, 2, 2).is_err());
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let m = Matrix::default();
+        assert_eq!(m.shape(), (0, 0));
+        assert!(m.as_slice().is_empty());
     }
 
     #[test]

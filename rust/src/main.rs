@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   figures   regenerate the paper's tables/figures (CSV + stdout rows)
 //!   learn     fit a DPP kernel to a dataset file (or synthetic data)
-//!   sample    draw subsets from a learned kernel
+//!   sample    draw subsets from a learned kernel (optionally conditioned
+//!             on --include/--exclude item sets)
+//!   marginals print factored inclusion probabilities P(i ∈ Y) = K_ii
 //!   serve     run the sampling service over a synthetic request trace
 //!   datagen   generate + save datasets (registry / genes / synthetic)
 //!   info      environment + artifact status
@@ -11,7 +13,7 @@
 use krondpp::cli::Args;
 use krondpp::config::{Algorithm, ServiceConfig};
 use krondpp::coordinator::DppService;
-use krondpp::dpp::{Kernel, Sampler};
+use krondpp::dpp::{ConditionedSampler, Constraint, Kernel, SampleScratch, Sampler};
 use krondpp::error::Result;
 use krondpp::figures::{fig1, fig2, tables, Scale};
 use krondpp::learn::{init, Learner};
@@ -29,6 +31,8 @@ COMMANDS:
   learn    --algo picard|krk|krk-stochastic|joint|em --data FILE.kds
            [--n1 N --n2 N] [--iters I] [--step A] [--tol T] [--out PREFIX]
   sample   --kernel PREFIX [--tenant NAME] [--k K] [--count C] [--seed S]
+           [--include I1,I2,..] [--exclude J1,J2,..]
+  marginals --kernel PREFIX [--tenant NAME] [--top T]
   serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
            [--config FILE.json] [--tenants T] [--tenant NAME] [--learn-live]
   datagen  --kind synthetic|genes|registry --out FILE.kds [--n1 N --n2 N]
@@ -39,7 +43,14 @@ Multi-tenant serving: --config declares named tenants + the LRU epoch
 bound (see configs/service.json); --tenants T provisions T extra synthetic
 market tenants; --tenant NAME pins the request trace (and the --learn-live
 publish target) to one tenant instead of round-robining over all of them.
-For `sample`, --tenant NAME loads the kernel saved under PREFIX.NAME.
+For `sample`/`marginals`, --tenant NAME loads the kernel saved under
+PREFIX.NAME.
+
+Conditioned sampling: `sample --include 0,5 --exclude 3` draws from the
+DPP conditioned on those items being in / out of every subset (with --k,
+the slate size counts the forced includes). `marginals` prints the
+factored inclusion probabilities P(i in Y) = K_ii without forming the
+dense N x N marginal kernel.
 ";
 
 fn main() {
@@ -60,6 +71,7 @@ fn run(tokens: Vec<String>) -> Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("learn") => cmd_learn(&args),
         Some("sample") => cmd_sample(&args),
+        Some("marginals") => cmd_marginals(&args),
         Some("serve") => cmd_serve(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("info") => cmd_info(),
@@ -258,19 +270,61 @@ fn load_kernel(prefix: &str) -> Result<Kernel> {
     ))
 }
 
-fn cmd_sample(args: &Args) -> Result<()> {
+/// Parse a `--include`/`--exclude` comma-separated index list.
+fn parse_items(args: &Args, flag: &str) -> Result<Vec<usize>> {
+    match args.str_flag(flag) {
+        None => Ok(Vec::new()),
+        Some(list) => list
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim().parse().map_err(|_| {
+                    krondpp::Error::Parse(format!("--{flag}: cannot parse item '{t}'"))
+                })
+            })
+            .collect(),
+    }
+}
+
+/// Resolve the kernel-file prefix, honoring the multi-tenant PREFIX.TENANT
+/// layout (see `learn --out`).
+fn tenant_prefix(args: &Args) -> Result<String> {
     let prefix = args.require_str("kernel")?;
-    // A multi-tenant deployment saves one kernel per tenant under
-    // PREFIX.TENANT (see `learn --out`); --tenant selects which to draw
-    // from.
-    let prefix = match args.str_flag("tenant") {
+    Ok(match args.str_flag("tenant") {
         Some(tenant) => format!("{prefix}.{tenant}"),
         None => prefix.to_string(),
-    };
-    let kernel = load_kernel(&prefix)?;
+    })
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let kernel = load_kernel(&tenant_prefix(args)?)?;
     let k: usize = args.get_or("k", 0)?;
     let count: usize = args.get_or("count", 5)?;
     let seed: u64 = args.get_or("seed", 0)?;
+    let constraint = Constraint::new(parse_items(args, "include")?, parse_items(args, "exclude")?)?;
+    if !constraint.is_empty() {
+        // Conditioned draws: one Schur-complement setup, then scratch-reuse
+        // sampling (A ⊆ Y, B ∩ Y = ∅ in every draw).
+        if k > 0 {
+            constraint.validate_k(k, kernel.n())?;
+        } else {
+            constraint.validate(kernel.n())?;
+        }
+        let cs = ConditionedSampler::new(&kernel, constraint)?;
+        let mut rng = Rng::new(seed);
+        let mut scratch = SampleScratch::new();
+        for i in 0..count {
+            let y = if k == 0 {
+                cs.sample_with_scratch(&mut rng, &mut scratch)
+            } else {
+                let mut y = Vec::new();
+                cs.sample_k_into(k, &mut rng, &mut scratch, &mut y);
+                y
+            };
+            println!("sample {i}: {y:?}");
+        }
+        return Ok(());
+    }
     let sampler = Sampler::new(&kernel)?;
     if k > sampler.n() {
         return Err(krondpp::Error::Invalid(format!(
@@ -283,6 +337,22 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let draws = sampler.sample_batch(count, if k == 0 { None } else { Some(k) }, seed);
     for (i, y) in draws.iter().enumerate() {
         println!("sample {i}: {y:?}");
+    }
+    Ok(())
+}
+
+fn cmd_marginals(args: &Args) -> Result<()> {
+    let kernel = load_kernel(&tenant_prefix(args)?)?;
+    let eigen = kernel.eigen()?;
+    // Factored diagonal: O(N·(N₁+N₂)), no dense K.
+    let probs = eigen.inclusion_probabilities();
+    let expected_size: f64 = probs.iter().sum();
+    println!("N = {}  E[|Y|] = {expected_size:.3}", kernel.n());
+    let top: usize = args.get_or("top", probs.len())?;
+    let mut ranked: Vec<(usize, f64)> = probs.into_iter().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for (i, p) in ranked.into_iter().take(top) {
+        println!("item {i:>6}  P(i in Y) = {p:.6}");
     }
     Ok(())
 }

@@ -14,8 +14,17 @@
 //! bookkeeping, and both half-updates. No `N×N` Θ exists on this path at
 //! all.
 //!
-//! Buffers are grown on the warm-up iterations; after that neither region
-//! may hit the allocator.
+//! Region C — warmed conditioned draws: a fixed `Constraint` is compiled
+//! once into a `ConditionedSampler` (Schur assembly + eigendecomposition —
+//! the warmup), then repeated `sample_into` draws (phase 1 over the
+//! conditional spectrum, incremental phase 2, rest-index remap + include
+//! merge) run against a caller-held scratch and result buffer. A
+//! worst-case `sample_k_into(max_k)` warmup pins every buffer at its
+//! maximum size, so the measured draws cannot allocate no matter how many
+//! eigenvectors phase 1 selects.
+//!
+//! Buffers are grown on the warm-up iterations; after that no region may
+//! hit the allocator.
 //!
 //! Scope note: the claim is asserted with `KRONDPP_THREADS=1` (set before
 //! any thread-count lookup) and at sub-kernel sizes below the
@@ -28,7 +37,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use krondpp::dpp::likelihood::theta_dense;
-use krondpp::dpp::{Kernel, Sampler};
+use krondpp::dpp::{ConditionedSampler, Constraint, Kernel, SampleScratch, Sampler};
 use krondpp::learn::krk::KrkPicard;
 use krondpp::learn::traits::{Learner, TrainingSet};
 use krondpp::linalg::Matrix;
@@ -134,4 +143,29 @@ fn krk_update_and_step_paths_are_allocation_free_in_steady_state() {
     assert!(krondpp::linalg::cholesky::is_pd(l1));
     assert!(krondpp::linalg::cholesky::is_pd(l2));
     assert!(learner.pre_step_objective().unwrap().is_finite());
+
+    // Region C warm-up: the conditioning setup itself (bordered-block
+    // gathers, L_A Cholesky, rank-|A| correction, Lᶜ eigendecomposition)
+    // allocates once; a worst-case full-size k-DPP draw then pins the
+    // phase-2 basis, weights, contraction and result buffers at their
+    // maxima, and a few unconstrained draws warm the phase-1 path.
+    let constraint = Constraint::new(vec![3, 20], vec![10, 17, 41]).unwrap();
+    let cond = ConditionedSampler::new(&truth, constraint).unwrap();
+    let mut draw_rng = Rng::new(7);
+    let mut draw_scratch = SampleScratch::new();
+    let mut out = Vec::new();
+    cond.sample_k_into(cond.max_k(), &mut draw_rng, &mut draw_scratch, &mut out);
+    assert_eq!(out.len(), cond.max_k());
+    for _ in 0..10 {
+        cond.sample_into(&mut draw_rng, &mut draw_scratch, &mut out);
+    }
+    measure("conditioned draw path", || {
+        for _ in 0..50 {
+            cond.sample_into(&mut draw_rng, &mut draw_scratch, &mut out);
+        }
+    });
+    // The measured draws must still be real conditioned samples.
+    assert!(out.contains(&3) && out.contains(&20));
+    assert!(!out.contains(&10) && !out.contains(&17) && !out.contains(&41));
+    assert!(out.iter().all(|&i| i < n1 * n2));
 }

@@ -1,0 +1,227 @@
+//! Conditioning correctness against a brute-force enumeration oracle.
+//!
+//! On small ground sets we can enumerate every subset, weight it by
+//! `det(L_Y)`, restrict to the subsets satisfying `A ⊆ Y, B ∩ Y = ∅`
+//! (and `|Y| = k` for the k-DPP variants) and renormalize — the exact
+//! conditional law. `ConditionedSampler` empirical frequencies must match
+//! it within sampling error, for m = 2 and m = 3, including `A = ∅`,
+//! `B = ∅`, and the unconstrained case; overlapping constraints must be
+//! rejected outright. The factored marginal queries
+//! (`inclusion_probabilities_into`, `marginal_entry`) must agree with the
+//! dense `marginal_kernel` oracle to ≤ 1e-12 on these sizes — that pair
+//! of checks is the PR's acceptance criterion.
+
+use std::collections::HashMap;
+
+use krondpp::dpp::{ConditionedSampler, Constraint, Kernel, MarginalScratch, SampleScratch};
+use krondpp::linalg::{lu, Matrix};
+use krondpp::rng::Rng;
+
+fn spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = rng.paper_init_kernel(n);
+    m.scale_mut(1.5 / n as f64);
+    m.add_diag_mut(0.3);
+    m
+}
+
+/// Exact conditional subset probabilities by full enumeration:
+/// `P(Y | A ⊆ Y, B ∩ Y = ∅ [, |Y| = k]) ∝ det(L_Y)`.
+fn oracle(
+    kernel: &Kernel,
+    constraint: &Constraint,
+    k: Option<usize>,
+) -> HashMap<Vec<usize>, f64> {
+    let n = kernel.n();
+    assert!(n <= 12, "oracle is exponential in N");
+    let amask: u64 = constraint.include().iter().map(|&i| 1u64 << i).sum();
+    let bmask: u64 = constraint.exclude().iter().map(|&i| 1u64 << i).sum();
+    let mut probs = HashMap::new();
+    let mut total = 0.0;
+    for bits in 0u64..(1u64 << n) {
+        if bits & amask != amask || bits & bmask != 0 {
+            continue;
+        }
+        let y: Vec<usize> = (0..n).filter(|&i| bits >> i & 1 == 1).collect();
+        if let Some(k) = k {
+            if y.len() != k {
+                continue;
+            }
+        }
+        let w = if y.is_empty() {
+            1.0
+        } else {
+            lu::det(&kernel.principal_submatrix(&y)).unwrap()
+        };
+        assert!(w >= -1e-12, "det(L_Y) negative: {w}");
+        total += w;
+        probs.insert(y, w);
+    }
+    assert!(total > 0.0, "constraint admits no subsets");
+    for v in probs.values_mut() {
+        *v /= total;
+    }
+    probs
+}
+
+/// Draw `draws` samples and compare per-subset empirical frequencies with
+/// the oracle at six standard errors (+ a small absolute floor).
+fn check_against_oracle(
+    kernel: &Kernel,
+    constraint: Constraint,
+    k: Option<usize>,
+    draws: usize,
+    seed: u64,
+) {
+    let probs = oracle(kernel, &constraint, k);
+    let cs = ConditionedSampler::new(kernel, constraint.clone()).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut scratch = SampleScratch::new();
+    let mut counts: HashMap<Vec<usize>, usize> = HashMap::new();
+    let mut out = Vec::new();
+    for _ in 0..draws {
+        match k {
+            None => cs.sample_into(&mut rng, &mut scratch, &mut out),
+            Some(k) => cs.sample_k_into(k, &mut rng, &mut scratch, &mut out),
+        }
+        *counts.entry(out.clone()).or_default() += 1;
+    }
+    // Every drawn subset must be oracle-admissible (constraint satisfied).
+    for y in counts.keys() {
+        assert!(
+            probs.contains_key(y),
+            "sampler produced inadmissible subset {y:?} under {constraint:?} (k={k:?})"
+        );
+    }
+    for (y, &p) in &probs {
+        let emp = counts.get(y).copied().unwrap_or(0) as f64 / draws as f64;
+        let se = (p * (1.0 - p) / draws as f64).sqrt();
+        assert!(
+            (emp - p).abs() < 6.0 * se + 0.01,
+            "subset {y:?}: empirical {emp:.4} vs oracle {p:.4} (k={k:?})"
+        );
+    }
+}
+
+fn kron2() -> Kernel {
+    Kernel::Kron2(spd(3, 1), spd(3, 2))
+}
+
+fn kron3() -> Kernel {
+    Kernel::Kron3(spd(2, 3), spd(2, 4), spd(2, 5))
+}
+
+#[test]
+fn m2_conditioned_sampling_matches_enumeration() {
+    let kernel = kron2();
+    let c = Constraint::new(vec![2], vec![4, 7]).unwrap();
+    check_against_oracle(&kernel, c, None, 40_000, 11);
+}
+
+#[test]
+fn m2_conditioned_k_dpp_matches_enumeration() {
+    let kernel = kron2();
+    let c = Constraint::new(vec![2], vec![4, 7]).unwrap();
+    check_against_oracle(&kernel, c, Some(3), 40_000, 13);
+}
+
+#[test]
+fn m2_exclude_only_and_include_only_match_enumeration() {
+    let kernel = kron2();
+    // A = ∅ (pure ground-set restriction).
+    check_against_oracle(&kernel, Constraint::excluding(vec![0, 5]).unwrap(), None, 40_000, 17);
+    // B = ∅ (pure Schur inclusion).
+    check_against_oracle(&kernel, Constraint::including(vec![1, 6]).unwrap(), None, 40_000, 19);
+    // A = B = ∅ (factored fast path, unconditioned law).
+    check_against_oracle(&kernel, Constraint::none(), None, 40_000, 23);
+}
+
+#[test]
+fn m3_conditioned_sampling_matches_enumeration() {
+    let kernel = kron3();
+    let c = Constraint::new(vec![1], vec![6]).unwrap();
+    check_against_oracle(&kernel, c, None, 40_000, 29);
+    let c = Constraint::new(vec![1], vec![6]).unwrap();
+    check_against_oracle(&kernel, c, Some(3), 40_000, 31);
+}
+
+#[test]
+fn overlapping_constraints_are_rejected() {
+    assert!(Constraint::new(vec![1, 3], vec![3]).is_err());
+    // And out-of-bounds constraints fail at sampler construction.
+    let kernel = kron2();
+    let c = Constraint::including(vec![50]).unwrap();
+    assert!(ConditionedSampler::new(&kernel, c).is_err());
+}
+
+#[test]
+fn factored_marginals_match_dense_oracle_to_1e12() {
+    // Acceptance criterion: all-N inclusion probabilities from the
+    // factored O(N·(N₁+N₂)) path and per-entry factored queries agree
+    // with the dense K = L(L+I)⁻¹ oracle to ≤ 1e-12 (m = 2 and m = 3).
+    let mut scratch = MarginalScratch::new();
+    let mut diag = Vec::new();
+    for kernel in [kron2(), kron3()] {
+        let eig = kernel.eigen().unwrap();
+        let dense = kernel.marginal_kernel().unwrap();
+        eig.inclusion_probabilities_into(&mut diag, &mut scratch);
+        let n = kernel.n();
+        assert_eq!(diag.len(), n);
+        for i in 0..n {
+            assert!(
+                (diag[i] - dense[(i, i)]).abs() <= 1e-12,
+                "diag {i}: {} vs {}",
+                diag[i],
+                dense[(i, i)]
+            );
+            for j in 0..n {
+                let e = eig.marginal_entry(i, j);
+                assert!(
+                    (e - dense[(i, j)]).abs() <= 1e-12,
+                    "K[{i},{j}]: {e} vs {}",
+                    dense[(i, j)]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn conditioned_empirical_marginals_match_dense_conditional_kernel() {
+    // Independent cross-check of the Schur identity: the conditional
+    // law's per-item inclusion probabilities, computed densely from the
+    // enumeration oracle, must match conditioned empirical frequencies.
+    let kernel = kron2();
+    let c = Constraint::new(vec![0], vec![8]).unwrap();
+    let probs = oracle(&kernel, &c, None);
+    let n = kernel.n();
+    let mut incl = vec![0.0; n];
+    for (y, p) in &probs {
+        for &i in y {
+            incl[i] += p;
+        }
+    }
+    let cs = ConditionedSampler::new(&kernel, c).unwrap();
+    let mut rng = Rng::new(37);
+    let mut scratch = SampleScratch::new();
+    let draws = 40_000;
+    let mut counts = vec![0usize; n];
+    let mut out = Vec::new();
+    for _ in 0..draws {
+        cs.sample_into(&mut rng, &mut scratch, &mut out);
+        for &i in &out {
+            counts[i] += 1;
+        }
+    }
+    for i in 0..n {
+        let emp = counts[i] as f64 / draws as f64;
+        let se = (incl[i] * (1.0 - incl[i]) / draws as f64).sqrt();
+        assert!(
+            (emp - incl[i]).abs() < 6.0 * se + 0.01,
+            "item {i}: empirical {emp:.4} vs conditional marginal {:.4}",
+            incl[i]
+        );
+    }
+    assert!((incl[0] - 1.0).abs() < 1e-12, "forced item has marginal 1");
+    assert!(incl[8].abs() < 1e-12, "excluded item has marginal 0");
+}

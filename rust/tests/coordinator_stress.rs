@@ -6,6 +6,7 @@
 use krondpp::config::ServiceConfig;
 use krondpp::coordinator::{DppService, LearningJob, SampleRequest};
 use krondpp::data;
+use krondpp::dpp::Constraint;
 use krondpp::learn::init;
 use krondpp::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -58,6 +59,91 @@ fn many_clients_with_live_hot_swaps() {
     assert_eq!(done.load(Ordering::SeqCst), 300);
     let m = svc.metrics();
     assert_eq!(m.completed.load(Ordering::Relaxed), m.accepted.load(Ordering::Relaxed));
+}
+
+/// Constrained requests under concurrent hot swaps: every accepted
+/// conditioned request either completes honoring its constraint or is
+/// late-rejected by a shrinking publish — never silently mis-served. The
+/// metric invariant accepted = completed + failed + rejected_invalid must
+/// hold with conditioning in the mix, and same-context requests must
+/// share conditioning setups.
+#[test]
+fn constrained_requests_survive_hot_swaps() {
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 16,
+        batch_window_us: 200,
+        queue_capacity: 50_000,
+        ..ServiceConfig::default()
+    };
+    // N stays 16 across swaps so constraints remain in-bounds; the
+    // kernels (and thus conditional laws) change under the clients.
+    let svc = Arc::new(DppService::start(&kernel(4, 4, 40), &cfg, 41).unwrap());
+    let mut handles = Vec::new();
+    let completed = Arc::new(AtomicUsize::new(0));
+    for t in 0..4u64 {
+        let svc2 = Arc::clone(&svc);
+        let completed2 = Arc::clone(&completed);
+        handles.push(std::thread::spawn(move || {
+            // Two alternating slate contexts per thread → heavy reuse.
+            let contexts = [
+                Constraint::new(vec![t as usize], vec![15]).unwrap(),
+                Constraint::new(vec![t as usize, 8], vec![14]).unwrap(),
+            ];
+            for i in 0..40usize {
+                let c = contexts[i % 2].clone();
+                let k = 4 + i % 3;
+                match svc2
+                    .submit(SampleRequest::new(k).with_constraint(c.clone()))
+                    .unwrap()
+                    .wait()
+                {
+                    Ok(y) => {
+                        assert_eq!(y.len(), k);
+                        for inc in c.include() {
+                            assert!(y.contains(inc), "include {inc} missing: {y:?}");
+                        }
+                        for exc in c.exclude() {
+                            assert!(!y.contains(exc), "exclude {exc} present: {y:?}");
+                        }
+                        assert!(y.iter().all(|&item| item < 16));
+                        completed2.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(krondpp::Error::Rejected(_)) => {} // shrink race
+                    Err(e) => panic!("conditioned request failed: {e}"),
+                }
+            }
+        }));
+    }
+    {
+        let svc2 = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            for s in 0..8u64 {
+                svc2.update_kernel(&kernel(4, 4, 200 + s)).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = svc.metrics();
+    let accepted = m.accepted.load(Ordering::Relaxed);
+    let done = m.completed.load(Ordering::Relaxed)
+        + m.failed.load(Ordering::Relaxed)
+        + m.rejected_invalid.load(Ordering::Relaxed);
+    assert_eq!(accepted, done, "accounting drifted under conditioning");
+    assert_eq!(m.conditioned.load(Ordering::Relaxed) as usize, completed.load(Ordering::SeqCst));
+    let setups = m.conditioning_setups.load(Ordering::Relaxed);
+    assert!(setups > 0, "no conditioning setups recorded");
+    assert!(
+        setups <= m.conditioned.load(Ordering::Relaxed),
+        "more setups than conditioned draws ({setups})"
+    );
+    // The marginals endpoint serves from whatever epoch is current.
+    let probs = svc.marginals(krondpp::coordinator::TenantId::DEFAULT).unwrap();
+    assert_eq!(probs.len(), 16);
+    assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
 }
 
 /// The tentpole's acceptance scenario: continuous submits across two
