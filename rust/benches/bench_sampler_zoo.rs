@@ -1,0 +1,248 @@
+//! Sampler-zoo quality-vs-throughput sweep: every backend (exact
+//! spectral, MCMC at several chain lengths, low-rank spectral projection
+//! at several ranks) measured on both axes —
+//!
+//! * **quality**: total-variation distance between the empirical subset
+//!   histogram and the brute-force enumerated law on a small `N = 9`
+//!   Kronecker kernel, plus empirical-marginal max error against the
+//!   factored `inclusion_probabilities_into` diagonal at serving scale;
+//! * **throughput**: draws/s per backend at `N = 64`, and greedy MAP
+//!   slates/s (with the slate's log-determinant objective recorded).
+//!
+//! The TV rows make the fidelity knobs concrete: MCMC converges toward
+//! the exact law as `steps` grows, the projection converges as `rank`
+//! approaches `N`, and the throughput rows price each rung. Writes
+//! `BENCH_sampler_zoo.json` (see `bench_util::Report`). Honors
+//! `KRONDPP_BENCH_BUDGET_MS` (per-case budget; also scales the TV draw
+//! counts) and `KRONDPP_BENCH_MAX_N` (skips the serving-scale sections
+//! when the catalog exceeds the cap).
+
+use krondpp::bench_util::{
+    bench_budget_ms, bench_max_n, black_box, section, Bencher, Report,
+};
+use krondpp::data;
+use krondpp::dpp::{
+    map_slate_into, Constraint, Kernel, LowRankBackend, MapScratch, McmcBackend, SampleScratch,
+    Sampler, SamplerBackend,
+};
+use krondpp::linalg::lu;
+use krondpp::rng::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Brute-force law `P(Y) ∝ det(L_Y)` by enumerating all `2^N` subsets
+/// (mirrors the conformance harness's oracle; only sane for tiny `N`).
+fn subset_law(kernel: &Kernel) -> HashMap<Vec<usize>, f64> {
+    let n = kernel.n();
+    assert!(n <= 14, "enumeration oracle is O(2^N)");
+    let dense = kernel.to_dense();
+    let mut law = HashMap::new();
+    let mut total = 0.0;
+    for mask in 0u32..(1u32 << n) {
+        let subset: Vec<usize> = (0..n).filter(|&i| mask >> i & 1 == 1).collect();
+        let w = if subset.is_empty() {
+            1.0
+        } else {
+            lu::det(&dense.principal_submatrix(&subset)).unwrap_or(0.0).max(0.0)
+        };
+        total += w;
+        law.insert(subset, w);
+    }
+    for w in law.values_mut() {
+        *w /= total;
+    }
+    law
+}
+
+/// Total-variation distance `½ Σ_Y |p̂(Y) − p(Y)|` between the empirical
+/// histogram of `draws` and the enumerated `law`.
+fn total_variation(draws: &[Vec<usize>], law: &HashMap<Vec<usize>, f64>) -> f64 {
+    let total = draws.len() as f64;
+    let mut counts: HashMap<&[usize], f64> = HashMap::new();
+    for d in draws {
+        *counts.entry(d.as_slice()).or_insert(0.0) += 1.0;
+    }
+    let mut tv = 0.0;
+    for (subset, &p) in law {
+        let emp = counts.remove(subset.as_slice()).unwrap_or(0.0) / total;
+        tv += (emp - p).abs();
+    }
+    // Mass the backend put on subsets outside the law's support.
+    for c in counts.into_values() {
+        tv += c / total;
+    }
+    0.5 * tv
+}
+
+/// Draw `count` samples and time the loop, returning `(draws, draws/s)`.
+fn timed_draws<B: SamplerBackend>(
+    backend: &B,
+    count: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<usize>>, f64) {
+    let mut scratch = SampleScratch::new();
+    let mut out = Vec::new();
+    let mut draws = Vec::with_capacity(count);
+    let t = Instant::now();
+    for _ in 0..count {
+        backend.draw_into(None, rng, &mut scratch, &mut out).expect("draw failed");
+        draws.push(out.clone());
+    }
+    let per_s = count as f64 / t.elapsed().as_secs_f64().max(1e-12);
+    (draws, per_s)
+}
+
+fn max_marginal_err(draws: &[Vec<usize>], truth: &[f64]) -> f64 {
+    let total = draws.len() as f64;
+    let mut freq = vec![0.0; truth.len()];
+    for d in draws {
+        for &i in d {
+            freq[i] += 1.0;
+        }
+    }
+    freq.iter()
+        .zip(truth)
+        .map(|(f, t)| (f / total - t).abs())
+        .fold(0.0, f64::max)
+}
+
+fn main() {
+    let b = Bencher { min_iters: 2, ..Default::default() };
+    let max_n = bench_max_n();
+    let budget_ms = bench_budget_ms();
+    let mut report = Report::new();
+
+    section("quality: total variation vs the enumerated law (N = 9)");
+    {
+        let mut rng = Rng::new(2016);
+        let kernel = data::paper_truth_kernel(3, 3, &mut rng);
+        let law = subset_law(&kernel);
+        // Scale the histogram size with the smoke budget: ~3k draws in CI
+        // smoke, ~30k in a full run. TV to the truth scales like
+        // O(sqrt(cells / draws)), so even the smoke row separates the
+        // fidelity rungs.
+        let tv_draws = (budget_ms * 20).clamp(2_000, 40_000);
+        println!("{} draws per backend", tv_draws);
+
+        let exact = Sampler::new(&kernel).unwrap();
+        let (draws, per_s) = timed_draws(&exact, tv_draws, &mut Rng::new(7));
+        let tv = total_variation(&draws, &law);
+        println!("  exact                 tv = {tv:.4}  ({per_s:.0} draws/s)");
+        report.case_raw("tv exact n9", &[
+            ("tv", tv),
+            ("draws", tv_draws as f64),
+            ("draws_per_s", per_s),
+        ]);
+        let exact_tv = tv;
+
+        for steps in [25usize, 100, 400] {
+            let mcmc = McmcBackend::new(&kernel, Constraint::none(), steps).unwrap();
+            let (draws, per_s) = timed_draws(&mcmc, tv_draws, &mut Rng::new(8));
+            let tv = total_variation(&draws, &law);
+            println!("  mcmc steps={steps:<4}       tv = {tv:.4}  ({per_s:.0} draws/s)");
+            report.case_raw(&format!("tv mcmc steps={steps} n9"), &[
+                ("tv", tv),
+                ("steps", steps as f64),
+                ("draws", tv_draws as f64),
+                ("draws_per_s", per_s),
+            ]);
+        }
+
+        for rank in [3usize, 6, 9] {
+            let lr = LowRankBackend::new(&kernel, rank, Constraint::none()).unwrap();
+            let (draws, per_s) = timed_draws(&lr, tv_draws, &mut Rng::new(9));
+            let tv = total_variation(&draws, &law);
+            println!("  lowrank rank={rank}        tv = {tv:.4}  ({per_s:.0} draws/s)");
+            report.case_raw(&format!("tv lowrank rank={rank} n9"), &[
+                ("tv", tv),
+                ("rank", rank as f64),
+                ("draws", tv_draws as f64),
+                ("draws_per_s", per_s),
+            ]);
+            if rank == kernel.n() {
+                // Full-rank projection is the exact sampler in disguise —
+                // its TV must sit at the same statistical floor.
+                report.derived("full_rank_tv_minus_exact_tv", tv - exact_tv);
+            }
+        }
+    }
+
+    section("marginals + throughput at serving scale (N = 64)");
+    if 64 <= max_n {
+        let mut rng = Rng::new(64);
+        let kernel = data::paper_truth_kernel(8, 8, &mut rng);
+        let truth = kernel.eigen().unwrap().inclusion_probabilities();
+        let m_draws = (budget_ms * 2).clamp(300, 4_000);
+
+        let exact = Sampler::new(&kernel).unwrap();
+        let mcmc = McmcBackend::new(&kernel, Constraint::none(), 200).unwrap();
+        let lr = LowRankBackend::new(&kernel, 16, Constraint::none()).unwrap();
+
+        let (draws, _) = timed_draws(&exact, m_draws, &mut Rng::new(11));
+        let err = max_marginal_err(&draws, &truth);
+        println!("  exact        marginal max-err = {err:.4} over {m_draws} draws");
+        report.case_raw("marginal exact n64", &[("max_err", err), ("draws", m_draws as f64)]);
+        let (draws, _) = timed_draws(&mcmc, m_draws, &mut Rng::new(12));
+        let err = max_marginal_err(&draws, &truth);
+        println!("  mcmc s=200   marginal max-err = {err:.4} (chain bias + noise)");
+        report.case_raw("marginal mcmc200 n64", &[("max_err", err), ("draws", m_draws as f64)]);
+        let (draws, _) = timed_draws(&lr, m_draws, &mut Rng::new(13));
+        let err = max_marginal_err(&draws, &truth);
+        println!("  lowrank r=16 marginal max-err = {err:.4} (truncation bias + noise)");
+        report.case_raw("marginal lowrank16 n64", &[("max_err", err), ("draws", m_draws as f64)]);
+
+        let mut scratch = SampleScratch::new();
+        let mut out = Vec::new();
+        let mut draw_rng = Rng::new(17);
+        let per_iter = 16usize;
+        for (name, backend) in [
+            ("exact", &exact as &dyn SamplerBackend),
+            ("mcmc steps=200", &mcmc as &dyn SamplerBackend),
+            ("lowrank rank=16", &lr as &dyn SamplerBackend),
+        ] {
+            let stats = b.run(&format!("draw {name} (N=64, 16 draws)"), || {
+                for _ in 0..per_iter {
+                    backend.draw_into(None, &mut draw_rng, &mut scratch, &mut out).unwrap();
+                }
+                black_box(&out);
+            });
+            let per_s = per_iter as f64 / stats.secs();
+            println!("  {name}: {per_s:.0} draws/s");
+            report.case(&stats, &[("draws_per_s", per_s)]);
+        }
+    } else {
+        println!("skipped (N = 64 > KRONDPP_BENCH_MAX_N = {max_n})");
+    }
+
+    section("greedy MAP slate throughput (N = 64, k = 10)");
+    if 64 <= max_n {
+        let mut rng = Rng::new(65);
+        let kernel = data::paper_truth_kernel(8, 8, &mut rng);
+        let mut scratch = MapScratch::new();
+        let mut slate = Vec::new();
+        let none = Constraint::none();
+        let stats = b.run("map k=10 (N=64)", || {
+            black_box(
+                map_slate_into(&kernel, Some(10), &none, &mut scratch, &mut slate).unwrap(),
+            );
+        });
+        let ld =
+            map_slate_into(&kernel, Some(10), &none, &mut scratch, &mut slate).unwrap();
+        let per_s = 1.0 / stats.secs();
+        println!("  {per_s:.0} slates/s, log det(L_S) = {ld:.4}");
+        report.case(&stats, &[("slates_per_s", per_s), ("slate_logdet", ld)]);
+
+        let c = Constraint::new(vec![3, 20], vec![10, 41]).unwrap();
+        let stats = b.run("map k=10 constrained (N=64)", || {
+            black_box(
+                map_slate_into(&kernel, Some(10), &c, &mut scratch, &mut slate).unwrap(),
+            );
+        });
+        report.case(&stats, &[("slates_per_s", 1.0 / stats.secs())]);
+    } else {
+        println!("skipped (N = 64 > KRONDPP_BENCH_MAX_N = {max_n})");
+    }
+
+    report.write("sampler_zoo", "BENCH_sampler_zoo.json").expect("write BENCH_sampler_zoo.json");
+    println!("\nwrote BENCH_sampler_zoo.json");
+}

@@ -13,6 +13,49 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::dpp::backend::SampleMode;
+
+/// Per-mode completion counters — how much traffic each sampler-zoo
+/// fidelity tier actually serves. Counted once per *completed* request,
+/// keyed by the request's [`SampleMode`]; mirrored globally and per
+/// tenant.
+#[derive(Default)]
+pub struct ModeCounters {
+    pub exact: AtomicU64,
+    pub mcmc: AtomicU64,
+    pub low_rank: AtomicU64,
+    pub map: AtomicU64,
+}
+
+impl ModeCounters {
+    pub fn count(&self, mode: SampleMode) {
+        self.counter(mode).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, mode: SampleMode) -> u64 {
+        self.counter(mode).load(Ordering::Relaxed)
+    }
+
+    fn counter(&self, mode: SampleMode) -> &AtomicU64 {
+        match mode {
+            SampleMode::Exact => &self.exact,
+            SampleMode::Mcmc { .. } => &self.mcmc,
+            SampleMode::LowRank { .. } => &self.low_rank,
+            SampleMode::Map => &self.map,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "modes: exact={} mcmc={} lowrank={} map={}",
+            self.exact.load(Ordering::Relaxed),
+            self.mcmc.load(Ordering::Relaxed),
+            self.low_rank.load(Ordering::Relaxed),
+            self.map.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Log-bucketed latency histogram (1 µs .. ~1000 s, 5 buckets/decade).
 pub struct LatencyHistogram {
     buckets: Mutex<Vec<u64>>,
@@ -126,6 +169,8 @@ pub struct TenantMetrics {
     pub conditioned: AtomicU64,
     /// Accepted requests that failed service-side (epoch build error).
     pub failed: AtomicU64,
+    /// Completed requests by sampler mode.
+    pub modes: ModeCounters,
     /// End-to-end latency of this tenant's requests.
     pub latency: LatencyHistogram,
 }
@@ -138,12 +183,13 @@ impl TenantMetrics {
     /// One-line per-tenant summary for reports.
     pub fn summary(&self) -> String {
         format!(
-            "accepted={} rejected_invalid={} completed={} conditioned={} failed={} latency: {}",
+            "accepted={} rejected_invalid={} completed={} conditioned={} failed={} {} latency: {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.conditioned.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.modes.summary(),
             self.latency.summary(),
         )
     }
@@ -174,6 +220,8 @@ pub struct ServiceMetrics {
     /// Invariant: every accepted request ends in exactly one of
     /// `completed`, `failed`, or (worker-side) `rejected_invalid`.
     pub failed: AtomicU64,
+    /// Completed requests by sampler mode (the zoo's traffic mix).
+    pub modes: ModeCounters,
     /// Batches dispatched.
     pub batches: AtomicU64,
     /// Sum of batch sizes (for mean batch size).
@@ -200,7 +248,7 @@ impl ServiceMetrics {
     pub fn report(&self) -> String {
         format!(
             "accepted={} rejected={} rejected_invalid={} completed={} conditioned={} \
-             conditioning_setups={} failed={} batches={} mean_batch={:.2}\n  latency: {}\n  queue:   {}",
+             conditioning_setups={} failed={} batches={} mean_batch={:.2} {}\n  latency: {}\n  queue:   {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
@@ -210,6 +258,7 @@ impl ServiceMetrics {
             self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.modes.summary(),
             self.latency.summary(),
             self.queue_wait.summary(),
         )
@@ -250,6 +299,23 @@ mod tests {
         m.batched_requests.store(10, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
         assert!(m.report().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn mode_counters_key_by_family_not_parameters() {
+        let m = ModeCounters::default();
+        m.count(SampleMode::Mcmc { steps: 10 });
+        m.count(SampleMode::Mcmc { steps: 999 });
+        m.count(SampleMode::LowRank { rank: 4 });
+        m.count(SampleMode::Map);
+        assert_eq!(m.get(SampleMode::Mcmc { steps: 1 }), 2);
+        assert_eq!(m.get(SampleMode::LowRank { rank: 7 }), 1);
+        assert_eq!(m.get(SampleMode::Map), 1);
+        assert_eq!(m.get(SampleMode::Exact), 0);
+        assert!(m.summary().contains("mcmc=2"));
+        let s = ServiceMetrics::new();
+        s.modes.count(SampleMode::Exact);
+        assert!(s.report().contains("modes: exact=1 mcmc=0 lowrank=0 map=0"));
     }
 
     #[test]

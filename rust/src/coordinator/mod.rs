@@ -6,15 +6,18 @@
 //!   eigendecomposition + sampler) atomically, with an LRU bound on
 //!   resident eigendecompositions and lazy rebuild for cold tenants.
 //! - [`server`]: the sampling service (admission control → request queue
-//!   → dynamic batcher → tenant-grouped least-loaded dispatch → exact DPP
+//!   → dynamic batcher → tenant-grouped least-loaded dispatch → DPP
 //!   samples from the tenant's current epoch), constraint-aware end to
 //!   end: requests may carry a [`crate::dpp::Constraint`]
 //!   (`A ⊆ Y, B ∩ Y = ∅`), validated at admission and served through a
 //!   per-group conditioning setup; epochs cache the factored
 //!   marginal-diagonal table for instant scoring
-//!   ([`server::DppService::marginals`]).
+//!   ([`server::DppService::marginals`]). Every request selects a
+//!   [`crate::dpp::SampleMode`] backend — exact, MCMC, low-rank
+//!   projection, or the deterministic greedy MAP slate — gated per
+//!   tenant by a [`ModePolicy`] and counted per mode in the metrics.
 //! - [`batcher`]: the two-trigger (size/age) batch policy plus the
-//!   `(tenant, k, constraint)` coalescer, property-tested.
+//!   `(tenant, k, constraint, mode)` coalescer, property-tested.
 //! - [`router`]: job-weighted least-loaded work routing.
 //! - [`jobs`]: background learning jobs publishing refreshed kernels to
 //!   their target tenant.
@@ -28,5 +31,5 @@ pub mod router;
 pub mod server;
 
 pub use jobs::LearningJob;
-pub use registry::{KernelRegistry, SamplerEpoch, TenantId};
+pub use registry::{KernelRegistry, ModePolicy, SamplerEpoch, TenantId};
 pub use server::{DppService, SampleRequest, Ticket};

@@ -30,11 +30,67 @@
 //! batched engine's determinism guarantees are preserved.
 
 use crate::coordinator::metrics::TenantMetrics;
+use crate::dpp::backend::SampleMode;
 use crate::dpp::{Kernel, MarginalScratch, SampleScratch, Sampler};
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+
+/// Which sampler-zoo mode *families* a tenant may request — the
+/// admission-time policy knob (a cheap per-mode capability mask; the
+/// parameters inside a mode, `steps`/`rank`, are validated separately).
+/// Policies default to allow-all and are swappable at runtime without a
+/// republish ([`KernelRegistry::set_mode_policy`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModePolicy {
+    mask: u8,
+}
+
+impl ModePolicy {
+    const ALL: u8 = 0b1111;
+
+    fn bit(mode: SampleMode) -> u8 {
+        match mode {
+            SampleMode::Exact => 0b0001,
+            SampleMode::Mcmc { .. } => 0b0010,
+            SampleMode::LowRank { .. } => 0b0100,
+            SampleMode::Map => 0b1000,
+        }
+    }
+
+    /// Every mode allowed (the default for new tenants).
+    pub fn allow_all() -> Self {
+        ModePolicy { mask: Self::ALL }
+    }
+
+    /// Only exact sampling allowed — the conservative policy for tenants
+    /// that must not serve approximate draws.
+    pub fn exact_only() -> Self {
+        ModePolicy { mask: Self::bit(SampleMode::Exact) }
+    }
+
+    /// Remove a mode family from the policy.
+    pub fn without(self, mode: SampleMode) -> Self {
+        ModePolicy { mask: self.mask & !Self::bit(mode) }
+    }
+
+    /// Add a mode family to the policy.
+    pub fn with(self, mode: SampleMode) -> Self {
+        ModePolicy { mask: self.mask | Self::bit(mode) }
+    }
+
+    /// Does this policy admit requests of `mode`'s family?
+    pub fn allows(&self, mode: SampleMode) -> bool {
+        self.mask & Self::bit(mode) != 0
+    }
+}
+
+impl Default for ModePolicy {
+    fn default() -> Self {
+        ModePolicy::allow_all()
+    }
+}
 
 /// Stable, copyable handle to a registry tenant. Ids are assigned densely
 /// in creation order and never reused (tenants' epochs are evicted, the
@@ -111,6 +167,9 @@ pub struct TenantEntry {
     last_touch: AtomicU64,
     /// Jobs dispatched to workers and not yet finished (per-tenant load).
     pub(crate) in_flight: AtomicUsize,
+    /// Allowed sampler-mode families ([`ModePolicy`] mask), checked at
+    /// admission. Atomic so policy swaps need no lock and no republish.
+    mode_policy: AtomicU8,
     metrics: TenantMetrics,
 }
 
@@ -148,6 +207,18 @@ impl TenantEntry {
     /// Is this tenant's eigendecomposition resident right now?
     pub fn resident(&self) -> bool {
         self.slot.read().unwrap().epoch.is_some()
+    }
+
+    /// The tenant's current sampler-mode policy.
+    pub fn mode_policy(&self) -> ModePolicy {
+        ModePolicy { mask: self.mode_policy.load(Ordering::Relaxed) }
+    }
+
+    /// Swap the tenant's sampler-mode policy (takes effect on the next
+    /// admission; queued requests were admitted under the old policy and
+    /// still complete).
+    pub fn set_mode_policy(&self, policy: ModePolicy) {
+        self.mode_policy.store(policy.mask, Ordering::Relaxed);
     }
 }
 
@@ -231,6 +302,7 @@ impl KernelRegistry {
             }),
             last_touch: AtomicU64::new(touch),
             in_flight: AtomicUsize::new(0),
+            mode_policy: AtomicU8::new(ModePolicy::allow_all().mask),
             metrics: TenantMetrics::new(),
         }));
         tenants.names.insert(name.to_string(), id);
@@ -359,6 +431,13 @@ impl KernelRegistry {
         self.publishes.fetch_add(1, Ordering::Relaxed);
         self.enforce_budget(id);
         Ok(generation)
+    }
+
+    /// Set a tenant's sampler-mode policy (admission-time capability
+    /// mask). Cheap — an atomic store, no epoch rebuild.
+    pub fn set_mode_policy(&self, id: TenantId, policy: ModePolicy) -> Result<()> {
+        self.entry(id)?.set_mode_policy(policy);
+        Ok(())
     }
 
     /// Number of tenants whose eigendecomposition is currently resident.
@@ -608,6 +687,30 @@ mod tests {
         }
         // The held pre-publish epoch keeps its own kernel and table.
         assert_eq!(epoch.kernel.n(), 12);
+    }
+
+    #[test]
+    fn mode_policy_defaults_open_and_swaps_atomically() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 90)).unwrap();
+        let entry = reg.entry(t).unwrap();
+        for mode in [
+            SampleMode::Exact,
+            SampleMode::Mcmc { steps: 10 },
+            SampleMode::LowRank { rank: 2 },
+            SampleMode::Map,
+        ] {
+            assert!(entry.mode_policy().allows(mode), "default denies {mode:?}");
+        }
+        reg.set_mode_policy(t, ModePolicy::exact_only()).unwrap();
+        assert!(entry.mode_policy().allows(SampleMode::Exact));
+        assert!(!entry.mode_policy().allows(SampleMode::Mcmc { steps: 10 }));
+        assert!(!entry.mode_policy().allows(SampleMode::Map));
+        // Family-level mask: parameters don't matter.
+        let p = ModePolicy::exact_only().with(SampleMode::LowRank { rank: 1 });
+        assert!(p.allows(SampleMode::LowRank { rank: 64 }));
+        assert!(!p.without(SampleMode::Exact).allows(SampleMode::Exact));
+        assert!(reg.set_mode_policy(TenantId(7), ModePolicy::allow_all()).is_err());
     }
 
     #[test]

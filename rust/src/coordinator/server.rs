@@ -12,10 +12,16 @@
 //! from the tenant's current [`super::registry::SamplerEpoch`] — an
 //! `Arc`-published kernel + cached eigendecomposition + factored
 //! marginal-diagonal table grabbed from the [`KernelRegistry`] without
-//! ever blocking on writers. Conditioned jobs coalesce by
-//! `(tenant, k, constraint)` so repeated slate contexts share one
+//! ever blocking on writers. Each request also carries a [`SampleMode`]
+//! — the fidelity knob of the sampler zoo ([`crate::dpp::backend`]):
+//! exact spectral draws, MCMC chains, low-rank spectral projection, or a
+//! deterministic greedy MAP slate ([`crate::dpp::map`]). Admission
+//! checks the mode against the tenant's [`ModePolicy`] and the mode's
+//! parameters against the ground set; workers coalesce by
+//! `(tenant, k, constraint, mode)` so repeated slate contexts share one
 //! conditioning setup ([`crate::dpp::ConditionedSampler`], built through
-//! per-worker [`ConditionScratch`]es). Learning jobs ([`super::jobs`])
+//! per-worker [`ConditionScratch`]es), one MCMC/low-rank backend build,
+//! or one greedy MAP slate. Learning jobs ([`super::jobs`])
 //! hot-swap refreshed kernels into their target tenant while requests
 //! keep flowing: in-flight draws finish on the epoch they started with.
 //!
@@ -31,9 +37,13 @@
 use crate::config::ServiceConfig;
 use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pending};
 use crate::coordinator::metrics::ServiceMetrics;
-use crate::coordinator::registry::{KernelRegistry, TenantEntry, TenantId};
+use crate::coordinator::registry::{KernelRegistry, ModePolicy, TenantEntry, TenantId};
 use crate::coordinator::router::WorkerLoad;
-use crate::dpp::{ConditionScratch, ConditionedSampler, Constraint, Kernel, SampleScratch};
+use crate::dpp::map::{map_slate_into, MapScratch};
+use crate::dpp::{
+    ConditionScratch, ConditionedSampler, Constraint, Kernel, LowRankBackend, McmcBackend,
+    SampleMode, SampleScratch, SamplerBackend,
+};
 use crate::error::{Error, Result};
 use crate::rng::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -54,22 +64,38 @@ pub struct SampleRequest {
     /// Optional conditioning constraint; `None` (or an empty constraint,
     /// normalized away at admission) draws unconditioned samples.
     pub constraint: Option<Constraint>,
+    /// Which backend of the sampler zoo serves the draw — exact spectral
+    /// sampling by default; MCMC / low-rank trade fidelity for cost;
+    /// [`SampleMode::Map`] returns the deterministic greedy MAP slate
+    /// (`k = 0` auto-sizes it).
+    pub mode: SampleMode,
 }
 
 impl SampleRequest {
     /// Request against the default tenant (single-tenant deployments).
     pub fn new(k: usize) -> Self {
-        SampleRequest { tenant: TenantId::DEFAULT, k, constraint: None }
+        SampleRequest {
+            tenant: TenantId::DEFAULT,
+            k,
+            constraint: None,
+            mode: SampleMode::Exact,
+        }
     }
 
     /// Request against a specific tenant.
     pub fn for_tenant(tenant: TenantId, k: usize) -> Self {
-        SampleRequest { tenant, k, constraint: None }
+        SampleRequest { tenant, k, constraint: None, mode: SampleMode::Exact }
     }
 
     /// Attach a conditioning constraint (builder style).
     pub fn with_constraint(mut self, constraint: Constraint) -> Self {
         self.constraint = Some(constraint);
+        self
+    }
+
+    /// Select a sampling backend (builder style).
+    pub fn with_mode(mut self, mode: SampleMode) -> Self {
+        self.mode = mode;
         self
     }
 }
@@ -256,6 +282,36 @@ impl DppService {
                 return reject(msg);
             }
         }
+        // Mode admission: the tenant's policy gates which backends it
+        // serves, and mode parameters must be feasible against the current
+        // ground set — both fail fast without burning a queue slot.
+        if !entry.mode_policy().allows(req.mode) {
+            return reject(format!(
+                "mode '{}' disabled by tenant policy",
+                req.mode.label()
+            ));
+        }
+        match req.mode {
+            SampleMode::Exact | SampleMode::Map => {}
+            SampleMode::Mcmc { steps } => {
+                if steps == 0 {
+                    return reject("mcmc mode needs steps >= 1".into());
+                }
+            }
+            SampleMode::LowRank { rank } => {
+                if rank == 0 || rank > n {
+                    return reject(format!("lowrank rank={rank} outside 1..={n}"));
+                }
+                // det L_r(Y) = 0 for |Y| > rank: the projection cannot
+                // emit a slate larger than its rank.
+                if req.k > rank {
+                    return reject(format!(
+                        "requested k={} exceeds projection rank {rank}",
+                        req.k
+                    ));
+                }
+            }
+        }
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
@@ -296,6 +352,39 @@ impl DppService {
         constraint: Constraint,
     ) -> Result<Vec<usize>> {
         self.submit(SampleRequest::for_tenant(tenant, k).with_constraint(constraint))?.wait()
+    }
+
+    /// Convenience: submit against `tenant` with an explicit backend
+    /// [`SampleMode`] and wait.
+    pub fn sample_mode(
+        &self,
+        tenant: TenantId,
+        k: usize,
+        mode: SampleMode,
+    ) -> Result<Vec<usize>> {
+        self.submit(SampleRequest::for_tenant(tenant, k).with_mode(mode))?.wait()
+    }
+
+    /// Convenience: the deterministic greedy MAP slate for `tenant` —
+    /// `k = 0` auto-sizes the slate (items are added while they increase
+    /// `det L_Y`), an optional constraint forces/forbids items.
+    pub fn map_slate(
+        &self,
+        tenant: TenantId,
+        k: usize,
+        constraint: Option<Constraint>,
+    ) -> Result<Vec<usize>> {
+        let mut req = SampleRequest::for_tenant(tenant, k).with_mode(SampleMode::Map);
+        if let Some(c) = constraint {
+            req = req.with_constraint(c);
+        }
+        self.submit(req)?.wait()
+    }
+
+    /// Restrict which sample modes `tenant` accepts — enforced at
+    /// admission, swappable on the live service without republishing.
+    pub fn set_mode_policy(&self, tenant: TenantId, policy: ModePolicy) -> Result<()> {
+        self.shared.registry.set_mode_policy(tenant, policy)
     }
 
     /// All `N` inclusion probabilities `P(i ∈ Y) = K_ii` for `tenant`,
@@ -470,6 +559,8 @@ fn worker_loop(
     // same bordered-block/eigensolver buffers.
     let mut scratch = SampleScratch::new();
     let mut cond_scratch = ConditionScratch::new();
+    let mut map_scratch = MapScratch::new();
+    let mut map_out = Vec::new();
     while let Ok(jobs) = rx.recv() {
         // The pump dispatches single-tenant groups: acquire the tenant's
         // current epoch once for the whole delivery (an `Arc` clone; a
@@ -484,24 +575,30 @@ fn worker_loop(
                 }
             }
             Ok(epoch) => {
-                // Coalesce same-(k, constraint) jobs so one phase-1 setup
-                // — and for conditioned groups one whole conditioning
-                // setup (Schur assembly + eigendecomposition) — serves
-                // repeated slate contexts instead of looping single draws.
-                // The constraint fingerprint leads the key so distinct
-                // slate contexts compare on one u64; the full constraint
-                // follows as the exactness tiebreak (a fingerprint
-                // collision can never merge different constraints).
-                for ((k, _fp, constraint), group) in coalesce_by_key(jobs, |j| {
+                // Coalesce same-(k, constraint, mode) jobs so one phase-1
+                // setup — and for conditioned groups one whole
+                // conditioning setup (Schur assembly +
+                // eigendecomposition), for MCMC/low-rank groups one
+                // backend build, for MAP groups one deterministic slate —
+                // serves repeated slate contexts instead of looping
+                // single draws. The constraint fingerprint leads the key
+                // so distinct slate contexts compare on one u64; the full
+                // constraint follows as the exactness tiebreak (a
+                // fingerprint collision can never merge different
+                // constraints).
+                for ((k, _fp, constraint, mode), group) in coalesce_by_key(jobs, |j| {
                     (
                         j.req.k,
                         j.req.constraint.as_ref().map(Constraint::fingerprint),
                         j.req.constraint.clone(),
+                        j.req.mode,
                     )
                 }) {
-                    match constraint {
-                        None => serve_plain(&shared, &epoch, k, group, rng, &mut scratch),
-                        Some(c) => serve_conditioned(
+                    match (mode, constraint) {
+                        (SampleMode::Exact, None) => {
+                            serve_plain(&shared, &epoch, k, group, rng, &mut scratch)
+                        }
+                        (SampleMode::Exact, Some(c)) => serve_conditioned(
                             &shared,
                             &epoch,
                             k,
@@ -510,6 +607,35 @@ fn worker_loop(
                             rng,
                             &mut scratch,
                             &mut cond_scratch,
+                        ),
+                        (SampleMode::Mcmc { steps }, constraint) => serve_mcmc(
+                            &shared,
+                            &epoch,
+                            k,
+                            constraint,
+                            steps,
+                            group,
+                            rng,
+                            &mut scratch,
+                        ),
+                        (SampleMode::LowRank { rank }, constraint) => serve_low_rank(
+                            &shared,
+                            &epoch,
+                            k,
+                            constraint,
+                            rank,
+                            group,
+                            rng,
+                            &mut scratch,
+                        ),
+                        (SampleMode::Map, constraint) => serve_map(
+                            &shared,
+                            &epoch,
+                            k,
+                            constraint,
+                            group,
+                            &mut map_scratch,
+                            &mut map_out,
                         ),
                     }
                 }
@@ -648,10 +774,163 @@ fn serve_conditioned(
     }
 }
 
+/// Fail every job in a group on a backend-setup error, splitting
+/// `Invalid` (a bad request surfacing late, e.g. a shrinking hot-swap
+/// raced admission, or a zero-probability include set — `Rejected`) from
+/// service faults (`Service`, counted in `failed`).
+fn fail_group(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    what: &str,
+    e: Error,
+    group: Vec<Job>,
+) {
+    let (reject, msg) = match e {
+        Error::Invalid(m) => {
+            (true, format!("tenant '{}' (gen {}): {m}", epoch.name, epoch.generation))
+        }
+        other => (false, format!("tenant '{}': {what} failed: {other}", epoch.name)),
+    };
+    for job in group {
+        let err = if reject {
+            Error::Rejected(msg.clone())
+        } else {
+            Error::Service(msg.clone())
+        };
+        finish(shared, job, Err(err));
+    }
+}
+
+/// Per-job draws against a zoo backend built once per coalesced group:
+/// `Invalid` draw errors (a shrinking hot-swap raced admission) reject,
+/// anything else is a service fault.
+#[allow(clippy::too_many_arguments)]
+fn serve_backend_draws<B: SamplerBackend>(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    backend: &B,
+    k: usize,
+    constrained: bool,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    let k_opt = if k == 0 { None } else { Some(k) };
+    for job in group {
+        let mut y = Vec::new();
+        let result = match backend.draw_into(k_opt, rng, scratch, &mut y) {
+            Ok(()) => {
+                if constrained {
+                    shared.metrics.conditioned.fetch_add(1, Ordering::Relaxed);
+                    job.entry.metrics().conditioned.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(y)
+            }
+            Err(Error::Invalid(m)) => Err(Error::Rejected(format!(
+                "tenant '{}' (gen {}): {m}",
+                epoch.name, epoch.generation
+            ))),
+            Err(other) => Err(Error::Service(format!(
+                "tenant '{}': {} draw failed: {other}",
+                epoch.name,
+                backend.name()
+            ))),
+        };
+        finish(shared, job, result);
+    }
+}
+
+/// Serve one `(tenant, k, constraint, mcmc)` group: one chain-backend
+/// build shared by the group, one independent `steps`-move chain per job.
+#[allow(clippy::too_many_arguments)]
+fn serve_mcmc(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    steps: usize,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    let constrained = constraint.is_some();
+    let backend = match McmcBackend::new(
+        &epoch.kernel,
+        constraint.unwrap_or_else(Constraint::none),
+        steps,
+    ) {
+        Ok(b) => b,
+        Err(e) => return fail_group(shared, epoch, "mcmc setup", e, group),
+    };
+    serve_backend_draws(shared, epoch, &backend, k, constrained, group, rng, scratch);
+}
+
+/// Serve one `(tenant, k, constraint, lowrank)` group: one `O(N·r)`
+/// spectral-projection gather off the epoch's cached eigendecomposition
+/// (no eigensolve), shared by every draw in the group.
+#[allow(clippy::too_many_arguments)]
+fn serve_low_rank(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    rank: usize,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) {
+    let constrained = constraint.is_some();
+    let backend = match LowRankBackend::from_eigen(
+        epoch.sampler.eigen(),
+        rank,
+        constraint.unwrap_or_else(Constraint::none),
+    ) {
+        Ok(b) => b,
+        Err(e) => return fail_group(shared, epoch, "lowrank setup", e, group),
+    };
+    if constrained {
+        // The constrained projection conditions its truncated kernel —
+        // one conditioning setup per coalesced group, like the exact path.
+        shared.metrics.conditioning_setups.fetch_add(1, Ordering::Relaxed);
+    }
+    serve_backend_draws(shared, epoch, &backend, k, constrained, group, rng, scratch);
+}
+
+/// Serve one `(tenant, k, constraint, map)` group: greedy MAP is
+/// deterministic, so the worker computes **one** slate per group (into
+/// its per-worker [`MapScratch`] — allocation-free when warmed) and every
+/// job in the group receives a copy.
+fn serve_map(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    group: Vec<Job>,
+    map_scratch: &mut MapScratch,
+    out: &mut Vec<usize>,
+) {
+    let constrained = constraint.is_some();
+    let c = constraint.unwrap_or_else(Constraint::none);
+    let k_opt = if k == 0 { None } else { Some(k) };
+    match map_slate_into(&epoch.kernel, k_opt, &c, map_scratch, out) {
+        Ok(_logdet) => {
+            for job in group {
+                if constrained {
+                    shared.metrics.conditioned.fetch_add(1, Ordering::Relaxed);
+                    job.entry.metrics().conditioned.fetch_add(1, Ordering::Relaxed);
+                }
+                finish(shared, job, Ok(out.clone()));
+            }
+        }
+        Err(e) => fail_group(shared, epoch, "map slate", e, group),
+    }
+}
+
 /// Respond to one job and account for its outcome: every accepted request
-/// ends in exactly one of `completed` (Ok), `rejected_invalid` (a
-/// shrinking hot-swap raced the queue — worker-side `Error::Rejected`),
-/// or `failed` (epoch build error), globally and per tenant.
+/// ends in exactly one of `completed` (Ok — also counted into the global
+/// and per-tenant per-mode counters), `rejected_invalid` (a shrinking
+/// hot-swap raced the queue — worker-side `Error::Rejected`), or `failed`
+/// (epoch build error), globally and per tenant.
 fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
     let elapsed = job.accepted.elapsed();
     shared.metrics.latency.record(elapsed);
@@ -660,7 +939,9 @@ fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
     match &result {
         Ok(_) => {
             shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.modes.count(job.req.mode);
             tm.completed.fetch_add(1, Ordering::Relaxed);
+            tm.modes.count(job.req.mode);
         }
         Err(Error::Rejected(_)) => {
             shared.metrics.rejected_invalid.fetch_add(1, Ordering::Relaxed);
@@ -970,5 +1251,101 @@ mod tests {
             }
         }
         assert_eq!(done, 16, "shutdown dropped pending requests");
+    }
+
+    #[test]
+    fn mode_requests_serve_and_count_per_mode() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        let svc = DppService::start(&test_kernel(3, 4, 30), &cfg, 31).unwrap();
+        let t = TenantId::DEFAULT;
+        let y = svc.sample_mode(t, 4, SampleMode::Exact).unwrap();
+        assert_eq!(y.len(), 4);
+        let y = svc.sample_mode(t, 3, SampleMode::Mcmc { steps: 40 }).unwrap();
+        assert_eq!(y.len(), 3);
+        assert!(y.windows(2).all(|w| w[0] < w[1]));
+        assert!(y.iter().all(|&i| i < 12));
+        let y = svc.sample_mode(t, 2, SampleMode::LowRank { rank: 5 }).unwrap();
+        assert_eq!(y.len(), 2);
+        let y = svc.sample_mode(t, 4, SampleMode::Map).unwrap();
+        assert_eq!(y.len(), 4);
+        let m = svc.metrics();
+        assert_eq!(m.modes.get(SampleMode::Exact), 1);
+        assert_eq!(m.modes.get(SampleMode::Mcmc { steps: 40 }), 1);
+        assert_eq!(m.modes.get(SampleMode::LowRank { rank: 5 }), 1);
+        assert_eq!(m.modes.get(SampleMode::Map), 1);
+        let e = svc.registry().entry(t).unwrap();
+        assert_eq!(e.metrics().modes.get(SampleMode::Map), 1);
+        assert!(svc.report().contains("modes: exact=1 mcmc=1 lowrank=1 map=1"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn map_mode_is_deterministic_and_respects_constraints() {
+        let mut cfg = small_cfg();
+        cfg.max_batch = 8;
+        cfg.batch_window_us = 5_000;
+        let svc = DppService::start(&test_kernel(3, 4, 32), &cfg, 33).unwrap();
+        let t = TenantId::DEFAULT;
+        let a = svc.map_slate(t, 5, None).unwrap();
+        let b = svc.map_slate(t, 5, None).unwrap();
+        assert_eq!(a, b, "greedy MAP must be deterministic");
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        let c = Constraint::new(vec![2], vec![0, 7]).unwrap();
+        let y = svc.map_slate(t, 4, Some(c)).unwrap();
+        assert_eq!(y.len(), 4);
+        assert!(y.contains(&2), "include violated: {y:?}");
+        assert!(!y.contains(&0) && !y.contains(&7), "exclude violated: {y:?}");
+        assert_eq!(svc.metrics().conditioned.load(Ordering::Relaxed), 1);
+        // Auto-sized slate: k = 0 lets the greedy stop on its own.
+        let y = svc.map_slate(t, 0, None).unwrap();
+        assert!(y.windows(2).all(|w| w[0] < w[1]));
+        assert!(y.iter().all(|&i| i < 12));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mode_policy_and_bad_mode_parameters_reject_at_admission() {
+        let svc = DppService::start(&test_kernel(3, 3, 34), &small_cfg(), 35).unwrap();
+        let t = TenantId::DEFAULT;
+        // Parameter validation against the 9-item ground set.
+        match svc.sample_mode(t, 2, SampleMode::Mcmc { steps: 0 }) {
+            Err(Error::Rejected(m)) => assert!(m.contains("steps"), "{m}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        match svc.sample_mode(t, 2, SampleMode::LowRank { rank: 0 }) {
+            Err(Error::Rejected(m)) => assert!(m.contains("rank"), "{m}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        match svc.sample_mode(t, 2, SampleMode::LowRank { rank: 99 }) {
+            Err(Error::Rejected(m)) => assert!(m.contains("rank"), "{m}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        match svc.sample_mode(t, 5, SampleMode::LowRank { rank: 3 }) {
+            Err(Error::Rejected(m)) => assert!(m.contains("projection rank"), "{m}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 0);
+        // A constrained low-rank request within the rank budget serves.
+        let c = Constraint::including(vec![0, 1, 2]).unwrap();
+        let req = SampleRequest::new(5)
+            .with_constraint(c)
+            .with_mode(SampleMode::LowRank { rank: 6 });
+        let y = svc.submit(req).unwrap().wait().unwrap();
+        assert_eq!(y.len(), 5);
+        assert!(y.contains(&0) && y.contains(&1) && y.contains(&2));
+        // Policy gates modes per tenant, live.
+        svc.set_mode_policy(t, ModePolicy::exact_only()).unwrap();
+        match svc.sample_mode(t, 2, SampleMode::Map) {
+            Err(Error::Rejected(m)) => assert!(m.contains("policy"), "{m}"),
+            other => panic!("expected policy rejection, got {other:?}"),
+        }
+        assert_eq!(svc.sample_mode(t, 2, SampleMode::Exact).unwrap().len(), 2);
+        // Re-opening the policy restores service.
+        svc.set_mode_policy(t, ModePolicy::allow_all()).unwrap();
+        assert_eq!(svc.sample_mode(t, 2, SampleMode::Map).unwrap().len(), 2);
+        assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 4);
+        svc.shutdown();
     }
 }

@@ -1,0 +1,597 @@
+//! The sampler zoo: one interface over exact, MCMC and low-rank DPP
+//! sampling, plus the [`SampleMode`] fidelity knob the serving stack
+//! threads from request admission down to the workers.
+//!
+//! Following DPPy's catalogue of interchangeable exact/approximate DPP
+//! samplers, every backend implements [`SamplerBackend::draw_into`] — one
+//! subset per call, `k = None` for the size-varying law, `k = Some`
+//! for the k-DPP — so callers (the service workers, the conformance
+//! harness in `tests/sampler_conformance.rs`, `benches/bench_sampler_zoo`)
+//! can swap fidelity-for-throughput without touching call sites:
+//!
+//! - **Exact** — the eigendecomposition sampler ([`Sampler`], and
+//!   [`ConditionedSampler`] when a constraint is attached). The reference
+//!   law; every other backend is measured against it.
+//! - **MCMC** ([`McmcBackend`]) — the `O(κ²)`-per-move insert/delete chain
+//!   of [`crate::dpp::mcmc`]. Constraints need no Schur setup at all: the
+//!   chain simply proposes only from `R = [N] ∖ (A ∪ B)` starting at `A`,
+//!   which restricts the stationary law `∝ det(L_Y)` to the admissible
+//!   lattice `A ⊆ Y ⊆ A ∪ R` — exactly the conditional DPP. Fixed-size
+//!   draws run the symmetric swap chain at the requested cardinality. The
+//!   knob is `steps`: each draw is an independent chain, so fidelity is
+//!   mixing, not machinery.
+//! - **Low-rank** ([`LowRankBackend`]) — a spectral-projection (Nyström-
+//!   style) approximation: the kernel's spectrum is truncated to its top
+//!   `rank` eigenpairs and the rank-`r` kernel `L_r = V_r Λ_r V_rᵀ` is
+//!   sampled *exactly* through the same phase-1/phase-2 engine. The knob
+//!   is `rank`: phase 2 contracts an `N×r` basis instead of `N×N`, and
+//!   draws can never exceed `r` items. Conformance therefore checks the
+//!   backend against enumeration of **its own** truncated kernel (it is an
+//!   exact sampler of an approximate law), while the zoo bench reports its
+//!   total-variation distance from the full law as the fidelity cost.
+//!
+//! Greedy MAP ([`crate::dpp::map`]) is the fourth mode of the serving
+//! stack but not a `SamplerBackend` — it is deterministic, so the service
+//! computes one slate per coalesced group instead of one draw per request.
+
+use std::fmt;
+
+use crate::dpp::condition::{ConditionedSampler, Constraint};
+use crate::dpp::kernel::{EigenVectors, Kernel, KernelEigen};
+use crate::dpp::mcmc::McmcSampler;
+use crate::dpp::sampler::{SampleScratch, Sampler};
+use crate::error::Result;
+use crate::invalid_err;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Default chain length for MCMC-mode draws when the caller does not pick
+/// one (CLI `--mode mcmc` without `--steps`).
+pub const DEFAULT_MCMC_STEPS: usize = 4000;
+
+/// Per-request sampling mode — the fidelity knob carried by
+/// `SampleRequest` through admission, coalescing and the per-mode
+/// metrics. `Ord`/`Hash` so it can key worker coalescing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SampleMode {
+    /// Exact eigendecomposition sampling (the default).
+    Exact,
+    /// Approximate insert/delete (or fixed-size swap) chain; each draw is
+    /// an independent `steps`-move chain.
+    Mcmc { steps: usize },
+    /// Spectral-projection sampling of the top-`rank` truncated kernel.
+    LowRank { rank: usize },
+    /// Deterministic greedy MAP slate instead of a random draw.
+    Map,
+}
+
+impl SampleMode {
+    /// Short stable name, used by metrics and the CLI.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SampleMode::Exact => "exact",
+            SampleMode::Mcmc { .. } => "mcmc",
+            SampleMode::LowRank { .. } => "lowrank",
+            SampleMode::Map => "map",
+        }
+    }
+
+    /// Parse a CLI mode name plus its optional parameters.
+    pub fn parse(name: &str, steps: Option<usize>, rank: Option<usize>) -> Result<SampleMode> {
+        match name {
+            "exact" => Ok(SampleMode::Exact),
+            "mcmc" => {
+                Ok(SampleMode::Mcmc { steps: steps.unwrap_or(DEFAULT_MCMC_STEPS) })
+            }
+            "lowrank" | "low-rank" => match rank {
+                Some(rank) => Ok(SampleMode::LowRank { rank }),
+                None => Err(invalid_err!("--rank is required for --mode lowrank")),
+            },
+            "map" => Ok(SampleMode::Map),
+            other => {
+                Err(invalid_err!("unknown sample mode '{other}' (exact|mcmc|lowrank|map)"))
+            }
+        }
+    }
+}
+
+impl fmt::Display for SampleMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SampleMode::Exact => write!(f, "exact"),
+            SampleMode::Mcmc { steps } => write!(f, "mcmc(steps={steps})"),
+            SampleMode::LowRank { rank } => write!(f, "lowrank(rank={rank})"),
+            SampleMode::Map => write!(f, "map"),
+        }
+    }
+}
+
+/// One randomized DPP sampling backend: a single subset per call, written
+/// into a caller-held buffer against a caller-held scratch.
+pub trait SamplerBackend {
+    /// Backend family name (matches [`SampleMode::label`]).
+    fn name(&self) -> &'static str;
+
+    /// Ground-set size.
+    fn n(&self) -> usize;
+
+    /// Draw one subset — `k = None` samples the size-varying law,
+    /// `k = Some(k)` the k-DPP. The result is sorted and deduplicated.
+    fn draw_into(
+        &self,
+        k: Option<usize>,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) -> Result<()>;
+}
+
+impl SamplerBackend for Sampler {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn n(&self) -> usize {
+        self.n()
+    }
+
+    fn draw_into(
+        &self,
+        k: Option<usize>,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        match k {
+            None => self.sample_into_with_scratch(rng, scratch, out),
+            Some(k) => {
+                if k > self.n() {
+                    return Err(invalid_err!("exact: k={k} exceeds ground set {}", self.n()));
+                }
+                self.sample_k_into_with_scratch(k, rng, scratch, out);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl SamplerBackend for ConditionedSampler {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn n(&self) -> usize {
+        self.n()
+    }
+
+    fn draw_into(
+        &self,
+        k: Option<usize>,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        match k {
+            None => self.sample_into(rng, scratch, out),
+            Some(k) => {
+                if k < self.min_k() || k > self.max_k() {
+                    return Err(invalid_err!(
+                        "exact: k={k} outside constrained range [{}, {}]",
+                        self.min_k(),
+                        self.max_k()
+                    ));
+                }
+                self.sample_k_into(k, rng, scratch, out);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// MCMC sampling backend: independent Metropolis chains over the
+/// constraint-restricted subset lattice (see the module docs).
+pub struct McmcBackend<'a> {
+    kernel: &'a Kernel,
+    constraint: Constraint,
+    /// Free items `R = [N] ∖ (A ∪ B)` — the proposal pool.
+    rest: Vec<usize>,
+    steps: usize,
+}
+
+impl<'a> McmcBackend<'a> {
+    pub fn new(kernel: &'a Kernel, constraint: Constraint, steps: usize) -> Result<Self> {
+        let n = kernel.n();
+        constraint.validate(n)?;
+        if steps == 0 {
+            return Err(invalid_err!("mcmc: steps must be positive"));
+        }
+        let rest: Vec<usize> = (0..n)
+            .filter(|i| {
+                constraint.include().binary_search(i).is_err()
+                    && constraint.exclude().binary_search(i).is_err()
+            })
+            .collect();
+        Ok(McmcBackend { kernel, constraint, rest, steps })
+    }
+
+    /// Smallest / largest admissible fixed size (mirrors
+    /// [`ConditionedSampler::min_k`] / [`ConditionedSampler::max_k`]).
+    pub fn min_k(&self) -> usize {
+        self.constraint.include().len()
+    }
+
+    pub fn max_k(&self) -> usize {
+        self.constraint.include().len() + self.rest.len()
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+impl SamplerBackend for McmcBackend<'_> {
+    fn name(&self) -> &'static str {
+        "mcmc"
+    }
+
+    fn n(&self) -> usize {
+        self.kernel.n()
+    }
+
+    fn draw_into(
+        &self,
+        k: Option<usize>,
+        rng: &mut Rng,
+        _scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        let include = self.constraint.include();
+        match k {
+            None => {
+                // Size-varying conditional chain: start at A, propose only
+                // from R.
+                let mut chain = if include.is_empty() {
+                    McmcSampler::new(self.kernel)
+                } else {
+                    McmcSampler::with_state(self.kernel, include.to_vec())?
+                };
+                if !self.rest.is_empty() {
+                    for _ in 0..self.steps {
+                        chain.step_candidates(&self.rest, rng)?;
+                    }
+                }
+                out.clear();
+                out.extend_from_slice(chain.state());
+            }
+            Some(k) => {
+                if k < self.min_k() || k > self.max_k() {
+                    return Err(invalid_err!(
+                        "mcmc: k={k} outside constrained range [{}, {}]",
+                        self.min_k(),
+                        self.max_k()
+                    ));
+                }
+                let free = k - include.len();
+                if free == 0 {
+                    out.clear();
+                    out.extend_from_slice(include);
+                    return Ok(());
+                }
+                // Random admissible start: A plus `free` items of R drawn
+                // by partial Fisher–Yates; the remainder is the out-pool.
+                let mut pool = self.rest.clone();
+                for i in 0..free {
+                    let j = i + rng.below(pool.len() - i);
+                    pool.swap(i, j);
+                }
+                let mut start = Vec::with_capacity(k);
+                start.extend_from_slice(include);
+                start.extend_from_slice(&pool[..free]);
+                let mut chain = McmcSampler::with_state(self.kernel, start)?;
+                let (inside, outside) = pool.split_at_mut(free);
+                if !outside.is_empty() {
+                    // Symmetric swap proposals (u ∈ Y ∖ A, v ∈ R ∖ Y) keep
+                    // |Y| = k and A pinned.
+                    for _ in 0..self.steps {
+                        let iu = rng.below(inside.len());
+                        let iv = rng.below(outside.len());
+                        let u = inside[iu];
+                        let pos = chain
+                            .state()
+                            .binary_search(&u)
+                            .expect("swap-chain bookkeeping out of sync");
+                        if chain.step_swap(pos, outside[iv], rng)? {
+                            inside[iu] = outside[iv];
+                            outside[iv] = u;
+                        }
+                    }
+                }
+                out.clear();
+                out.extend_from_slice(chain.state());
+            }
+        }
+        Ok(())
+    }
+}
+
+enum LowRankInner {
+    Plain(Sampler),
+    Cond(ConditionedSampler),
+}
+
+/// Spectral-projection (Nyström-style) approximate sampler: an exact
+/// sampler of the top-`rank` truncated kernel `L_r = V_r Λ_r V_rᵀ`.
+pub struct LowRankBackend {
+    /// Top-`rank` eigenvalues (clamped at zero), ascending-index order.
+    values: Vec<f64>,
+    /// Gathered `N×rank` eigenvector block matching `values`.
+    vectors: Matrix,
+    rank: usize,
+    n: usize,
+    inner: LowRankInner,
+}
+
+impl LowRankBackend {
+    /// Build from a kernel (computes the eigendecomposition).
+    pub fn new(kernel: &Kernel, rank: usize, constraint: Constraint) -> Result<Self> {
+        LowRankBackend::from_eigen(&kernel.eigen()?, rank, constraint)
+    }
+
+    /// Build from a precomputed spectrum — the serving path reuses the
+    /// registry epoch's cached eigendecomposition, so constructing the
+    /// backend is an `O(N·r)` gather, not an eigensolve.
+    pub fn from_eigen(eigen: &KernelEigen, rank: usize, constraint: Constraint) -> Result<Self> {
+        let n = eigen.n();
+        if rank == 0 || rank > n {
+            return Err(invalid_err!("lowrank: rank {rank} outside 1..={n}"));
+        }
+        constraint.validate(n)?;
+        // Top-`rank` eigenpairs, deterministically (value desc, index ties
+        // asc), then restored to ascending index order.
+        let mut idx: Vec<usize> = (0..eigen.values.len()).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            eigen.values[b]
+                .partial_cmp(&eigen.values[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(rank);
+        idx.sort_unstable();
+        let values: Vec<f64> = idx.iter().map(|&t| eigen.values[t].max(0.0)).collect();
+        let mut vectors = Matrix::zeros(n, rank);
+        let mut col = vec![0.0; n];
+        for (c, &t) in idx.iter().enumerate() {
+            eigen.vectors.column_into(t, &mut col);
+            for i in 0..n {
+                vectors.set(i, c, col[i]);
+            }
+        }
+        let inner = if constraint.is_empty() {
+            let truncated = KernelEigen {
+                values: values.clone(),
+                vectors: EigenVectors::Dense(vectors.clone()),
+            };
+            LowRankInner::Plain(Sampler::from_eigen(truncated))
+        } else {
+            // Constrained draws condition the truncated kernel exactly —
+            // the one place the projection goes dense.
+            let dense = dense_from_pairs(&values, &vectors);
+            LowRankInner::Cond(ConditionedSampler::new(&Kernel::Full(dense), constraint)?)
+        };
+        Ok(LowRankBackend { values, vectors, rank, n, inner })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Dense `L_r = V_r Λ_r V_rᵀ` — the backend's *own* target law, used
+    /// by the conformance oracle and the zoo bench (`O(N²r)`, test-side).
+    pub fn truncated_dense(&self) -> Matrix {
+        dense_from_pairs(&self.values, &self.vectors)
+    }
+
+    /// Largest subset the projection can emit (`rank`, minus nothing: the
+    /// constrained variant's bound is handled by its conditional
+    /// spectrum).
+    pub fn max_draw(&self) -> usize {
+        self.rank
+    }
+}
+
+fn dense_from_pairs(values: &[f64], vectors: &Matrix) -> Matrix {
+    let n = vectors.rows();
+    let r = vectors.cols();
+    let mut dense = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut v = 0.0;
+            for t in 0..r {
+                v += values[t] * vectors.get(i, t) * vectors.get(j, t);
+            }
+            dense.set(i, j, v);
+            dense.set(j, i, v);
+        }
+    }
+    dense
+}
+
+impl SamplerBackend for LowRankBackend {
+    fn name(&self) -> &'static str {
+        "lowrank"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn draw_into(
+        &self,
+        k: Option<usize>,
+        rng: &mut Rng,
+        scratch: &mut SampleScratch,
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        match &self.inner {
+            LowRankInner::Plain(s) => match k {
+                None => s.sample_into_with_scratch(rng, scratch, out),
+                Some(k) => {
+                    if k > self.rank {
+                        return Err(invalid_err!(
+                            "lowrank: k={k} exceeds projection rank {}",
+                            self.rank
+                        ));
+                    }
+                    s.sample_k_into_with_scratch(k, rng, scratch, out);
+                }
+            },
+            LowRankInner::Cond(cs) => match k {
+                None => cs.sample_into(rng, scratch, out),
+                Some(k) => {
+                    // A rank-`r` kernel gives zero mass to every subset
+                    // larger than `r`, include items counted.
+                    if k < cs.min_k() || k > cs.max_k() || k > self.rank {
+                        return Err(invalid_err!(
+                            "lowrank: k={k} outside constrained rank-{} range [{}, {}]",
+                            self.rank,
+                            cs.min_k(),
+                            cs.max_k().min(self.rank)
+                        ));
+                    }
+                    cs.sample_k_into(k, rng, scratch, out);
+                }
+            },
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = rng.paper_init_kernel(n);
+        m.scale_mut(1.5 / n as f64);
+        m.add_diag_mut(0.3);
+        m
+    }
+
+    #[test]
+    fn mode_parsing_round_trips() {
+        assert_eq!(SampleMode::parse("exact", None, None).unwrap(), SampleMode::Exact);
+        assert_eq!(
+            SampleMode::parse("mcmc", Some(77), None).unwrap(),
+            SampleMode::Mcmc { steps: 77 }
+        );
+        assert_eq!(
+            SampleMode::parse("mcmc", None, None).unwrap(),
+            SampleMode::Mcmc { steps: DEFAULT_MCMC_STEPS }
+        );
+        assert_eq!(
+            SampleMode::parse("lowrank", None, Some(8)).unwrap(),
+            SampleMode::LowRank { rank: 8 }
+        );
+        assert!(SampleMode::parse("lowrank", None, None).is_err());
+        assert!(SampleMode::parse("gibbs", None, None).is_err());
+        assert_eq!(SampleMode::Map.label(), "map");
+        assert_eq!(format!("{}", SampleMode::Mcmc { steps: 5 }), "mcmc(steps=5)");
+    }
+
+    #[test]
+    fn full_rank_projection_reproduces_the_kernel() {
+        let kernel = Kernel::Kron2(spd(3, 1), spd(2, 2));
+        let n = kernel.n();
+        let lr = LowRankBackend::new(&kernel, n, Constraint::none()).unwrap();
+        let dense = lr.truncated_dense();
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (dense.get(i, j) - kernel.entry(i, j)).abs() < 1e-10,
+                    "L_r[{i},{j}] = {} vs L = {}",
+                    dense.get(i, j),
+                    kernel.entry(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_dense_is_psd_with_rank_bounded_draws() {
+        let kernel = Kernel::Kron2(spd(3, 3), spd(3, 4));
+        let rank = 4;
+        let lr = LowRankBackend::new(&kernel, rank, Constraint::none()).unwrap();
+        let mut rng = Rng::new(5);
+        let mut scratch = SampleScratch::new();
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            lr.draw_into(None, &mut rng, &mut scratch, &mut out).unwrap();
+            assert!(out.len() <= rank, "projection emitted {} > rank {rank} items", out.len());
+            assert!(out.windows(2).all(|w| w[0] < w[1]));
+            if !out.is_empty() {
+                // Every drawn subset has positive mass under L_r.
+                let d = lu::det(&lr.truncated_dense().principal_submatrix(&out)).unwrap();
+                assert!(d > 0.0, "subset {out:?} has det {d}");
+            }
+        }
+        assert!(lr.draw_into(Some(rank + 1), &mut rng, &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn mcmc_backend_respects_constraints_and_sizes() {
+        let kernel = Kernel::Kron2(spd(3, 6), spd(2, 7));
+        let c = Constraint::new(vec![1], vec![4]).unwrap();
+        let backend = McmcBackend::new(&kernel, c, 60).unwrap();
+        let mut rng = Rng::new(8);
+        let mut scratch = SampleScratch::new();
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            backend.draw_into(None, &mut rng, &mut scratch, &mut out).unwrap();
+            assert!(out.contains(&1) && !out.contains(&4));
+            assert!(out.windows(2).all(|w| w[0] < w[1]));
+            backend.draw_into(Some(3), &mut rng, &mut scratch, &mut out).unwrap();
+            assert_eq!(out.len(), 3);
+            assert!(out.contains(&1) && !out.contains(&4));
+        }
+        assert!(backend.draw_into(Some(0), &mut rng, &mut scratch, &mut out).is_err());
+        assert!(backend.draw_into(Some(6), &mut rng, &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn constrained_low_rank_draws_stay_admissible() {
+        let kernel = Kernel::Kron2(spd(3, 9), spd(3, 10));
+        let c = Constraint::new(vec![2], vec![7]).unwrap();
+        let lr = LowRankBackend::new(&kernel, 6, c).unwrap();
+        let mut rng = Rng::new(11);
+        let mut scratch = SampleScratch::new();
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            lr.draw_into(None, &mut rng, &mut scratch, &mut out).unwrap();
+            assert!(out.contains(&2) && !out.contains(&7));
+        }
+        lr.draw_into(Some(3), &mut rng, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.contains(&2));
+    }
+
+    #[test]
+    fn backend_trait_objects_unify_the_zoo() {
+        let kernel = Kernel::Kron2(spd(2, 12), spd(3, 13));
+        let exact = Sampler::new(&kernel).unwrap();
+        let mcmc = McmcBackend::new(&kernel, Constraint::none(), 40).unwrap();
+        let lowrank = LowRankBackend::new(&kernel, 4, Constraint::none()).unwrap();
+        let zoo: Vec<&dyn SamplerBackend> = vec![&exact, &mcmc, &lowrank];
+        let mut rng = Rng::new(14);
+        let mut scratch = SampleScratch::new();
+        let mut out = Vec::new();
+        for backend in zoo {
+            assert_eq!(backend.n(), 6);
+            backend.draw_into(None, &mut rng, &mut scratch, &mut out).unwrap();
+            assert!(out.iter().all(|&i| i < 6));
+            backend.draw_into(Some(2), &mut rng, &mut scratch, &mut out).unwrap();
+            assert_eq!(out.len(), 2);
+        }
+    }
+}

@@ -229,9 +229,25 @@ impl<'a> McmcSampler<'a> {
 
     /// One Metropolis step (insert-or-delete proposal mix).
     pub fn step(&mut self, rng: &mut Rng) -> Result<()> {
-        self.proposed += 1;
         let n = self.kernel.n();
         let item = rng.below(n);
+        self.step_item(item, rng)
+    }
+
+    /// One Metropolis step with the proposal drawn uniformly from
+    /// `candidates` instead of the full ground set. With `candidates = R =
+    /// [N] ∖ (A ∪ B)` and a start state containing `A`, the chain walks
+    /// the admissible lattice `A ⊆ Y ⊆ A ∪ R` (pinned items are never
+    /// proposed for removal, banned items never for insertion) and its
+    /// stationary law is `det(L_Y)` restricted to that lattice — the
+    /// conditional DPP, with no Schur setup at all.
+    pub fn step_candidates(&mut self, candidates: &[usize], rng: &mut Rng) -> Result<()> {
+        let item = candidates[rng.below(candidates.len())];
+        self.step_item(item, rng)
+    }
+
+    fn step_item(&mut self, item: usize, rng: &mut Rng) -> Result<()> {
+        self.proposed += 1;
         match self.y.binary_search(&item) {
             Err(_) => {
                 // Propose insertion: accept w.p. ratio/(1+ratio) — the
@@ -257,6 +273,38 @@ impl<'a> McmcSampler<'a> {
             }
         }
         Ok(())
+    }
+
+    /// One fixed-size *swap* proposal: remove the item at sorted position
+    /// `pos`, insert `v ∉ Y`, accepting with the same Barker rule
+    /// `p = r/(1+r)` where `r = det(L_{Y∖u∪v})/det(L_Y)` — detailed
+    /// balance over the k-subset slice holds because the caller's
+    /// proposal (uniform `u` from the removable part of `Y`, uniform `v`
+    /// from the insertable pool) has state-independent pool sizes.
+    /// Returns whether the swap was accepted; a rejected proposal
+    /// restores the state exactly (the factor is rebuilt by re-insertion,
+    /// which leaves the represented subset — and hence every future
+    /// ratio — unchanged).
+    pub fn step_swap(&mut self, pos: usize, v: usize, rng: &mut Rng) -> Result<bool> {
+        self.proposed += 1;
+        debug_assert!(self.y.binary_search(&v).is_err(), "swap target already in Y");
+        let u = self.y[pos];
+        let r1 = self.remove_ratio(pos).max(0.0);
+        self.remove(pos);
+        let r2 = self.insert_ratio(v);
+        let ratio = if r2 <= 0.0 { 0.0 } else { r1 * r2 };
+        let p = ratio / (1.0 + ratio);
+        if rng.bernoulli(p) {
+            self.append(v, r2);
+            self.accepted += 1;
+            self.maybe_refresh()?;
+            Ok(true)
+        } else {
+            let ru = self.insert_ratio(u);
+            debug_assert!(ru > 0.0, "re-inserting a just-removed member must be PD");
+            self.append(u, ru);
+            Ok(false)
+        }
     }
 
     /// Periodic exact refactorization bounding up/downdate drift.
@@ -351,30 +399,66 @@ mod tests {
         assert!(s.accepted > 0, "chain never moved");
     }
 
+    // Distributional correctness (stationary law vs enumeration, chain
+    // marginals vs the factored K-diagonal) lives in the shared
+    // statistical harness: `tests/sampler_conformance.rs` checks every
+    // backend — this chain included — with chi-square and binomial-4σ
+    // bounds against brute-force oracles. The unit tests here only cover
+    // the incremental machinery.
+
     #[test]
-    fn long_run_marginals_approach_k_diagonal() {
-        let kernel = Kernel::Full(spd(5, 7));
-        let marg = kernel.marginal_kernel().unwrap();
-        let mut s = McmcSampler::new(&kernel);
-        let mut rng = Rng::new(9);
-        // Burn-in.
-        s.run(2000, &mut rng).unwrap();
-        let mut counts = vec![0usize; 5];
-        // Chain samples are autocorrelated (τ ≈ tens of steps for this
-        // insert/delete chain), so the effective sample size is sweeps/2τ;
-        // 60k sweeps with a 0.06 tolerance keeps every item's margin at
-        // ≥ 4 effective standard errors (was 30k/0.05 ≈ 2.4σ — flaky).
-        let sweeps = 60_000;
-        for _ in 0..sweeps {
-            s.step(&mut rng).unwrap();
-            for &i in s.state() {
-                counts[i] += 1;
+    fn restricted_proposals_never_touch_pinned_or_banned_items() {
+        let kernel = Kernel::Kron2(spd(3, 11), spd(3, 12));
+        // Pin {0, 4}, ban {2, 7}: proposals come only from the rest.
+        let rest: Vec<usize> = (0..9).filter(|i| ![0usize, 4, 2, 7].contains(i)).collect();
+        let mut s = McmcSampler::with_state(&kernel, vec![0, 4]).unwrap();
+        let mut rng = Rng::new(21);
+        for _ in 0..600 {
+            s.step_candidates(&rest, &mut rng).unwrap();
+            let y = s.state();
+            assert!(y.contains(&0) && y.contains(&4), "pinned item dropped: {y:?}");
+            assert!(!y.contains(&2) && !y.contains(&7), "banned item inserted: {y:?}");
+        }
+        assert!(s.accepted > 0, "restricted chain never moved");
+    }
+
+    #[test]
+    fn swap_steps_preserve_size_and_track_refactorization() {
+        let kernel = Kernel::Kron2(spd(3, 14), spd(3, 15));
+        let k = 4usize;
+        let mut inside: Vec<usize> = vec![0, 2, 5, 8];
+        let mut outside: Vec<usize> = (0..9).filter(|i| !inside.contains(i)).collect();
+        let mut s = McmcSampler::with_state(&kernel, inside.clone()).unwrap();
+        let mut rng = Rng::new(17);
+        let mut accepted = 0usize;
+        for step in 0..300 {
+            let iu = rng.below(inside.len());
+            let iv = rng.below(outside.len());
+            let u = inside[iu];
+            let pos = s.state().binary_search(&u).unwrap();
+            if s.step_swap(pos, outside[iv], &mut rng).unwrap() {
+                inside[iu] = outside[iv];
+                outside[iv] = u;
+                accepted += 1;
+            }
+            assert_eq!(s.state().len(), k, "step {step}: swap changed the size");
+            let mut expect = inside.clone();
+            expect.sort_unstable();
+            assert_eq!(s.state(), &expect[..], "step {step}: bookkeeping diverged");
+            // The maintained factor must still match a fresh
+            // factorization after accepts *and* rejected round-trips.
+            let kk = s.order.len();
+            let mut fresh = McmcSampler::new(&kernel);
+            fresh.order = s.order.clone();
+            fresh.fac = vec![0.0; kk * kk];
+            fresh.refactor().unwrap();
+            for i in 0..kk * kk {
+                assert!(
+                    (s.fac[i] - fresh.fac[i]).abs() < 1e-9,
+                    "step {step}: factor drifted at {i}"
+                );
             }
         }
-        for i in 0..5 {
-            let emp = counts[i] as f64 / sweeps as f64;
-            let expect = marg[(i, i)];
-            assert!((emp - expect).abs() < 0.06, "item {i}: {emp} vs {expect}");
-        }
+        assert!(accepted > 0, "swap chain never accepted");
     }
 }

@@ -14,15 +14,25 @@
 //!   kernels on the restricted ground set.
 //! - [`elementary`]: elementary symmetric polynomials (k-DPP phase 1).
 //! - [`mcmc`]: the approximate insert/delete chain baseline (§4, ref [13])
-//!   with an incrementally maintained `L_Y` Cholesky factor.
+//!   with an incrementally maintained `L_Y` Cholesky factor, plus the
+//!   restricted-proposal conditional chain and the fixed-size swap chain.
+//! - [`map`]: greedy MAP inference — fast `O(Nκ)`-per-step logdet-greedy
+//!   slate construction, constraint-aware and allocation-free when warmed.
+//! - [`backend`]: the sampler zoo — [`SamplerBackend`] unifying exact,
+//!   MCMC and low-rank spectral-projection sampling behind the
+//!   [`SampleMode`] fidelity knob the serving stack selects per request.
 
+pub mod backend;
 pub mod condition;
 pub mod elementary;
 pub mod kernel;
 pub mod likelihood;
+pub mod map;
 pub mod mcmc;
 pub mod sampler;
 
+pub use backend::{LowRankBackend, McmcBackend, SampleMode, SamplerBackend};
 pub use condition::{ConditionScratch, ConditionedSampler, Constraint};
 pub use kernel::{EigenVectors, Kernel, KernelEigen, MarginalScratch};
+pub use map::{map_slate, map_slate_auto, map_slate_constrained, map_slate_into, MapScratch};
 pub use sampler::{SampleScratch, Sampler};

@@ -33,6 +33,8 @@
 //! | §4 / Alg. 2: exact sampling after Hough et al., k-DPPs | [`dpp::sampler`] |
 //! | §4 cost table: `O(N^{3/2})` / `O(N)` preprocessing | [`dpp::kernel`] + [`linalg::kron`] |
 //! | §4 baseline: insert/delete MCMC chain (ref. [13]) | [`dpp::mcmc`] |
+//! | Approximate sampler zoo: MCMC / low-rank spectral projection behind one [`dpp::SamplerBackend`] | [`dpp::backend`] |
+//! | Greedy MAP inference: `argmax det(L_Y)` (Kulesza–Taskar §5.2; fast greedy after Chen et al.) | [`dpp::map`] |
 //! | Conditioning `A ⊆ Y, B ∩ Y = ∅` (Borodin–Rains; Kulesza–Taskar §2.4) | [`dpp::condition`] |
 //! | Marginal kernel `K = L(L+I)⁻¹`, factored diagonals/blocks | [`dpp::kernel`] ([`dpp::KernelEigen`]) |
 //! | k-DPP phase 1: elementary symmetric polynomials (ref. [16]) | [`dpp::elementary`] |
@@ -83,11 +85,17 @@
 //! (kernel + cached eigendecomposition + sampler + factored
 //! marginal-diagonal table) that readers grab with an `Arc` clone — hot
 //! swaps and LRU eviction never block the draw path — while workers
-//! reuse one scratch pair each and coalesce `(tenant, k, constraint)`
-//! request groups through [`dpp::Sampler::sample_k_many`] /
+//! reuse one scratch pair each and coalesce `(tenant, k, constraint,
+//! mode)` request groups through [`dpp::Sampler::sample_k_many`] /
 //! [`dpp::ConditionedSampler::sample_k_each`], sharing one conditioning
 //! setup per slate context; [`coordinator::DppService::marginals`] serves
-//! each tenant's cached inclusion probabilities.
+//! each tenant's cached inclusion probabilities. Every request picks a
+//! [`dpp::SampleMode`] from the sampler zoo ([`dpp::backend`]): exact
+//! spectral draws, per-draw MCMC chains, low-rank spectral projection, or
+//! the deterministic greedy MAP slate ([`dpp::map`]) — gated per tenant
+//! by a [`coordinator::ModePolicy`], counted per mode in the metrics, and
+//! validated against enumeration by the statistical conformance harness
+//! (`tests/sampler_conformance.rs`).
 //!
 //! See `README.md` for the architecture tour and quickstart,
 //! `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the

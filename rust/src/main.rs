@@ -4,7 +4,8 @@
 //!   figures   regenerate the paper's tables/figures (CSV + stdout rows)
 //!   learn     fit a DPP kernel to a dataset file (or synthetic data)
 //!   sample    draw subsets from a learned kernel (optionally conditioned
-//!             on --include/--exclude item sets)
+//!             on --include/--exclude item sets, backend chosen by --mode)
+//!   map       deterministic greedy MAP slate (argmax-det heuristic)
 //!   marginals print factored inclusion probabilities P(i ∈ Y) = K_ii
 //!   serve     run the sampling service over a synthetic request trace
 //!   datagen   generate + save datasets (registry / genes / synthetic)
@@ -13,7 +14,10 @@
 use krondpp::cli::Args;
 use krondpp::config::{Algorithm, ServiceConfig};
 use krondpp::coordinator::DppService;
-use krondpp::dpp::{ConditionedSampler, Constraint, Kernel, SampleScratch, Sampler};
+use krondpp::dpp::{
+    map_slate_into, ConditionedSampler, Constraint, Kernel, LowRankBackend, MapScratch,
+    McmcBackend, SampleMode, SampleScratch, Sampler, SamplerBackend,
+};
 use krondpp::error::Result;
 use krondpp::figures::{fig1, fig2, tables, Scale};
 use krondpp::learn::{init, Learner};
@@ -31,6 +35,9 @@ COMMANDS:
   learn    --algo picard|krk|krk-stochastic|joint|em --data FILE.kds
            [--n1 N --n2 N] [--iters I] [--step A] [--tol T] [--out PREFIX]
   sample   --kernel PREFIX [--tenant NAME] [--k K] [--count C] [--seed S]
+           [--include I1,I2,..] [--exclude J1,J2,..]
+           [--mode exact|mcmc|lowrank|map] [--steps S] [--rank R]
+  map      --kernel PREFIX [--tenant NAME] [--k K]
            [--include I1,I2,..] [--exclude J1,J2,..]
   marginals --kernel PREFIX [--tenant NAME] [--top T]
   serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
@@ -51,6 +58,12 @@ DPP conditioned on those items being in / out of every subset (with --k,
 the slate size counts the forced includes). `marginals` prints the
 factored inclusion probabilities P(i in Y) = K_ii without forming the
 dense N x N marginal kernel.
+
+Sampler zoo: `sample --mode mcmc --steps 4000` runs one independent
+insert/delete (or fixed-size swap) chain per draw; `--mode lowrank
+--rank R` samples the top-R spectral projection of the kernel exactly;
+`--mode map` (or the `map` subcommand, which also prints log det) builds
+the deterministic greedy MAP slate — `--k 0` auto-sizes it.
 ";
 
 fn main() {
@@ -71,6 +84,7 @@ fn run(tokens: Vec<String>) -> Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("learn") => cmd_learn(&args),
         Some("sample") => cmd_sample(&args),
+        Some("map") => cmd_map(&args),
         Some("marginals") => cmd_marginals(&args),
         Some("serve") => cmd_serve(&args),
         Some("datagen") => cmd_datagen(&args),
@@ -302,42 +316,104 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let count: usize = args.get_or("count", 5)?;
     let seed: u64 = args.get_or("seed", 0)?;
     let constraint = Constraint::new(parse_items(args, "include")?, parse_items(args, "exclude")?)?;
+    let mode = SampleMode::parse(
+        args.str_flag("mode").unwrap_or("exact"),
+        args.get_opt::<usize>("steps")?,
+        args.get_opt::<usize>("rank")?,
+    )?;
     if !constraint.is_empty() {
-        // Conditioned draws: one Schur-complement setup, then scratch-reuse
-        // sampling (A ⊆ Y, B ∩ Y = ∅ in every draw).
         if k > 0 {
             constraint.validate_k(k, kernel.n())?;
         } else {
             constraint.validate(kernel.n())?;
         }
-        let cs = ConditionedSampler::new(&kernel, constraint)?;
-        let mut rng = Rng::new(seed);
-        let mut scratch = SampleScratch::new();
-        for i in 0..count {
-            let y = if k == 0 {
-                cs.sample_with_scratch(&mut rng, &mut scratch)
-            } else {
-                let mut y = Vec::new();
-                cs.sample_k_into(k, &mut rng, &mut scratch, &mut y);
-                y
-            };
-            println!("sample {i}: {y:?}");
+    }
+    let k_opt = if k == 0 { None } else { Some(k) };
+    match mode {
+        SampleMode::Map => {
+            // Deterministic: one slate regardless of --count/--seed.
+            let mut scratch = MapScratch::new();
+            let mut slate = Vec::new();
+            let logdet =
+                map_slate_into(&kernel, k_opt, &constraint, &mut scratch, &mut slate)?;
+            println!("map slate ({} items, log det = {logdet:.6}): {slate:?}", slate.len());
         }
-        return Ok(());
+        SampleMode::Mcmc { steps } => {
+            // One independent `steps`-move chain per draw, proposing only
+            // over items the constraint leaves free.
+            let backend = McmcBackend::new(&kernel, constraint, steps)?;
+            draw_loop(&backend, k_opt, count, seed)?;
+        }
+        SampleMode::LowRank { rank } => {
+            // Exact sampling of the top-`rank` spectral projection.
+            let backend = LowRankBackend::new(&kernel, rank, constraint)?;
+            draw_loop(&backend, k_opt, count, seed)?;
+        }
+        SampleMode::Exact if !constraint.is_empty() => {
+            // Conditioned draws: one Schur-complement setup, then
+            // scratch-reuse sampling (A ⊆ Y, B ∩ Y = ∅ in every draw).
+            let cs = ConditionedSampler::new(&kernel, constraint)?;
+            let mut rng = Rng::new(seed);
+            let mut scratch = SampleScratch::new();
+            for i in 0..count {
+                let y = if k == 0 {
+                    cs.sample_with_scratch(&mut rng, &mut scratch)
+                } else {
+                    let mut y = Vec::new();
+                    cs.sample_k_into(k, &mut rng, &mut scratch, &mut y);
+                    y
+                };
+                println!("sample {i}: {y:?}");
+            }
+        }
+        SampleMode::Exact => {
+            let sampler = Sampler::new(&kernel)?;
+            if k > sampler.n() {
+                return Err(krondpp::Error::Invalid(format!(
+                    "requested k={k} > ground set {}",
+                    sampler.n()
+                )));
+            }
+            // Batched engine: one eigendecomposition, draws fanned across
+            // threads, deterministic in --seed regardless of thread count.
+            let draws = sampler.sample_batch(count, k_opt, seed);
+            for (i, y) in draws.iter().enumerate() {
+                println!("sample {i}: {y:?}");
+            }
+        }
     }
-    let sampler = Sampler::new(&kernel)?;
-    if k > sampler.n() {
-        return Err(krondpp::Error::Invalid(format!(
-            "requested k={k} > ground set {}",
-            sampler.n()
-        )));
-    }
-    // Batched engine: one eigendecomposition, draws fanned across threads,
-    // deterministic in --seed regardless of thread count.
-    let draws = sampler.sample_batch(count, if k == 0 { None } else { Some(k) }, seed);
-    for (i, y) in draws.iter().enumerate() {
+    Ok(())
+}
+
+/// Draw `count` subsets from a zoo backend with one shared scratch.
+fn draw_loop<B: SamplerBackend>(
+    backend: &B,
+    k: Option<usize>,
+    count: usize,
+    seed: u64,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let mut scratch = SampleScratch::new();
+    let mut y = Vec::new();
+    for i in 0..count {
+        backend.draw_into(k, &mut rng, &mut scratch, &mut y)?;
         println!("sample {i}: {y:?}");
     }
+    Ok(())
+}
+
+/// `map` subcommand: the deterministic greedy MAP slate with its
+/// objective value (`--k 0` auto-sizes via the gain rule).
+fn cmd_map(args: &Args) -> Result<()> {
+    let kernel = load_kernel(&tenant_prefix(args)?)?;
+    let k: usize = args.get_or("k", 0)?;
+    let constraint = Constraint::new(parse_items(args, "include")?, parse_items(args, "exclude")?)?;
+    let mut scratch = MapScratch::new();
+    let mut slate = Vec::new();
+    let k_opt = if k == 0 { None } else { Some(k) };
+    let logdet = map_slate_into(&kernel, k_opt, &constraint, &mut scratch, &mut slate)?;
+    println!("N = {}  slate size = {}  log det(L_S) = {logdet:.6}", kernel.n(), slate.len());
+    println!("slate: {slate:?}");
     Ok(())
 }
 

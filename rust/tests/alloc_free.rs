@@ -23,6 +23,12 @@
 //! maximum size, so the measured draws cannot allocate no matter how many
 //! eigenvectors phase 1 selects.
 //!
+//! Region D — warmed sampler-zoo serving paths: a greedy MAP slate build
+//! (`map_slate_into` against a caller-held `MapScratch` — the per-worker
+//! setup of the service's MAP mode) and low-rank spectral-projection
+//! draws (`LowRankBackend` built once from a cached eigendecomposition,
+//! like a registry epoch) both run allocation-free once warmed.
+//!
 //! Buffers are grown on the warm-up iterations; after that no region may
 //! hit the allocator.
 //!
@@ -37,7 +43,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use krondpp::dpp::likelihood::theta_dense;
-use krondpp::dpp::{ConditionedSampler, Constraint, Kernel, SampleScratch, Sampler};
+use krondpp::dpp::{
+    map_slate_into, ConditionedSampler, Constraint, Kernel, LowRankBackend, MapScratch,
+    SampleScratch, Sampler, SamplerBackend,
+};
 use krondpp::learn::krk::KrkPicard;
 use krondpp::learn::traits::{Learner, TrainingSet};
 use krondpp::linalg::Matrix;
@@ -168,4 +177,47 @@ fn krk_update_and_step_paths_are_allocation_free_in_steady_state() {
     assert!(out.contains(&3) && out.contains(&20));
     assert!(!out.contains(&10) && !out.contains(&17) && !out.contains(&41));
     assert!(out.iter().all(|&i| i < n1 * n2));
+
+    // Region D warm-up: greedy MAP grows its per-candidate solve rows and
+    // gain table once for the largest slate it serves (the service
+    // worker's per-worker MapScratch discipline); repeated slates then
+    // reuse every buffer, `sort_unstable` included.
+    let map_constraint = Constraint::new(vec![1, 9], vec![5, 33]).unwrap();
+    let mut map_scratch = MapScratch::new();
+    let mut slate = Vec::new();
+    for _ in 0..2 {
+        map_slate_into(&truth, Some(12), &map_constraint, &mut map_scratch, &mut slate)
+            .unwrap();
+    }
+    measure("greedy MAP slate path", || {
+        for _ in 0..10 {
+            map_slate_into(&truth, Some(12), &map_constraint, &mut map_scratch, &mut slate)
+                .unwrap();
+        }
+    });
+    assert_eq!(slate.len(), 12);
+    assert!(slate.contains(&1) && slate.contains(&9));
+    assert!(!slate.contains(&5) && !slate.contains(&33));
+
+    // Low-rank projection built once from the cached spectrum (an O(N·r)
+    // gather, exactly what the serving path does per coalesced group); a
+    // worst-case rank-sized k-DPP draw pins the engine buffers, then the
+    // measured size-varying draws must stay off the allocator.
+    let lowrank = LowRankBackend::from_eigen(sampler.eigen(), 16, Constraint::none()).unwrap();
+    let mut lr_out = Vec::new();
+    lowrank
+        .draw_into(Some(16), &mut draw_rng, &mut draw_scratch, &mut lr_out)
+        .unwrap();
+    for _ in 0..10 {
+        lowrank.draw_into(None, &mut draw_rng, &mut draw_scratch, &mut lr_out).unwrap();
+    }
+    measure("low-rank projection draw path", || {
+        for _ in 0..50 {
+            lowrank
+                .draw_into(None, &mut draw_rng, &mut draw_scratch, &mut lr_out)
+                .unwrap();
+        }
+    });
+    assert!(lr_out.len() <= 16);
+    assert!(lr_out.iter().all(|&i| i < n1 * n2));
 }

@@ -1,0 +1,5 @@
+//! Shared helpers for the integration-test suite. Each test binary pulls
+//! this in with `mod common;`, so everything here must be self-contained.
+#![allow(dead_code)]
+
+pub mod stats;

@@ -1,0 +1,170 @@
+//! The statistical conformance toolkit: brute-force subset laws by
+//! enumeration, chi-square goodness-of-fit with tail merging, and
+//! binomial marginal checks. All bounds are 4σ against a *fixed* seed
+//! (overridable via `KRONDPP_CONFORMANCE_SEED`), so the suite is
+//! deterministic: a failure is a real distribution change, not noise.
+
+use krondpp::dpp::{Constraint, Kernel, SampleScratch, SamplerBackend};
+use krondpp::linalg::{lu, Matrix};
+use krondpp::rng::Rng;
+use std::collections::HashMap;
+
+/// Base seed for every conformance test. Pinned in CI via the
+/// `KRONDPP_CONFORMANCE_SEED` env var so reruns are bit-identical.
+pub fn seed() -> u64 {
+    std::env::var("KRONDPP_CONFORMANCE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2016)
+}
+
+/// A small well-conditioned SPD factor for building test kernels.
+pub fn spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = rng.paper_init_kernel(n);
+    m.scale_mut(1.5 / n as f64);
+    m.add_diag_mut(0.3);
+    m
+}
+
+/// Brute-force law of the (optionally constrained, optionally fixed-size)
+/// DPP by enumerating all `2^N` subsets: `P(Y) ∝ det(L_Y)` over subsets
+/// with `A ⊆ Y`, `B ∩ Y = ∅`, and `|Y| = k` when `k` is given. Only
+/// usable for the small `N` of the conformance suite.
+pub fn subset_law(
+    kernel: &Kernel,
+    constraint: &Constraint,
+    k: Option<usize>,
+) -> HashMap<Vec<usize>, f64> {
+    let n = kernel.n();
+    assert!(n <= 16, "enumeration oracle is O(2^N): N = {n} is too big");
+    let dense = kernel.to_dense();
+    let amask: u32 = constraint.include().iter().map(|&i| 1u32 << i).sum();
+    let bmask: u32 = constraint.exclude().iter().map(|&i| 1u32 << i).sum();
+    let mut law = HashMap::new();
+    let mut total = 0.0;
+    for mask in 0u32..(1u32 << n) {
+        if mask & amask != amask || mask & bmask != 0 {
+            continue;
+        }
+        if let Some(k) = k {
+            if mask.count_ones() as usize != k {
+                continue;
+            }
+        }
+        let subset: Vec<usize> = (0..n).filter(|&i| mask >> i & 1 == 1).collect();
+        let w = if subset.is_empty() {
+            1.0
+        } else {
+            lu::det(&dense.principal_submatrix(&subset)).unwrap_or(0.0).max(0.0)
+        };
+        total += w;
+        law.insert(subset, w);
+    }
+    assert!(total > 0.0, "constraint admits no subset with positive mass");
+    for w in law.values_mut() {
+        *w /= total;
+    }
+    law
+}
+
+/// Collect `count` draws from a backend (one shared scratch, like the
+/// service workers).
+pub fn draw_many<B: SamplerBackend>(
+    backend: &B,
+    k: Option<usize>,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let mut scratch = SampleScratch::new();
+    let mut out = Vec::new();
+    let mut draws = Vec::with_capacity(count);
+    for _ in 0..count {
+        backend.draw_into(k, rng, &mut scratch, &mut out).expect("draw failed");
+        draws.push(out.clone());
+    }
+    draws
+}
+
+/// Chi-square goodness-of-fit of `draws` against `law`. Cells whose
+/// expected count falls below 5 are merged into one tail cell (standard
+/// practice — the χ² normal approximation needs fat cells); the statistic
+/// is then bounded by `dof + 4·sqrt(2·dof)`, a 4σ normal bound on the
+/// χ²_dof distribution. Draws outside the law's support fail outright.
+pub fn chi_square_conformance(
+    label: &str,
+    draws: &[Vec<usize>],
+    law: &HashMap<Vec<usize>, f64>,
+) {
+    let total = draws.len() as f64;
+    let mut counts: HashMap<&[usize], f64> = HashMap::new();
+    for d in draws {
+        *counts.entry(d.as_slice()).or_insert(0.0) += 1.0;
+    }
+    for (subset, c) in &counts {
+        let p = law.get(*subset).copied().unwrap_or(0.0);
+        assert!(
+            p > 1e-12,
+            "{label}: drew {subset:?} {c} times but the law gives it probability {p:e}"
+        );
+    }
+    let mut stat = 0.0;
+    let mut cells = 0.0;
+    let mut tail_exp = 0.0;
+    let mut tail_obs = 0.0;
+    for (subset, &p) in law {
+        let expected = p * total;
+        let observed = counts.get(subset.as_slice()).copied().unwrap_or(0.0);
+        if expected < 5.0 {
+            tail_exp += expected;
+            tail_obs += observed;
+        } else {
+            stat += (observed - expected).powi(2) / expected;
+            cells += 1.0;
+        }
+    }
+    if tail_exp > 0.0 {
+        stat += (tail_obs - tail_exp).powi(2) / tail_exp;
+        cells += 1.0;
+    }
+    let dof = (cells - 1.0).max(1.0);
+    let bound = dof + 4.0 * (2.0 * dof).sqrt();
+    assert!(
+        stat <= bound,
+        "{label}: chi-square {stat:.2} exceeds the 4σ bound {bound:.2} \
+         (dof {dof}, {} draws over {} cells)",
+        draws.len(),
+        law.len()
+    );
+}
+
+/// Empirical inclusion frequencies `#{Y ∋ i} / draws` over a ground set
+/// of size `n`.
+pub fn empirical_marginals(draws: &[Vec<usize>], n: usize) -> Vec<f64> {
+    let mut freq = vec![0.0; n];
+    for d in draws {
+        for &i in d {
+            freq[i] += 1.0;
+        }
+    }
+    let total = draws.len().max(1) as f64;
+    freq.iter_mut().for_each(|f| *f /= total);
+    freq
+}
+
+/// Per-item binomial check: every empirical inclusion frequency must sit
+/// within `4σ` (plus a small absolute floor for near-degenerate
+/// probabilities) of its exact value.
+pub fn check_marginals(label: &str, empirical: &[f64], truth: &[f64], draws: usize) {
+    assert_eq!(empirical.len(), truth.len(), "{label}: length mismatch");
+    let total = draws as f64;
+    for (i, (&e, &t)) in empirical.iter().zip(truth).enumerate() {
+        let se = (t * (1.0 - t) / total).max(0.0).sqrt();
+        let tol = 4.0 * se + 0.004;
+        assert!(
+            (e - t).abs() <= tol,
+            "{label}: item {i} empirical marginal {e:.4} vs exact {t:.4} \
+             (tol {tol:.4} over {draws} draws)"
+        );
+    }
+}

@@ -1,12 +1,12 @@
 //! Coordinator integration under load and failure injection: concurrent
-//! clients, multi-tenant epoch hot-swaps mid-flight, LRU eviction + lazy
-//! rebuild round-trips, backpressure accounting, and metrics-vs-observed
-//! consistency.
+//! clients, multi-tenant epoch hot-swaps mid-flight, mixed sampler-mode
+//! traffic, LRU eviction + lazy rebuild round-trips, backpressure
+//! accounting, and metrics-vs-observed consistency.
 
 use krondpp::config::ServiceConfig;
 use krondpp::coordinator::{DppService, LearningJob, SampleRequest};
 use krondpp::data;
-use krondpp::dpp::Constraint;
+use krondpp::dpp::{Constraint, SampleMode};
 use krondpp::learn::init;
 use krondpp::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -144,6 +144,96 @@ fn constrained_requests_survive_hot_swaps() {
     let probs = svc.marginals(krondpp::coordinator::TenantId::DEFAULT).unwrap();
     assert_eq!(probs.len(), 16);
     assert!(probs.iter().all(|p| (0.0..=1.0).contains(p)));
+}
+
+/// Mixed sampler-mode traffic under live hot swaps: four client threads
+/// cycle through every [`SampleMode`] against one tenant while a swapper
+/// republishes same-`N` kernels mid-flight. Every accepted request must
+/// complete (same-`N` swaps can never invalidate a queued request), the
+/// per-mode completion counters must match the client-side tallies
+/// *exactly* (globally and per tenant), and the accounting invariant
+/// `accepted = completed + failed + rejected_invalid` must hold with
+/// `failed = 0`.
+#[test]
+fn mixed_mode_traffic_survives_hot_swaps_with_exact_mode_accounting() {
+    let cfg = ServiceConfig {
+        workers: 3,
+        max_batch: 8,
+        batch_window_us: 100,
+        queue_capacity: 50_000,
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(DppService::start(&kernel(4, 4, 21), &cfg, 22).unwrap());
+    let modes = [
+        SampleMode::Exact,
+        SampleMode::Mcmc { steps: 64 },
+        SampleMode::LowRank { rank: 12 },
+        SampleMode::Map,
+    ];
+    // Client-side success tallies, indexed like `modes`.
+    let served: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..modes.len()).map(|_| AtomicUsize::new(0)).collect());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc2 = Arc::clone(&svc);
+        let served2 = Arc::clone(&served);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..48usize {
+                let mi = (t as usize + i) % modes.len();
+                let k = i % 5 + 1; // 1..=5, ≤ rank 12, valid for N = 16
+                let y = svc2
+                    .submit(SampleRequest::new(k).with_mode(modes[mi]))
+                    .expect("admission refused a valid mode")
+                    .wait()
+                    .expect("accepted mixed-mode request failed");
+                assert_eq!(y.len(), k, "mode {} returned wrong size", modes[mi].label());
+                assert!(y.iter().all(|&item| item < 16));
+                assert!(y.windows(2).all(|w| w[0] < w[1]), "unsorted slate: {y:?}");
+                served2[mi].fetch_add(1, Ordering::SeqCst);
+            }
+        }));
+    }
+    // Swapper: same-N republishes so queued requests stay valid across
+    // every generation they might race with.
+    {
+        let svc2 = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            for s in 0..10u64 {
+                svc2.update_kernel(&kernel(4, 4, 400 + s)).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = svc.metrics();
+    let accepted = m.accepted.load(Ordering::Relaxed);
+    assert_eq!(accepted, 4 * 48);
+    assert_eq!(m.completed.load(Ordering::Relaxed), accepted);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(m.rejected_invalid.load(Ordering::Relaxed), 0);
+    // Per-mode counters are exact — each mode family saw exactly the
+    // requests the clients counted, globally and on the tenant.
+    let reg = svc.registry();
+    let tenant = reg.entry(svc.tenant("default").unwrap()).unwrap();
+    for (mi, &mode) in modes.iter().enumerate() {
+        let want = served[mi].load(Ordering::SeqCst) as u64;
+        assert_eq!(want, 48, "client tally for {} off", mode.label());
+        assert_eq!(
+            m.modes.get(mode),
+            want,
+            "global per-mode counter drifted for {}",
+            mode.label()
+        );
+        assert_eq!(
+            tenant.metrics().modes.get(mode),
+            want,
+            "tenant per-mode counter drifted for {}",
+            mode.label()
+        );
+    }
+    assert!(m.report().contains("modes: exact=48 mcmc=48 lowrank=48 map=48"));
 }
 
 /// The tentpole's acceptance scenario: continuous submits across two

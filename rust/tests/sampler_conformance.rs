@@ -1,0 +1,252 @@
+//! Statistical conformance harness for the sampler zoo: every backend —
+//! exact spectral, MCMC (size-varying and fixed-size swap chains, plain
+//! and constrained), and low-rank spectral projection — is tested against
+//! brute-force enumeration of its target law on small kernels, via
+//! chi-square goodness-of-fit over full subset histograms plus per-item
+//! binomial marginal checks (see `tests/common/stats.rs`).
+//!
+//! All bounds are 4σ against fixed seeds (pinned in CI through
+//! `KRONDPP_CONFORMANCE_SEED`), so the suite is deterministic: a failure
+//! means the sampling distribution changed, not that the dice were
+//! unlucky. The low-rank backend is checked against enumeration of its
+//! *own* truncated kernel — it is an exact sampler of an approximate law;
+//! its distance from the full law is a fidelity knob measured by
+//! `benches/bench_sampler_zoo.rs`, not a conformance property.
+
+mod common;
+
+use common::stats::{
+    chi_square_conformance, check_marginals, draw_many, empirical_marginals, seed, spd,
+    subset_law,
+};
+use krondpp::dpp::{
+    ConditionedSampler, Constraint, Kernel, LowRankBackend, McmcBackend, Sampler,
+    SamplerBackend,
+};
+use krondpp::rng::Rng;
+use std::collections::HashMap;
+
+/// `N = 6` Kronecker kernel — small enough for exhaustive enumeration.
+fn kron2() -> Kernel {
+    Kernel::Kron2(spd(2, 41), spd(3, 42))
+}
+
+/// `N = 8` three-factor kernel (`m = 3` coverage).
+fn kron3() -> Kernel {
+    Kernel::Kron3(spd(2, 43), spd(2, 44), spd(2, 45))
+}
+
+/// Exact marginal of the enumerated law: `P(i ∈ Y) = Σ_{Y ∋ i} P(Y)`.
+fn law_marginals(law: &HashMap<Vec<usize>, f64>, n: usize) -> Vec<f64> {
+    let mut probs = vec![0.0; n];
+    for (subset, &p) in law {
+        for &i in subset {
+            probs[i] += p;
+        }
+    }
+    probs
+}
+
+#[test]
+fn exact_sampler_matches_enumeration() {
+    let kernel = kron2();
+    let sampler = Sampler::new(&kernel).unwrap();
+    let law = subset_law(&kernel, &Constraint::none(), None);
+    let mut rng = Rng::new(seed());
+    let draws = draw_many(&sampler, None, 6000, &mut rng);
+    chi_square_conformance("exact/kron2", &draws, &law);
+    check_marginals(
+        "exact/kron2",
+        &empirical_marginals(&draws, kernel.n()),
+        &kernel.eigen().unwrap().inclusion_probabilities(),
+        draws.len(),
+    );
+}
+
+#[test]
+fn exact_k_dpp_matches_enumeration_on_kron3() {
+    let kernel = kron3();
+    let sampler = Sampler::new(&kernel).unwrap();
+    let law = subset_law(&kernel, &Constraint::none(), Some(3));
+    let mut rng = Rng::new(seed() ^ 0xA1);
+    let draws = draw_many(&sampler, Some(3), 6000, &mut rng);
+    assert!(draws.iter().all(|y| y.len() == 3));
+    chi_square_conformance("exact-k3/kron3", &draws, &law);
+    check_marginals(
+        "exact-k3/kron3",
+        &empirical_marginals(&draws, kernel.n()),
+        &law_marginals(&law, kernel.n()),
+        draws.len(),
+    );
+}
+
+#[test]
+fn exact_constrained_sampler_matches_enumeration() {
+    let kernel = kron2();
+    let c = Constraint::new(vec![1], vec![4]).unwrap();
+    let cs = ConditionedSampler::new(&kernel, c.clone()).unwrap();
+    let law = subset_law(&kernel, &c, None);
+    let mut rng = Rng::new(seed() ^ 0xA2);
+    let draws = draw_many(&cs, None, 6000, &mut rng);
+    assert!(draws.iter().all(|y| y.contains(&1) && !y.contains(&4)));
+    chi_square_conformance("exact-cond/kron2", &draws, &law);
+
+    // Constrained k-DPP over the same slate context.
+    let law_k = subset_law(&kernel, &c, Some(3));
+    let draws_k = draw_many(&cs, Some(3), 6000, &mut rng);
+    chi_square_conformance("exact-cond-k3/kron2", &draws_k, &law_k);
+}
+
+#[test]
+fn mcmc_chain_matches_enumeration() {
+    let kernel = kron2();
+    let backend = McmcBackend::new(&kernel, Constraint::none(), 400).unwrap();
+    let law = subset_law(&kernel, &Constraint::none(), None);
+    let mut rng = Rng::new(seed() ^ 0xB1);
+    let draws = draw_many(&backend, None, 4000, &mut rng);
+    chi_square_conformance("mcmc/kron2", &draws, &law);
+    check_marginals(
+        "mcmc/kron2",
+        &empirical_marginals(&draws, kernel.n()),
+        &law_marginals(&law, kernel.n()),
+        draws.len(),
+    );
+}
+
+#[test]
+fn mcmc_swap_chain_matches_k_dpp_enumeration() {
+    let kernel = kron2();
+    let backend = McmcBackend::new(&kernel, Constraint::none(), 400).unwrap();
+    let law = subset_law(&kernel, &Constraint::none(), Some(3));
+    let mut rng = Rng::new(seed() ^ 0xB2);
+    let draws = draw_many(&backend, Some(3), 4000, &mut rng);
+    assert!(draws.iter().all(|y| y.len() == 3));
+    chi_square_conformance("mcmc-k3/kron2", &draws, &law);
+}
+
+#[test]
+fn mcmc_constrained_chains_match_conditional_enumeration() {
+    let kernel = kron2();
+    let c = Constraint::new(vec![0], vec![3]).unwrap();
+    let backend = McmcBackend::new(&kernel, c.clone(), 400).unwrap();
+    let mut rng = Rng::new(seed() ^ 0xB3);
+
+    // Size-varying conditional chain (restricted proposals).
+    let law = subset_law(&kernel, &c, None);
+    let draws = draw_many(&backend, None, 4000, &mut rng);
+    assert!(draws.iter().all(|y| y.contains(&0) && !y.contains(&3)));
+    chi_square_conformance("mcmc-cond/kron2", &draws, &law);
+
+    // Fixed-size swap chain under the same constraint.
+    let law_k = subset_law(&kernel, &c, Some(3));
+    let draws_k = draw_many(&backend, Some(3), 4000, &mut rng);
+    assert!(draws_k.iter().all(|y| y.len() == 3 && y.contains(&0) && !y.contains(&3)));
+    chi_square_conformance("mcmc-cond-k3/kron2", &draws_k, &law_k);
+}
+
+#[test]
+fn mcmc_matches_enumeration_on_kron3() {
+    let kernel = kron3();
+    let backend = McmcBackend::new(&kernel, Constraint::none(), 500).unwrap();
+    let law = subset_law(&kernel, &Constraint::none(), None);
+    let mut rng = Rng::new(seed() ^ 0xB4);
+    let draws = draw_many(&backend, None, 4000, &mut rng);
+    chi_square_conformance("mcmc/kron3", &draws, &law);
+}
+
+#[test]
+fn low_rank_backend_matches_its_truncated_law() {
+    let kernel = kron2();
+    let lr = LowRankBackend::new(&kernel, 4, Constraint::none()).unwrap();
+    // The projection's own target law: enumeration of L_r, not L.
+    let truncated = Kernel::Full(lr.truncated_dense());
+    let law = subset_law(&truncated, &Constraint::none(), None);
+    let mut rng = Rng::new(seed() ^ 0xC1);
+    let draws = draw_many(&lr, None, 6000, &mut rng);
+    assert!(draws.iter().all(|y| y.len() <= 4));
+    chi_square_conformance("lowrank-r4/kron2", &draws, &law);
+
+    let law_k = subset_law(&truncated, &Constraint::none(), Some(2));
+    let draws_k = draw_many(&lr, Some(2), 6000, &mut rng);
+    chi_square_conformance("lowrank-r4-k2/kron2", &draws_k, &law_k);
+}
+
+#[test]
+fn low_rank_constrained_matches_truncated_conditional_law() {
+    let kernel = kron2();
+    let c = Constraint::new(vec![1], vec![4]).unwrap();
+    let lr = LowRankBackend::new(&kernel, 4, c.clone()).unwrap();
+    let truncated = Kernel::Full(lr.truncated_dense());
+    let law = subset_law(&truncated, &c, None);
+    let mut rng = Rng::new(seed() ^ 0xC2);
+    let draws = draw_many(&lr, None, 6000, &mut rng);
+    assert!(draws.iter().all(|y| y.contains(&1) && !y.contains(&4)));
+    chi_square_conformance("lowrank-r4-cond/kron2", &draws, &law);
+}
+
+#[test]
+fn full_rank_projection_matches_the_exact_law() {
+    // At `rank = N` the projection *is* the kernel: conformance against
+    // the full law, plus marginals against the factored diagonal table.
+    let kernel = kron2();
+    let n = kernel.n();
+    let lr = LowRankBackend::new(&kernel, n, Constraint::none()).unwrap();
+    let law = subset_law(&kernel, &Constraint::none(), None);
+    let mut rng = Rng::new(seed() ^ 0xC3);
+    let draws = draw_many(&lr, None, 6000, &mut rng);
+    chi_square_conformance("lowrank-full/kron2", &draws, &law);
+    check_marginals(
+        "lowrank-full/kron2",
+        &empirical_marginals(&draws, n),
+        &kernel.eigen().unwrap().inclusion_probabilities(),
+        draws.len(),
+    );
+}
+
+#[test]
+fn batch_engine_marginals_match_factored_inclusion_probabilities() {
+    // The multi-threaded batch path (the serving engine) against the
+    // factored marginal table on a bigger kernel — replaces the ad-hoc
+    // marginal checks that used to live in the `dpp::sampler` unit tests.
+    let kernel = Kernel::Kron2(spd(3, 46), spd(4, 47));
+    let n = kernel.n();
+    let sampler = Sampler::new(&kernel).unwrap();
+    let count = 12_000;
+    let draws = sampler.sample_batch(count, None, seed() ^ 0xD1);
+    check_marginals(
+        "batch/kron2-12",
+        &empirical_marginals(&draws, n),
+        &kernel.eigen().unwrap().inclusion_probabilities(),
+        count,
+    );
+    // Expected size doubles as a scalar summary of the same law.
+    let truth: f64 = kernel.eigen().unwrap().inclusion_probabilities().iter().sum();
+    let mean: f64 = draws.iter().map(|y| y.len() as f64).sum::<f64>() / count as f64;
+    assert!(
+        (mean - truth).abs() < 0.1,
+        "E|Y| = {mean:.3} vs factored diagonal sum {truth:.3}"
+    );
+}
+
+#[test]
+fn conformance_draws_are_deterministic_under_the_pinned_seed() {
+    let kernel = kron2();
+    let exact = Sampler::new(&kernel).unwrap();
+    let mcmc = McmcBackend::new(&kernel, Constraint::none(), 50).unwrap();
+    let lowrank = LowRankBackend::new(&kernel, 4, Constraint::none()).unwrap();
+    let zoo: [(&str, &dyn SamplerBackend); 3] =
+        [("exact", &exact), ("mcmc", &mcmc), ("lowrank", &lowrank)];
+    for (name, backend) in zoo {
+        let mut rng_a = Rng::new(seed());
+        let mut rng_b = Rng::new(seed());
+        let mut scratch_a = krondpp::dpp::SampleScratch::new();
+        let mut scratch_b = krondpp::dpp::SampleScratch::new();
+        let mut ya = Vec::new();
+        let mut yb = Vec::new();
+        for i in 0..50 {
+            backend.draw_into(None, &mut rng_a, &mut scratch_a, &mut ya).unwrap();
+            backend.draw_into(None, &mut rng_b, &mut scratch_b, &mut yb).unwrap();
+            assert_eq!(ya, yb, "{name}: draw {i} diverged under identical seeds");
+        }
+    }
+}
