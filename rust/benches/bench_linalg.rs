@@ -17,7 +17,7 @@
 
 use krondpp::bench_util::{black_box, section, Bencher, Report};
 use krondpp::linalg::eigen::SymEigen;
-use krondpp::linalg::{cholesky, kron, matmul, Matrix};
+use krondpp::linalg::{cholesky, kron, matmul, simd, trisolve, Matrix};
 use krondpp::rng::Rng;
 
 fn spd(n: usize, rng: &mut Rng) -> Matrix {
@@ -60,6 +60,109 @@ fn main() {
         report.case(&packed, &[("gflops", pg)]);
         report.case(&legacy, &[("gflops", lg)]);
         report.derived(&format!("gemm_packed_vs_legacy_speedup_n{n}"), speedup);
+    }
+
+    // ---------------------------------------------------------------
+    // Per-arch SIMD dispatch: scalar oracle vs the detected kernel.
+    // Both arms run in this process through the `_with` seam (the env
+    // override `KRONDPP_FORCE_SCALAR` can only pin a whole process), so
+    // the ratio isolates the micro-kernel itself — packing, blocking and
+    // threading are identical, and the results agree bitwise.
+    // ---------------------------------------------------------------
+    let act = simd::active();
+    let ora = simd::forced_scalar();
+    section(&format!(
+        "SIMD dispatch: {} ({}x{} tile) vs scalar oracle ({}x{})",
+        act.name(),
+        act.mr(),
+        act.nr(),
+        ora.mr(),
+        ora.nr()
+    ));
+    let simd_active = if std::ptr::eq(act, ora) {
+        println!("  (dispatch resolved to scalar — ratios will be ~1.0x)");
+        false
+    } else {
+        true
+    };
+    report.derived("simd_dispatch_is_vectorized", if simd_active { 1.0 } else { 0.0 });
+    let mut gs = matmul::GemmScratch::new();
+    for n in [128usize, 512, 1024] {
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
+        let a = rng.normal_matrix(n, n);
+        let x = rng.normal_matrix(n, n);
+        let mut c = Matrix::zeros(n, n);
+        let flops = 2.0 * (n as f64).powi(3);
+        let disp = b.run(&format!("gemm dispatched {n}x{n}"), || {
+            matmul::gemm_into_with(c.view_mut(), 1.0, a.view(), x.view(), false, &mut gs, act);
+            black_box(&c);
+        });
+        let scal = b.run(&format!("gemm forced-scalar {n}x{n}"), || {
+            matmul::gemm_into_with(c.view_mut(), 1.0, a.view(), x.view(), false, &mut gs, ora);
+            black_box(&c);
+        });
+        let (dg, sg) = (flops / disp.secs() / 1e9, flops / scal.secs() / 1e9);
+        let speedup = scal.secs() / disp.secs();
+        println!("    -> {dg:.2} vs {sg:.2} GFLOP/s  (simd speedup {speedup:.2}x)");
+        report.case(&disp, &[("gflops", dg)]);
+        report.case(&scal, &[("gflops", sg)]);
+        report.derived(&format!("gemm_simd_vs_scalar_speedup_n{n}"), speedup);
+    }
+    for n in [256usize, 512] {
+        if n > cap {
+            println!("  (skipped N={n}: KRONDPP_BENCH_MAX_N)");
+            continue;
+        }
+        // Lower-triangular solve with a wide RHS: the row-axpy sweep.
+        let mut l = spd(n, &mut rng);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                l.set(i, j, 0.0);
+            }
+        }
+        let rhs = rng.normal_matrix(n, n);
+        let mut xbuf = rhs.clone();
+        let disp = b.run(&format!("trisolve dispatched {n} ({n} rhs)"), || {
+            xbuf.as_mut_slice().copy_from_slice(rhs.as_slice());
+            trisolve::solve_lower_in_place_with(l.view(), &mut xbuf, false, act);
+            black_box(&xbuf);
+        });
+        let scal = b.run(&format!("trisolve forced-scalar {n}"), || {
+            xbuf.as_mut_slice().copy_from_slice(rhs.as_slice());
+            trisolve::solve_lower_in_place_with(l.view(), &mut xbuf, false, ora);
+            black_box(&xbuf);
+        });
+        let speedup = scal.secs() / disp.secs();
+        println!("    -> trisolve simd speedup {speedup:.2}x");
+        report.case(&disp, &[]);
+        report.case(&scal, &[]);
+        report.derived(&format!("trisolve_simd_vs_scalar_speedup_n{n}"), speedup);
+    }
+    {
+        // Marginal-diagonal grid sweep (λ/(1+λ) weights + squared-
+        // eigenvector GEMM feeds) on a Kron2 kernel.
+        let (n1, n2) = (48usize.min(cap), 48usize.min(cap));
+        let k1 = spd(n1, &mut rng);
+        let k2 = spd(n2, &mut rng);
+        let eig = krondpp::dpp::Kernel::Kron2(k1, k2).eigen().unwrap();
+        let mut scratch = krondpp::dpp::MarginalScratch::new();
+        let mut diag = Vec::new();
+        let disp = b.run(&format!("marginal grid dispatched {n1}x{n2}"), || {
+            eig.inclusion_probabilities_into_with(&mut diag, &mut scratch, act);
+            black_box(&diag);
+        });
+        let scal = b.run(&format!("marginal grid forced-scalar {n1}x{n2}"), || {
+            eig.inclusion_probabilities_into_with(&mut diag, &mut scratch, ora);
+            black_box(&diag);
+        });
+        let speedup = scal.secs() / disp.secs();
+        println!("    -> marginal-grid simd speedup {speedup:.2}x");
+        report.case(&disp, &[]);
+        report.case(&scal, &[]);
+        report.derived("marginal_grid_simd_vs_scalar_speedup", speedup);
     }
 
     section("symmetric eigendecomposition: blocked two-stage vs tred2/tql2");

@@ -21,6 +21,13 @@ pub struct ElementaryTable {
 impl ElementaryTable {
     /// Build the DP table for eigenvalues `lambda` up to order `k`.
     pub fn new(lambda: &[f64], k: usize) -> Self {
+        Self::new_with(lambda, k, crate::linalg::simd::active())
+    }
+
+    /// [`ElementaryTable::new`] pinned to an explicit dispatch arm — the
+    /// conformance tests use this to check the vectorized DP sweep against
+    /// the forced-scalar oracle in one process.
+    pub fn new_with(lambda: &[f64], k: usize, kern: &crate::linalg::simd::Kernels) -> Self {
         let n = lambda.len();
         let mut table = Vec::with_capacity(n + 1);
         let mut log_scale = Vec::with_capacity(n + 1);
@@ -31,17 +38,16 @@ impl ElementaryTable {
         for i in 1..=n {
             let prev = &table[i - 1];
             let mut cur = vec![0.0; k + 1];
-            cur[0] = prev[0];
-            for j in 1..=k.min(i) {
-                cur[j] = prev[j] + lambda[i - 1] * prev[j - 1];
-            }
+            // Full-row vectorized recurrence. Entries j > min(i, k) stay
+            // exactly 0: prev[j] and prev[j-1] are both zero there, and
+            // `0 + λ·0` is +0.0 bit-for-bit, so sweeping the whole row is
+            // bitwise identical to the old `1..=k.min(i)` loop.
+            kern.dp_row(&mut cur, prev, lambda[i - 1]);
             // Rescale to avoid overflow: bring max to ~1.
             let maxv = cur.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
             let mut ls = log_scale[i - 1];
             if maxv > 1e100 || (maxv > 0.0 && maxv < 1e-100) {
-                for x in &mut cur {
-                    *x /= maxv;
-                }
+                kern.div_assign(&mut cur, maxv);
                 ls += maxv.ln();
             }
             table.push(cur);

@@ -21,6 +21,7 @@
 //!   ([`Kernel::marginal_kernel`] remains as the small-N test oracle).
 
 use crate::error::{Error, Result};
+use crate::linalg::simd::{self, Kernels};
 use crate::linalg::view::{MatMut, MatRef};
 use crate::linalg::{cholesky, eigen::SymEigen, kron, matmul, Matrix};
 
@@ -481,19 +482,19 @@ impl MarginalScratch {
 }
 
 /// `λ ↦ λ/(1+λ)` with the same tiny-negative clamp the sampler applies to
-/// round-off in the factored spectrum.
+/// round-off in the factored spectrum. Scalar form of the vectorized
+/// [`Kernels::marginal_weights`] grid sweep, used by the per-entry
+/// bilinear queries.
 #[inline]
 fn marginal_weight(lam: f64) -> f64 {
-    let l = lam.max(0.0);
+    let l = if lam > 0.0 { lam } else { 0.0 };
     l / (1.0 + l)
 }
 
-/// `out[i][t] = p[i][t]²` (resized in place).
-fn square_into(p: &Matrix, out: &mut Matrix) {
+/// `out[i][t] = p[i][t]²` (resized in place), via the dispatched kernel.
+fn square_into(p: &Matrix, out: &mut Matrix, kern: &Kernels) {
     out.resize_zeroed(p.rows(), p.cols());
-    for (o, &v) in out.as_mut_slice().iter_mut().zip(p.as_slice()) {
-        *o = v * v;
-    }
+    kern.square_into(out.as_mut_slice(), p.as_slice());
 }
 
 impl KernelEigen {
@@ -525,68 +526,103 @@ impl KernelEigen {
     /// m=3, versus `O(N³)` for the dense oracle. Item order matches the
     /// kernel's (`i = i₁·N₂ + i₂`), so `out[i]` is item `i`'s probability.
     pub fn inclusion_probabilities_into(&self, out: &mut Vec<f64>, s: &mut MarginalScratch) {
+        self.inclusion_probabilities_into_with(out, s, simd::active())
+    }
+
+    /// [`KernelEigen::inclusion_probabilities_into`] pinned to an explicit
+    /// dispatch arm — the conformance tests and benches compare the
+    /// forced-scalar oracle against the detected kernel through this seam.
+    /// The dispatch is resolved once here; the grid sweeps and GEMMs below
+    /// only make direct fn-pointer calls.
+    pub fn inclusion_probabilities_into_with(
+        &self,
+        out: &mut Vec<f64>,
+        s: &mut MarginalScratch,
+        kern: &Kernels,
+    ) {
         let n = self.values.len();
         out.clear();
         out.resize(n, 0.0);
         match &self.vectors {
             EigenVectors::Dense(p) => {
-                // K_ii = Σ_t w_t P[i,t]² — one O(N) row sweep per item.
+                // K_ii = Σ_t w_t P[i,t]² — one vectorized weight grid,
+                // then one weighted-sum-of-squares row sweep per item.
+                s.w.resize_zeroed(1, n);
+                kern.marginal_weights(s.w.as_mut_slice(), &self.values);
+                let w = s.w.as_slice();
                 for (i, o) in out.iter_mut().enumerate() {
-                    let row = p.row(i);
-                    let mut acc = 0.0;
-                    for (t, &v) in row.iter().enumerate() {
-                        acc += marginal_weight(self.values[t]) * v * v;
-                    }
-                    *o = acc;
+                    *o = kern.weighted_sumsq(w, p.row(i));
                 }
             }
             EigenVectors::Kron2 { p1, p2 } => {
                 let (n1, n2) = (p1.rows(), p2.rows());
-                square_into(p1, &mut s.sq1);
-                square_into(p2, &mut s.sq2);
+                square_into(p1, &mut s.sq1, kern);
+                square_into(p2, &mut s.sq2, kern);
                 s.w.resize_zeroed(n1, n2);
-                for (w, &lam) in s.w.as_mut_slice().iter_mut().zip(&self.values) {
-                    *w = marginal_weight(lam);
-                }
+                kern.marginal_weights(s.w.as_mut_slice(), &self.values);
                 s.t1.resize_zeroed(n1, n2);
-                matmul::gemm_into(
+                matmul::gemm_into_with(
                     s.t1.view_mut(),
                     1.0,
                     s.sq1.view(),
                     s.w.view(),
                     false,
                     &mut s.gemm,
+                    kern,
                 );
                 let grid = MatMut::from_parts(out, n1, n2, n2, 1);
-                matmul::gemm_into(grid, 1.0, s.t1.view(), s.sq2.view().t(), false, &mut s.gemm);
+                matmul::gemm_into_with(
+                    grid,
+                    1.0,
+                    s.t1.view(),
+                    s.sq2.view().t(),
+                    false,
+                    &mut s.gemm,
+                    kern,
+                );
             }
             EigenVectors::Kron3 { p1, p2, p3 } => {
                 let (n1, n2, n3) = (p1.rows(), p2.rows(), p3.rows());
                 let n23 = n2 * n3;
-                square_into(p1, &mut s.sq1);
-                square_into(p2, &mut s.sq2);
-                square_into(p3, &mut s.sq3);
+                square_into(p1, &mut s.sq1, kern);
+                square_into(p2, &mut s.sq2, kern);
+                square_into(p3, &mut s.sq3, kern);
                 s.w.resize_zeroed(n1, n23);
-                for (w, &lam) in s.w.as_mut_slice().iter_mut().zip(&self.values) {
-                    *w = marginal_weight(lam);
-                }
+                kern.marginal_weights(s.w.as_mut_slice(), &self.values);
                 s.t1.resize_zeroed(n1, n23);
-                matmul::gemm_into(
+                matmul::gemm_into_with(
                     s.t1.view_mut(),
                     1.0,
                     s.sq1.view(),
                     s.w.view(),
                     false,
                     &mut s.gemm,
+                    kern,
                 );
                 s.t2.resize_zeroed(n2, n3);
                 for i1 in 0..n1 {
                     // Row i1 of t1, reshaped to an N₂×N₃ grid over (t₂,t₃).
                     let g = MatRef::from_parts(s.t1.row(i1), n2, n3, n3, 1);
-                    matmul::gemm_into(s.t2.view_mut(), 1.0, s.sq2.view(), g, false, &mut s.gemm);
+                    matmul::gemm_into_with(
+                        s.t2.view_mut(),
+                        1.0,
+                        s.sq2.view(),
+                        g,
+                        false,
+                        &mut s.gemm,
+                        kern,
+                    );
                     let blk =
                         MatMut::from_parts(&mut out[i1 * n23..(i1 + 1) * n23], n2, n3, n3, 1);
-                    matmul::gemm_into(blk, 1.0, s.t2.view(), s.sq3.view().t(), false, &mut s.gemm);
+                    matmul::gemm_into_with(
+                        blk,
+                        1.0,
+                        s.t2.view(),
+                        s.sq3.view().t(),
+                        false,
+                        &mut s.gemm,
+                        kern,
+                    );
                 }
             }
         }
@@ -615,10 +651,11 @@ impl KernelEigen {
                 let n2 = p2.rows();
                 let (i1, i2) = (i / n2, i % n2);
                 let (j1, j2) = (j / n2, j % n2);
+                let kern = simd::active();
                 STAGE.with(|st| {
                     let (a, b, _) = &mut *st.borrow_mut();
-                    fill_products(p1, i1, j1, a);
-                    fill_products(p2, i2, j2, b);
+                    fill_products(p1, i1, j1, a, kern);
+                    fill_products(p2, i2, j2, b, kern);
                     let mut acc = 0.0;
                     for (t1, &av) in a.iter().enumerate() {
                         if av == 0.0 {
@@ -641,11 +678,12 @@ impl KernelEigen {
                 let (j1, jr) = (j / n23, j % n23);
                 let (i2, i3) = (ir / n3, ir % n3);
                 let (j2, j3) = (jr / n3, jr % n3);
+                let kern = simd::active();
                 STAGE.with(|st| {
                     let (a, b, c) = &mut *st.borrow_mut();
-                    fill_products(p1, i1, j1, a);
-                    fill_products(p2, i2, j2, b);
-                    fill_products(p3, i3, j3, c);
+                    fill_products(p1, i1, j1, a, kern);
+                    fill_products(p2, i2, j2, b, kern);
+                    fill_products(p3, i3, j3, c, kern);
                     let mut acc = 0.0;
                     for (t1, &av) in a.iter().enumerate() {
                         if av == 0.0 {
@@ -707,10 +745,11 @@ impl KernelEigen {
 }
 
 /// `out[t] = p[i,t]·p[j,t]` — the per-factor eigenvector product vector of
-/// the bilinear marginal-entry form.
-fn fill_products(p: &Matrix, i: usize, j: usize, out: &mut Vec<f64>) {
+/// the bilinear marginal-entry form, via the dispatched kernel.
+fn fill_products(p: &Matrix, i: usize, j: usize, out: &mut Vec<f64>, kern: &Kernels) {
     out.clear();
-    out.extend(p.row(i).iter().zip(p.row(j)).map(|(&a, &b)| a * b));
+    out.resize(p.cols(), 0.0);
+    kern.mul_into(out, p.row(i), p.row(j));
 }
 
 #[cfg(test)]

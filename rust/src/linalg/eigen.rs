@@ -259,9 +259,7 @@ fn house_in_place(x: &mut [f64]) -> (f64, f64) {
     let mu = (alpha * alpha + sigma).sqrt();
     let beta = if alpha >= 0.0 { -mu } else { mu };
     let v0 = alpha - beta;
-    for v in x[1..].iter_mut() {
-        *v /= v0;
-    }
+    matmul::div_slice(&mut x[1..], v0);
     x[0] = 1.0;
     ((beta - alpha) / beta, beta)
 }
@@ -332,9 +330,7 @@ fn tridiag_blocked(sc: &mut SymEigenScratch, n: usize) {
                         + matmul::dot(&sc.wpanel.row(j + r)[..j], vtv);
                 }
             }
-            for x in sc.hp.iter_mut() {
-                *x *= t;
-            }
+            matmul::scale_slice(&mut sc.hp, t);
             // w = p − (τ/2)(pᵀv)·v
             let coef = 0.5 * t * matmul::dot(&sc.hp, &sc.hv);
             for r in 0..mlen {

@@ -7,24 +7,37 @@
 //!
 //! 1. **naive** — ikj loops with vectorized row axpys, best below ~48³;
 //! 2. **packed** — A and B panels are copied into contiguous pack buffers
-//!    and an 8×4 f64 register-tile micro-kernel runs over them (32
-//!    accumulators live in registers; LLVM emits FMA-vectorized code);
+//!    and the runtime-dispatched `MR×NR` f64 register-tile micro-kernel
+//!    ([`crate::linalg::simd`]) runs over them;
 //! 3. **parallel** — the packed kernel sharded over C row-panels with
 //!    `std::thread::scope`, each worker packing A into its own buffer.
 //!
 //! Results are **bitwise deterministic and independent of the thread
 //! count**: each output element is accumulated by exactly one worker in a
 //! fixed k-order, so row-band partitioning never changes the arithmetic.
+//! They are also independent of the dispatch arm — every micro-kernel
+//! computes the same correctly-rounded FMA chain per element (see
+//! `simd::scalar`), so `KRONDPP_FORCE_SCALAR=1` reproduces the AVX2/NEON
+//! bits exactly.
 //!
-//! Blocking arithmetic (f64 = 8 bytes):
+//! Blocking arithmetic (f64 = 8 bytes). `MR×NR` is **per-arch** — packing
+//! reads the selected kernel's geometry at call time, so the panel layout
+//! is kernel-width-aware:
 //!
-//! - `MR×NR = 8×4` register tile → 32 accumulators = 8 AVX2 vectors, with
-//!   room left for the A broadcast and B row loads.
-//! - `KC = 256`: one packed A micro-panel is `MR·KC = 16 KiB` and one
-//!   packed B micro-panel `NR·KC = 8 KiB`, so both stream through a 32 KiB
-//!   L1d alongside the C tile.
+//! - scalar: `8×4` (one `mul_add` chain per element; LLVM keeps the 32
+//!   accumulators in whatever vector registers the target offers);
+//! - AVX2+FMA: `4×12` — a 4×3 grid of `__m256d` accumulators (12) + 3 B
+//!   row vectors + 1 A broadcast = exactly the 16-register ymm file.
+//!   A micro-panel `MR·KC = 8 KiB`, B micro-panel `NR·KC = 24 KiB`:
+//!   together one 32 KiB L1d.
+//! - NEON: `8×6` — an 8×3 grid of `float64x2_t` accumulators (24 of 32
+//!   registers). A micro-panel 16 KiB, B micro-panel 12 KiB.
+//! - `KC = 256` is shared by all arms — slab boundaries group the
+//!   per-element accumulation chains, so KC must not vary with the
+//!   dispatch arm or forced-scalar runs would change bits.
 //! - `MC = 128`: a packed A block is `MC·KC = 256 KiB` ≈ half a typical
-//!   512 KiB L2, leaving the other half for B panels and C traffic.
+//!   512 KiB L2, leaving the other half for B panels and C traffic
+//!   (`MC` is a multiple of every arm's `MR`, so blocks split evenly).
 //! - B is packed across the full output width per `KC` slab (no `NC`
 //!   blocking: ground-set sizes here keep `KC·N` comfortably inside L3).
 //!
@@ -32,6 +45,7 @@
 //! the convenience API), so steady-state callers allocate nothing.
 
 use super::matrix::Matrix;
+use super::simd::{self, Kernels};
 use super::view::{MatMut, MatRef};
 use crate::error::{Error, Result};
 
@@ -40,13 +54,10 @@ const SMALL_VOLUME: usize = 48 * 48 * 48;
 /// At or above this `m·n·k` volume, shard across threads.
 const PARALLEL_VOLUME: usize = 160 * 160 * 160;
 
-/// Register-tile rows (micro-panel height of packed A).
-const MR: usize = 8;
-/// Register-tile columns (micro-panel width of packed B).
-const NR: usize = 4;
-/// k-extent of one packed slab: `MR·KC` = 16 KiB, `NR·KC` = 8 KiB (L1d).
+/// k-extent of one packed slab (arch-invariant — see module docs).
 const KC: usize = 256;
 /// Row extent of one packed A block: `MC·KC` = 256 KiB (≈ half of L2).
+/// A multiple of every dispatch arm's `MR` (8, 4, 8).
 const MC: usize = 128;
 
 /// Reusable pack buffers for the packed GEMM. One `pack_b` slab is shared
@@ -63,17 +74,21 @@ impl GemmScratch {
         Self::default()
     }
 
-    fn ensure(&mut self, threads: usize, n: usize) {
-        let pb_len = n.div_ceil(NR) * NR * KC;
+    fn ensure(&mut self, threads: usize, n: usize, kern: &Kernels) {
+        // Kernel-width-aware sizing: panels are padded to the selected
+        // arm's MR/NR, so buffer lengths depend on the dispatch.
+        let (mr, nr) = (kern.mr(), kern.nr());
+        let pb_len = n.div_ceil(nr) * nr * KC;
         if self.pack_b.len() < pb_len {
             self.pack_b.resize(pb_len, 0.0);
         }
+        let pa_len = MC.div_ceil(mr) * mr * KC;
         if self.pack_a.len() < threads {
             self.pack_a.resize_with(threads, Vec::new);
         }
         for buf in &mut self.pack_a[..threads] {
-            if buf.len() < MC * KC {
-                buf.resize(MC * KC, 0.0);
+            if buf.len() < pa_len {
+                buf.resize(pa_len, 0.0);
             }
         }
     }
@@ -97,12 +112,30 @@ fn with_scratch<R>(f: impl FnOnce(&mut GemmScratch) -> R) -> R {
 /// the naive kernel otherwise. Dispatches naive → packed → packed+parallel
 /// by volume. Bitwise deterministic, independent of thread count.
 pub fn gemm_into(
+    c: MatMut<'_>,
+    alpha: f64,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    accumulate: bool,
+    scratch: &mut GemmScratch,
+) {
+    gemm_into_with(c, alpha, a, b, accumulate, scratch, simd::active())
+}
+
+/// [`gemm_into`] pinned to an explicit dispatch arm — the A/B seam the
+/// conformance tests and benches use to compare the forced-scalar oracle
+/// against the dispatched kernel in one process. Production callers use
+/// [`gemm_into`], which resolves [`simd::active`] once per call (outside
+/// all hot loops).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_with(
     mut c: MatMut<'_>,
     alpha: f64,
     a: MatRef<'_>,
     b: MatRef<'_>,
     accumulate: bool,
     scratch: &mut GemmScratch,
+    kern: &Kernels,
 ) {
     let (m, k) = a.shape();
     let n = b.cols();
@@ -125,16 +158,27 @@ pub fn gemm_into(
     let row_blocks = m.div_ceil(MC);
     let threads =
         if volume >= PARALLEL_VOLUME { available_threads().min(row_blocks) } else { 1 };
-    scratch.ensure(threads, n);
+    scratch.ensure(threads, n, kern);
     let (pack_a_bufs, pack_b) = (&mut scratch.pack_a, &mut scratch.pack_b);
     let mut first = true;
     let mut pc = 0usize;
     while pc < k {
         let kc = KC.min(k - pc);
-        pack_b_slab(b.submatrix(pc, 0, kc, n), pack_b, kc);
+        pack_b_slab(b.submatrix(pc, 0, kc, n), pack_b, kc, kern.nr());
         let add = accumulate || !first;
         if threads <= 1 {
-            gemm_row_band(c.reborrow(), a, 0, pc, kc, pack_b, &mut pack_a_bufs[0], alpha, add);
+            gemm_row_band(
+                c.reborrow(),
+                a,
+                0,
+                pc,
+                kc,
+                pack_b,
+                &mut pack_a_bufs[0],
+                alpha,
+                add,
+                kern,
+            );
         } else {
             let nblk = row_blocks.div_ceil(threads);
             let pb: &[f64] = pack_b;
@@ -154,7 +198,7 @@ pub fn gemm_into(
                     let pa = bufs.next().expect("pack buffers sized to thread count");
                     let lo = row0;
                     s.spawn(move || {
-                        gemm_row_band(band, a, lo, pc, kc, pb, pa, alpha, add);
+                        gemm_row_band(band, a, lo, pc, kc, pb, pa, alpha, add, kern);
                     });
                     row0 = hi_row;
                     blk = hi_blk;
@@ -336,32 +380,55 @@ pub fn matvec_into(y: &mut [f64], a: MatRef<'_>, x: &[f64]) {
     });
 }
 
-/// Unrolled dot product over two equal-length slices.
-#[inline(always)]
+/// Below this slice length the dispatched sweeps short-circuit to the
+/// scalar arm: an atomic load + indirect call costs more than a tiny
+/// sweep, and because every arm is bitwise-identical by contract the gate
+/// never changes results — it is purely a latency cut for the panel-sized
+/// dots/axpys inside the blocked eigensolver and QR.
+const SWEEP_DISPATCH_MIN: usize = 64;
+
+/// Dot product over two equal-length slices: four partial sums over
+/// `i mod 4` combined `((s0+s1)+s2)+s3` — the cross-arch reduction
+/// contract of [`simd`], vectorized via the dispatched kernel for long
+/// slices.
+#[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    if a.len() < SWEEP_DISPATCH_MIN {
+        return simd::forced_scalar().dot(a, b);
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    simd::active().dot(a, b)
 }
 
-/// `y += alpha * x`.
-#[inline(always)]
+/// `y += alpha * x`, via the dispatched kernel for long slices.
+#[inline]
 pub fn axpy_slice(y: &mut [f64], alpha: f64, x: &[f64]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    if y.len() < SWEEP_DISPATCH_MIN {
+        simd::forced_scalar().axpy(y, alpha, x);
+    } else {
+        simd::active().axpy(y, alpha, x);
+    }
+}
+
+/// `y *= alpha`, via the dispatched kernel for long slices.
+#[inline]
+pub fn scale_slice(y: &mut [f64], alpha: f64) {
+    if y.len() < SWEEP_DISPATCH_MIN {
+        simd::forced_scalar().scale(y, alpha);
+    } else {
+        simd::active().scale(y, alpha);
+    }
+}
+
+/// `y /= d` — true division per element (never a reciprocal multiply),
+/// via the dispatched kernel for long slices.
+#[inline]
+pub fn div_slice(y: &mut [f64], d: f64) {
+    if y.len() < SWEEP_DISPATCH_MIN {
+        simd::forced_scalar().div_assign(y, d);
+    } else {
+        simd::active().div_assign(y, d);
     }
 }
 
@@ -369,53 +436,55 @@ pub fn axpy_slice(y: &mut [f64], alpha: f64, x: &[f64]) {
 // Packed kernel internals
 // ---------------------------------------------------------------------------
 
-/// Pack an `mc × kc` block of A into MR-row micro-panels, k-major within
-/// each panel (`dst[panel·MR·kc + kk·MR + r]`), zero-padding the row tail.
-fn pack_a_block(src: MatRef<'_>, dst: &mut [f64], kc: usize) {
+/// Pack an `mc × kc` block of A into `mr`-row micro-panels, k-major
+/// within each panel (`dst[panel·mr·kc + kk·mr + r]`), zero-padding the
+/// row tail. `mr` comes from the selected kernel, so the panel layout is
+/// kernel-width-aware.
+fn pack_a_block(src: MatRef<'_>, dst: &mut [f64], kc: usize, mr: usize) {
     let mc = src.rows();
     debug_assert_eq!(src.cols(), kc);
-    let npan = mc.div_ceil(MR);
+    let npan = mc.div_ceil(mr);
     for ip in 0..npan {
-        let base = ip * MR * kc;
-        let m_eff = MR.min(mc - ip * MR);
+        let base = ip * mr * kc;
+        let m_eff = mr.min(mc - ip * mr);
         if src.rows_contiguous() {
             for r in 0..m_eff {
-                let row = src.row_slice(ip * MR + r);
+                let row = src.row_slice(ip * mr + r);
                 for (kk, &v) in row.iter().enumerate() {
-                    dst[base + kk * MR + r] = v;
+                    dst[base + kk * mr + r] = v;
                 }
             }
             for kk in 0..kc {
-                for r in m_eff..MR {
-                    dst[base + kk * MR + r] = 0.0;
+                for d in &mut dst[base + kk * mr + m_eff..base + kk * mr + mr] {
+                    *d = 0.0;
                 }
             }
         } else {
             for kk in 0..kc {
-                let d = &mut dst[base + kk * MR..base + kk * MR + MR];
+                let d = &mut dst[base + kk * mr..base + kk * mr + mr];
                 for (r, dv) in d.iter_mut().enumerate() {
-                    *dv = if r < m_eff { src.get(ip * MR + r, kk) } else { 0.0 };
+                    *dv = if r < m_eff { src.get(ip * mr + r, kk) } else { 0.0 };
                 }
             }
         }
     }
 }
 
-/// Pack a `kc × n` slab of B into NR-column micro-panels, k-major within
-/// each panel (`dst[panel·NR·kc + kk·NR + c]`), zero-padding the column
-/// tail.
-fn pack_b_slab(src: MatRef<'_>, dst: &mut [f64], kc: usize) {
+/// Pack a `kc × n` slab of B into `nr`-column micro-panels, k-major
+/// within each panel (`dst[panel·nr·kc + kk·nr + c]`), zero-padding the
+/// column tail. `nr` comes from the selected kernel.
+fn pack_b_slab(src: MatRef<'_>, dst: &mut [f64], kc: usize, nr: usize) {
     let n = src.cols();
     debug_assert_eq!(src.rows(), kc);
-    let npan = n.div_ceil(NR);
+    let npan = n.div_ceil(nr);
     for jp in 0..npan {
-        let base = jp * NR * kc;
-        let j0 = jp * NR;
-        let n_eff = NR.min(n - j0);
+        let base = jp * nr * kc;
+        let j0 = jp * nr;
+        let n_eff = nr.min(n - j0);
         if src.rows_contiguous() {
             for kk in 0..kc {
                 let row = &src.row_slice(kk)[j0..j0 + n_eff];
-                let d = &mut dst[base + kk * NR..base + kk * NR + NR];
+                let d = &mut dst[base + kk * nr..base + kk * nr + nr];
                 d[..n_eff].copy_from_slice(row);
                 for dv in &mut d[n_eff..] {
                     *dv = 0.0;
@@ -423,7 +492,7 @@ fn pack_b_slab(src: MatRef<'_>, dst: &mut [f64], kc: usize) {
             }
         } else {
             for kk in 0..kc {
-                let d = &mut dst[base + kk * NR..base + kk * NR + NR];
+                let d = &mut dst[base + kk * nr..base + kk * nr + nr];
                 for (c, dv) in d.iter_mut().enumerate() {
                     *dv = if c < n_eff { src.get(kk, j0 + c) } else { 0.0 };
                 }
@@ -432,26 +501,9 @@ fn pack_b_slab(src: MatRef<'_>, dst: &mut [f64], kc: usize) {
     }
 }
 
-/// The 8×4 register-tile micro-kernel: 32 accumulators held in registers,
-/// 32 FMAs per 12 loads. `pa`/`pb` are one packed micro-panel each.
-#[inline(always)]
-fn micro_8x4(pa: &[f64], pb: &[f64], kc: usize) -> [[f64; NR]; MR] {
-    let mut acc = [[0.0f64; NR]; MR];
-    for kk in 0..kc {
-        let a = &pa[kk * MR..kk * MR + MR];
-        let b = &pb[kk * NR..kk * NR + NR];
-        for r in 0..MR {
-            let ar = a[r];
-            for c in 0..NR {
-                acc[r][c] += ar * b[c];
-            }
-        }
-    }
-    acc
-}
-
-/// Write one micro-tile into C (`add` accumulates, otherwise stores —
-/// the first `KC` slab stores, later slabs accumulate).
+/// Write one `m_eff × n_eff` micro-tile into C from the kernel's staging
+/// array (`nr`-strided rows). `add` accumulates, otherwise stores — the
+/// first `KC` slab stores, later slabs accumulate.
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 fn write_tile(
@@ -460,18 +512,20 @@ fn write_tile(
     j0: usize,
     m_eff: usize,
     n_eff: usize,
-    acc: &[[f64; NR]; MR],
+    tile: &[f64],
+    nr: usize,
     alpha: f64,
     add: bool,
 ) {
-    for (r, arow) in acc.iter().enumerate().take(m_eff) {
+    for r in 0..m_eff {
+        let trow = &tile[r * nr..r * nr + n_eff];
         let crow = &mut c.row_slice_mut(r0 + r)[j0..j0 + n_eff];
         if add {
-            for (cv, av) in crow.iter_mut().zip(arow) {
+            for (cv, av) in crow.iter_mut().zip(trow) {
                 *cv += alpha * av;
             }
         } else {
-            for (cv, av) in crow.iter_mut().zip(arow) {
+            for (cv, av) in crow.iter_mut().zip(trow) {
                 *cv = alpha * av;
             }
         }
@@ -479,8 +533,11 @@ fn write_tile(
 }
 
 /// Compute one C row band for one `KC` slab: pack A blocks into the
-/// worker-local buffer, then sweep B panels × A panels with the
-/// micro-kernel. `row0` is the band's global row offset into A.
+/// worker-local buffer, then sweep B panels × A panels with the selected
+/// micro-kernel. `row0` is the band's global row offset into A. The
+/// dispatch was resolved by the caller; here `kern` is plain field reads
+/// and direct fn-pointer calls — nothing allocates and nothing re-detects
+/// features inside the loops.
 #[allow(clippy::too_many_arguments)]
 fn gemm_row_band(
     mut c: MatMut<'_>,
@@ -492,25 +549,29 @@ fn gemm_row_band(
     pa_buf: &mut Vec<f64>,
     alpha: f64,
     add: bool,
+    kern: &Kernels,
 ) {
+    let (mr, nr) = (kern.mr(), kern.nr());
     let n = c.cols();
     let m_band = c.rows();
-    let npan_b = n.div_ceil(NR);
+    let npan_b = n.div_ceil(nr);
     let pa = pa_buf.as_mut_slice();
+    // One stack staging tile reused for every micro-panel product.
+    let mut tile = [0.0f64; simd::MAX_TILE];
     for ic in (0..m_band).step_by(MC) {
         let mc = MC.min(m_band - ic);
-        pack_a_block(a.submatrix(row0 + ic, pc, mc, kc), pa, kc);
-        let npan_a = mc.div_ceil(MR);
+        pack_a_block(a.submatrix(row0 + ic, pc, mc, kc), pa, kc, mr);
+        let npan_a = mc.div_ceil(mr);
         for jp in 0..npan_b {
-            let j0 = jp * NR;
-            let n_eff = NR.min(n - j0);
-            let pbp = &pb[jp * NR * kc..(jp + 1) * NR * kc];
+            let j0 = jp * nr;
+            let n_eff = nr.min(n - j0);
+            let pbp = &pb[jp * nr * kc..(jp + 1) * nr * kc];
             for ip in 0..npan_a {
-                let r0 = ic + ip * MR;
-                let m_eff = MR.min(mc - ip * MR);
-                let pap = &pa[ip * MR * kc..(ip + 1) * MR * kc];
-                let acc = micro_8x4(pap, pbp, kc);
-                write_tile(&mut c, r0, j0, m_eff, n_eff, &acc, alpha, add);
+                let r0 = ic + ip * mr;
+                let m_eff = mr.min(mc - ip * mr);
+                let pap = &pa[ip * mr * kc..(ip + 1) * mr * kc];
+                kern.tile_into(pap, pbp, kc, &mut tile);
+                write_tile(&mut c, r0, j0, m_eff, n_eff, &tile, nr, alpha, add);
             }
         }
     }
@@ -834,19 +895,55 @@ mod tests {
         let b = pseudo_random(k, n, 27);
         assert!(m * k * n >= PARALLEL_VOLUME, "test must exercise the parallel path");
         let c1 = matmul(&a, &b).unwrap();
+        let kern = simd::active();
+        let (mr, nr) = (kern.mr(), kern.nr());
         let mut c2 = Matrix::zeros(m, n);
-        let mut pb = vec![0.0; n.div_ceil(NR) * NR * KC];
-        let mut pa = vec![0.0; MC * KC];
+        let mut pb = vec![0.0; n.div_ceil(nr) * nr * KC];
+        let mut pa = vec![0.0; MC.div_ceil(mr) * mr * KC];
         let mut first = true;
         let mut pc = 0usize;
         while pc < k {
             let kc = KC.min(k - pc);
-            pack_b_slab(b.view().submatrix(pc, 0, kc, n), &mut pb, kc);
-            gemm_row_band(c2.view_mut(), a.view(), 0, pc, kc, &pb, &mut pa, 1.0, !first);
+            pack_b_slab(b.view().submatrix(pc, 0, kc, n), &mut pb, kc, nr);
+            gemm_row_band(
+                c2.view_mut(),
+                a.view(),
+                0,
+                pc,
+                kc,
+                &pb,
+                &mut pa,
+                1.0,
+                !first,
+                kern,
+            );
             first = false;
             pc += kc;
         }
         assert_eq!(c1.as_slice(), c2.as_slice(), "parallel dispatch changed bits");
+    }
+
+    #[test]
+    fn dispatch_arm_does_not_change_bits() {
+        // The forced-scalar oracle and the detected kernel must agree
+        // bitwise on the packed path (shape straddles MR/NR/KC edges).
+        let (m, k, n) = (67usize, 300usize, 61usize);
+        let a = pseudo_random(m, k, 30);
+        let b = pseudo_random(k, n, 31);
+        let mut c_active = Matrix::zeros(m, n);
+        let mut c_scalar = Matrix::zeros(m, n);
+        let mut s = GemmScratch::new();
+        gemm_into_with(c_active.view_mut(), 1.0, a.view(), b.view(), false, &mut s, simd::active());
+        gemm_into_with(
+            c_scalar.view_mut(),
+            1.0,
+            a.view(),
+            b.view(),
+            false,
+            &mut s,
+            simd::forced_scalar(),
+        );
+        assert_eq!(c_active.as_slice(), c_scalar.as_slice(), "dispatch arm changed bits");
     }
 
     #[test]

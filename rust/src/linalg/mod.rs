@@ -7,8 +7,13 @@
 //! - [`matrix`]: dense row-major `f64` container.
 //! - [`view`]: borrowed stride-aware views ([`MatRef`]/[`MatMut`]) — free
 //!   sub-blocks and transposes, the zero-copy spine of every kernel.
-//! - [`matmul`]: packed register-tiled GEMM (8×4 micro-kernel, pack
-//!   buffers, row-panel parallelism) expressed once over views.
+//! - [`matmul`]: packed register-tiled GEMM (per-arch SIMD micro-kernel,
+//!   kernel-width-aware pack buffers, row-panel parallelism) expressed
+//!   once over views.
+//! - [`simd`]: the runtime-dispatched micro-kernels under it — scalar /
+//!   AVX2+FMA / NEON register tiles plus the vectorized flat sweeps
+//!   (dot/axpy/scale, marginal-weight grids, DP rows), all bitwise
+//!   equivalent across arms.
 //! - [`cholesky`]: PD factorization → `log det(L_Y)`, solves, inverses.
 //! - [`lu`]: pivoted LU for general solves / signed determinants.
 //! - [`eigen`]: two-stage symmetric eigensolver — blocked Householder
@@ -32,6 +37,7 @@ pub mod matmul;
 pub mod matrix;
 pub mod nkp;
 pub mod qr;
+pub mod simd;
 pub mod sparse;
 pub mod trisolve;
 pub mod view;

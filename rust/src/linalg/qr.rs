@@ -16,7 +16,7 @@
 
 use super::matrix::Matrix;
 use crate::error::{Error, Result};
-use crate::linalg::matmul::dot;
+use crate::linalg::matmul::{axpy_slice, div_slice, dot};
 
 /// Householder QR: `A = Q·R` with `Q` (m×k) having orthonormal columns and
 /// `R` (k×k) upper-triangular, `k = min(m, n)` (thin QR).
@@ -126,20 +126,18 @@ pub fn orthonormalize_columns(a: &Matrix, tol: f64) -> Matrix {
     let mut basis: Vec<Vec<f64>> = Vec::new();
     for j in 0..n {
         let mut v = at.row(j).to_vec();
-        // Two rounds of MGS for numerical orthogonality.
+        // Two rounds of MGS for numerical orthogonality; the projection
+        // subtraction is a dispatched axpy (`(-proj)·b_i` rounds exactly
+        // like the old `v_i - proj·b_i`).
         for _ in 0..2 {
             for b in &basis {
                 let proj = dot(b, &v);
-                for (vi, bi) in v.iter_mut().zip(b) {
-                    *vi -= proj * bi;
-                }
+                axpy_slice(&mut v, -proj, b);
             }
         }
         let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
         if norm > tol {
-            for x in &mut v {
-                *x /= norm;
-            }
+            div_slice(&mut v, norm);
             basis.push(v);
         }
     }

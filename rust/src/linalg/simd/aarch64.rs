@@ -1,0 +1,265 @@
+//! aarch64 NEON kernel.
+//!
+//! Tile geometry is 8×6: an 8×3 grid of `float64x2_t` accumulators (24 of
+//! the 32 NEON registers), three B pair-loads and scalar A broadcasts via
+//! `vfmaq_n_f64` — fused multiply-add, the same correctly-rounded
+//! operation as the scalar arm's `f64::mul_add` and AVX2's
+//! `_mm256_fmadd_pd`, so the three arms agree bitwise. The flat sweeps use
+//! mul-then-add per lane under the scalar arm's 4-lane reduction contract
+//! (lanes split across two 2-wide accumulators).
+
+use super::MicroKernel;
+use core::arch::aarch64::*;
+
+/// Register-tile rows of the NEON kernel.
+pub const MR: usize = 8;
+/// Register-tile columns of the NEON kernel (three `float64x2_t` per row).
+pub const NR: usize = 6;
+
+/// The NEON dispatch arm.
+pub struct Neon;
+
+impl super::sealed::Sealed for Neon {}
+
+impl MicroKernel for Neon {
+    const NAME: &'static str = "neon";
+    const MR: usize = MR;
+    const NR: usize = NR;
+
+    fn supported() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    unsafe fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+        tile(pa, pb, kc, out)
+    }
+
+    unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        dot(a, b)
+    }
+
+    unsafe fn weighted_sumsq(w: &[f64], v: &[f64]) -> f64 {
+        weighted_sumsq(w, v)
+    }
+
+    unsafe fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+        axpy(y, alpha, x)
+    }
+
+    unsafe fn scale(y: &mut [f64], alpha: f64) {
+        scale(y, alpha)
+    }
+
+    unsafe fn div_assign(y: &mut [f64], d: f64) {
+        div_assign(y, d)
+    }
+
+    unsafe fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+        mul_into(out, a, b)
+    }
+
+    unsafe fn square_into(out: &mut [f64], a: &[f64]) {
+        square_into(out, a)
+    }
+
+    unsafe fn marginal_weights(out: &mut [f64], lam: &[f64]) {
+        marginal_weights(out, lam)
+    }
+
+    unsafe fn dp_row(cur: &mut [f64], prev: &[f64], lam: f64) {
+        dp_row(cur, prev, lam)
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+    debug_assert!(pa.len() >= MR * kc && pb.len() >= NR * kc && out.len() >= MR * NR);
+    let (pa, pb) = (pa.as_ptr(), pb.as_ptr());
+    let mut acc = [[vdupq_n_f64(0.0); 3]; MR];
+    for kk in 0..kc {
+        let b0 = vld1q_f64(pb.add(kk * NR));
+        let b1 = vld1q_f64(pb.add(kk * NR + 2));
+        let b2 = vld1q_f64(pb.add(kk * NR + 4));
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let ar = *pa.add(kk * MR + r);
+            arow[0] = vfmaq_n_f64(arow[0], b0, ar);
+            arow[1] = vfmaq_n_f64(arow[1], b1, ar);
+            arow[2] = vfmaq_n_f64(arow[2], b2, ar);
+        }
+    }
+    let op = out.as_mut_ptr();
+    for (r, arow) in acc.iter().enumerate() {
+        vst1q_f64(op.add(r * NR), arow[0]);
+        vst1q_f64(op.add(r * NR + 2), arow[1]);
+        vst1q_f64(op.add(r * NR + 4), arow[2]);
+    }
+}
+
+/// Combine the two 2-lane accumulators (lanes s0,s1 and s2,s3) in the
+/// scalar contract's order `((s0+s1)+s2)+s3`.
+#[target_feature(enable = "neon")]
+unsafe fn hsum_ordered(acc01: float64x2_t, acc23: float64x2_t) -> f64 {
+    ((vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01)) + vgetq_lane_f64::<0>(acc23))
+        + vgetq_lane_f64::<1>(acc23)
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+        acc23 =
+            vaddq_f64(acc23, vmulq_f64(vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2))));
+    }
+    let mut s = hsum_ordered(acc01, acc23);
+    for i in chunks * 4..n {
+        s += *pa.add(i) * *pb.add(i);
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn weighted_sumsq(w: &[f64], v: &[f64]) -> f64 {
+    let n = w.len();
+    let chunks = n / 4;
+    let (pw, pv) = (w.as_ptr(), v.as_ptr());
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        let (w0, v0) = (vld1q_f64(pw.add(i)), vld1q_f64(pv.add(i)));
+        let (w1, v1) = (vld1q_f64(pw.add(i + 2)), vld1q_f64(pv.add(i + 2)));
+        acc01 = vaddq_f64(acc01, vmulq_f64(vmulq_f64(w0, v0), v0));
+        acc23 = vaddq_f64(acc23, vmulq_f64(vmulq_f64(w1, v1), v1));
+    }
+    let mut s = hsum_ordered(acc01, acc23);
+    for i in chunks * 4..n {
+        s += (*pw.add(i) * *pv.add(i)) * *pv.add(i);
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+    let n = y.len();
+    let chunks = n / 2;
+    let va = vdupq_n_f64(alpha);
+    let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+    for c in 0..chunks {
+        let i = 2 * c;
+        let yv = vld1q_f64(py.add(i));
+        let xv = vld1q_f64(px.add(i));
+        vst1q_f64(py.add(i), vaddq_f64(yv, vmulq_f64(va, xv)));
+    }
+    for i in chunks * 2..n {
+        *py.add(i) += alpha * *px.add(i);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn scale(y: &mut [f64], alpha: f64) {
+    let n = y.len();
+    let chunks = n / 2;
+    let va = vdupq_n_f64(alpha);
+    let py = y.as_mut_ptr();
+    for c in 0..chunks {
+        let i = 2 * c;
+        vst1q_f64(py.add(i), vmulq_f64(vld1q_f64(py.add(i)), va));
+    }
+    for i in chunks * 2..n {
+        *py.add(i) *= alpha;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn div_assign(y: &mut [f64], d: f64) {
+    let n = y.len();
+    let chunks = n / 2;
+    let vd = vdupq_n_f64(d);
+    let py = y.as_mut_ptr();
+    for c in 0..chunks {
+        let i = 2 * c;
+        vst1q_f64(py.add(i), vdivq_f64(vld1q_f64(py.add(i)), vd));
+    }
+    for i in chunks * 2..n {
+        *py.add(i) /= d;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = out.len();
+    let chunks = n / 2;
+    let (po, pa, pb) = (out.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+    for c in 0..chunks {
+        let i = 2 * c;
+        vst1q_f64(po.add(i), vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+    }
+    for i in chunks * 2..n {
+        *po.add(i) = *pa.add(i) * *pb.add(i);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn square_into(out: &mut [f64], a: &[f64]) {
+    let n = out.len();
+    let chunks = n / 2;
+    let (po, pa) = (out.as_mut_ptr(), a.as_ptr());
+    for c in 0..chunks {
+        let i = 2 * c;
+        let av = vld1q_f64(pa.add(i));
+        vst1q_f64(po.add(i), vmulq_f64(av, av));
+    }
+    for i in chunks * 2..n {
+        let v = *pa.add(i);
+        *po.add(i) = v * v;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn marginal_weights(out: &mut [f64], lam: &[f64]) {
+    let n = out.len();
+    let chunks = n / 2;
+    let zero = vdupq_n_f64(0.0);
+    let one = vdupq_n_f64(1.0);
+    let (po, pl) = (out.as_mut_ptr(), lam.as_ptr());
+    for c in 0..chunks {
+        let i = 2 * c;
+        // FMAXNM: a NaN operand yields the numeric operand (here 0) and
+        // max(−0, +0) = +0 — exactly the scalar `if l > 0 { l } else { 0 }`.
+        let lp = vmaxnmq_f64(vld1q_f64(pl.add(i)), zero);
+        vst1q_f64(po.add(i), vdivq_f64(lp, vaddq_f64(one, lp)));
+    }
+    for i in chunks * 2..n {
+        let l = *pl.add(i);
+        let lp = if l > 0.0 { l } else { 0.0 };
+        *po.add(i) = lp / (1.0 + lp);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dp_row(cur: &mut [f64], prev: &[f64], lam: f64) {
+    let n = cur.len();
+    if n == 0 {
+        return;
+    }
+    let (pc, pp) = (cur.as_mut_ptr(), prev.as_ptr());
+    *pc = *pp;
+    let vl = vdupq_n_f64(lam);
+    let body = n - 1;
+    let chunks = body / 2;
+    for c in 0..chunks {
+        let j = 1 + 2 * c;
+        let pj = vld1q_f64(pp.add(j));
+        let pjm1 = vld1q_f64(pp.add(j - 1));
+        vst1q_f64(pc.add(j), vaddq_f64(pj, vmulq_f64(vl, pjm1)));
+    }
+    for j in 1 + chunks * 2..n {
+        *pc.add(j) = *pp.add(j) + lam * *pp.add(j - 1);
+    }
+}

@@ -1,0 +1,373 @@
+//! SIMD micro-kernels with runtime dispatch — the vector seam under the
+//! linalg substrate.
+//!
+//! A sealed [`MicroKernel`] trait describes one architecture's f64
+//! register tile (`MR×NR` over packed A/B panels) plus the flat sweeps the
+//! substrate leans on (dot/axpy/scale, the `λ/(1+λ)` marginal grid, the
+//! elementary-polynomial DP row). Three implementations exist:
+//!
+//! | kernel | tile | where |
+//! |---|---|---|
+//! | [`scalar::Scalar`] | 8×4, `f64::mul_add` | portable fallback & oracle |
+//! | `x86_64::Avx2` | 4×12, `_mm256_fmadd_pd` | x86_64 with AVX2+FMA |
+//! | `aarch64::Neon` | 8×6, `vfmaq_n_f64` | aarch64 (NEON is baseline) |
+//!
+//! **Dispatch order** (resolved once, cached in a `OnceLock`):
+//!
+//! 1. `KRONDPP_FORCE_SCALAR` set to anything but `0`/empty → scalar;
+//! 2. x86_64 with `is_x86_feature_detected!("avx2")` *and* `("fma")` → AVX2;
+//! 3. aarch64 (NEON is part of the baseline ISA) → NEON;
+//! 4. otherwise → scalar.
+//!
+//! The selected [`Kernels`] table is a plain struct of function pointers —
+//! no boxed trait objects, nothing allocated after the first lookup — so
+//! hot paths resolve it once ([`active`]) and call through it. Every arm
+//! computes **bitwise-identical** results: the micro-kernel is specified
+//! as one correctly-rounded FMA chain per element in fixed k-order (scalar
+//! uses `f64::mul_add`, the vector arms hardware FMA), and the sweeps as
+//! per-element mul/add/div with a fixed 4-lane reduction order for the
+//! horizontal ops. `tests/linalg_oracle.rs` enforces this against
+//! [`scalar`] as the oracle, which is also why thread-count invariance is
+//! untouched: worker partitioning never changes any element's chain, and
+//! neither does the dispatch arm.
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod aarch64;
+#[cfg(target_arch = "x86_64")]
+pub mod x86_64;
+
+mod sealed {
+    pub trait Sealed {}
+}
+
+/// Upper bound on `MR` over all kernels (pack-buffer sizing).
+pub const MAX_MR: usize = 16;
+/// Upper bound on `NR` over all kernels (pack-buffer sizing).
+pub const MAX_NR: usize = 16;
+/// Upper bound on `MR·NR` — the stack tile the packed GEMM hands to
+/// [`Kernels::tile`].
+pub const MAX_TILE: usize = MAX_MR * MAX_NR;
+
+/// One architecture's register-tile micro-kernel plus the vectorized flat
+/// sweeps. Sealed: the three implementations in this module are the only
+/// arms the conformance suite certifies, and external kernels could not
+/// uphold the cross-arm bitwise contract documented at module level.
+///
+/// Default methods are the scalar reference sweeps, so an arch kernel
+/// overrides exactly the ops it accelerates and inherits oracle semantics
+/// for the rest.
+pub trait MicroKernel: sealed::Sealed {
+    /// Human-readable arm name (surfaced in benches and reports).
+    const NAME: &'static str;
+    /// Register-tile rows (micro-panel height of packed A).
+    const MR: usize;
+    /// Register-tile columns (micro-panel width of packed B).
+    const NR: usize;
+
+    /// Can this kernel run on the current CPU? Checked once at dispatch.
+    fn supported() -> bool;
+
+    /// `out[r·NR + c] = Σ_kk fma(pa[kk·MR + r], pb[kk·NR + c])` — the full
+    /// `MR×NR` tile over one packed A/B micro-panel pair.
+    ///
+    /// # Safety
+    /// Callable only when [`MicroKernel::supported`] returned `true` on
+    /// this CPU; `pa.len() ≥ MR·kc`, `pb.len() ≥ NR·kc`,
+    /// `out.len() ≥ MR·NR`.
+    unsafe fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]);
+
+    /// Dot product under the 4-lane reduction contract.
+    ///
+    /// # Safety
+    /// Callable only when [`MicroKernel::supported`] returned `true`;
+    /// `a.len() == b.len()`.
+    unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        scalar::dot(a, b)
+    }
+
+    /// `Σ (w·v)·v` under the 4-lane reduction contract.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`]; `w.len() == v.len()`.
+    unsafe fn weighted_sumsq(w: &[f64], v: &[f64]) -> f64 {
+        scalar::weighted_sumsq(w, v)
+    }
+
+    /// `y += alpha·x`.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`]; `y.len() == x.len()`.
+    unsafe fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+        scalar::axpy(y, alpha, x)
+    }
+
+    /// `y *= alpha`.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`].
+    unsafe fn scale(y: &mut [f64], alpha: f64) {
+        scalar::scale(y, alpha)
+    }
+
+    /// `y /= d` (true division).
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`].
+    unsafe fn div_assign(y: &mut [f64], d: f64) {
+        scalar::div_assign(y, d)
+    }
+
+    /// `out = a∘b`.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`]; all three lengths equal.
+    unsafe fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+        scalar::mul_into(out, a, b)
+    }
+
+    /// `out = a∘a`.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`]; `out.len() == a.len()`.
+    unsafe fn square_into(out: &mut [f64], a: &[f64]) {
+        scalar::square_into(out, a)
+    }
+
+    /// `out[i] = λ⁺/(1+λ⁺)` with `λ⁺ = max(λ, 0)`.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`]; `out.len() == lam.len()`.
+    unsafe fn marginal_weights(out: &mut [f64], lam: &[f64]) {
+        scalar::marginal_weights(out, lam)
+    }
+
+    /// One elementary-polynomial DP row:
+    /// `cur[j] = prev[j] + λ·prev[j−1]`.
+    ///
+    /// # Safety
+    /// As [`MicroKernel::dot`]; `cur.len() == prev.len()`.
+    unsafe fn dp_row(cur: &mut [f64], prev: &[f64], lam: f64) {
+        scalar::dp_row(cur, prev, lam)
+    }
+}
+
+/// The resolved dispatch table: one arm's function pointers plus its tile
+/// geometry. Only constructed for kernels whose
+/// [`supported`](MicroKernel::supported) check passed (or the always-safe
+/// scalar arm), which is what makes the safe wrapper methods sound.
+pub struct Kernels {
+    name: &'static str,
+    mr: usize,
+    nr: usize,
+    tile: unsafe fn(&[f64], &[f64], usize, &mut [f64]),
+    dot: unsafe fn(&[f64], &[f64]) -> f64,
+    weighted_sumsq: unsafe fn(&[f64], &[f64]) -> f64,
+    axpy: unsafe fn(&mut [f64], f64, &[f64]),
+    scale: unsafe fn(&mut [f64], f64),
+    div_assign: unsafe fn(&mut [f64], f64),
+    mul_into: unsafe fn(&mut [f64], &[f64], &[f64]),
+    square_into: unsafe fn(&mut [f64], &[f64]),
+    marginal_weights: unsafe fn(&mut [f64], &[f64]),
+    dp_row: unsafe fn(&mut [f64], &[f64], f64),
+}
+
+impl Kernels {
+    fn of<K: MicroKernel>() -> Self {
+        debug_assert!(K::MR <= MAX_MR && K::NR <= MAX_NR);
+        Kernels {
+            name: K::NAME,
+            mr: K::MR,
+            nr: K::NR,
+            tile: K::tile,
+            dot: K::dot,
+            weighted_sumsq: K::weighted_sumsq,
+            axpy: K::axpy,
+            scale: K::scale,
+            div_assign: K::div_assign,
+            mul_into: K::mul_into,
+            square_into: K::square_into,
+            marginal_weights: K::marginal_weights,
+            dp_row: K::dp_row,
+        }
+    }
+
+    /// Arm name (`"scalar"`, `"avx2+fma"`, `"neon"`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Register-tile rows of this arm.
+    pub fn mr(&self) -> usize {
+        self.mr
+    }
+
+    /// Register-tile columns of this arm.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// Micro-kernel tile over one packed panel pair (see
+    /// [`MicroKernel::tile`]). Crate-internal: only the packed GEMM feeds
+    /// correctly laid-out panels.
+    pub(crate) fn tile_into(&self, pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+        debug_assert!(pa.len() >= self.mr * kc && pb.len() >= self.nr * kc);
+        debug_assert!(out.len() >= self.mr * self.nr);
+        unsafe { (self.tile)(pa, pb, kc, out) }
+    }
+
+    /// Dot product of two equal-length slices.
+    pub fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len(), "simd dot: length mismatch");
+        unsafe { (self.dot)(a, b) }
+    }
+
+    /// `Σ (w[i]·v[i])·v[i]` over two equal-length slices.
+    pub fn weighted_sumsq(&self, w: &[f64], v: &[f64]) -> f64 {
+        assert_eq!(w.len(), v.len(), "simd weighted_sumsq: length mismatch");
+        unsafe { (self.weighted_sumsq)(w, v) }
+    }
+
+    /// `y += alpha·x`.
+    pub fn axpy(&self, y: &mut [f64], alpha: f64, x: &[f64]) {
+        assert_eq!(y.len(), x.len(), "simd axpy: length mismatch");
+        unsafe { (self.axpy)(y, alpha, x) }
+    }
+
+    /// `y *= alpha`.
+    pub fn scale(&self, y: &mut [f64], alpha: f64) {
+        unsafe { (self.scale)(y, alpha) }
+    }
+
+    /// `y /= d` (true division per element).
+    pub fn div_assign(&self, y: &mut [f64], d: f64) {
+        unsafe { (self.div_assign)(y, d) }
+    }
+
+    /// `out = a∘b`.
+    pub fn mul_into(&self, out: &mut [f64], a: &[f64], b: &[f64]) {
+        assert!(
+            out.len() == a.len() && out.len() == b.len(),
+            "simd mul_into: length mismatch"
+        );
+        unsafe { (self.mul_into)(out, a, b) }
+    }
+
+    /// `out = a∘a`.
+    pub fn square_into(&self, out: &mut [f64], a: &[f64]) {
+        assert_eq!(out.len(), a.len(), "simd square_into: length mismatch");
+        unsafe { (self.square_into)(out, a) }
+    }
+
+    /// `out[i] = λ⁺/(1+λ⁺)`.
+    pub fn marginal_weights(&self, out: &mut [f64], lam: &[f64]) {
+        assert_eq!(out.len(), lam.len(), "simd marginal_weights: length mismatch");
+        unsafe { (self.marginal_weights)(out, lam) }
+    }
+
+    /// One DP row `cur[j] = prev[j] + λ·prev[j−1]` (`cur[0] = prev[0]`).
+    pub fn dp_row(&self, cur: &mut [f64], prev: &[f64], lam: f64) {
+        assert_eq!(cur.len(), prev.len(), "simd dp_row: length mismatch");
+        unsafe { (self.dp_row)(cur, prev, lam) }
+    }
+}
+
+/// Was `KRONDPP_FORCE_SCALAR` set to a truthy value (anything but empty
+/// or `0`)? Read once per process.
+fn force_scalar() -> bool {
+    match std::env::var("KRONDPP_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
+fn select() -> Kernels {
+    if force_scalar() {
+        return Kernels::of::<scalar::Scalar>();
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86_64::Avx2::supported() {
+            return Kernels::of::<x86_64::Avx2>();
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if aarch64::Neon::supported() {
+            return Kernels::of::<aarch64::Neon>();
+        }
+    }
+    Kernels::of::<scalar::Scalar>()
+}
+
+/// The process-wide dispatch table: feature detection runs once, the
+/// result is cached, and every later call is one atomic load. Honors
+/// `KRONDPP_FORCE_SCALAR` (read at first use).
+pub fn active() -> &'static Kernels {
+    static ACTIVE: std::sync::OnceLock<Kernels> = std::sync::OnceLock::new();
+    ACTIVE.get_or_init(select)
+}
+
+/// The scalar oracle arm, always available regardless of what [`active`]
+/// resolved to — the A/B seam the conformance tests and benches compare
+/// against in-process.
+pub fn forced_scalar() -> &'static Kernels {
+    static SCALAR: std::sync::OnceLock<Kernels> = std::sync::OnceLock::new();
+    SCALAR.get_or_init(Kernels::of::<scalar::Scalar>)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_arm_geometry_and_name() {
+        let k = forced_scalar();
+        assert_eq!(k.name(), "scalar");
+        assert_eq!((k.mr(), k.nr()), (8, 4));
+    }
+
+    #[test]
+    fn active_arm_is_cached_and_in_bounds() {
+        let k = active();
+        assert!(std::ptr::eq(k, active()), "dispatch must be cached");
+        assert!(k.mr() <= MAX_MR && k.nr() <= MAX_NR);
+        assert!(k.mr() * k.nr() <= MAX_TILE);
+    }
+
+    #[test]
+    fn dp_row_matches_shifted_recurrence() {
+        let prev = [1.0, 2.5, 0.0, -3.0, 4.0];
+        let mut cur = [0.0; 5];
+        forced_scalar().dp_row(&mut cur, &prev, 0.7);
+        assert_eq!(cur[0], prev[0]);
+        for j in 1..5 {
+            assert_eq!(cur[j], prev[j] + 0.7 * prev[j - 1]);
+        }
+    }
+
+    #[test]
+    fn sweeps_basic_semantics() {
+        let k = forced_scalar();
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 2.0, 2.0, 2.0];
+        assert_eq!(k.dot(&a, &b), 30.0);
+        let mut y = a;
+        k.axpy(&mut y, 2.0, &b);
+        assert_eq!(y, [5.0, 6.0, 7.0, 8.0, 9.0]);
+        k.scale(&mut y, 2.0);
+        assert_eq!(y[0], 10.0);
+        k.div_assign(&mut y, 2.0);
+        assert_eq!(y[0], 5.0);
+        let mut o = [0.0; 5];
+        k.mul_into(&mut o, &a, &b);
+        assert_eq!(o, [2.0, 4.0, 6.0, 8.0, 10.0]);
+        k.square_into(&mut o, &a);
+        assert_eq!(o, [1.0, 4.0, 9.0, 16.0, 25.0]);
+        let lam = [3.0, 0.0, -1.0, 1.0, 0.5];
+        k.marginal_weights(&mut o, &lam);
+        assert_eq!(o, [0.75, 0.0, 0.0, 0.5, 0.5 / 1.5]);
+        assert_eq!(k.weighted_sumsq(&lam, &a), 3.0 - 9.0 + 16.0 + 12.5);
+    }
+}

@@ -1,0 +1,175 @@
+//! Portable scalar kernel — the reference implementation and oracle.
+//!
+//! Every operation here *defines* the bit-exact semantics that the
+//! vectorized kernels ([`super::x86_64`], [`super::aarch64`]) must
+//! reproduce. Two different contracts are in play:
+//!
+//! - **GEMM micro-kernel** ([`tile`]): each output element is one fused
+//!   multiply-add chain over the packed depth (`f64::mul_add`, which is the
+//!   IEEE-754 correctly-rounded `fma`). AVX2's `_mm256_fmadd_pd` and NEON's
+//!   `vfmaq_n_f64` perform the same single-rounding operation per lane, so
+//!   all three kernels agree bitwise. On hardware without FMA the libm
+//!   `fma` fallback is slow — acceptable, because that is exactly the
+//!   hardware where this scalar kernel is the *only* arm, and the forced-
+//!   scalar CI arm only runs small tier-1 shapes.
+//! - **Flat sweeps** (dot/axpy/scale/…): plain mul-then-add per element
+//!   (two roundings), matching what these helpers have always computed.
+//!   The vector arms use mul+add per lane — identical rounding — so the
+//!   sweeps also agree bitwise across arms.
+//!
+//! [`dot`] additionally fixes a *reduction order*: four partial sums over
+//! index classes `i mod 4`, combined as `((s0+s1)+s2)+s3`, then a scalar
+//! tail. The AVX2 arm maps the four classes onto the four lanes of one
+//! accumulator and NEON onto two 2-lane accumulators, so the order — and
+//! therefore the bits — never change with the dispatch arm.
+
+use super::MicroKernel;
+
+/// The portable fallback kernel (also the conformance oracle).
+pub struct Scalar;
+
+impl super::sealed::Sealed for Scalar {}
+
+/// Register-tile rows of the scalar micro-kernel.
+pub const MR: usize = 8;
+/// Register-tile columns of the scalar micro-kernel.
+pub const NR: usize = 4;
+
+impl MicroKernel for Scalar {
+    const NAME: &'static str = "scalar";
+    const MR: usize = MR;
+    const NR: usize = NR;
+
+    fn supported() -> bool {
+        true
+    }
+
+    unsafe fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+        tile(pa, pb, kc, out)
+    }
+}
+
+/// 8×4 register tile over packed panels: `out[r·NR + c] = Σ_kk fma(a, b)`.
+/// One `mul_add` chain per output element, `kk` ascending — the reduction
+/// order every vector kernel reproduces lane-for-lane.
+pub(super) fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+    debug_assert!(pa.len() >= MR * kc && pb.len() >= NR * kc && out.len() >= MR * NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for kk in 0..kc {
+        let a = &pa[kk * MR..kk * MR + MR];
+        let b = &pb[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            for c in 0..NR {
+                acc[r][c] = ar.mul_add(b[c], acc[r][c]);
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate() {
+        out[r * NR..r * NR + NR].copy_from_slice(arow);
+    }
+}
+
+/// Dot product: four partial sums over `i mod 4`, combined
+/// `((s0+s1)+s2)+s3`, scalar tail. This *is* the cross-arch contract.
+pub(super) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Weighted sum of squares `Σ_i (w[i]·v[i])·v[i]` under the same 4-lane
+/// reduction contract as [`dot`] — the dense marginal-diagonal sweep.
+pub(super) fn weighted_sumsq(w: &[f64], v: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), v.len());
+    let chunks = w.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += (w[i] * v[i]) * v[i];
+        s1 += (w[i + 1] * v[i + 1]) * v[i + 1];
+        s2 += (w[i + 2] * v[i + 2]) * v[i + 2];
+        s3 += (w[i + 3] * v[i + 3]) * v[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..w.len() {
+        s += (w[i] * v[i]) * v[i];
+    }
+    s
+}
+
+/// `y += alpha·x`, element-wise mul-then-add.
+pub(super) fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y *= alpha`.
+pub(super) fn scale(y: &mut [f64], alpha: f64) {
+    for v in y.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `y /= d` (true division per element — never a reciprocal multiply,
+/// so the bits match the pre-dispatch substitution sweeps).
+pub(super) fn div_assign(y: &mut [f64], d: f64) {
+    for v in y.iter_mut() {
+        *v /= d;
+    }
+}
+
+/// `out[i] = a[i]·b[i]`.
+pub(super) fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert!(out.len() == a.len() && out.len() == b.len());
+    for (o, (av, bv)) in out.iter_mut().zip(a.iter().zip(b)) {
+        *o = av * bv;
+    }
+}
+
+/// `out[i] = a[i]²` — the squared-eigenvector GEMM feed.
+pub(super) fn square_into(out: &mut [f64], a: &[f64]) {
+    debug_assert_eq!(out.len(), a.len());
+    for (o, av) in out.iter_mut().zip(a) {
+        *o = av * av;
+    }
+}
+
+/// `out[i] = λ⁺/(1+λ⁺)` with `λ⁺ = max(λ, 0)` — the marginal-diagonal
+/// weight grid. The clamp is written as a compare-select so the vector
+/// `max` instructions (which return the non-NaN/second operand) match it
+/// bit-for-bit on every input the spectrum can produce.
+pub(super) fn marginal_weights(out: &mut [f64], lam: &[f64]) {
+    debug_assert_eq!(out.len(), lam.len());
+    for (o, &l) in out.iter_mut().zip(lam) {
+        let lp = if l > 0.0 { l } else { 0.0 };
+        *o = lp / (1.0 + lp);
+    }
+}
+
+/// One elementary-symmetric-polynomial DP row:
+/// `cur[0] = prev[0]`, `cur[j] = prev[j] + λ·prev[j−1]` for `j ≥ 1`.
+pub(super) fn dp_row(cur: &mut [f64], prev: &[f64], lam: f64) {
+    debug_assert_eq!(cur.len(), prev.len());
+    if cur.is_empty() {
+        return;
+    }
+    cur[0] = prev[0];
+    for (c, (p, pm1)) in cur[1..].iter_mut().zip(prev[1..].iter().zip(prev)) {
+        *c = p + lam * pm1;
+    }
+}

@@ -1,0 +1,268 @@
+//! x86_64 AVX2+FMA kernel.
+//!
+//! Tile geometry is 4×12: a 4×3 grid of `__m256d` accumulators (12
+//! registers) plus three B row vectors and one A broadcast exactly fills
+//! the 16-register ymm file with no accumulator spills — the classic
+//! f64 GEMM shape for this ISA. (A literal 4×4 grid would need 16
+//! accumulator registers and spill every iteration.) Per packed `kk`:
+//! three 4-wide B loads, four A broadcasts, twelve `_mm256_fmadd_pd`.
+//!
+//! Every operation reproduces the scalar contract bit-for-bit (see
+//! [`super::scalar`]): the tile is one hardware-FMA chain per element in
+//! ascending k — the same correctly-rounded operation sequence as the
+//! scalar arm's `f64::mul_add` — and the sweeps are per-lane mul/add/div
+//! with the scalar 4-lane reduction order for the horizontal ops.
+
+use super::MicroKernel;
+use core::arch::x86_64::*;
+
+/// Register-tile rows of the AVX2 kernel.
+pub const MR: usize = 4;
+/// Register-tile columns of the AVX2 kernel (three `__m256d` per row).
+pub const NR: usize = 12;
+
+/// The AVX2+FMA dispatch arm.
+pub struct Avx2;
+
+impl super::sealed::Sealed for Avx2 {}
+
+impl MicroKernel for Avx2 {
+    const NAME: &'static str = "avx2+fma";
+    const MR: usize = MR;
+    const NR: usize = NR;
+
+    fn supported() -> bool {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+
+    unsafe fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+        tile(pa, pb, kc, out)
+    }
+
+    unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        dot(a, b)
+    }
+
+    unsafe fn weighted_sumsq(w: &[f64], v: &[f64]) -> f64 {
+        weighted_sumsq(w, v)
+    }
+
+    unsafe fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+        axpy(y, alpha, x)
+    }
+
+    unsafe fn scale(y: &mut [f64], alpha: f64) {
+        scale(y, alpha)
+    }
+
+    unsafe fn div_assign(y: &mut [f64], d: f64) {
+        div_assign(y, d)
+    }
+
+    unsafe fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+        mul_into(out, a, b)
+    }
+
+    unsafe fn square_into(out: &mut [f64], a: &[f64]) {
+        square_into(out, a)
+    }
+
+    unsafe fn marginal_weights(out: &mut [f64], lam: &[f64]) {
+        marginal_weights(out, lam)
+    }
+
+    unsafe fn dp_row(cur: &mut [f64], prev: &[f64], lam: f64) {
+        dp_row(cur, prev, lam)
+    }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn tile(pa: &[f64], pb: &[f64], kc: usize, out: &mut [f64]) {
+    debug_assert!(pa.len() >= MR * kc && pb.len() >= NR * kc && out.len() >= MR * NR);
+    let (pa, pb) = (pa.as_ptr(), pb.as_ptr());
+    let mut acc = [[_mm256_setzero_pd(); 3]; MR];
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_pd(pb.add(kk * NR));
+        let b1 = _mm256_loadu_pd(pb.add(kk * NR + 4));
+        let b2 = _mm256_loadu_pd(pb.add(kk * NR + 8));
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let ar = _mm256_broadcast_sd(&*pa.add(kk * MR + r));
+            arow[0] = _mm256_fmadd_pd(ar, b0, arow[0]);
+            arow[1] = _mm256_fmadd_pd(ar, b1, arow[1]);
+            arow[2] = _mm256_fmadd_pd(ar, b2, arow[2]);
+        }
+    }
+    let op = out.as_mut_ptr();
+    for (r, arow) in acc.iter().enumerate() {
+        _mm256_storeu_pd(op.add(r * NR), arow[0]);
+        _mm256_storeu_pd(op.add(r * NR + 4), arow[1]);
+        _mm256_storeu_pd(op.add(r * NR + 8), arow[2]);
+    }
+}
+
+/// Horizontal sum in the scalar contract's order: `((s0+s1)+s2)+s3`.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_ordered(acc: __m256d) -> f64 {
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    // One accumulator whose lane l is exactly the scalar arm's partial
+    // sum s_l (mul then add per lane — not FMA, matching the sweep
+    // contract's two-rounding semantics).
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let av = _mm256_loadu_pd(pa.add(4 * c));
+        let bv = _mm256_loadu_pd(pb.add(4 * c));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+    }
+    let mut s = hsum_ordered(acc);
+    for i in chunks * 4..n {
+        s += *pa.add(i) * *pb.add(i);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn weighted_sumsq(w: &[f64], v: &[f64]) -> f64 {
+    let n = w.len();
+    let chunks = n / 4;
+    let (pw, pv) = (w.as_ptr(), v.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let wv = _mm256_loadu_pd(pw.add(4 * c));
+        let vv = _mm256_loadu_pd(pv.add(4 * c));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_mul_pd(wv, vv), vv));
+    }
+    let mut s = hsum_ordered(acc);
+    for i in chunks * 4..n {
+        s += (*pw.add(i) * *pv.add(i)) * *pv.add(i);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+    let n = y.len();
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    let (py, px) = (y.as_mut_ptr(), x.as_ptr());
+    for c in 0..chunks {
+        let yv = _mm256_loadu_pd(py.add(4 * c));
+        let xv = _mm256_loadu_pd(px.add(4 * c));
+        _mm256_storeu_pd(py.add(4 * c), _mm256_add_pd(yv, _mm256_mul_pd(va, xv)));
+    }
+    for i in chunks * 4..n {
+        *py.add(i) += alpha * *px.add(i);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale(y: &mut [f64], alpha: f64) {
+    let n = y.len();
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    let py = y.as_mut_ptr();
+    for c in 0..chunks {
+        let yv = _mm256_loadu_pd(py.add(4 * c));
+        _mm256_storeu_pd(py.add(4 * c), _mm256_mul_pd(yv, va));
+    }
+    for i in chunks * 4..n {
+        *py.add(i) *= alpha;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn div_assign(y: &mut [f64], d: f64) {
+    let n = y.len();
+    let chunks = n / 4;
+    let vd = _mm256_set1_pd(d);
+    let py = y.as_mut_ptr();
+    for c in 0..chunks {
+        let yv = _mm256_loadu_pd(py.add(4 * c));
+        _mm256_storeu_pd(py.add(4 * c), _mm256_div_pd(yv, vd));
+    }
+    for i in chunks * 4..n {
+        *py.add(i) /= d;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = out.len();
+    let chunks = n / 4;
+    let (po, pa, pb) = (out.as_mut_ptr(), a.as_ptr(), b.as_ptr());
+    for c in 0..chunks {
+        let av = _mm256_loadu_pd(pa.add(4 * c));
+        let bv = _mm256_loadu_pd(pb.add(4 * c));
+        _mm256_storeu_pd(po.add(4 * c), _mm256_mul_pd(av, bv));
+    }
+    for i in chunks * 4..n {
+        *po.add(i) = *pa.add(i) * *pb.add(i);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn square_into(out: &mut [f64], a: &[f64]) {
+    let n = out.len();
+    let chunks = n / 4;
+    let (po, pa) = (out.as_mut_ptr(), a.as_ptr());
+    for c in 0..chunks {
+        let av = _mm256_loadu_pd(pa.add(4 * c));
+        _mm256_storeu_pd(po.add(4 * c), _mm256_mul_pd(av, av));
+    }
+    for i in chunks * 4..n {
+        let v = *pa.add(i);
+        *po.add(i) = v * v;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn marginal_weights(out: &mut [f64], lam: &[f64]) {
+    let n = out.len();
+    let chunks = n / 4;
+    let zero = _mm256_setzero_pd();
+    let one = _mm256_set1_pd(1.0);
+    let (po, pl) = (out.as_mut_ptr(), lam.as_ptr());
+    for c in 0..chunks {
+        let lv = _mm256_loadu_pd(pl.add(4 * c));
+        // maxpd returns the second operand when either input is NaN or
+        // both are ±0 — exactly the scalar `if l > 0 { l } else { 0 }`.
+        let lp = _mm256_max_pd(lv, zero);
+        _mm256_storeu_pd(po.add(4 * c), _mm256_div_pd(lp, _mm256_add_pd(one, lp)));
+    }
+    for i in chunks * 4..n {
+        let l = *pl.add(i);
+        let lp = if l > 0.0 { l } else { 0.0 };
+        *po.add(i) = lp / (1.0 + lp);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dp_row(cur: &mut [f64], prev: &[f64], lam: f64) {
+    let n = cur.len();
+    if n == 0 {
+        return;
+    }
+    let (pc, pp) = (cur.as_mut_ptr(), prev.as_ptr());
+    *pc = *pp;
+    let vl = _mm256_set1_pd(lam);
+    let body = n - 1;
+    let chunks = body / 4;
+    for c in 0..chunks {
+        let j = 1 + 4 * c;
+        let pj = _mm256_loadu_pd(pp.add(j));
+        let pjm1 = _mm256_loadu_pd(pp.add(j - 1));
+        _mm256_storeu_pd(pc.add(j), _mm256_add_pd(pj, _mm256_mul_pd(vl, pjm1)));
+    }
+    for j in 1 + chunks * 4..n {
+        *pc.add(j) = *pp.add(j) + lam * *pp.add(j - 1);
+    }
+}

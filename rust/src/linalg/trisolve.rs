@@ -16,14 +16,22 @@
 //! view of the same factor.
 
 use super::matrix::Matrix;
+use super::simd::{self, Kernels};
 use super::view::MatRef;
-use crate::linalg::matmul::axpy_slice;
 
 /// Solve `T·X = B` in place where `T` is lower-triangular (entries read
 /// from the lower triangle of `t`, which may be a transpose view). `x`
 /// holds `B` on entry and `X` on exit. `unit_diag` skips the division
 /// (LU's implicit unit lower factor).
 pub fn solve_lower_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
+    solve_lower_in_place_with(t, x, unit_diag, simd::active())
+}
+
+/// [`solve_lower_in_place`] pinned to an explicit dispatch arm — the
+/// conformance tests and benches use this to compare the forced-scalar
+/// oracle against the detected kernel in one process. The dispatch is
+/// resolved here, once, before the substitution loops.
+pub fn solve_lower_in_place_with(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool, kern: &Kernels) {
     let n = t.rows();
     debug_assert_eq!(t.cols(), n, "trisolve: T not square");
     debug_assert_eq!(x.rows(), n, "trisolve: RHS row mismatch");
@@ -35,14 +43,12 @@ pub fn solve_lower_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
         for k in 0..i {
             let tik = t.get(i, k);
             if tik != 0.0 {
-                axpy_slice(xi, -tik, &prev[k * cols..(k + 1) * cols]);
+                kern.axpy(xi, -tik, &prev[k * cols..(k + 1) * cols]);
             }
         }
         if !unit_diag {
             let inv = 1.0 / t.get(i, i);
-            for v in xi.iter_mut() {
-                *v *= inv;
-            }
+            kern.scale(xi, inv);
         }
     }
 }
@@ -51,6 +57,12 @@ pub fn solve_lower_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
 /// from the upper triangle of `t`; pass `l.view().t()` to solve against
 /// `Lᵀ` without materializing it).
 pub fn solve_upper_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
+    solve_upper_in_place_with(t, x, unit_diag, simd::active())
+}
+
+/// [`solve_upper_in_place`] pinned to an explicit dispatch arm (see
+/// [`solve_lower_in_place_with`]).
+pub fn solve_upper_in_place_with(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool, kern: &Kernels) {
     let n = t.rows();
     debug_assert_eq!(t.cols(), n, "trisolve: T not square");
     debug_assert_eq!(x.rows(), n, "trisolve: RHS row mismatch");
@@ -62,14 +74,12 @@ pub fn solve_upper_in_place(t: MatRef<'_>, x: &mut Matrix, unit_diag: bool) {
         for k in (i + 1)..n {
             let tik = t.get(i, k);
             if tik != 0.0 {
-                axpy_slice(xi, -tik, &tail[(k - i - 1) * cols..(k - i) * cols]);
+                kern.axpy(xi, -tik, &tail[(k - i - 1) * cols..(k - i) * cols]);
             }
         }
         if !unit_diag {
             let inv = 1.0 / t.get(i, i);
-            for v in xi.iter_mut() {
-                *v *= inv;
-            }
+            kern.scale(xi, inv);
         }
     }
 }

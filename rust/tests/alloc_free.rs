@@ -29,6 +29,14 @@
 //! draws (`LowRankBackend` built once from a cached eigendecomposition,
 //! like a registry epoch) both run allocation-free once warmed.
 //!
+//! Region E — the SIMD-dispatched linalg substrate: packed GEMM calls at
+//! a register-tile volume against a caller-held `GemmScratch` (pack
+//! buffers sized to the selected kernel's MR/NR on warmup, micro-tiles
+//! staged on the stack, the dispatch table a `OnceLock` of fn pointers),
+//! and the factored Kron2 marginal-diagonal sweep (vectorized squared-
+//! eigenvector fills, `λ/(1+λ)` weight grid, two GEMMs) against a warmed
+//! `MarginalScratch`.
+//!
 //! Buffers are grown on the warm-up iterations; after that no region may
 //! hit the allocator.
 //!
@@ -220,4 +228,48 @@ fn krk_update_and_step_paths_are_allocation_free_in_steady_state() {
     });
     assert!(lr_out.len() <= 16);
     assert!(lr_out.iter().all(|&i| i < n1 * n2));
+
+    // Region E warm-up: resolve the SIMD dispatch (the env-var read at
+    // first lookup is the only allocation it ever makes), grow the pack
+    // buffers to the selected kernel's MR/NR geometry at this problem
+    // size, and grow the marginal scratch. 96³ clears the packed-path
+    // volume threshold, so the measured calls run the register-tile
+    // micro-kernel — the micro-tile itself is staged on the stack.
+    use krondpp::dpp::MarginalScratch;
+    use krondpp::linalg::matmul::GemmScratch;
+    use krondpp::linalg::simd;
+    let kern = simd::active();
+    assert!(!kern.name().is_empty());
+    let ga = sub_kernel(96, &mut rng);
+    let gb = sub_kernel(96, &mut rng);
+    let mut gc = Matrix::zeros(96, 96);
+    let mut gemm_scratch = GemmScratch::new();
+    gemm_into_warm(&mut gc, &ga, &gb, &mut gemm_scratch);
+    let marg_kernel = Kernel::Kron2(sub_kernel(24, &mut rng), sub_kernel(32, &mut rng));
+    let marg_eig = marg_kernel.eigen().unwrap();
+    let mut marg_scratch = MarginalScratch::new();
+    let mut diag = Vec::new();
+    for _ in 0..2 {
+        marg_eig.inclusion_probabilities_into(&mut diag, &mut marg_scratch);
+    }
+    measure("dispatched GEMM + marginal-diagonal path", || {
+        for _ in 0..5 {
+            gemm_into_warm(&mut gc, &ga, &gb, &mut gemm_scratch);
+            marg_eig.inclusion_probabilities_into(&mut diag, &mut marg_scratch);
+        }
+    });
+    assert_eq!(diag.len(), 24 * 32);
+    assert!(diag.iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)));
+    assert!(gc.as_slice().iter().all(|v| v.is_finite()));
+}
+
+/// One packed-path GEMM against caller-held scratch (helper so warmup and
+/// the measured region run the identical call).
+fn gemm_into_warm(
+    c: &mut krondpp::linalg::Matrix,
+    a: &krondpp::linalg::Matrix,
+    b: &krondpp::linalg::Matrix,
+    s: &mut krondpp::linalg::matmul::GemmScratch,
+) {
+    krondpp::linalg::matmul::gemm_into(c.view_mut(), 1.0, a.view(), b.view(), false, s);
 }

@@ -9,8 +9,10 @@
 //! orthogonality, agreement with the sequential path, and bitwise
 //! determinism.
 
+use krondpp::dpp::elementary::ElementaryTable;
 use krondpp::linalg::matmul::{self, GemmScratch};
-use krondpp::linalg::{MatRef, Matrix, SymEigen};
+use krondpp::linalg::simd;
+use krondpp::linalg::{trisolve, MatRef, Matrix, SymEigen};
 
 /// Deterministic xorshift values in [-0.5, 0.5).
 struct XorShift(u64);
@@ -179,6 +181,179 @@ fn sym_eigen_blocked_matches_sequential_at_257() {
     }
     // Both reconstruct the same matrix to ≤ 1e-10.
     assert!(blocked.reconstruct().rel_diff(&seq.reconstruct()) < 1e-10);
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch-arm conformance: forced-scalar oracle vs the detected kernel
+// ---------------------------------------------------------------------------
+//
+// `simd::forced_scalar()` is the reference arm; `simd::active()` is whatever
+// runtime detection picked (AVX2+FMA, NEON, or scalar again). The contract is
+// *bitwise* agreement — the vector kernels reproduce the scalar arm's exact
+// rounding and reduction order — so every assertion below is `assert_eq` on
+// raw f64 slices, never a tolerance. On hardware where `active()` resolves to
+// scalar these tests degenerate to self-comparison and still pass; CI's
+// x86_64 and aarch64 jobs exercise the real vector arms.
+
+fn check_pair_bitwise(a: MatRef<'_>, b: MatRef<'_>, scratch: &mut GemmScratch, tag: &str) {
+    let (m, n) = (a.rows(), b.cols());
+    let mut got = Matrix::zeros(m, n);
+    let mut want = Matrix::zeros(m, n);
+    matmul::gemm_into_with(got.view_mut(), 1.0, a, b, false, scratch, simd::active());
+    matmul::gemm_into_with(want.view_mut(), 1.0, a, b, false, scratch, simd::forced_scalar());
+    assert_eq!(got.as_slice(), want.as_slice(), "{tag}: dispatch arm changed GEMM bits");
+}
+
+#[test]
+fn dispatched_gemm_agrees_bitwise_with_scalar_oracle() {
+    let mut rng = XorShift::new(21);
+    let mut s = GemmScratch::new();
+    // Shapes chosen so every arm hits its remainder tiles: 63 ≡ MR−1 for
+    // both the 8-row and 4-row kernels; 59 ≡ NR−1 mod 4 and mod 12, and
+    // 59 ≡ 5 mod 6 for NEON; k = 257 straddles the KC = 256 slab edge;
+    // (511, 1, 251) is a k = 1 outer product big enough for the packed
+    // path; the last shape crosses MC and runs multi-threaded.
+    let shapes = [
+        (63usize, 257usize, 59usize),
+        (63, 64, 11),
+        (511, 1, 251),
+        (130, 300, 131),
+        (200, 180, 190),
+    ];
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        let a = rng.matrix(m, k);
+        let b = rng.matrix(k, n);
+        check_pair_bitwise(a.view(), b.view(), &mut s, &format!("shape[{i}] {m}x{k}x{n}"));
+    }
+    // Strided + transposed views through the same packed path.
+    let big = rng.matrix(140, 150);
+    let av = big.view().submatrix(3, 5, 96, 130);
+    let bv = big.view().submatrix(1, 2, 130, 96);
+    check_pair_bitwise(av, bv, &mut s, "strided");
+    let at = rng.matrix(120, 125);
+    check_pair_bitwise(at.view().t(), rng.matrix(120, 123).view(), &mut s, "transposed");
+}
+
+#[test]
+fn dispatched_sweeps_agree_bitwise_with_scalar_oracle() {
+    // Every flat op, over lengths covering 0, every lane remainder for
+    // 2-/4-wide vectors, and past the wrapper's inline-scalar gate; data
+    // offset by 1 so slices are deliberately unaligned.
+    let act = simd::active();
+    let ora = simd::forced_scalar();
+    let mut rng = XorShift::new(22);
+    let data: Vec<f64> = (0..600).map(|_| rng.next_f64()).collect();
+    let weights: Vec<f64> = (0..600).map(|_| rng.next_f64() * 4.0 - 1.0).collect();
+    for len in (0usize..=9).chain([15, 16, 17, 63, 64, 65, 66, 67, 130, 259]) {
+        let a = &data[1..1 + len];
+        let b = &data[len + 2..2 * len + 2];
+        let w = &weights[1..1 + len];
+        assert_eq!(act.dot(a, b).to_bits(), ora.dot(a, b).to_bits(), "dot len {len}");
+        assert_eq!(
+            act.weighted_sumsq(w, a).to_bits(),
+            ora.weighted_sumsq(w, a).to_bits(),
+            "weighted_sumsq len {len}"
+        );
+        let (mut y1, mut y2) = (a.to_vec(), a.to_vec());
+        act.axpy(&mut y1, -1.75, b);
+        ora.axpy(&mut y2, -1.75, b);
+        assert_eq!(y1, y2, "axpy len {len}");
+        act.scale(&mut y1, 0.3);
+        ora.scale(&mut y2, 0.3);
+        assert_eq!(y1, y2, "scale len {len}");
+        act.div_assign(&mut y1, 0.7);
+        ora.div_assign(&mut y2, 0.7);
+        assert_eq!(y1, y2, "div len {len}");
+        let (mut o1, mut o2) = (vec![0.0; len], vec![0.0; len]);
+        act.mul_into(&mut o1, a, b);
+        ora.mul_into(&mut o2, a, b);
+        assert_eq!(o1, o2, "mul_into len {len}");
+        act.square_into(&mut o1, a);
+        ora.square_into(&mut o2, a);
+        assert_eq!(o1, o2, "square_into len {len}");
+        act.marginal_weights(&mut o1, w);
+        ora.marginal_weights(&mut o2, w);
+        assert_eq!(o1, o2, "marginal_weights len {len}");
+        act.dp_row(&mut o1, a, 1.37);
+        ora.dp_row(&mut o2, a, 1.37);
+        assert_eq!(o1, o2, "dp_row len {len}");
+    }
+}
+
+#[test]
+fn dispatched_trisolve_agrees_bitwise_with_scalar_oracle() {
+    let mut rng = XorShift::new(23);
+    // 67 RHS columns: past the sweeps' vector widths with a remainder.
+    let n = 80;
+    let mut l = rng.matrix(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            l.set(i, j, 0.0);
+        }
+        let d = l.get(i, i).abs() + 1.0;
+        l.set(i, i, d);
+    }
+    let b = rng.matrix(n, 67);
+    for unit in [false, true] {
+        let mut x1 = b.clone();
+        let mut x2 = b.clone();
+        trisolve::solve_lower_in_place_with(l.view(), &mut x1, unit, simd::active());
+        trisolve::solve_lower_in_place_with(l.view(), &mut x2, unit, simd::forced_scalar());
+        assert_eq!(x1.as_slice(), x2.as_slice(), "lower unit={unit}");
+        let mut u1 = b.clone();
+        let mut u2 = b.clone();
+        trisolve::solve_upper_in_place_with(l.view().t(), &mut u1, unit, simd::active());
+        trisolve::solve_upper_in_place_with(l.view().t(), &mut u2, unit, simd::forced_scalar());
+        assert_eq!(u1.as_slice(), u2.as_slice(), "upper unit={unit}");
+    }
+}
+
+#[test]
+fn dispatched_dp_table_agrees_bitwise_with_scalar_oracle() {
+    // The full elementary-polynomial DP (row sweep + overflow rescale):
+    // a long spectrum with growth forcing the rescale branch, and k values
+    // hitting both the sub-row and full-row regimes.
+    let lambda: Vec<f64> = (0..500).map(|i| 1.0 + ((i * 37) % 97) as f64 * 3.0).collect();
+    for k in [1usize, 7, 64, 200] {
+        let t1 = ElementaryTable::new_with(&lambda, k, simd::active());
+        let t2 = ElementaryTable::new_with(&lambda, k, simd::forced_scalar());
+        for n in 0..=lambda.len() {
+            for j in 0..=k {
+                assert_eq!(
+                    t1.log_e(n, j).to_bits(),
+                    t2.log_e(n, j).to_bits(),
+                    "log_e({n},{j}) k={k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_marginal_diagonals_agree_bitwise_with_scalar_oracle() {
+    use krondpp::dpp::{Kernel, MarginalScratch};
+    let mut rng = XorShift::new(24);
+    let spd_small = |n: usize, rng: &mut XorShift| {
+        let x = rng.matrix(n, n);
+        let mut g = matmul::matmul_nt(&x, &x).unwrap();
+        g.add_diag_mut(0.5);
+        g
+    };
+    let k1 = spd_small(17, &mut rng);
+    let k2 = spd_small(23, &mut rng);
+    let k3 = spd_small(5, &mut rng);
+    for kernel in [
+        Kernel::Full(spd_small(60, &mut rng)),
+        Kernel::Kron2(k1.clone(), k2.clone()),
+        Kernel::Kron3(k1, k2, k3),
+    ] {
+        let eig = kernel.eigen().unwrap();
+        let (mut o1, mut o2) = (Vec::new(), Vec::new());
+        let mut s = MarginalScratch::new();
+        eig.inclusion_probabilities_into_with(&mut o1, &mut s, simd::active());
+        eig.inclusion_probabilities_into_with(&mut o2, &mut s, simd::forced_scalar());
+        assert_eq!(o1, o2, "marginal diagonal changed bits across dispatch arms");
+    }
 }
 
 #[test]
