@@ -5,6 +5,7 @@
 //! example/binary can run with zero flags, and every paper experiment is a
 //! small checked-in config. CLI flags override file values.
 
+use crate::dpp::backend::SampleMode;
 use crate::error::Result;
 use crate::ser::Json;
 use std::path::Path;
@@ -177,6 +178,117 @@ impl TenantSpec {
     }
 }
 
+/// Degraded-mode policy: the per-tenant circuit breaker plus the chain of
+/// fallback rungs a tripped (or probing-and-failing) tenant is served
+/// through. Rungs are tried in order per coalesced group:
+///
+/// 1. each `regularize_eps` value — rebuild the epoch's kernel as
+///    `L + εI` (ε jittered per attempt) and retry the exact path;
+/// 2. each `degrade` mode — downgrade to an approximate backend
+///    (low-rank projection or MCMC) over the *existing* epoch;
+/// 3. exhausted → the group fails with a `Service` error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FallbackPolicy {
+    /// Master switch: `false` restores fail-fast behavior (failures are
+    /// still counted by the breaker, but nothing is served degraded).
+    pub enabled: bool,
+    /// Consecutive `Numerical` primary-path failures that trip a tenant's
+    /// breaker (0 disables tripping).
+    pub breaker_threshold: u32,
+    /// While tripped, every `probe_every`-th serve event retries the
+    /// primary path (half-open probe; 0 disables probing — the breaker
+    /// then only closes by operator action).
+    pub probe_every: u32,
+    /// Regularization rungs: ε values for the `L + εI` retry, tried in
+    /// order (each jittered ±25% per attempt to avoid resonant failures).
+    pub regularize_eps: Vec<f64>,
+    /// Backend-downgrade rungs, tried after regularization. Only
+    /// approximate families are meaningful here (`lowrank:R`, `mcmc:S`).
+    pub degrade: Vec<SampleMode>,
+}
+
+impl Default for FallbackPolicy {
+    fn default() -> Self {
+        FallbackPolicy {
+            enabled: true,
+            breaker_threshold: 3,
+            probe_every: 4,
+            regularize_eps: vec![1e-6, 1e-3],
+            degrade: vec![
+                SampleMode::LowRank { rank: 32 },
+                SampleMode::Mcmc { steps: 2000 },
+            ],
+        }
+    }
+}
+
+impl FallbackPolicy {
+    /// Parse one degrade rung spec: `"lowrank:32"` or `"mcmc:2000"`.
+    fn parse_rung(s: &str) -> Result<SampleMode> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => {
+                let v: usize = p.trim().parse().map_err(|_| {
+                    crate::Error::Parse(format!("fallback rung '{s}': bad parameter"))
+                })?;
+                (n.trim(), Some(v))
+            }
+            None => (s.trim(), None),
+        };
+        let mode = match name {
+            "mcmc" => SampleMode::parse(name, param, None)?,
+            "lowrank" | "low-rank" => SampleMode::parse(name, None, param)?,
+            other => {
+                return Err(crate::Error::Parse(format!(
+                    "fallback rung '{other}': only approximate families \
+                     (mcmc, lowrank) can serve as degrade rungs"
+                )))
+            }
+        };
+        // SampleMode::parse defers parameter validation to backend
+        // construction; a config must fail at parse time instead.
+        match mode {
+            SampleMode::Mcmc { steps: 0 } => {
+                Err(crate::Error::Parse(format!("fallback rung '{s}': steps must be ≥ 1")))
+            }
+            SampleMode::LowRank { rank: 0 } => {
+                Err(crate::Error::Parse(format!("fallback rung '{s}': rank must be ≥ 1")))
+            }
+            m => Ok(m),
+        }
+    }
+
+    /// Parse from a JSON object, starting from defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut p = FallbackPolicy::default();
+        if let Some(x) = v.get_opt("enabled") {
+            p.enabled = x.as_bool()?;
+        }
+        if let Some(x) = v.get_opt("breaker_threshold") {
+            p.breaker_threshold = x.as_f64()? as u32;
+        }
+        if let Some(x) = v.get_opt("probe_every") {
+            p.probe_every = x.as_f64()? as u32;
+        }
+        if let Some(x) = v.get_opt("regularize_eps") {
+            p.regularize_eps =
+                x.as_arr()?.iter().map(Json::as_f64).collect::<Result<Vec<_>>>()?;
+            if p.regularize_eps.iter().any(|&e| !(e > 0.0) || !e.is_finite()) {
+                return Err(crate::Error::Parse(
+                    "regularize_eps values must be finite and positive".into(),
+                ));
+            }
+        }
+        if let Some(x) = v.get_opt("degrade") {
+            p.degrade = x
+                .as_arr()?
+                .iter()
+                .map(|r| Self::parse_rung(r.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(p)
+    }
+}
+
 /// Configuration for the serving coordinator.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -192,6 +304,15 @@ pub struct ServiceConfig {
     /// unbounded): cold tenants drop their cached epoch and lazily
     /// rebuild on the next request.
     pub max_resident_epochs: usize,
+    /// Per-tenant rollback history bound — outgoing generations kept for
+    /// [`crate::coordinator::KernelRegistry::rollback`] (0 disables).
+    pub epoch_history: usize,
+    /// Default per-request budget in milliseconds, applied at admission
+    /// to requests that carry no explicit deadline (0 = no default —
+    /// such requests never expire).
+    pub default_budget_ms: u64,
+    /// Circuit-breaker + degraded-mode fallback chain policy.
+    pub fallback: FallbackPolicy,
     /// Tenants to provision at startup. Empty means the caller supplies
     /// the (single, "default") tenant kernel programmatically.
     pub tenants: Vec<TenantSpec>,
@@ -205,6 +326,9 @@ impl Default for ServiceConfig {
             batch_window_us: 500,
             queue_capacity: 1024,
             max_resident_epochs: 0,
+            epoch_history: crate::coordinator::registry::DEFAULT_EPOCH_HISTORY,
+            default_budget_ms: 0,
+            fallback: FallbackPolicy::default(),
             tenants: Vec::new(),
         }
     }
@@ -227,6 +351,15 @@ impl ServiceConfig {
         }
         if let Some(x) = v.get_opt("max_resident_epochs") {
             c.max_resident_epochs = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("epoch_history") {
+            c.epoch_history = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("default_budget_ms") {
+            c.default_budget_ms = x.as_f64()? as u64;
+        }
+        if let Some(x) = v.get_opt("fallback") {
+            c.fallback = FallbackPolicy::from_json(x)?;
         }
         if let Some(x) = v.get_opt("tenants") {
             c.tenants = x
@@ -311,6 +444,52 @@ mod tests {
             TenantSpec { name: "market-eu".into(), n1: 8, n2: 8, seed: 1 }
         );
         assert_eq!(s.tenants[1].seed, 2016, "seed defaults");
+    }
+
+    #[test]
+    fn fallback_policy_defaults_and_parse() {
+        let d = FallbackPolicy::default();
+        assert!(d.enabled);
+        assert_eq!(d.breaker_threshold, 3);
+        assert_eq!(d.regularize_eps, vec![1e-6, 1e-3]);
+        assert_eq!(d.degrade.len(), 2);
+
+        let j = Json::parse(
+            r#"{"fallback": {"enabled": true, "breaker_threshold": 2,
+                 "probe_every": 5, "regularize_eps": [1e-4],
+                 "degrade": ["mcmc:500", "lowrank:16"]},
+                "default_budget_ms": 250, "epoch_history": 8}"#,
+        )
+        .unwrap();
+        let s = ServiceConfig::from_json(&j).unwrap();
+        assert_eq!(s.fallback.breaker_threshold, 2);
+        assert_eq!(s.fallback.probe_every, 5);
+        assert_eq!(s.fallback.regularize_eps, vec![1e-4]);
+        assert_eq!(
+            s.fallback.degrade,
+            vec![SampleMode::Mcmc { steps: 500 }, SampleMode::LowRank { rank: 16 }]
+        );
+        assert_eq!(s.default_budget_ms, 250);
+        assert_eq!(s.epoch_history, 8);
+        // Untouched by other configs: robustness defaults.
+        let plain = ServiceConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(plain.default_budget_ms, 0);
+        assert_eq!(plain.fallback, FallbackPolicy::default());
+    }
+
+    #[test]
+    fn fallback_policy_rejects_bad_rungs_and_eps() {
+        for bad in [
+            r#"{"degrade": ["exact"]}"#,           // primary can't be a rung
+            r#"{"degrade": ["map:3"]}"#,           // nor MAP
+            r#"{"degrade": ["mcmc:zero"]}"#,       // bad parameter
+            r#"{"degrade": ["mcmc:0"]}"#,          // steps must be ≥ 1
+            r#"{"regularize_eps": [0.0]}"#,        // ε must be positive
+            r#"{"regularize_eps": [-1e-6]}"#,      // and not negative
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FallbackPolicy::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

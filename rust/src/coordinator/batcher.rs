@@ -117,6 +117,7 @@ pub fn coalesce_by_key<T, K: Ord>(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::testing::{check, Gen, UsizeGen};

@@ -49,7 +49,7 @@ impl LearningJob {
         max_iters: usize,
         tol: f64,
         service: Option<Arc<DppService>>,
-    ) -> LearningJob {
+    ) -> Result<LearningJob> {
         Self::spawn_into(learner, data, max_iters, tol, service, TenantId::DEFAULT)
     }
 
@@ -63,7 +63,7 @@ impl LearningJob {
         tol: f64,
         service: Option<Arc<DppService>>,
         tenant: TenantId,
-    ) -> LearningJob {
+    ) -> Result<LearningJob> {
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
         let cancel2 = Arc::clone(&cancel);
@@ -108,8 +108,8 @@ impl LearningJob {
                 }
                 Ok(history)
             })
-            .expect("spawn learning job");
-        LearningJob { handle, progress: rx, cancel }
+            .map_err(Error::Io)?;
+        Ok(LearningJob { handle, progress: rx, cancel })
     }
 
     /// Non-blocking progress poll.
@@ -179,7 +179,7 @@ impl SamplingJob {
                 }
                 out
             })
-            .expect("spawn sampling job");
+            .map_err(Error::Io)?;
         Ok(SamplingJob { handle, cancel })
     }
 
@@ -197,6 +197,7 @@ impl SamplingJob {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::config::ServiceConfig;
@@ -223,7 +224,7 @@ mod tests {
     #[test]
     fn job_runs_to_completion_with_progress() {
         let (data, learner, _) = setup();
-        let job = LearningJob::spawn(Box::new(learner), data, 5, 0.0, None);
+        let job = LearningJob::spawn(Box::new(learner), data, 5, 0.0, None).unwrap();
         let history = job.join().unwrap();
         assert_eq!(history.len(), 6);
         for w in history.windows(2) {
@@ -242,8 +243,8 @@ mod tests {
             ..ServiceConfig::default()
         };
         let svc = Arc::new(DppService::start(&truth, &cfg, 3).unwrap());
-        let job =
-            LearningJob::spawn(Box::new(learner), data, 4, 0.0, Some(Arc::clone(&svc)));
+        let job = LearningJob::spawn(Box::new(learner), data, 4, 0.0, Some(Arc::clone(&svc)))
+            .unwrap();
         let history = job.join().unwrap();
         assert_eq!(history.len(), 5);
         // Service still serves after swaps.
@@ -270,7 +271,8 @@ mod tests {
             0.0,
             Some(Arc::clone(&svc)),
             fresh,
-        );
+        )
+        .unwrap();
         let history = job.join().unwrap();
         assert!(history.len() >= 2);
         // The target tenant advanced generations; default stayed at 1.
@@ -311,7 +313,7 @@ mod tests {
     #[test]
     fn cancellation_stops_early() {
         let (data, learner, _) = setup();
-        let job = LearningJob::spawn(Box::new(learner), data, 10_000, 0.0, None);
+        let job = LearningJob::spawn(Box::new(learner), data, 10_000, 0.0, None).unwrap();
         std::thread::sleep(Duration::from_millis(30));
         job.cancel();
         let history = job.join().unwrap();

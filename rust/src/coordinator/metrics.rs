@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::lock_clean;
 use crate::dpp::backend::SampleMode;
 
 /// Per-mode completion counters — how much traffic each sampler-zoo
@@ -102,7 +103,7 @@ impl LatencyHistogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
         self.max_us.fetch_max(us as u64, Ordering::Relaxed);
-        let mut b = self.buckets.lock().unwrap();
+        let mut b = lock_clean(&self.buckets);
         b[Self::bucket_index(us)] += 1;
     }
 
@@ -129,7 +130,7 @@ impl LatencyHistogram {
             return Duration::ZERO;
         }
         let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
-        let b = self.buckets.lock().unwrap();
+        let b = lock_clean(&self.buckets);
         let mut acc = 0u64;
         for (i, &c) in b.iter().enumerate() {
             acc += c;
@@ -154,6 +155,45 @@ impl LatencyHistogram {
     }
 }
 
+/// Degraded-mode (fallback chain) counters — how the service kept serving
+/// when the primary path failed. Counted once per *request served* on a
+/// given rung (a coalesced group of `g` requests served by one
+/// regularized rebuild counts `g`), except `probes`, which counts
+/// half-open probe *attempts* per serve event.
+#[derive(Default)]
+pub struct FallbackCounters {
+    /// Half-open probes of the primary path while a breaker was open.
+    pub probes: AtomicU64,
+    /// Requests served by a jittered-regularization rung (`L + εI`).
+    pub regularized: AtomicU64,
+    /// Requests served by the low-rank downgrade rung.
+    pub degraded_low_rank: AtomicU64,
+    /// Requests served by the MCMC downgrade rung.
+    pub degraded_mcmc: AtomicU64,
+    /// Requests that exhausted every rung and failed.
+    pub exhausted: AtomicU64,
+}
+
+impl FallbackCounters {
+    /// Requests served by any fallback rung (excludes probes/exhausted).
+    pub fn served(&self) -> u64 {
+        self.regularized.load(Ordering::Relaxed)
+            + self.degraded_low_rank.load(Ordering::Relaxed)
+            + self.degraded_mcmc.load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "fallback: probes={} regularized={} lowrank={} mcmc={} exhausted={}",
+            self.probes.load(Ordering::Relaxed),
+            self.regularized.load(Ordering::Relaxed),
+            self.degraded_low_rank.load(Ordering::Relaxed),
+            self.degraded_mcmc.load(Ordering::Relaxed),
+            self.exhausted.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Per-tenant counters + latency histogram, held by each registry tenant.
 #[derive(Default)]
 pub struct TenantMetrics {
@@ -169,6 +209,11 @@ pub struct TenantMetrics {
     pub conditioned: AtomicU64,
     /// Accepted requests that failed service-side (epoch build error).
     pub failed: AtomicU64,
+    /// Accepted requests whose deadline expired before they were served.
+    pub deadline_exceeded: AtomicU64,
+    /// Completed requests served by a fallback rung rather than the
+    /// primary path (subset of `completed`).
+    pub fallback_served: AtomicU64,
     /// Completed requests by sampler mode.
     pub modes: ModeCounters,
     /// End-to-end latency of this tenant's requests.
@@ -183,12 +228,15 @@ impl TenantMetrics {
     /// One-line per-tenant summary for reports.
     pub fn summary(&self) -> String {
         format!(
-            "accepted={} rejected_invalid={} completed={} conditioned={} failed={} {} latency: {}",
+            "accepted={} rejected_invalid={} completed={} conditioned={} failed={} \
+             deadline_exceeded={} fallback_served={} {} latency: {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.conditioned.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
+            self.fallback_served.load(Ordering::Relaxed),
             self.modes.summary(),
             self.latency.summary(),
         )
@@ -218,8 +266,20 @@ pub struct ServiceMetrics {
     pub conditioning_setups: AtomicU64,
     /// Accepted requests that failed service-side (epoch build error).
     /// Invariant: every accepted request ends in exactly one of
-    /// `completed`, `failed`, or (worker-side) `rejected_invalid`.
+    /// `completed`, `failed`, `deadline_exceeded`, or (worker-side)
+    /// `rejected_invalid`.
     pub failed: AtomicU64,
+    /// Accepted requests whose deadline expired before they were served
+    /// (admission fast-rejects of already-expired requests are *not*
+    /// accepted and count here only, without burning a queue slot).
+    pub deadline_exceeded: AtomicU64,
+    /// Coalesced groups whose serve panicked (contained by the worker's
+    /// `catch_unwind`; the group's requests count as `failed`).
+    pub worker_panics: AtomicU64,
+    /// Workers respawned by the supervisor after a panic.
+    pub worker_respawns: AtomicU64,
+    /// Degraded-mode serving counters (circuit breaker + fallback chain).
+    pub fallback: FallbackCounters,
     /// Completed requests by sampler mode (the zoo's traffic mix).
     pub modes: ModeCounters,
     /// Batches dispatched.
@@ -248,7 +308,8 @@ impl ServiceMetrics {
     pub fn report(&self) -> String {
         format!(
             "accepted={} rejected={} rejected_invalid={} completed={} conditioned={} \
-             conditioning_setups={} failed={} batches={} mean_batch={:.2} {}\n  latency: {}\n  queue:   {}",
+             conditioning_setups={} failed={} deadline_exceeded={} worker_panics={} \
+             worker_respawns={} batches={} mean_batch={:.2} {} {}\n  latency: {}\n  queue:   {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
@@ -256,9 +317,13 @@ impl ServiceMetrics {
             self.conditioned.load(Ordering::Relaxed),
             self.conditioning_setups.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
+            self.worker_panics.load(Ordering::Relaxed),
+            self.worker_respawns.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.modes.summary(),
+            self.fallback.summary(),
             self.latency.summary(),
             self.queue_wait.summary(),
         )
@@ -266,6 +331,7 @@ impl ServiceMetrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -316,6 +382,25 @@ mod tests {
         let s = ServiceMetrics::new();
         s.modes.count(SampleMode::Exact);
         assert!(s.report().contains("modes: exact=1 mcmc=0 lowrank=0 map=0"));
+    }
+
+    #[test]
+    fn fallback_counters_sum_and_summarize() {
+        let f = FallbackCounters::default();
+        f.probes.store(3, Ordering::Relaxed);
+        f.regularized.store(4, Ordering::Relaxed);
+        f.degraded_low_rank.store(2, Ordering::Relaxed);
+        f.degraded_mcmc.store(1, Ordering::Relaxed);
+        f.exhausted.store(5, Ordering::Relaxed);
+        // served = the rungs only, not probes or exhausted.
+        assert_eq!(f.served(), 7);
+        let s = f.summary();
+        assert!(s.contains("probes=3") && s.contains("exhausted=5"), "{s}");
+        let m = ServiceMetrics::new();
+        let r = m.report();
+        assert!(r.contains("deadline_exceeded=0"), "{r}");
+        assert!(r.contains("worker_panics=0"), "{r}");
+        assert!(r.contains("fallback: probes=0"), "{r}");
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //!   publishing generation-stamped [`SamplerEpoch`]s (kernel + cached
 //!   eigendecomposition + sampler) atomically, with an LRU bound on
 //!   resident eigendecompositions and lazy rebuild for cold tenants.
+//!   Candidate publishes are validated (finite scan + spectrum sanity)
+//!   and quarantined on failure; a bounded per-tenant history backs
+//!   [`KernelRegistry::rollback`].
 //! - [`server`]: the sampling service (admission control → request queue
 //!   → dynamic batcher → tenant-grouped least-loaded dispatch → DPP
 //!   samples from the tenant's current epoch), constraint-aware end to
@@ -16,14 +19,31 @@
 //!   [`crate::dpp::SampleMode`] backend — exact, MCMC, low-rank
 //!   projection, or the deterministic greedy MAP slate — gated per
 //!   tenant by a [`ModePolicy`] and counted per mode in the metrics.
+//!   Requests carry optional **deadlines** (checked at admission and
+//!   again before expensive per-group setup); per-tenant **circuit
+//!   breakers** route `Numerical` failures into a configurable
+//!   degraded-mode **fallback chain** (jittered regularization, then
+//!   backend downgrade); workers are **supervised** — a panicking job
+//!   fails only its own coalesced group and the worker is respawned.
 //! - [`batcher`]: the two-trigger (size/age) batch policy plus the
 //!   `(tenant, k, constraint, mode)` coalescer, property-tested.
 //! - [`router`]: job-weighted least-loaded work routing.
 //! - [`jobs`]: background learning jobs publishing refreshed kernels to
 //!   their target tenant.
 //! - [`metrics`]: latency histograms + global and per-tenant counters.
+//! - [`faults`] (test / `fault-injection` builds only): the deterministic
+//!   seeded fault-injection plan driving the chaos suite.
+//!
+//! The whole coordinator tree denies `unwrap`/`expect` (clippy): the
+//! serving path must degrade, never abort. Lock poisoning in particular
+//! is recovered through the [`lock_clean`]/[`read_clean`]/[`write_clean`]
+//! helpers below.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod faults;
 pub mod jobs;
 pub mod metrics;
 pub mod registry;
@@ -33,3 +53,30 @@ pub mod server;
 pub use jobs::LearningJob;
 pub use registry::{KernelRegistry, ModePolicy, SamplerEpoch, TenantId};
 pub use server::{DppService, SampleRequest, Ticket};
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+// Poison recovery, deliberately: a `Mutex`/`RwLock` is poisoned when a
+// thread panics while holding it. In this coordinator every panic is
+// contained to one coalesced group (see `server`'s catch_unwind
+// supervision), and none of the guarded structures carry invariants that
+// a half-finished critical section could break mid-write in a way later
+// readers would misinterpret (slots are swapped whole `Arc`s, scratches
+// are fully overwritten by each build, metric maps are append-only).
+// Propagating the poison would instead convert one contained panic into
+// a permanent denial of service for the tenant — so we strip it.
+
+/// Lock a mutex, recovering from poisoning.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poisoning.
+pub(crate) fn read_clean<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poisoning.
+pub(crate) fn write_clean<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}

@@ -28,14 +28,39 @@
 //! at admission, coalesces requests by `(tenant, k)`, and acquires one
 //! epoch per coalesced group, so per-tenant elementary-DP tables and the
 //! batched engine's determinism guarantees are preserved.
+//!
+//! **Fault tolerance.** [`KernelRegistry::publish`] *validates* every
+//! candidate before install: a non-finite entry scan on the factors, then
+//! an eigenvalue sanity check on the freshly built spectrum. A failing
+//! candidate is **quarantined** — counted, its reason recorded on the
+//! tenant, and the tenant keeps serving its last-good generation
+//! untouched. Each successful publish also pushes the outgoing
+//! `(generation, kernel)` into a bounded per-tenant history, so
+//! [`KernelRegistry::rollback`] can restore any recent generation as a
+//! *new* publication (generations stay monotone; readers never observe
+//! time moving backwards). Per-tenant circuit-breaker state for the
+//! serving-side fallback chain also lives on [`TenantEntry`] — lock-free
+//! atomics, same discipline as the mode-policy mask.
 
 use crate::coordinator::metrics::TenantMetrics;
+use crate::coordinator::{read_clean, write_clean};
 use crate::dpp::backend::SampleMode;
 use crate::dpp::{Kernel, MarginalScratch, SampleScratch, Sampler};
 use crate::error::{Error, Result};
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, TryLockError};
+
+/// Default bound on each tenant's rollback history (outgoing generations
+/// kept as `(generation, kernel)` records; kernels are factored, so a
+/// record is `O(N₁²+N₂²)` — cheap).
+pub const DEFAULT_EPOCH_HISTORY: usize = 4;
+
+/// Relative tolerance for the publish-time spectrum sanity check: a
+/// candidate whose most-negative eigenvalue dips below
+/// `-tol · max(1, λ_max)` is not a rounding artifact but a genuinely
+/// indefinite kernel, and is quarantined.
+const SPECTRUM_TOL: f64 = 1e-8;
 
 /// Which sampler-zoo mode *families* a tenant may request — the
 /// admission-time policy knob (a cheap per-mode capability mask; the
@@ -154,6 +179,18 @@ struct TenantSlot {
     n: usize,
     generation: u64,
     epoch: Option<Arc<SamplerEpoch>>,
+    /// Recent outgoing generations, oldest first, bounded by the
+    /// registry's `max_history`. Only the defining state is kept (the
+    /// factored kernel); a rollback re-eigendecomposes it, exactly like a
+    /// publish of a known-good kernel.
+    history: VecDeque<EpochRecord>,
+}
+
+/// One rollback point: a previously-served generation and its kernel.
+#[derive(Clone)]
+struct EpochRecord {
+    generation: u64,
+    kernel: Kernel,
 }
 
 /// A registry tenant: identity, the epoch slot, LRU/load accounting and
@@ -171,6 +208,20 @@ pub struct TenantEntry {
     /// admission. Atomic so policy swaps need no lock and no republish.
     mode_policy: AtomicU8,
     metrics: TenantMetrics,
+    /// Candidate publishes rejected by validation for this tenant.
+    quarantined: AtomicU64,
+    /// Reason the most recent candidate was quarantined.
+    last_quarantine: Mutex<Option<String>>,
+    /// Circuit breaker (serving-side degraded mode). All lock-free:
+    /// `open` is the trip state, `forced` pins it open for operator-forced
+    /// degradation, `failures` counts *consecutive* numerical failures,
+    /// `open_serves` clocks half-open probes while tripped.
+    breaker_open: AtomicBool,
+    breaker_forced: AtomicBool,
+    breaker_failures: AtomicU32,
+    breaker_open_serves: AtomicU32,
+    breaker_trips: AtomicU64,
+    breaker_recoveries: AtomicU64,
 }
 
 impl TenantEntry {
@@ -196,17 +247,23 @@ impl TenantEntry {
     /// admission control can reject `k > n` for a cold tenant without
     /// forcing an eigendecomposition.
     pub fn n(&self) -> usize {
-        self.slot.read().unwrap().n
+        read_clean(&self.slot).n
     }
 
     /// Current publication generation.
     pub fn generation(&self) -> u64 {
-        self.slot.read().unwrap().generation
+        read_clean(&self.slot).generation
     }
 
     /// Is this tenant's eigendecomposition resident right now?
     pub fn resident(&self) -> bool {
-        self.slot.read().unwrap().epoch.is_some()
+        read_clean(&self.slot).epoch.is_some()
+    }
+
+    /// Generations currently available for [`KernelRegistry::rollback`],
+    /// oldest first.
+    pub fn rollback_generations(&self) -> Vec<u64> {
+        read_clean(&self.slot).history.iter().map(|r| r.generation).collect()
     }
 
     /// The tenant's current sampler-mode policy.
@@ -219,6 +276,107 @@ impl TenantEntry {
     /// still complete).
     pub fn set_mode_policy(&self, policy: ModePolicy) {
         self.mode_policy.store(policy.mask, Ordering::Relaxed);
+    }
+
+    /// Candidate publishes rejected by validation for this tenant.
+    pub fn quarantined_candidates(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Why the most recent candidate was quarantined (None if none was).
+    pub fn last_quarantine(&self) -> Option<String> {
+        crate::coordinator::lock_clean(&self.last_quarantine).clone()
+    }
+
+    pub(crate) fn record_quarantine(&self, reason: String) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        *crate::coordinator::lock_clean(&self.last_quarantine) = Some(reason);
+    }
+
+    // --- circuit breaker -------------------------------------------------
+    //
+    // SeqCst throughout: breaker transitions are rare (failures, trips,
+    // probes) and correctness under concurrent workers matters more than
+    // the fence cost.
+
+    /// Is this tenant currently serving in degraded (tripped) mode?
+    pub fn breaker_is_open(&self) -> bool {
+        self.breaker_open.load(Ordering::SeqCst)
+    }
+
+    /// `"closed"`, `"open"` or `"forced"` — for reports and logs.
+    pub fn breaker_state(&self) -> &'static str {
+        if self.breaker_forced.load(Ordering::SeqCst) {
+            "forced"
+        } else if self.breaker_is_open() {
+            "open"
+        } else {
+            "closed"
+        }
+    }
+
+    /// Times the breaker tripped / recovered so far.
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker_trips.load(Ordering::SeqCst)
+    }
+
+    pub fn breaker_recoveries(&self) -> u64 {
+        self.breaker_recoveries.load(Ordering::SeqCst)
+    }
+
+    /// Record one numerical failure event on the primary serving path.
+    /// Trips the breaker once `threshold` *consecutive* failures
+    /// accumulate (`threshold == 0` disables tripping). Returns `true`
+    /// when this call newly tripped it.
+    pub(crate) fn breaker_record_failure(&self, threshold: u32) -> bool {
+        let failures = self.breaker_failures.fetch_add(1, Ordering::SeqCst) + 1;
+        if threshold == 0 || failures < threshold {
+            return false;
+        }
+        let tripped = !self.breaker_open.swap(true, Ordering::SeqCst);
+        if tripped {
+            self.breaker_open_serves.store(0, Ordering::SeqCst);
+            self.breaker_trips.fetch_add(1, Ordering::SeqCst);
+        }
+        tripped
+    }
+
+    /// Record a successful primary serve: resets the consecutive-failure
+    /// count and closes a tripped breaker (half-open probe recovery) —
+    /// unless an operator forced degraded mode.
+    pub(crate) fn breaker_record_success(&self) {
+        self.breaker_failures.store(0, Ordering::SeqCst);
+        if self.breaker_forced.load(Ordering::SeqCst) {
+            return;
+        }
+        if self.breaker_open.swap(false, Ordering::SeqCst) {
+            self.breaker_recoveries.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// While open, every `every`-th serve event is a half-open probe that
+    /// retries the primary path (`every == 0` disables probing; forced
+    /// degradation never probes). Call once per serve event.
+    pub(crate) fn breaker_probe_due(&self, every: u32) -> bool {
+        if every == 0 || self.breaker_forced.load(Ordering::SeqCst) {
+            return false;
+        }
+        let n = self.breaker_open_serves.fetch_add(1, Ordering::SeqCst) + 1;
+        n % every == 0
+    }
+
+    /// Operator override: pin the tenant into (or release it from)
+    /// degraded mode regardless of failure history. Used by ops runbooks
+    /// and the degraded-mode bench.
+    pub fn force_degraded(&self, on: bool) {
+        self.breaker_forced.store(on, Ordering::SeqCst);
+        if on {
+            self.breaker_open.store(true, Ordering::SeqCst);
+            self.breaker_open_serves.store(0, Ordering::SeqCst);
+        } else {
+            self.breaker_open.store(false, Ordering::SeqCst);
+            self.breaker_failures.store(0, Ordering::SeqCst);
+        }
     }
 }
 
@@ -249,34 +407,53 @@ pub struct KernelRegistry {
     /// eigenvector matrices, weight grid, GEMM packs) — same
     /// writer-side-only, try-lock-or-fresh discipline as `swap_scratch`.
     marginal_scratch: Mutex<MarginalScratch>,
+    /// Per-tenant bound on rollback history records (0 = no history).
+    max_history: usize,
     evictions: AtomicU64,
     rebuilds: AtomicU64,
     publishes: AtomicU64,
+    quarantines: AtomicU64,
+    rollbacks: AtomicU64,
 }
 
 impl KernelRegistry {
-    /// Empty registry. `max_resident_epochs = 0` disables eviction.
+    /// Empty registry. `max_resident_epochs = 0` disables eviction;
+    /// rollback history defaults to [`DEFAULT_EPOCH_HISTORY`].
     pub fn new(max_resident_epochs: usize) -> Self {
+        Self::with_history(max_resident_epochs, DEFAULT_EPOCH_HISTORY)
+    }
+
+    /// [`KernelRegistry::new`] with an explicit per-tenant rollback
+    /// history bound (`0` disables rollback).
+    pub fn with_history(max_resident_epochs: usize, max_history: usize) -> Self {
         KernelRegistry {
             tenants: RwLock::new(Tenants::default()),
             max_resident: max_resident_epochs,
             clock: AtomicU64::new(0),
             swap_scratch: Mutex::new(SampleScratch::new()),
             marginal_scratch: Mutex::new(MarginalScratch::new()),
+            max_history,
             evictions: AtomicU64::new(0),
             rebuilds: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
         }
     }
 
     /// Register a new tenant with its initial kernel (published as
     /// generation 1). Fails on duplicate names.
     pub fn add_tenant(&self, name: &str, kernel: &Kernel) -> Result<TenantId> {
+        // An initial kernel gets the same scrutiny as a refresh — there is
+        // no last-good generation to fall back to, so poison must not
+        // become a tenant at all.
+        Self::validate_candidate(kernel)?;
         // Eigendecompose before taking the registry lock: tenant creation
         // never stalls readers of other tenants.
         let (sampler, marginal_diag) = self.build_parts(kernel)?;
+        Self::validate_spectrum(&sampler)?;
         let touch = self.tick();
-        let mut tenants = self.tenants.write().unwrap();
+        let mut tenants = write_clean(&self.tenants);
         if tenants.names.contains_key(name) {
             return Err(Error::Invalid(format!("tenant '{name}' already exists")));
         }
@@ -299,11 +476,20 @@ impl KernelRegistry {
                 n: kernel.n(),
                 generation: 1,
                 epoch: Some(epoch),
+                history: VecDeque::new(),
             }),
             last_touch: AtomicU64::new(touch),
             in_flight: AtomicUsize::new(0),
             mode_policy: AtomicU8::new(ModePolicy::allow_all().mask),
             metrics: TenantMetrics::new(),
+            quarantined: AtomicU64::new(0),
+            last_quarantine: Mutex::new(None),
+            breaker_open: AtomicBool::new(false),
+            breaker_forced: AtomicBool::new(false),
+            breaker_failures: AtomicU32::new(0),
+            breaker_open_serves: AtomicU32::new(0),
+            breaker_trips: AtomicU64::new(0),
+            breaker_recoveries: AtomicU64::new(0),
         }));
         tenants.names.insert(name.to_string(), id);
         drop(tenants);
@@ -314,14 +500,12 @@ impl KernelRegistry {
 
     /// Look up a tenant id by name.
     pub fn resolve(&self, name: &str) -> Option<TenantId> {
-        self.tenants.read().unwrap().names.get(name).copied()
+        read_clean(&self.tenants).names.get(name).copied()
     }
 
     /// Tenant entry by id (shared handle).
     pub fn entry(&self, id: TenantId) -> Result<Arc<TenantEntry>> {
-        self.tenants
-            .read()
-            .unwrap()
+        read_clean(&self.tenants)
             .list
             .get(id.index())
             .cloned()
@@ -330,17 +514,17 @@ impl KernelRegistry {
 
     /// All tenant names in id order.
     pub fn tenant_names(&self) -> Vec<String> {
-        self.tenants.read().unwrap().list.iter().map(|e| e.name.clone()).collect()
+        read_clean(&self.tenants).list.iter().map(|e| e.name.clone()).collect()
     }
 
     /// Snapshot of all tenant entries in id order (metrics/report sweeps).
     pub fn entries(&self) -> Vec<Arc<TenantEntry>> {
-        self.tenants.read().unwrap().list.clone()
+        read_clean(&self.tenants).list.clone()
     }
 
     /// Number of registered tenants.
     pub fn len(&self) -> usize {
-        self.tenants.read().unwrap().list.len()
+        read_clean(&self.tenants).list.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -362,7 +546,7 @@ impl KernelRegistry {
         entry.last_touch.store(self.tick(), Ordering::Relaxed);
         loop {
             let (kernel, generation) = {
-                let slot = entry.slot.read().unwrap();
+                let slot = read_clean(&entry.slot);
                 match &slot.epoch {
                     Some(e) => return Ok(Arc::clone(e)),
                     // Cold tenant: copy out what the rebuild needs, then
@@ -380,7 +564,7 @@ impl KernelRegistry {
                 marginal_diag,
             });
             let installed = {
-                let mut slot = entry.slot.write().unwrap();
+                let mut slot = write_clean(&entry.slot);
                 if slot.generation != generation {
                     // A publish landed mid-rebuild; our epoch is stale.
                     // Retry against the new generation (usually resident).
@@ -402,35 +586,148 @@ impl KernelRegistry {
         }
     }
 
-    /// Publish a refreshed kernel to a tenant: eigendecompose off the read
-    /// path, then atomically install the new epoch and bump the
-    /// generation. Returns the new generation. Readers holding the old
-    /// epoch finish on it; new acquires see the new one immediately.
+    /// Publish a refreshed kernel to a tenant: **validate the candidate**,
+    /// eigendecompose off the read path, then atomically install the new
+    /// epoch and bump the generation. Returns the new generation. Readers
+    /// holding the old epoch finish on it; new acquires see the new one
+    /// immediately.
+    ///
+    /// A candidate that fails validation (non-finite entries, eigensolver
+    /// failure, an indefinite spectrum) is **quarantined**: the error is
+    /// returned, the tenant's quarantine counters/reason are updated, and
+    /// the tenant keeps serving its last-good generation untouched.
     pub fn publish(&self, id: TenantId, kernel: &Kernel) -> Result<u64> {
         let entry = self.entry(id)?;
         // Stamp the LRU touch before building: a long-cold tenant being
         // refreshed must not look like an eviction victim to a concurrent
         // enforce_budget while (or right after) its new epoch is built.
         entry.last_touch.store(self.tick(), Ordering::Relaxed);
-        let (sampler, marginal_diag) = self.build_parts(kernel)?;
-        let generation = {
-            let mut slot = entry.slot.write().unwrap();
-            slot.generation += 1;
-            slot.kernel = kernel.clone();
-            slot.n = kernel.n();
-            slot.epoch = Some(Arc::new(SamplerEpoch {
-                tenant: id,
-                name: entry.name.clone(),
-                generation: slot.generation,
-                kernel: kernel.clone(),
-                sampler,
-                marginal_diag,
-            }));
-            slot.generation
-        };
+        let (sampler, marginal_diag) = self
+            .validated_parts(kernel)
+            .map_err(|e| self.quarantine(&entry, e))?;
+        let generation = self.install(&entry, kernel, sampler, marginal_diag);
         self.publishes.fetch_add(1, Ordering::Relaxed);
         self.enforce_budget(id);
         Ok(generation)
+    }
+
+    /// Restore a prior generation from the tenant's bounded rollback
+    /// history. The restored state is installed as a **new** generation
+    /// (generations stay monotone — readers never observe time moving
+    /// backwards); the pre-rollback kernel itself goes into the history,
+    /// so a rollback can be rolled back. Returns the new generation.
+    pub fn rollback(&self, id: TenantId, generation: u64) -> Result<u64> {
+        let entry = self.entry(id)?;
+        entry.last_touch.store(self.tick(), Ordering::Relaxed);
+        let record = {
+            let slot = read_clean(&entry.slot);
+            if generation == slot.generation {
+                return Err(Error::Invalid(format!(
+                    "tenant '{}': generation {generation} is already current",
+                    entry.name
+                )));
+            }
+            // Newest match wins if a generation ever repeats (it cannot —
+            // generations are monotone — but be defensive).
+            slot.history.iter().rev().find(|r| r.generation == generation).cloned()
+        };
+        let Some(record) = record else {
+            return Err(Error::Invalid(format!(
+                "tenant '{}': generation {generation} not in rollback history {:?}",
+                entry.name,
+                entry.rollback_generations()
+            )));
+        };
+        // The historical kernel was validated when first published, but it
+        // is rebuilt here, so run the full gauntlet again — a rollback must
+        // never install something the validator would quarantine today.
+        let (sampler, marginal_diag) = self
+            .validated_parts(&record.kernel)
+            .map_err(|e| self.quarantine(&entry, e))?;
+        let new_gen = self.install(&entry, &record.kernel, sampler, marginal_diag);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        self.rollbacks.fetch_add(1, Ordering::Relaxed);
+        self.enforce_budget(id);
+        Ok(new_gen)
+    }
+
+    /// Pre-eigensolve candidate screen: the non-finite entry scan. Public
+    /// so callers (and the publish-latency bench) can price the screen
+    /// separately from the eigensolve it guards.
+    pub fn validate_candidate(kernel: &Kernel) -> Result<()> {
+        kernel.validate_finite()
+    }
+
+    /// Post-build sanity check on the freshly computed spectrum: every
+    /// eigenvalue finite, none meaningfully negative (PSD up to
+    /// `SPECTRUM_TOL` roundoff).
+    fn validate_spectrum(sampler: &Sampler) -> Result<()> {
+        let values = &sampler.eigen().values;
+        let mut max = 0.0f64;
+        for &v in values {
+            if !v.is_finite() {
+                return Err(Error::Numerical(format!(
+                    "candidate spectrum contains non-finite eigenvalue {v}"
+                )));
+            }
+            max = max.max(v.abs());
+        }
+        let floor = -SPECTRUM_TOL * max.max(1.0);
+        if let Some(&lo) =
+            values.iter().filter(|v| **v < floor).min_by(|a, b| a.total_cmp(b))
+        {
+            return Err(Error::Numerical(format!(
+                "candidate spectrum is indefinite: eigenvalue {lo} < {floor:.3e}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Candidate screen + epoch build + spectrum check, in order.
+    fn validated_parts(&self, kernel: &Kernel) -> Result<(Sampler, Arc<Vec<f64>>)> {
+        Self::validate_candidate(kernel)?;
+        let parts = self.build_parts(kernel)?;
+        Self::validate_spectrum(&parts.0)?;
+        Ok(parts)
+    }
+
+    /// Record a quarantined candidate and hand the error back.
+    fn quarantine(&self, entry: &TenantEntry, e: Error) -> Error {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+        entry.record_quarantine(e.to_string());
+        e
+    }
+
+    /// Swap a validated epoch in under the write lock, pushing the
+    /// outgoing generation into the bounded rollback history.
+    fn install(
+        &self,
+        entry: &TenantEntry,
+        kernel: &Kernel,
+        sampler: Sampler,
+        marginal_diag: Arc<Vec<f64>>,
+    ) -> u64 {
+        let mut slot = write_clean(&entry.slot);
+        if self.max_history > 0 {
+            let outgoing =
+                EpochRecord { generation: slot.generation, kernel: slot.kernel.clone() };
+            slot.history.push_back(outgoing);
+            while slot.history.len() > self.max_history {
+                slot.history.pop_front();
+            }
+        }
+        slot.generation += 1;
+        slot.kernel = kernel.clone();
+        slot.n = kernel.n();
+        slot.epoch = Some(Arc::new(SamplerEpoch {
+            tenant: entry.id,
+            name: entry.name.clone(),
+            generation: slot.generation,
+            kernel: kernel.clone(),
+            sampler,
+            marginal_diag,
+        }));
+        slot.generation
     }
 
     /// Set a tenant's sampler-mode policy (admission-time capability
@@ -442,12 +739,10 @@ impl KernelRegistry {
 
     /// Number of tenants whose eigendecomposition is currently resident.
     pub fn resident_epochs(&self) -> usize {
-        self.tenants
-            .read()
-            .unwrap()
+        read_clean(&self.tenants)
             .list
             .iter()
-            .filter(|e| e.slot.read().unwrap().epoch.is_some())
+            .filter(|e| read_clean(&e.slot).epoch.is_some())
             .count()
     }
 
@@ -461,9 +756,20 @@ impl KernelRegistry {
         self.rebuilds.load(Ordering::Relaxed)
     }
 
-    /// Epoch publications (tenant creations + kernel refreshes) so far.
+    /// Epoch publications (tenant creations + kernel refreshes +
+    /// rollbacks) so far.
     pub fn publishes(&self) -> u64 {
         self.publishes.load(Ordering::Relaxed)
+    }
+
+    /// Candidate publishes rejected by validation so far (all tenants).
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Rollback installs so far (all tenants).
+    pub fn rollbacks(&self) -> u64 {
+        self.rollbacks.load(Ordering::Relaxed)
     }
 
     /// Configured LRU bound (0 = unbounded).
@@ -471,8 +777,14 @@ impl KernelRegistry {
         self.max_resident
     }
 
+    /// Configured per-tenant rollback history bound (0 = disabled).
+    pub fn max_epoch_history(&self) -> usize {
+        self.max_history
+    }
+
     /// One-line registry gauge for reports: tenant count, resident
-    /// epochs vs bound, eviction/rebuild/publication counters.
+    /// epochs vs bound, eviction/rebuild/publication counters, and the
+    /// fault-tolerance counters (quarantined candidates, rollbacks).
     pub fn report(&self) -> String {
         let bound = if self.max_resident == 0 {
             "∞".to_string()
@@ -480,13 +792,16 @@ impl KernelRegistry {
             self.max_resident.to_string()
         };
         format!(
-            "tenants={} resident_epochs={}/{} evictions={} rebuilds={} publishes={}",
+            "tenants={} resident_epochs={}/{} evictions={} rebuilds={} publishes={} \
+             quarantined={} rollbacks={}",
             self.len(),
             self.resident_epochs(),
             bound,
             self.evictions(),
             self.rebuilds(),
             self.publishes(),
+            self.quarantines(),
+            self.rollbacks(),
         )
     }
 
@@ -504,9 +819,17 @@ impl KernelRegistry {
     /// behind that tenant's work — so a cold tenant's lazy rebuild never
     /// waits on an unrelated tenant's publish.
     fn build_parts(&self, kernel: &Kernel) -> Result<(Sampler, Arc<Vec<f64>>)> {
+        // Like `lock_clean`, a scratch poisoned by a panicking builder is
+        // recovered rather than abandoned — scratches carry no cross-call
+        // invariants (every build fully overwrites what it reads).
         let sampler = match self.swap_scratch.try_lock() {
             Ok(mut scratch) => Sampler::new_with_scratch(kernel, &mut scratch),
-            Err(_) => Sampler::new_with_scratch(kernel, &mut SampleScratch::new()),
+            Err(TryLockError::Poisoned(p)) => {
+                Sampler::new_with_scratch(kernel, &mut p.into_inner())
+            }
+            Err(TryLockError::WouldBlock) => {
+                Sampler::new_with_scratch(kernel, &mut SampleScratch::new())
+            }
         }?;
         // O(N·(N₁+N₂)) factored diagonal — cheap next to the
         // eigendecomposition it rides on, cached for the epoch's lifetime
@@ -516,7 +839,10 @@ impl KernelRegistry {
             Ok(mut scratch) => {
                 sampler.eigen().inclusion_probabilities_into(&mut diag, &mut scratch)
             }
-            Err(_) => sampler
+            Err(TryLockError::Poisoned(p)) => sampler
+                .eigen()
+                .inclusion_probabilities_into(&mut diag, &mut p.into_inner()),
+            Err(TryLockError::WouldBlock) => sampler
                 .eigen()
                 .inclusion_probabilities_into(&mut diag, &mut MarginalScratch::new()),
         }
@@ -532,12 +858,11 @@ impl KernelRegistry {
             return;
         }
         loop {
-            let entries: Vec<Arc<TenantEntry>> =
-                self.tenants.read().unwrap().list.clone();
+            let entries: Vec<Arc<TenantEntry>> = read_clean(&self.tenants).list.clone();
             let mut resident: Vec<(u64, usize)> = entries
                 .iter()
                 .enumerate()
-                .filter(|(_, e)| e.slot.read().unwrap().epoch.is_some())
+                .filter(|(_, e)| read_clean(&e.slot).epoch.is_some())
                 .map(|(i, e)| (e.last_touch.load(Ordering::Relaxed), i))
                 .collect();
             if resident.len() <= self.max_resident {
@@ -551,7 +876,7 @@ impl KernelRegistry {
             else {
                 return;
             };
-            let dropped = entries[victim].slot.write().unwrap().epoch.take();
+            let dropped = write_clean(&entries[victim].slot).epoch.take();
             if dropped.is_some() {
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
@@ -560,6 +885,7 @@ impl KernelRegistry {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::linalg::Matrix;
@@ -785,5 +1111,171 @@ mod tests {
         // With bound 1 and two hot tenants, evictions + rebuilds happened.
         assert!(reg.evictions() > 0);
         assert!(reg.resident_epochs() <= 1);
+    }
+
+    /// A factored kernel with a poisoned entry in one factor.
+    fn poisoned_kernel() -> Kernel {
+        let mut k = test_kernel(2, 3, 100);
+        if let Kernel::Kron2(_, b) = &mut k {
+            b.set(1, 2, f64::NAN);
+        }
+        k
+    }
+
+    /// Finite everywhere but genuinely indefinite: one factor is a swap
+    /// matrix with eigenvalues ±1, so the Kronecker spectrum has negative
+    /// entries far below the roundoff floor.
+    fn indefinite_kernel() -> Kernel {
+        let swap = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        let mut psd = Matrix::from_fn(2, 2, |i, j| if i == j { 1.0 } else { 0.2 });
+        psd.add_diag_mut(0.1);
+        Kernel::Kron2(swap, psd)
+    }
+
+    #[test]
+    fn poisoned_publish_is_quarantined_and_tenant_keeps_serving() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 101)).unwrap();
+        let entry = reg.entry(t).unwrap();
+        let before = reg.acquire(t).unwrap();
+
+        let err = reg.publish(t, &poisoned_kernel()).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+        assert!(err.to_string().contains("non-finite"), "{err}");
+
+        // The tenant is untouched: same generation, same epoch, serving.
+        assert_eq!(entry.generation(), 1);
+        assert!(Arc::ptr_eq(&before, &reg.acquire(t).unwrap()));
+        assert_eq!(entry.quarantined_candidates(), 1);
+        assert!(entry.last_quarantine().unwrap().contains("non-finite"));
+        assert_eq!(reg.quarantines(), 1);
+        // Quarantine is not a publication.
+        assert_eq!(reg.publishes(), 1);
+
+        // A later good publish clears the serving path (reason is kept as
+        // a tombstone of the last rejection).
+        assert_eq!(reg.publish(t, &test_kernel(3, 2, 102)).unwrap(), 2);
+        assert_eq!(entry.generation(), 2);
+    }
+
+    #[test]
+    fn indefinite_spectrum_is_quarantined() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 103)).unwrap();
+        let err = reg.publish(t, &indefinite_kernel()).unwrap_err();
+        assert!(matches!(err, Error::Numerical(_)), "got {err:?}");
+        assert!(err.to_string().contains("indefinite"), "{err}");
+        assert_eq!(reg.entry(t).unwrap().generation(), 1);
+        assert_eq!(reg.quarantines(), 1);
+        // An indefinite *initial* kernel can't become a tenant either.
+        assert!(reg.add_tenant("bad", &indefinite_kernel()).is_err());
+        assert!(reg.resolve("bad").is_none());
+    }
+
+    #[test]
+    fn rollback_restores_prior_generation_as_new_generation() {
+        let reg = KernelRegistry::new(0);
+        let k1 = test_kernel(2, 2, 110); // n = 4
+        let k2 = test_kernel(3, 2, 111); // n = 6
+        let k3 = test_kernel(3, 4, 112); // n = 12
+        let t = reg.add_tenant("t", &k1).unwrap();
+        reg.publish(t, &k2).unwrap();
+        reg.publish(t, &k3).unwrap();
+        let entry = reg.entry(t).unwrap();
+        assert_eq!(entry.rollback_generations(), vec![1, 2]);
+
+        // Restore generation 1: installed as generation 4, old n back.
+        let g = reg.rollback(t, 1).unwrap();
+        assert_eq!(g, 4);
+        let epoch = reg.acquire(t).unwrap();
+        assert_eq!((epoch.generation, epoch.kernel.n()), (4, 4));
+        assert_eq!(reg.rollbacks(), 1);
+        // A rollback is also a publish, and pushes the pre-rollback
+        // generation (3) into history — so the rollback can be rolled back.
+        assert_eq!(reg.publishes(), 4);
+        assert_eq!(entry.rollback_generations(), vec![1, 2, 3]);
+        let g = reg.rollback(t, 3).unwrap();
+        assert_eq!(g, 5);
+        assert_eq!(reg.acquire(t).unwrap().kernel.n(), 12);
+
+        // Current and unknown generations are rejected.
+        let err = reg.rollback(t, 5).unwrap_err();
+        assert!(err.to_string().contains("already current"), "{err}");
+        let err = reg.rollback(t, 99).unwrap_err();
+        assert!(err.to_string().contains("not in rollback history"), "{err}");
+    }
+
+    #[test]
+    fn rollback_history_is_bounded_and_can_be_disabled() {
+        let reg = KernelRegistry::with_history(0, 2);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 120)).unwrap();
+        for s in 0..4u64 {
+            reg.publish(t, &test_kernel(2, 2, 121 + s)).unwrap();
+        }
+        // Generations 1..=5 existed; only the two newest outgoing remain.
+        assert_eq!(reg.entry(t).unwrap().rollback_generations(), vec![3, 4]);
+        assert!(reg.rollback(t, 1).is_err());
+        assert_eq!(reg.max_epoch_history(), 2);
+
+        let none = KernelRegistry::with_history(0, 0);
+        let t = none.add_tenant("t", &test_kernel(2, 2, 130)).unwrap();
+        none.publish(t, &test_kernel(2, 2, 131)).unwrap();
+        assert!(none.entry(t).unwrap().rollback_generations().is_empty());
+        assert!(none.rollback(t, 1).is_err());
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_and_probe_recovers() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 140)).unwrap();
+        let e = reg.entry(t).unwrap();
+        assert_eq!(e.breaker_state(), "closed");
+
+        // Two failures then a success: consecutive count resets, no trip.
+        assert!(!e.breaker_record_failure(3));
+        assert!(!e.breaker_record_failure(3));
+        e.breaker_record_success();
+        assert!(!e.breaker_is_open());
+        assert_eq!(e.breaker_trips(), 0);
+
+        // Three consecutive failures trip it exactly once.
+        assert!(!e.breaker_record_failure(3));
+        assert!(!e.breaker_record_failure(3));
+        assert!(e.breaker_record_failure(3));
+        assert!(!e.breaker_record_failure(3), "re-tripping an open breaker");
+        assert_eq!((e.breaker_state(), e.breaker_trips()), ("open", 1));
+
+        // Every 2nd serve while open is a half-open probe.
+        assert!(!e.breaker_probe_due(2));
+        assert!(e.breaker_probe_due(2));
+        // Probe succeeded: breaker closes, recovery counted.
+        e.breaker_record_success();
+        assert_eq!((e.breaker_state(), e.breaker_recoveries()), ("closed", 1));
+
+        // threshold 0 disables tripping entirely.
+        for _ in 0..10 {
+            assert!(!e.breaker_record_failure(0));
+        }
+        assert!(!e.breaker_is_open());
+        e.breaker_record_success();
+    }
+
+    #[test]
+    fn forced_degradation_pins_the_breaker_open() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 2, 150)).unwrap();
+        let e = reg.entry(t).unwrap();
+        e.force_degraded(true);
+        assert_eq!(e.breaker_state(), "forced");
+        assert!(e.breaker_is_open());
+        // Forced mode never probes and never auto-recovers.
+        for _ in 0..8 {
+            assert!(!e.breaker_probe_due(2));
+        }
+        e.breaker_record_success();
+        assert!(e.breaker_is_open(), "success must not release a forced breaker");
+        assert_eq!(e.breaker_recoveries(), 0);
+        e.force_degraded(false);
+        assert_eq!(e.breaker_state(), "closed");
     }
 }

@@ -68,6 +68,7 @@ impl WorkerLoad {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::testing::{check, UsizeGen};

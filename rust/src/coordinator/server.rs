@@ -33,23 +33,56 @@
 //! coalesce same-`k` jobs so one per-tenant elementary-DP table serves the
 //! whole group; the engine's one-RNG-stream-per-draw guarantee
 //! ([`crate::dpp::Sampler::sample_batch`]) is untouched by tenant count.
+//!
+//! **Fault tolerance.** Requests carry optional deadlines
+//! ([`SampleRequest::with_deadline`]/[`SampleRequest::with_budget`]):
+//! an already-expired request is fast-rejected at admission without
+//! burning a queue slot, and workers re-check before the expensive
+//! per-delivery epoch acquire and per-group conditioning setup, failing
+//! expired jobs with the distinct [`Error::Deadline`] class
+//! (`deadline_exceeded` in the metrics). A per-tenant **circuit breaker**
+//! counts consecutive `Numerical` failures of the primary exact path;
+//! once tripped (threshold in [`FallbackPolicy`]), exact-mode groups are
+//! served through the **fallback chain** — jittered regularization
+//! (`L + εI` rebuild), then backend downgrades (low-rank / MCMC over the
+//! existing epoch) — with half-open probes retrying the primary path
+//! every `probe_every` serves. Each worker wraps every coalesced group in
+//! `catch_unwind`: a panicking job fails only its own group, the worker's
+//! scratches are replaced wholesale, and a **supervisor** thread respawns
+//! the worker (the job channel survives the handover, so queued
+//! deliveries are never lost). Test/`fault-injection` builds thread a
+//! deterministic [`crate::coordinator::faults::FaultPlan`] through these
+//! seams.
 
-use crate::config::ServiceConfig;
+use crate::config::{FallbackPolicy, ServiceConfig};
 use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pending};
+use crate::coordinator::lock_clean;
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::coordinator::registry::{KernelRegistry, ModePolicy, TenantEntry, TenantId};
 use crate::coordinator::router::WorkerLoad;
 use crate::dpp::map::{map_slate_into, MapScratch};
 use crate::dpp::{
     ConditionScratch, ConditionedSampler, Constraint, Kernel, LowRankBackend, McmcBackend,
-    SampleMode, SampleScratch, SamplerBackend,
+    SampleMode, SampleScratch, Sampler, SamplerBackend,
 };
-use crate::error::{Error, Result};
+use crate::error::{Error, ErrorKind, Result};
 use crate::rng::Rng;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+#[cfg(any(test, feature = "fault-injection"))]
+use crate::coordinator::faults::FaultPlan;
+
+/// The fault-injection seam carried by [`Shared`]: a deterministic
+/// [`FaultPlan`] in test/`fault-injection` builds, a zero-sized unit in
+/// production builds (no branch, no memory).
+#[cfg(any(test, feature = "fault-injection"))]
+type FaultSeam = Option<Arc<FaultPlan>>;
+#[cfg(not(any(test, feature = "fault-injection")))]
+type FaultSeam = ();
 
 /// One sampling request against a tenant: `k = 0` draws an unconstrained
 /// DPP sample, `k > 0` a k-DPP sample of exactly that size (`k` counts
@@ -69,6 +102,12 @@ pub struct SampleRequest {
     /// [`SampleMode::Map`] returns the deterministic greedy MAP slate
     /// (`k = 0` auto-sizes it).
     pub mode: SampleMode,
+    /// Optional deadline: past it the request is worthless to the caller
+    /// and the service drops it ([`Error::Deadline`]) instead of burning
+    /// sampler time — at admission if already expired, at the worker
+    /// before expensive per-group setup otherwise. `None` inherits the
+    /// service's `default_budget_ms` (or never expires if that is 0).
+    pub deadline: Option<Instant>,
 }
 
 impl SampleRequest {
@@ -79,12 +118,19 @@ impl SampleRequest {
             k,
             constraint: None,
             mode: SampleMode::Exact,
+            deadline: None,
         }
     }
 
     /// Request against a specific tenant.
     pub fn for_tenant(tenant: TenantId, k: usize) -> Self {
-        SampleRequest { tenant, k, constraint: None, mode: SampleMode::Exact }
+        SampleRequest {
+            tenant,
+            k,
+            constraint: None,
+            mode: SampleMode::Exact,
+            deadline: None,
+        }
     }
 
     /// Attach a conditioning constraint (builder style).
@@ -98,6 +144,17 @@ impl SampleRequest {
         self.mode = mode;
         self
     }
+
+    /// Set an absolute deadline (builder style).
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set a relative budget from now (builder style).
+    pub fn with_budget(self, budget: Duration) -> Self {
+        self.with_deadline(Instant::now() + budget)
+    }
 }
 
 struct Job {
@@ -107,6 +164,56 @@ struct Job {
     entry: Arc<TenantEntry>,
     respond: mpsc::Sender<Result<Vec<usize>>>,
     accepted: Instant,
+    /// Set by [`finish`]; lets the worker's panic handler fail exactly the
+    /// jobs of a panicked group that never produced an outcome, without
+    /// double-counting the ones that did.
+    done: Arc<AtomicBool>,
+}
+
+impl Job {
+    fn expired(&self, now: Instant) -> bool {
+        self.req.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// What the panic handler needs to settle a job that a panicking serve
+/// never finished — captured before `catch_unwind` because the jobs
+/// themselves move into the serve call.
+struct JobMeta {
+    done: Arc<AtomicBool>,
+    respond: mpsc::Sender<Result<Vec<usize>>>,
+    entry: Arc<TenantEntry>,
+    accepted: Instant,
+}
+
+impl JobMeta {
+    fn of(job: &Job) -> Self {
+        JobMeta {
+            done: Arc::clone(&job.done),
+            respond: job.respond.clone(),
+            entry: Arc::clone(&job.entry),
+            accepted: job.accepted,
+        }
+    }
+
+    /// Fail-finish a job whose serve panicked before reaching [`finish`]:
+    /// same accounting (`failed`, latency) and a definitive error on the
+    /// ticket, skipping jobs that already completed.
+    fn fail_if_unfinished(self, shared: &Shared) {
+        if self.done.load(Ordering::SeqCst) {
+            return;
+        }
+        let elapsed = self.accepted.elapsed();
+        shared.metrics.latency.record(elapsed);
+        shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        let tm = self.entry.metrics();
+        tm.latency.record(elapsed);
+        tm.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = self.respond.send(Err(Error::Service(format!(
+            "tenant '{}': worker panicked while serving the group",
+            self.entry.name()
+        ))));
+    }
 }
 
 /// Handle to a pending response.
@@ -122,12 +229,14 @@ impl Ticket {
             .map_err(|_| Error::Service("service dropped the request".into()))?
     }
 
-    /// Wait with a timeout.
+    /// Wait with a timeout. A timeout is the *client's* deadline class
+    /// ([`Error::Deadline`]) — the service may still complete the request
+    /// in the background; a disconnect means the service dropped it.
     pub fn wait_timeout(self, d: Duration) -> Result<Vec<usize>> {
         match self.rx.recv_timeout(d) {
             Ok(r) => r,
             Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(Error::Service("request timed out".into()))
+                Err(Error::Deadline("client-side wait timed out".into()))
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 Err(Error::Service("service dropped the request".into()))
@@ -145,6 +254,59 @@ struct Shared {
     metrics: ServiceMetrics,
     shutdown: AtomicBool,
     capacity: usize,
+    /// Degraded-mode fallback chain + circuit-breaker thresholds.
+    fallback: FallbackPolicy,
+    /// Default per-request budget applied at admission when a request
+    /// carries no explicit deadline (`None` = requests never expire).
+    default_budget: Option<Duration>,
+    /// Deterministic fault-injection plan (unit in production builds).
+    faults: FaultSeam,
+}
+
+impl Shared {
+    /// Group-serve fault hook: may sleep (latency injection) or panic
+    /// (supervision drill). No-op in production builds.
+    #[cfg(any(test, feature = "fault-injection"))]
+    fn fault_on_group(&self, tenant: TenantId) {
+        if let Some(plan) = &self.faults {
+            plan.on_group(tenant);
+        }
+    }
+    #[cfg(not(any(test, feature = "fault-injection")))]
+    fn fault_on_group(&self, _tenant: TenantId) {}
+
+    /// Should the primary exact path fail (injected `Numerical` error)?
+    #[cfg(any(test, feature = "fault-injection"))]
+    fn fault_exact(&self, tenant: TenantId) -> bool {
+        self.faults.as_ref().is_some_and(|p| p.exact_failure(tenant))
+    }
+    #[cfg(not(any(test, feature = "fault-injection")))]
+    fn fault_exact(&self, _tenant: TenantId) -> bool {
+        false
+    }
+
+    /// Should the next fallback rung fail (injected rung skip)?
+    #[cfg(any(test, feature = "fault-injection"))]
+    fn fault_fallback(&self, tenant: TenantId) -> bool {
+        self.faults.as_ref().is_some_and(|p| p.fallback_failure(tenant))
+    }
+    #[cfg(not(any(test, feature = "fault-injection")))]
+    fn fault_fallback(&self, _tenant: TenantId) -> bool {
+        false
+    }
+}
+
+/// Supervisor mailbox: a worker that caught a panic hands its receiver
+/// back for respawn; shutdown sends the explicit sentinel (the supervisor
+/// holds its own sender clone for respawned workers, so channel
+/// disconnection alone could never wake it).
+enum Supervision {
+    /// `(worker index, the worker's job receiver)` — respawn a fresh
+    /// thread continuing the same channel; queued deliveries survive the
+    /// handover (mpsc receivers drain buffered messages even after a
+    /// sender drops).
+    Respawn(usize, mpsc::Receiver<Vec<Job>>),
+    Shutdown,
 }
 
 /// The running service.
@@ -154,6 +316,8 @@ pub struct DppService {
     workers: Vec<JoinHandle<()>>,
     worker_txs: Vec<mpsc::Sender<Vec<Job>>>,
     loads: WorkerLoad,
+    supervisor: Option<JoinHandle<()>>,
+    supervise_tx: Option<mpsc::Sender<Supervision>>,
 }
 
 impl DppService {
@@ -162,7 +326,10 @@ impl DppService {
     /// paper-style KronDPP from its spec — production callers publish
     /// learned kernels over them).
     pub fn start(kernel: &Kernel, cfg: &ServiceConfig, seed: u64) -> Result<Self> {
-        let registry = Arc::new(KernelRegistry::new(cfg.max_resident_epochs));
+        let registry = Arc::new(KernelRegistry::with_history(
+            cfg.max_resident_epochs,
+            cfg.epoch_history,
+        ));
         registry.add_tenant("default", kernel)?;
         for spec in &cfg.tenants {
             let mut rng = Rng::new(spec.seed);
@@ -179,6 +346,27 @@ impl DppService {
         cfg: &ServiceConfig,
         seed: u64,
     ) -> Result<Self> {
+        Self::boot(registry, cfg, seed, FaultSeam::default())
+    }
+
+    /// Start with a deterministic fault-injection plan threaded through
+    /// the serving seams (chaos testing; see [`crate::coordinator::faults`]).
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn start_with_registry_and_faults(
+        registry: Arc<KernelRegistry>,
+        cfg: &ServiceConfig,
+        seed: u64,
+        faults: Arc<FaultPlan>,
+    ) -> Result<Self> {
+        Self::boot(registry, cfg, seed, Some(faults))
+    }
+
+    fn boot(
+        registry: Arc<KernelRegistry>,
+        cfg: &ServiceConfig,
+        seed: u64,
+        faults: FaultSeam,
+    ) -> Result<Self> {
         if registry.is_empty() {
             return Err(Error::Invalid("registry has no tenants".into()));
         }
@@ -192,8 +380,16 @@ impl DppService {
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
             capacity: cfg.queue_capacity,
+            fallback: cfg.fallback.clone(),
+            default_budget: if cfg.default_budget_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(cfg.default_budget_ms))
+            },
+            faults,
         });
         let loads = WorkerLoad::new(cfg.workers);
+        let (sup_tx, sup_rx) = mpsc::channel::<Supervision>();
         let mut worker_txs = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
         let mut seeder = Rng::new(seed);
@@ -203,13 +399,24 @@ impl DppService {
             let shared2 = Arc::clone(&shared);
             let loads2 = loads.clone();
             let mut rng = seeder.split(w as u64);
+            let supervise = sup_tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("krondpp-sampler-{w}"))
-                    .spawn(move || worker_loop(w, rx, shared2, loads2, &mut rng))
+                    .spawn(move || worker_loop(w, rx, shared2, loads2, &mut rng, supervise))
                     .map_err(Error::Io)?,
             );
         }
+        let supervisor = {
+            let shared2 = Arc::clone(&shared);
+            let loads2 = loads.clone();
+            let respawn_seeder = seeder.split(1_000_000);
+            let sup_tx2 = sup_tx.clone();
+            std::thread::Builder::new()
+                .name("krondpp-supervisor".into())
+                .spawn(move || supervisor_loop(sup_rx, sup_tx2, shared2, loads2, respawn_seeder))
+                .map_err(Error::Io)?
+        };
         let pump = {
             let shared2 = Arc::clone(&shared);
             let txs = worker_txs.clone();
@@ -219,7 +426,15 @@ impl DppService {
                 .spawn(move || pump_loop(shared2, txs, loads2))
                 .map_err(Error::Io)?
         };
-        Ok(DppService { shared, pump: Some(pump), workers, worker_txs, loads })
+        Ok(DppService {
+            shared,
+            pump: Some(pump),
+            workers,
+            worker_txs,
+            loads,
+            supervisor: Some(supervisor),
+            supervise_tx: Some(sup_tx),
+        })
     }
 
     /// The underlying registry (for direct publishes, gauges, tenants).
@@ -312,9 +527,28 @@ impl DppService {
                 }
             }
         }
+        // Deadline admission: apply the service default budget to
+        // undeadlined requests, then fast-reject anything already expired
+        // — no queue slot, no accept count; only `deadline_exceeded`
+        // moves (globally and for the tenant), keeping the worker-side
+        // invariant accepted = completed + failed + rejected_invalid +
+        // deadline_exceeded intact.
+        if req.deadline.is_none() {
+            if let Some(budget) = self.shared.default_budget {
+                req.deadline = Some(Instant::now() + budget);
+            }
+        }
+        if req.deadline.is_some_and(|d| Instant::now() >= d) {
+            self.shared.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            entry.metrics().deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Deadline(format!(
+                "tenant '{}': deadline passed before admission",
+                entry.name()
+            )));
+        }
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_clean(&self.shared.queue);
             if q.len() >= self.shared.capacity {
                 self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(Error::Service(format!(
@@ -322,8 +556,13 @@ impl DppService {
                     self.shared.capacity
                 )));
             }
-            let job =
-                Job { req, entry: Arc::clone(&entry), respond: tx, accepted: Instant::now() };
+            let job = Job {
+                req,
+                entry: Arc::clone(&entry),
+                respond: tx,
+                accepted: Instant::now(),
+                done: Arc::new(AtomicBool::new(false)),
+            };
             q.push(job, Instant::now());
             self.shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
             entry.metrics().accepted.fetch_add(1, Ordering::Relaxed);
@@ -405,9 +644,28 @@ impl DppService {
     }
 
     /// Publish a refreshed kernel to `tenant` (e.g. from a learning job).
-    /// Returns the tenant's new generation.
+    /// Returns the tenant's new generation. A candidate that fails
+    /// validation (non-finite entries, unusable spectrum) is quarantined:
+    /// the tenant keeps serving its last good epoch.
     pub fn publish(&self, tenant: TenantId, kernel: &Kernel) -> Result<u64> {
         self.shared.registry.publish(tenant, kernel)
+    }
+
+    /// Roll `tenant` back to the kernel of a prior `generation` still in
+    /// its bounded history, installing it as a **new** generation (the
+    /// operator's escape hatch after a bad publish slipped past
+    /// validation). Returns the new generation.
+    pub fn rollback(&self, tenant: TenantId, generation: u64) -> Result<u64> {
+        self.shared.registry.rollback(tenant, generation)
+    }
+
+    /// Pin (`on = true`) or release (`on = false`) `tenant`'s circuit
+    /// breaker: a pinned tenant serves exact-mode requests through the
+    /// degraded fallback chain unconditionally — no half-open probes, no
+    /// auto-recovery — until released.
+    pub fn force_degraded(&self, tenant: TenantId, on: bool) -> Result<()> {
+        self.shared.registry.entry(tenant)?.force_degraded(on);
+        Ok(())
     }
 
     /// Service metrics (global counters; per-tenant counters live on the
@@ -446,6 +704,16 @@ impl DppService {
             .unwrap_or(0)
     }
 
+    /// Begin a graceful shutdown without blocking: admission starts
+    /// refusing new work immediately and the pump drains the queue to
+    /// the workers; already-accepted requests still resolve. A later
+    /// [`Self::shutdown`] (or drop) joins the threads. Idempotent, and
+    /// safe to call from any thread holding a shared reference.
+    pub fn begin_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+    }
+
     /// Stop accepting work, drain, and join all threads.
     pub fn shutdown(mut self) {
         self.do_shutdown();
@@ -457,10 +725,22 @@ impl DppService {
         if let Some(p) = self.pump.take() {
             let _ = p.join();
         }
-        // Close worker channels.
+        // Close worker channels: each worker drains its queued deliveries
+        // (mpsc buffers survive sender drop) and exits on disconnect.
         self.worker_txs.clear();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // The supervisor holds its own sender clone, so disconnection
+        // never wakes it: send the explicit sentinel. Channel FIFO
+        // guarantees any Respawn queued by a just-joined worker is
+        // processed first, and the supervisor joins its respawned workers
+        // (whose channels are already closed) before exiting.
+        if let Some(tx) = self.supervise_tx.take() {
+            let _ = tx.send(Supervision::Shutdown);
+        }
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
     }
 }
@@ -476,7 +756,7 @@ impl Drop for DppService {
 fn pump_loop(shared: Arc<Shared>, txs: Vec<mpsc::Sender<Vec<Job>>>, loads: WorkerLoad) {
     loop {
         let batch = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_clean(&shared.queue);
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     // Drain everything to the workers before exiting.
@@ -495,8 +775,10 @@ fn pump_loop(shared: Arc<Shared>, txs: Vec<mpsc::Sender<Vec<Job>>>, loads: Worke
                     .next_deadline(now)
                     .unwrap_or(Duration::from_millis(50))
                     .max(Duration::from_micros(50));
-                let (guard, _) = shared.cv.wait_timeout(q, wait).unwrap();
-                q = guard;
+                q = match shared.cv.wait_timeout(q, wait) {
+                    Ok((guard, _)) => guard,
+                    Err(p) => p.into_inner().0,
+                };
             }
         };
         dispatch(&shared, &txs, &loads, batch);
@@ -546,116 +828,474 @@ fn dispatch(
     }
 }
 
+/// Per-worker scratch bundle: every draw, conditioning setup and MAP
+/// slate this worker computes reuses these buffers (the batched engine's
+/// zero-allocation hot path). Replaced wholesale after a caught panic so
+/// no half-written buffer state leaks into the next group.
+struct WorkerScratches {
+    sample: SampleScratch,
+    cond: ConditionScratch,
+    map: MapScratch,
+    map_out: Vec<usize>,
+}
+
+impl WorkerScratches {
+    fn new() -> Self {
+        WorkerScratches {
+            sample: SampleScratch::new(),
+            cond: ConditionScratch::new(),
+            map: MapScratch::new(),
+            map_out: Vec::new(),
+        }
+    }
+}
+
 fn worker_loop(
     w: usize,
     rx: mpsc::Receiver<Vec<Job>>,
     shared: Arc<Shared>,
     loads: WorkerLoad,
     rng: &mut Rng,
+    supervise: mpsc::Sender<Supervision>,
 ) {
-    // One scratch pair per worker: every draw this worker ever makes
-    // reuses the same sample buffers (the batched engine's
-    // zero-allocation hot path), and every conditioning setup reuses the
-    // same bordered-block/eigensolver buffers.
-    let mut scratch = SampleScratch::new();
-    let mut cond_scratch = ConditionScratch::new();
-    let mut map_scratch = MapScratch::new();
-    let mut map_out = Vec::new();
-    while let Ok(jobs) = rx.recv() {
+    let mut scratches = WorkerScratches::new();
+    loop {
         // The pump dispatches single-tenant groups: acquire the tenant's
         // current epoch once for the whole delivery (an `Arc` clone; a
         // cold tenant lazily rebuilds here, off every other tenant's path).
+        let jobs = match rx.recv() {
+            Ok(jobs) => jobs,
+            Err(_) => return, // channel closed and drained: shutdown
+        };
         let entry = Arc::clone(&jobs[0].entry);
         let n_jobs = jobs.len();
-        match shared.registry.acquire_entry(&entry) {
-            Err(e) => {
-                let msg = format!("tenant '{}': epoch build failed: {e}", entry.name());
-                for job in jobs {
-                    finish(&shared, job, Err(Error::Service(msg.clone())));
+        // Deadline sweep before the (possibly expensive) epoch acquire —
+        // queue wait may already have consumed the budget.
+        let now = Instant::now();
+        let (expired, live): (Vec<Job>, Vec<Job>) =
+            jobs.into_iter().partition(|j| j.expired(now));
+        for job in expired {
+            deadline_finish(&shared, job);
+        }
+        let mut panicked = false;
+        if !live.is_empty() {
+            match shared.registry.acquire_entry(&entry) {
+                Err(e) => {
+                    let msg = format!("tenant '{}': epoch build failed: {e}", entry.name());
+                    for job in live {
+                        finish(&shared, job, Err(Error::Service(msg.clone())));
+                    }
                 }
-            }
-            Ok(epoch) => {
-                // Coalesce same-(k, constraint, mode) jobs so one phase-1
-                // setup — and for conditioned groups one whole
-                // conditioning setup (Schur assembly +
-                // eigendecomposition), for MCMC/low-rank groups one
-                // backend build, for MAP groups one deterministic slate —
-                // serves repeated slate contexts instead of looping
-                // single draws. The constraint fingerprint leads the key
-                // so distinct slate contexts compare on one u64; the full
-                // constraint follows as the exactness tiebreak (a
-                // fingerprint collision can never merge different
-                // constraints).
-                for ((k, _fp, constraint, mode), group) in coalesce_by_key(jobs, |j| {
-                    (
-                        j.req.k,
-                        j.req.constraint.as_ref().map(Constraint::fingerprint),
-                        j.req.constraint.clone(),
-                        j.req.mode,
-                    )
-                }) {
-                    match (mode, constraint) {
-                        (SampleMode::Exact, None) => {
-                            serve_plain(&shared, &epoch, k, group, rng, &mut scratch)
+                Ok(epoch) => {
+                    // Coalesce same-(k, constraint, mode) jobs so one
+                    // phase-1 setup — and for conditioned groups one whole
+                    // conditioning setup (Schur assembly +
+                    // eigendecomposition), for MCMC/low-rank groups one
+                    // backend build, for MAP groups one deterministic
+                    // slate — serves repeated slate contexts instead of
+                    // looping single draws. The constraint fingerprint
+                    // leads the key so distinct slate contexts compare on
+                    // one u64; the full constraint follows as the
+                    // exactness tiebreak (a fingerprint collision can
+                    // never merge different constraints).
+                    for ((k, _fp, constraint, mode), group) in coalesce_by_key(live, |j| {
+                        (
+                            j.req.k,
+                            j.req.constraint.as_ref().map(Constraint::fingerprint),
+                            j.req.constraint.clone(),
+                            j.req.mode,
+                        )
+                    }) {
+                        // Each coalesced group is one failure domain: a
+                        // panic anywhere inside its serve fails exactly
+                        // this group's unfinished jobs; sibling groups in
+                        // the same delivery still serve.
+                        let metas: Vec<JobMeta> = group.iter().map(JobMeta::of).collect();
+                        let served = catch_unwind(AssertUnwindSafe(|| {
+                            serve_group(
+                                &shared,
+                                &entry,
+                                &epoch,
+                                k,
+                                constraint,
+                                mode,
+                                group,
+                                rng,
+                                &mut scratches,
+                            )
+                        }));
+                        if served.is_err() {
+                            shared.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                            for meta in metas {
+                                meta.fail_if_unfinished(&shared);
+                            }
+                            // The unwound serve may have left scratch
+                            // buffers half-written: replace them wholesale.
+                            scratches = WorkerScratches::new();
+                            panicked = true;
                         }
-                        (SampleMode::Exact, Some(c)) => serve_conditioned(
-                            &shared,
-                            &epoch,
-                            k,
-                            c,
-                            group,
-                            rng,
-                            &mut scratch,
-                            &mut cond_scratch,
-                        ),
-                        (SampleMode::Mcmc { steps }, constraint) => serve_mcmc(
-                            &shared,
-                            &epoch,
-                            k,
-                            constraint,
-                            steps,
-                            group,
-                            rng,
-                            &mut scratch,
-                        ),
-                        (SampleMode::LowRank { rank }, constraint) => serve_low_rank(
-                            &shared,
-                            &epoch,
-                            k,
-                            constraint,
-                            rank,
-                            group,
-                            rng,
-                            &mut scratch,
-                        ),
-                        (SampleMode::Map, constraint) => serve_map(
-                            &shared,
-                            &epoch,
-                            k,
-                            constraint,
-                            group,
-                            &mut map_scratch,
-                            &mut map_out,
-                        ),
                     }
                 }
             }
         }
         entry.in_flight.fetch_sub(n_jobs, Ordering::SeqCst);
         loads.end_n(w, n_jobs);
+        if panicked {
+            // Retire for respawn: a fresh thread (fresh stack, fresh
+            // scratches, fresh RNG stream) is cheaper to reason about
+            // than a worker that keeps serving after N caught panics.
+            // The intact receiver rides along so queued deliveries
+            // survive the handover.
+            let _ = supervise.send(Supervision::Respawn(w, rx));
+            return;
+        }
     }
 }
 
-/// Serve one unconstrained `(tenant, k)` group from its epoch.
+/// The supervisor: respawns workers that retired after catching a panic
+/// (each respawn continues the dead worker's channel, so no queued
+/// delivery is lost) and, at shutdown, joins its respawns and settles any
+/// respawn request that raced the sentinel.
+fn supervisor_loop(
+    sup_rx: mpsc::Receiver<Supervision>,
+    sup_tx: mpsc::Sender<Supervision>,
+    shared: Arc<Shared>,
+    loads: WorkerLoad,
+    mut seeder: Rng,
+) {
+    let mut respawned: Vec<JoinHandle<()>> = Vec::new();
+    let mut count: u64 = 0;
+    loop {
+        match sup_rx.recv() {
+            Ok(Supervision::Respawn(w, rx)) => {
+                count += 1;
+                shared.metrics.worker_respawns.fetch_add(1, Ordering::Relaxed);
+                let shared2 = Arc::clone(&shared);
+                let loads2 = loads.clone();
+                let mut rng = seeder.split(count);
+                let supervise = sup_tx.clone();
+                let spawned = std::thread::Builder::new()
+                    .name(format!("krondpp-sampler-{w}r{count}"))
+                    .spawn(move || worker_loop(w, rx, shared2, loads2, &mut rng, supervise));
+                if let Ok(h) = spawned {
+                    respawned.push(h);
+                }
+                // Spawn failure (OS resource exhaustion) drops the
+                // receiver: dispatch then fails future groups with
+                // "worker unavailable" instead of queueing into a void.
+            }
+            Ok(Supervision::Shutdown) | Err(_) => break,
+        }
+    }
+    for h in respawned {
+        let _ = h.join();
+    }
+    // A respawned worker may itself have panicked after the shutdown
+    // sentinel was queued: its in-flight jobs were settled by its panic
+    // handler, but deliveries still buffered in its channel were not —
+    // fail them so no ticket is left dangling.
+    while let Ok(Supervision::Respawn(w, rx)) = sup_rx.try_recv() {
+        while let Ok(jobs) = rx.try_recv() {
+            let n = jobs.len();
+            let entry = Arc::clone(&jobs[0].entry);
+            for job in jobs {
+                finish(&shared, job, Err(Error::Service("worker unavailable".into())));
+            }
+            entry.in_flight.fetch_sub(n, Ordering::SeqCst);
+            loads.end_n(w, n);
+        }
+    }
+}
+
+/// Serve one coalesced `(k, constraint, mode)` group from its epoch: the
+/// per-group fault seam (injection hook, deadline re-check at the last
+/// cheap moment) and the mode dispatch, all inside the worker's
+/// `catch_unwind` domain.
+#[allow(clippy::too_many_arguments)]
+fn serve_group(
+    shared: &Arc<Shared>,
+    entry: &Arc<TenantEntry>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    mode: SampleMode,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    s: &mut WorkerScratches,
+) {
+    // Fault hook: may inject latency or a panic (supervision drill).
+    shared.fault_on_group(entry.id());
+    // Deadline re-check after queue wait, dispatch and epoch acquire,
+    // before the expensive per-group setup (conditioning eigensolve,
+    // backend build).
+    let now = Instant::now();
+    let (expired, group): (Vec<Job>, Vec<Job>) =
+        group.into_iter().partition(|j| j.expired(now));
+    for job in expired {
+        deadline_finish(shared, job);
+    }
+    if group.is_empty() {
+        return;
+    }
+    match (mode, constraint) {
+        (SampleMode::Exact, constraint) => {
+            serve_exact_with_breaker(shared, entry, epoch, k, constraint, group, rng, s)
+        }
+        (SampleMode::Mcmc { steps }, constraint) => {
+            serve_mcmc(shared, epoch, k, constraint, steps, group, rng, &mut s.sample)
+        }
+        (SampleMode::LowRank { rank }, constraint) => {
+            serve_low_rank(shared, epoch, k, constraint, rank, group, rng, &mut s.sample)
+        }
+        (SampleMode::Map, constraint) => {
+            serve_map(shared, epoch, k, constraint, group, &mut s.map, &mut s.map_out)
+        }
+    }
+}
+
+/// The exact-mode path wrapped in the tenant's circuit breaker: an open
+/// breaker routes straight to the fallback chain (except on half-open
+/// probes, which retry the primary path); a primary `Numerical` failure
+/// records a breaker failure and falls back; success closes the breaker.
+#[allow(clippy::too_many_arguments)]
+fn serve_exact_with_breaker(
+    shared: &Arc<Shared>,
+    entry: &Arc<TenantEntry>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    s: &mut WorkerScratches,
+) {
+    let policy = &shared.fallback;
+    if entry.breaker_is_open() && policy.enabled {
+        if !entry.breaker_probe_due(policy.probe_every) {
+            // Tripped and no probe due: serve degraded without touching
+            // the primary path at all.
+            return serve_fallback(shared, entry, epoch, k, constraint, group, rng, s);
+        }
+        shared.metrics.fallback.probes.fetch_add(1, Ordering::Relaxed);
+    }
+    match serve_exact(shared, epoch, k, constraint.clone(), group, rng, s) {
+        Ok(()) => entry.breaker_record_success(),
+        Err((e, group)) => {
+            if e.kind() == ErrorKind::Numerical {
+                entry.breaker_record_failure(policy.breaker_threshold);
+                if policy.enabled {
+                    return serve_fallback(shared, entry, epoch, k, constraint, group, rng, s);
+                }
+            }
+            fail_group(shared, epoch, "exact serve", e, group);
+        }
+    }
+}
+
+/// The primary exact path. Returns the group on a retryable setup error
+/// so the breaker/fallback layer can take over (`Invalid` errors still
+/// reject internally — the request is bad, not the path).
+fn serve_exact(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    s: &mut WorkerScratches,
+) -> std::result::Result<(), (Error, Vec<Job>)> {
+    if shared.fault_exact(group[0].req.tenant) {
+        return Err((Error::Numerical("injected exact-path failure".into()), group));
+    }
+    match constraint {
+        None => {
+            serve_plain(shared, epoch, &epoch.sampler, k, group, rng, &mut s.sample, None);
+            Ok(())
+        }
+        Some(c) => serve_conditioned(
+            shared,
+            epoch,
+            &epoch.kernel,
+            k,
+            c,
+            group,
+            rng,
+            &mut s.sample,
+            &mut s.cond,
+            None,
+        ),
+    }
+}
+
+/// The degraded-mode chain for exact requests when the primary path is
+/// down. Rung 1 retries with jittered regularization — `L + εI` lifts a
+/// numerically-indefinite spectrum back into PSD range, and the jitter
+/// decorrelates retry storms across workers climbing the same ε ladder.
+/// Rung 2 downgrades the backend over the existing epoch: the low-rank
+/// projection reuses the cached eigendecomposition, and MCMC works
+/// straight off the kernel — the one rung that needs no eigensolve at
+/// all. A group every rung declines fails with a definitive error.
+#[allow(clippy::too_many_arguments)]
+fn serve_fallback(
+    shared: &Arc<Shared>,
+    entry: &Arc<TenantEntry>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    k: usize,
+    constraint: Option<Constraint>,
+    mut group: Vec<Job>,
+    rng: &mut Rng,
+    s: &mut WorkerScratches,
+) {
+    let policy = &shared.fallback;
+    let tenant = entry.id();
+    for &eps in &policy.regularize_eps {
+        let eps_j = eps * (0.75 + 0.5 * rng.uniform());
+        if shared.fault_fallback(tenant) {
+            continue;
+        }
+        let kernel = epoch.kernel.regularized(eps_j);
+        match serve_regularized(shared, epoch, &kernel, k, constraint.clone(), group, rng, s) {
+            Ok(()) => return,
+            Err(g) => group = g,
+        }
+    }
+    for &mode in &policy.degrade {
+        if shared.fault_fallback(tenant) {
+            continue;
+        }
+        match mode {
+            SampleMode::LowRank { rank } => {
+                let rank = rank.min(epoch.sampler.n());
+                if rank == 0 || k > rank {
+                    // det L_r(Y) = 0 for |Y| > rank: this rung cannot
+                    // emit the requested slate.
+                    continue;
+                }
+                let backend = match LowRankBackend::from_eigen(
+                    epoch.sampler.eigen(),
+                    rank,
+                    constraint.clone().unwrap_or_else(Constraint::none),
+                ) {
+                    Ok(b) => b,
+                    Err(_) => continue,
+                };
+                serve_backend_draws(
+                    shared,
+                    epoch,
+                    &backend,
+                    k,
+                    constraint.is_some(),
+                    group,
+                    rng,
+                    &mut s.sample,
+                    Some(&shared.metrics.fallback.degraded_low_rank),
+                );
+                return;
+            }
+            SampleMode::Mcmc { steps } => {
+                let backend = match McmcBackend::new(
+                    &epoch.kernel,
+                    constraint.clone().unwrap_or_else(Constraint::none),
+                    steps,
+                ) {
+                    Ok(b) => b,
+                    Err(_) => continue,
+                };
+                serve_backend_draws(
+                    shared,
+                    epoch,
+                    &backend,
+                    k,
+                    constraint.is_some(),
+                    group,
+                    rng,
+                    &mut s.sample,
+                    Some(&shared.metrics.fallback.degraded_mcmc),
+                );
+                return;
+            }
+            // `FallbackPolicy::parse_rung` rejects exact/map rungs; an
+            // unexpected one is skipped rather than recursed into.
+            _ => continue,
+        }
+    }
+    shared
+        .metrics
+        .fallback
+        .exhausted
+        .fetch_add(group.len() as u64, Ordering::Relaxed);
+    let msg = format!(
+        "tenant '{}': primary exact path down and degraded-mode fallback exhausted",
+        entry.name()
+    );
+    for job in group {
+        finish(shared, job, Err(Error::Service(msg.clone())));
+    }
+}
+
+/// One rung-1 attempt: rebuild the sampler over the regularized kernel
+/// and serve the group through it. Returns the group on a rebuild failure
+/// so the caller climbs to the next rung.
+#[allow(clippy::too_many_arguments)]
+fn serve_regularized(
+    shared: &Arc<Shared>,
+    epoch: &crate::coordinator::registry::SamplerEpoch,
+    kernel: &Kernel,
+    k: usize,
+    constraint: Option<Constraint>,
+    group: Vec<Job>,
+    rng: &mut Rng,
+    s: &mut WorkerScratches,
+) -> std::result::Result<(), Vec<Job>> {
+    let rung = Some(&shared.metrics.fallback.regularized);
+    match constraint {
+        None => match Sampler::new_with_scratch(kernel, &mut s.sample) {
+            Ok(sampler) => {
+                serve_plain(shared, epoch, &sampler, k, group, rng, &mut s.sample, rung);
+                Ok(())
+            }
+            Err(_) => Err(group),
+        },
+        Some(c) => match serve_conditioned(
+            shared,
+            epoch,
+            kernel,
+            k,
+            c,
+            group,
+            rng,
+            &mut s.sample,
+            &mut s.cond,
+            rung,
+        ) {
+            Ok(()) => Ok(()),
+            Err((_e, g)) => Err(g),
+        },
+    }
+}
+
+/// Count a job served through a degraded-mode rung (the rung's counter
+/// plus the tenant's `fallback_served`); no-op on the primary path.
+fn count_fallback(rung: Option<&AtomicU64>, job: &Job) {
+    if let Some(r) = rung {
+        r.fetch_add(1, Ordering::Relaxed);
+        job.entry.metrics().fallback_served.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Serve one unconstrained `(tenant, k)` group through `sampler` — the
+/// epoch's own sampler on the primary path, a regularized rebuild on the
+/// fallback path (`rung` counts the latter).
+#[allow(clippy::too_many_arguments)]
 fn serve_plain(
     shared: &Arc<Shared>,
     epoch: &crate::coordinator::registry::SamplerEpoch,
+    sampler: &Sampler,
     k: usize,
     group: Vec<Job>,
     rng: &mut Rng,
     scratch: &mut SampleScratch,
+    rung: Option<&AtomicU64>,
 ) {
-    let sampler = &epoch.sampler;
     if k > sampler.n() {
         // Admission raced a shrinking publish; reject late with the same
         // distinct error class.
@@ -678,61 +1318,54 @@ fn serve_plain(
     if k == 0 {
         for job in group {
             let y = sampler.sample_with_scratch(rng, scratch);
+            count_fallback(rung, &job);
             finish(shared, job, Ok(y));
         }
     } else {
         let n = group.len();
         let mut jobs = group.into_iter();
         sampler.sample_k_each(k, n, rng, scratch, |y| {
-            let job = jobs.next().expect("one job per draw");
-            finish(shared, job, Ok(y));
+            if let Some(job) = jobs.next() {
+                count_fallback(rung, &job);
+                finish(shared, job, Ok(y));
+            }
         });
     }
 }
 
-/// Serve one conditioned `(tenant, k, constraint)` group: one conditioning
-/// setup (counted in `conditioning_setups`) shared by every job in the
-/// group, then per-draw responses like the plain path.
+/// Serve one conditioned `(tenant, k, constraint)` group over `kernel`
+/// (the epoch's own kernel on the primary path, a regularized rebuild on
+/// the fallback path): one conditioning setup (counted in
+/// `conditioning_setups`) shared by every job in the group, then per-draw
+/// responses like the plain path. `Invalid` setup errors reject the group
+/// internally — an out-of-bounds constraint (admission raced a shrinking
+/// publish) or a zero-probability include set mean the request is bad,
+/// not the service. Anything else (eigensolver non-convergence is the
+/// canonical case) hands the group back so the breaker/fallback layer can
+/// decide.
 #[allow(clippy::too_many_arguments)]
 fn serve_conditioned(
     shared: &Arc<Shared>,
     epoch: &crate::coordinator::registry::SamplerEpoch,
+    kernel: &Kernel,
     k: usize,
     constraint: Constraint,
     group: Vec<Job>,
     rng: &mut Rng,
     scratch: &mut SampleScratch,
     cond_scratch: &mut ConditionScratch,
-) {
-    let cs = match ConditionedSampler::new_with_scratch(&epoch.kernel, constraint, cond_scratch)
-    {
+    rung: Option<&AtomicU64>,
+) -> std::result::Result<(), (Error, Vec<Job>)> {
+    let cs = match ConditionedSampler::new_with_scratch(kernel, constraint, cond_scratch) {
         Ok(cs) => cs,
-        Err(e) => {
-            // Out-of-bounds constraint (admission raced a shrinking
-            // publish) or a zero-probability include set surface as
-            // `Invalid`: the request is bad, not the service. Anything
-            // else (e.g. eigensolver non-convergence, also `Numerical`)
-            // is a service fault and counts in `failed`.
-            let (reject, msg) = match e {
-                Error::Invalid(m) => (
-                    true,
-                    format!("tenant '{}' (gen {}): {m}", epoch.name, epoch.generation),
-                ),
-                other => (
-                    false,
-                    format!("tenant '{}': conditioning setup failed: {other}", epoch.name),
-                ),
-            };
+        Err(Error::Invalid(m)) => {
+            let msg = format!("tenant '{}' (gen {}): {m}", epoch.name, epoch.generation);
             for job in group {
-                let err = if reject {
-                    Error::Rejected(msg.clone())
-                } else {
-                    Error::Service(msg.clone())
-                };
-                finish(shared, job, Err(err));
+                finish(shared, job, Err(Error::Rejected(msg.clone())));
             }
-            return;
+            return Ok(());
         }
+        Err(other) => return Err((other, group)),
     };
     shared.metrics.conditioning_setups.fetch_add(1, Ordering::Relaxed);
     if k > 0 && !(cs.min_k()..=cs.max_k()).contains(&k) {
@@ -751,7 +1384,7 @@ fn serve_conditioned(
                 ))),
             );
         }
-        return;
+        return Ok(());
     }
     let count_conditioned = |job: &Job| {
         shared.metrics.conditioned.fetch_add(1, Ordering::Relaxed);
@@ -761,17 +1394,21 @@ fn serve_conditioned(
         for job in group {
             let y = cs.sample_with_scratch(rng, scratch);
             count_conditioned(&job);
+            count_fallback(rung, &job);
             finish(shared, job, Ok(y));
         }
     } else {
         let n = group.len();
         let mut jobs = group.into_iter();
         cs.sample_k_each(k, n, rng, scratch, |y| {
-            let job = jobs.next().expect("one job per draw");
-            count_conditioned(&job);
-            finish(shared, job, Ok(y));
+            if let Some(job) = jobs.next() {
+                count_conditioned(&job);
+                count_fallback(rung, &job);
+                finish(shared, job, Ok(y));
+            }
         });
     }
+    Ok(())
 }
 
 /// Fail every job in a group on a backend-setup error, splitting
@@ -814,6 +1451,7 @@ fn serve_backend_draws<B: SamplerBackend>(
     group: Vec<Job>,
     rng: &mut Rng,
     scratch: &mut SampleScratch,
+    rung: Option<&AtomicU64>,
 ) {
     let k_opt = if k == 0 { None } else { Some(k) };
     for job in group {
@@ -824,6 +1462,7 @@ fn serve_backend_draws<B: SamplerBackend>(
                     shared.metrics.conditioned.fetch_add(1, Ordering::Relaxed);
                     job.entry.metrics().conditioned.fetch_add(1, Ordering::Relaxed);
                 }
+                count_fallback(rung, &job);
                 Ok(y)
             }
             Err(Error::Invalid(m)) => Err(Error::Rejected(format!(
@@ -862,7 +1501,7 @@ fn serve_mcmc(
         Ok(b) => b,
         Err(e) => return fail_group(shared, epoch, "mcmc setup", e, group),
     };
-    serve_backend_draws(shared, epoch, &backend, k, constrained, group, rng, scratch);
+    serve_backend_draws(shared, epoch, &backend, k, constrained, group, rng, scratch, None);
 }
 
 /// Serve one `(tenant, k, constraint, lowrank)` group: one `O(N·r)`
@@ -893,7 +1532,7 @@ fn serve_low_rank(
         // one conditioning setup per coalesced group, like the exact path.
         shared.metrics.conditioning_setups.fetch_add(1, Ordering::Relaxed);
     }
-    serve_backend_draws(shared, epoch, &backend, k, constrained, group, rng, scratch);
+    serve_backend_draws(shared, epoch, &backend, k, constrained, group, rng, scratch, None);
 }
 
 /// Serve one `(tenant, k, constraint, map)` group: greedy MAP is
@@ -929,9 +1568,12 @@ fn serve_map(
 /// Respond to one job and account for its outcome: every accepted request
 /// ends in exactly one of `completed` (Ok — also counted into the global
 /// and per-tenant per-mode counters), `rejected_invalid` (a shrinking
-/// hot-swap raced the queue — worker-side `Error::Rejected`), or `failed`
-/// (epoch build error), globally and per tenant.
+/// hot-swap raced the queue — worker-side `Error::Rejected`),
+/// `deadline_exceeded` (the budget ran out before a worker could serve
+/// it), or `failed` (epoch build error, exhausted fallback, panic),
+/// globally and per tenant.
 fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
+    job.done.store(true, Ordering::SeqCst);
     let elapsed = job.accepted.elapsed();
     shared.metrics.latency.record(elapsed);
     let tm = job.entry.metrics();
@@ -947,6 +1589,10 @@ fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
             shared.metrics.rejected_invalid.fetch_add(1, Ordering::Relaxed);
             tm.rejected_invalid.fetch_add(1, Ordering::Relaxed);
         }
+        Err(Error::Deadline(_)) => {
+            shared.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            tm.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+        }
         Err(_) => {
             shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
             tm.failed.fetch_add(1, Ordering::Relaxed);
@@ -955,9 +1601,22 @@ fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
     let _ = job.respond.send(result);
 }
 
+/// Fail one accepted job whose deadline passed before a worker could
+/// start its draw — the distinct [`Error::Deadline`] class, which
+/// [`finish`] books under `deadline_exceeded` rather than `failed`.
+fn deadline_finish(shared: &Shared, job: Job) {
+    let msg = format!(
+        "tenant '{}': budget exhausted before the draw started",
+        job.entry.name()
+    );
+    finish(shared, job, Err(Error::Deadline(msg)));
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::FaultPlan;
     use crate::linalg::Matrix;
 
     fn test_kernel(n1: usize, n2: usize, seed: u64) -> Kernel {
@@ -1346,6 +2005,181 @@ mod tests {
         svc.set_mode_policy(t, ModePolicy::allow_all()).unwrap();
         assert_eq!(svc.sample_mode(t, 2, SampleMode::Map).unwrap().len(), 2);
         assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_fast_rejects_at_admission() {
+        let svc = DppService::start(&test_kernel(2, 2, 40), &small_cfg(), 41).unwrap();
+        let past = Instant::now() - Duration::from_millis(5);
+        match svc.submit(SampleRequest::new(2).with_deadline(past)) {
+            Err(Error::Deadline(m)) => assert!(m.contains("before admission"), "{m}"),
+            other => panic!("expected deadline rejection, got {other:?}"),
+        }
+        // Never accepted, never a queue slot: only deadline_exceeded moves.
+        assert_eq!(svc.metrics().accepted.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.metrics().deadline_exceeded.load(Ordering::Relaxed), 1);
+        let e = svc.registry().entry(TenantId::DEFAULT).unwrap();
+        assert_eq!(e.metrics().deadline_exceeded.load(Ordering::Relaxed), 1);
+        // A generous deadline still serves.
+        let y = svc
+            .submit(SampleRequest::new(2).with_budget(Duration::from_secs(30)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(y.len(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tight_budget_expires_at_the_worker_and_counts() {
+        // A long batch window + a budget far smaller than it: the request
+        // is accepted, then expires in the queue and the worker fails it
+        // with the distinct Deadline class.
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        cfg.max_batch = 64;
+        cfg.batch_window_us = 100_000; // 100ms window
+        let svc = DppService::start(&test_kernel(2, 2, 42), &cfg, 43).unwrap();
+        let t = svc
+            .submit(SampleRequest::new(2).with_budget(Duration::from_millis(1)))
+            .unwrap();
+        match t.wait() {
+            Err(Error::Deadline(m)) => assert!(m.contains("budget exhausted"), "{m}"),
+            other => panic!("expected worker-side deadline, got {other:?}"),
+        }
+        let m = svc.metrics();
+        assert_eq!(m.accepted.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+        assert!(svc.report().contains("deadline_exceeded=1"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn default_budget_applies_to_undeadlined_requests() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        cfg.max_batch = 64;
+        cfg.batch_window_us = 200_000; // batch window dwarfs the budget
+        cfg.default_budget_ms = 1;
+        let svc = DppService::start(&test_kernel(2, 2, 44), &cfg, 45).unwrap();
+        let t = svc.submit(SampleRequest::new(2)).unwrap();
+        match t.wait() {
+            Err(Error::Deadline(_)) => {}
+            other => panic!("expected default-budget expiry, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().deadline_exceeded.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn forced_degradation_serves_exact_requests_through_fallback() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        let svc = DppService::start(&test_kernel(3, 3, 46), &cfg, 47).unwrap();
+        let t = TenantId::DEFAULT;
+        svc.force_degraded(t, true).unwrap();
+        for _ in 0..4 {
+            let y = svc.sample(3).unwrap();
+            assert_eq!(y.len(), 3);
+        }
+        let served = svc.metrics().fallback.served();
+        assert_eq!(served, 4, "forced-degraded serves must ride a fallback rung");
+        // The first rung (regularized exact) is healthy here, so all
+        // degraded serves land on it and no probes fire while forced.
+        assert_eq!(svc.metrics().fallback.regularized.load(Ordering::Relaxed), 4);
+        assert_eq!(svc.metrics().fallback.probes.load(Ordering::Relaxed), 0);
+        let e = svc.registry().entry(t).unwrap();
+        assert_eq!(e.metrics().fallback_served.load(Ordering::Relaxed), 4);
+        assert_eq!(e.breaker_state(), "forced");
+        // Releasing the pin restores the primary path.
+        svc.force_degraded(t, false).unwrap();
+        assert_eq!(svc.sample(3).unwrap().len(), 3);
+        assert_eq!(svc.metrics().fallback.served(), 4);
+        assert!(svc.report().contains("fallback: probes=0 regularized=4"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn injected_exact_failures_trip_breaker_and_fallback_serves() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        cfg.max_batch = 1; // one group per serve: deterministic accounting
+        cfg.batch_window_us = 0;
+        cfg.fallback.breaker_threshold = 2;
+        cfg.fallback.probe_every = 2;
+        let kernel = test_kernel(3, 3, 48);
+        let registry = Arc::new(KernelRegistry::new(0));
+        let t = registry.add_tenant("default", &kernel).unwrap();
+        let plan = Arc::new(FaultPlan::new(99).fail_exact(t, 3));
+        let svc =
+            DppService::start_with_registry_and_faults(registry, &cfg, 49, Arc::clone(&plan))
+                .unwrap();
+        // Every request still serves: injected primary failures divert to
+        // the regularization rung.
+        for _ in 0..6 {
+            assert_eq!(svc.sample(2).unwrap().len(), 2);
+        }
+        let e = svc.registry().entry(t).unwrap();
+        assert_eq!(plan.fired_exact(t), 3, "all injected faults consumed");
+        // Failures 1+2 trip the breaker (threshold 2); failure 3 burns the
+        // first half-open probe; the next probe succeeds and recovers.
+        assert_eq!(e.breaker_trips(), 1);
+        assert_eq!(e.breaker_recoveries(), 1);
+        assert_eq!(e.breaker_state(), "closed");
+        let m = svc.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 6);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            m.fallback.regularized.load(Ordering::Relaxed),
+            m.fallback.served()
+        );
+        assert!(m.fallback.served() >= 3, "each injected failure must fall back");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_fails_only_its_group_and_respawns() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        cfg.max_batch = 1;
+        cfg.batch_window_us = 0;
+        let kernel = test_kernel(2, 2, 50);
+        let registry = Arc::new(KernelRegistry::new(0));
+        let t = registry.add_tenant("default", &kernel).unwrap();
+        let plan = Arc::new(FaultPlan::new(7).panic_worker(t, 1));
+        let svc =
+            DppService::start_with_registry_and_faults(registry, &cfg, 51, Arc::clone(&plan))
+                .unwrap();
+        // First request hits the injected panic: its ticket still gets a
+        // definitive error (never a hang, never a disconnect).
+        match svc.sample(2) {
+            Err(Error::Service(m)) => assert!(m.contains("panicked"), "{m}"),
+            other => panic!("expected a contained panic failure, got {other:?}"),
+        }
+        // The respawned worker serves the next request on the same channel.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match svc.sample(2) {
+                Ok(y) => {
+                    assert_eq!(y.len(), 2);
+                    break;
+                }
+                Err(e) => {
+                    // The respawn may still be in flight; only the
+                    // worker-unavailable window is acceptable, briefly.
+                    assert!(Instant::now() < deadline, "respawn never landed: {e}");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        let m = svc.metrics();
+        assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(plan.fired_panics(t), 1);
+        assert!(svc.report().contains("worker_panics=1"));
         svc.shutdown();
     }
 }

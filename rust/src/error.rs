@@ -32,6 +32,79 @@ pub enum Error {
     /// than the tenant's current ground set) — distinct from [`Error::Service`]
     /// so clients can tell a bad request from a saturated or dying service.
     Rejected(String),
+    /// Deadline or budget exhausted: the request expired before (or while)
+    /// being served, or a client-side wait timed out. Distinct from
+    /// [`Error::Service`] so retry loops can tell "too slow" from "broken"
+    /// — a deadline miss is retryable with a fresh budget, a dropped
+    /// request channel usually is not.
+    Deadline(String),
+}
+
+/// Discriminant-only view of [`Error`], for metrics labels and exhaustive
+/// dispatch without string matching. One variant per `Error` variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ErrorKind {
+    Shape,
+    Numerical,
+    Invalid,
+    Io,
+    Parse,
+    Runtime,
+    Service,
+    Rejected,
+    Deadline,
+}
+
+impl ErrorKind {
+    /// Short stable label (metrics keys, log fields).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrorKind::Shape => "shape",
+            ErrorKind::Numerical => "numerical",
+            ErrorKind::Invalid => "invalid",
+            ErrorKind::Io => "io",
+            ErrorKind::Parse => "parse",
+            ErrorKind::Runtime => "runtime",
+            ErrorKind::Service => "service",
+            ErrorKind::Rejected => "rejected",
+            ErrorKind::Deadline => "deadline",
+        }
+    }
+}
+
+impl Error {
+    /// The error's kind — a copyable discriminant for dispatch and metrics.
+    pub fn kind(&self) -> ErrorKind {
+        match self {
+            Error::Shape(_) => ErrorKind::Shape,
+            Error::Numerical(_) => ErrorKind::Numerical,
+            Error::Invalid(_) => ErrorKind::Invalid,
+            Error::Io(_) => ErrorKind::Io,
+            Error::Parse(_) => ErrorKind::Parse,
+            Error::Runtime(_) => ErrorKind::Runtime,
+            Error::Service(_) => ErrorKind::Service,
+            Error::Rejected(_) => ErrorKind::Rejected,
+            Error::Deadline(_) => ErrorKind::Deadline,
+        }
+    }
+
+    /// Whether a client may reasonably retry the same request. Transient
+    /// service-side conditions (saturation, a dying worker, a missed
+    /// deadline, IO hiccups) are retryable; deterministic failures of the
+    /// request itself (bad shapes, invalid arguments, numerical breakdown
+    /// of the kernel, admission rejection) are not — resubmitting them
+    /// yields the same answer.
+    pub fn is_retryable(&self) -> bool {
+        match self.kind() {
+            ErrorKind::Service | ErrorKind::Deadline | ErrorKind::Io => true,
+            ErrorKind::Shape
+            | ErrorKind::Numerical
+            | ErrorKind::Invalid
+            | ErrorKind::Parse
+            | ErrorKind::Runtime
+            | ErrorKind::Rejected => false,
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -45,6 +118,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
             Error::Rejected(m) => write!(f, "request rejected: {m}"),
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -113,5 +187,64 @@ mod tests {
         assert!(matches!(e, Error::Numerical(_)));
         let e = invalid_err!("bad arg {}", "x");
         assert!(matches!(e, Error::Invalid(_)));
+    }
+
+    /// One instance of every variant, for the exhaustive-match tests below.
+    fn all_variants() -> Vec<Error> {
+        vec![
+            Error::Shape("s".into()),
+            Error::Numerical("n".into()),
+            Error::Invalid("i".into()),
+            Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "io")),
+            Error::Parse("p".into()),
+            Error::Runtime("r".into()),
+            Error::Service("svc".into()),
+            Error::Rejected("rej".into()),
+            Error::Deadline("late".into()),
+        ]
+    }
+
+    #[test]
+    fn kind_covers_every_variant_exactly_once() {
+        let kinds: Vec<ErrorKind> = all_variants().iter().map(Error::kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ErrorKind::Shape,
+                ErrorKind::Numerical,
+                ErrorKind::Invalid,
+                ErrorKind::Io,
+                ErrorKind::Parse,
+                ErrorKind::Runtime,
+                ErrorKind::Service,
+                ErrorKind::Rejected,
+                ErrorKind::Deadline,
+            ]
+        );
+        // Labels are distinct and stable (metrics depend on them).
+        let mut labels: Vec<&str> = kinds.iter().map(ErrorKind::label).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 9, "duplicate ErrorKind labels");
+    }
+
+    #[test]
+    fn retryability_partitions_the_kinds() {
+        for e in all_variants() {
+            let want = matches!(
+                e.kind(),
+                ErrorKind::Service | ErrorKind::Deadline | ErrorKind::Io
+            );
+            assert_eq!(e.is_retryable(), want, "retryable mismatch for {e}");
+        }
+    }
+
+    #[test]
+    fn deadline_is_distinct_from_service() {
+        let late = Error::Deadline("budget 5ms exhausted".into());
+        assert!(late.to_string().contains("deadline exceeded"));
+        assert_ne!(late.kind(), ErrorKind::Service);
+        assert!(late.is_retryable());
+        assert!(!Error::Rejected("bad k".into()).is_retryable());
     }
 }

@@ -42,6 +42,7 @@ COMMANDS:
   marginals --kernel PREFIX [--tenant NAME] [--top T]
   serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
            [--config FILE.json] [--tenants T] [--tenant NAME] [--learn-live]
+           [--budget-ms MS]
   datagen  --kind synthetic|genes|registry --out FILE.kds [--n1 N --n2 N]
            [--count C] [--seed S]
   info
@@ -52,6 +53,11 @@ market tenants; --tenant NAME pins the request trace (and the --learn-live
 publish target) to one tenant instead of round-robining over all of them.
 For `sample`/`marginals`, --tenant NAME loads the kernel saved under
 PREFIX.NAME.
+
+Fault tolerance: `serve --budget-ms MS` gives every request a deadline
+budget (expired work is shed as `deadline_exceeded`, never served late);
+the config file's \"fallback\" block tunes the per-tenant circuit breaker
+and degraded-mode chain, and \"epoch_history\" bounds rollback depth.
 
 Conditioned sampling: `sample --include 0,5 --exclude 3` draws from the
 DPP conditioned on those items being in / out of every subset (with --k,
@@ -446,6 +452,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(w) = args.get_opt::<usize>("workers")? {
         cfg.workers = w.max(1);
     }
+    // --budget-ms MS deadlines every request in the trace (0 = none);
+    // overrides the config file's default_budget_ms.
+    if let Some(b) = args.get_opt::<u64>("budget-ms")? {
+        cfg.default_budget_ms = b;
+    }
     // --tenants T provisions T extra synthetic market tenants on top of
     // the default one and anything the config file declares.
     let extra_tenants: usize = args.get_or("tenants", 0)?;
@@ -461,12 +472,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let truth = krondpp::data::paper_truth_kernel(n1, n2, &mut rng);
     let svc = std::sync::Arc::new(DppService::start(&truth, &cfg, seed)?);
     println!(
-        "starting service: N={} workers={} max_batch={} tenants={:?} (max_resident_epochs={})",
+        "starting service: N={} workers={} max_batch={} tenants={:?} \
+         (max_resident_epochs={} epoch_history={} default_budget_ms={} fallback={})",
         n1 * n2,
         cfg.workers,
         cfg.max_batch,
         svc.registry().tenant_names(),
         cfg.max_resident_epochs,
+        cfg.epoch_history,
+        cfg.default_budget_ms,
+        if cfg.fallback.enabled { "on" } else { "off" },
     );
     // The trace targets one pinned tenant (--tenant) or round-robins all.
     let targets: Vec<krondpp::coordinator::TenantId> = match args.str_flag("tenant") {
@@ -498,7 +513,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             0.0,
             Some(std::sync::Arc::clone(&svc)),
             targets[0],
-        ))
+        )?)
     } else {
         None
     };

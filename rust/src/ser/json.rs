@@ -244,9 +244,17 @@ impl<'a> Parser<'a> {
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
             .map_err(|_| Error::Parse("json: bad number bytes".into()))?;
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| Error::Parse(format!("json: bad number '{text}'")))
+        let x = text
+            .parse::<f64>()
+            .map_err(|_| Error::Parse(format!("json: bad number '{text}'")))?;
+        // Overflowing literals ("1e999") parse to ±inf; reject them here so
+        // poison can never enter a kernel matrix through a config file.
+        if !x.is_finite() {
+            return Err(Error::Parse(format!(
+                "json: non-finite number '{text}' at byte {start}"
+            )));
+        }
+        Ok(Json::Num(x))
     }
 
     fn string(&mut self) -> Result<String> {
@@ -418,5 +426,19 @@ mod tests {
         assert_eq!(v.to_string(), "144");
         let v = Json::Num(1.25);
         assert_eq!(v.to_string(), "1.25");
+    }
+
+    #[test]
+    fn rejects_non_finite_number_literals() {
+        // Overflowing exponents would otherwise smuggle ±inf into kernels.
+        for text in ["1e999", "-1e999", "[1.0, 2.0, 1e400]"] {
+            let err = Json::parse(text).unwrap_err();
+            assert!(
+                err.to_string().contains("non-finite"),
+                "{text} gave: {err}"
+            );
+        }
+        // Large-but-finite numbers still parse.
+        assert!(Json::parse("1e308").is_ok());
     }
 }

@@ -46,9 +46,21 @@ pub fn read_matrix(path: &Path) -> Result<Matrix> {
     let count = rows.checked_mul(cols).ok_or_else(|| Error::Parse("matrix too large".into()))?;
     let mut data = vec![0.0f64; count];
     let mut buf = [0u8; 8];
-    for v in &mut data {
+    for (idx, v) in data.iter_mut().enumerate() {
         r.read_exact(&mut buf)?;
-        *v = f64::from_le_bytes(buf);
+        let x = f64::from_le_bytes(buf);
+        // Reject poison at the ingestion boundary: a NaN/±inf entry would
+        // otherwise propagate silently into the eigensolver and wedge every
+        // epoch built from this matrix.
+        if !x.is_finite() {
+            return Err(Error::Invalid(format!(
+                "{}: non-finite entry {x} at ({}, {})",
+                path.display(),
+                idx / cols.max(1),
+                idx % cols.max(1)
+            )));
+        }
+        *v = x;
     }
     Matrix::from_vec(rows, cols, data)
 }
@@ -180,6 +192,27 @@ mod tests {
         let dir = tmpdir();
         let path = dir.join("bad.kds");
         assert!(write_dataset(&path, 3, &[vec![5]]).is_err());
+    }
+
+    #[test]
+    fn non_finite_entries_rejected_with_index() {
+        let dir = tmpdir();
+        for (name, bad, row, col) in
+            [("nan.kdm", f64::NAN, 1usize, 2usize), ("inf.kdm", f64::NEG_INFINITY, 0, 1)]
+        {
+            let path = dir.join(name);
+            let mut m = Matrix::from_fn(3, 4, |i, j| (i + j) as f64);
+            m.set(row, col, bad);
+            // write_matrix writes raw bytes, so poison survives to disk.
+            write_matrix(&path, &m).unwrap();
+            let err = read_matrix(&path).unwrap_err();
+            let msg = err.to_string();
+            assert!(matches!(err, Error::Invalid(_)), "{name}: {msg}");
+            assert!(
+                msg.contains(&format!("({row}, {col})")),
+                "{name}: offending index missing from '{msg}'"
+            );
+        }
     }
 
     #[test]

@@ -41,4 +41,19 @@ fn service_config_parses() {
     assert_eq!(cfg.tenants[0].name, "market-eu");
     assert_eq!(cfg.tenants[1].name, "market-us");
     assert!(cfg.tenants.iter().all(|t| t.n1 > 0 && t.n2 > 0));
+    // Robustness section: rollback depth, default deadline budget, and
+    // the breaker + degraded-mode fallback chain.
+    assert_eq!(cfg.epoch_history, 4);
+    assert_eq!(cfg.default_budget_ms, 250);
+    assert!(cfg.fallback.enabled);
+    assert_eq!(cfg.fallback.breaker_threshold, 3);
+    assert_eq!(cfg.fallback.probe_every, 4);
+    assert_eq!(cfg.fallback.regularize_eps, vec![1e-6, 1e-3]);
+    assert_eq!(
+        cfg.fallback.degrade,
+        vec![
+            krondpp::dpp::SampleMode::LowRank { rank: 32 },
+            krondpp::dpp::SampleMode::Mcmc { steps: 2000 },
+        ]
+    );
 }

@@ -379,6 +379,112 @@ fn backpressure_accounting_exact() {
     svc.shutdown();
 }
 
+/// Shutdown under load is a drain, not a drop: a burst submitted just
+/// before `shutdown()` (most of it still queued behind a long batch
+/// window) must still resolve — the pump flushes the queue to the
+/// workers, each worker finishes its channel backlog before exiting,
+/// and every ticket yields a definitive outcome after the service is
+/// gone. The per-tenant ledger must close to accepted == completed.
+#[test]
+fn shutdown_under_load_drains_every_ticket() {
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window_us: 50_000,
+        queue_capacity: 4096,
+        ..ServiceConfig::default()
+    };
+    let svc = DppService::start(&kernel(3, 3, 77), &cfg, 78).unwrap();
+    let registry = std::sync::Arc::clone(svc.registry());
+    let mut tickets = Vec::new();
+    for i in 0..200usize {
+        tickets.push(svc.submit(SampleRequest::new(1 + i % 4)).unwrap());
+    }
+    svc.shutdown();
+    // Tickets outlive the service: responses were buffered before the
+    // workers exited, so every wait() resolves immediately.
+    for (i, t) in tickets.into_iter().enumerate() {
+        let y = t.wait().unwrap_or_else(|e| panic!("ticket {i} dangled across shutdown: {e}"));
+        assert_eq!(y.len(), 1 + i % 4);
+        assert!(y.iter().all(|&item| item < 9));
+    }
+    let entry = registry.entry(krondpp::coordinator::TenantId::DEFAULT).unwrap();
+    let tm = entry.metrics();
+    assert_eq!(tm.accepted.load(Ordering::Relaxed), 200);
+    assert_eq!(tm.completed.load(Ordering::Relaxed), 200);
+    assert_eq!(tm.failed.load(Ordering::Relaxed), 0);
+}
+
+/// Submitters racing `begin_shutdown()`: admission flips to refusal
+/// mid-stream, every ticket accepted before the flip still resolves
+/// definitively, post-shutdown submits get `Error::Service`, and the
+/// per-tenant ledger reconciles with zero in-flight work at the end.
+#[test]
+fn racing_submitters_observe_clean_shutdown() {
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window_us: 500,
+        queue_capacity: 100_000,
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(DppService::start(&kernel(3, 3, 81), &cfg, 82).unwrap());
+    let registry = Arc::clone(svc.registry());
+    let accepted = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc2 = Arc::clone(&svc);
+        let accepted2 = Arc::clone(&accepted);
+        handles.push(std::thread::spawn(move || {
+            let mut tickets = Vec::new();
+            loop {
+                match svc2.submit(SampleRequest::new(1 + t as usize % 3)) {
+                    Ok(tk) => {
+                        accepted2.fetch_add(1, Ordering::SeqCst);
+                        tickets.push(tk);
+                    }
+                    Err(krondpp::Error::Service(m)) if m.contains("queue full") => {
+                        std::thread::yield_now(); // backpressure, not shutdown
+                    }
+                    Err(krondpp::Error::Service(m)) => {
+                        assert!(m.contains("shut down"), "unexpected refusal: {m}");
+                        break;
+                    }
+                    Err(e) => panic!("unexpected admission error: {e}"),
+                }
+            }
+            // Everything accepted before the flip must still resolve.
+            for tk in tickets {
+                tk.wait().expect("accepted request must complete across shutdown");
+            }
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    svc.begin_shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let n_accepted = accepted.load(Ordering::SeqCst) as u64;
+    let entry = registry.entry(krondpp::coordinator::TenantId::DEFAULT).unwrap();
+    let tm = entry.metrics();
+    assert_eq!(tm.accepted.load(Ordering::Relaxed), n_accepted);
+    assert_eq!(tm.completed.load(Ordering::Relaxed), n_accepted);
+    assert_eq!(tm.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.in_flight(), 0);
+    assert_eq!(svc.tenant_in_flight(krondpp::coordinator::TenantId::DEFAULT), 0);
+    // Post-shutdown submits are refused with a definitive error.
+    match svc.submit(SampleRequest::new(2)) {
+        Err(krondpp::Error::Service(m)) => assert!(m.contains("shut down"), "{m}"),
+        Err(e) => panic!("wrong refusal class: {e}"),
+        Ok(_) => panic!("post-shutdown submit must be refused"),
+    }
+    // The blocking join must return promptly (drain already happened).
+    match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("service still shared after clients joined"),
+    }
+}
+
 #[test]
 fn invalid_requests_fail_fast_without_queue_slots() {
     let cfg = ServiceConfig {
@@ -424,7 +530,8 @@ fn learning_job_and_serving_share_the_system() {
         1.0,
     )
     .unwrap();
-    let job = LearningJob::spawn(Box::new(learner), train, 6, 0.0, Some(Arc::clone(&svc)));
+    let job = LearningJob::spawn(Box::new(learner), train, 6, 0.0, Some(Arc::clone(&svc)))
+        .unwrap();
     // Keep serving while learning runs.
     let mut served = 0;
     for _ in 0..60 {

@@ -1,0 +1,400 @@
+//! Deterministic fault-injection chaos suite (requires the
+//! `fault-injection` feature; CI pins `KRONDPP_FAULT_SEED`).
+//!
+//! Every test drives the live coordinator with a seeded
+//! [`FaultPlan`] whose budgets fire an exact number of times, then
+//! checks the fault-tolerance invariants end to end:
+//!
+//! - every accepted request reaches exactly one definitive outcome
+//!   (`accepted = completed + failed + rejected_invalid +
+//!   deadline_exceeded`, globally and per tenant);
+//! - poisoned publishes are quarantined without touching the serving
+//!   epoch, and `rollback` restores a historical generation;
+//! - injected primary-path failures trip the circuit breaker, are
+//!   absorbed by the degraded-mode fallback chain, and the breaker
+//!   recovers through half-open probes once the fault budget drains;
+//! - a worker panic fails only its own coalesced group, other tenants
+//!   never observe it, and the supervisor respawns the worker;
+//! - injected serve stalls blow request budgets into `Deadline`
+//!   errors, never into hangs or silent drops;
+//! - shutdown completes cleanly after all of the above.
+
+use krondpp::config::{FallbackPolicy, ServiceConfig};
+use krondpp::coordinator::faults::FaultPlan;
+use krondpp::coordinator::{DppService, KernelRegistry, SampleRequest, TenantId};
+use krondpp::data;
+use krondpp::dpp::{Kernel, SampleMode};
+use krondpp::rng::Rng;
+use krondpp::Error;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn kernel(n1: usize, n2: usize, seed: u64) -> Kernel {
+    let mut rng = Rng::new(seed);
+    data::paper_truth_kernel(n1, n2, &mut rng)
+}
+
+/// A factored kernel with one non-finite entry — the registry
+/// validator must quarantine it.
+fn poisoned(n1: usize, n2: usize, seed: u64) -> Kernel {
+    let mut k = kernel(n1, n2, seed);
+    match &mut k {
+        Kernel::Kron2(_, b) => b.set(0, 1, f64::NAN),
+        _ => panic!("paper_truth_kernel returns Kron2"),
+    }
+    k
+}
+
+/// Poll `cond` until it holds or `ms` elapse (respawns are
+/// asynchronous: the supervisor books them after the panicking worker
+/// has already answered its clients).
+fn wait_for(ms: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(ms);
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+fn draw(svc: &DppService, t: TenantId, k: usize) -> Result<Vec<usize>, Error> {
+    svc.submit(SampleRequest::for_tenant(t, k))?.wait()
+}
+
+/// Poisoned publishes are quarantined without disturbing the serving
+/// epoch; `rollback` then restores a historical generation and the
+/// tenant keeps serving across the whole sequence.
+#[test]
+fn poisoned_publish_is_quarantined_and_rollback_restores_service() {
+    let reg = Arc::new(KernelRegistry::with_history(0, 4));
+    let t = reg.add_tenant("alpha", &kernel(4, 4, 11)).unwrap();
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window_us: 50,
+        ..ServiceConfig::default()
+    };
+    let svc = DppService::start_with_registry(Arc::clone(&reg), &cfg, 12).unwrap();
+    let entry = reg.entry(t).unwrap();
+
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
+    let g0 = entry.generation();
+
+    // A healthy refresh advances the generation.
+    reg.publish(t, &kernel(4, 4, 13)).unwrap();
+    let g1 = entry.generation();
+    assert!(g1 > g0);
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
+
+    // A poisoned refresh is quarantined: error surfaced, generation
+    // untouched, serving unaffected.
+    let err = reg.publish(t, &poisoned(4, 4, 14)).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "unexpected quarantine reason: {err}");
+    assert_eq!(reg.quarantines(), 1);
+    assert_eq!(entry.quarantined_candidates(), 1);
+    assert!(entry.last_quarantine().unwrap().contains("non-finite"));
+    assert_eq!(entry.generation(), g1);
+    assert_eq!(draw(&svc, t, 4).unwrap().len(), 4);
+
+    // Roll back to the pre-refresh kernel: new generation, still serving.
+    let g2 = svc.rollback(t, g0).unwrap();
+    assert!(g2 > g1);
+    assert_eq!(reg.rollbacks(), 1);
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
+
+    let m = svc.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 4);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+/// Three injected primary-path failures against a threshold-2 breaker,
+/// served one request at a time: the exact trip/probe/recover schedule
+/// is deterministic, every request is still answered (degraded), and
+/// the counters balance to the request count.
+#[test]
+fn injected_failures_trip_breaker_and_fallback_absorbs_them() {
+    let reg = Arc::new(KernelRegistry::new(0));
+    let t = reg.add_tenant("alpha", &kernel(4, 4, 21)).unwrap();
+    let plan = Arc::new(FaultPlan::seeded_from_env(0xBADC0DE).fail_exact(t, 3));
+    let cfg = ServiceConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window_us: 0,
+        fallback: FallbackPolicy {
+            enabled: true,
+            breaker_threshold: 2,
+            probe_every: 2,
+            regularize_eps: vec![1e-4],
+            degrade: vec![],
+        },
+        ..ServiceConfig::default()
+    };
+    let svc =
+        DppService::start_with_registry_and_faults(Arc::clone(&reg), &cfg, 22, Arc::clone(&plan))
+            .unwrap();
+
+    // Schedule with fail_exact budget 3, threshold 2, probe_every 2:
+    //   req1 fail (f=1) → fallback        req2 fail (f=2) trips → fallback
+    //   req3 open, no probe → fallback    req4 probe, fault 3 fires → fallback
+    //   req5 open, no probe → fallback    req6 probe, budget dry → recovers
+    //   req7..8 closed → primary
+    for i in 0..8 {
+        let y = draw(&svc, t, 2).unwrap_or_else(|e| panic!("request {i} must be served: {e}"));
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|&item| item < 16));
+    }
+
+    assert_eq!(plan.fired_exact(t), 3, "seed {}", plan.seed());
+    let entry = reg.entry(t).unwrap();
+    assert_eq!(entry.breaker_trips(), 1);
+    assert_eq!(entry.breaker_recoveries(), 1);
+    assert_eq!(entry.breaker_state(), "closed");
+
+    let m = svc.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 8);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(m.fallback.probes.load(Ordering::Relaxed), 2);
+    assert_eq!(m.fallback.regularized.load(Ordering::Relaxed), 5);
+    assert_eq!(m.fallback.served(), 5);
+    assert_eq!(m.fallback.exhausted.load(Ordering::Relaxed), 0);
+    assert_eq!(entry.metrics().fallback_served.load(Ordering::Relaxed), 5);
+    svc.shutdown();
+}
+
+/// A worker panic fails only the coalesced group it was serving: the
+/// other tenant never sees an error, queued work survives the respawn
+/// hand-over, and the supervisor replaces the worker (twice).
+#[test]
+fn worker_panics_are_contained_and_the_pool_heals() {
+    let reg = Arc::new(KernelRegistry::new(0));
+    let a = reg.add_tenant("alpha", &kernel(4, 4, 31)).unwrap();
+    let b = reg.add_tenant("beta", &kernel(3, 3, 32)).unwrap();
+    let plan = Arc::new(FaultPlan::seeded_from_env(7).panic_worker(a, 2));
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 1,
+        batch_window_us: 0,
+        ..ServiceConfig::default()
+    };
+    let svc =
+        DppService::start_with_registry_and_faults(Arc::clone(&reg), &cfg, 33, Arc::clone(&plan))
+            .unwrap();
+
+    let mut panicked = 0u64;
+    let mut served_a = 0u64;
+    for i in 0..8 {
+        match draw(&svc, a, 3) {
+            Ok(y) => {
+                assert_eq!(y.len(), 3);
+                served_a += 1;
+            }
+            Err(Error::Service(m)) => {
+                assert!(m.contains("panicked"), "request {i}: unexpected failure: {m}");
+                panicked += 1;
+            }
+            Err(e) => panic!("request {i}: unexpected error class: {e}"),
+        }
+        // The sibling tenant must be completely unaffected, including
+        // while the panicked worker's queue is mid-hand-over.
+        let y = draw(&svc, b, 2).expect("tenant beta must never observe alpha's faults");
+        assert_eq!(y.len(), 2);
+        assert!(y.iter().all(|&item| item < 9));
+    }
+    assert_eq!(panicked, 2);
+    assert_eq!(served_a, 6);
+    assert_eq!(plan.fired_panics(a), 2);
+
+    let m = svc.metrics();
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 2);
+    assert!(
+        wait_for(5_000, || m.worker_respawns.load(Ordering::Relaxed) == 2),
+        "supervisor must respawn both retired workers, saw {}",
+        m.worker_respawns.load(Ordering::Relaxed)
+    );
+
+    let ea = reg.entry(a).unwrap();
+    let eb = reg.entry(b).unwrap();
+    assert_eq!(ea.metrics().completed.load(Ordering::Relaxed), 6);
+    assert_eq!(ea.metrics().failed.load(Ordering::Relaxed), 2);
+    assert_eq!(eb.metrics().completed.load(Ordering::Relaxed), 8);
+    assert_eq!(eb.metrics().failed.load(Ordering::Relaxed), 0);
+    assert!(svc.report().contains("worker_panics=2"), "report: {}", svc.report());
+    svc.shutdown();
+}
+
+/// Injected serve stalls push budgeted requests past their deadline:
+/// they fail with a retryable `Deadline` error (never a hang or a
+/// silent drop), unbudgeted requests still complete, and the
+/// accounting closes exactly.
+#[test]
+fn slow_serves_exhaust_budgets_into_deadline_errors() {
+    let reg = Arc::new(KernelRegistry::new(0));
+    let t = reg.add_tenant("alpha", &kernel(4, 4, 41)).unwrap();
+    let plan =
+        Arc::new(FaultPlan::seeded_from_env(0x51).slow_serve(t, 2, Duration::from_millis(250)));
+    let cfg = ServiceConfig {
+        workers: 1,
+        max_batch: 1,
+        batch_window_us: 0,
+        ..ServiceConfig::default()
+    };
+    let svc =
+        DppService::start_with_registry_and_faults(Arc::clone(&reg), &cfg, 42, Arc::clone(&plan))
+            .unwrap();
+
+    for i in 0..2 {
+        let err = svc
+            .submit(SampleRequest::for_tenant(t, 2).with_budget(Duration::from_millis(100)))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)), "request {i}: expected deadline, got {err}");
+        assert!(err.is_retryable());
+    }
+    for _ in 0..3 {
+        assert_eq!(draw(&svc, t, 2).unwrap().len(), 2);
+    }
+
+    // Both stalls land on budgeted requests unless the worker pickup
+    // itself ate the budget (then the sweep expires the request before
+    // the stall fires) — either way the ledger must close.
+    assert!(plan.fired_slow(t) <= 2);
+    let m = svc.metrics();
+    assert_eq!(m.accepted.load(Ordering::Relaxed), 5);
+    assert_eq!(m.deadline_exceeded.load(Ordering::Relaxed), 2);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    let entry = reg.entry(t).unwrap();
+    assert_eq!(entry.metrics().deadline_exceeded.load(Ordering::Relaxed), 2);
+    svc.shutdown();
+}
+
+/// Full two-tenant chaos: exact failures, a fallback-rung failure, a
+/// worker panic, and serve stalls all at once under concurrent
+/// clients. Every fault budget fires exactly, every ticket resolves,
+/// the per-tenant and global ledgers balance against what the clients
+/// observed, and shutdown returns.
+#[test]
+fn two_tenant_chaos_preserves_accounting_and_shuts_down_clean() {
+    let reg = Arc::new(KernelRegistry::with_history(0, 4));
+    let a = reg.add_tenant("alpha", &kernel(4, 4, 51)).unwrap();
+    let b = reg.add_tenant("beta", &kernel(3, 3, 52)).unwrap();
+    let plan = Arc::new(
+        FaultPlan::seeded_from_env(0xFEED)
+            .fail_exact(a, 4)
+            .fail_fallback(a, 1)
+            .slow_serve(a, 2, Duration::from_millis(40))
+            .panic_worker(b, 1),
+    );
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window_us: 100,
+        queue_capacity: 4096,
+        fallback: FallbackPolicy {
+            enabled: true,
+            breaker_threshold: 3,
+            probe_every: 2,
+            regularize_eps: vec![1e-5],
+            degrade: vec![SampleMode::LowRank { rank: 16 }],
+        },
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(
+        DppService::start_with_registry_and_faults(Arc::clone(&reg), &cfg, 53, Arc::clone(&plan))
+            .unwrap(),
+    );
+
+    let ok_a = Arc::new(AtomicU64::new(0));
+    let err_a = Arc::new(AtomicU64::new(0));
+    let ok_b = Arc::new(AtomicU64::new(0));
+    let err_b = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for (tenant, n, kmax, ok, err) in [
+        (a, 16usize, 4usize, &ok_a, &err_a),
+        (a, 16, 4, &ok_a, &err_a),
+        (b, 9, 3, &ok_b, &err_b),
+        (b, 9, 3, &ok_b, &err_b),
+    ] {
+        let svc2 = Arc::clone(&svc);
+        let ok2 = Arc::clone(ok);
+        let err2 = Arc::clone(err);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..25usize {
+                match draw(&svc2, tenant, 1 + i % kmax) {
+                    Ok(y) => {
+                        assert_eq!(y.len(), 1 + i % kmax);
+                        assert!(y.iter().all(|&item| item < n));
+                        ok2.fetch_add(1, Ordering::SeqCst);
+                    }
+                    // The only legal failure in this mix is the
+                    // panicked group; no budgets, so never Deadline.
+                    Err(Error::Service(m)) => {
+                        assert!(m.contains("panicked"), "unexpected service error: {m}");
+                        err2.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(e) => panic!("unexpected error class: {e}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Every fault budget fired exactly.
+    assert_eq!(plan.fired_exact(a), 4, "seed {}", plan.seed());
+    assert_eq!(plan.fired_fallback(a), 1);
+    assert_eq!(plan.fired_slow(a), 2);
+    assert_eq!(plan.fired_panics(b), 1);
+
+    // Per-tenant ledgers close against client-observed outcomes.
+    for (tenant, ok, err) in [(a, &ok_a, &err_a), (b, &ok_b, &err_b)] {
+        let entry = reg.entry(tenant).unwrap();
+        let tm = entry.metrics();
+        let (acc, comp, fail) = (
+            tm.accepted.load(Ordering::Relaxed),
+            tm.completed.load(Ordering::Relaxed),
+            tm.failed.load(Ordering::Relaxed),
+        );
+        assert_eq!(acc, 50);
+        assert_eq!(comp, ok.load(Ordering::SeqCst));
+        assert_eq!(fail, err.load(Ordering::SeqCst));
+        assert_eq!(acc, comp + fail, "tenant {tenant:?} ledger must close");
+        assert_eq!(tm.rejected_invalid.load(Ordering::Relaxed), 0);
+        assert_eq!(tm.deadline_exceeded.load(Ordering::Relaxed), 0);
+    }
+    // All of alpha's exact failures were absorbed by the fallback
+    // chain (the injected rung failure just skipped to the next rung);
+    // only beta's panicked group failed, and it failed exactly once
+    // per job in that group.
+    assert_eq!(err_a.load(Ordering::SeqCst), 0);
+    let failed_b = err_b.load(Ordering::SeqCst);
+    assert!((1..=4).contains(&failed_b), "panic fails one group of ≤ max_batch: {failed_b}");
+
+    let m = svc.metrics();
+    let (acc, comp, fail) = (
+        m.accepted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        m.failed.load(Ordering::Relaxed),
+    );
+    assert_eq!(acc, 100);
+    assert_eq!(acc, comp + fail, "global ledger must close");
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1);
+    assert!(m.fallback.served() >= 4, "{}", m.fallback.summary());
+    assert_eq!(m.fallback.exhausted.load(Ordering::Relaxed), 0);
+    assert!(
+        wait_for(5_000, || m.worker_respawns.load(Ordering::Relaxed) == 1),
+        "supervisor must respawn the panicked worker"
+    );
+
+    // Shutdown must return promptly even after panics and respawns.
+    match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("service still shared after clients joined"),
+    }
+}
