@@ -9,8 +9,9 @@
 
 use krondpp::bench_util::{bench_budget_ms, bench_max_n, section, Report};
 use krondpp::config::ServiceConfig;
-use krondpp::coordinator::{DppService, SampleRequest, TenantId};
+use krondpp::coordinator::{DppService, KernelRegistry, SampleRequest, TenantId};
 use krondpp::data;
+use krondpp::dpp::KernelDelta;
 use krondpp::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -279,6 +280,85 @@ fn main() {
             &[("publish_per_s", publishes as f64 / wall), ("mean_ms", mean_ms)],
         );
         drop(svc);
+    }
+
+    section("churn: incremental delta publish vs full re-eigendecomposition");
+    println!(
+        "{:<10} {:>6} {:>14} {:>14} {:>10}",
+        "factor n", "rank", "delta ms", "full ms", "speedup"
+    );
+    let mut last_speedup = None;
+    for s in [8usize, 16, 32, 64] {
+        if s * s > max_n {
+            println!("(skipping factor n={s}: catalog {} > KRONDPP_BENCH_MAX_N={max_n})", s * s);
+            continue;
+        }
+        let cfg = ServiceConfig {
+            workers: 2,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 100_000,
+            ..ServiceConfig::default()
+        };
+        // The sweep times the steady-state secular-refresh path, so lift
+        // the periodic exact-republish depth bound out of the window
+        // (production keeps it; see DESIGN.md §2.4 on the drift budget).
+        let mut registry =
+            KernelRegistry::with_history(cfg.max_resident_epochs, cfg.epoch_history);
+        registry.set_max_delta_depth(u64::MAX);
+        let registry = Arc::new(registry);
+        let mut crng = Rng::new(31);
+        let churn_kernel = data::paper_truth_kernel(s, s, &mut crng);
+        registry.add_tenant("default", &churn_kernel).unwrap();
+        let svc = Arc::new(DppService::start_with_registry(registry, &cfg, 9).unwrap());
+        let t = svc.tenant("default").unwrap();
+        let publishes = (budget_ms / 2).clamp(10, 100) as usize;
+        const RANK: usize = 2;
+        // Pre-built rank-2 feedback perturbations, small enough to keep
+        // the factor PD across the whole run.
+        let deltas: Vec<KernelDelta> = (0..publishes)
+            .map(|_| KernelDelta::Perturb {
+                side: 0,
+                rhos: vec![1.0, -0.5],
+                vectors: crng.uniform_matrix(s, RANK, -0.01, 0.01),
+            })
+            .collect();
+        let t0 = Instant::now();
+        for d in &deltas {
+            svc.publish_delta(t, d).unwrap();
+        }
+        let delta_ms = t0.elapsed().as_secs_f64() * 1e3 / publishes as f64;
+        let incremental = svc.registry().delta_incremental();
+        // Full republishes of same-shape kernels: two fresh factor
+        // eigensolves + validation per publish (the pre-delta baseline).
+        let candidates: Vec<_> =
+            (0..publishes).map(|_| data::paper_truth_kernel(s, s, &mut crng)).collect();
+        let t0 = Instant::now();
+        for c in &candidates {
+            svc.publish(t, c).unwrap();
+        }
+        let full_ms = t0.elapsed().as_secs_f64() * 1e3 / publishes as f64;
+        let speedup = full_ms / delta_ms.max(1e-9);
+        println!(
+            "{s:<10} {RANK:>6} {delta_ms:>14.3} {full_ms:>14.3} {speedup:>10.2}  \
+             ({incremental}/{publishes} incremental)"
+        );
+        report.case_raw(
+            &format!("churn_factor_{s}"),
+            &[
+                ("delta_publish_ms", delta_ms),
+                ("full_publish_ms", full_ms),
+                ("speedup", speedup),
+                ("incremental_fraction", incremental as f64 / publishes as f64),
+            ],
+        );
+        last_speedup = Some(speedup);
+        drop(svc);
+    }
+    if let Some(sp) = last_speedup {
+        // Keyed on the largest swept factor — the r ≪ N regime the delta
+        // path exists for.
+        report.derived("delta_publish_vs_full_speedup", sp);
     }
 
     section("latency vs requested k (4 workers)");

@@ -27,6 +27,10 @@ pub struct Progress {
     pub record: IterRecord,
     /// True when the kernel was installed into the service.
     pub installed: bool,
+    /// Number of [`crate::dpp::KernelDelta`]s streamed into the tenant
+    /// for this iteration (streaming jobs only; 0 when the iteration was
+    /// installed by a full publish or not installed at all).
+    pub deltas: usize,
 }
 
 /// A running learning job.
@@ -57,12 +61,58 @@ impl LearningJob {
     /// Each improving iteration becomes a new epoch generation for that
     /// tenant; other tenants are untouched.
     pub fn spawn_into(
+        learner: Box<dyn Learner + Send>,
+        data: TrainingSet,
+        max_iters: usize,
+        tol: f64,
+        service: Option<Arc<DppService>>,
+        tenant: TenantId,
+    ) -> Result<LearningJob> {
+        Self::spawn_inner(learner, data, max_iters, tol, service, tenant, false)
+    }
+
+    /// Spawn a **streaming** learning job against the service's default
+    /// tenant: see [`LearningJob::spawn_streaming_into`].
+    pub fn spawn_streaming(
+        learner: Box<dyn Learner + Send>,
+        data: TrainingSet,
+        max_iters: usize,
+        tol: f64,
+        service: Arc<DppService>,
+    ) -> Result<LearningJob> {
+        Self::spawn_streaming_into(learner, data, max_iters, tol, service, TenantId::DEFAULT)
+    }
+
+    /// Spawn a **streaming** learning job: each iteration runs
+    /// [`Learner::step_delta`] and publishes the step's
+    /// [`crate::dpp::KernelDelta`]s into `tenant` through
+    /// [`DppService::publish_delta`], so the tenant's cached
+    /// eigendecomposition is refreshed by rank-r secular updates instead
+    /// of rebuilt per iteration. Unlike the batch mode, **every**
+    /// iteration is published (deltas must apply in unbroken sequence for
+    /// the tenant to stay in lockstep with the learner's iterate); a
+    /// learner without a delta form (`step_delta → None`), a raced
+    /// publish, or a quarantined delta falls back to a full publish of
+    /// the learner's exact kernel, resynchronizing the tenant.
+    pub fn spawn_streaming_into(
+        learner: Box<dyn Learner + Send>,
+        data: TrainingSet,
+        max_iters: usize,
+        tol: f64,
+        service: Arc<DppService>,
+        tenant: TenantId,
+    ) -> Result<LearningJob> {
+        Self::spawn_inner(learner, data, max_iters, tol, Some(service), tenant, true)
+    }
+
+    fn spawn_inner(
         mut learner: Box<dyn Learner + Send>,
         data: TrainingSet,
         max_iters: usize,
         tol: f64,
         service: Option<Arc<DppService>>,
         tenant: TenantId,
+        stream: bool,
     ) -> Result<LearningJob> {
         let (tx, rx) = mpsc::channel();
         let cancel = Arc::new(AtomicBool::new(false));
@@ -86,21 +136,53 @@ impl LearningJob {
                         break;
                     }
                     let t = Instant::now();
-                    learner.step(&data)?;
+                    let step_deltas = if stream {
+                        learner.step_delta(&data)?
+                    } else {
+                        learner.step(&data)?;
+                        None
+                    };
                     elapsed += t.elapsed();
                     let ll = learner.objective(&data)?;
                     let record = IterRecord { iter: it, elapsed, log_likelihood: ll };
                     history.push(record.clone());
                     let mut installed = false;
+                    let mut streamed = 0usize;
                     if let Some(svc) = &service {
-                        // Only publish improving kernels.
-                        let prev = history[history.len() - 2].log_likelihood;
-                        if ll >= prev {
-                            svc.publish(tenant, &learner.kernel())?;
-                            installed = true;
+                        if stream {
+                            match &step_deltas {
+                                Some(ds) => {
+                                    let applied =
+                                        ds.iter().take_while(|d| {
+                                            svc.publish_delta(tenant, d).is_ok()
+                                        })
+                                        .count();
+                                    if applied == ds.len() {
+                                        streamed = applied;
+                                    } else {
+                                        // Lost lockstep mid-sequence (a
+                                        // raced publish or a quarantined
+                                        // delta): resync with the
+                                        // learner's exact iterate.
+                                        svc.publish(tenant, &learner.kernel())?;
+                                    }
+                                    installed = true;
+                                }
+                                None => {
+                                    svc.publish(tenant, &learner.kernel())?;
+                                    installed = true;
+                                }
+                            }
+                        } else {
+                            // Batch mode: only publish improving kernels.
+                            let prev = history[history.len() - 2].log_likelihood;
+                            if ll >= prev {
+                                svc.publish(tenant, &learner.kernel())?;
+                                installed = true;
+                            }
                         }
                     }
-                    let _ = tx.send(Progress { record, installed });
+                    let _ = tx.send(Progress { record, installed, deltas: streamed });
                     let prev = history[history.len() - 2].log_likelihood;
                     if tol > 0.0 && (ll - prev).abs() < tol {
                         break;
@@ -280,6 +362,60 @@ mod tests {
         assert!(reg.entry(fresh).unwrap().generation() > 1);
         assert_eq!(reg.entry(TenantId::DEFAULT).unwrap().generation(), 1);
         let y = svc.sample_tenant(fresh, 3).unwrap();
+        assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn streaming_job_keeps_tenant_in_lockstep_with_learner() {
+        use crate::learn::KrkStochastic;
+        let mut rng = Rng::new(9);
+        let mk = |n: usize, rng: &mut Rng| {
+            let mut m = rng.paper_init_kernel(n);
+            m.scale_mut(1.5 / n as f64);
+            m.add_diag_mut(0.3);
+            m
+        };
+        let truth = Kernel::Kron2(mk(3, &mut rng), mk(3, &mut rng));
+        let sampler = Sampler::new(&truth).unwrap();
+        let subsets: Vec<Vec<usize>> = (0..30).map(|_| sampler.sample(&mut rng)).collect();
+        let data = TrainingSet::new(9, subsets).unwrap();
+        let l1 = mk(3, &mut rng);
+        let l2 = mk(3, &mut rng);
+        // The service starts from the learner's initial iterate, so the
+        // delta stream applies to exactly the kernel the tenant holds.
+        let init = Kernel::Kron2(l1.clone(), l2.clone());
+        let learner = KrkStochastic::new(l1, l2, 0.5, 4, 11);
+        let cfg = ServiceConfig {
+            workers: 1,
+            max_batch: 2,
+            batch_window_us: 100,
+            queue_capacity: 16,
+            ..ServiceConfig::default()
+        };
+        let svc = Arc::new(DppService::start(&init, &cfg, 5).unwrap());
+        let job =
+            LearningJob::spawn_streaming(Box::new(learner), data, 5, 0.0, Arc::clone(&svc))
+                .unwrap();
+        while !job.handle.is_finished() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let events = job.poll();
+        let history = job.join().unwrap();
+        assert_eq!(history.len(), 6);
+        assert_eq!(events.len(), 5);
+        assert!(events.iter().all(|e| e.installed));
+        let streamed: usize = events.iter().map(|e| e.deltas).sum();
+        assert!(streamed >= 5, "each iteration should stream ≥1 delta, got {streamed}");
+        // Clean streaming: every publication went through the delta path
+        // (no full-publish resyncs), so the tenant advanced exactly one
+        // generation per streamed delta.
+        let reg = svc.registry();
+        assert_eq!(reg.delta_publishes(), streamed as u64);
+        let entry = reg.entry(TenantId::DEFAULT).unwrap();
+        assert_eq!(entry.generation(), 1 + streamed as u64);
+        assert_eq!(entry.deltas_published(), streamed as u64);
+        // The service still serves off the delta-built epochs.
+        let y = svc.sample(3).unwrap();
         assert_eq!(y.len(), 3);
     }
 

@@ -7,7 +7,11 @@
 //!   resident eigendecompositions and lazy rebuild for cold tenants.
 //!   Candidate publishes are validated (finite scan + spectrum sanity)
 //!   and quarantined on failure; a bounded per-tenant history backs
-//!   [`KernelRegistry::rollback`].
+//!   [`KernelRegistry::rollback`]. Catalog churn streams in as
+//!   [`crate::dpp::KernelDelta`]s via [`KernelRegistry::publish_delta`],
+//!   which refreshes the resident eigendecomposition in place by rank-r
+//!   secular updates (depth-bounded, with forced exact republish) instead
+//!   of re-eigendecomposing per event.
 //! - [`server`]: the sampling service (admission control → request queue
 //!   → dynamic batcher → tenant-grouped least-loaded dispatch → DPP
 //!   samples from the tenant's current epoch), constraint-aware end to
@@ -51,7 +55,7 @@ pub mod router;
 pub mod server;
 
 pub use jobs::LearningJob;
-pub use registry::{KernelRegistry, ModePolicy, SamplerEpoch, TenantId};
+pub use registry::{DeltaOutcome, KernelRegistry, ModePolicy, SamplerEpoch, TenantId};
 pub use server::{DppService, SampleRequest, Ticket};
 
 use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};

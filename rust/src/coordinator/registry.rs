@@ -41,11 +41,36 @@
 //! time moving backwards). Per-tenant circuit-breaker state for the
 //! serving-side fallback chain also lives on [`TenantEntry`] — lock-free
 //! atomics, same discipline as the mode-policy mask.
+//!
+//! **Delta publishing.** Catalog churn (item adds/removes/retires, small
+//! factor perturbations) arrives as [`KernelDelta`]s through
+//! [`KernelRegistry::publish_delta`]. The exact post-delta kernel is
+//! always computed and validated first (the ground truth every fallback
+//! converges to); then, when the tenant's eigendecomposition is resident
+//! and the delta lowers to a rank-r factor perturbation, the cached
+//! spectrum is **refreshed in place** by the secular-equation update
+//! ([`crate::linalg::eigen_update`]) instead of re-eigendecomposed —
+//! `O(r·N₁²)` against `O(N₁³)` per churn event. A per-tenant
+//! `delta_depth` counter bounds how many incremental refreshes may stack
+//! before an exact republish is forced (resetting accumulated drift to
+//! zero); structural deltas, evicted tenants, and refreshes the updater
+//! refuses ([`crate::linalg::eigen_update::UpdateOutcome::NeedExact`])
+//! fall back to the exact path. Deltas to an **evicted** tenant update
+//! the stored kernel only — the next acquire's lazy rebuild collapses
+//! every pending delta into one eigendecomposition. Malformed or
+//! poisoned deltas are quarantined exactly like poisoned full publishes.
 
 use crate::coordinator::metrics::TenantMetrics;
 use crate::coordinator::{read_clean, write_clean};
 use crate::dpp::backend::SampleMode;
-use crate::dpp::{Kernel, MarginalScratch, SampleScratch, Sampler};
+use crate::dpp::{
+    EigenVectors, Kernel, KernelDelta, KernelEigen, MarginalScratch, SampleScratch,
+    Sampler,
+};
+use crate::linalg::eigen_update::{
+    self, EigenUpdateScratch, UpdateOptions, UpdateOutcome,
+};
+use crate::linalg::{kron, Matrix};
 use crate::error::{Error, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -61,6 +86,16 @@ pub const DEFAULT_EPOCH_HISTORY: usize = 4;
 /// `-tol · max(1, λ_max)` is not a rounding artifact but a genuinely
 /// indefinite kernel, and is quarantined.
 const SPECTRUM_TOL: f64 = 1e-8;
+
+/// Default bound on consecutive incremental delta refreshes before
+/// [`KernelRegistry::publish_delta`] forces an exact republish. Each
+/// secular-equation pass contributes `O(1e-12)` orthogonality drift
+/// (gated per-pass at [`UpdateOptions::max_drift`]); sixteen stacked
+/// passes keep the worst accumulated drift orders of magnitude below the
+/// serving spectrum tolerance while amortizing ~16 eigendecompositions
+/// per forced rebuild. `0` disables incremental absorption entirely
+/// (every delta republishes exactly).
+pub const DEFAULT_MAX_DELTA_DEPTH: u64 = 16;
 
 /// Which sampler-zoo mode *families* a tenant may request — the
 /// admission-time policy knob (a cheap per-mode capability mask; the
@@ -184,6 +219,12 @@ struct TenantSlot {
     /// factored kernel); a rollback re-eigendecomposes it, exactly like a
     /// publish of a known-good kernel.
     history: VecDeque<EpochRecord>,
+    /// Consecutive incremental delta refreshes stacked on the resident
+    /// eigendecomposition since its last exact build. Reset to zero by
+    /// every exact path (publish, rollback, lazy rebuild, forced
+    /// republish); compared against the registry's `max_delta_depth` to
+    /// force periodic exact republishes under sustained churn.
+    delta_depth: u64,
 }
 
 /// One rollback point: a previously-served generation and its kernel.
@@ -212,6 +253,12 @@ pub struct TenantEntry {
     quarantined: AtomicU64,
     /// Reason the most recent candidate was quarantined.
     last_quarantine: Mutex<Option<String>>,
+    /// Deltas successfully published to this tenant (churn volume).
+    deltas: AtomicU64,
+    /// Of those, how many were absorbed by the incremental secular
+    /// refresh (the rest rebuilt exactly: structural change, depth
+    /// budget, updater refusal, or an evicted epoch).
+    delta_refreshes: AtomicU64,
     /// Circuit breaker (serving-side degraded mode). All lock-free:
     /// `open` is the trip state, `forced` pins it open for operator-forced
     /// degradation, `failures` counts *consecutive* numerical failures,
@@ -291,6 +338,25 @@ impl TenantEntry {
     pub(crate) fn record_quarantine(&self, reason: String) {
         self.quarantined.fetch_add(1, Ordering::Relaxed);
         *crate::coordinator::lock_clean(&self.last_quarantine) = Some(reason);
+    }
+
+    // --- churn accounting ------------------------------------------------
+
+    /// Deltas successfully published to this tenant so far.
+    pub fn deltas_published(&self) -> u64 {
+        self.deltas.load(Ordering::Relaxed)
+    }
+
+    /// Of the published deltas, how many refreshed the resident
+    /// eigendecomposition incrementally (vs an exact rebuild).
+    pub fn delta_refreshes(&self) -> u64 {
+        self.delta_refreshes.load(Ordering::Relaxed)
+    }
+
+    /// Incremental refreshes currently stacked on the resident
+    /// eigendecomposition since its last exact build.
+    pub fn delta_depth(&self) -> u64 {
+        read_clean(&self.slot).delta_depth
     }
 
     // --- circuit breaker -------------------------------------------------
@@ -409,11 +475,38 @@ pub struct KernelRegistry {
     marginal_scratch: Mutex<MarginalScratch>,
     /// Per-tenant bound on rollback history records (0 = no history).
     max_history: usize,
+    /// Workspace for the incremental delta path's secular-equation
+    /// refresh — same writer-side-only, try-lock-or-fresh discipline as
+    /// `swap_scratch`.
+    delta_scratch: Mutex<EigenUpdateScratch>,
+    /// Drift/rank acceptance gates handed to the secular updater.
+    delta_opts: UpdateOptions,
+    /// Bound on consecutive incremental refreshes before a forced exact
+    /// republish (0 = incremental absorption disabled).
+    max_delta_depth: u64,
     evictions: AtomicU64,
     rebuilds: AtomicU64,
     publishes: AtomicU64,
     quarantines: AtomicU64,
     rollbacks: AtomicU64,
+    delta_publishes: AtomicU64,
+    delta_incremental: AtomicU64,
+    delta_exact: AtomicU64,
+}
+
+/// What a [`KernelRegistry::publish_delta`] call did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeltaOutcome {
+    /// The freshly installed generation.
+    pub generation: u64,
+    /// `true` when the resident eigendecomposition was refreshed in place
+    /// by the rank-r secular update; `false` when the delta was absorbed
+    /// by an exact rebuild (structural change, depth budget exhausted,
+    /// updater refusal) or recorded kernel-only on an evicted tenant.
+    pub incremental: bool,
+    /// Incremental refreshes stacked since the last exact build, *after*
+    /// this publish (0 right after an exact path).
+    pub depth: u64,
 }
 
 impl KernelRegistry {
@@ -433,12 +526,30 @@ impl KernelRegistry {
             swap_scratch: Mutex::new(SampleScratch::new()),
             marginal_scratch: Mutex::new(MarginalScratch::new()),
             max_history,
+            delta_scratch: Mutex::new(EigenUpdateScratch::new()),
+            delta_opts: UpdateOptions::default(),
+            max_delta_depth: DEFAULT_MAX_DELTA_DEPTH,
             evictions: AtomicU64::new(0),
             rebuilds: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             quarantines: AtomicU64::new(0),
             rollbacks: AtomicU64::new(0),
+            delta_publishes: AtomicU64::new(0),
+            delta_incremental: AtomicU64::new(0),
+            delta_exact: AtomicU64::new(0),
         }
+    }
+
+    /// Override the forced-republish depth bound (pre-sharing
+    /// configuration; `0` disables incremental absorption so every delta
+    /// republishes exactly).
+    pub fn set_max_delta_depth(&mut self, depth: u64) {
+        self.max_delta_depth = depth;
+    }
+
+    /// Configured bound on consecutive incremental refreshes.
+    pub fn max_delta_depth(&self) -> u64 {
+        self.max_delta_depth
     }
 
     /// Register a new tenant with its initial kernel (published as
@@ -477,6 +588,7 @@ impl KernelRegistry {
                 generation: 1,
                 epoch: Some(epoch),
                 history: VecDeque::new(),
+                delta_depth: 0,
             }),
             last_touch: AtomicU64::new(touch),
             in_flight: AtomicUsize::new(0),
@@ -484,6 +596,8 @@ impl KernelRegistry {
             metrics: TenantMetrics::new(),
             quarantined: AtomicU64::new(0),
             last_quarantine: Mutex::new(None),
+            deltas: AtomicU64::new(0),
+            delta_refreshes: AtomicU64::new(0),
             breaker_open: AtomicBool::new(false),
             breaker_forced: AtomicBool::new(false),
             breaker_failures: AtomicU32::new(0),
@@ -575,6 +689,10 @@ impl KernelRegistry {
                     Some(Arc::clone(e))
                 } else {
                     slot.epoch = Some(Arc::clone(&epoch));
+                    // The rebuild eigendecomposed the stored kernel
+                    // exactly — any deltas pending since eviction (and
+                    // their would-be drift) are collapsed into it.
+                    slot.delta_depth = 0;
                     self.rebuilds.fetch_add(1, Ordering::Relaxed);
                     Some(epoch)
                 }
@@ -651,6 +769,240 @@ impl KernelRegistry {
         Ok(new_gen)
     }
 
+    /// Publish a [`KernelDelta`] to a tenant — the incremental churn
+    /// path. The exact post-delta kernel is always computed and screened
+    /// first (ground truth; a malformed or poisoned delta is quarantined
+    /// like a poisoned full publish, leaving the tenant untouched). Then,
+    /// cheapest-first:
+    ///
+    /// 1. **Evicted tenant** — record the new kernel and bump the
+    ///    generation; no eigenwork at all. The next acquire's lazy
+    ///    rebuild collapses every pending delta into one exact
+    ///    eigendecomposition.
+    /// 2. **Incremental refresh** — when the delta lowers to a rank-r
+    ///    factor perturbation ([`KernelDelta::as_perturbation`]), the
+    ///    `delta_depth` budget has room, and the secular updater accepts
+    ///    it within drift tolerance, the resident epoch's cached
+    ///    eigendecomposition is refreshed in place (`O(r·N₁²)` vs
+    ///    `O(N₁³)`) and the product spectrum recombined in `O(N)`.
+    /// 3. **Exact republish** — structural deltas (add/remove), an
+    ///    exhausted depth budget, or an updater refusal rebuild the epoch
+    ///    exactly through the same validated path as
+    ///    [`KernelRegistry::publish`], resetting `delta_depth` (and any
+    ///    accumulated drift) to zero.
+    ///
+    /// The install refuses (with `Error::Rejected`) if another publish
+    /// landed between the snapshot and the swap — the delta was derived
+    /// against that exact generation, so the caller must re-derive.
+    pub fn publish_delta(&self, id: TenantId, delta: &KernelDelta) -> Result<DeltaOutcome> {
+        let entry = self.entry(id)?;
+        entry.last_touch.store(self.tick(), Ordering::Relaxed);
+        // Snapshot the generation the delta applies to.
+        let (kernel, epoch, generation, depth) = {
+            let slot = read_clean(&entry.slot);
+            (slot.kernel.clone(), slot.epoch.clone(), slot.generation, slot.delta_depth)
+        };
+        // Ground truth: the delta's exact effect on the factored kernel,
+        // through the same non-finite screen as a full publish.
+        let new_kernel = delta
+            .validate(&kernel)
+            .and_then(|()| delta.apply(&kernel))
+            .and_then(|k| {
+                Self::validate_candidate(&k)?;
+                Ok(k)
+            })
+            .map_err(|e| self.quarantine(&entry, e))?;
+
+        // Evicted tenant: kernel-only install, zero eigenwork.
+        let Some(epoch) = epoch else {
+            let new_gen = self.install_delta(&entry, generation, &new_kernel, None, 0)?;
+            self.publishes.fetch_add(1, Ordering::Relaxed);
+            self.delta_publishes.fetch_add(1, Ordering::Relaxed);
+            self.delta_exact.fetch_add(1, Ordering::Relaxed);
+            entry.deltas.fetch_add(1, Ordering::Relaxed);
+            return Ok(DeltaOutcome { generation: new_gen, incremental: false, depth: 0 });
+        };
+
+        // Incremental: rank-r secular refresh of the resident spectrum.
+        let mut refreshed: Option<Sampler> = None;
+        if depth < self.max_delta_depth {
+            if let Some((side, rhos, vs)) = delta.as_perturbation(&kernel).ok().flatten()
+            {
+                refreshed = self.refresh_epoch(&epoch, side, &rhos, &vs);
+            }
+        }
+        let incremental = refreshed.is_some();
+        let (sampler, marginal_diag) = match refreshed {
+            Some(sampler) => {
+                let diag = self.marginal_table(&sampler);
+                (sampler, diag)
+            }
+            // Exact republish: same validated gauntlet as a full publish
+            // of the post-delta kernel. A candidate the validator rejects
+            // here (e.g. a perturbation that drove the kernel indefinite)
+            // is quarantined and the tenant keeps serving untouched.
+            None => self
+                .validated_parts(&new_kernel)
+                .map_err(|e| self.quarantine(&entry, e))?,
+        };
+        let new_depth = if incremental { depth + 1 } else { 0 };
+        let new_gen = self.install_delta(
+            &entry,
+            generation,
+            &new_kernel,
+            Some((sampler, marginal_diag)),
+            new_depth,
+        )?;
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        self.delta_publishes.fetch_add(1, Ordering::Relaxed);
+        entry.deltas.fetch_add(1, Ordering::Relaxed);
+        if incremental {
+            self.delta_incremental.fetch_add(1, Ordering::Relaxed);
+            entry.delta_refreshes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.delta_exact.fetch_add(1, Ordering::Relaxed);
+        }
+        self.enforce_budget(id);
+        Ok(DeltaOutcome { generation: new_gen, incremental, depth: new_depth })
+    }
+
+    /// Try to absorb a rank-r perturbation of factor `side` into the
+    /// epoch's cached eigendecomposition via the secular update. Returns
+    /// `None` (→ exact fallback) when the updater refuses or the
+    /// refreshed spectrum fails the serving sanity check.
+    fn refresh_epoch(
+        &self,
+        epoch: &SamplerEpoch,
+        side: usize,
+        rhos: &[f64],
+        vs: &Matrix,
+    ) -> Option<Sampler> {
+        let eigen = epoch.sampler.eigen();
+        // The perturbed factor's spectrum and eigenvector matrix.
+        let (values, vectors): (&[f64], &Matrix) = match (&eigen.vectors, side) {
+            (EigenVectors::Dense(p), 0) => (eigen.values.as_slice(), p),
+            (EigenVectors::Kron2 { p1, .. }, 0) => (eigen.factor_values.first()?.as_slice(), p1),
+            (EigenVectors::Kron2 { p2, .. }, 1) => (eigen.factor_values.get(1)?.as_slice(), p2),
+            (EigenVectors::Kron3 { p1, .. }, 0) => (eigen.factor_values.first()?.as_slice(), p1),
+            (EigenVectors::Kron3 { p2, .. }, 1) => (eigen.factor_values.get(1)?.as_slice(), p2),
+            (EigenVectors::Kron3 { p3, .. }, 2) => (eigen.factor_values.get(2)?.as_slice(), p3),
+            _ => return None,
+        };
+        let refresh = |sc: &mut EigenUpdateScratch| -> Option<KernelEigen> {
+            match eigen_update::refresh_into(values, vectors, rhos, vs, &self.delta_opts, sc)
+            {
+                UpdateOutcome::Applied { .. } => {
+                    Some(Self::recombined_eigen(eigen, side, &sc.values, &sc.vectors))
+                }
+                UpdateOutcome::NeedExact { .. } => None,
+            }
+        };
+        // Same try-lock-or-fresh discipline as the swap scratch: a
+        // concurrent delta on another tenant builds with a fresh local
+        // scratch instead of queueing behind this one's refresh.
+        let new_eigen = match self.delta_scratch.try_lock() {
+            Ok(mut sc) => refresh(&mut sc),
+            Err(TryLockError::Poisoned(p)) => refresh(&mut p.into_inner()),
+            Err(TryLockError::WouldBlock) => refresh(&mut EigenUpdateScratch::new()),
+        }?;
+        let sampler = Sampler::from_eigen(new_eigen);
+        Self::validate_spectrum(&sampler).ok()?;
+        Some(sampler)
+    }
+
+    /// Rebuild a [`KernelEigen`] with factor `side`'s eigenpairs replaced
+    /// by the refreshed `(values, vectors)`, recombining the product
+    /// eigenvalue grid from the per-factor spectra in `O(N)`.
+    fn recombined_eigen(
+        eigen: &KernelEigen,
+        side: usize,
+        values: &[f64],
+        vectors: &Matrix,
+    ) -> KernelEigen {
+        match &eigen.vectors {
+            EigenVectors::Dense(_) => KernelEigen {
+                values: values.to_vec(),
+                factor_values: Vec::new(),
+                vectors: EigenVectors::Dense(vectors.clone()),
+            },
+            EigenVectors::Kron2 { p1, p2 } => {
+                let mut fv = eigen.factor_values.clone();
+                fv[side] = values.to_vec();
+                let product = kron::kron_eigenvalues(&fv[0], &fv[1]);
+                let (p1, p2) = if side == 0 {
+                    (vectors.clone(), p2.clone())
+                } else {
+                    (p1.clone(), vectors.clone())
+                };
+                KernelEigen {
+                    values: product,
+                    factor_values: fv,
+                    vectors: EigenVectors::Kron2 { p1, p2 },
+                }
+            }
+            EigenVectors::Kron3 { p1, p2, p3 } => {
+                let mut fv = eigen.factor_values.clone();
+                fv[side] = values.to_vec();
+                let inner = kron::kron_eigenvalues(&fv[1], &fv[2]);
+                let product = kron::kron_eigenvalues(&fv[0], &inner);
+                let mut ps = [p1.clone(), p2.clone(), p3.clone()];
+                ps[side] = vectors.clone();
+                let [p1, p2, p3] = ps;
+                KernelEigen {
+                    values: product,
+                    factor_values: fv,
+                    vectors: EigenVectors::Kron3 { p1, p2, p3 },
+                }
+            }
+        }
+    }
+
+    /// [`KernelRegistry::install`] for the delta path: refuses if another
+    /// publish landed since `expect` was snapshotted (the delta's exact
+    /// apply and its perturbation lowering were both derived against that
+    /// generation's kernel), records the post-install `delta_depth`, and
+    /// installs kernel-only (`parts = None`) for an evicted tenant.
+    fn install_delta(
+        &self,
+        entry: &TenantEntry,
+        expect: u64,
+        kernel: &Kernel,
+        parts: Option<(Sampler, Arc<Vec<f64>>)>,
+        depth: u64,
+    ) -> Result<u64> {
+        let mut slot = write_clean(&entry.slot);
+        if slot.generation != expect {
+            return Err(Error::Rejected(format!(
+                "tenant '{}': generation advanced {} → {} while the delta was being \
+                 absorbed; re-derive the delta against the current kernel",
+                entry.name, expect, slot.generation
+            )));
+        }
+        if self.max_history > 0 {
+            let outgoing =
+                EpochRecord { generation: slot.generation, kernel: slot.kernel.clone() };
+            slot.history.push_back(outgoing);
+            while slot.history.len() > self.max_history {
+                slot.history.pop_front();
+            }
+        }
+        slot.generation += 1;
+        slot.kernel = kernel.clone();
+        slot.n = kernel.n();
+        slot.delta_depth = depth;
+        slot.epoch = parts.map(|(sampler, marginal_diag)| {
+            Arc::new(SamplerEpoch {
+                tenant: entry.id,
+                name: entry.name.clone(),
+                generation: slot.generation,
+                kernel: kernel.clone(),
+                sampler,
+                marginal_diag,
+            })
+        });
+        Ok(slot.generation)
+    }
+
     /// Pre-eigensolve candidate screen: the non-finite entry scan. Public
     /// so callers (and the publish-latency bench) can price the screen
     /// separately from the eigensolve it guards.
@@ -719,6 +1071,9 @@ impl KernelRegistry {
         slot.generation += 1;
         slot.kernel = kernel.clone();
         slot.n = kernel.n();
+        // A full publish installs an exactly-built spectrum: accumulated
+        // incremental drift is gone.
+        slot.delta_depth = 0;
         slot.epoch = Some(Arc::new(SamplerEpoch {
             tenant: entry.id,
             name: entry.name.clone(),
@@ -772,6 +1127,22 @@ impl KernelRegistry {
         self.rollbacks.load(Ordering::Relaxed)
     }
 
+    /// Delta publishes applied so far (all tenants, all paths).
+    pub fn delta_publishes(&self) -> u64 {
+        self.delta_publishes.load(Ordering::Relaxed)
+    }
+
+    /// Delta publishes absorbed by the incremental secular refresh.
+    pub fn delta_incremental(&self) -> u64 {
+        self.delta_incremental.load(Ordering::Relaxed)
+    }
+
+    /// Delta publishes that took an exact path instead (structural
+    /// change, depth budget, updater refusal, or an evicted epoch).
+    pub fn delta_exact(&self) -> u64 {
+        self.delta_exact.load(Ordering::Relaxed)
+    }
+
     /// Configured LRU bound (0 = unbounded).
     pub fn max_resident_epochs(&self) -> usize {
         self.max_resident
@@ -793,7 +1164,7 @@ impl KernelRegistry {
         };
         format!(
             "tenants={} resident_epochs={}/{} evictions={} rebuilds={} publishes={} \
-             quarantined={} rollbacks={}",
+             quarantined={} rollbacks={} deltas={} delta_incremental={} delta_exact={}",
             self.len(),
             self.resident_epochs(),
             bound,
@@ -802,6 +1173,9 @@ impl KernelRegistry {
             self.publishes(),
             self.quarantines(),
             self.rollbacks(),
+            self.delta_publishes(),
+            self.delta_incremental(),
+            self.delta_exact(),
         )
     }
 
@@ -831,9 +1205,14 @@ impl KernelRegistry {
                 Sampler::new_with_scratch(kernel, &mut SampleScratch::new())
             }
         }?;
-        // O(N·(N₁+N₂)) factored diagonal — cheap next to the
-        // eigendecomposition it rides on, cached for the epoch's lifetime
-        // and built through the reused writer-side scratch.
+        Ok((sampler, self.marginal_table(&sampler)))
+    }
+
+    /// O(N·(N₁+N₂)) factored marginal diagonal for a freshly built
+    /// sampler — cheap next to the eigendecomposition (or secular
+    /// refresh) it rides on, cached for the epoch's lifetime and built
+    /// through the reused writer-side scratch.
+    fn marginal_table(&self, sampler: &Sampler) -> Arc<Vec<f64>> {
         let mut diag = Vec::new();
         match self.marginal_scratch.try_lock() {
             Ok(mut scratch) => {
@@ -846,7 +1225,7 @@ impl KernelRegistry {
                 .eigen()
                 .inclusion_probabilities_into(&mut diag, &mut MarginalScratch::new()),
         }
-        Ok((sampler, Arc::new(diag)))
+        Arc::new(diag)
     }
 
     /// Evict least-recently-touched epochs until the resident count is
@@ -1277,5 +1656,201 @@ mod tests {
         assert_eq!(e.breaker_recoveries(), 0);
         e.force_degraded(false);
         assert_eq!(e.breaker_state(), "closed");
+    }
+
+    // --- delta publishing ------------------------------------------------
+
+    /// A small rank-r perturbation of factor `side` (of size `n`), scaled
+    /// so the perturbed kernel stays comfortably PD.
+    fn perturb_delta(side: usize, n: usize, rank: usize, seed: u64, scale: f64) -> KernelDelta {
+        let mut rng = Rng::new(seed);
+        let vectors = rng.uniform_matrix(n, rank, -scale, scale);
+        let rhos = (0..rank).map(|k| if k % 2 == 0 { 1.0 } else { -0.5 }).collect();
+        KernelDelta::Perturb { side, rhos, vectors }
+    }
+
+    fn assert_factors_bitwise_eq(got: &Kernel, want: &Kernel) {
+        match (got, want) {
+            (Kernel::Kron2(a1, b1), Kernel::Kron2(a2, b2)) => {
+                assert_eq!(a1.as_slice(), a2.as_slice());
+                assert_eq!(b1.as_slice(), b2.as_slice());
+            }
+            _ => panic!("kernel structure changed"),
+        }
+    }
+
+    #[test]
+    fn delta_publish_refreshes_incrementally_and_tracks_exact_recompute() {
+        let reg = KernelRegistry::new(0);
+        let k = test_kernel(8, 5, 200);
+        let t = reg.add_tenant("t", &k).unwrap();
+        let delta = perturb_delta(0, 8, 2, 201, 0.05);
+        let out = reg.publish_delta(t, &delta).unwrap();
+        assert_eq!(out, DeltaOutcome { generation: 2, incremental: true, depth: 1 });
+
+        // The installed epoch's kernel is the *exact* post-delta kernel
+        // (deltas never let the serving kernel drift, only its cached
+        // spectrum within tolerance).
+        let want_kernel = delta.apply(&k).unwrap();
+        let epoch = reg.acquire(t).unwrap();
+        assert_eq!(epoch.generation, 2);
+        assert_factors_bitwise_eq(&epoch.kernel, &want_kernel);
+
+        // Spectrum and marginals agree with a full recompute within the
+        // documented drift tolerance (per-pass gate 1e-9; one pass here
+        // typically lands near 1e-12).
+        let exact = want_kernel.eigen().unwrap();
+        for (a, b) in epoch.sampler.eigen().values.iter().zip(&exact.values) {
+            assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        let want = exact.inclusion_probabilities();
+        assert_eq!(epoch.inclusion_probabilities().len(), want.len());
+        for (a, b) in epoch.inclusion_probabilities().iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+
+        let entry = reg.entry(t).unwrap();
+        assert_eq!((entry.deltas_published(), entry.delta_refreshes()), (1, 1));
+        assert_eq!(entry.delta_depth(), 1);
+        assert_eq!((reg.delta_publishes(), reg.delta_incremental(), reg.delta_exact()), (1, 1, 0));
+        assert!(reg.report().contains("deltas=1 delta_incremental=1 delta_exact=0"));
+        // A delta publish is a publication: rollback to gen 1 works.
+        assert_eq!(entry.rollback_generations(), vec![1]);
+        reg.rollback(t, 1).unwrap();
+        assert_factors_bitwise_eq(&reg.acquire(t).unwrap().kernel, &k);
+    }
+
+    #[test]
+    fn depth_budget_forces_exact_republish_restoring_bitwise_agreement() {
+        let mut reg = KernelRegistry::new(0);
+        reg.set_max_delta_depth(2);
+        assert_eq!(reg.max_delta_depth(), 2);
+        let k = test_kernel(5, 4, 210);
+        let t = reg.add_tenant("t", &k).unwrap();
+        let mut cur = k;
+        for step in 0..3u64 {
+            let side = (step % 2) as usize;
+            let delta = perturb_delta(side, if side == 0 { 5 } else { 4 }, 1, 211 + step, 0.03);
+            let out = reg.publish_delta(t, &delta).unwrap();
+            cur = delta.apply(&cur).unwrap();
+            assert_eq!(out.generation, 2 + step);
+            if step < 2 {
+                assert!(out.incremental, "step {step} should refresh in place");
+                assert_eq!(out.depth, step + 1);
+            } else {
+                assert!(!out.incremental, "depth budget must force an exact republish");
+                assert_eq!(out.depth, 0);
+            }
+        }
+        // The forced republish eigendecomposed the accumulated kernel
+        // exactly: **bitwise** agreement with an independent full build,
+        // no residual incremental drift.
+        let epoch = reg.acquire(t).unwrap();
+        let exact = cur.eigen().unwrap();
+        assert_eq!(epoch.sampler.eigen().values, exact.values);
+        assert_eq!((reg.delta_incremental(), reg.delta_exact()), (2, 1));
+        assert_eq!(reg.entry(t).unwrap().delta_depth(), 0);
+        // A full publish also resets the depth.
+        reg.publish_delta(t, &perturb_delta(0, 5, 1, 219, 0.03)).unwrap();
+        assert_eq!(reg.entry(t).unwrap().delta_depth(), 1);
+        reg.publish(t, &test_kernel(5, 4, 218)).unwrap();
+        assert_eq!(reg.entry(t).unwrap().delta_depth(), 0);
+    }
+
+    #[test]
+    fn deltas_to_evicted_tenants_collapse_on_lazy_rebuild() {
+        let reg = KernelRegistry::new(1);
+        let ka = test_kernel(3, 4, 220);
+        let a = reg.add_tenant("a", &ka).unwrap();
+        reg.add_tenant("b", &test_kernel(2, 2, 221)).unwrap();
+        assert!(!reg.entry(a).unwrap().resident(), "bound 1: creating b evicted a");
+
+        // Two deltas land while a is cold: kernel-only installs, no
+        // eigenwork, epoch stays evicted.
+        let d1 = perturb_delta(0, 3, 1, 222, 0.05);
+        let out = reg.publish_delta(a, &d1).unwrap();
+        assert_eq!(out, DeltaOutcome { generation: 2, incremental: false, depth: 0 });
+        let k1 = d1.apply(&ka).unwrap();
+        let d2 = KernelDelta::RetireItem { side: 1, index: 2, damping: 0.5 };
+        let out = reg.publish_delta(a, &d2).unwrap();
+        assert_eq!((out.generation, out.incremental), (3, false));
+        let k2 = d2.apply(&k1).unwrap();
+        assert!(!reg.entry(a).unwrap().resident(), "cold deltas must not resurrect the epoch");
+        let rebuilds = reg.rebuilds();
+
+        // One lazy rebuild collapses both pending deltas exactly.
+        let epoch = reg.acquire(a).unwrap();
+        assert_eq!(epoch.generation, 3);
+        assert_eq!(reg.rebuilds(), rebuilds + 1);
+        assert_factors_bitwise_eq(&epoch.kernel, &k2);
+        let exact = k2.eigen().unwrap();
+        assert_eq!(epoch.sampler.eigen().values, exact.values);
+        assert_eq!(reg.entry(a).unwrap().delta_depth(), 0);
+        assert_eq!((reg.delta_publishes(), reg.delta_incremental(), reg.delta_exact()), (2, 0, 2));
+    }
+
+    #[test]
+    fn poisoned_and_indefinite_deltas_are_quarantined_epoch_unchanged() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(3, 3, 230)).unwrap();
+        let entry = reg.entry(t).unwrap();
+        let before = reg.acquire(t).unwrap();
+
+        // Non-finite perturbation vector → rejected by the delta screen.
+        let mut vs = Matrix::from_fn(3, 1, |_, _| 0.1);
+        vs.set(1, 0, f64::NAN);
+        let bad = KernelDelta::Perturb { side: 0, rhos: vec![1.0], vectors: vs };
+        let err = reg.publish_delta(t, &bad).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+        assert_eq!(entry.quarantined_candidates(), 1);
+        assert!(entry.last_quarantine().is_some());
+
+        // A perturbation that drives the kernel indefinite: the secular
+        // refresh refuses (or fails the spectrum check), and the exact
+        // fallback's validated rebuild quarantines the candidate.
+        let dir = Matrix::from_fn(3, 1, |i, _| if i == 0 { 1.0 } else { 0.2 });
+        let bad2 = KernelDelta::Perturb { side: 0, rhos: vec![-100.0], vectors: dir };
+        let err = reg.publish_delta(t, &bad2).unwrap_err();
+        assert!(matches!(err, Error::Numerical(_)), "got {err:?}");
+        assert!(err.to_string().contains("indefinite"), "{err}");
+        assert_eq!(entry.quarantined_candidates(), 2);
+
+        // The tenant is untouched: same generation, same epoch Arc, no
+        // delta counted as published.
+        assert_eq!(entry.generation(), 1);
+        assert!(Arc::ptr_eq(&before, &reg.acquire(t).unwrap()));
+        assert_eq!((entry.deltas_published(), reg.delta_publishes()), (0, 0));
+        assert_eq!(reg.quarantines(), 2);
+    }
+
+    #[test]
+    fn structural_deltas_resize_and_retire_absorbs_incrementally() {
+        let reg = KernelRegistry::new(0);
+        let t = reg.add_tenant("t", &test_kernel(2, 8, 240)).unwrap();
+        assert_eq!(reg.acquire(t).unwrap().sampler.n(), 16);
+
+        // Add an item to factor 1: N = 2·9 = 18. Structural → exact.
+        let mut rng = Rng::new(241);
+        let row: Vec<f64> = (0..8).map(|_| rng.uniform_range(-0.02, 0.02)).collect();
+        let add = KernelDelta::AddItem { side: 1, row, diag: 0.9 };
+        let out = reg.publish_delta(t, &add).unwrap();
+        assert!(!out.incremental);
+        let epoch = reg.acquire(t).unwrap();
+        assert_eq!((epoch.sampler.n(), epoch.inclusion_probabilities().len()), (18, 18));
+        assert_eq!(reg.entry(t).unwrap().n(), 18);
+
+        // Retiring an item is a rank-2 perturbation → incremental.
+        let retire = KernelDelta::RetireItem { side: 1, index: 1, damping: 0.3 };
+        let out = reg.publish_delta(t, &retire).unwrap();
+        assert!(out.incremental, "retire should lower to a rank-2 refresh");
+        assert_eq!(out.depth, 1);
+
+        // Removing the added item restores N = 16; exact, depth resets.
+        let rm = KernelDelta::RemoveItem { side: 1, index: 8 };
+        let out = reg.publish_delta(t, &rm).unwrap();
+        assert!(!out.incremental);
+        assert_eq!((out.depth, reg.acquire(t).unwrap().sampler.n()), (0, 16));
+        assert_eq!(reg.delta_publishes(), 3);
+        assert!(reg.report().contains("deltas=3 delta_incremental=1 delta_exact=2"));
     }
 }

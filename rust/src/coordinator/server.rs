@@ -58,12 +58,14 @@ use crate::config::{FallbackPolicy, ServiceConfig};
 use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pending};
 use crate::coordinator::lock_clean;
 use crate::coordinator::metrics::ServiceMetrics;
-use crate::coordinator::registry::{KernelRegistry, ModePolicy, TenantEntry, TenantId};
+use crate::coordinator::registry::{
+    DeltaOutcome, KernelRegistry, ModePolicy, TenantEntry, TenantId,
+};
 use crate::coordinator::router::WorkerLoad;
 use crate::dpp::map::{map_slate_into, MapScratch};
 use crate::dpp::{
-    ConditionScratch, ConditionedSampler, Constraint, Kernel, LowRankBackend, McmcBackend,
-    SampleMode, SampleScratch, Sampler, SamplerBackend,
+    ConditionScratch, ConditionedSampler, Constraint, Kernel, KernelDelta, LowRankBackend,
+    McmcBackend, SampleMode, SampleScratch, Sampler, SamplerBackend,
 };
 use crate::error::{Error, ErrorKind, Result};
 use crate::rng::Rng;
@@ -659,6 +661,56 @@ impl DppService {
         self.shared.registry.rollback(tenant, generation)
     }
 
+    /// Publish a [`KernelDelta`] to a live tenant — the incremental churn
+    /// path. The delta's exact post-kernel is validated like any publish
+    /// (poisoned deltas are quarantined, the tenant keeps serving); when
+    /// the delta lowers to a rank-r factor perturbation the resident
+    /// eigendecomposition is refreshed in place instead of rebuilt.
+    /// In-flight draws finish on their old epoch, exactly as with
+    /// [`DppService::publish`].
+    pub fn publish_delta(&self, tenant: TenantId, delta: &KernelDelta) -> Result<DeltaOutcome> {
+        self.shared.registry.publish_delta(tenant, delta)
+    }
+
+    /// Append a new item to factor `side` of `tenant`'s kernel:
+    /// `row` holds its similarities to the factor's existing items,
+    /// `diag` its (positive) self-similarity. Structural — absorbed by an
+    /// exact republish; the ground set grows immediately.
+    pub fn add_item(
+        &self,
+        tenant: TenantId,
+        side: usize,
+        row: Vec<f64>,
+        diag: f64,
+    ) -> Result<DeltaOutcome> {
+        self.publish_delta(tenant, &KernelDelta::AddItem { side, row, diag })
+    }
+
+    /// Delete item `index` from factor `side` of `tenant`'s kernel
+    /// (structural; the ground set shrinks immediately).
+    pub fn remove_item(
+        &self,
+        tenant: TenantId,
+        side: usize,
+        index: usize,
+    ) -> Result<DeltaOutcome> {
+        self.publish_delta(tenant, &KernelDelta::RemoveItem { side, index })
+    }
+
+    /// Soft-retire item `index` of factor `side`: damp its similarity
+    /// row/column by `damping ∈ [0, 1]` (0 silences it entirely) without
+    /// changing the ground set — a rank-2 perturbation the registry
+    /// absorbs incrementally while the item fades from slates.
+    pub fn retire_item(
+        &self,
+        tenant: TenantId,
+        side: usize,
+        index: usize,
+        damping: f64,
+    ) -> Result<DeltaOutcome> {
+        self.publish_delta(tenant, &KernelDelta::RetireItem { side, index, damping })
+    }
+
     /// Pin (`on = true`) or release (`on = false`) `tenant`'s circuit
     /// breaker: a pinned tenant serves exact-mode requests through the
     /// degraded fallback chain unconditionally — no half-open probes, no
@@ -681,10 +733,13 @@ impl DppService {
         out.push_str(&self.shared.registry.report());
         for entry in self.shared.registry.entries() {
             out.push_str(&format!(
-                "\n  tenant {} (gen {}): {}",
+                "\n  tenant {} (gen {}): {} churn[deltas={} incremental={} depth={}]",
                 entry.name(),
                 entry.generation(),
-                entry.metrics().summary()
+                entry.metrics().summary(),
+                entry.deltas_published(),
+                entry.delta_refreshes(),
+                entry.delta_depth(),
             ));
         }
         out
@@ -1647,6 +1702,42 @@ mod tests {
         assert!(y.iter().all(|&i| i < 12));
         let y5 = svc.sample(5).unwrap();
         assert_eq!(y5.len(), 5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn churn_endpoints_resize_retire_and_report() {
+        let svc = DppService::start(&test_kernel(2, 8, 60), &small_cfg(), 61).unwrap();
+        let t = TenantId::DEFAULT;
+        assert_eq!(svc.marginals(t).unwrap().len(), 16);
+
+        // Live add: the ground set grows and requests keep serving.
+        let mut rng = Rng::new(62);
+        let row: Vec<f64> = (0..8).map(|_| rng.uniform_range(-0.02, 0.02)).collect();
+        let out = svc.add_item(t, 1, row, 0.9).unwrap();
+        assert!(!out.incremental, "add is structural");
+        assert_eq!(svc.marginals(t).unwrap().len(), 18);
+        assert_eq!(svc.sample(3).unwrap().len(), 3);
+
+        // Soft retire: absorbed incrementally; the item's inclusion
+        // probability drops while the ground set is unchanged.
+        let before = svc.marginals(t).unwrap();
+        let out = svc.retire_item(t, 1, 1, 0.2).unwrap();
+        assert!(out.incremental, "retire should refresh the spectrum in place");
+        let after = svc.marginals(t).unwrap();
+        assert_eq!(after.len(), 18);
+        // Side-1 index 1 is item t = 0·9 + 1.
+        assert!(after[1] < before[1], "{} !< {}", after[1], before[1]);
+
+        // Remove the appended item: back to N = 16, still serving.
+        let out = svc.remove_item(t, 1, 8).unwrap();
+        assert!(!out.incremental, "remove is structural");
+        assert_eq!(svc.marginals(t).unwrap().len(), 16);
+        assert_eq!(svc.sample(2).unwrap().len(), 2);
+
+        let report = svc.report();
+        assert!(report.contains("deltas=3 delta_incremental=1 delta_exact=2"), "{report}");
+        assert!(report.contains("churn[deltas=3 incremental=1 depth=0]"), "{report}");
         svc.shutdown();
     }
 

@@ -1,6 +1,9 @@
 //! Service workload generation for the coordinator benchmarks: Poisson
 //! request arrivals with configurable subset-size distribution, mirroring
-//! a diverse-recommendation serving trace.
+//! a diverse-recommendation serving trace — plus a deterministic **churn
+//! plan** interleaving catalog mutations (item add/remove/retire, low-rank
+//! feedback perturbations) with the request stream, the workload shape
+//! behind the delta-publish latency sweep.
 
 use crate::rng::Rng;
 use std::time::Duration;
@@ -47,6 +50,62 @@ pub fn generate(spec: &WorkloadSpec, rng: &mut Rng) -> Vec<Request> {
     out
 }
 
+/// One catalog mutation in a churn trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnOp {
+    /// Low-rank feedback perturbation of one sub-kernel (the shape a
+    /// `KrkStochastic` minibatch step streams).
+    Perturb,
+    /// Append one item to a sub-kernel's catalog side.
+    Add,
+    /// Damp one item's interactions toward exclusion (soft delete).
+    Retire,
+    /// Hard-delete one item from a sub-kernel's catalog side.
+    Remove,
+}
+
+/// Churn shape: how often the catalog mutates under the request stream.
+#[derive(Clone, Debug)]
+pub struct ChurnSpec {
+    /// One mutation every `every` requests (0 disables churn).
+    pub every: usize,
+    /// Rank of `Perturb` events (the `r` of the rank-r delta).
+    pub rank: usize,
+    /// Entry magnitude of `Perturb` events.
+    pub scale: f64,
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        ChurnSpec { every: 50, rank: 2, scale: 0.02 }
+    }
+}
+
+/// One scheduled mutation: apply `op` just before serving request
+/// `at_index`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub at_index: usize,
+    pub op: ChurnOp,
+}
+
+/// Deterministic churn plan over a `requests`-long trace: one event every
+/// `spec.every` requests, cycling Perturb → Add → Retire → Perturb →
+/// Remove so adds and removes balance and the ground-set size stays
+/// bounded. The caller materializes each event into a concrete
+/// `KernelDelta` against the tenant's current factor shapes (this module
+/// stays shape-agnostic).
+pub fn churn_plan(spec: &ChurnSpec, requests: usize) -> Vec<ChurnEvent> {
+    const CYCLE: [ChurnOp; 5] =
+        [ChurnOp::Perturb, ChurnOp::Add, ChurnOp::Retire, ChurnOp::Perturb, ChurnOp::Remove];
+    if spec.every == 0 {
+        return Vec::new();
+    }
+    (0..requests / spec.every)
+        .map(|i| ChurnEvent { at_index: (i + 1) * spec.every - 1, op: CYCLE[i % CYCLE.len()] })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +131,29 @@ mod tests {
         let spec = WorkloadSpec { rate_hz: 10.0, count: 10, k_lo: 0, k_hi: 0 };
         let trace = generate(&spec, &mut rng);
         assert!(trace.iter().all(|r| r.k == 0));
+    }
+
+    #[test]
+    fn churn_plan_cycles_and_balances_size() {
+        let spec = ChurnSpec { every: 10, rank: 2, scale: 0.02 };
+        let plan = churn_plan(&spec, 100);
+        assert_eq!(plan.len(), 10);
+        // Events land inside the trace, strictly increasing.
+        assert!(plan.iter().all(|e| e.at_index < 100));
+        for w in plan.windows(2) {
+            assert!(w[1].at_index > w[0].at_index);
+        }
+        // One full cycle adds exactly as many items as it removes.
+        let adds = plan.iter().filter(|e| e.op == ChurnOp::Add).count();
+        let removes = plan.iter().filter(|e| e.op == ChurnOp::Remove).count();
+        assert_eq!(adds, removes);
+        assert_eq!(plan[0].op, ChurnOp::Perturb);
+        assert_eq!(plan[1].op, ChurnOp::Add);
+    }
+
+    #[test]
+    fn churn_disabled_by_zero_every() {
+        let spec = ChurnSpec { every: 0, ..ChurnSpec::default() };
+        assert!(churn_plan(&spec, 1000).is_empty());
     }
 }

@@ -369,6 +369,7 @@ impl LowRankBackend {
         let inner = if constraint.is_empty() {
             let truncated = KernelEigen {
                 values: values.clone(),
+                factor_values: Vec::new(),
                 vectors: EigenVectors::Dense(vectors.clone()),
             };
             LowRankInner::Plain(Sampler::from_eigen(truncated))

@@ -249,7 +249,11 @@ impl ConditionedSampler {
         let m = rest.len();
         let eigen = if m == 0 {
             // Everything is pinned or banned; the only valid sample is A.
-            KernelEigen { values: Vec::new(), vectors: EigenVectors::Dense(Matrix::zeros(0, 0)) }
+            KernelEigen {
+                values: Vec::new(),
+                factor_values: Vec::new(),
+                vectors: EigenVectors::Dense(Matrix::zeros(0, 0)),
+            }
         } else {
             kernel.principal_submatrix_into(&rest, &mut scratch.lc);
             if !constraint.include.is_empty() {
@@ -280,7 +284,11 @@ impl ConditionedSampler {
                 scratch.lc.symmetrize_mut();
             }
             let e = SymEigen::new_with(&scratch.lc, &mut scratch.eigen)?;
-            KernelEigen { values: e.values, vectors: EigenVectors::Dense(e.vectors) }
+            KernelEigen {
+                values: e.values,
+                factor_values: Vec::new(),
+                vectors: EigenVectors::Dense(e.vectors),
+            }
         };
         Ok(ConditionedSampler { constraint, rest, inner: Sampler::from_eigen(eigen), n })
     }

@@ -1,0 +1,462 @@
+//! Kernel deltas — the unit of incremental catalog churn.
+//!
+//! A [`KernelDelta`] describes a small change to one factor of a tenant's
+//! kernel: an item joining or leaving the catalog (a row/column of `L₁` or
+//! `L₂` — one factor row is a whole slice of the Kronecker ground set), an
+//! item being *retired* (its kernel row damped toward zero so it stops
+//! being sampled, without a dimension change), or a general rank-r
+//! symmetric perturbation (the shape of a learner's compressed minibatch
+//! step).
+//!
+//! Two views of every delta:
+//!
+//! - [`KernelDelta::apply`] — the exact dense application, producing the
+//!   post-delta [`Kernel`]. This is the ground truth: the registry always
+//!   advances the tenant's stored kernel through it, so the kernel a
+//!   forced exact republish refactorizes is bit-identical to the one the
+//!   incremental path approximated.
+//! - [`KernelDelta::as_perturbation`] — the same change expressed as
+//!   `Σ_k ρ_k v_k v_kᵀ` on one factor, feeding
+//!   [`crate::linalg::eigen_update::refresh_into`]. Dimension-changing
+//!   deltas have no such form ([`KernelDelta::is_structural`]) and force
+//!   an exact rebuild.
+//!
+//! Retiring item `i` with damping `α` is the congruence `D·L·D` with
+//! `D = diag(1,…,α,…,1)`, which is *exactly* rank-2:
+//! `ΔL = e_i·bᵀ + b·e_iᵀ` with `b = (α−1)·L[:,i] + ½(α−1)²·L_ii·e_i`,
+//! split symmetrically as `+½(e_i+b)(e_i+b)ᵀ − ½(e_i−b)(e_i−b)ᵀ`
+//! (verified against the dense congruence in the tests).
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+
+use super::kernel::Kernel;
+
+/// A low-rank or structural change to one factor of a kernel.
+pub enum KernelDelta {
+    /// Append an item to factor `side`: `row[j] = L(new, j)` against the
+    /// existing items, `diag = L(new, new)`. Structural (dimension grows).
+    AddItem {
+        /// Which factor (0-based; 0 = `L₁`, dense kernels have only 0).
+        side: usize,
+        /// Off-diagonal couplings to the existing items (length `n_side`).
+        row: Vec<f64>,
+        /// New diagonal entry (item quality mass; must be positive).
+        diag: f64,
+    },
+    /// Delete item `index` from factor `side` (row and column removed).
+    /// Structural (dimension shrinks).
+    RemoveItem {
+        /// Which factor.
+        side: usize,
+        /// Item row to delete.
+        index: usize,
+    },
+    /// Damp item `index`'s row/column by `damping ∈ [0, 1]` — the
+    /// soft-removal that keeps dimensions (and downstream item ids)
+    /// stable. `0` silences the item completely; rank-2 incremental.
+    RetireItem {
+        /// Which factor.
+        side: usize,
+        /// Item row to damp.
+        index: usize,
+        /// Scale applied to the row/column (`L' = D·L·D`).
+        damping: f64,
+    },
+    /// General rank-r symmetric perturbation of factor `side`:
+    /// `L' = L + Σ_k rhos[k]·vectors[:,k]·vectors[:,k]ᵀ` — the compressed
+    /// form of a learner's minibatch step.
+    Perturb {
+        /// Which factor.
+        side: usize,
+        /// Signed coefficients, one per column of `vectors`.
+        rhos: Vec<f64>,
+        /// Perturbation directions (`n_side × r`).
+        vectors: Matrix,
+    },
+}
+
+/// Borrow factor `side` of a kernel (dense kernels expose factor 0).
+fn factor(kernel: &Kernel, side: usize) -> Result<&Matrix> {
+    let got = match kernel {
+        Kernel::Full(l) => [Some(l), None, None][side.min(2)],
+        Kernel::Kron2(a, b) => [Some(a), Some(b), None][side.min(2)],
+        Kernel::Kron3(a, b, c) => [Some(a), Some(b), Some(c)][side.min(2)],
+    };
+    got.ok_or_else(|| {
+        Error::Invalid(format!("delta: factor {side} out of range for this kernel"))
+    })
+}
+
+/// Rebuild a kernel with factor `side` replaced.
+fn with_factor(kernel: &Kernel, side: usize, new: Matrix) -> Kernel {
+    match (kernel, side) {
+        (Kernel::Full(_), _) => Kernel::Full(new),
+        (Kernel::Kron2(_, b), 0) => Kernel::Kron2(new, b.clone()),
+        (Kernel::Kron2(a, _), _) => Kernel::Kron2(a.clone(), new),
+        (Kernel::Kron3(_, b, c), 0) => Kernel::Kron3(new, b.clone(), c.clone()),
+        (Kernel::Kron3(a, _, c), 1) => Kernel::Kron3(a.clone(), new, c.clone()),
+        (Kernel::Kron3(a, b, _), _) => Kernel::Kron3(a.clone(), b.clone(), new),
+    }
+}
+
+impl KernelDelta {
+    /// Which factor this delta touches.
+    pub fn side(&self) -> usize {
+        match self {
+            KernelDelta::AddItem { side, .. }
+            | KernelDelta::RemoveItem { side, .. }
+            | KernelDelta::RetireItem { side, .. }
+            | KernelDelta::Perturb { side, .. } => *side,
+        }
+    }
+
+    /// Does this delta change the factor's dimension? Structural deltas
+    /// have no low-rank form and always force an exact epoch rebuild.
+    pub fn is_structural(&self) -> bool {
+        matches!(self, KernelDelta::AddItem { .. } | KernelDelta::RemoveItem { .. })
+    }
+
+    /// Perturbation rank of the incremental form (0 for structural).
+    pub fn rank(&self) -> usize {
+        match self {
+            KernelDelta::AddItem { .. } | KernelDelta::RemoveItem { .. } => 0,
+            KernelDelta::RetireItem { .. } => 2,
+            KernelDelta::Perturb { rhos, .. } => rhos.len(),
+        }
+    }
+
+    /// Short operation label for metrics and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            KernelDelta::AddItem { .. } => "add",
+            KernelDelta::RemoveItem { .. } => "remove",
+            KernelDelta::RetireItem { .. } => "retire",
+            KernelDelta::Perturb { .. } => "perturb",
+        }
+    }
+
+    /// Validate the delta against a kernel: factor bounds, operand shapes,
+    /// finite entries. The *result* of application is screened separately
+    /// by `Kernel::validate_finite` on the publish path.
+    pub fn validate(&self, kernel: &Kernel) -> Result<()> {
+        let f = factor(kernel, self.side())?;
+        let n = f.rows();
+        match self {
+            KernelDelta::AddItem { row, diag, .. } => {
+                if row.len() != n {
+                    return Err(Error::Invalid(format!(
+                        "delta add: row length {} != factor size {n}",
+                        row.len()
+                    )));
+                }
+                if !diag.is_finite() || *diag <= 0.0 {
+                    return Err(Error::Invalid(format!("delta add: bad diagonal {diag}")));
+                }
+                if row.iter().any(|v| !v.is_finite()) {
+                    return Err(Error::Invalid("delta add: non-finite row entry".into()));
+                }
+            }
+            KernelDelta::RemoveItem { index, .. } => {
+                if *index >= n {
+                    return Err(Error::Invalid(format!(
+                        "delta remove: index {index} outside factor of size {n}"
+                    )));
+                }
+                if n <= 1 {
+                    return Err(Error::Invalid(
+                        "delta remove: factor would become empty".into(),
+                    ));
+                }
+            }
+            KernelDelta::RetireItem { index, damping, .. } => {
+                if *index >= n {
+                    return Err(Error::Invalid(format!(
+                        "delta retire: index {index} outside factor of size {n}"
+                    )));
+                }
+                if !damping.is_finite() || !(0.0..=1.0).contains(damping) {
+                    return Err(Error::Invalid(format!(
+                        "delta retire: damping {damping} outside [0, 1]"
+                    )));
+                }
+            }
+            KernelDelta::Perturb { rhos, vectors, .. } => {
+                if vectors.rows() != n || vectors.cols() != rhos.len() {
+                    return Err(Error::Invalid(format!(
+                        "delta perturb: {}×{} directions vs factor size {n}, rank {}",
+                        vectors.rows(),
+                        vectors.cols(),
+                        rhos.len()
+                    )));
+                }
+                if rhos.is_empty() {
+                    return Err(Error::Invalid("delta perturb: empty rank".into()));
+                }
+                if rhos.iter().any(|v| !v.is_finite())
+                    || vectors.as_slice().iter().any(|v| !v.is_finite())
+                {
+                    return Err(Error::Invalid("delta perturb: non-finite operand".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Exact application: the post-delta kernel (untouched factors are
+    /// cloned). This is the registry's ground truth — deterministic
+    /// arithmetic, so replaying the same delta sequence always reproduces
+    /// bit-identical kernels.
+    pub fn apply(&self, kernel: &Kernel) -> Result<Kernel> {
+        self.validate(kernel)?;
+        let f = factor(kernel, self.side())?;
+        let n = f.rows();
+        let new = match self {
+            KernelDelta::AddItem { row, diag, .. } => Matrix::from_fn(n + 1, n + 1, |i, j| {
+                match (i == n, j == n) {
+                    (false, false) => f.get(i, j),
+                    (true, false) => row[j],
+                    (false, true) => row[i],
+                    (true, true) => *diag,
+                }
+            }),
+            KernelDelta::RemoveItem { index, .. } => {
+                let skip = |k: usize| if k >= *index { k + 1 } else { k };
+                Matrix::from_fn(n - 1, n - 1, |i, j| f.get(skip(i), skip(j)))
+            }
+            KernelDelta::RetireItem { index, damping, .. } => {
+                // L' = D·L·D: row and column `index` scale by α, the
+                // diagonal entry by α² (scaled once in each sweep).
+                let mut out = f.clone();
+                for k in 0..n {
+                    let rv = out.get(*index, k) * damping;
+                    out.set(*index, k, rv);
+                }
+                for k in 0..n {
+                    let cv = out.get(k, *index) * damping;
+                    out.set(k, *index, cv);
+                }
+                out
+            }
+            KernelDelta::Perturb { rhos, vectors, .. } => {
+                let mut out = f.clone();
+                for (k, &rho) in rhos.iter().enumerate() {
+                    for i in 0..n {
+                        let vi = rho * vectors.get(i, k);
+                        if vi == 0.0 {
+                            continue;
+                        }
+                        for j in 0..n {
+                            let v = out.get(i, j) + vi * vectors.get(j, k);
+                            out.set(i, j, v);
+                        }
+                    }
+                }
+                out.symmetrize_mut();
+                out
+            }
+        };
+        Ok(with_factor(kernel, self.side(), new))
+    }
+
+    /// The incremental form: `(side, rhos, vs)` with
+    /// `L_side' = L_side + Σ_k rhos[k]·vs[:,k]·vs[:,k]ᵀ`, or `None` for
+    /// structural deltas. Retirement is lowered through the rank-2
+    /// congruence identity (module docs); perturbations pass through.
+    pub fn as_perturbation(&self, kernel: &Kernel) -> Result<Option<(usize, Vec<f64>, Matrix)>> {
+        self.validate(kernel)?;
+        match self {
+            KernelDelta::AddItem { .. } | KernelDelta::RemoveItem { .. } => Ok(None),
+            KernelDelta::Perturb { side, rhos, vectors } => {
+                Ok(Some((*side, rhos.clone(), vectors.clone())))
+            }
+            KernelDelta::RetireItem { side, index, damping } => {
+                let f = factor(kernel, *side)?;
+                let n = f.rows();
+                let am1 = damping - 1.0;
+                // b = (α−1)·L[:,index] + ½(α−1)²·L_ii·e_index
+                let mut b = vec![0.0; n];
+                for i in 0..n {
+                    b[i] = am1 * f.get(i, *index);
+                }
+                b[*index] += 0.5 * am1 * am1 * f.get(*index, *index);
+                let mut vs = Matrix::zeros(n, 2);
+                for i in 0..n {
+                    let e = if i == *index { 1.0 } else { 0.0 };
+                    vs.set(i, 0, e + b[i]);
+                    vs.set(i, 1, e - b[i]);
+                }
+                Ok(Some((*side, vec![0.5, -0.5], vs)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Matrix {
+        let mut state = seed | 1;
+        let x = Matrix::from_fn(n, n, |_, _| {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state as f64 / u64::MAX as f64) - 0.5
+        });
+        let mut g = crate::linalg::matmul::matmul_nt(&x, &x).unwrap();
+        g.add_diag_mut(n as f64 * 0.2);
+        g
+    }
+
+    /// Apply the perturbation form densely to the named factor.
+    fn apply_perturbation(kernel: &Kernel, side: usize, rhos: &[f64], vs: &Matrix) -> Kernel {
+        let f = super::factor(kernel, side).unwrap();
+        let n = f.rows();
+        let mut out = f.clone();
+        for (k, &rho) in rhos.iter().enumerate() {
+            for i in 0..n {
+                for j in 0..n {
+                    let v = out.get(i, j) + rho * vs.get(i, k) * vs.get(j, k);
+                    out.set(i, j, v);
+                }
+            }
+        }
+        super::with_factor(kernel, side, out)
+    }
+
+    #[test]
+    fn add_and_remove_change_dimensions() {
+        let kernel = Kernel::Kron2(spd(4, 1), spd(5, 2));
+        let add = KernelDelta::AddItem { side: 1, row: vec![0.1, 0.2, -0.1, 0.05, 0.3], diag: 1.4 };
+        let grown = add.apply(&kernel).unwrap();
+        match &grown {
+            Kernel::Kron2(a, b) => {
+                assert_eq!((a.rows(), b.rows()), (4, 6));
+                assert_eq!(b.get(5, 5), 1.4);
+                assert_eq!(b.get(5, 2), -0.1);
+                assert_eq!(b.get(2, 5), -0.1);
+            }
+            _ => panic!("structure changed"),
+        }
+        let rm = KernelDelta::RemoveItem { side: 1, index: 5 };
+        let back = rm.apply(&grown).unwrap();
+        match (&kernel, &back) {
+            (Kernel::Kron2(_, b0), Kernel::Kron2(_, b1)) => {
+                assert_eq!(b0.as_slice(), b1.as_slice(), "add→remove must round-trip");
+            }
+            _ => panic!("structure changed"),
+        }
+        assert!(add.is_structural() && rm.is_structural());
+        assert!(add.as_perturbation(&kernel).unwrap().is_none());
+    }
+
+    #[test]
+    fn retire_matches_congruence_and_rank_two_form() {
+        let kernel = Kernel::Kron2(spd(6, 3), spd(4, 4));
+        let delta = KernelDelta::RetireItem { side: 0, index: 2, damping: 0.25 };
+        let applied = delta.apply(&kernel).unwrap();
+        // Oracle: D·L·D.
+        let l = match &kernel {
+            Kernel::Kron2(a, _) => a.clone(),
+            _ => unreachable!(),
+        };
+        let dld = Matrix::from_fn(6, 6, |i, j| {
+            let di = if i == 2 { 0.25 } else { 1.0 };
+            let dj = if j == 2 { 0.25 } else { 1.0 };
+            di * l.get(i, j) * dj
+        });
+        match &applied {
+            Kernel::Kron2(a, _) => assert!(a.rel_diff(&dld) < 1e-14),
+            _ => panic!(),
+        }
+        // The rank-2 lowering reproduces the same kernel.
+        let (side, rhos, vs) = delta.as_perturbation(&kernel).unwrap().unwrap();
+        assert_eq!((side, rhos.len(), vs.cols()), (0, 2, 2));
+        let via_pert = apply_perturbation(&kernel, side, &rhos, &vs);
+        match (&applied, &via_pert) {
+            (Kernel::Kron2(a, _), Kernel::Kron2(p, _)) => {
+                assert!(a.rel_diff(p) < 1e-12, "rank-2 form diverges: {}", a.rel_diff(p));
+            }
+            _ => panic!(),
+        }
+        // Fully retiring silences the row.
+        let dead = KernelDelta::RetireItem { side: 0, index: 2, damping: 0.0 };
+        match dead.apply(&kernel).unwrap() {
+            Kernel::Kron2(a, _) => {
+                for k in 0..6 {
+                    assert_eq!(a.get(2, k), 0.0);
+                    assert_eq!(a.get(k, 2), 0.0);
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn perturb_applies_symmetrically() {
+        let kernel = Kernel::Full(spd(7, 5));
+        let mut vs = Matrix::zeros(7, 2);
+        for i in 0..7 {
+            vs.set(i, 0, (i as f64 * 0.37).sin());
+            vs.set(i, 1, (i as f64 * 0.81).cos() * 0.3);
+        }
+        let delta = KernelDelta::Perturb { side: 0, rhos: vec![0.7, -0.1], vectors: vs.clone() };
+        let applied = delta.apply(&kernel).unwrap();
+        let (side, rhos, pvs) = delta.as_perturbation(&kernel).unwrap().unwrap();
+        let oracle = apply_perturbation(&kernel, side, &rhos, &pvs);
+        match (&applied, &oracle) {
+            (Kernel::Full(a), Kernel::Full(b)) => assert!(a.rel_diff(b) < 1e-13),
+            _ => panic!(),
+        }
+        match &applied {
+            Kernel::Full(a) => {
+                for i in 0..7 {
+                    for j in 0..7 {
+                        assert_eq!(a.get(i, j), a.get(j, i), "asymmetric at ({i},{j})");
+                    }
+                }
+            }
+            _ => panic!(),
+        }
+        assert_eq!(delta.rank(), 2);
+        assert!(!delta.is_structural());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_deltas() {
+        let kernel = Kernel::Kron2(spd(4, 7), spd(5, 8));
+        // Factor out of range.
+        assert!(KernelDelta::RemoveItem { side: 2, index: 0 }.validate(&kernel).is_err());
+        // Wrong row length.
+        assert!(KernelDelta::AddItem { side: 0, row: vec![0.0; 5], diag: 1.0 }
+            .validate(&kernel)
+            .is_err());
+        // Non-positive diagonal.
+        assert!(KernelDelta::AddItem { side: 0, row: vec![0.0; 4], diag: 0.0 }
+            .validate(&kernel)
+            .is_err());
+        // Index out of bounds.
+        assert!(KernelDelta::RetireItem { side: 1, index: 9, damping: 0.5 }
+            .validate(&kernel)
+            .is_err());
+        // Damping outside [0, 1].
+        assert!(KernelDelta::RetireItem { side: 1, index: 0, damping: 1.5 }
+            .validate(&kernel)
+            .is_err());
+        // NaN perturbation operand.
+        let mut vs = Matrix::zeros(4, 1);
+        vs.set(1, 0, f64::NAN);
+        assert!(KernelDelta::Perturb { side: 0, rhos: vec![1.0], vectors: vs }
+            .validate(&kernel)
+            .is_err());
+        // Shape mismatch between rhos and vectors.
+        assert!(KernelDelta::Perturb {
+            side: 0,
+            rhos: vec![1.0, 2.0],
+            vectors: Matrix::zeros(4, 1)
+        }
+        .validate(&kernel)
+        .is_err());
+    }
+}

@@ -361,7 +361,11 @@ impl Kernel {
         match self {
             Kernel::Full(l) => {
                 let e = SymEigen::new_with(l, scratch)?;
-                Ok(KernelEigen { values: e.values, vectors: EigenVectors::Dense(e.vectors) })
+                Ok(KernelEigen {
+                    values: e.values,
+                    factor_values: Vec::new(),
+                    vectors: EigenVectors::Dense(e.vectors),
+                })
             }
             Kernel::Kron2(a, b) => {
                 let ea = SymEigen::new_with(a, scratch)?;
@@ -369,6 +373,7 @@ impl Kernel {
                 let values = kron::kron_eigenvalues(&ea.values, &eb.values);
                 Ok(KernelEigen {
                     values,
+                    factor_values: vec![ea.values, eb.values],
                     vectors: EigenVectors::Kron2 { p1: ea.vectors, p2: eb.vectors },
                 })
             }
@@ -380,6 +385,7 @@ impl Kernel {
                 let values = kron::kron_eigenvalues(&ea.values, &inner);
                 Ok(KernelEigen {
                     values,
+                    factor_values: vec![ea.values, eb.values, ec.values],
                     vectors: EigenVectors::Kron3 {
                         p1: ea.vectors,
                         p2: eb.vectors,
@@ -425,6 +431,13 @@ pub struct KernelEigen {
     /// Eigenvalues in item order for structured kernels (index
     /// `t = i·N₂ + j` pairs `λ_i(L₁)·λ_j(L₂)`), ascending for dense.
     pub values: Vec<f64>,
+    /// Per-factor eigenvalue vectors (ascending, paired with the factor
+    /// eigenvector matrices of [`EigenVectors::Kron2`]/`Kron3`); empty for
+    /// dense kernels. Delta publishing refreshes one factor's spectrum
+    /// incrementally and recombines the product grid from these in `O(N)`
+    /// — without them the per-factor spectra would be unrecoverable from
+    /// the product `values`.
+    pub factor_values: Vec<Vec<f64>>,
     /// Eigenvector accessor.
     pub vectors: EigenVectors,
 }

@@ -14,9 +14,11 @@
 //!   update, no refactorization;
 //! - removal ratio: `[L_Y⁻¹]_pp = ‖F⁻¹·e_p‖²` via the same sweep; an
 //!   accepted removal deletes the factor's row `p` and restores
-//!   triangularity of the trailing block with one rank-one update
-//!   ([`crate::linalg::cholesky::rank_one_update_block`], the stable
-//!   *plus*-sign `cholupdate`).
+//!   triangularity of the trailing block through the shared rank-r
+//!   up/downdate machinery ([`crate::linalg::cholesky::rank_r_update`]
+//!   with `r = 1` — the compaction is mathematically an *update*: the
+//!   trailing block satisfies `L₃₃·L₃₃ᵀ + l₃₂·l₃₂ᵀ`, so the stable
+//!   *plus*-sign sweep applies, never the hyperbolic downdate).
 //!
 //! A step therefore costs `O(κ²)` with **zero heap allocations in steady
 //! state**: the factor, the solve buffers and the subset vector are all
@@ -29,7 +31,7 @@
 
 use crate::dpp::kernel::Kernel;
 use crate::error::{Error, Result};
-use crate::linalg::cholesky::{rank_one_update_block, Cholesky};
+use crate::linalg::cholesky::{rank_r_update, Cholesky};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 
@@ -222,7 +224,7 @@ impl<'a> McmcSampler<'a> {
             }
         }
         self.fac.truncate(ns * ns);
-        rank_one_update_block(&mut self.fac, ns, p, t, &mut self.w);
+        rank_r_update(&mut self.fac, ns, p, t, &mut self.w);
         self.order.remove(p);
         self.y.remove(pos);
     }
@@ -386,6 +388,48 @@ mod tests {
             }
         }
         assert!(s.accepted > 0);
+    }
+
+    #[test]
+    fn long_chain_drift_stays_below_1e10_vs_periodic_exact_refactor() {
+        // Satellite check for the rank-r routing: a *long* chain (several
+        // multiples of FACTOR_REFRESH_EVERY accepted moves, so the
+        // periodic exact refresh fires repeatedly) must keep the
+        // incrementally maintained factor within 1e-10 of a from-scratch
+        // refactorization at every checkpoint. This is the accumulated-
+        // drift bound the delta-publish machinery inherits.
+        let kernel = Kernel::Kron2(spd(4, 18), spd(4, 19));
+        let mut s = McmcSampler::new(&kernel);
+        let mut rng = Rng::new(29);
+        let mut checked = 0usize;
+        for step in 0..3000 {
+            s.step(&mut rng).unwrap();
+            if step % 50 != 0 {
+                continue;
+            }
+            let k = s.order.len();
+            if k == 0 {
+                continue;
+            }
+            let mut fresh = McmcSampler::new(&kernel);
+            fresh.order = s.order.clone();
+            fresh.fac = vec![0.0; k * k];
+            fresh.refactor().unwrap();
+            for i in 0..k * k {
+                assert!(
+                    (s.fac[i] - fresh.fac[i]).abs() < 1e-10,
+                    "step {step}: drift {} at {i}",
+                    (s.fac[i] - fresh.fac[i]).abs()
+                );
+            }
+            checked += 1;
+        }
+        assert!(checked > 30, "chain barely ran ({checked} checkpoints)");
+        assert!(
+            s.accepted > FACTOR_REFRESH_EVERY,
+            "need at least one full refresh cycle, got {} accepted moves",
+            s.accepted
+        );
     }
 
     #[test]

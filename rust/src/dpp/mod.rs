@@ -12,6 +12,9 @@
 //! - [`condition`]: conditional inference — [`Constraint`]-constrained
 //!   sampling (`A ⊆ Y, B ∩ Y = ∅`) via Schur-complement conditional
 //!   kernels on the restricted ground set.
+//! - [`delta`]: [`KernelDelta`] — item add/remove/retire and rank-r
+//!   factor perturbations, the unit of incremental catalog churn that the
+//!   registry's delta-publish path absorbs without re-eigendecomposing.
 //! - [`elementary`]: elementary symmetric polynomials (k-DPP phase 1).
 //! - [`mcmc`]: the approximate insert/delete chain baseline (§4, ref [13])
 //!   with an incrementally maintained `L_Y` Cholesky factor, plus the
@@ -24,6 +27,7 @@
 
 pub mod backend;
 pub mod condition;
+pub mod delta;
 pub mod elementary;
 pub mod kernel;
 pub mod likelihood;
@@ -33,6 +37,7 @@ pub mod sampler;
 
 pub use backend::{LowRankBackend, McmcBackend, SampleMode, SamplerBackend};
 pub use condition::{ConditionScratch, ConditionedSampler, Constraint};
+pub use delta::KernelDelta;
 pub use kernel::{EigenVectors, Kernel, KernelEigen, MarginalScratch};
 pub use map::{map_slate, map_slate_auto, map_slate_constrained, map_slate_into, MapScratch};
 pub use sampler::{SampleScratch, Sampler};

@@ -10,14 +10,61 @@
 //! `O(Nκ² + N^{3/2})` time and `O(N + κ²)` space per iteration — this is
 //! the configuration that learns kernels too large to fit in memory
 //! (Fig. 1c).
+//!
+//! **Streaming deltas.** [`Learner::step_delta`] is overridden here: each
+//! stochastic step's per-factor change `L₁' − L₁` is compressed to its
+//! top-[`DELTA_RANK_CAP`] eigendirections and emitted as
+//! [`KernelDelta::Perturb`]s, and the *compressed* step is written back
+//! into the learner's own iterate (classic gradient compression) — so a
+//! serving tenant absorbing the deltas through
+//! [`crate::coordinator::KernelRegistry::publish_delta`] holds exactly
+//! the learner's kernel, bitwise, while its cached eigendecomposition is
+//! refreshed by `O(r·N₁²)` secular updates instead of `O(N₁³)` rebuilds.
 
-use crate::dpp::Kernel;
+use crate::dpp::{Kernel, KernelDelta};
 use crate::error::Result;
 use crate::learn::krk::{b2_matrix_into, l1_b_l1_into, KrkScratch};
 use crate::learn::stats::{Contraction, KernelRef, ThetaEngine};
 use crate::learn::traits::{Learner, TrainingSet};
-use crate::linalg::{matmul, Matrix};
+use crate::linalg::{matmul, Matrix, SymEigen};
 use crate::rng::Rng;
+
+/// Rank cap for the per-factor delta compression of one stochastic step.
+/// A minibatch half-update concentrates its spectral mass in a handful of
+/// directions; whatever the cap truncates is *also dropped from the
+/// learner's iterate* (write-back), so learner and tenant never disagree
+/// — truncation becomes optimization noise, not serving drift.
+pub const DELTA_RANK_CAP: usize = 8;
+
+/// Eigendirections carrying less than this fraction of a step's total
+/// spectral mass are dropped (numerical dust from symmetrization).
+const DELTA_ENERGY_TOL: f64 = 1e-12;
+
+/// Top-[`DELTA_RANK_CAP`] spectral compression of `cur − prev`. Returns
+/// `None` when the step was a numerical no-op for this factor.
+fn compress_step(prev: &Matrix, cur: &Matrix) -> Result<Option<(Vec<f64>, Matrix)>> {
+    let n = prev.rows();
+    let mut diff = cur.clone();
+    diff.axpy(-1.0, prev)?;
+    let eig = SymEigen::new(&diff)?;
+    let total: f64 = eig.values.iter().map(|v| v.abs()).sum();
+    if !(total > 0.0) {
+        return Ok(None);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| eig.values[b].abs().total_cmp(&eig.values[a].abs()));
+    let kept: Vec<usize> = order
+        .into_iter()
+        .take(DELTA_RANK_CAP)
+        .take_while(|&i| eig.values[i].abs() > DELTA_ENERGY_TOL * total)
+        .collect();
+    if kept.is_empty() {
+        return Ok(None);
+    }
+    let rhos: Vec<f64> = kept.iter().map(|&i| eig.values[i]).collect();
+    let vectors = Matrix::from_fn(n, kept.len(), |r, c| eig.vectors.get(r, kept[c]));
+    Ok(Some((rhos, vectors)))
+}
 
 /// Stochastic/minibatch KRK-Picard learner.
 pub struct KrkStochastic {
@@ -131,6 +178,34 @@ impl Learner for KrkStochastic {
         Ok(())
     }
 
+    /// One stochastic step, emitted as rank-capped per-factor
+    /// [`KernelDelta::Perturb`]s (see the module docs). The compressed
+    /// step is replayed back into the iterate through the same
+    /// [`KernelDelta::apply`] the registry's ground-truth path uses, so
+    /// applying the returned deltas to the pre-step kernel reproduces
+    /// `self.kernel()` bitwise.
+    fn step_delta(&mut self, data: &TrainingSet) -> Result<Option<Vec<KernelDelta>>> {
+        let prev1 = self.l1.clone();
+        let prev2 = self.l2.clone();
+        self.step(data)?;
+        let mut deltas = Vec::new();
+        if let Some((rhos, vectors)) = compress_step(&prev1, &self.l1)? {
+            deltas.push(KernelDelta::Perturb { side: 0, rhos, vectors });
+        }
+        if let Some((rhos, vectors)) = compress_step(&prev2, &self.l2)? {
+            deltas.push(KernelDelta::Perturb { side: 1, rhos, vectors });
+        }
+        let mut kernel = Kernel::Kron2(prev1, prev2);
+        for d in &deltas {
+            kernel = d.apply(&kernel)?;
+        }
+        if let Kernel::Kron2(l1, l2) = kernel {
+            self.l1 = l1;
+            self.l2 = l2;
+        }
+        Ok(Some(deltas))
+    }
+
     fn kernel(&self) -> Kernel {
         Kernel::Kron2(self.l1.clone(), self.l2.clone())
     }
@@ -241,6 +316,47 @@ mod tests {
         )
         .unwrap();
         assert!(out.rel_diff(&a2_ref) < 1e-12, "A2: {}", out.rel_diff(&a2_ref));
+    }
+
+    #[test]
+    fn step_delta_reproduces_iterate_exactly_and_bounds_rank() {
+        let (data, mut learner) = setup(3, 4, 30, 31);
+        for _ in 0..5 {
+            let before = learner.kernel();
+            let deltas = learner
+                .step_delta(&data)
+                .unwrap()
+                .expect("krk-stochastic always emits a delta form");
+            assert!(!deltas.is_empty(), "a stochastic step should move the kernel");
+            let mut replay = before;
+            for d in &deltas {
+                assert!(!d.is_structural());
+                assert!(d.rank() <= DELTA_RANK_CAP, "rank {} > cap", d.rank());
+                replay = d.apply(&replay).unwrap();
+            }
+            // The write-back contract: deltas replayed on the pre-step
+            // kernel reproduce the learner's iterate bitwise.
+            match (&replay, &learner.kernel()) {
+                (Kernel::Kron2(a1, b1), Kernel::Kron2(a2, b2)) => {
+                    assert_eq!(a1.as_slice(), a2.as_slice());
+                    assert_eq!(b1.as_slice(), b2.as_slice());
+                }
+                _ => panic!("kernel structure changed"),
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_steps_still_improve_likelihood_and_stay_pd() {
+        let (data, mut learner) = setup(3, 4, 50, 33);
+        let ll0 = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+        for _ in 0..30 {
+            learner.step_delta(&data).unwrap();
+            let (l1, l2) = learner.subkernels();
+            assert!(cholesky::is_pd(l1) && cholesky::is_pd(l2));
+        }
+        let ll1 = log_likelihood(&learner.kernel(), &data.subsets).unwrap();
+        assert!(ll1 > ll0, "compressed stochastic learning failed to improve: {ll0} -> {ll1}");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! drive them interchangeably.
 
 use crate::dpp::likelihood;
-use crate::dpp::Kernel;
+use crate::dpp::{Kernel, KernelDelta};
 use crate::error::{Error, Result};
 use std::time::{Duration, Instant};
 
@@ -114,6 +114,25 @@ pub trait Learner {
     /// One optimization step in place; returns nothing — progress is
     /// observed via `kernel()` and the driver's likelihood evaluation.
     fn step(&mut self, data: &TrainingSet) -> Result<()>;
+
+    /// One optimization step that also **describes its own effect** as a
+    /// sequence of [`KernelDelta`]s, so a serving tenant can absorb the
+    /// refresh incrementally
+    /// ([`crate::coordinator::KernelRegistry::publish_delta`]) instead of
+    /// re-eigendecomposing the whole republished kernel.
+    ///
+    /// Contract: after this call, applying the returned deltas (in order)
+    /// to the kernel the learner held *before* the call must reproduce
+    /// `self.kernel()` **exactly** — learners that compress their step
+    /// into low-rank deltas must write the compressed step back into
+    /// their own iterate so learner and tenant stay in lockstep.
+    ///
+    /// `Ok(None)` means "no delta form available" (the default): the
+    /// caller falls back to a full publish of `self.kernel()`.
+    fn step_delta(&mut self, data: &TrainingSet) -> Result<Option<Vec<KernelDelta>>> {
+        self.step(data)?;
+        Ok(None)
+    }
 
     /// Current kernel estimate (cloned).
     fn kernel(&self) -> Kernel;

@@ -40,6 +40,8 @@
 //! | k-DPP phase 1: elementary symmetric polynomials (ref. [16]) | [`dpp::elementary`] |
 //! | §5 experiment protocols (init, synthetic data, figures) | [`learn::init`], [`data`], [`figures`] |
 //! | Baselines: full Picard (ref. [25]), EM (ref. [10]) | [`learn::picard`], [`learn::em`] |
+//! | Catalog churn as rank-r kernel deltas (add/remove/retire/perturb) | [`dpp::delta`] |
+//! | Rank-r factor up/downdates + secular eigen refresh | [`linalg::cholesky`], [`linalg::eigen_update`] |
 //!
 //! ## Zero-copy linalg core
 //!
@@ -95,7 +97,16 @@
 //! the deterministic greedy MAP slate ([`dpp::map`]) — gated per tenant
 //! by a [`coordinator::ModePolicy`], counted per mode in the metrics, and
 //! validated against enumeration by the statistical conformance harness
-//! (`tests/sampler_conformance.rs`).
+//! (`tests/sampler_conformance.rs`). Catalog churn rides the same epochs
+//! incrementally: a [`dpp::KernelDelta`] (item add/remove/retire, rank-r
+//! perturbation) published through
+//! [`coordinator::KernelRegistry::publish_delta`] updates the kernel
+//! exactly and refreshes the cached factor eigendecomposition by a
+//! deflation + secular-equation solve ([`linalg::eigen_update`],
+//! `O(r·N₁²)` vs `O(N₁³)`), with a depth budget forcing periodic exact
+//! republishes — the substrate behind streaming learning
+//! ([`coordinator::LearningJob::spawn_streaming`]) and the CLI `churn`
+//! command.
 //!
 //! See `README.md` for the architecture tour and quickstart,
 //! `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the

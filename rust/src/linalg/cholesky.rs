@@ -305,6 +305,87 @@ pub fn rank_one_update_block(
     }
 }
 
+/// In-place rank-r **update** of a lower-triangular Cholesky factor
+/// block: the `t×t` block at `(row0, row0)` of `fac` is overwritten with
+/// the factor of `T·Tᵀ + X·Xᵀ`, where the `r` update vectors live
+/// contiguously in `xs` (`xs[k·t..(k+1)·t]` is column `k`, consumed as
+/// workspace). Each vector is swept through the factor with the same
+/// Givens recurrence as [`rank_one_update_block`] — `O(r·t²)`,
+/// unconditionally stable, allocation-free. This is the factor-side
+/// engine of delta publishing: a rank-r kernel perturbation costs
+/// `O(r·N₁²)` here instead of the `O(N₁³)` refactorization.
+pub fn rank_r_update(fac: &mut [f64], stride: usize, row0: usize, t: usize, xs: &mut [f64]) {
+    debug_assert!(t == 0 || xs.len() % t == 0, "xs must hold whole length-t vectors");
+    if t == 0 {
+        return;
+    }
+    for x in xs.chunks_exact_mut(t) {
+        rank_one_update_block(fac, stride, row0, t, x);
+    }
+}
+
+/// In-place rank-one **downdate** of a lower-triangular Cholesky factor
+/// block: overwrites the `t×t` block at `(row0, row0)` with the factor of
+/// `T·Tᵀ − x·xᵀ` via hyperbolic rotations (LINPACK `dchdd`-style column
+/// sweep). Unlike the update, a downdate can fail: if `T·Tᵀ − x·xᵀ` is not
+/// PD the sweep hits a non-positive rotation pivot `d² − x_j²` and reports
+/// it heap-silently as `(column, pivot)` — mirroring `factor_raw` — with
+/// the factor left partially modified (callers that need the original on
+/// failure must keep their own copy). `x` is consumed as workspace.
+pub fn rank_one_downdate_block(
+    fac: &mut [f64],
+    stride: usize,
+    row0: usize,
+    t: usize,
+    x: &mut [f64],
+) -> std::result::Result<(), (usize, f64)> {
+    debug_assert!(x.len() >= t);
+    debug_assert!(t == 0 || (row0 + t - 1) * stride + row0 + t - 1 < fac.len());
+    for j in 0..t {
+        let jj = (row0 + j) * stride + row0 + j;
+        let d = fac[jj];
+        // d² − x_j², factored to avoid overflow of the squares.
+        let r2 = (d - x[j]) * (d + x[j]);
+        if r2 <= 0.0 || !r2.is_finite() {
+            return Err((j, r2));
+        }
+        let r = r2.sqrt();
+        let c = r / d;
+        let s = x[j] / d;
+        fac[jj] = r;
+        for i in (j + 1)..t {
+            let ij = (row0 + i) * stride + row0 + j;
+            fac[ij] = (fac[ij] - s * x[i]) / c;
+            x[i] = c * x[i] - s * fac[ij];
+        }
+    }
+    Ok(())
+}
+
+/// In-place rank-r **downdate**: factor of `T·Tᵀ − X·Xᵀ`, vectors packed
+/// in `xs` exactly as in [`rank_r_update`]. On a rejected vector the error
+/// carries `(vector_index · t + column, pivot)` so the caller can name the
+/// offending direction; the factor is partially modified on failure (keep
+/// a copy if rollback is needed). The downdate-to-singular rejection is
+/// the safety rail that keeps delta publishing from ever installing an
+/// indefinite epoch: callers fall back to exact refactorization instead.
+pub fn rank_r_downdate(
+    fac: &mut [f64],
+    stride: usize,
+    row0: usize,
+    t: usize,
+    xs: &mut [f64],
+) -> std::result::Result<(), (usize, f64)> {
+    debug_assert!(t == 0 || xs.len() % t == 0, "xs must hold whole length-t vectors");
+    if t == 0 {
+        return Ok(());
+    }
+    for (k, x) in xs.chunks_exact_mut(t).enumerate() {
+        rank_one_downdate_block(fac, stride, row0, t, x).map_err(|(j, d)| (k * t + j, d))?;
+    }
+    Ok(())
+}
+
 /// Convenience: `log det(A)` of a symmetric PD matrix.
 pub fn logdet_pd(a: &Matrix) -> Result<f64> {
     Ok(Cholesky::factor(a)?.logdet())
@@ -500,6 +581,157 @@ mod tests {
                     assert!((got - want).abs() < 1e-10, "({i},{j}): {got} vs {want}");
                 } else {
                     assert_eq!(got, before[i * 7 + j], "({i},{j}) outside block changed");
+                }
+            }
+        }
+    }
+
+    /// Deterministic pseudo-random update vectors, `r` packed columns of
+    /// length `t` (the `rank_r_update`/`rank_r_downdate` workspace layout).
+    fn packed_vectors(t: usize, r: usize, seed: u64, scale: f64) -> Vec<f64> {
+        let mut state = seed | 1;
+        (0..t * r)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                ((state as f64 / u64::MAX as f64) - 0.5) * scale
+            })
+            .collect()
+    }
+
+    /// `A + sign·X·Xᵀ` for packed columns.
+    fn perturbed(a: &Matrix, xs: &[f64], sign: f64) -> Matrix {
+        let n = a.rows();
+        let mut out = a.clone();
+        for x in xs.chunks_exact(n) {
+            for i in 0..n {
+                for j in 0..n {
+                    let v = out.get(i, j) + sign * x[i] * x[j];
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn rank_r_update_matches_refactorization() {
+        for (n, r, seed) in [(9usize, 1usize, 41u64), (12, 2, 43), (16, 8, 45)] {
+            let a = spd(n, seed);
+            let ch = Cholesky::factor(&a).unwrap();
+            let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+            let xs0 = packed_vectors(n, r, seed ^ 0x9e37, 0.8);
+            let mut xs = xs0.clone();
+            rank_r_update(&mut fac, n, 0, n, &mut xs);
+            let want = Cholesky::factor(&perturbed(&a, &xs0, 1.0)).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert!(
+                        (fac[i * n + j] - want.l.get(i, j)).abs() < 1e-9,
+                        "n={n} r={r} ({i},{j}): {} vs {}",
+                        fac[i * n + j],
+                        want.l.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_r_downdate_matches_refactorization() {
+        // Small vectors keep A − X·Xᵀ safely PD for every tested rank.
+        for (n, r, seed) in [(9usize, 1usize, 51u64), (12, 2, 53), (16, 8, 55)] {
+            let a = spd(n, seed);
+            let ch = Cholesky::factor(&a).unwrap();
+            let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+            let xs0 = packed_vectors(n, r, seed ^ 0x517c, 0.15);
+            let mut xs = xs0.clone();
+            rank_r_downdate(&mut fac, n, 0, n, &mut xs).unwrap();
+            let want = Cholesky::factor(&perturbed(&a, &xs0, -1.0)).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert!(
+                        (fac[i * n + j] - want.l.get(i, j)).abs() < 1e-9,
+                        "n={n} r={r} ({i},{j}): {} vs {}",
+                        fac[i * n + j],
+                        want.l.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn update_then_downdate_round_trips() {
+        let n = 11;
+        let a = spd(n, 61);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+        let xs0 = packed_vectors(n, 3, 77, 0.6);
+        let mut up = xs0.clone();
+        rank_r_update(&mut fac, n, 0, n, &mut up);
+        let mut down = xs0;
+        rank_r_downdate(&mut fac, n, 0, n, &mut down).unwrap();
+        for i in 0..n {
+            for j in 0..=i {
+                assert!(
+                    (fac[i * n + j] - ch.l.get(i, j)).abs() < 1e-9,
+                    "({i},{j}) did not round-trip"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn downdate_to_singular_is_rejected() {
+        // Removing more than the smallest eigendirection's mass makes the
+        // target indefinite: the hyperbolic sweep must hit a non-positive
+        // pivot and report it rather than produce NaNs.
+        let n = 8;
+        let a = spd(n, 71);
+        let eig = crate::linalg::eigen::SymEigen::new(&a).unwrap();
+        let lam0 = eig.values[0];
+        let ch = Cholesky::factor(&a).unwrap();
+        for overshoot in [1.5, 1.05] {
+            let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+            let mut x: Vec<f64> =
+                (0..n).map(|i| eig.vectors.get(i, 0) * lam0.sqrt() * overshoot).collect();
+            let err = rank_r_downdate(&mut fac, n, 0, n, &mut x);
+            assert!(err.is_err(), "overshoot {overshoot} must reject");
+            let (idx, pivot) = err.unwrap_err();
+            assert!(idx < n && pivot <= 0.0, "idx {idx} pivot {pivot}");
+        }
+        // A mild downdate on the same factor still succeeds.
+        let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+        let mut x = packed_vectors(n, 1, 73, 0.1);
+        rank_r_downdate(&mut fac, n, 0, n, &mut x).unwrap();
+        assert!(fac.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rank_r_block_forms_touch_only_the_block() {
+        // Update + downdate restricted to a trailing 5×5 block of a 9×9
+        // factor: everything outside the block must be bit-identical.
+        let full = spd(9, 81);
+        let ch = Cholesky::factor(&full).unwrap();
+        let mut fac: Vec<f64> = ch.l.as_slice().to_vec();
+        let before = fac.clone();
+        let mut xs = packed_vectors(5, 2, 83, 0.4);
+        let snapshot = xs.clone();
+        rank_r_update(&mut fac, 9, 4, 5, &mut xs);
+        xs.copy_from_slice(&snapshot);
+        rank_r_downdate(&mut fac, 9, 4, 5, &mut xs).unwrap();
+        for i in 0..9 {
+            for j in 0..9 {
+                let inside = (4..9).contains(&i) && (4..=i).contains(&j);
+                if inside {
+                    assert!(
+                        (fac[i * 9 + j] - before[i * 9 + j]).abs() < 1e-9,
+                        "({i},{j}) did not round-trip in block"
+                    );
+                } else {
+                    assert_eq!(fac[i * 9 + j], before[i * 9 + j], "({i},{j}) outside block");
                 }
             }
         }

@@ -19,6 +19,10 @@
 //! - [`eigen`]: two-stage symmetric eigensolver — blocked Householder
 //!   tridiagonalization (GEMM trailing updates) + tql2 with parallel
 //!   back-transformation — for sampling & App. B.
+//! - [`eigen_update`]: incremental eigendecomposition refresh under
+//!   rank-r perturbations (deflation + secular-equation solves + one GEMM
+//!   per rank) — the spectral engine of delta publishing, with tracked
+//!   drift and exact-refactorization fallback.
 //! - [`qr`]: Householder QR + the sampler's orthogonal-complement step.
 //! - [`trisolve`]: row-oriented triangular solves with matrix RHS, shared
 //!   by the three factorizations above.
@@ -31,6 +35,7 @@
 
 pub mod cholesky;
 pub mod eigen;
+pub mod eigen_update;
 pub mod kron;
 pub mod lu;
 pub mod matmul;

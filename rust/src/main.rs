@@ -8,15 +8,20 @@
 //!   map       deterministic greedy MAP slate (argmax-det heuristic)
 //!   marginals print factored inclusion probabilities P(i ∈ Y) = K_ii
 //!   serve     run the sampling service over a synthetic request trace
+//!             (optionally with catalog churn interleaved via delta
+//!             publishes)
+//!   churn     drive item add/retire/remove + low-rank perturbations
+//!             through a live tenant's delta-publish path
 //!   datagen   generate + save datasets (registry / genes / synthetic)
 //!   info      environment + artifact status
 
 use krondpp::cli::Args;
 use krondpp::config::{Algorithm, ServiceConfig};
-use krondpp::coordinator::DppService;
+use krondpp::coordinator::{DeltaOutcome, DppService, TenantId};
+use krondpp::data::workload::{churn_plan, ChurnOp, ChurnSpec};
 use krondpp::dpp::{
-    map_slate_into, ConditionedSampler, Constraint, Kernel, LowRankBackend, MapScratch,
-    McmcBackend, SampleMode, SampleScratch, Sampler, SamplerBackend,
+    map_slate_into, ConditionedSampler, Constraint, Kernel, KernelDelta, LowRankBackend,
+    MapScratch, McmcBackend, SampleMode, SampleScratch, Sampler, SamplerBackend,
 };
 use krondpp::error::Result;
 use krondpp::figures::{fig1, fig2, tables, Scale};
@@ -42,7 +47,9 @@ COMMANDS:
   marginals --kernel PREFIX [--tenant NAME] [--top T]
   serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
            [--config FILE.json] [--tenants T] [--tenant NAME] [--learn-live]
-           [--budget-ms MS]
+           [--budget-ms MS] [--churn-every E] [--churn-rank R]
+  churn    [--n1 N --n2 N] [--ops C] [--rank R] [--scale S] [--seed S]
+           [--max-depth D]
   datagen  --kind synthetic|genes|registry --out FILE.kds [--n1 N --n2 N]
            [--count C] [--seed S]
   info
@@ -64,6 +71,16 @@ DPP conditioned on those items being in / out of every subset (with --k,
 the slate size counts the forced includes). `marginals` prints the
 factored inclusion probabilities P(i in Y) = K_ii without forming the
 dense N x N marginal kernel.
+
+Catalog churn: `churn --ops C` applies C mutations (rank-r feedback
+perturbations, item add/retire/remove) to a live tenant through the
+incremental delta-publish path — each op refreshes the cached
+eigendecomposition by a rank-r secular update (O(r·N₁²)) instead of a
+full re-eigendecomposition, falling back to exact when the rank gate or
+the --max-depth drift budget says so. `serve --churn-every E` interleaves
+the same mutations into the request trace (one per E requests), so the
+report's per-tenant churn[deltas/incremental/depth] line shows the live
+mix.
 
 Sampler zoo: `sample --mode mcmc --steps 4000` runs one independent
 insert/delete (or fixed-size swap) chain per draw; `--mode lowrank
@@ -93,6 +110,7 @@ fn run(tokens: Vec<String>) -> Result<()> {
         Some("map") => cmd_map(&args),
         Some("marginals") => cmd_marginals(&args),
         Some("serve") => cmd_serve(&args),
+        Some("churn") => cmd_churn(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -518,6 +536,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
+    // Optional catalog churn interleaved with the trace: one mutation per
+    // --churn-every requests, pushed through the delta-publish path
+    // against the first target tenant (assumed to have the --n1/--n2
+    // shape; a mismatched config tenant just records failed publishes).
+    let churn_spec = ChurnSpec {
+        every: args.get_or("churn-every", 0)?,
+        rank: args.get_or("churn-rank", 2)?,
+        scale: 0.02,
+    };
+    let churn = churn_plan(&churn_spec, requests);
+    let mut churn_it = churn.iter().peekable();
+    let mut sizes = [n1, n2];
+    let mut churn_ok = 0usize;
+    let mut churn_failed = 0usize;
+
     // Drive the synthetic trace.
     let spec = krondpp::data::workload::WorkloadSpec {
         rate_hz: rate,
@@ -529,6 +562,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(trace.len());
     for (i, req) in trace.iter().enumerate() {
+        while churn_it.peek().is_some_and(|e| e.at_index == i) {
+            let op = churn_it.next().map(|e| e.op).unwrap_or(ChurnOp::Perturb);
+            match apply_churn(&svc, targets[0], op, &mut sizes, &churn_spec, &mut rng) {
+                Ok(_) => churn_ok += 1,
+                Err(_) => churn_failed += 1, // quarantined/rejected; in metrics
+            }
+        }
         let target = req.at;
         while t0.elapsed() < target {
             std::thread::yield_now();
@@ -547,6 +587,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("completed {ok}/{requests} in {wall:.2}s ({:.0} req/s)", ok as f64 / wall);
+    if !churn.is_empty() {
+        println!("churn: {}/{} mutations published ({churn_failed} failed)", churn_ok, churn.len());
+    }
     println!("{}", svc.report());
     if let Some(job) = job {
         job.cancel();
@@ -558,6 +601,110 @@ fn cmd_serve(args: &Args) -> Result<()> {
             history.len() - 1
         );
     }
+    Ok(())
+}
+
+/// Materialize one churn-plan event into a concrete `KernelDelta` against
+/// the tenant's current factor shapes and push it through the service's
+/// churn endpoints. `sizes` tracks both factor sizes across structural
+/// ops so rows/indices stay in range.
+fn apply_churn(
+    svc: &DppService,
+    tenant: TenantId,
+    op: ChurnOp,
+    sizes: &mut [usize; 2],
+    spec: &ChurnSpec,
+    rng: &mut Rng,
+) -> Result<DeltaOutcome> {
+    // Perturb/Retire hit the larger side (friendlier to the r ≤ N/4
+    // incremental gate); Add grows the smaller side and Remove shrinks
+    // the larger, so the shape stays balanced over a full plan cycle.
+    let larger = if sizes[0] >= sizes[1] { 0 } else { 1 };
+    let smaller = 1 - larger;
+    match op {
+        ChurnOp::Perturb => {
+            let n = sizes[larger];
+            let r = spec.rank.clamp(1, n);
+            let rhos: Vec<f64> =
+                (0..r).map(|j| if j % 2 == 0 { 1.0 } else { -0.5 }).collect();
+            let vectors = rng.uniform_matrix(n, r, -spec.scale, spec.scale);
+            svc.publish_delta(tenant, &KernelDelta::Perturb { side: larger, rhos, vectors })
+        }
+        ChurnOp::Add => {
+            let n = sizes[smaller];
+            let row: Vec<f64> =
+                (0..n).map(|_| rng.uniform_range(-spec.scale, spec.scale)).collect();
+            let out = svc.add_item(tenant, smaller, row, 1.0)?;
+            sizes[smaller] += 1;
+            Ok(out)
+        }
+        ChurnOp::Retire => {
+            let n = sizes[larger];
+            svc.retire_item(tenant, larger, rng.int_range(0, n - 1), 0.3)
+        }
+        ChurnOp::Remove => {
+            let n = sizes[larger];
+            let out = svc.remove_item(tenant, larger, rng.int_range(0, n - 1))?;
+            sizes[larger] -= 1;
+            Ok(out)
+        }
+    }
+}
+
+/// `churn` subcommand: hammer one tenant's catalog with add / retire /
+/// remove / perturb mutations through the incremental delta-publish path
+/// and show each publication's outcome (incremental secular refresh vs
+/// forced exact re-eigendecomposition) plus the churn ledger.
+fn cmd_churn(args: &Args) -> Result<()> {
+    let n1: usize = args.get_or("n1", 40)?;
+    let n2: usize = args.get_or("n2", 40)?;
+    let ops: usize = args.get_or("ops", 20)?;
+    let seed: u64 = args.get_or("seed", 2016)?;
+    let spec = ChurnSpec {
+        every: 1, // every "request" slot is a mutation here
+        rank: args.get_or("rank", 2)?,
+        scale: args.get_or("scale", 0.02)?,
+    };
+    let cfg = ServiceConfig::default();
+    let mut registry =
+        krondpp::coordinator::KernelRegistry::with_history(cfg.max_resident_epochs, cfg.epoch_history);
+    if let Some(d) = args.get_opt::<u64>("max-depth")? {
+        // Bound accumulated secular-refresh drift: force an exact
+        // republish after d consecutive incremental deltas.
+        registry.set_max_delta_depth(d);
+    }
+    let max_depth = registry.max_delta_depth();
+    let registry = std::sync::Arc::new(registry);
+    let mut rng = Rng::new(seed);
+    let truth = krondpp::data::paper_truth_kernel(n1, n2, &mut rng);
+    registry.add_tenant("default", &truth)?;
+    let svc = DppService::start_with_registry(registry, &cfg, seed)?;
+    let tenant = svc.tenant("default")?;
+    println!(
+        "churn: N = {}×{} = {}  ops={ops}  perturb rank={}  max delta depth={max_depth}",
+        n1,
+        n2,
+        n1 * n2,
+        spec.rank,
+    );
+    let plan = churn_plan(&spec, ops);
+    let mut sizes = [n1, n2];
+    for (i, event) in plan.iter().enumerate() {
+        match apply_churn(&svc, tenant, event.op, &mut sizes, &spec, &mut rng) {
+            Ok(out) => println!(
+                "  op {i:>3} {:<7}  gen={:<4} {}  depth={}",
+                format!("{:?}", event.op).to_lowercase(),
+                out.generation,
+                if out.incremental { "incremental" } else { "exact      " },
+                out.depth,
+            ),
+            Err(e) => println!("  op {i:>3} {:<7}  rejected: {e}", format!("{:?}", event.op)),
+        }
+    }
+    // The tenant keeps serving off the delta-built epochs.
+    let y = svc.sample_tenant(tenant, 5.min(sizes[0] * sizes[1]))?;
+    println!("post-churn sample: {y:?}");
+    println!("{}", svc.report());
     Ok(())
 }
 

@@ -37,6 +37,15 @@
 //! eigenvector fills, `λ/(1+λ)` weight grid, two GEMMs) against a warmed
 //! `MarginalScratch`.
 //!
+//! Region F — the steady-state delta-publish refresh: a cached factor
+//! eigendecomposition updated under a rank-r perturbation via
+//! `eigen_update::refresh_into` (eigen-coordinate projection, deflation,
+//! secular solve, eigenvector GEMM) against a caller-held
+//! `EigenUpdateScratch` — the registry's `publish_delta` hot loop.
+//! (The surrounding epoch install allocates by design: a fresh
+//! `Arc<SamplerEpoch>` plus the recombined Kron eigenvalue product —
+//! that's the swap, not the refresh.)
+//!
 //! Buffers are grown on the warm-up iterations; after that no region may
 //! hit the allocator.
 //!
@@ -261,6 +270,43 @@ fn krk_update_and_step_paths_are_allocation_free_in_steady_state() {
     assert_eq!(diag.len(), 24 * 32);
     assert!(diag.iter().all(|&p| (0.0..=1.0 + 1e-12).contains(&p)));
     assert!(gc.as_slice().iter().all(|v| v.is_finite()));
+
+    // Region F warm-up: one secular refresh grows the update scratch
+    // (eigen-coordinate projection, deflation mask, secular operands,
+    // rotated eigenvector panel) to the factor's size; repeated rank-2
+    // refreshes — the registry's per-delta hot path — then stay off the
+    // allocator entirely.
+    use krondpp::linalg::eigen_update::{
+        refresh_into, EigenUpdateScratch, UpdateOptions, UpdateOutcome,
+    };
+    use krondpp::linalg::SymEigen;
+    let fl = sub_kernel(64, &mut rng);
+    let feig = SymEigen::new(&fl).unwrap();
+    let rhos = [0.4f64, -0.2];
+    let vs = rng.uniform_matrix(64, 2, -0.05, 0.05);
+    let opts = UpdateOptions::default();
+    let mut upd_scratch = EigenUpdateScratch::new();
+    for _ in 0..2 {
+        let out = refresh_into(&feig.values, &feig.vectors, &rhos, &vs, &opts, &mut upd_scratch);
+        assert!(matches!(out, UpdateOutcome::Applied { .. }));
+    }
+    measure("rank-r secular eigen refresh path", || {
+        for _ in 0..5 {
+            let out =
+                refresh_into(&feig.values, &feig.vectors, &rhos, &vs, &opts, &mut upd_scratch);
+            assert!(matches!(out, UpdateOutcome::Applied { .. }));
+        }
+    });
+    // The measured refreshes must still produce a real spectrum: ascending
+    // finite eigenvalues matching the perturbed trace.
+    assert_eq!(upd_scratch.values.len(), 64);
+    assert!(upd_scratch.values.windows(2).all(|w| w[0] <= w[1]));
+    let trace: f64 = (0..64).map(|i| fl.get(i, i)).sum();
+    let vtv: f64 = (0..2)
+        .map(|k| rhos[k] * (0..64).map(|i| vs.get(i, k) * vs.get(i, k)).sum::<f64>())
+        .sum();
+    let refreshed: f64 = upd_scratch.values.iter().sum();
+    assert!((refreshed - (trace + vtv)).abs() < 1e-8 * trace.abs().max(1.0));
 }
 
 /// One packed-path GEMM against caller-held scratch (helper so warmup and

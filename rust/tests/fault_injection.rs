@@ -23,7 +23,7 @@ use krondpp::config::{FallbackPolicy, ServiceConfig};
 use krondpp::coordinator::faults::FaultPlan;
 use krondpp::coordinator::{DppService, KernelRegistry, SampleRequest, TenantId};
 use krondpp::data;
-use krondpp::dpp::{Kernel, SampleMode};
+use krondpp::dpp::{Kernel, KernelDelta, SampleMode};
 use krondpp::rng::Rng;
 use krondpp::Error;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -108,6 +108,81 @@ fn poisoned_publish_is_quarantined_and_rollback_restores_service() {
     let m = svc.metrics();
     assert_eq!(m.completed.load(Ordering::Relaxed), 4);
     assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+/// A poisoned delta (non-finite perturbation) is quarantined exactly like
+/// a poisoned full publish: error surfaced, generation and serving epoch
+/// untouched, the churn ledger records no publication, and the tenant
+/// keeps serving; healthy deltas before and after still absorb
+/// incrementally.
+#[test]
+fn poisoned_delta_is_quarantined_and_epoch_survives() {
+    let reg = Arc::new(KernelRegistry::with_history(0, 4));
+    let t = reg.add_tenant("alpha", &kernel(8, 4, 61)).unwrap();
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window_us: 50,
+        ..ServiceConfig::default()
+    };
+    let svc = DppService::start_with_registry(Arc::clone(&reg), &cfg, 62).unwrap();
+    let entry = reg.entry(t).unwrap();
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
+    let g0 = entry.generation();
+
+    // Healthy rank-1 feedback delta: incremental secular refresh.
+    let mut rng = Rng::new(63);
+    let good = KernelDelta::Perturb {
+        side: 0,
+        rhos: vec![1.0],
+        vectors: rng.uniform_matrix(8, 1, -0.05, 0.05),
+    };
+    let out = svc.publish_delta(t, &good).unwrap();
+    assert!(out.incremental, "rank 1 ≤ n/4 must absorb incrementally");
+    assert_eq!(out.generation, g0 + 1);
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
+
+    // Input poisoning: a NaN perturbation vector is screened out before
+    // any state or counter moves.
+    let mut bad_vectors = rng.uniform_matrix(8, 1, -0.05, 0.05);
+    bad_vectors.set(2, 0, f64::NAN);
+    let bad = KernelDelta::Perturb { side: 0, rhos: vec![1.0], vectors: bad_vectors };
+    let epoch_before = reg.acquire(t).unwrap();
+    let err = svc.publish_delta(t, &bad).unwrap_err();
+    assert!(matches!(err, Error::Invalid(_)), "unexpected error class: {err}");
+    assert_eq!(reg.quarantines(), 1);
+    assert_eq!(entry.quarantined_candidates(), 1);
+    assert_eq!(entry.generation(), g0 + 1);
+    let epoch_after = reg.acquire(t).unwrap();
+    assert!(Arc::ptr_eq(&epoch_before, &epoch_after), "quarantine must not swap the epoch");
+    // A quarantined delta is not a publication.
+    assert_eq!(entry.deltas_published(), 1);
+    assert_eq!(reg.delta_publishes(), 1);
+    assert_eq!(draw(&svc, t, 4).unwrap().len(), 4);
+
+    // An indefinite perturbation passes the finite screen but fails the
+    // spectrum validator — same quarantine path, same invariants.
+    let indefinite = KernelDelta::Perturb {
+        side: 1,
+        rhos: vec![-100.0],
+        vectors: rng.uniform_matrix(4, 1, 0.5, 1.0),
+    };
+    let err = svc.publish_delta(t, &indefinite).unwrap_err();
+    assert!(err.to_string().contains("indefinite"), "unexpected quarantine reason: {err}");
+    assert_eq!(reg.quarantines(), 2);
+    assert_eq!(entry.generation(), g0 + 1);
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
+
+    // The tenant still absorbs healthy deltas after the quarantines.
+    let good2 = KernelDelta::Perturb {
+        side: 0,
+        rhos: vec![-0.5],
+        vectors: rng.uniform_matrix(8, 1, -0.05, 0.05),
+    };
+    let out = svc.publish_delta(t, &good2).unwrap();
+    assert_eq!(out.generation, g0 + 2);
+    assert_eq!(draw(&svc, t, 3).unwrap().len(), 3);
     svc.shutdown();
 }
 
