@@ -8,9 +8,13 @@
 //! §Service tables are produced at full budget).
 
 use krondpp::bench_util::{bench_budget_ms, bench_max_n, section, Report};
-use krondpp::config::ServiceConfig;
-use krondpp::coordinator::{DppService, KernelRegistry, SampleRequest, TenantId};
+use krondpp::config::{AdmissionPolicy, ServiceConfig};
+use krondpp::coordinator::{
+    run_replay, DppService, KernelRegistry, NetConfig, NetServer, SampleRequest, TenantId,
+    WireClient,
+};
 use krondpp::data;
+use krondpp::data::workload::{replay, ModeMix, ReplaySpec};
 use krondpp::dpp::KernelDelta;
 use krondpp::rng::Rng;
 use std::sync::Arc;
@@ -379,6 +383,118 @@ fn main() {
             &[("req_per_s", rps), ("p50_ms", p50), ("p95_ms", p95)],
         );
         drop(svc); // Drop drains + joins
+    }
+
+    section("TCP saturation sweep (open-loop replay over loopback, 2 tenants)");
+    {
+        // Two-tenant overload drama: "hog" is token-bucket rate-limited and
+        // Zipf-dominant; "quiet" is unlimited with an SLO. The open-loop
+        // client offers multiples of measured capacity — past 1x the hog's
+        // excess must shed as retryable `throttled` at admission while the
+        // quiet tenant's p99 holds.
+        let cfg = ServiceConfig {
+            workers: 4,
+            max_batch: 32,
+            batch_window_us: 200,
+            queue_capacity: 10_000,
+            shed_queue_depth: 2_000,
+            ..ServiceConfig::default()
+        };
+        let svc = Arc::new(DppService::start(&kernel, &cfg, 9).unwrap());
+        let mut trng = Rng::new(17);
+        let hog = svc
+            .add_tenant("hog", &data::paper_truth_kernel(n1, n2, &mut trng))
+            .unwrap();
+        let quiet = svc
+            .add_tenant("quiet", &data::paper_truth_kernel(n1, n2, &mut trng))
+            .unwrap();
+
+        // Closed-loop capacity probe on the default tenant sizes the sweep.
+        let (base_hz, _, _) = drive(&svc, (requests / 4).max(100), 5);
+
+        // Hog is capped at a quarter of capacity; quiet keeps a 250 ms SLO.
+        svc.set_admission(
+            hog,
+            AdmissionPolicy { rate_hz: base_hz * 0.25, burst: base_hz * 0.125, ..AdmissionPolicy::default() },
+        )
+        .unwrap();
+        svc.set_admission(quiet, AdmissionPolicy { slo_ms: 250, ..AdmissionPolicy::default() })
+            .unwrap();
+
+        let server =
+            NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+        let addr = server.local_addr().to_string();
+        let names = vec!["hog".to_string(), "quiet".to_string()];
+        let per_point = requests.clamp(150, 1500);
+
+        println!(
+            "capacity ~{base_hz:.0}/s; hog capped at {:.0}/s; quiet SLO 250 ms",
+            base_hz * 0.25
+        );
+        println!(
+            "{:<8} {:>12} {:>14} {:>10} {:>12} {:>12}",
+            "offered", "offered/s", "sustained/s", "shed", "hog p99 ms", "quiet p99 ms"
+        );
+        let mut quiet_p99_at_max = 0.0f64;
+        let mut shed_at_max = 0.0f64;
+        for mult in [0.5f64, 1.0, 2.0, 4.0] {
+            let offered_hz = base_hz * mult;
+            let spec = ReplaySpec {
+                tenants: 2,
+                // s=3 puts ~89% of traffic on the hog: the quiet tenant
+                // stays inside remaining capacity even at 4x offered.
+                zipf_s: 3.0,
+                rate_hz: offered_hz,
+                count: per_point,
+                k_lo: 2,
+                k_hi: 8,
+                constraint_fraction: 0.2,
+                ground_size: n1 * n2,
+                mode_mix: ModeMix { exact: 0.7, mcmc: 0.0, lowrank: 0.2, map: 0.1 },
+                ..ReplaySpec::default()
+            };
+            let trace = replay(&spec, &mut Rng::new(4000 + (mult * 10.0) as u64));
+            let out = run_replay(&addr, &names, &trace, 4, None).unwrap();
+            let hog_t = &out.per_tenant[0];
+            let quiet_t = &out.per_tenant[1];
+            println!(
+                "{:<8} {:>12.0} {:>14.0} {:>10.3} {:>12.3} {:>12.3}",
+                format!("{mult}x"),
+                offered_hz,
+                out.sustained_hz(),
+                out.shed_fraction(),
+                hog_t.p99_ms,
+                quiet_t.p99_ms,
+            );
+            report.case_raw(
+                &format!("saturation_{}x", mult),
+                &[
+                    ("offered_hz", offered_hz),
+                    ("sustained_hz", out.sustained_hz()),
+                    ("shed_fraction", out.shed_fraction()),
+                    ("completed", out.completed as f64),
+                    ("throttled", out.throttled as f64),
+                    ("failed", out.failed as f64),
+                    ("hog_p50_ms", hog_t.p50_ms),
+                    ("hog_p99_ms", hog_t.p99_ms),
+                    ("quiet_p50_ms", quiet_t.p50_ms),
+                    ("quiet_p99_ms", quiet_t.p99_ms),
+                ],
+            );
+            quiet_p99_at_max = quiet_t.p99_ms;
+            shed_at_max = out.shed_fraction();
+        }
+        // The two headline curves: overload must shed (throttled, not
+        // queued) and the below-limit tenant's tail must hold its SLO.
+        report.derived("saturation_shed_fraction_at_4x", shed_at_max);
+        report.derived("saturation_quiet_p99_ms_at_4x", quiet_p99_at_max);
+
+        // Graceful wire drain ends the sweep.
+        let mut ctl = WireClient::connect(&addr).unwrap();
+        ctl.shutdown_server().unwrap();
+        server.join();
+        println!("{}", svc.report());
+        drop(svc);
     }
 
     report

@@ -141,16 +141,156 @@ impl LatencyHistogram {
         self.max()
     }
 
-    /// One-line summary for logs/benches.
+    /// One-line summary for logs/benches — same shape as
+    /// [`LatencySketch::summary`], so either type can back a `report()`
+    /// line without changing its parseable layout.
     pub fn summary(&self) -> String {
-        format!(
-            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+        summary_line(
             self.count(),
-            self.mean().as_secs_f64() * 1e3,
-            self.quantile(0.5).as_secs_f64() * 1e3,
-            self.quantile(0.95).as_secs_f64() * 1e3,
-            self.quantile(0.99).as_secs_f64() * 1e3,
-            self.max().as_secs_f64() * 1e3,
+            self.mean(),
+            self.max(),
+            |q| self.quantile(q),
+        )
+    }
+}
+
+/// Shared one-line latency summary: the single `report()` shape both the
+/// legacy [`LatencyHistogram`] and the [`LatencySketch`] render through.
+fn summary_line(
+    count: u64,
+    mean: Duration,
+    max: Duration,
+    quantile: impl Fn(f64) -> Duration,
+) -> String {
+    format!(
+        "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms",
+        count,
+        mean.as_secs_f64() * 1e3,
+        quantile(0.5).as_secs_f64() * 1e3,
+        quantile(0.95).as_secs_f64() * 1e3,
+        quantile(0.99).as_secs_f64() * 1e3,
+        quantile(0.999).as_secs_f64() * 1e3,
+        max.as_secs_f64() * 1e3,
+    )
+}
+
+/// Streaming quantile sketch with guaranteed relative accuracy
+/// (DDSketch-style, Masson et al. 2019): logarithmic buckets at powers of
+/// `γ = (1+α)/(1−α)` with `α = 1%`, so any reported quantile is within
+/// `±1%` (relative) of the exact sample quantile — unlike
+/// [`LatencyHistogram`]'s 5-buckets-per-decade grid, whose bucket-upper
+/// readout can overstate a tail quantile by up to `10^{1/5} ≈ 58%`.
+///
+/// Fully lock-free: the bucket array is fixed (no collapsing) and every
+/// record is three relaxed atomic adds + one atomic max. 1042 buckets
+/// cover 1 µs .. ~1000 s; sub-µs samples land in the underflow bucket
+/// (reported as 1 µs — absolute error ≤ 1 µs there), and the top bucket
+/// saturates. This is the tenant-facing p50/p99/p999 SLO instrument.
+pub struct LatencySketch {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// Relative-accuracy target of [`LatencySketch`].
+pub const SKETCH_ALPHA: f64 = 0.01;
+/// Bucket count: `ceil(ln(10^9)/ln(γ)) ≈ 1037` indices for 1 µs..10^9 µs,
+/// plus the underflow bucket and a little headroom before saturation.
+const SKETCH_BUCKETS: usize = 1042;
+
+#[inline]
+fn sketch_gamma() -> f64 {
+    (1.0 + SKETCH_ALPHA) / (1.0 - SKETCH_ALPHA)
+}
+
+impl Default for LatencySketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencySketch {
+    pub fn new() -> Self {
+        LatencySketch {
+            buckets: (0..SKETCH_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket `i ≥ 1` covers `(γ^{i-1}, γ^i]` µs; bucket 0 is `(0, 1]` µs.
+    fn index(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let i = (us.ln() / sketch_gamma().ln()).ceil() as usize;
+        i.min(SKETCH_BUCKETS - 1)
+    }
+
+    /// Midpoint estimate `2γ^i/(γ+1)` for bucket `i`: for any sample `x`
+    /// in the bucket, `(1−α)·x ≤ estimate ≤ (1+α)·x`.
+    fn value_us(idx: usize) -> f64 {
+        if idx == 0 {
+            return 1.0;
+        }
+        let g = sketch_gamma();
+        g.powi(idx as i32) * 2.0 / (g + 1.0)
+    }
+
+    /// Record one latency sample (lock-free).
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us.ceil() as u64, Ordering::Relaxed);
+        self.buckets[Self::index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    /// Max latency.
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Quantile `q ∈ [0, 1]` by nearest rank, within `±α` relative error
+    /// of the exact sorted-sample quantile (±1 µs in the underflow
+    /// bucket). Concurrent records may race the bucket walk; the readout
+    /// is a consistent-enough snapshot for reporting.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_secs_f64(Self::value_us(i) / 1e6);
+            }
+        }
+        self.max()
+    }
+
+    /// One-line summary — same shape as [`LatencyHistogram::summary`].
+    pub fn summary(&self) -> String {
+        summary_line(
+            self.count(),
+            self.mean(),
+            self.max(),
+            |q| self.quantile(q),
         )
     }
 }
@@ -194,11 +334,15 @@ impl FallbackCounters {
     }
 }
 
-/// Per-tenant counters + latency histogram, held by each registry tenant.
+/// Per-tenant counters + latency sketches, held by each registry tenant.
 #[derive(Default)]
 pub struct TenantMetrics {
     /// Requests accepted into the queue for this tenant.
     pub accepted: AtomicU64,
+    /// Requests shed at admission by this tenant's rate limiter /
+    /// outstanding cap / queue-depth shed ([`crate::error::Error::Throttled`]).
+    /// Never accepted; no queue slot burned.
+    pub throttled: AtomicU64,
     /// Requests rejected as invalid (`k` > ground set, unsatisfiable or
     /// out-of-bounds constraint) — at admission or, after a shrinking
     /// hot-swap raced the queue, at the worker.
@@ -216,8 +360,17 @@ pub struct TenantMetrics {
     pub fallback_served: AtomicU64,
     /// Completed requests by sampler mode.
     pub modes: ModeCounters,
-    /// End-to-end latency of this tenant's requests.
-    pub latency: LatencyHistogram,
+    /// End-to-end latency of this tenant's requests (accept → finish).
+    pub latency: LatencySketch,
+    /// Queue-wait component: accept → dispatch to a worker.
+    pub queue_wait: LatencySketch,
+    /// Serve-time component: dispatch → finish.
+    pub serve_time: LatencySketch,
+    /// End-to-end latency SLO for this tenant, in µs (0 = no SLO).
+    /// Live-tunable; mirrors the tenant's configured `AdmissionPolicy`.
+    pub slo_us: AtomicU64,
+    /// Finished requests whose end-to-end latency exceeded `slo_us`.
+    pub slo_violations: AtomicU64,
 }
 
 impl TenantMetrics {
@@ -225,20 +378,39 @@ impl TenantMetrics {
         Self::default()
     }
 
+    /// Record a finished request's end-to-end latency against the SLO
+    /// (no-op when no SLO is configured). Returns `true` on a breach so
+    /// the caller can mirror it into the global counter.
+    pub fn check_slo(&self, elapsed: Duration) -> bool {
+        let slo = self.slo_us.load(Ordering::Relaxed);
+        if slo > 0 && elapsed.as_micros() as u64 > slo {
+            self.slo_violations.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
     /// One-line per-tenant summary for reports.
     pub fn summary(&self) -> String {
         format!(
-            "accepted={} rejected_invalid={} completed={} conditioned={} failed={} \
-             deadline_exceeded={} fallback_served={} {} latency: {}",
+            "accepted={} throttled={} rejected_invalid={} completed={} conditioned={} failed={} \
+             deadline_exceeded={} fallback_served={} slo_violations={} {} latency: {} \
+             queue[p50={:.3}ms p99={:.3}ms] serve[p50={:.3}ms p99={:.3}ms]",
             self.accepted.load(Ordering::Relaxed),
+            self.throttled.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.conditioned.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.deadline_exceeded.load(Ordering::Relaxed),
             self.fallback_served.load(Ordering::Relaxed),
+            self.slo_violations.load(Ordering::Relaxed),
             self.modes.summary(),
             self.latency.summary(),
+            self.queue_wait.quantile(0.5).as_secs_f64() * 1e3,
+            self.queue_wait.quantile(0.99).as_secs_f64() * 1e3,
+            self.serve_time.quantile(0.5).as_secs_f64() * 1e3,
+            self.serve_time.quantile(0.99).as_secs_f64() * 1e3,
         )
     }
 }
@@ -250,6 +422,10 @@ pub struct ServiceMetrics {
     pub accepted: AtomicU64,
     /// Requests rejected by backpressure.
     pub rejected: AtomicU64,
+    /// Requests shed at admission with [`crate::error::Error::Throttled`]
+    /// (tenant token bucket, outstanding cap, or queue-depth shed). Never
+    /// accepted; no queue slot burned — same fast path as `rejected_invalid`.
+    pub throttled: AtomicU64,
     /// Requests rejected as invalid with [`crate::error::Error::Rejected`]:
     /// at admission control (unknown tenant, `k` larger than the tenant's
     /// current ground set — no queue slot burned) or, rarely, at the
@@ -286,10 +462,15 @@ pub struct ServiceMetrics {
     pub batches: AtomicU64,
     /// Sum of batch sizes (for mean batch size).
     pub batched_requests: AtomicU64,
-    /// End-to-end request latency.
-    pub latency: LatencyHistogram,
-    /// Queue wait before dispatch.
-    pub queue_wait: LatencyHistogram,
+    /// End-to-end request latency (accept → finish).
+    pub latency: LatencySketch,
+    /// Queue wait before dispatch (accept → dispatch).
+    pub queue_wait: LatencySketch,
+    /// Serve time at the worker (dispatch → finish).
+    pub serve_time: LatencySketch,
+    /// Finished requests that blew their tenant's end-to-end SLO
+    /// (sum over tenants with an SLO configured).
+    pub slo_violations: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -307,17 +488,20 @@ impl ServiceMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "accepted={} rejected={} rejected_invalid={} completed={} conditioned={} \
-             conditioning_setups={} failed={} deadline_exceeded={} worker_panics={} \
-             worker_respawns={} batches={} mean_batch={:.2} {} {}\n  latency: {}\n  queue:   {}",
+            "accepted={} rejected={} throttled={} rejected_invalid={} completed={} conditioned={} \
+             conditioning_setups={} failed={} deadline_exceeded={} slo_violations={} \
+             worker_panics={} worker_respawns={} batches={} mean_batch={:.2} {} {}\n  \
+             latency: {}\n  queue:   {}\n  serve:   {}",
             self.accepted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.throttled.load(Ordering::Relaxed),
             self.rejected_invalid.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.conditioned.load(Ordering::Relaxed),
             self.conditioning_setups.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.deadline_exceeded.load(Ordering::Relaxed),
+            self.slo_violations.load(Ordering::Relaxed),
             self.worker_panics.load(Ordering::Relaxed),
             self.worker_respawns.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
@@ -326,6 +510,7 @@ impl ServiceMetrics {
             self.fallback.summary(),
             self.latency.summary(),
             self.queue_wait.summary(),
+            self.serve_time.summary(),
         )
     }
 }
@@ -409,10 +594,126 @@ mod tests {
         t.accepted.store(7, Ordering::Relaxed);
         t.rejected_invalid.store(2, Ordering::Relaxed);
         t.completed.store(5, Ordering::Relaxed);
+        t.throttled.store(3, Ordering::Relaxed);
         t.latency.record(Duration::from_micros(250));
         let s = t.summary();
         assert!(s.contains("accepted=7"));
+        assert!(s.contains("throttled=3"));
         assert!(s.contains("rejected_invalid=2"));
         assert!(s.contains("completed=5"));
+        assert!(s.contains("slo_violations=0"));
+        assert!(s.contains("queue[") && s.contains("serve["), "{s}");
+    }
+
+    #[test]
+    fn tenant_slo_check_counts_only_breaches() {
+        let t = TenantMetrics::new();
+        // No SLO configured: nothing counts.
+        t.check_slo(Duration::from_secs(10));
+        assert_eq!(t.slo_violations.load(Ordering::Relaxed), 0);
+        t.slo_us.store(5_000, Ordering::Relaxed); // 5 ms SLO
+        t.check_slo(Duration::from_millis(4));
+        t.check_slo(Duration::from_millis(5)); // exactly at SLO: not a breach
+        t.check_slo(Duration::from_millis(6));
+        t.check_slo(Duration::from_millis(60));
+        assert_eq!(t.slo_violations.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn sketch_empty_safe() {
+        let s = LatencySketch::new();
+        assert_eq!(s.quantile(0.99), Duration::ZERO);
+        assert_eq!(s.mean(), Duration::ZERO);
+        assert_eq!(s.max(), Duration::ZERO);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn sketch_quantiles_ordered_and_summary_shape_matches_histogram() {
+        let s = LatencySketch::new();
+        for i in 1..=1000u64 {
+            s.record(Duration::from_micros(i * 10));
+        }
+        assert_eq!(s.count(), 1000);
+        let p50 = s.quantile(0.5);
+        let p95 = s.quantile(0.95);
+        let p99 = s.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50:?} {p95:?} {p99:?}");
+        // One report() shape: the sketch and the legacy histogram render
+        // identical field layouts, so readers never branch on the backing.
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        let keys = |line: &str| -> Vec<String> {
+            line.split_whitespace()
+                .map(|f| f.split('=').next().unwrap_or("").to_string())
+                .collect()
+        };
+        assert_eq!(keys(&s.summary()), keys(&h.summary()));
+        for key in ["n", "mean", "p50", "p95", "p99", "p999", "max"] {
+            assert!(s.summary().contains(&format!("{key}=")), "{key}");
+        }
+    }
+
+    /// The sketch's guarantee, checked against a sorted-sample oracle:
+    /// every reported quantile is within `α = 1%` (relative) of the exact
+    /// nearest-rank sample quantile, across a heavy-tailed deterministic
+    /// workload spanning five decades.
+    #[test]
+    fn sketch_error_bounds_against_sorted_oracle() {
+        let s = LatencySketch::new();
+        let mut samples: Vec<f64> = Vec::new();
+        // Deterministic LCG; log-uniform-ish spread over 10 µs .. 1 s.
+        let mut state = 0x2016_2016u64;
+        for _ in 0..20_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+            let us = 10f64 * 10f64.powf(5.0 * u); // 10 µs → 1e6 µs
+            samples.push(us);
+            s.record(Duration::from_secs_f64(us / 1e6));
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        for q in [0.01, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999] {
+            let rank = ((q * samples.len() as f64).ceil() as usize).max(1) - 1;
+            let oracle = samples[rank];
+            let got = s.quantile(q).as_secs_f64() * 1e6;
+            let rel = (got - oracle).abs() / oracle;
+            assert!(
+                rel <= SKETCH_ALPHA + 1e-9,
+                "q={q}: sketch {got:.1}µs vs oracle {oracle:.1}µs (rel err {rel:.4})"
+            );
+        }
+        // Mean/max agree with the oracle too (mean within per-sample
+        // truncation + integer division, ≤2 µs; max within the ceil's 1 µs).
+        let mean_oracle = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mean_got = s.mean().as_secs_f64() * 1e6;
+        assert!((mean_got - mean_oracle).abs() <= 2.0, "{mean_got} vs {mean_oracle}");
+        let max_oracle = samples[samples.len() - 1];
+        let max_got = s.max().as_secs_f64() * 1e6;
+        assert!((max_got - max_oracle).abs() <= 1.0, "{max_got} vs {max_oracle}");
+    }
+
+    #[test]
+    fn sketch_underflow_and_saturation_edges() {
+        let s = LatencySketch::new();
+        s.record(Duration::from_nanos(50)); // sub-µs → underflow bucket
+        assert_eq!(s.count(), 1);
+        let q = s.quantile(0.5).as_secs_f64() * 1e6;
+        assert!(q <= 1.0 + 1e-12, "underflow reported as ≤1µs, got {q}");
+        // Hours-scale sample lands in (or clamps to) the top region
+        // without panicking.
+        s.record(Duration::from_secs(3600));
+        let p99 = s.quantile(0.99).as_secs_f64();
+        assert!(p99 > 3000.0, "p99 {p99}s should reflect the huge sample");
+    }
+
+    #[test]
+    fn service_metrics_report_has_throttle_and_slo_fields() {
+        let m = ServiceMetrics::new();
+        m.throttled.store(9, Ordering::Relaxed);
+        m.slo_violations.store(4, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("throttled=9"), "{r}");
+        assert!(r.contains("slo_violations=4"), "{r}");
+        assert!(r.contains("serve:"), "{r}");
     }
 }

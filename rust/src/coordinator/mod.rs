@@ -29,6 +29,15 @@
 //!   degraded-mode **fallback chain** (jittered regularization, then
 //!   backend downgrade); workers are **supervised** — a panicking job
 //!   fails only its own coalesced group and the worker is respawned.
+//! - [`net`]: the TCP wire boundary — a single non-blocking event-loop
+//!   thread driving length-prefixed JSON frame connections
+//!   (DESIGN.md §3.2) into the same admission fast path, pipelining
+//!   tickets per connection and writing completions as they resolve;
+//!   a wire `shutdown` op drains connections gracefully. Per-tenant
+//!   **token-bucket rate limits** and **queue-depth shedding** reject
+//!   with retryable [`crate::error::Error::Throttled`] before a queue
+//!   slot is burned; per-tenant p50/p99/p999 **SLO tracking** splits
+//!   queue-wait from serve-time ([`metrics`]).
 //! - [`batcher`]: the two-trigger (size/age) batch policy plus the
 //!   `(tenant, k, constraint, mode)` coalescer, property-tested.
 //! - [`router`]: job-weighted least-loaded work routing.
@@ -50,11 +59,13 @@ pub mod batcher;
 pub mod faults;
 pub mod jobs;
 pub mod metrics;
+pub mod net;
 pub mod registry;
 pub mod router;
 pub mod server;
 
 pub use jobs::LearningJob;
+pub use net::{run_replay, NetConfig, NetServer, NetStats, ReplayOutcome, WireClient};
 pub use registry::{DeltaOutcome, KernelRegistry, ModePolicy, SamplerEpoch, TenantId};
 pub use server::{DppService, SampleRequest, Ticket};
 

@@ -1,0 +1,946 @@
+//! Non-blocking TCP serving layer: the wire boundary in front of
+//! [`DppService`] (DESIGN.md §3.2).
+//!
+//! One event-loop thread owns a non-blocking listener plus every
+//! connection state machine — no thread-per-connection, no external
+//! event library (the crate is dependency-free, so readiness is driven
+//! by `WouldBlock` with an adaptive sleep backoff instead of epoll
+//! registration; at serving batch sizes the backoff floor is far below
+//! the batcher's own window). Each connection:
+//!
+//! - decodes length-prefixed JSON frames incrementally
+//!   ([`crate::ser::wire::FrameReader`], bounded by
+//!   [`NetConfig::max_frame_bytes`]);
+//! - submits sample requests through the **same admission fast path**
+//!   as in-process callers — tenant resolution, constraint validation,
+//!   token-bucket throttling and queue-depth shedding all reject before
+//!   a queue slot is burned, and the typed error travels back as a
+//!   `{"err": {...}}` envelope with its retryability intact;
+//! - pipelines up to [`NetConfig::max_pipeline`] in-flight tickets,
+//!   polling [`Ticket::try_ready`] each loop turn and writing
+//!   completions back **as they resolve** (responses may be reordered;
+//!   the `id` field correlates);
+//! - bounds its write buffer: a peer that stops reading past
+//!   [`NetConfig::write_buf_limit`] is disconnected rather than allowed
+//!   to balloon memory.
+//!
+//! Frame-level violations (oversized frames, unreadable sockets) close
+//! the connection; payload-level violations (garbage JSON, unknown ops,
+//! bad fields) produce an error envelope and leave it open. A wire
+//! `shutdown` op calls [`DppService::begin_shutdown`] and flips the
+//! loop into **drain mode**: the listener refuses new connections,
+//! every connection finishes its pending tickets, flushes, and closes,
+//! then the loop exits.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::dpp::Constraint;
+use crate::error::{Error, Result};
+use crate::ser::wire::{encode_frame, FrameReader, WireRequest, WireResponse, DEFAULT_MAX_FRAME};
+
+use super::server::{DppService, SampleRequest, Ticket};
+
+/// Tuning for the connection layer. Defaults are sized for the loopback
+/// integration and bench harnesses; production deployments scale
+/// `max_connections` and `max_pipeline` with client fan-in.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Per-frame payload cap (bytes); oversized frames close the
+    /// connection before the payload is buffered.
+    pub max_frame_bytes: usize,
+    /// Accepted-connection cap; beyond it new sockets are refused
+    /// (accepted then immediately dropped) and counted.
+    pub max_connections: usize,
+    /// In-flight sample tickets per connection; excess requests are
+    /// answered [`Error::Throttled`] without touching the service queue.
+    pub max_pipeline: usize,
+    /// Pending-write cap per connection; a peer that stops reading past
+    /// this is disconnected.
+    pub write_buf_limit: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_frame_bytes: DEFAULT_MAX_FRAME,
+            max_connections: 256,
+            max_pipeline: 64,
+            write_buf_limit: 4 << 20,
+        }
+    }
+}
+
+/// Counters owned by the event loop, shared with the handle.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted into the loop.
+    pub accepted: AtomicU64,
+    /// Connections closed (any reason).
+    pub closed: AtomicU64,
+    /// Sockets refused at the connection cap or during drain.
+    pub refused: AtomicU64,
+    /// Complete request frames decoded.
+    pub frames_in: AtomicU64,
+    /// Response frames fully written.
+    pub frames_out: AtomicU64,
+    /// Payload-level decode failures answered with an error envelope.
+    pub payload_errors: AtomicU64,
+    /// Frame/socket-level violations that closed a connection.
+    pub protocol_errors: AtomicU64,
+    /// Requests refused at the per-connection pipeline cap.
+    pub pipeline_rejections: AtomicU64,
+}
+
+impl NetStats {
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Why a connection is being torn down (folded into `stats.closed`).
+enum CloseReason {
+    PeerClosed,
+    Protocol,
+    Io,
+    Drained,
+}
+
+/// Per-connection state machine.
+struct Connection {
+    stream: TcpStream,
+    reader: FrameReader,
+    write_buf: Vec<u8>,
+    /// Frames queued but not yet fully flushed (feeds `stats.frames_out`).
+    queued_frames: usize,
+    /// `(client id, ticket)` pairs awaiting worker completion.
+    pending: Vec<(u64, Ticket)>,
+    /// Set on frame-level violation or peer EOF: finish pending work,
+    /// flush, then close. No further reads.
+    closing: bool,
+    close_reason: CloseReason,
+}
+
+impl Connection {
+    fn new(stream: TcpStream, max_frame: usize) -> Connection {
+        Connection {
+            stream,
+            reader: FrameReader::new(max_frame),
+            write_buf: Vec::new(),
+            queued_frames: 0,
+            pending: Vec::new(),
+            closing: false,
+            close_reason: CloseReason::Drained,
+        }
+    }
+
+    /// Drive the connection one turn; returns `true` if any byte moved
+    /// or any ticket resolved (feeds the loop's sleep backoff).
+    fn progress(&mut self, svc: &DppService, cfg: &NetConfig, stats: &NetStats) -> bool {
+        let mut worked = false;
+        if !self.closing {
+            worked |= self.read_frames(svc, cfg, stats);
+        }
+        worked |= self.poll_tickets(cfg, stats);
+        worked |= self.flush(stats);
+        worked
+    }
+
+    /// Non-blocking read + frame decode + request dispatch.
+    fn read_frames(&mut self, svc: &DppService, cfg: &NetConfig, stats: &NetStats) -> bool {
+        let mut worked = false;
+        let mut chunk = [0u8; 8192];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.begin_close(CloseReason::PeerClosed);
+                    break;
+                }
+                Ok(n) => {
+                    worked = true;
+                    self.reader.push(&chunk[..n]);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    NetStats::bump(&stats.protocol_errors);
+                    self.begin_close(CloseReason::Io);
+                    break;
+                }
+            }
+        }
+        loop {
+            match self.reader.next() {
+                Ok(Some(payload)) => {
+                    // Frames already buffered are still served even if the
+                    // peer half-closed or a shutdown op flipped `closing` —
+                    // only frame-level errors abandon the decode loop.
+                    worked = true;
+                    NetStats::bump(&stats.frames_in);
+                    self.handle_payload(&payload, svc, cfg, stats);
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    // Oversized frame: hard protocol error. Best-effort
+                    // error envelope, then close.
+                    NetStats::bump(&stats.protocol_errors);
+                    self.queue_response(
+                        &WireResponse::Failure {
+                            id: 0,
+                            kind: "parse".into(),
+                            retryable: false,
+                            message: format!(
+                                "frame exceeds {} byte cap",
+                                cfg.max_frame_bytes
+                            ),
+                        },
+                        cfg,
+                    );
+                    self.begin_close(CloseReason::Protocol);
+                    break;
+                }
+            }
+        }
+        worked
+    }
+
+    /// Decode one payload and dispatch the op. Payload-level failures
+    /// answer an error envelope and keep the connection open.
+    fn handle_payload(&mut self, payload: &[u8], svc: &DppService, cfg: &NetConfig, stats: &NetStats) {
+        let req = match WireRequest::from_payload(payload) {
+            Ok(req) => req,
+            Err(e) => {
+                NetStats::bump(&stats.payload_errors);
+                self.queue_response(&WireResponse::from_error(0, &e), cfg);
+                return;
+            }
+        };
+        let id = req.id();
+        match req {
+            WireRequest::Sample { tenant, k, mode, include, exclude, budget_ms, .. } => {
+                if self.pending.len() >= cfg.max_pipeline {
+                    NetStats::bump(&stats.pipeline_rejections);
+                    let err = Error::Throttled(format!(
+                        "connection pipeline full ({} in flight)",
+                        self.pending.len()
+                    ));
+                    self.queue_response(&WireResponse::from_error(id, &err), cfg);
+                    return;
+                }
+                let built = svc.tenant(&tenant).and_then(|tid| {
+                    let mut sr = SampleRequest::for_tenant(tid, k).with_mode(mode);
+                    if !include.is_empty() || !exclude.is_empty() {
+                        sr = sr.with_constraint(Constraint::new(include, exclude)?);
+                    }
+                    if let Some(ms) = budget_ms {
+                        sr = sr.with_budget(Duration::from_millis(ms));
+                    }
+                    svc.submit(sr)
+                });
+                match built {
+                    // Completion is polled by `poll_tickets`.
+                    Ok(ticket) => self.pending.push((id, ticket)),
+                    // Admission fast path: throttle/shed/reject without a
+                    // queue slot — the typed error goes straight back.
+                    Err(e) => self.queue_response(&WireResponse::from_error(id, &e), cfg),
+                }
+            }
+            WireRequest::Marginals { tenant, .. } => {
+                let resp = match svc.tenant(&tenant).and_then(|tid| svc.marginals(tid)) {
+                    Ok(m) => WireResponse::Marginals { id, marginals: m.as_ref().clone() },
+                    Err(e) => WireResponse::from_error(id, &e),
+                };
+                self.queue_response(&resp, cfg);
+            }
+            WireRequest::PublishDelta { tenant, delta, .. } => {
+                let resp = match svc.tenant(&tenant).and_then(|tid| svc.publish_delta(tid, &delta))
+                {
+                    Ok(out) => WireResponse::Delta {
+                        id,
+                        generation: out.generation,
+                        incremental: out.incremental,
+                        depth: out.depth,
+                    },
+                    Err(e) => WireResponse::from_error(id, &e),
+                };
+                self.queue_response(&resp, cfg);
+            }
+            WireRequest::Report { .. } => {
+                let resp = WireResponse::Report { id, report: svc.report() };
+                self.queue_response(&resp, cfg);
+            }
+            WireRequest::Shutdown { .. } => {
+                // Global drain: the loop observes `svc.is_shutdown()` and
+                // stops accepting; this connection acknowledges, finishes
+                // its pending tickets, and closes.
+                svc.begin_shutdown();
+                self.queue_response(&WireResponse::ShuttingDown { id }, cfg);
+                self.begin_close(CloseReason::Drained);
+            }
+        }
+    }
+
+    /// Poll in-flight tickets; completed ones are written back in
+    /// completion order (client correlates by id).
+    fn poll_tickets(&mut self, cfg: &NetConfig, _stats: &NetStats) -> bool {
+        let mut worked = false;
+        let mut i = 0;
+        while i < self.pending.len() {
+            if let Some(result) = self.pending[i].1.try_ready() {
+                let (id, _) = self.pending.swap_remove(i);
+                let resp = match result {
+                    Ok(items) => WireResponse::Items { id, items },
+                    Err(e) => WireResponse::from_error(id, &e),
+                };
+                self.queue_response(&resp, cfg);
+                worked = true;
+            } else {
+                i += 1;
+            }
+        }
+        worked
+    }
+
+    /// Append an encoded frame to the write buffer.
+    fn queue_response(&mut self, resp: &WireResponse, cfg: &NetConfig) {
+        self.queued_frames += 1;
+        match encode_frame(resp.encode().to_string().as_bytes(), cfg.max_frame_bytes) {
+            Ok(frame) => self.write_buf.extend_from_slice(&frame),
+            Err(_) => {
+                // A response we cannot frame (report larger than the cap):
+                // replace with a minimal error envelope.
+                if let Ok(frame) = WireResponse::Failure {
+                    id: resp.id(),
+                    kind: "service".into(),
+                    retryable: false,
+                    message: "response exceeds frame cap".into(),
+                }
+                .to_frame(cfg.max_frame_bytes)
+                {
+                    self.write_buf.extend_from_slice(&frame);
+                }
+            }
+        }
+    }
+
+    /// Non-blocking write of the buffered frames.
+    fn flush(&mut self, stats: &NetStats) -> bool {
+        let mut worked = false;
+        while !self.write_buf.is_empty() {
+            match self.stream.write(&self.write_buf) {
+                Ok(0) => {
+                    self.begin_close(CloseReason::Io);
+                    break;
+                }
+                Ok(n) => {
+                    worked = true;
+                    self.write_buf.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    NetStats::bump(&stats.protocol_errors);
+                    self.begin_close(CloseReason::Io);
+                    break;
+                }
+            }
+        }
+        if self.write_buf.is_empty() && self.queued_frames > 0 {
+            stats.frames_out.fetch_add(self.queued_frames as u64, Ordering::Relaxed);
+            self.queued_frames = 0;
+        }
+        worked
+    }
+
+    fn begin_close(&mut self, reason: CloseReason) {
+        if !self.closing {
+            self.closing = true;
+            self.close_reason = reason;
+        }
+    }
+
+    /// Ready to drop: closing, nothing in flight, nothing to flush.
+    /// On hard IO errors pending tickets are abandoned — the workers
+    /// still run them and the service ledger still books one outcome
+    /// per accepted job; only the reply has nowhere to go.
+    fn finished(&self) -> bool {
+        match self.close_reason {
+            CloseReason::Io => self.closing,
+            _ => self.closing && self.pending.is_empty() && self.write_buf.is_empty(),
+        }
+    }
+
+    /// Over the pending-write cap: the peer has stopped reading.
+    fn write_overflow(&self, cfg: &NetConfig) -> bool {
+        self.write_buf.len() > cfg.write_buf_limit
+    }
+}
+
+/// Handle to the serving thread. Dropping it does NOT stop the loop;
+/// call [`NetServer::stop`] (or drive a wire `shutdown`).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start the event loop
+    /// serving `svc`.
+    pub fn start(svc: Arc<DppService>, addr: &str, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stats = Arc::new(NetStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let loop_stats = Arc::clone(&stats);
+        let loop_stop = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("krondpp-net".into())
+            .spawn(move || event_loop(listener, svc, cfg, loop_stats, loop_stop))
+            .map_err(|e| Error::Service(format!("failed to spawn net thread: {e}")))?;
+        Ok(NetServer { local_addr, stats, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Live counters.
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// `true` once the event loop has exited (all connections drained).
+    pub fn is_finished(&self) -> bool {
+        self.handle.as_ref().map(|h| h.is_finished()).unwrap_or(true)
+    }
+
+    /// Request the loop to drain and exit, then join it. Existing
+    /// connections finish pending work; new ones are refused.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Join without signalling — for callers that already drove a wire
+    /// `shutdown` and want to wait for the natural drain.
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn event_loop(
+    listener: TcpListener,
+    svc: Arc<DppService>,
+    cfg: NetConfig,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) {
+    const BACKOFF_FLOOR: Duration = Duration::from_micros(50);
+    const BACKOFF_CEIL: Duration = Duration::from_millis(2);
+    let mut conns: Vec<Connection> = Vec::new();
+    let mut backoff = BACKOFF_FLOOR;
+    loop {
+        let draining = stop.load(Ordering::SeqCst) || svc.is_shutdown();
+        let mut worked = false;
+
+        // Accept phase (skipped while draining).
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if draining || conns.len() >= cfg.max_connections {
+                        NetStats::bump(&stats.refused);
+                        drop(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        NetStats::bump(&stats.refused);
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    NetStats::bump(&stats.accepted);
+                    conns.push(Connection::new(stream, cfg.max_frame_bytes));
+                    worked = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+
+        // Connection phase.
+        let mut i = 0;
+        while i < conns.len() {
+            worked |= conns[i].progress(&svc, &cfg, &stats);
+            if draining && !conns[i].closing && conns[i].pending.is_empty() {
+                // Global drain: close idle connections once their queue
+                // is empty; in-flight work is allowed to finish first.
+                conns[i].begin_close(CloseReason::Drained);
+            }
+            if conns[i].write_overflow(&cfg) {
+                NetStats::bump(&stats.protocol_errors);
+                conns[i].begin_close(CloseReason::Io);
+            }
+            if conns[i].finished() {
+                NetStats::bump(&stats.closed);
+                conns.swap_remove(i);
+                worked = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        if draining && conns.is_empty() {
+            return;
+        }
+
+        // Adaptive backoff: busy turns reset to the floor, idle turns
+        // double toward the ceiling.
+        if worked {
+            backoff = BACKOFF_FLOOR;
+        } else {
+            thread::sleep(backoff);
+            backoff = (backoff * 2).min(BACKOFF_CEIL);
+        }
+    }
+}
+
+/// Blocking client for the wire protocol — used by the CLI `client`
+/// subcommand, the loopback tests, and the saturation bench. Supports
+/// pipelining via the split [`WireClient::send`] / [`WireClient::recv`]
+/// halves; [`WireClient::request`] is the one-in-one-out convenience.
+pub struct WireClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+    max_frame: usize,
+}
+
+impl WireClient {
+    /// Connect (blocking) to a serving endpoint.
+    pub fn connect(addr: &str) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(WireClient {
+            stream,
+            reader: FrameReader::new(DEFAULT_MAX_FRAME),
+            next_id: 1,
+            max_frame: DEFAULT_MAX_FRAME,
+        })
+    }
+
+    /// Connect with a read timeout so a dead server cannot hang tests.
+    pub fn connect_timeout(addr: &str, read_timeout: Duration) -> Result<WireClient> {
+        let c = WireClient::connect(addr)?;
+        c.stream.set_read_timeout(Some(read_timeout))?;
+        Ok(c)
+    }
+
+    /// Allocate the next client-side correlation id.
+    pub fn next_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Write one request frame (blocking).
+    pub fn send(&mut self, req: &WireRequest) -> Result<()> {
+        let frame = req.to_frame(self.max_frame)?;
+        self.stream.write_all(&frame)?;
+        Ok(())
+    }
+
+    /// Non-blocking receive: drain whatever the socket has buffered and
+    /// return the next complete response, or `None` if nothing is ready.
+    pub fn try_recv(&mut self) -> Result<Option<WireResponse>> {
+        if let Some(payload) = self.reader.next()? {
+            return Ok(Some(WireResponse::from_payload(&payload)?));
+        }
+        self.stream.set_nonblocking(true)?;
+        let mut chunk = [0u8; 8192];
+        let mut closed = false;
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    closed = true;
+                    break;
+                }
+                Ok(n) => self.reader.push(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    let _ = self.stream.set_nonblocking(false);
+                    return Err(Error::Io(e));
+                }
+            }
+        }
+        self.stream.set_nonblocking(false)?;
+        if let Some(payload) = self.reader.next()? {
+            return Ok(Some(WireResponse::from_payload(&payload)?));
+        }
+        if closed {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )));
+        }
+        Ok(None)
+    }
+
+    /// Read the next response frame (blocking).
+    pub fn recv(&mut self) -> Result<WireResponse> {
+        loop {
+            if let Some(payload) = self.reader.next()? {
+                return WireResponse::from_payload(&payload);
+            }
+            let mut chunk = [0u8; 8192];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "server closed the connection",
+                    )))
+                }
+                Ok(n) => self.reader.push(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Error::Io(e)),
+            }
+        }
+    }
+
+    /// One-in-one-out request/response.
+    pub fn request(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Sample a slate; typed errors (throttled, rejected, deadline, …)
+    /// come back as the original [`Error`] kind.
+    pub fn sample(
+        &mut self,
+        tenant: &str,
+        k: usize,
+        mode: crate::dpp::SampleMode,
+        include: Vec<usize>,
+        exclude: Vec<usize>,
+        budget_ms: Option<u64>,
+    ) -> Result<Vec<usize>> {
+        let id = self.next_id();
+        self.request(&WireRequest::Sample {
+            id,
+            tenant: tenant.into(),
+            k,
+            mode,
+            include,
+            exclude,
+            budget_ms,
+        })?
+        .into_items()
+    }
+
+    /// Fetch per-item inclusion marginals.
+    pub fn marginals(&mut self, tenant: &str) -> Result<Vec<f64>> {
+        let id = self.next_id();
+        match self.request(&WireRequest::Marginals { id, tenant: tenant.into() })? {
+            WireResponse::Marginals { marginals, .. } => Ok(marginals),
+            WireResponse::Failure { kind, message, .. } => {
+                Err(crate::ser::wire::decode_error(&kind, &message))
+            }
+            other => Err(Error::Parse(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Fetch the service metrics report.
+    pub fn report(&mut self) -> Result<String> {
+        let id = self.next_id();
+        match self.request(&WireRequest::Report { id })? {
+            WireResponse::Report { report, .. } => Ok(report),
+            WireResponse::Failure { kind, message, .. } => {
+                Err(crate::ser::wire::decode_error(&kind, &message))
+            }
+            other => Err(Error::Parse(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Ask the server to drain and shut down.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let id = self.next_id();
+        match self.request(&WireRequest::Shutdown { id })? {
+            WireResponse::ShuttingDown { .. } => Ok(()),
+            WireResponse::Failure { kind, message, .. } => {
+                Err(crate::ser::wire::decode_error(&kind, &message))
+            }
+            other => Err(Error::Parse(format!("unexpected response {other:?}"))),
+        }
+    }
+}
+
+/// Client-observed tallies from one tenant of a replay run. Latency
+/// percentiles are exact (sorted samples) over *completed* requests.
+#[derive(Clone, Debug, Default)]
+pub struct TenantReplay {
+    pub name: String,
+    pub sent: usize,
+    pub completed: usize,
+    pub throttled: usize,
+    pub rejected: usize,
+    pub deadline: usize,
+    pub failed: usize,
+    /// Client-observed round-trip p50 of completed requests (ms).
+    pub p50_ms: f64,
+    /// Client-observed round-trip p99 of completed requests (ms).
+    pub p99_ms: f64,
+}
+
+/// Aggregate outcome of [`run_replay`].
+#[derive(Clone, Debug, Default)]
+pub struct ReplayOutcome {
+    pub sent: usize,
+    pub completed: usize,
+    pub throttled: usize,
+    pub rejected: usize,
+    pub deadline: usize,
+    pub failed: usize,
+    /// Wall-clock from first send to last settled response.
+    pub wall: Duration,
+    pub per_tenant: Vec<TenantReplay>,
+}
+
+impl ReplayOutcome {
+    /// Sustained completion throughput (completed / wall, req/s).
+    pub fn sustained_hz(&self) -> f64 {
+        let w = self.wall.as_secs_f64();
+        if w > 0.0 {
+            self.completed as f64 / w
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of sent requests shed by admission control.
+    pub fn shed_fraction(&self) -> f64 {
+        if self.sent > 0 {
+            self.throttled as f64 / self.sent as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+fn exact_quantile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Drive a [`crate::data::workload::replay`] trace against a serving
+/// endpoint, **open loop**: each request fires at its scheduled arrival
+/// offset no matter how many earlier ones are still in flight, so an
+/// overloaded server sees the full offered rate — the regime where
+/// admission control must shed. The trace is partitioned round-robin
+/// over `conns` pipelined connections, each on its own thread;
+/// `req.tenant` indexes `tenant_names` (mod its length).
+pub fn run_replay(
+    addr: &str,
+    tenant_names: &[String],
+    trace: &[crate::data::workload::ReplayRequest],
+    conns: usize,
+    budget_ms: Option<u64>,
+) -> Result<ReplayOutcome> {
+    let conns = conns.max(1);
+    if tenant_names.is_empty() {
+        return Err(Error::Invalid("replay needs at least one tenant name".into()));
+    }
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(conns);
+    for c in 0..conns {
+        let my_trace: Vec<crate::data::workload::ReplayRequest> =
+            trace.iter().skip(c).step_by(conns).cloned().collect();
+        let names: Vec<String> = tenant_names.to_vec();
+        let addr = addr.to_string();
+        let handle = thread::Builder::new()
+            .name(format!("replay-{c}"))
+            .spawn(move || replay_worker(&addr, &names, &my_trace, budget_ms, t0))
+            .map_err(|e| Error::Service(format!("failed to spawn replay worker: {e}")))?;
+        handles.push(handle);
+    }
+    let mut out = ReplayOutcome {
+        per_tenant: tenant_names
+            .iter()
+            .map(|n| TenantReplay { name: n.clone(), ..TenantReplay::default() })
+            .collect(),
+        ..ReplayOutcome::default()
+    };
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); tenant_names.len()];
+    for handle in handles {
+        let part = handle
+            .join()
+            .map_err(|_| Error::Service("replay worker panicked".into()))??;
+        out.sent += part.sent;
+        out.completed += part.completed;
+        out.throttled += part.throttled;
+        out.rejected += part.rejected;
+        out.deadline += part.deadline;
+        out.failed += part.failed;
+        for (t, mut lat) in part.latencies_ms.into_iter().enumerate() {
+            latencies[t].append(&mut lat);
+        }
+        for (t, counts) in part.per_tenant.into_iter().enumerate() {
+            out.per_tenant[t].sent += counts.0;
+            out.per_tenant[t].completed += counts.1;
+            out.per_tenant[t].throttled += counts.2;
+            out.per_tenant[t].rejected += counts.3;
+            out.per_tenant[t].deadline += counts.4;
+            out.per_tenant[t].failed += counts.5;
+        }
+    }
+    out.wall = t0.elapsed();
+    for (t, lat) in latencies.iter_mut().enumerate() {
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        out.per_tenant[t].p50_ms = exact_quantile_ms(lat, 0.50);
+        out.per_tenant[t].p99_ms = exact_quantile_ms(lat, 0.99);
+    }
+    Ok(out)
+}
+
+/// One replay connection: open-loop sends, opportunistic drains, final
+/// blocking drain. Returns per-tenant `(sent, completed, throttled,
+/// rejected, deadline, failed)` plus completed-request latencies.
+struct ReplayPart {
+    sent: usize,
+    completed: usize,
+    throttled: usize,
+    rejected: usize,
+    deadline: usize,
+    failed: usize,
+    per_tenant: Vec<(usize, usize, usize, usize, usize, usize)>,
+    latencies_ms: Vec<Vec<f64>>,
+}
+
+fn replay_worker(
+    addr: &str,
+    names: &[String],
+    trace: &[crate::data::workload::ReplayRequest],
+    budget_ms: Option<u64>,
+    t0: std::time::Instant,
+) -> Result<ReplayPart> {
+    use std::collections::HashMap;
+    let mut client = WireClient::connect_timeout(addr, Duration::from_secs(30))?;
+    let mut part = ReplayPart {
+        sent: 0,
+        completed: 0,
+        throttled: 0,
+        rejected: 0,
+        deadline: 0,
+        failed: 0,
+        per_tenant: vec![(0, 0, 0, 0, 0, 0); names.len()],
+        latencies_ms: vec![Vec::new(); names.len()],
+    };
+    // id -> (tenant index, send instant)
+    let mut inflight: HashMap<u64, (usize, std::time::Instant)> = HashMap::new();
+
+    let mut settle =
+        |resp: WireResponse,
+         inflight: &mut HashMap<u64, (usize, std::time::Instant)>,
+         part: &mut ReplayPart| {
+            let Some((tenant, sent_at)) = inflight.remove(&resp.id()) else {
+                return;
+            };
+            match resp.into_items() {
+                Ok(_) => {
+                    part.completed += 1;
+                    part.per_tenant[tenant].1 += 1;
+                    part.latencies_ms[tenant].push(sent_at.elapsed().as_secs_f64() * 1e3);
+                }
+                Err(e) => match e.kind() {
+                    crate::error::ErrorKind::Throttled => {
+                        part.throttled += 1;
+                        part.per_tenant[tenant].2 += 1;
+                    }
+                    crate::error::ErrorKind::Rejected => {
+                        part.rejected += 1;
+                        part.per_tenant[tenant].3 += 1;
+                    }
+                    crate::error::ErrorKind::Deadline => {
+                        part.deadline += 1;
+                        part.per_tenant[tenant].4 += 1;
+                    }
+                    _ => {
+                        part.failed += 1;
+                        part.per_tenant[tenant].5 += 1;
+                    }
+                },
+            }
+        };
+
+    for req in trace {
+        // Open loop: fire at the scheduled offset regardless of backlog.
+        loop {
+            let now = t0.elapsed();
+            if now >= req.at {
+                break;
+            }
+            let gap = req.at - now;
+            if gap > Duration::from_micros(300) {
+                thread::sleep(gap - Duration::from_micros(200));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let tenant = req.tenant % names.len();
+        let id = client.next_id();
+        let wire = WireRequest::Sample {
+            id,
+            tenant: names[tenant].clone(),
+            k: req.k,
+            mode: req.mode,
+            include: req.include.clone(),
+            exclude: req.exclude.clone(),
+            budget_ms,
+        };
+        match client.send(&wire) {
+            Ok(()) => {
+                part.sent += 1;
+                part.per_tenant[tenant].0 += 1;
+                inflight.insert(id, (tenant, std::time::Instant::now()));
+            }
+            Err(_) => {
+                part.failed += 1;
+                part.per_tenant[tenant].5 += 1;
+                continue;
+            }
+        }
+        // Opportunistic drain keeps the pipeline inside the server's
+        // per-connection cap during long traces.
+        while let Ok(Some(resp)) = client.try_recv() {
+            settle(resp, &mut inflight, &mut part);
+        }
+    }
+    // Final drain: everything still in flight (bounded by the client
+    // read timeout if the server dies).
+    while !inflight.is_empty() {
+        match client.recv() {
+            Ok(resp) => settle(resp, &mut inflight, &mut part),
+            Err(_) => break,
+        }
+    }
+    // Whatever never came back is a failure from the client's seat.
+    for (tenant, _) in inflight.into_values() {
+        part.failed += 1;
+        part.per_tenant[tenant].5 += 1;
+    }
+    Ok(part)
+}

@@ -60,6 +60,7 @@
 //! every pending delta into one eigendecomposition. Malformed or
 //! poisoned deltas are quarantined exactly like poisoned full publishes.
 
+use crate::config::AdmissionPolicy;
 use crate::coordinator::metrics::TenantMetrics;
 use crate::coordinator::{read_clean, write_clean};
 use crate::dpp::backend::SampleMode;
@@ -234,6 +235,15 @@ struct EpochRecord {
     kernel: Kernel,
 }
 
+/// Token-bucket state behind a tenant's admission mutex. The lock is held
+/// for a handful of float ops on the submit fast path — contention is
+/// per-tenant and negligible next to the queue mutex it fronts.
+struct AdmissionBucket {
+    policy: AdmissionPolicy,
+    tokens: f64,
+    last: std::time::Instant,
+}
+
 /// A registry tenant: identity, the epoch slot, LRU/load accounting and
 /// per-tenant metrics. Shared as `Arc` between the registry, queued jobs
 /// and metric reporters.
@@ -245,6 +255,11 @@ pub struct TenantEntry {
     last_touch: AtomicU64,
     /// Jobs dispatched to workers and not yet finished (per-tenant load).
     pub(crate) in_flight: AtomicUsize,
+    /// Requests accepted at admission and not yet finished (queued *or*
+    /// dispatched) — what the admission policy's `max_outstanding` caps.
+    pub(crate) outstanding: AtomicUsize,
+    /// Admission-control token bucket + policy (live-tunable).
+    admission: Mutex<AdmissionBucket>,
     /// Allowed sampler-mode families ([`ModePolicy`] mask), checked at
     /// admission. Atomic so policy swaps need no lock and no republish.
     mode_policy: AtomicU8,
@@ -288,6 +303,63 @@ impl TenantEntry {
     /// Jobs currently dispatched for this tenant (load accounting).
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Requests accepted and not yet finished (queued or dispatched).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+
+    /// The tenant's current admission policy.
+    pub fn admission_policy(&self) -> AdmissionPolicy {
+        crate::coordinator::lock_clean(&self.admission).policy
+    }
+
+    /// Swap the tenant's admission policy (live-tunable; takes effect on
+    /// the next submit). The bucket refills to the new burst so a tenant
+    /// whose limit was just *raised* isn't still throttled by old debt,
+    /// and the SLO mirror on the metrics updates atomically with it.
+    pub fn set_admission(&self, policy: AdmissionPolicy) {
+        {
+            let mut b = crate::coordinator::lock_clean(&self.admission);
+            b.policy = policy;
+            b.tokens = policy.effective_burst();
+            b.last = std::time::Instant::now();
+        }
+        self.metrics
+            .slo_us
+            .store(policy.slo_ms.saturating_mul(1000), Ordering::Relaxed);
+    }
+
+    /// Admission fast path: enforce the outstanding cap, then refill and
+    /// take one token. `Err(reason)` means "shed with
+    /// [`crate::error::Error::Throttled`]" — checked *before* any queue
+    /// slot is considered, so shedding costs one mutex and a few float
+    /// ops. The outstanding cap is checked before the bucket so a capped
+    /// request doesn't burn a token it was never going to use.
+    pub(crate) fn try_admit(&self, now: std::time::Instant) -> std::result::Result<(), String> {
+        let mut b = crate::coordinator::lock_clean(&self.admission);
+        let policy = b.policy;
+        let outstanding = self.outstanding.load(Ordering::SeqCst);
+        if policy.max_outstanding > 0 && outstanding >= policy.max_outstanding {
+            return Err(format!(
+                "tenant '{}': {} requests outstanding (cap {})",
+                self.name, outstanding, policy.max_outstanding
+            ));
+        }
+        if policy.rate_hz > 0.0 {
+            let dt = now.saturating_duration_since(b.last).as_secs_f64();
+            b.last = now;
+            b.tokens = (b.tokens + dt * policy.rate_hz).min(policy.effective_burst());
+            if b.tokens < 1.0 {
+                return Err(format!(
+                    "tenant '{}': rate limit {:.0}/s exceeded",
+                    self.name, policy.rate_hz
+                ));
+            }
+            b.tokens -= 1.0;
+        }
+        Ok(())
     }
 
     /// Current ground-set size — readable without building an epoch, so
@@ -592,6 +664,12 @@ impl KernelRegistry {
             }),
             last_touch: AtomicU64::new(touch),
             in_flight: AtomicUsize::new(0),
+            outstanding: AtomicUsize::new(0),
+            admission: Mutex::new(AdmissionBucket {
+                policy: AdmissionPolicy::default(),
+                tokens: AdmissionPolicy::default().effective_burst(),
+                last: std::time::Instant::now(),
+            }),
             mode_policy: AtomicU8::new(ModePolicy::allow_all().mask),
             metrics: TenantMetrics::new(),
             quarantined: AtomicU64::new(0),

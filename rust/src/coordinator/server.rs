@@ -54,7 +54,7 @@
 //! deterministic [`crate::coordinator::faults::FaultPlan`] through these
 //! seams.
 
-use crate::config::{FallbackPolicy, ServiceConfig};
+use crate::config::{AdmissionPolicy, FallbackPolicy, ServiceConfig};
 use crate::coordinator::batcher::{coalesce_by_key, BatchPolicy, BatchQueue, Pending};
 use crate::coordinator::lock_clean;
 use crate::coordinator::metrics::ServiceMetrics;
@@ -166,6 +166,10 @@ struct Job {
     entry: Arc<TenantEntry>,
     respond: mpsc::Sender<Result<Vec<usize>>>,
     accepted: Instant,
+    /// Stamped by [`dispatch`] when the job leaves the queue for a worker
+    /// — splits end-to-end latency into queue-wait (accepted → dispatched)
+    /// and serve-time (dispatched → finish) sketch components.
+    dispatched: Option<Instant>,
     /// Set by [`finish`]; lets the worker's panic handler fail exactly the
     /// jobs of a panicked group that never produced an outcome, without
     /// double-counting the ones that did.
@@ -186,6 +190,7 @@ struct JobMeta {
     respond: mpsc::Sender<Result<Vec<usize>>>,
     entry: Arc<TenantEntry>,
     accepted: Instant,
+    dispatched: Option<Instant>,
 }
 
 impl JobMeta {
@@ -195,12 +200,14 @@ impl JobMeta {
             respond: job.respond.clone(),
             entry: Arc::clone(&job.entry),
             accepted: job.accepted,
+            dispatched: job.dispatched,
         }
     }
 
     /// Fail-finish a job whose serve panicked before reaching [`finish`]:
-    /// same accounting (`failed`, latency) and a definitive error on the
-    /// ticket, skipping jobs that already completed.
+    /// same accounting (`failed`, latency splits, outstanding release,
+    /// SLO check) and a definitive error on the ticket, skipping jobs
+    /// that already completed.
     fn fail_if_unfinished(self, shared: &Shared) {
         if self.done.load(Ordering::SeqCst) {
             return;
@@ -211,6 +218,15 @@ impl JobMeta {
         let tm = self.entry.metrics();
         tm.latency.record(elapsed);
         tm.failed.fetch_add(1, Ordering::Relaxed);
+        if let Some(d) = self.dispatched {
+            let serve = d.elapsed();
+            shared.metrics.serve_time.record(serve);
+            tm.serve_time.record(serve);
+        }
+        if tm.check_slo(elapsed) {
+            shared.metrics.slo_violations.fetch_add(1, Ordering::Relaxed);
+        }
+        self.entry.outstanding.fetch_sub(1, Ordering::SeqCst);
         let _ = self.respond.send(Err(Error::Service(format!(
             "tenant '{}': worker panicked while serving the group",
             self.entry.name()
@@ -245,6 +261,22 @@ impl Ticket {
             }
         }
     }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some(result)` once it resolved (a disconnect resolves to the
+    /// usual `Service` error). The result is delivered exactly once —
+    /// after `Some`, the ticket is spent and further polls return the
+    /// disconnect error. This is the readiness probe the non-blocking
+    /// connection layer ([`super::net`]) drives its event loop with.
+    pub fn try_ready(&self) -> Option<Result<Vec<usize>>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(Error::Service("service dropped the request".into())))
+            }
+        }
+    }
 }
 
 struct Shared {
@@ -256,6 +288,13 @@ struct Shared {
     metrics: ServiceMetrics,
     shutdown: AtomicBool,
     capacity: usize,
+    /// Queue depth at which admission starts shedding with the retryable
+    /// [`Error::Throttled`] (0 = disabled; see
+    /// [`crate::config::ServiceConfig::shed_queue_depth`]).
+    shed_queue_depth: usize,
+    /// Service-wide default admission policy, applied to tenants
+    /// registered on the live service.
+    default_admission: AdmissionPolicy,
     /// Degraded-mode fallback chain + circuit-breaker thresholds.
     fallback: FallbackPolicy,
     /// Default per-request budget applied at admission when a request
@@ -372,6 +411,19 @@ impl DppService {
         if registry.is_empty() {
             return Err(Error::Invalid("registry has no tenants".into()));
         }
+        // Seed admission control: per-tenant overrides from the config,
+        // the service-wide default for everyone else (the "default"
+        // tenant and pre-registered tenants included). Live-tunable later
+        // via [`DppService::set_admission`].
+        for entry in registry.entries() {
+            let policy = cfg
+                .tenants
+                .iter()
+                .find(|t| t.name == entry.name())
+                .and_then(|t| t.admission)
+                .unwrap_or(cfg.admission);
+            entry.set_admission(policy);
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(BatchQueue::new(BatchPolicy {
                 max_batch: cfg.max_batch,
@@ -382,6 +434,8 @@ impl DppService {
             metrics: ServiceMetrics::new(),
             shutdown: AtomicBool::new(false),
             capacity: cfg.queue_capacity,
+            shed_queue_depth: cfg.shed_queue_depth,
+            default_admission: cfg.admission,
             fallback: cfg.fallback.clone(),
             default_budget: if cfg.default_budget_ms == 0 {
                 None
@@ -452,15 +506,22 @@ impl DppService {
             .ok_or_else(|| Error::Rejected(format!("unknown tenant '{name}'")))
     }
 
-    /// Register a new tenant on the live service.
+    /// Register a new tenant on the live service (inherits the
+    /// service-wide default admission policy; override with
+    /// [`Self::set_admission`]).
     pub fn add_tenant(&self, name: &str, kernel: &Kernel) -> Result<TenantId> {
-        self.shared.registry.add_tenant(name, kernel)
+        let id = self.shared.registry.add_tenant(name, kernel)?;
+        self.shared.registry.entry(id)?.set_admission(self.shared.default_admission);
+        Ok(id)
     }
 
     /// Submit a request; fails fast on admission errors (unknown tenant,
     /// `k` larger than the tenant's current ground set, an unsatisfiable
     /// or out-of-bounds [`Constraint`] — these return [`Error::Rejected`]
-    /// without burning a queue slot) and under backpressure.
+    /// without burning a queue slot), on admission throttling (the
+    /// tenant's token bucket / outstanding cap, or the service's queue
+    /// shed depth — the *retryable* [`Error::Throttled`], same no-slot
+    /// fast path), and under backpressure.
     pub fn submit(&self, req: SampleRequest) -> Result<Ticket> {
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Service("service is shut down".into()));
@@ -529,6 +590,16 @@ impl DppService {
                 }
             }
         }
+        // Admission control: the tenant's token bucket and outstanding
+        // cap shed with the *retryable* [`Error::Throttled`] on the same
+        // fast path as [`Error::Rejected`] — before any queue interaction,
+        // so a shed request costs one per-tenant mutex and burns no queue
+        // slot and no accept count.
+        if let Err(reason) = entry.try_admit(Instant::now()) {
+            self.shared.metrics.throttled.fetch_add(1, Ordering::Relaxed);
+            entry.metrics().throttled.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Throttled(reason));
+        }
         // Deadline admission: apply the service default budget to
         // undeadlined requests, then fast-reject anything already expired
         // — no queue slot, no accept count; only `deadline_exceeded`
@@ -558,16 +629,31 @@ impl DppService {
                     self.shared.capacity
                 )));
             }
+            // Load shedding: past the shed depth the service is already
+            // drowning — shed with the retryable `Throttled` *before* the
+            // hard capacity wall turns into non-retryable `Service`
+            // errors. Still no slot burned, nothing accepted.
+            if self.shared.shed_queue_depth > 0 && q.len() >= self.shared.shed_queue_depth {
+                self.shared.metrics.throttled.fetch_add(1, Ordering::Relaxed);
+                entry.metrics().throttled.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Throttled(format!(
+                    "queue depth {} at shed threshold {}",
+                    q.len(),
+                    self.shared.shed_queue_depth
+                )));
+            }
             let job = Job {
                 req,
                 entry: Arc::clone(&entry),
                 respond: tx,
                 accepted: Instant::now(),
+                dispatched: None,
                 done: Arc::new(AtomicBool::new(false)),
             };
             q.push(job, Instant::now());
             self.shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
             entry.metrics().accepted.fetch_add(1, Ordering::Relaxed);
+            entry.outstanding.fetch_add(1, Ordering::SeqCst);
         }
         self.shared.cv.notify_one();
         Ok(Ticket { rx })
@@ -626,6 +712,26 @@ impl DppService {
     /// admission, swappable on the live service without republishing.
     pub fn set_mode_policy(&self, tenant: TenantId, policy: ModePolicy) -> Result<()> {
         self.shared.registry.set_mode_policy(tenant, policy)
+    }
+
+    /// Live-tune `tenant`'s admission control: token-bucket rate/burst,
+    /// outstanding cap, latency SLO. Takes effect on the next submit; the
+    /// bucket refills to the new burst. Queued requests were admitted
+    /// under the old policy and still complete.
+    pub fn set_admission(&self, tenant: TenantId, policy: AdmissionPolicy) -> Result<()> {
+        self.shared.registry.entry(tenant)?.set_admission(policy);
+        Ok(())
+    }
+
+    /// The tenant's current admission policy.
+    pub fn admission_policy(&self, tenant: TenantId) -> Result<AdmissionPolicy> {
+        Ok(self.shared.registry.entry(tenant)?.admission_policy())
+    }
+
+    /// Has shutdown begun? (Admission refuses new work once it has.) The
+    /// connection layer polls this to start its graceful drain.
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
     }
 
     /// All `N` inclusion probabilities `P(i ∈ Y) = K_ii` for `tenant`,
@@ -857,7 +963,18 @@ fn dispatch(
     for p in &batch {
         shared.metrics.queue_wait.record(now.duration_since(p.enqueued));
     }
-    let jobs: Vec<Job> = batch.into_iter().map(|p| p.item).collect();
+    let jobs: Vec<Job> = batch
+        .into_iter()
+        .map(|p| {
+            let mut job = p.item;
+            job.dispatched = Some(now);
+            job.entry
+                .metrics()
+                .queue_wait
+                .record(now.saturating_duration_since(job.accepted));
+            job
+        })
+        .collect();
     for (_, group) in coalesce_by_key(jobs, |j| j.req.tenant) {
         shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
         shared
@@ -1633,6 +1750,18 @@ fn finish(shared: &Shared, job: Job, result: Result<Vec<usize>>) {
     shared.metrics.latency.record(elapsed);
     let tm = job.entry.metrics();
     tm.latency.record(elapsed);
+    if let Some(d) = job.dispatched {
+        let serve = d.elapsed();
+        shared.metrics.serve_time.record(serve);
+        tm.serve_time.record(serve);
+    }
+    if tm.check_slo(elapsed) {
+        shared.metrics.slo_violations.fetch_add(1, Ordering::Relaxed);
+    }
+    // Release the admission-side outstanding slot: workers never produce
+    // `Throttled` (it is admission-only), so every accepted job passes
+    // through here (or the panic handler) exactly once.
+    job.entry.outstanding.fetch_sub(1, Ordering::SeqCst);
     match &result {
         Ok(_) => {
             shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -1702,6 +1831,125 @@ mod tests {
         assert!(y.iter().all(|&i| i < 12));
         let y5 = svc.sample(5).unwrap();
         assert_eq!(y5.len(), 5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn token_bucket_throttles_and_is_live_tunable() {
+        let mut cfg = small_cfg();
+        // 1 req/s sustained, burst of 2: the third immediate submit sheds.
+        cfg.admission = AdmissionPolicy {
+            rate_hz: 1.0,
+            burst: 2.0,
+            max_outstanding: 0,
+            slo_ms: 0,
+        };
+        let svc = DppService::start(&test_kernel(2, 2, 3), &cfg, 5).unwrap();
+        assert_eq!(
+            svc.admission_policy(TenantId::DEFAULT).unwrap().rate_hz,
+            1.0
+        );
+        let t1 = svc.submit(SampleRequest::new(2)).unwrap();
+        let t2 = svc.submit(SampleRequest::new(2)).unwrap();
+        let e = svc.submit(SampleRequest::new(2));
+        match &e {
+            Err(Error::Throttled(m)) => assert!(m.contains("rate limit"), "{m}"),
+            other => panic!("expected Throttled, got {other:?}"),
+        }
+        assert!(e.unwrap_err().is_retryable());
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        // Live-tune to unlimited: admission reopens immediately.
+        svc.set_admission(TenantId::DEFAULT, AdmissionPolicy::default()).unwrap();
+        assert!(svc.sample(2).is_ok());
+        // Ledger: the shed burned no queue slot and was never accepted.
+        let m = svc.metrics();
+        assert_eq!(m.throttled.load(Ordering::Relaxed), 1);
+        assert_eq!(m.accepted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 0);
+        let tm = svc.registry().entry(TenantId::DEFAULT).unwrap();
+        assert_eq!(tm.metrics().throttled.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn outstanding_cap_sheds_and_reopens_after_finish() {
+        let mut cfg = small_cfg();
+        cfg.admission = AdmissionPolicy {
+            rate_hz: 0.0,
+            burst: 0.0,
+            max_outstanding: 1,
+            slo_ms: 0,
+        };
+        let svc = DppService::start(&test_kernel(2, 2, 9), &cfg, 11).unwrap();
+        // Outstanding counts from accept, so the cap binds immediately and
+        // deterministically — no worker race.
+        let t1 = svc.submit(SampleRequest::new(2)).unwrap();
+        let e = svc.submit(SampleRequest::new(2));
+        match &e {
+            Err(Error::Throttled(m)) => assert!(m.contains("outstanding"), "{m}"),
+            other => panic!("expected Throttled, got {other:?}"),
+        }
+        // finish() releases the slot before responding, so after wait()
+        // the next submit is admitted.
+        assert!(t1.wait().is_ok());
+        assert!(svc.sample(2).is_ok());
+        let entry = svc.registry().entry(TenantId::DEFAULT).unwrap();
+        assert_eq!(entry.outstanding(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_shed_throttles_before_capacity() {
+        let mut cfg = small_cfg();
+        cfg.workers = 1;
+        cfg.queue_capacity = 64;
+        cfg.shed_queue_depth = 2;
+        // A huge batch window so submissions pile up in the queue.
+        cfg.batch_window_us = 200_000;
+        cfg.max_batch = 64;
+        let svc = DppService::start(&test_kernel(2, 2, 4), &cfg, 6).unwrap();
+        let mut tickets = Vec::new();
+        let mut sheds = 0;
+        for _ in 0..8 {
+            match svc.submit(SampleRequest::new(2)) {
+                Ok(t) => tickets.push(t),
+                Err(Error::Throttled(m)) => {
+                    assert!(m.contains("shed threshold"), "{m}");
+                    sheds += 1;
+                }
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(sheds > 0, "queue shed never engaged");
+        let m = svc.metrics();
+        assert_eq!(m.throttled.load(Ordering::Relaxed), sheds);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 0, "hard wall never hit");
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn slo_violations_count_per_tenant_and_globally() {
+        let mut cfg = small_cfg();
+        // Absurdly tight SLO: every completed request breaches it.
+        cfg.admission = AdmissionPolicy { slo_ms: 0, ..AdmissionPolicy::default() };
+        let svc = DppService::start(&test_kernel(2, 2, 8), &cfg, 13).unwrap();
+        let entry = svc.registry().entry(TenantId::DEFAULT).unwrap();
+        entry.metrics().slo_us.store(1, Ordering::Relaxed); // 1 µs
+        for _ in 0..4 {
+            svc.sample(2).unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.slo_violations.load(Ordering::Relaxed), 4);
+        assert_eq!(entry.metrics().slo_violations.load(Ordering::Relaxed), 4);
+        // Queue-wait and serve-time splits were recorded for each.
+        assert_eq!(entry.metrics().queue_wait.count(), 4);
+        assert_eq!(entry.metrics().serve_time.count(), 4);
+        assert_eq!(m.serve_time.count(), 4);
         svc.shutdown();
     }
 
@@ -1973,8 +2221,8 @@ mod tests {
     fn config_declared_tenants_are_provisioned() {
         let mut cfg = small_cfg();
         cfg.tenants = vec![
-            crate::config::TenantSpec { name: "eu".into(), n1: 3, n2: 3, seed: 1 },
-            crate::config::TenantSpec { name: "us".into(), n1: 2, n2: 4, seed: 2 },
+            crate::config::TenantSpec { name: "eu".into(), n1: 3, n2: 3, seed: 1, admission: None },
+            crate::config::TenantSpec { name: "us".into(), n1: 2, n2: 4, seed: 2, admission: None },
         ];
         let svc = DppService::start(&test_kernel(2, 2, 7), &cfg, 12).unwrap();
         assert_eq!(

@@ -4,7 +4,16 @@
 //! plan** interleaving catalog mutations (item add/remove/retire, low-rank
 //! feedback perturbations) with the request stream, the workload shape
 //! behind the delta-publish latency sweep.
+//!
+//! For the TCP serving-layer saturation sweep there is additionally a
+//! **multi-tenant replay** generator ([`ReplaySpec`] → [`replay`]):
+//! Zipf-skewed tenant selection, a sampling-mode mix across the backend
+//! zoo, a configurable fraction of constraint-carrying slates, and
+//! open-loop Poisson arrivals (the offered rate does not slow down when
+//! the service does — exactly the regime that exposes shedding and SLO
+//! behavior under overload).
 
+use crate::dpp::SampleMode;
 use crate::rng::Rng;
 use std::time::Duration;
 
@@ -106,6 +115,176 @@ pub fn churn_plan(spec: &ChurnSpec, requests: usize) -> Vec<ChurnEvent> {
         .collect()
 }
 
+/// Mixture weights over the sampling-backend zoo for replay traces.
+/// Weights are relative (normalized internally); all-zero falls back to
+/// exact-only.
+#[derive(Clone, Copy, Debug)]
+pub struct ModeMix {
+    pub exact: f64,
+    pub mcmc: f64,
+    pub lowrank: f64,
+    pub map: f64,
+}
+
+impl Default for ModeMix {
+    fn default() -> Self {
+        ModeMix { exact: 0.55, mcmc: 0.2, lowrank: 0.15, map: 0.1 }
+    }
+}
+
+/// Shape of a multi-tenant serving replay (the saturation-sweep input).
+#[derive(Clone, Debug)]
+pub struct ReplaySpec {
+    /// Number of tenants; requests target tenant indices `0..tenants`.
+    pub tenants: usize,
+    /// Zipf skew exponent `s`: tenant rank `r` (0-based) is chosen with
+    /// weight `1/(r+1)^s`. `0` is uniform; `~1` is classic web skew.
+    pub zipf_s: f64,
+    /// Open-loop offered arrival rate (requests/second) across all
+    /// tenants.
+    pub rate_hz: f64,
+    /// Total requests in the trace.
+    pub count: usize,
+    /// Subset-size range (inclusive).
+    pub k_lo: usize,
+    pub k_hi: usize,
+    /// Fraction of requests carrying an include/exclude constraint.
+    pub constraint_fraction: f64,
+    /// Ground-set size constraints draw their item indices from.
+    pub ground_size: usize,
+    /// Relative backend mix.
+    pub mode_mix: ModeMix,
+    /// Chain length for `Mcmc` draws in the mix.
+    pub mcmc_steps: usize,
+    /// Projection rank for `LowRank` draws in the mix.
+    pub lowrank_rank: usize,
+}
+
+impl Default for ReplaySpec {
+    fn default() -> Self {
+        ReplaySpec {
+            tenants: 4,
+            zipf_s: 1.1,
+            rate_hz: 500.0,
+            count: 2000,
+            k_lo: 2,
+            k_hi: 8,
+            constraint_fraction: 0.25,
+            ground_size: 24,
+            mode_mix: ModeMix::default(),
+            mcmc_steps: 500,
+            lowrank_rank: 8,
+        }
+    }
+}
+
+/// One request in a replay trace. `at` is the open-loop send time: a
+/// replaying client sleeps until `at` and fires regardless of how many
+/// earlier requests are still outstanding.
+#[derive(Clone, Debug)]
+pub struct ReplayRequest {
+    /// Offset from trace start (open-loop arrival).
+    pub at: Duration,
+    /// Target tenant index (`0..spec.tenants`, Zipf-skewed).
+    pub tenant: usize,
+    /// Requested slate size.
+    pub k: usize,
+    /// Backend for this draw.
+    pub mode: SampleMode,
+    /// Must-include item indices (possibly empty).
+    pub include: Vec<usize>,
+    /// Must-exclude item indices (disjoint from `include`).
+    pub exclude: Vec<usize>,
+}
+
+/// Generate a Zipf-skewed, mode-mixed, open-loop replay trace.
+pub fn replay(spec: &ReplaySpec, rng: &mut Rng) -> Vec<ReplayRequest> {
+    let tenants = spec.tenants.max(1);
+    // Zipf inverse-CDF table over tenant ranks.
+    let weights: Vec<f64> =
+        (0..tenants).map(|r| 1.0 / ((r + 1) as f64).powf(spec.zipf_s)).collect();
+    let total_w: f64 = weights.iter().sum();
+
+    let mix = [
+        spec.mode_mix.exact.max(0.0),
+        spec.mode_mix.mcmc.max(0.0),
+        spec.mode_mix.lowrank.max(0.0),
+        spec.mode_mix.map.max(0.0),
+    ];
+    let mix_total: f64 = mix.iter().sum();
+
+    let mut at = 0.0f64;
+    let mut out = Vec::with_capacity(spec.count);
+    for _ in 0..spec.count {
+        let u = rng.uniform().max(f64::MIN_POSITIVE);
+        at += -u.ln() / spec.rate_hz;
+
+        // Tenant: linear scan of the Zipf CDF (tenant counts are small).
+        let mut target = rng.uniform() * total_w;
+        let mut tenant = tenants - 1;
+        for (r, w) in weights.iter().enumerate() {
+            if target < *w {
+                tenant = r;
+                break;
+            }
+            target -= *w;
+        }
+
+        let k = if spec.k_hi == 0 { 0 } else { rng.int_range(spec.k_lo, spec.k_hi) };
+
+        let mode = if mix_total <= 0.0 {
+            SampleMode::Exact
+        } else {
+            let mut m = rng.uniform() * mix_total;
+            if m < mix[0] {
+                SampleMode::Exact
+            } else {
+                m -= mix[0];
+                if m < mix[1] {
+                    SampleMode::Mcmc { steps: spec.mcmc_steps }
+                } else if m - mix[1] < mix[2] {
+                    SampleMode::LowRank { rank: spec.lowrank_rank }
+                } else {
+                    SampleMode::Map
+                }
+            }
+        };
+
+        let (include, exclude) = if spec.ground_size > 2
+            && k > 0
+            && k < spec.ground_size
+            && rng.bernoulli(spec.constraint_fraction)
+        {
+            // One pinned item plus one or two excluded items, all
+            // distinct, with room left for the k - |include| free picks.
+            let pin = rng.below(spec.ground_size);
+            let mut exclude = Vec::new();
+            let want = 1 + rng.below(2.min(spec.ground_size.saturating_sub(k + 1)).max(1));
+            let mut guard = 0;
+            while exclude.len() < want && guard < 32 {
+                guard += 1;
+                let e = rng.below(spec.ground_size);
+                if e != pin && !exclude.contains(&e) {
+                    exclude.push(e);
+                }
+            }
+            (vec![pin], exclude)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        out.push(ReplayRequest {
+            at: Duration::from_secs_f64(at),
+            tenant,
+            k,
+            mode,
+            include,
+            exclude,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +334,88 @@ mod tests {
     fn churn_disabled_by_zero_every() {
         let spec = ChurnSpec { every: 0, ..ChurnSpec::default() };
         assert!(churn_plan(&spec, 1000).is_empty());
+    }
+
+    #[test]
+    fn replay_zipf_skew_orders_tenant_frequencies() {
+        let mut rng = Rng::new(7);
+        let spec = ReplaySpec { tenants: 4, zipf_s: 1.2, count: 4000, ..ReplaySpec::default() };
+        let trace = replay(&spec, &mut rng);
+        assert_eq!(trace.len(), 4000);
+        let mut counts = [0usize; 4];
+        for r in &trace {
+            assert!(r.tenant < 4);
+            counts[r.tenant] += 1;
+        }
+        // Rank-0 strictly dominates, and the tail is still exercised.
+        assert!(counts[0] > counts[1] && counts[1] > counts[2]);
+        assert!(counts[3] > 0, "tail tenant never hit: {counts:?}");
+        // Zipf s=1.2 over 4 ranks gives rank 0 ≈ 55% of mass.
+        let frac0 = counts[0] as f64 / 4000.0;
+        assert!((0.4..0.7).contains(&frac0), "rank-0 fraction {frac0}");
+    }
+
+    #[test]
+    fn replay_arrivals_open_loop_monotone() {
+        let mut rng = Rng::new(8);
+        let spec = ReplaySpec { rate_hz: 250.0, count: 1000, ..ReplaySpec::default() };
+        let trace = replay(&spec, &mut rng);
+        for w in trace.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        let total = trace.last().unwrap().at.as_secs_f64();
+        let rate = 1000.0 / total;
+        assert!((rate - 250.0).abs() < 30.0, "offered rate {rate}");
+    }
+
+    #[test]
+    fn replay_mode_mix_and_constraints_respected() {
+        let mut rng = Rng::new(9);
+        let spec = ReplaySpec {
+            count: 3000,
+            constraint_fraction: 0.3,
+            ground_size: 24,
+            k_lo: 2,
+            k_hi: 8,
+            ..ReplaySpec::default()
+        };
+        let trace = replay(&spec, &mut rng);
+        let mut modes = std::collections::BTreeMap::new();
+        let mut constrained = 0usize;
+        for r in &trace {
+            *modes.entry(r.mode.label()).or_insert(0usize) += 1;
+            assert!((2..=8).contains(&r.k));
+            if !r.include.is_empty() || !r.exclude.is_empty() {
+                constrained += 1;
+                // Include/exclude disjoint and in range.
+                for i in &r.include {
+                    assert!(*i < 24);
+                    assert!(!r.exclude.contains(i));
+                }
+                assert!(r.exclude.iter().all(|e| *e < 24));
+            }
+        }
+        // Every backend of the default mix appears.
+        for label in ["exact", "mcmc", "lowrank", "map"] {
+            assert!(modes.contains_key(label), "missing mode {label}: {modes:?}");
+        }
+        let frac = constrained as f64 / 3000.0;
+        assert!((0.2..0.4).contains(&frac), "constraint fraction {frac}");
+    }
+
+    #[test]
+    fn replay_deterministic_for_fixed_seed() {
+        let spec = ReplaySpec { count: 100, ..ReplaySpec::default() };
+        let a = replay(&spec, &mut Rng::new(42));
+        let b = replay(&spec, &mut Rng::new(42));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.k, y.k);
+            assert_eq!(x.mode, y.mode);
+            assert_eq!(x.include, y.include);
+            assert_eq!(x.exclude, y.exclude);
+        }
     }
 }

@@ -33,6 +33,7 @@ use crate::linalg::matrix::Matrix;
 use super::kernel::Kernel;
 
 /// A low-rank or structural change to one factor of a kernel.
+#[derive(Clone, Debug)]
 pub enum KernelDelta {
     /// Append an item to factor `side`: `row[j] = L(new, j)` against the
     /// existing items, `diag = L(new, new)`. Structural (dimension grows).

@@ -38,6 +38,12 @@ pub enum Error {
     /// — a deadline miss is retryable with a fresh budget, a dropped
     /// request channel usually is not.
     Deadline(String),
+    /// Request shed by admission control — the tenant's token bucket is
+    /// empty, its outstanding-request cap is reached, or the service queue
+    /// is past its shed depth. Same fast path as [`Error::Rejected`] (no
+    /// queue slot burned), but *retryable*: unlike a bad request, the same
+    /// request resubmitted after backoff is expected to succeed.
+    Throttled(String),
 }
 
 /// Discriminant-only view of [`Error`], for metrics labels and exhaustive
@@ -53,6 +59,7 @@ pub enum ErrorKind {
     Service,
     Rejected,
     Deadline,
+    Throttled,
 }
 
 impl ErrorKind {
@@ -68,6 +75,7 @@ impl ErrorKind {
             ErrorKind::Service => "service",
             ErrorKind::Rejected => "rejected",
             ErrorKind::Deadline => "deadline",
+            ErrorKind::Throttled => "throttled",
         }
     }
 }
@@ -85,18 +93,21 @@ impl Error {
             Error::Service(_) => ErrorKind::Service,
             Error::Rejected(_) => ErrorKind::Rejected,
             Error::Deadline(_) => ErrorKind::Deadline,
+            Error::Throttled(_) => ErrorKind::Throttled,
         }
     }
 
     /// Whether a client may reasonably retry the same request. Transient
     /// service-side conditions (saturation, a dying worker, a missed
-    /// deadline, IO hiccups) are retryable; deterministic failures of the
-    /// request itself (bad shapes, invalid arguments, numerical breakdown
-    /// of the kernel, admission rejection) are not — resubmitting them
-    /// yields the same answer.
+    /// deadline, an admission throttle, IO hiccups) are retryable;
+    /// deterministic failures of the request itself (bad shapes, invalid
+    /// arguments, numerical breakdown of the kernel, admission rejection)
+    /// are not — resubmitting them yields the same answer.
     pub fn is_retryable(&self) -> bool {
         match self.kind() {
-            ErrorKind::Service | ErrorKind::Deadline | ErrorKind::Io => true,
+            ErrorKind::Service | ErrorKind::Deadline | ErrorKind::Io | ErrorKind::Throttled => {
+                true
+            }
             ErrorKind::Shape
             | ErrorKind::Numerical
             | ErrorKind::Invalid
@@ -119,6 +130,7 @@ impl fmt::Display for Error {
             Error::Service(m) => write!(f, "service error: {m}"),
             Error::Rejected(m) => write!(f, "request rejected: {m}"),
             Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Throttled(m) => write!(f, "throttled: {m}"),
         }
     }
 }
@@ -201,6 +213,7 @@ mod tests {
             Error::Service("svc".into()),
             Error::Rejected("rej".into()),
             Error::Deadline("late".into()),
+            Error::Throttled("rate".into()),
         ]
     }
 
@@ -219,13 +232,14 @@ mod tests {
                 ErrorKind::Service,
                 ErrorKind::Rejected,
                 ErrorKind::Deadline,
+                ErrorKind::Throttled,
             ]
         );
         // Labels are distinct and stable (metrics depend on them).
         let mut labels: Vec<&str> = kinds.iter().map(ErrorKind::label).collect();
         labels.sort_unstable();
         labels.dedup();
-        assert_eq!(labels.len(), 9, "duplicate ErrorKind labels");
+        assert_eq!(labels.len(), 10, "duplicate ErrorKind labels");
     }
 
     #[test]
@@ -233,7 +247,7 @@ mod tests {
         for e in all_variants() {
             let want = matches!(
                 e.kind(),
-                ErrorKind::Service | ErrorKind::Deadline | ErrorKind::Io
+                ErrorKind::Service | ErrorKind::Deadline | ErrorKind::Io | ErrorKind::Throttled
             );
             assert_eq!(e.is_retryable(), want, "retryable mismatch for {e}");
         }
@@ -246,5 +260,18 @@ mod tests {
         assert_ne!(late.kind(), ErrorKind::Service);
         assert!(late.is_retryable());
         assert!(!Error::Rejected("bad k".into()).is_retryable());
+    }
+
+    #[test]
+    fn throttled_is_retryable_and_distinct_from_rejected() {
+        let t = Error::Throttled("tenant rate 100/s exceeded".into());
+        assert!(t.to_string().contains("throttled"));
+        assert_eq!(t.kind(), ErrorKind::Throttled);
+        assert_eq!(t.kind().label(), "throttled");
+        // The whole point of the variant: same admission fast path as
+        // Rejected, opposite retry semantics.
+        assert!(t.is_retryable());
+        assert_ne!(t.kind(), ErrorKind::Rejected);
+        assert_ne!(t.kind(), ErrorKind::Service);
     }
 }

@@ -9,7 +9,9 @@
 //!   marginals print factored inclusion probabilities P(i ∈ Y) = K_ii
 //!   serve     run the sampling service over a synthetic request trace
 //!             (optionally with catalog churn interleaved via delta
-//!             publishes)
+//!             publishes), or expose it over TCP with --listen
+//!   client    drive a serve --listen endpoint over the wire protocol
+//!             (single ops or an open-loop --replay saturation sweep)
 //!   churn     drive item add/retire/remove + low-rank perturbations
 //!             through a live tenant's delta-publish path
 //!   datagen   generate + save datasets (registry / genes / synthetic)
@@ -17,8 +19,10 @@
 
 use krondpp::cli::Args;
 use krondpp::config::{Algorithm, ServiceConfig};
-use krondpp::coordinator::{DeltaOutcome, DppService, TenantId};
-use krondpp::data::workload::{churn_plan, ChurnOp, ChurnSpec};
+use krondpp::coordinator::{
+    run_replay, DeltaOutcome, DppService, NetConfig, NetServer, TenantId, WireClient,
+};
+use krondpp::data::workload::{churn_plan, replay, ChurnOp, ChurnSpec, ReplaySpec};
 use krondpp::dpp::{
     map_slate_into, ConditionedSampler, Constraint, Kernel, KernelDelta, LowRankBackend,
     MapScratch, McmcBackend, SampleMode, SampleScratch, Sampler, SamplerBackend,
@@ -48,6 +52,12 @@ COMMANDS:
   serve    [--n1 N --n2 N] [--requests R] [--rate HZ] [--workers W]
            [--config FILE.json] [--tenants T] [--tenant NAME] [--learn-live]
            [--budget-ms MS] [--churn-every E] [--churn-rank R]
+           [--listen HOST:PORT]
+  client   --addr HOST:PORT [--op sample|map|marginals|report|shutdown]
+           [--tenant NAME] [--k K] [--count C] [--mode M] [--budget-ms MS]
+           [--include I1,..] [--exclude J1,..]
+           | --replay [--requests R] [--rate HZ] [--conns C] [--zipf S]
+           [--tenants n1,n2,..] [--constraint-frac F] [--k-lo K --k-hi K]
   churn    [--n1 N --n2 N] [--ops C] [--rank R] [--scale S] [--seed S]
            [--max-depth D]
   datagen  --kind synthetic|genes|registry --out FILE.kds [--n1 N --n2 N]
@@ -60,6 +70,15 @@ market tenants; --tenant NAME pins the request trace (and the --learn-live
 publish target) to one tenant instead of round-robining over all of them.
 For `sample`/`marginals`, --tenant NAME loads the kernel saved under
 PREFIX.NAME.
+
+Serving over TCP: `serve --listen 127.0.0.1:7333` exposes the service on
+the length-prefixed JSON wire protocol (DESIGN.md §3.2) instead of the
+local synthetic trace; `client --addr HOST:PORT` drives it — single ops,
+or `--replay` for an open-loop Zipf-skewed saturation sweep that reports
+client-observed shed fractions and per-tenant p50/p99. Per-tenant
+admission control (token-bucket \"admission\" blocks + \"shed_queue_depth\"
+in the config) sheds overload with retryable `throttled` errors before a
+queue slot is burned; the report tracks per-tenant SLO violations.
 
 Fault tolerance: `serve --budget-ms MS` gives every request a deadline
 budget (expired work is shed as `deadline_exceeded`, never served late);
@@ -102,7 +121,7 @@ fn main() {
 }
 
 fn run(tokens: Vec<String>) -> Result<()> {
-    let args = Args::parse(tokens, &["learn-live", "help"])?;
+    let args = Args::parse(tokens, &["learn-live", "help", "replay"])?;
     match args.command.as_deref() {
         Some("figures") => cmd_figures(&args),
         Some("learn") => cmd_learn(&args),
@@ -110,6 +129,7 @@ fn run(tokens: Vec<String>) -> Result<()> {
         Some("map") => cmd_map(&args),
         Some("marginals") => cmd_marginals(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("churn") => cmd_churn(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("info") => cmd_info(),
@@ -484,6 +504,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             n1,
             n2,
             seed: seed ^ (t as u64 + 1),
+            admission: None,
         });
     }
     let mut rng = Rng::new(seed);
@@ -501,6 +522,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.default_budget_ms,
         if cfg.fallback.enabled { "on" } else { "off" },
     );
+    // --listen ADDR serves the wire protocol over TCP instead of driving
+    // the synthetic local trace: the event loop runs until a client sends
+    // the `shutdown` op (graceful drain) and the final report prints.
+    if let Some(listen) = args.str_flag("listen") {
+        let net_cfg = NetConfig::default();
+        let server = NetServer::start(std::sync::Arc::clone(&svc), listen, net_cfg)?;
+        println!(
+            "listening on {} (length-prefixed JSON frames, DESIGN.md §3.2; \
+             send op \"shutdown\" to drain)",
+            server.local_addr()
+        );
+        server.join();
+        println!("{}", svc.report());
+        return Ok(());
+    }
+
     // The trace targets one pinned tenant (--tenant) or round-robins all.
     let targets: Vec<krondpp::coordinator::TenantId> = match args.str_flag("tenant") {
         Some(name) => vec![svc.tenant(name)?],
@@ -599,6 +636,122 @@ fn cmd_serve(args: &Args) -> Result<()> {
             history.first().map(|r| r.log_likelihood).unwrap_or(f64::NAN),
             history.last().map(|r| r.log_likelihood).unwrap_or(f64::NAN),
             history.len() - 1
+        );
+    }
+    Ok(())
+}
+
+/// `client` subcommand: talk to a `serve --listen` endpoint over the wire
+/// protocol — single ops (`--op sample|map|marginals|report|shutdown`) or
+/// a full open-loop replay sweep (`--replay`) with Zipf-skewed tenants,
+/// a backend-mode mix, and constraint-carrying slates.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.require_str("addr")?;
+    if args.switch("replay") {
+        return client_replay(args, addr);
+    }
+    let op = args.str_flag("op").unwrap_or("sample");
+    let mut client =
+        WireClient::connect_timeout(addr, std::time::Duration::from_secs(30))?;
+    match op {
+        "sample" | "map" => {
+            let tenant = args.str_flag("tenant").unwrap_or("default");
+            let k: usize = args.get_or("k", 5)?;
+            let count: usize = args.get_or("count", 1)?;
+            let mode = if op == "map" {
+                SampleMode::Map
+            } else {
+                SampleMode::parse(
+                    args.str_flag("mode").unwrap_or("exact"),
+                    args.get_opt::<usize>("steps")?,
+                    args.get_opt::<usize>("rank")?,
+                )?
+            };
+            let include = parse_items(args, "include")?;
+            let exclude = parse_items(args, "exclude")?;
+            let budget = args.get_opt::<u64>("budget-ms")?;
+            for i in 0..count {
+                match client.sample(
+                    tenant,
+                    k,
+                    mode,
+                    include.clone(),
+                    exclude.clone(),
+                    budget,
+                ) {
+                    Ok(y) => println!("sample {i}: {y:?}"),
+                    Err(e) => println!("sample {i}: error ({}): {e}", e.kind().label()),
+                }
+            }
+        }
+        "marginals" => {
+            let tenant = args.str_flag("tenant").unwrap_or("default");
+            let probs = client.marginals(tenant)?;
+            let expected: f64 = probs.iter().sum();
+            println!("N = {}  E[|Y|] = {expected:.3}", probs.len());
+            let top: usize = args.get_or("top", 10)?;
+            let mut ranked: Vec<(usize, f64)> = probs.into_iter().enumerate().collect();
+            ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            for (i, p) in ranked.into_iter().take(top) {
+                println!("item {i:>6}  P(i in Y) = {p:.6}");
+            }
+        }
+        "report" => println!("{}", client.report()?),
+        "shutdown" => {
+            client.shutdown_server()?;
+            println!("server draining");
+        }
+        other => return Err(krondpp::Error::Parse(format!("unknown client op '{other}'"))),
+    }
+    Ok(())
+}
+
+/// `client --replay`: the saturation-sweep driver. Sends an open-loop
+/// Poisson trace (the offered rate never slows for backlog) and prints
+/// client-observed outcome tallies + exact per-tenant p50/p99.
+fn client_replay(args: &Args, addr: &str) -> Result<()> {
+    let names: Vec<String> = match args.str_flag("tenants") {
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        None => vec!["default".to_string()],
+    };
+    let spec = ReplaySpec {
+        tenants: names.len(),
+        zipf_s: args.get_or("zipf", 1.1)?,
+        rate_hz: args.get_or("rate", 500.0)?,
+        count: args.get_or("requests", 2000)?,
+        k_lo: args.get_or("k-lo", 2)?,
+        k_hi: args.get_or("k-hi", 8)?,
+        constraint_fraction: args.get_or("constraint-frac", 0.25)?,
+        ground_size: args.get_or("ground", 24)?,
+        ..ReplaySpec::default()
+    };
+    let conns: usize = args.get_or("conns", 4)?;
+    let seed: u64 = args.get_or("seed", 2016)?;
+    let budget = args.get_opt::<u64>("budget-ms")?;
+    let trace = replay(&spec, &mut Rng::new(seed));
+    println!(
+        "replay: {} requests at {:.0}/s offered over {} conns, tenants {:?} (zipf s={})",
+        spec.count, spec.rate_hz, conns, names, spec.zipf_s
+    );
+    let out = run_replay(addr, &names, &trace, conns, budget)?;
+    println!(
+        "sent={} completed={} throttled={} rejected={} deadline={} failed={} \
+         wall={:.2}s sustained={:.0}/s shed_fraction={:.3}",
+        out.sent,
+        out.completed,
+        out.throttled,
+        out.rejected,
+        out.deadline,
+        out.failed,
+        out.wall.as_secs_f64(),
+        out.sustained_hz(),
+        out.shed_fraction(),
+    );
+    for t in &out.per_tenant {
+        println!(
+            "  tenant {:<12} sent={:<6} completed={:<6} throttled={:<6} \
+             p50={:.3}ms p99={:.3}ms",
+            t.name, t.sent, t.completed, t.throttled, t.p50_ms, t.p99_ms
         );
     }
     Ok(())

@@ -1,7 +1,9 @@
-//! Serialization substrate: JSON (artifact manifests, configs, results)
-//! and binary matrix/dataset IO.
+//! Serialization substrate: JSON (artifact manifests, configs, results),
+//! binary matrix/dataset IO, and the length-prefixed TCP wire protocol.
 
 pub mod json;
 pub mod matio;
+pub mod wire;
 
 pub use json::Json;
+pub use wire::{FrameReader, WireRequest, WireResponse, DEFAULT_MAX_FRAME};

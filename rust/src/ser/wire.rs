@@ -1,0 +1,826 @@
+//! Length-prefixed JSON wire protocol for the TCP serving layer
+//! (DESIGN.md §3.2).
+//!
+//! Every frame is a 4-byte **big-endian u32 length prefix** followed by
+//! exactly that many bytes of UTF-8 JSON. Frames larger than the
+//! negotiated cap ([`DEFAULT_MAX_FRAME`] by default) are a protocol
+//! error: the reader reports it *before* buffering the payload so a
+//! hostile peer cannot balloon memory, and the connection layer closes
+//! the socket. Everything below the frame boundary — garbage JSON,
+//! missing fields, unknown ops — is a *payload* error: the server
+//! answers with an error envelope and the connection stays open.
+//!
+//! Request envelope (`op` selects the variant):
+//!
+//! ```json
+//! {"id": 7, "op": "sample", "tenant": "news", "k": 5,
+//!  "mode": {"name": "mcmc", "steps": 4000},
+//!  "include": [1], "exclude": [4, 9], "budget_ms": 50}
+//! ```
+//!
+//! `mode` is either a bare string (`"exact"`, `"map"`) or an object with
+//! `name` + backend parameters; `op: "map"` is sugar for a sample request
+//! pinned to the MAP backend. Responses are `{"id": N, "ok": {...}}` or
+//! `{"id": N, "err": {"kind": ..., "retryable": ..., "message": ...}}`,
+//! where `kind` is the [`ErrorKind::label`] taxonomy so clients can
+//! reconstruct a typed [`Error`] and honor [`Error::is_retryable`].
+
+use crate::dpp::{KernelDelta, SampleMode};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::ser::json::Json;
+
+/// Default cap on a single frame's payload: 1 MiB.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 20;
+
+/// Size of the length prefix in bytes.
+pub const LEN_PREFIX_BYTES: usize = 4;
+
+/// Wrap a payload in a length-prefixed frame. Rejects payloads larger
+/// than `max_frame` (the peer would drop the connection anyway).
+pub fn encode_frame(payload: &[u8], max_frame: usize) -> Result<Vec<u8>> {
+    if payload.len() > max_frame {
+        return Err(Error::Invalid(format!(
+            "frame payload {} bytes exceeds cap {}",
+            payload.len(),
+            max_frame
+        )));
+    }
+    if payload.len() > u32::MAX as usize {
+        return Err(Error::Invalid(format!(
+            "frame payload {} bytes exceeds u32 length prefix",
+            payload.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(LEN_PREFIX_BYTES + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    Ok(out)
+}
+
+/// Incremental frame decoder: feed raw socket bytes with [`push`],
+/// drain complete payloads with [`next`]. A declared length above the
+/// cap is a hard protocol error — the caller must close the connection.
+///
+/// [`push`]: FrameReader::push
+/// [`next`]: FrameReader::next
+#[derive(Debug)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl FrameReader {
+    /// Reader with the given per-frame payload cap.
+    pub fn new(max_frame: usize) -> Self {
+        FrameReader { buf: Vec::new(), max_frame }
+    }
+
+    /// Append raw bytes read off the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (prefix + partial payloads).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Next complete payload, `Ok(None)` if more bytes are needed, or a
+    /// protocol error if the declared length exceeds the cap.
+    pub fn next(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.buf.len() < LEN_PREFIX_BYTES {
+            return Ok(None);
+        }
+        let len = u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > self.max_frame {
+            return Err(Error::Parse(format!(
+                "declared frame length {} exceeds cap {}",
+                len, self.max_frame
+            )));
+        }
+        if self.buf.len() < LEN_PREFIX_BYTES + len {
+            return Ok(None);
+        }
+        let payload = self.buf[LEN_PREFIX_BYTES..LEN_PREFIX_BYTES + len].to_vec();
+        self.buf.drain(..LEN_PREFIX_BYTES + len);
+        Ok(Some(payload))
+    }
+}
+
+/// A decoded client request. `id` is an opaque client-chosen correlation
+/// token echoed verbatim in the response.
+#[derive(Clone, Debug)]
+pub enum WireRequest {
+    /// Draw a slate: `op: "sample"` (or `"map"`, which pins the mode).
+    Sample {
+        id: u64,
+        tenant: String,
+        k: usize,
+        mode: SampleMode,
+        include: Vec<usize>,
+        exclude: Vec<usize>,
+        budget_ms: Option<u64>,
+    },
+    /// Per-item inclusion marginals: `op: "marginals"`.
+    Marginals { id: u64, tenant: String },
+    /// Stream a catalog delta into the tenant's kernel: `op: "publish_delta"`.
+    PublishDelta { id: u64, tenant: String, delta: KernelDelta },
+    /// Render the service metrics report: `op: "report"`.
+    Report { id: u64 },
+    /// Begin graceful shutdown and drain: `op: "shutdown"`.
+    Shutdown { id: u64 },
+}
+
+impl WireRequest {
+    /// The client correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireRequest::Sample { id, .. }
+            | WireRequest::Marginals { id, .. }
+            | WireRequest::PublishDelta { id, .. }
+            | WireRequest::Report { id }
+            | WireRequest::Shutdown { id } => *id,
+        }
+    }
+
+    /// Encode as a JSON envelope.
+    pub fn encode(&self) -> Json {
+        match self {
+            WireRequest::Sample { id, tenant, k, mode, include, exclude, budget_ms } => {
+                let mut pairs = vec![
+                    ("id", Json::Num(*id as f64)),
+                    ("op", Json::Str("sample".into())),
+                    ("tenant", Json::Str(tenant.clone())),
+                    ("k", Json::Num(*k as f64)),
+                    ("mode", encode_mode(mode)),
+                ];
+                if !include.is_empty() {
+                    pairs.push(("include", usize_arr_to_json(include)));
+                }
+                if !exclude.is_empty() {
+                    pairs.push(("exclude", usize_arr_to_json(exclude)));
+                }
+                if let Some(ms) = budget_ms {
+                    pairs.push(("budget_ms", Json::Num(*ms as f64)));
+                }
+                Json::obj(pairs)
+            }
+            WireRequest::Marginals { id, tenant } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("marginals".into())),
+                ("tenant", Json::Str(tenant.clone())),
+            ]),
+            WireRequest::PublishDelta { id, tenant, delta } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("publish_delta".into())),
+                ("tenant", Json::Str(tenant.clone())),
+                ("delta", encode_delta(delta)),
+            ]),
+            WireRequest::Report { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("report".into())),
+            ]),
+            WireRequest::Shutdown { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("shutdown".into())),
+            ]),
+        }
+    }
+
+    /// Encode straight to a length-prefixed frame.
+    pub fn to_frame(&self, max_frame: usize) -> Result<Vec<u8>> {
+        encode_frame(self.encode().to_string().as_bytes(), max_frame)
+    }
+
+    /// Decode a frame payload: UTF-8 → JSON → envelope.
+    pub fn from_payload(bytes: &[u8]) -> Result<WireRequest> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| Error::Parse("frame payload is not UTF-8".into()))?;
+        WireRequest::decode(&Json::parse(text)?)
+    }
+
+    /// Decode from a parsed JSON envelope.
+    pub fn decode(j: &Json) -> Result<WireRequest> {
+        let id = j.get("id")?.as_usize()? as u64;
+        let op = j.get("op")?.as_str()?.to_string();
+        match op.as_str() {
+            "sample" | "map" => {
+                let tenant = j.get("tenant")?.as_str()?.to_string();
+                let k = j.get("k")?.as_usize()?;
+                let mode = if op == "map" {
+                    SampleMode::Map
+                } else {
+                    match j.get_opt("mode") {
+                        Some(m) => decode_mode(m)?,
+                        None => SampleMode::Exact,
+                    }
+                };
+                let include = match j.get_opt("include") {
+                    Some(a) => json_to_usize_arr(a, "include")?,
+                    None => Vec::new(),
+                };
+                let exclude = match j.get_opt("exclude") {
+                    Some(a) => json_to_usize_arr(a, "exclude")?,
+                    None => Vec::new(),
+                };
+                let budget_ms = match j.get_opt("budget_ms") {
+                    Some(b) => Some(b.as_usize()? as u64),
+                    None => None,
+                };
+                Ok(WireRequest::Sample { id, tenant, k, mode, include, exclude, budget_ms })
+            }
+            "marginals" => Ok(WireRequest::Marginals {
+                id,
+                tenant: j.get("tenant")?.as_str()?.to_string(),
+            }),
+            "publish_delta" => Ok(WireRequest::PublishDelta {
+                id,
+                tenant: j.get("tenant")?.as_str()?.to_string(),
+                delta: decode_delta(j.get("delta")?)?,
+            }),
+            "report" => Ok(WireRequest::Report { id }),
+            "shutdown" => Ok(WireRequest::Shutdown { id }),
+            other => Err(Error::Parse(format!("unknown op '{other}'"))),
+        }
+    }
+}
+
+/// A server response envelope. Echoes the request `id`.
+#[derive(Clone, Debug)]
+pub enum WireResponse {
+    /// Sampled (or MAP) slate.
+    Items { id: u64, items: Vec<usize> },
+    /// Per-item inclusion marginals.
+    Marginals { id: u64, marginals: Vec<f64> },
+    /// Delta publish outcome (mirrors [`crate::coordinator::DeltaOutcome`]).
+    Delta { id: u64, generation: u64, incremental: bool, depth: u64 },
+    /// Rendered metrics report.
+    Report { id: u64, report: String },
+    /// Shutdown acknowledged; the connection will drain and close.
+    ShuttingDown { id: u64 },
+    /// Typed failure: `kind` is the [`crate::error::ErrorKind::label`]
+    /// taxonomy, `retryable` mirrors [`Error::is_retryable`].
+    Failure { id: u64, kind: String, retryable: bool, message: String },
+}
+
+impl WireResponse {
+    /// The echoed correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireResponse::Items { id, .. }
+            | WireResponse::Marginals { id, .. }
+            | WireResponse::Delta { id, .. }
+            | WireResponse::Report { id, .. }
+            | WireResponse::ShuttingDown { id }
+            | WireResponse::Failure { id, .. } => *id,
+        }
+    }
+
+    /// Build the failure envelope for a typed service error.
+    pub fn from_error(id: u64, err: &Error) -> WireResponse {
+        WireResponse::Failure {
+            id,
+            kind: err.kind().label().to_string(),
+            retryable: err.is_retryable(),
+            message: err.to_string(),
+        }
+    }
+
+    /// Encode as a JSON envelope.
+    pub fn encode(&self) -> Json {
+        match self {
+            WireResponse::Items { id, items } => ok_envelope(
+                *id,
+                Json::obj(vec![("items", usize_arr_to_json(items))]),
+            ),
+            WireResponse::Marginals { id, marginals } => ok_envelope(
+                *id,
+                Json::obj(vec![(
+                    "marginals",
+                    Json::Arr(marginals.iter().map(|&m| Json::Num(m)).collect()),
+                )]),
+            ),
+            WireResponse::Delta { id, generation, incremental, depth } => ok_envelope(
+                *id,
+                Json::obj(vec![
+                    ("generation", Json::Num(*generation as f64)),
+                    ("incremental", Json::Bool(*incremental)),
+                    ("depth", Json::Num(*depth as f64)),
+                ]),
+            ),
+            WireResponse::Report { id, report } => ok_envelope(
+                *id,
+                Json::obj(vec![("report", Json::Str(report.clone()))]),
+            ),
+            WireResponse::ShuttingDown { id } => ok_envelope(
+                *id,
+                Json::obj(vec![("shutting_down", Json::Bool(true))]),
+            ),
+            WireResponse::Failure { id, kind, retryable, message } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                (
+                    "err",
+                    Json::obj(vec![
+                        ("kind", Json::Str(kind.clone())),
+                        ("retryable", Json::Bool(*retryable)),
+                        ("message", Json::Str(message.clone())),
+                    ]),
+                ),
+            ]),
+        }
+    }
+
+    /// Encode straight to a length-prefixed frame.
+    pub fn to_frame(&self, max_frame: usize) -> Result<Vec<u8>> {
+        encode_frame(self.encode().to_string().as_bytes(), max_frame)
+    }
+
+    /// Decode a frame payload: UTF-8 → JSON → envelope.
+    pub fn from_payload(bytes: &[u8]) -> Result<WireResponse> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| Error::Parse("frame payload is not UTF-8".into()))?;
+        WireResponse::decode(&Json::parse(text)?)
+    }
+
+    /// Decode from a parsed JSON envelope.
+    pub fn decode(j: &Json) -> Result<WireResponse> {
+        let id = j.get("id")?.as_usize()? as u64;
+        if let Some(err) = j.get_opt("err") {
+            return Ok(WireResponse::Failure {
+                id,
+                kind: err.get("kind")?.as_str()?.to_string(),
+                retryable: err.get("retryable")?.as_bool()?,
+                message: err.get("message")?.as_str()?.to_string(),
+            });
+        }
+        let ok = j.get("ok")?;
+        if let Some(items) = ok.get_opt("items") {
+            return Ok(WireResponse::Items { id, items: json_to_usize_arr(items, "items")? });
+        }
+        if let Some(m) = ok.get_opt("marginals") {
+            let marginals = m
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<Vec<f64>>>()?;
+            return Ok(WireResponse::Marginals { id, marginals });
+        }
+        if ok.get_opt("generation").is_some() {
+            return Ok(WireResponse::Delta {
+                id,
+                generation: ok.get("generation")?.as_usize()? as u64,
+                incremental: ok.get("incremental")?.as_bool()?,
+                depth: ok.get("depth")?.as_usize()? as u64,
+            });
+        }
+        if let Some(r) = ok.get_opt("report") {
+            return Ok(WireResponse::Report { id, report: r.as_str()?.to_string() });
+        }
+        if ok.get_opt("shutting_down").is_some() {
+            return Ok(WireResponse::ShuttingDown { id });
+        }
+        Err(Error::Parse("unrecognized ok payload".into()))
+    }
+
+    /// Client-side: collapse into a typed `Result` for slate responses.
+    /// Failure envelopes reconstruct an [`Error`] of the original kind
+    /// (same [`Error::is_retryable`]); non-slate payloads are a protocol
+    /// error.
+    pub fn into_items(self) -> Result<Vec<usize>> {
+        match self {
+            WireResponse::Items { items, .. } => Ok(items),
+            WireResponse::Failure { kind, message, .. } => Err(decode_error(&kind, &message)),
+            other => Err(Error::Parse(format!(
+                "expected a slate response, got {other:?}"
+            ))),
+        }
+    }
+}
+
+/// Reconstruct a typed [`Error`] from a wire `(kind, message)` pair.
+/// Unknown kinds (a newer peer) degrade to [`Error::Service`], which is
+/// retryable-false-safe for clients.
+pub fn decode_error(kind: &str, message: &str) -> Error {
+    let m = message.to_string();
+    match kind {
+        "shape" => Error::Shape(m),
+        "numerical" => Error::Numerical(m),
+        "invalid" => Error::Invalid(m),
+        "io" => Error::Io(std::io::Error::new(std::io::ErrorKind::Other, m)),
+        "parse" => Error::Parse(m),
+        "runtime" => Error::Runtime(m),
+        "service" => Error::Service(m),
+        "rejected" => Error::Rejected(m),
+        "deadline" => Error::Deadline(m),
+        "throttled" => Error::Throttled(m),
+        _ => Error::Service(m),
+    }
+}
+
+fn ok_envelope(id: u64, body: Json) -> Json {
+    Json::obj(vec![("id", Json::Num(id as f64)), ("ok", body)])
+}
+
+fn encode_mode(mode: &SampleMode) -> Json {
+    match mode {
+        SampleMode::Exact => Json::Str("exact".into()),
+        SampleMode::Map => Json::Str("map".into()),
+        SampleMode::Mcmc { steps } => Json::obj(vec![
+            ("name", Json::Str("mcmc".into())),
+            ("steps", Json::Num(*steps as f64)),
+        ]),
+        SampleMode::LowRank { rank } => Json::obj(vec![
+            ("name", Json::Str("lowrank".into())),
+            ("rank", Json::Num(*rank as f64)),
+        ]),
+    }
+}
+
+fn decode_mode(j: &Json) -> Result<SampleMode> {
+    if let Ok(name) = j.as_str() {
+        return SampleMode::parse(name, None, None);
+    }
+    let name = j.get("name")?.as_str()?.to_string();
+    let steps = match j.get_opt("steps") {
+        Some(s) => Some(s.as_usize()?),
+        None => None,
+    };
+    let rank = match j.get_opt("rank") {
+        Some(r) => Some(r.as_usize()?),
+        None => None,
+    };
+    SampleMode::parse(&name, steps, rank)
+}
+
+fn encode_delta(delta: &KernelDelta) -> Json {
+    match delta {
+        KernelDelta::AddItem { side, row, diag } => Json::obj(vec![
+            ("kind", Json::Str("add_item".into())),
+            ("side", Json::Num(*side as f64)),
+            ("row", Json::Arr(row.iter().map(|&v| Json::Num(v)).collect())),
+            ("diag", Json::Num(*diag)),
+        ]),
+        KernelDelta::RemoveItem { side, index } => Json::obj(vec![
+            ("kind", Json::Str("remove_item".into())),
+            ("side", Json::Num(*side as f64)),
+            ("index", Json::Num(*index as f64)),
+        ]),
+        KernelDelta::RetireItem { side, index, damping } => Json::obj(vec![
+            ("kind", Json::Str("retire_item".into())),
+            ("side", Json::Num(*side as f64)),
+            ("index", Json::Num(*index as f64)),
+            ("damping", Json::Num(*damping)),
+        ]),
+        KernelDelta::Perturb { side, rhos, vectors } => Json::obj(vec![
+            ("kind", Json::Str("perturb".into())),
+            ("side", Json::Num(*side as f64)),
+            ("rhos", Json::Arr(rhos.iter().map(|&v| Json::Num(v)).collect())),
+            (
+                "vectors",
+                Json::obj(vec![
+                    ("rows", Json::Num(vectors.rows() as f64)),
+                    ("cols", Json::Num(vectors.cols() as f64)),
+                    (
+                        "data",
+                        Json::Arr(
+                            (0..vectors.rows())
+                                .flat_map(|i| (0..vectors.cols()).map(move |j| (i, j)))
+                                .map(|(i, j)| Json::Num(vectors.get(i, j)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ]),
+    }
+}
+
+fn decode_delta(j: &Json) -> Result<KernelDelta> {
+    let kind = j.get("kind")?.as_str()?.to_string();
+    let side = j.get("side")?.as_usize()?;
+    match kind.as_str() {
+        "add_item" => Ok(KernelDelta::AddItem {
+            side,
+            row: j
+                .get("row")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<Vec<f64>>>()?,
+            diag: j.get("diag")?.as_f64()?,
+        }),
+        "remove_item" => Ok(KernelDelta::RemoveItem { side, index: j.get("index")?.as_usize()? }),
+        "retire_item" => Ok(KernelDelta::RetireItem {
+            side,
+            index: j.get("index")?.as_usize()?,
+            damping: j.get("damping")?.as_f64()?,
+        }),
+        "perturb" => {
+            let rhos = j
+                .get("rhos")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64())
+                .collect::<Result<Vec<f64>>>()?;
+            let v = j.get("vectors")?;
+            let rows = v.get("rows")?.as_usize()?;
+            let cols = v.get("cols")?.as_usize()?;
+            let data = v
+                .get("data")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<Vec<f64>>>()?;
+            Ok(KernelDelta::Perturb { side, rhos, vectors: Matrix::from_vec(rows, cols, data)? })
+        }
+        other => Err(Error::Parse(format!("unknown delta kind '{other}'"))),
+    }
+}
+
+fn usize_arr_to_json(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect())
+}
+
+fn json_to_usize_arr(j: &Json, field: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .map_err(|_| Error::Parse(format!("'{field}' must be an array")))?
+        .iter()
+        .map(|v| v.as_usize())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::ErrorKind;
+
+    fn roundtrip_request(req: &WireRequest) -> WireRequest {
+        let frame = req.to_frame(DEFAULT_MAX_FRAME).unwrap();
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        reader.push(&frame);
+        let payload = reader.next().unwrap().unwrap();
+        assert!(reader.next().unwrap().is_none(), "exactly one frame expected");
+        WireRequest::from_payload(&payload).unwrap()
+    }
+
+    /// Round-trip fidelity check without PartialEq on the envelope types:
+    /// encode → frame → decode → re-encode must reproduce the JSON text.
+    fn assert_request_stable(req: &WireRequest) {
+        let decoded = roundtrip_request(req);
+        assert_eq!(req.encode().to_string(), decoded.encode().to_string());
+        assert_eq!(req.id(), decoded.id());
+    }
+
+    fn assert_response_stable(resp: &WireResponse) {
+        let frame = resp.to_frame(DEFAULT_MAX_FRAME).unwrap();
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        reader.push(&frame);
+        let payload = reader.next().unwrap().unwrap();
+        let decoded = WireResponse::from_payload(&payload).unwrap();
+        assert_eq!(resp.encode().to_string(), decoded.encode().to_string());
+        assert_eq!(resp.id(), decoded.id());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_partial_delivery() {
+        let payload = b"{\"id\":1,\"op\":\"report\"}";
+        let frame = encode_frame(payload, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(frame.len(), LEN_PREFIX_BYTES + payload.len());
+
+        // Byte-at-a-time delivery: no frame until the last byte lands.
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        for (i, b) in frame.iter().enumerate() {
+            reader.push(&[*b]);
+            let got = reader.next().unwrap();
+            if i + 1 < frame.len() {
+                assert!(got.is_none(), "premature frame at byte {i}");
+            } else {
+                assert_eq!(got.unwrap(), payload);
+            }
+        }
+        assert_eq!(reader.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_reader_handles_back_to_back_frames() {
+        let a = encode_frame(b"first", DEFAULT_MAX_FRAME).unwrap();
+        let b = encode_frame(b"second", DEFAULT_MAX_FRAME).unwrap();
+        let mut joined = a.clone();
+        joined.extend_from_slice(&b);
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        reader.push(&joined);
+        assert_eq!(reader.next().unwrap().unwrap(), b"first");
+        assert_eq!(reader.next().unwrap().unwrap(), b"second");
+        assert!(reader.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frames_rejected_on_both_sides() {
+        let cap = 16;
+        assert!(matches!(
+            encode_frame(&[0u8; 17], cap),
+            Err(Error::Invalid(_))
+        ));
+        // Reader rejects from the prefix alone, before any payload bytes.
+        let mut reader = FrameReader::new(cap);
+        reader.push(&17u32.to_be_bytes());
+        assert!(matches!(reader.next(), Err(Error::Parse(_))));
+    }
+
+    #[test]
+    fn truncated_prefix_is_pending_not_error() {
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        reader.push(&[0x00, 0x00]);
+        assert!(reader.next().unwrap().is_none());
+        assert_eq!(reader.buffered(), 2);
+    }
+
+    #[test]
+    fn request_roundtrip_every_op_and_mode() {
+        let modes = vec![
+            SampleMode::Exact,
+            SampleMode::Mcmc { steps: 4000 },
+            SampleMode::LowRank { rank: 7 },
+            SampleMode::Map,
+        ];
+        for (i, mode) in modes.into_iter().enumerate() {
+            assert_request_stable(&WireRequest::Sample {
+                id: i as u64,
+                tenant: "news".into(),
+                k: 5,
+                mode,
+                include: vec![1],
+                exclude: vec![4, 9],
+                budget_ms: Some(50),
+            });
+        }
+        assert_request_stable(&WireRequest::Sample {
+            id: 10,
+            tenant: "bare".into(),
+            k: 3,
+            mode: SampleMode::Exact,
+            include: vec![],
+            exclude: vec![],
+            budget_ms: None,
+        });
+        assert_request_stable(&WireRequest::Marginals { id: 11, tenant: "news".into() });
+        assert_request_stable(&WireRequest::Report { id: 12 });
+        assert_request_stable(&WireRequest::Shutdown { id: 13 });
+    }
+
+    #[test]
+    fn request_roundtrip_every_delta_kind() {
+        let deltas = vec![
+            KernelDelta::AddItem { side: 0, row: vec![0.1, -0.2], diag: 1.5 },
+            KernelDelta::RemoveItem { side: 1, index: 3 },
+            KernelDelta::RetireItem { side: 0, index: 2, damping: 0.25 },
+            KernelDelta::Perturb {
+                side: 0,
+                rhos: vec![0.5, -0.125],
+                vectors: Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.5, -0.5, 0.0, 1.0]).unwrap(),
+            },
+        ];
+        for (i, delta) in deltas.into_iter().enumerate() {
+            assert_request_stable(&WireRequest::PublishDelta {
+                id: i as u64,
+                tenant: "news".into(),
+                delta,
+            });
+        }
+    }
+
+    #[test]
+    fn map_op_is_sugar_for_map_mode() {
+        let j = Json::parse(r#"{"id": 4, "op": "map", "tenant": "t", "k": 3}"#).unwrap();
+        match WireRequest::decode(&j).unwrap() {
+            WireRequest::Sample { mode, k, .. } => {
+                assert!(matches!(mode, SampleMode::Map));
+                assert_eq!(k, 3);
+            }
+            other => panic!("expected sample, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mode_accepts_bare_string_and_object() {
+        let j = Json::parse(
+            r#"{"id": 1, "op": "sample", "tenant": "t", "k": 2, "mode": "mcmc"}"#,
+        )
+        .unwrap();
+        match WireRequest::decode(&j).unwrap() {
+            WireRequest::Sample { mode: SampleMode::Mcmc { .. }, .. } => {}
+            other => panic!("expected mcmc default-steps, got {other:?}"),
+        }
+        // lowrank as a bare string has no rank: payload error, not panic.
+        let j = Json::parse(
+            r#"{"id": 1, "op": "sample", "tenant": "t", "k": 2, "mode": "lowrank"}"#,
+        )
+        .unwrap();
+        assert!(WireRequest::decode(&j).is_err());
+    }
+
+    #[test]
+    fn malformed_payloads_are_clean_errors() {
+        // Non-UTF8 payload.
+        assert!(matches!(
+            WireRequest::from_payload(&[0xff, 0xfe, 0x01]),
+            Err(Error::Parse(_))
+        ));
+        // Garbage JSON.
+        assert!(WireRequest::from_payload(b"{nope").is_err());
+        // Valid JSON, missing op.
+        assert!(WireRequest::from_payload(b"{\"id\": 1}").is_err());
+        // Unknown op.
+        assert!(matches!(
+            WireRequest::from_payload(b"{\"id\": 1, \"op\": \"steal\"}"),
+            Err(Error::Parse(_))
+        ));
+        // Negative k.
+        assert!(
+            WireRequest::from_payload(b"{\"id\": 1, \"op\": \"sample\", \"tenant\": \"t\", \"k\": -2}")
+                .is_err()
+        );
+        // Unknown delta kind.
+        assert!(WireRequest::from_payload(
+            b"{\"id\": 1, \"op\": \"publish_delta\", \"tenant\": \"t\", \"delta\": {\"kind\": \"x\", \"side\": 0}}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_every_variant() {
+        assert_response_stable(&WireResponse::Items { id: 1, items: vec![0, 4, 9] });
+        assert_response_stable(&WireResponse::Marginals {
+            id: 2,
+            marginals: vec![0.25, 0.5, 0.125],
+        });
+        assert_response_stable(&WireResponse::Delta {
+            id: 3,
+            generation: 17,
+            incremental: true,
+            depth: 4,
+        });
+        assert_response_stable(&WireResponse::Report {
+            id: 4,
+            report: "accepted=3\nline two \"quoted\"".into(),
+        });
+        assert_response_stable(&WireResponse::ShuttingDown { id: 5 });
+        assert_response_stable(&WireResponse::Failure {
+            id: 6,
+            kind: "throttled".into(),
+            retryable: true,
+            message: "tenant 'a': rate limit 10/s exceeded".into(),
+        });
+    }
+
+    #[test]
+    fn error_envelope_preserves_kind_and_retryability() {
+        let cases: Vec<Error> = vec![
+            Error::Shape("s".into()),
+            Error::Numerical("n".into()),
+            Error::Invalid("i".into()),
+            Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "io")),
+            Error::Parse("p".into()),
+            Error::Runtime("r".into()),
+            Error::Service("sv".into()),
+            Error::Rejected("rj".into()),
+            Error::Deadline("d".into()),
+            Error::Throttled("t".into()),
+        ];
+        for err in cases {
+            let resp = WireResponse::from_error(9, &err);
+            let back = match resp {
+                WireResponse::Failure { ref kind, ref message, .. } => {
+                    decode_error(kind, message)
+                }
+                _ => unreachable!(),
+            };
+            assert_eq!(back.kind(), err.kind(), "kind survives the wire: {err}");
+            assert_eq!(
+                back.is_retryable(),
+                err.is_retryable(),
+                "retryability survives the wire: {err}"
+            );
+        }
+        // Unknown kind from a newer peer degrades to Service.
+        assert_eq!(decode_error("gizmo", "m").kind(), ErrorKind::Service);
+    }
+
+    #[test]
+    fn into_items_reconstructs_typed_errors() {
+        let ok = WireResponse::Items { id: 1, items: vec![2, 5] };
+        assert_eq!(ok.into_items().unwrap(), vec![2, 5]);
+        let throttled = WireResponse::Failure {
+            id: 2,
+            kind: "throttled".into(),
+            retryable: true,
+            message: "back off".into(),
+        };
+        let err = throttled.into_items().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Throttled);
+        assert!(err.is_retryable());
+        let wrong = WireResponse::ShuttingDown { id: 3 };
+        assert!(wrong.into_items().is_err());
+    }
+}

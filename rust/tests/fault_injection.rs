@@ -16,16 +16,23 @@
 //! - a worker panic fails only its own coalesced group, other tenants
 //!   never observe it, and the supervisor respawns the worker;
 //! - injected serve stalls blow request budgets into `Deadline`
-//!   errors, never into hangs or silent drops;
+//!   errors, never into hangs or silent drops — including when the
+//!   budget arrives over the TCP wire and the client vanishes
+//!   mid-flight;
 //! - shutdown completes cleanly after all of the above.
 
 use krondpp::config::{FallbackPolicy, ServiceConfig};
 use krondpp::coordinator::faults::FaultPlan;
-use krondpp::coordinator::{DppService, KernelRegistry, SampleRequest, TenantId};
+use krondpp::coordinator::{
+    DppService, KernelRegistry, NetConfig, NetServer, SampleRequest, TenantId, WireClient,
+};
 use krondpp::data;
 use krondpp::dpp::{Kernel, KernelDelta, SampleMode};
+use krondpp::error::ErrorKind;
 use krondpp::rng::Rng;
+use krondpp::ser::wire::{WireRequest, DEFAULT_MAX_FRAME};
 use krondpp::Error;
+use std::io::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -346,6 +353,102 @@ fn slow_serves_exhaust_budgets_into_deadline_errors() {
     let entry = reg.entry(t).unwrap();
     assert_eq!(entry.metrics().deadline_exceeded.load(Ordering::Relaxed), 2);
     svc.shutdown();
+}
+
+/// Chaos at the wire boundary: injected serve stalls blow wire-carried
+/// budgets into retryable `Deadline` envelopes, a client that half-
+/// closes with requests in flight still gets every accepted job booked,
+/// and the drain completes with the ledger exact.
+#[test]
+fn wire_slow_serves_and_dropped_connections_keep_the_ledger_exact() {
+    let reg = Arc::new(KernelRegistry::new(0));
+    let t = reg.add_tenant("alpha", &kernel(4, 4, 71)).unwrap();
+    let plan =
+        Arc::new(FaultPlan::seeded_from_env(0xD1E).slow_serve(t, 3, Duration::from_millis(150)));
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        batch_window_us: 100,
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(
+        DppService::start_with_registry_and_faults(Arc::clone(&reg), &cfg, 72, Arc::clone(&plan))
+            .unwrap(),
+    );
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Phase 1 — budgeted requests, one at a time so each stall lands on
+    // its own group serve: a 150ms stall against a 50ms wire budget must
+    // come back as a retryable Deadline envelope (never a hang).
+    let mut client = WireClient::connect_timeout(&addr, Duration::from_secs(30)).unwrap();
+    for i in 0..3 {
+        let err = client
+            .sample("alpha", 2 + i % 3, SampleMode::Exact, vec![], vec![], Some(50))
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Deadline, "request {i}: {err}");
+        assert!(err.is_retryable());
+    }
+    // Stall budget consumed (or swept at pickup — either way Deadline):
+    // budgeted requests now complete.
+    for i in 0..2 {
+        let y = client
+            .sample("alpha", 2 + i, SampleMode::Exact, vec![], vec![], Some(5_000))
+            .unwrap();
+        assert_eq!(y.len(), 2 + i);
+    }
+    assert!(plan.fired_slow(t) <= 3);
+
+    // Phase 2 — a raw client pipelines 4 unbudgeted requests and half-
+    // closes without ever reading a byte back: the server must absorb
+    // the EOF, serve the admitted work, and book every outcome.
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    raw.set_nodelay(true).unwrap();
+    for (i, k) in [2usize, 3, 4, 2].iter().enumerate() {
+        let frame = WireRequest::Sample {
+            id: 100 + i as u64,
+            tenant: "alpha".into(),
+            k: *k,
+            mode: SampleMode::Exact,
+            include: vec![],
+            exclude: vec![],
+            budget_ms: None,
+        }
+        .to_frame(DEFAULT_MAX_FRAME)
+        .unwrap();
+        raw.write_all(&frame).unwrap();
+    }
+    raw.shutdown(std::net::Shutdown::Write).unwrap();
+
+    // Ledger closes exactly: 5 wire requests + 4 orphaned ones, every
+    // one booked as completed or deadline-exceeded, nothing failed,
+    // nothing dangling.
+    let m = svc.metrics();
+    assert!(
+        wait_for(10_000, || {
+            m.accepted.load(Ordering::Relaxed) == 9
+                && m.completed.load(Ordering::Relaxed)
+                    + m.deadline_exceeded.load(Ordering::Relaxed)
+                    == 9
+                && svc.in_flight() == 0
+        }),
+        "wire chaos ledger never closed: accepted={} completed={} deadline={} in_flight={}",
+        m.accepted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        m.deadline_exceeded.load(Ordering::Relaxed),
+        svc.in_flight(),
+    );
+    assert_eq!(m.deadline_exceeded.load(Ordering::Relaxed), 3);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 6);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    drop(raw);
+
+    // Drain completes after the chaos: wire shutdown, loop exits.
+    client.shutdown_server().unwrap();
+    server.join();
+    assert!(svc.is_shutdown());
+    assert_eq!(svc.in_flight(), 0);
 }
 
 /// Full two-tenant chaos: exact failures, a fallback-rung failure, a

@@ -1,0 +1,242 @@
+//! Malformed-frame suite against a live server over raw sockets: every
+//! hostile byte sequence must map to either a clean error envelope (the
+//! connection survives) or a clean connection close (the server
+//! survives) — never a panic, and never a leaked queue slot.
+
+use krondpp::config::ServiceConfig;
+use krondpp::coordinator::{DppService, NetConfig, NetServer, WireClient};
+use krondpp::data;
+use krondpp::dpp::SampleMode;
+use krondpp::rng::Rng;
+use krondpp::ser::wire::{encode_frame, FrameReader, WireResponse, DEFAULT_MAX_FRAME};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn boot() -> (Arc<DppService>, NetServer, String) {
+    let mut rng = Rng::new(11);
+    let kernel = data::paper_truth_kernel(4, 4, &mut rng);
+    let cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 8,
+        batch_window_us: 200,
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(DppService::start(&kernel, &cfg, 2).unwrap());
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    (svc, server, addr)
+}
+
+fn raw_connect(addr: &str) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+}
+
+/// Blocking-read the next complete response frame off a raw stream.
+fn read_response(stream: &mut TcpStream, reader: &mut FrameReader) -> WireResponse {
+    loop {
+        if let Some(payload) = reader.next().unwrap() {
+            return WireResponse::from_payload(&payload).unwrap();
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed while a response was expected");
+        reader.push(&chunk[..n]);
+    }
+}
+
+/// Read until EOF, tolerating any best-effort frames the server flushes
+/// on its way out. Panics (via the read timeout) if the server never
+/// closes.
+fn read_until_eof(stream: &mut TcpStream) -> Vec<u8> {
+    let mut all = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => return all,
+            Ok(n) => all.extend_from_slice(&chunk[..n]),
+            Err(e) => panic!("expected clean close, got {e}"),
+        }
+    }
+}
+
+fn expect_failure(resp: &WireResponse, expect_kind: &str) {
+    match resp {
+        WireResponse::Failure { kind, retryable, .. } => {
+            assert_eq!(kind, expect_kind);
+            assert!(!retryable, "malformed input must not be retryable");
+        }
+        other => panic!("expected {expect_kind} failure envelope, got {other:?}"),
+    }
+}
+
+fn shutdown(addr: &str, server: NetServer, svc: &DppService) {
+    let mut ctl = WireClient::connect_timeout(addr, Duration::from_secs(30)).unwrap();
+    ctl.shutdown_server().unwrap();
+    server.join();
+    // No slot leak anywhere in the suite: the ledger is closed.
+    assert_eq!(svc.in_flight(), 0);
+    let m = svc.metrics();
+    assert_eq!(
+        m.accepted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed),
+    );
+}
+
+/// Garbage JSON and non-UTF8 payloads are *payload* errors: the server
+/// answers an error envelope and the connection keeps serving.
+#[test]
+fn payload_errors_keep_the_connection_open() {
+    let (svc, server, addr) = boot();
+    let mut stream = raw_connect(&addr);
+    let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+
+    // Garbage JSON in a well-formed frame.
+    let frame = encode_frame(b"{this is not json", DEFAULT_MAX_FRAME).unwrap();
+    stream.write_all(&frame).unwrap();
+    expect_failure(&read_response(&mut stream, &mut reader), "parse");
+
+    // Non-UTF8 bytes in a well-formed frame.
+    let frame = encode_frame(&[0xff, 0xfe, 0x80, 0x01], DEFAULT_MAX_FRAME).unwrap();
+    stream.write_all(&frame).unwrap();
+    expect_failure(&read_response(&mut stream, &mut reader), "parse");
+
+    // Valid JSON, unknown op.
+    let frame = encode_frame(b"{\"id\": 9, \"op\": \"steal\"}", DEFAULT_MAX_FRAME).unwrap();
+    stream.write_all(&frame).unwrap();
+    expect_failure(&read_response(&mut stream, &mut reader), "parse");
+
+    // The same socket still serves a real request afterward.
+    let frame = encode_frame(
+        b"{\"id\": 10, \"op\": \"sample\", \"tenant\": \"default\", \"k\": 2}",
+        DEFAULT_MAX_FRAME,
+    )
+    .unwrap();
+    stream.write_all(&frame).unwrap();
+    match read_response(&mut stream, &mut reader) {
+        WireResponse::Items { id, items } => {
+            assert_eq!(id, 10);
+            assert_eq!(items.len(), 2);
+        }
+        other => panic!("expected items after payload errors, got {other:?}"),
+    }
+
+    assert!(server.stats().payload_errors.load(Ordering::Relaxed) >= 3);
+    drop(stream);
+    shutdown(&addr, server, &svc);
+}
+
+/// An oversized declared length is a *frame* error: the connection is
+/// closed (best-effort error envelope first), but the server and every
+/// other connection keep going.
+#[test]
+fn oversized_frame_closes_only_that_connection() {
+    let (svc, server, addr) = boot();
+    let mut stream = raw_connect(&addr);
+
+    // Declare a payload twice the cap; never send it.
+    let declared = (2 * DEFAULT_MAX_FRAME) as u32;
+    stream.write_all(&declared.to_be_bytes()).unwrap();
+    let leftovers = read_until_eof(&mut stream);
+
+    // Whatever was flushed before the close must itself be well-framed.
+    let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+    reader.push(&leftovers);
+    if let Some(payload) = reader.next().unwrap() {
+        expect_failure(&WireResponse::from_payload(&payload).unwrap(), "parse");
+    }
+
+    // A fresh connection is unaffected.
+    let mut client = WireClient::connect_timeout(&addr, Duration::from_secs(30)).unwrap();
+    let y = client.sample("default", 3, SampleMode::Exact, vec![], vec![], None).unwrap();
+    assert_eq!(y.len(), 3);
+    assert!(server.stats().protocol_errors.load(Ordering::Relaxed) >= 1);
+
+    drop(client);
+    shutdown(&addr, server, &svc);
+}
+
+/// Truncated prefixes and half-delivered frames followed by an abrupt
+/// client disconnect must not panic the loop or leak state.
+#[test]
+fn truncated_frames_and_abrupt_disconnects_are_harmless() {
+    let (svc, server, addr) = boot();
+
+    // Two bytes of a length prefix, then close.
+    let mut stream = raw_connect(&addr);
+    stream.write_all(&[0x00, 0x00]).unwrap();
+    drop(stream);
+
+    // A full prefix declaring 100 bytes, 10 bytes delivered, then close.
+    let mut stream = raw_connect(&addr);
+    stream.write_all(&100u32.to_be_bytes()).unwrap();
+    stream.write_all(&[0x7b; 10]).unwrap();
+    drop(stream);
+
+    // A valid request frame truncated mid-payload, then close.
+    let frame = encode_frame(
+        b"{\"id\": 1, \"op\": \"sample\", \"tenant\": \"default\", \"k\": 2}",
+        DEFAULT_MAX_FRAME,
+    )
+    .unwrap();
+    let mut stream = raw_connect(&addr);
+    stream.write_all(&frame[..frame.len() / 2]).unwrap();
+    drop(stream);
+
+    // The loop absorbed all three without dying: wait for the closes to
+    // be booked, then serve a real request.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while server.stats().closed.load(Ordering::Relaxed) < 3 {
+        assert!(std::time::Instant::now() < deadline, "disconnects never booked");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut client = WireClient::connect_timeout(&addr, Duration::from_secs(30)).unwrap();
+    let y = client.sample("default", 2, SampleMode::Exact, vec![], vec![], None).unwrap();
+    assert_eq!(y.len(), 2);
+
+    drop(client);
+    shutdown(&addr, server, &svc);
+}
+
+/// A client that pipelines a request and vanishes before reading the
+/// answer: the worker still books an outcome, the connection is reaped,
+/// and the ledger closes exactly.
+#[test]
+fn disconnect_with_request_in_flight_leaks_nothing() {
+    let (svc, server, addr) = boot();
+
+    let frame = encode_frame(
+        b"{\"id\": 1, \"op\": \"sample\", \"tenant\": \"default\", \"k\": 3}",
+        DEFAULT_MAX_FRAME,
+    )
+    .unwrap();
+    let mut stream = raw_connect(&addr);
+    stream.write_all(&frame).unwrap();
+    // Half-close the write side so the server sees EOF with the request
+    // already admitted, then drop without reading the response.
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    drop(stream);
+
+    // The accepted job must settle in the service ledger even though the
+    // reply had nowhere to go.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = svc.metrics();
+        let acc = m.accepted.load(Ordering::Relaxed);
+        let settled =
+            m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed);
+        if acc >= 1 && settled == acc && svc.in_flight() == 0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "orphaned job never settled");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    shutdown(&addr, server, &svc);
+}
